@@ -1,0 +1,101 @@
+//! Ablation bench: the design choices DESIGN.md calls out, each toggled
+//! in isolation on the reference workload —
+//!
+//! * ARA block size `bs` (paper: 16 for 2D, 32 for 3D),
+//! * dynamic batch capacity (paper: workspace-derived),
+//! * ARA factor trimming (our QRCP addition; §Perf #8),
+//! * Schur compensation (paper §5.1.1),
+//! * mixed-precision factor storage (paper §7),
+//! * RBT + unpivoted LDLᵀ vs plain LDLᵀ (paper §5.3/§7).
+//!
+//! Run: `cargo bench --bench ablation`
+
+use h2opus_tlr::config::Problem;
+use h2opus_tlr::experiments::{bench_time, instance, rank_stats};
+use h2opus_tlr::factor::{cholesky, ldlt, rbt_ldlt, FactorOpts};
+use h2opus_tlr::tlr::mixed::MixedTlr;
+
+fn main() {
+    let (n, m) = (2048usize, 128usize);
+    let inst = instance(Problem::Cov3d, n, m, 1e-6, 77);
+    println!("== bench ablation (cov3d N={n} m={m} eps=1e-6) ==");
+
+    // ---- ARA block size --------------------------------------------------
+    println!("\nARA block size bs (paper: 32 for 3D):");
+    println!("  {:>4} {:>11} {:>11} {:>10}", "bs", "min (s)", "mean (s)", "mean rank");
+    for bs in [4usize, 8, 16, 32, 64] {
+        let opts = FactorOpts { eps: 1e-6, bs, ..Default::default() };
+        let mut rank = 0.0;
+        let (tmin, tmean) = bench_time(2, || {
+            let f = cholesky(inst.tlr.clone(), &opts).expect("factor");
+            rank = rank_stats(&f.l).mean;
+        });
+        println!("  {bs:>4} {tmin:>11.3} {tmean:>11.3} {rank:>10.1}");
+    }
+
+    // ---- dynamic batch capacity -----------------------------------------
+    println!("\ndynamic batch capacity (scheduling only; factors identical):");
+    println!("  {:>9} {:>11} {:>11}", "capacity", "min (s)", "mean (s)");
+    for cap in [1usize, 4, 8, 16] {
+        let opts = FactorOpts { eps: 1e-6, bs: 16, batch_capacity: cap, ..Default::default() };
+        let (tmin, tmean) = bench_time(2, || {
+            let f = cholesky(inst.tlr.clone(), &opts).expect("factor");
+            std::hint::black_box(&f);
+        });
+        println!("  {cap:>9} {tmin:>11.3} {tmean:>11.3}");
+    }
+
+    // ---- Schur compensation ----------------------------------------------
+    println!("\nSchur compensation (robustness cost at loose eps):");
+    println!("  {:>14} {:>11} {:>11}", "variant", "min (s)", "mean (s)");
+    let loose = instance(Problem::Cov3d, n, m, 1e-2, 77);
+    for (name, sc) in [("plain", false), ("schur-comp", true)] {
+        let opts = FactorOpts {
+            eps: 1e-2,
+            bs: 16,
+            schur_comp: sc,
+            shift: if sc { 0.0 } else { 1e-3 },
+            ..Default::default()
+        };
+        let (tmin, tmean) = bench_time(2, || {
+            let f = cholesky(loose.tlr.clone(), &opts).expect("factor");
+            std::hint::black_box(&f);
+        });
+        println!("  {name:>14} {tmin:>11.3} {tmean:>11.3}");
+    }
+
+    // ---- mixed-precision factor storage -----------------------------------
+    println!("\nmixed-precision factor storage (paper §7):");
+    let opts = FactorOpts { eps: 1e-6, bs: 16, ..Default::default() };
+    let f = cholesky(inst.tlr.clone(), &opts).expect("factor");
+    let full = f.l.memory();
+    let mixed = MixedTlr::from_tlr(&f.l);
+    let mm = mixed.memory();
+    println!(
+        "  f64 factor: {:.4} GB | mixed: {:.4} GB ({:.0}% of full)",
+        full.total_gb(),
+        mm.total_gb(),
+        100.0 * mm.total_gb() / full.total_gb()
+    );
+    let widened = mixed.to_tlr();
+    let drift = widened.to_dense_lower().sub(&f.l.to_dense_lower()).norm_max();
+    println!("  max |L64 - widen(L32)| = {drift:.2e} (<< eps = 1e-6)");
+
+    // ---- RBT vs plain LDL^T ----------------------------------------------
+    println!("\nRBT (depth 2) + unpivoted LDL^T vs plain LDL^T:");
+    println!("  {:>12} {:>11} {:>11} {:>10}", "variant", "min (s)", "mean (s)", "mean rank");
+    let opts = FactorOpts { eps: 1e-6, bs: 16, ..Default::default() };
+    let mut rank = 0.0;
+    let (tmin, tmean) = bench_time(2, || {
+        let f = ldlt(inst.tlr.clone(), &opts).expect("ldlt");
+        rank = rank_stats(&f.l).mean;
+    });
+    println!("  {:>12} {tmin:>11.3} {tmean:>11.3} {rank:>10.1}", "plain LDL^T");
+    let (tmin, tmean) = bench_time(2, || {
+        let f = rbt_ldlt(&inst.tlr, 2, &opts).expect("rbt");
+        rank = rank_stats(&f.f.l).mean;
+    });
+    println!("  {:>12} {tmin:>11.3} {tmean:>11.3} {rank:>10.1}", "RBT + LDL^T");
+    println!("(RBT pays a transform + rank-mixing cost; it buys pivot-free stability");
+    println!(" on indefinite matrices — see factor::rbt tests)");
+}

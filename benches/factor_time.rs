@@ -1,0 +1,52 @@
+//! Bench: TLR Cholesky factorization time vs N and ε, with the dense
+//! Cholesky baseline — the timing-grade companion of paper Fig 7
+//! (`report fig7` prints the full series; this bench repeats each
+//! measurement and reports min/mean).
+//!
+//! Run: `cargo bench --bench factor_time`
+
+use h2opus_tlr::config::Problem;
+use h2opus_tlr::experiments::{bench_time, dense_baseline, instance, time_cholesky};
+use h2opus_tlr::factor::{cholesky, FactorOpts};
+
+fn main() {
+    println!("== bench factor_time (paper Fig 7) ==");
+    let reps = 3;
+    for (name, problem) in [("cov2d", Problem::Cov2d), ("cov3d", Problem::Cov3d)] {
+        println!("{name}:");
+        println!(
+            "  {:>6} {:>6} {:>9} {:>12} {:>12} {:>12}",
+            "N", "m", "eps", "min (s)", "mean (s)", "dense (s)"
+        );
+        for &n in &[1024usize, 2048, 4096] {
+            let m = (n / 8).clamp(64, 256);
+            for eps in [1e-2, 1e-6] {
+                let inst = instance(problem, n, m, eps, 42);
+                let opts = FactorOpts {
+                    eps,
+                    bs: 16,
+                    shift: if eps >= 1e-3 { eps * 0.1 } else { 0.0 },
+                    schur_comp: eps >= 1e-3,
+                    ..Default::default()
+                };
+                let (min, mean) = bench_time(reps, || {
+                    let f = cholesky(inst.tlr.clone(), &opts).expect("factor");
+                    std::hint::black_box(&f);
+                });
+                // Dense baseline once per n, at the tight eps only.
+                let dense = if (eps - 1e-6).abs() < 1e-18 && n <= 2048 {
+                    format!("{:>12.3}", dense_baseline(inst.gen.as_ref()).0)
+                } else {
+                    format!("{:>12}", "-")
+                };
+                println!("  {n:>6} {m:>6} {eps:>9.0e} {min:>12.3} {mean:>12.3} {dense}");
+            }
+        }
+    }
+    // One larger instance, single-shot, to expose the asymptotic trend.
+    let n = 8192;
+    let inst = instance(Problem::Cov3d, n, 256, 1e-6, 42);
+    let (_, secs) =
+        time_cholesky(inst.tlr, &FactorOpts { eps: 1e-6, bs: 32, ..Default::default() });
+    println!("cov3d N={n} m=256 eps=1e-6 (single shot): {secs:.3}s");
+}

@@ -1,0 +1,32 @@
+//! Bench: non-uniform batched GEMM throughput — the roofline bracket of
+//! paper Fig 8b. Sweeps tile size, rank range and batch size for both the
+//! sampling shape `(m×k)(k×bs)` and the projection shape `(m×k)ᵀ(m×n)`.
+//!
+//! Run: `cargo bench --bench gemm_roofline`
+
+use h2opus_tlr::experiments::batched_gemm_roofline;
+
+fn main() {
+    println!("== bench gemm_roofline (paper Fig 8b bracket) ==");
+    println!(
+        "  {:>5} {:>9} {:>5} {:>7} {:>12} {:>12}",
+        "m", "k range", "bs", "batch", "AB GF/s", "AtB GF/s"
+    );
+    for (m, k_lo, k_hi, bs) in [
+        (128usize, 8usize, 24usize, 16usize),
+        (256, 16, 48, 16),
+        (256, 16, 48, 32),
+        (512, 16, 48, 32),
+        (512, 64, 128, 32),
+    ] {
+        for batch in [32usize, 128, 512] {
+            let (ab, atb) = batched_gemm_roofline(m, k_lo, k_hi, bs, batch, 99);
+            println!(
+                "  {m:>5} {:>4}-{:<4} {bs:>5} {batch:>7} {ab:>12.2} {atb:>12.2}",
+                k_lo, k_hi
+            );
+        }
+    }
+    println!("(paper: sampling lands between the AB and AtB MAGMA estimates; batch");
+    println!(" size and rank k set the achievable fraction of peak)");
+}

@@ -1,0 +1,53 @@
+//! Bench: operations on the computed factors — TLR matvec, triangular
+//! solve, full direct solve and PCG application (paper §6.2 text: these
+//! complete quickly relative to factorization).
+//!
+//! Run: `cargo bench --bench solve_ops`
+
+use h2opus_tlr::config::Problem;
+use h2opus_tlr::experiments::{bench_time, instance, time_cholesky};
+use h2opus_tlr::factor::FactorOpts;
+use h2opus_tlr::linalg::rng::Rng;
+use h2opus_tlr::solve::{chol_solve, pcg, tlr_matvec, tlr_trsv_lower, tlr_trsv_lower_t, TlrOp};
+
+fn main() {
+    println!("== bench solve_ops (paper §6.2) ==");
+    let (n, m) = (4096usize, 256usize);
+    let inst = instance(Problem::FracDiff, n, m, 1e-4, 19);
+    let (f, fsecs) = time_cholesky(
+        inst.tlr.clone(),
+        &FactorOpts { eps: 1e-4, bs: 16, shift: 1e-4, ..Default::default() },
+    );
+    let mut rng = Rng::new(20);
+    let x: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+    println!("fracdiff N={n} m={m} eps=1e-4 (factorization: {fsecs:.3}s):");
+    println!("  {:>16} {:>12} {:>12} {:>10}", "op", "min (s)", "mean (s)", "vs factor");
+
+    let reps = 10;
+    let (min, mean) = bench_time(reps, || {
+        std::hint::black_box(tlr_matvec(&inst.tlr, &x));
+    });
+    println!("  {:>16} {min:>12.5} {mean:>12.5} {:>9.0}x", "matvec", fsecs / mean);
+
+    let (min, mean) = bench_time(reps, || {
+        std::hint::black_box(tlr_trsv_lower(&f.l, &x));
+    });
+    println!("  {:>16} {min:>12.5} {mean:>12.5} {:>9.0}x", "trsv (L)", fsecs / mean);
+
+    let (min, mean) = bench_time(reps, || {
+        std::hint::black_box(tlr_trsv_lower_t(&f.l, &x));
+    });
+    println!("  {:>16} {min:>12.5} {mean:>12.5} {:>9.0}x", "trsv (L^T)", fsecs / mean);
+
+    let (min, mean) = bench_time(reps, || {
+        std::hint::black_box(chol_solve(&f, &x));
+    });
+    println!("  {:>16} {min:>12.5} {mean:>12.5} {:>9.0}x", "direct solve", fsecs / mean);
+
+    let (min, mean) = bench_time(3, || {
+        let r = pcg(&TlrOp(&inst.tlr), &|r| chol_solve(&f, r), &x, 1e-8, 300);
+        assert!(r.converged);
+        std::hint::black_box(&r);
+    });
+    println!("  {:>16} {min:>12.5} {mean:>12.5} {:>9.0}x", "pcg (to 1e-8)", fsecs / mean);
+}

@@ -1,0 +1,37 @@
+//! Bench: tile-size sweep — paper Table 1. Memory and factorization time
+//! as the tile size doubles, for two problem sizes; the optimum tile size
+//! should sit in the interior and grow with N.
+//!
+//! Run: `cargo bench --bench tile_size`
+
+use h2opus_tlr::config::Problem;
+use h2opus_tlr::experiments::{bench_time, instance};
+use h2opus_tlr::factor::{cholesky, FactorOpts};
+
+fn main() {
+    println!("== bench tile_size (paper Table 1) ==");
+    for n in [2048usize, 4096] {
+        println!("3D covariance N={n}, eps=1e-6:");
+        println!(
+            "  {:>6} {:>11} {:>11} {:>11} {:>11} {:>11}",
+            "tile", "total GB", "dense GB", "LR GB", "min (s)", "mean (s)"
+        );
+        let mut m = 64;
+        while m <= n / 4 {
+            let inst = instance(Problem::Cov3d, n, m, 1e-6, 7);
+            let mem = inst.tlr.memory();
+            let opts = FactorOpts { eps: 1e-6, bs: 16, ..Default::default() };
+            let (min, mean) = bench_time(3, || {
+                let f = cholesky(inst.tlr.clone(), &opts).expect("factor");
+                std::hint::black_box(&f);
+            });
+            println!(
+                "  {m:>6} {:>11.5} {:>11.5} {:>11.5} {min:>11.3} {mean:>11.3}",
+                mem.total_gb(),
+                mem.dense_gb(),
+                mem.lowrank_gb()
+            );
+            m *= 2;
+        }
+    }
+}

@@ -1,0 +1,122 @@
+//! End-to-end driver: exercises the full three-layer system on a real
+//! small workload and proves every layer composes.
+//!
+//!   L1  Pallas sampling kernels (python/compile/kernels/sample.py)
+//!   L2  JAX graphs lowered AOT to HLO text (python/compile/aot.py)
+//!   L3  this rust coordinator, which loads the artifacts via PJRT and
+//!       runs the TLR Cholesky's ARA hot loop through them
+//!
+//! The driver factors a spatial-statistics covariance matrix with BOTH
+//! backends (native gemm and PJRT artifacts), checks they agree, runs the
+//! paper's headline comparisons (dense baseline speedup, memory
+//! compression, GEMM-dominated profile), and finishes with the §6.2
+//! preconditioned-CG workload. Results land in EXPERIMENTS.md.
+//!
+//! Run: `make artifacts && cargo run --release --example end_to_end`
+
+use h2opus_tlr::config::Problem;
+use h2opus_tlr::experiments::{dense_baseline, instance};
+use h2opus_tlr::factor::{cholesky_with, FactorOpts};
+use h2opus_tlr::linalg::rng::Rng;
+use h2opus_tlr::runtime::{default_artifacts_dir, Backend, PjrtEngine};
+use h2opus_tlr::solve::{chol_solve, factorization_error, pcg, tlr_matvec, TlrOp};
+
+fn main() {
+    println!("=== H2OPUS-TLR end-to-end driver ===\n");
+
+    // ---- Stage 0: the AOT artifacts (L1+L2 build products). ----------
+    let dir = default_artifacts_dir();
+    let engine = match PjrtEngine::new(&dir) {
+        Ok(e) => e,
+        Err(e) => {
+            eprintln!("no artifacts at {dir:?}: {e}\nrun `make artifacts` first");
+            std::process::exit(1);
+        }
+    };
+    println!(
+        "[L1/L2] {} AOT artifacts loaded from {dir:?}",
+        engine.manifest().variants.len()
+    );
+
+    // ---- Stage 1: problem + TLR compression (the L3 substrate). ------
+    let (n, m, eps) = (1024usize, 64usize, 1e-6);
+    let inst = instance(Problem::Cov2d, n, m, eps, 1);
+    let mem = inst.tlr.memory();
+    println!(
+        "[L3]    cov2d N={n} m={m}: {:.1}x compression ({:.2} MB vs {:.2} MB dense)",
+        mem.compression(),
+        mem.total_gb() * 1024.0,
+        mem.full_dense_gb() * 1024.0
+    );
+
+    // ---- Stage 2: factor through BOTH backends; they must agree. -----
+    let opts = FactorOpts { eps, bs: 8, ..Default::default() };
+    let t0 = std::time::Instant::now();
+    let f_native = cholesky_with(inst.tlr.clone(), &opts, Backend::Native).expect("native");
+    let native_s = t0.elapsed().as_secs_f64();
+    let t0 = std::time::Instant::now();
+    let f_pjrt = cholesky_with(inst.tlr.clone(), &opts, Backend::Pjrt(&engine)).expect("pjrt");
+    let pjrt_s = t0.elapsed().as_secs_f64();
+    let ln = f_native.l.to_dense_lower();
+    let lp = f_pjrt.l.to_dense_lower();
+    let diff = ln.sub(&lp).norm_fro() / ln.norm_fro();
+    let st = engine.stats();
+    println!(
+        "[L3]    native backend: {native_s:.3}s | PJRT backend: {pjrt_s:.3}s \
+         ({} launches, {} executables)",
+        st.launches, st.compiled
+    );
+    println!("[check] backend agreement: |L_native - L_pjrt| / |L| = {diff:.2e}");
+    assert!(diff < 1e-6, "backends diverged");
+
+    // ---- Stage 3: the paper's headline comparisons. -------------------
+    let err = factorization_error(&inst.tlr, &f_native, 20, 2);
+    println!("[check] ||A - LL^T||_2 ~ {err:.2e} (eps = {eps:.0e})");
+    let (dense_s, dense_gf) = dense_baseline(inst.gen.as_ref());
+    println!(
+        "[perf]  dense Cholesky baseline: {dense_s:.3}s ({dense_gf:.1} GFLOP/s) — \
+         dense/TLR time ratio {:.1}x (crossover grows with N; see `report fig7`)",
+        dense_s / native_s
+    );
+    println!(
+        "[perf]  GEMM-shaped share of TLR work: {:.1}% (paper: 80-90%)",
+        100.0 * f_native.stats.profile.gemm_share()
+    );
+
+    // ---- Stage 4: a real workload on the factor. ----------------------
+    // Batch of correlated-field solves (the GP use case): A x = b_i.
+    let mut rng = Rng::new(3);
+    let batch = 16;
+    let t0 = std::time::Instant::now();
+    let mut worst = 0.0f64;
+    for _ in 0..batch {
+        let x_true: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        let b = tlr_matvec(&inst.tlr, &x_true);
+        let x = chol_solve(&f_native, &b);
+        let e = x.iter().zip(&x_true).map(|(a, b)| (a - b).abs()).fold(0.0, f64::max);
+        worst = worst.max(e);
+    }
+    let solve_s = t0.elapsed().as_secs_f64();
+    println!(
+        "[run]   {batch} direct solves: {:.1} ms each, worst error {worst:.2e}",
+        1e3 * solve_s / batch as f64
+    );
+
+    // Ill-conditioned fracdiff PCG (paper §6.2) at the same small scale.
+    let fd = instance(Problem::FracDiff, n, m, 1e-3, 4);
+    let pre = cholesky_with(
+        fd.tlr.clone(),
+        &FactorOpts { eps: 1e-3, bs: 8, shift: 1e-3, ..Default::default() },
+        Backend::Pjrt(&engine),
+    )
+    .expect("preconditioner");
+    let b: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+    let r = pcg(&TlrOp(&fd.tlr), &|r| chol_solve(&pre, r), &b, 1e-8, 300);
+    println!(
+        "[run]   fracdiff PCG with PJRT-built preconditioner: {} iters, converged={}",
+        r.iters, r.converged
+    );
+    assert!(r.converged);
+
+    println!("\nend_to_end: ALL STAGES OK");
+}

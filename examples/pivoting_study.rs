@@ -1,0 +1,65 @@
+//! Pivoting study (paper §5.2 / §6.3): inter-tile symmetric pivoting on
+//! covariance and fractional-diffusion problems — selection-cost
+//! comparison (Frobenius vs power-iteration 2-norm), rank effects, and
+//! the correctness of the permuted factorization P A Pᵀ = L Lᵀ.
+//!
+//! Run: `cargo run --release --example pivoting_study`
+
+use h2opus_tlr::config::Problem;
+use h2opus_tlr::experiments::{instance, rank_stats, time_cholesky};
+use h2opus_tlr::factor::{FactorOpts, Pivoting};
+use h2opus_tlr::linalg::rng::Rng;
+use h2opus_tlr::profile::{self, Phase};
+use h2opus_tlr::solve::{chol_solve, tlr_matvec};
+
+fn main() {
+    let (n, m) = (4096, 256);
+    for (name, problem, shift) in [
+        ("3D covariance", Problem::Cov3d, 0.0),
+        ("3D fractional diffusion", Problem::FracDiff, 1e-6),
+    ] {
+        println!("== {name} (N={n}, m={m}, eps=1e-6) ==");
+        let inst = instance(problem, n, m, 1e-6, 11);
+        println!(
+            "{:>24} {:>11} {:>11} {:>10} {:>9}",
+            "variant", "total (s)", "pivot (s)", "mean rank", "max rank"
+        );
+        for (vname, pivot) in [
+            ("unpivoted", Pivoting::None),
+            ("Frobenius pivot", Pivoting::Frobenius),
+            ("2-norm (power) pivot", Pivoting::Norm2),
+            ("random pivot", Pivoting::Random),
+        ] {
+            let before = profile::snapshot();
+            let (f, secs) = time_cholesky(
+                inst.tlr.clone(),
+                &FactorOpts { eps: 1e-6, bs: 16, shift, pivot, ..Default::default() },
+            );
+            let prof = profile::snapshot().since(&before);
+            let pivot_s = prof.nanos[Phase::Pivot as usize] as f64 / 1e9;
+            let rs = rank_stats(&f.l);
+            println!(
+                "{vname:>24} {secs:>11.3} {pivot_s:>11.3} {:>10.1} {:>9}",
+                rs.mean, rs.max
+            );
+
+            // Correctness under permutation: solve P A Pᵀ y = P b.
+            let mut rng = Rng::new(3);
+            let x_true: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+            let b = tlr_matvec(&inst.tlr, &x_true);
+            let perm = f.scalar_perm();
+            let pb: Vec<f64> = perm.iter().map(|&p| b[p]).collect();
+            let py = chol_solve(&f, &pb);
+            // Un-permute and compare.
+            let mut x = vec![0.0; n];
+            for (pos, &orig) in perm.iter().enumerate() {
+                x[orig] = py[pos];
+            }
+            let err = x.iter().zip(&x_true).map(|(a, b)| (a - b).abs()).fold(0.0, f64::max);
+            assert!(err < 1e-2, "{vname}: permuted solve error {err}");
+        }
+        println!();
+    }
+    println!("(paper §6.3: Frobenius selection ~10x cheaper than 2-norm at equal rank");
+    println!(" effect; norm-guided pivots can lower covariance ranks, random raises them)");
+}

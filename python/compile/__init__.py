@@ -1,0 +1,4 @@
+"""Build-time compile path: L2 JAX model + L1 Pallas kernels + AOT lowering.
+
+Never imported at runtime — the rust binary only reads artifacts/.
+"""

@@ -1,0 +1,116 @@
+"""AOT lowering: JAX/Pallas -> HLO text artifacts for the rust runtime.
+
+HLO *text* is the interchange format (NOT `.serialize()`): jax >= 0.5
+emits HloModuleProto with 64-bit instruction ids which the xla crate's
+xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text parser
+reassigns ids and round-trips cleanly. See /opt/xla-example/README.md.
+
+Usage:  cd python && python -m compile.aot --out-dir ../artifacts
+
+Emits one artifact per (op, B, m, k_max, bs) variant plus manifest.json,
+which the rust runtime (rust/src/runtime/) reads to pick the smallest
+variant covering a batch.
+"""
+
+import argparse
+import json
+import os
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp  # noqa: E402
+from jax._src.lib import xla_client as xc  # noqa: E402
+
+from . import model  # noqa: E402
+
+DTYPE = jnp.float64
+
+# Variants: kept CI-sized (interpret-mode Pallas on CPU); the same code
+# lowers larger (m=512, bs=32) deployment shapes by editing this table.
+VARIANTS = [
+    # (op, B, m, k_max, bs)
+    ("sample_update", 8, 64, 16, 8),
+    ("sample_update", 16, 128, 32, 16),
+    ("sample_update_ldl", 8, 64, 16, 8),
+    ("tile_apply", 8, 64, 16, 8),
+    ("tile_apply", 16, 128, 32, 16),
+]
+
+# Fused panel variants: (B, m, k_max, bs, J).
+PANEL_VARIANTS = [
+    (4, 64, 16, 8, 3),
+]
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def spec(*shape):
+    return jax.ShapeDtypeStruct(shape, DTYPE)
+
+
+def lower_variant(op, b, m, k, bs):
+    fac = spec(b, m, k)
+    vec = spec(b, m, bs)
+    dia = spec(b, m)
+    if op == "sample_update":
+        fn, args = model.sample_step, (fac, fac, fac, fac, vec, vec)
+    elif op == "sample_update_ldl":
+        fn, args = model.sample_step_ldl, (fac, fac, fac, fac, dia, vec, vec)
+    elif op == "tile_apply":
+        fn, args = model.tile_apply, (fac, fac, vec, vec)
+    else:
+        raise ValueError(op)
+    return to_hlo_text(jax.jit(fn).lower(*args))
+
+
+def lower_panel(b, m, k, bs, j):
+    fac_j = spec(j, b, m, k)
+    fac = spec(b, m, k)
+    vec = spec(b, m, bs)
+    lowered = jax.jit(model.panel_sample).lower(fac_j, fac_j, fac_j, fac_j, fac, fac, vec)
+    return to_hlo_text(lowered)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+    manifest = []
+    for op, b, m, k, bs in VARIANTS:
+        name = f"{op}_b{b}_m{m}_k{k}_bs{bs}"
+        path = os.path.join(args.out_dir, name + ".hlo.txt")
+        text = lower_variant(op, b, m, k, bs)
+        with open(path, "w") as f:
+            f.write(text)
+        manifest.append(
+            {"name": name, "file": name + ".hlo.txt", "op": op, "b": b, "m": m,
+             "k": k, "bs": bs}
+        )
+        print(f"wrote {path} ({len(text)} chars)")
+    for b, m, k, bs, j in PANEL_VARIANTS:
+        name = f"panel_sample_b{b}_m{m}_k{k}_bs{bs}_j{j}"
+        path = os.path.join(args.out_dir, name + ".hlo.txt")
+        text = lower_panel(b, m, k, bs, j)
+        with open(path, "w") as f:
+            f.write(text)
+        manifest.append(
+            {"name": name, "file": name + ".hlo.txt", "op": "panel_sample",
+             "b": b, "m": m, "k": k, "bs": bs, "j": j}
+        )
+        print(f"wrote {path} ({len(text)} chars)")
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"manifest: {len(manifest)} artifacts")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,67 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These are the ground truth the kernels (and, transitively, the AOT
+artifacts the rust runtime executes) are validated against in pytest.
+Shapes follow the padding contract of DESIGN.md §6: per-tile factors are
+zero-padded to a common k_max, which leaves the chain results exact.
+"""
+
+import jax.numpy as jnp
+
+
+def sample_update_ref(uk, vk, ui, vi, omega, yacc):
+    """Batched 4-product sampling chain (paper Eq 2).
+
+    Y = Yacc + U_i @ (V_i^T @ (V_k @ (U_k^T @ Omega)))
+
+    Args (batched over the leading dim B):
+      uk, vk: (B, m, k)  factors of L(k, j)
+      ui, vi: (B, m, k)  factors of L(i, j)
+      omega:  (B, m, bs) sampling block
+      yacc:   (B, m, bs) running accumulator
+    Returns: (B, m, bs)
+    """
+    t1 = jnp.einsum("bmk,bms->bks", uk, omega)
+    t2 = jnp.einsum("bmk,bks->bms", vk, t1)
+    t3 = jnp.einsum("bmk,bms->bks", vi, t2)
+    return yacc + jnp.einsum("bmk,bks->bms", ui, t3)
+
+
+def sample_update_ldl_ref(uk, vk, ui, vi, d, omega, yacc):
+    """Batched 5-product LDL^T sampling chain (paper Eq 3).
+
+    Y = Yacc + U_i @ (V_i^T @ (D @ (V_k @ (U_k^T @ Omega))))
+
+    d: (B, m) diagonal of D(j, j).
+    """
+    t1 = jnp.einsum("bmk,bms->bks", uk, omega)
+    t2 = jnp.einsum("bmk,bks->bms", vk, t1)
+    t2 = d[:, :, None] * t2
+    t3 = jnp.einsum("bmk,bms->bks", vi, t2)
+    return yacc + jnp.einsum("bmk,bks->bms", ui, t3)
+
+
+def lr_apply_ref(u, v, omega, yacc):
+    """Batched low-rank tile application Y = Yacc + U @ (V^T @ Omega).
+
+    Used for the original-tile term A(i,k) Omega of Eq 1 and for the TLR
+    matvec tile products (§4.4).
+    """
+    t = jnp.einsum("bmk,bms->bks", v, omega)
+    return yacc + jnp.einsum("bmk,bks->bms", u, t)
+
+
+def panel_sample_ref(uks, vks, uis, vis, aik_u, aik_v, omega):
+    """Full left-looking panel sampling (paper Eq 1 / Alg 4) for one tile:
+
+    Y = A(i,k) Omega − Σ_j L(i,j) L(k,j)^T Omega
+
+    uks, vks, uis, vis: (J, B, m, k) stacked update-term factors
+    aik_u, aik_v:       (B, m, k)    original tile factors
+    omega:              (B, m, bs)
+    """
+    y = lr_apply_ref(aik_u, aik_v, omega, jnp.zeros_like(omega))
+    acc = jnp.zeros_like(omega)
+    for j in range(uks.shape[0]):
+        acc = sample_update_ref(uks[j], vks[j], uis[j], vis[j], omega, acc)
+    return y - acc

@@ -1,0 +1,113 @@
+"""L1 Pallas kernels: the ARA sampling chains of the TLR factorization.
+
+The paper's hot spot is the batched 4-product chain (Eq 2)
+
+    Y += U_i @ (V_i^T @ (V_k @ (U_k^T @ Omega)))
+
+executed for every (tile, update) pair of a panel. On the V100 the paper
+uses MAGMA non-uniform batched GEMM; here the same computation is a Pallas
+kernel whose grid runs over the batch dimension, with BlockSpec keeping
+one tile's factor panels resident in VMEM per grid step (DESIGN.md
+§Hardware-Adaptation: VMEM tiling replaces the CUDA threadblock/shared-
+memory schedule, and the inner products are MXU-shaped matmuls).
+
+Kernels are lowered with interpret=True: the CPU PJRT plugin cannot run
+Mosaic custom-calls, so interpret mode is the correctness path and the
+compile-only TPU lowering is the deployment path.
+
+VMEM budget per grid step (f32, m=512, k=64, bs=32):
+  4 factor panels  4*512*64*4B = 0.5 MB
+  omega + 2 accum  3*512*32*4B = 0.2 MB          << 16 MB VMEM
+leaving ample room for double buffering across grid steps.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _sample_update_kernel(uk_ref, vk_ref, ui_ref, vi_ref, om_ref, yacc_ref, o_ref):
+    # One batch element per grid step; refs are (1, m, k) / (1, m, bs).
+    uk = uk_ref[0]
+    vk = vk_ref[0]
+    ui = ui_ref[0]
+    vi = vi_ref[0]
+    om = om_ref[0]
+    t1 = uk.T @ om          # (k, bs)   MXU matmul 1
+    t2 = vk @ t1            # (m, bs)   MXU matmul 2
+    t3 = vi.T @ t2          # (k, bs)   MXU matmul 3
+    o_ref[0] = yacc_ref[0] + ui @ t3  # MXU matmul 4 + accumulate
+
+
+def _sample_update_ldl_kernel(uk_ref, vk_ref, ui_ref, vi_ref, d_ref, om_ref, yacc_ref, o_ref):
+    uk = uk_ref[0]
+    vk = vk_ref[0]
+    ui = ui_ref[0]
+    vi = vi_ref[0]
+    d = d_ref[0]
+    om = om_ref[0]
+    t1 = uk.T @ om
+    t2 = d[:, None] * (vk @ t1)   # Eq 3: interpose D(j,j)
+    t3 = vi.T @ t2
+    o_ref[0] = yacc_ref[0] + ui @ t3
+
+
+def _lr_apply_kernel(u_ref, v_ref, om_ref, yacc_ref, o_ref):
+    u = u_ref[0]
+    v = v_ref[0]
+    om = om_ref[0]
+    t = v.T @ om
+    o_ref[0] = yacc_ref[0] + u @ t
+
+
+def _batched_call(kernel, n_in, b, m, k, bs, dtype, has_diag=False):
+    """Build the pallas_call for a batch of B tiles.
+
+    Grid over the batch dim; every operand block is one tile's panel.
+    """
+    fac = pl.BlockSpec((1, m, k), lambda i: (i, 0, 0))
+    vec = pl.BlockSpec((1, m, bs), lambda i: (i, 0, 0))
+    dia = pl.BlockSpec((1, m), lambda i: (i, 0))
+    if has_diag:
+        in_specs = [fac, fac, fac, fac, dia, vec, vec]
+    else:
+        in_specs = [fac] * (n_in - 2) + [vec, vec]
+    return pl.pallas_call(
+        kernel,
+        grid=(b,),
+        in_specs=in_specs,
+        out_specs=vec,
+        out_shape=jax.ShapeDtypeStruct((b, m, bs), dtype),
+        interpret=True,
+    )
+
+
+def sample_update(uk, vk, ui, vi, omega, yacc):
+    """Pallas-batched Eq 2 chain. Shapes: see ref.sample_update_ref."""
+    b, m, k = uk.shape
+    bs = omega.shape[-1]
+    call = _batched_call(_sample_update_kernel, 6, b, m, k, bs, uk.dtype)
+    return call(uk, vk, ui, vi, omega, yacc)
+
+
+def sample_update_ldl(uk, vk, ui, vi, d, omega, yacc):
+    """Pallas-batched Eq 3 chain (LDL^T: diagonal interposed)."""
+    b, m, k = uk.shape
+    bs = omega.shape[-1]
+    call = _batched_call(_sample_update_ldl_kernel, 7, b, m, k, bs, uk.dtype, has_diag=True)
+    return call(uk, vk, ui, vi, d, omega, yacc)
+
+
+def lr_apply(u, v, omega, yacc):
+    """Pallas-batched low-rank tile application (2-product chain)."""
+    b, m, k = u.shape
+    bs = omega.shape[-1]
+    call = _batched_call(_lr_apply_kernel, 4, b, m, k, bs, u.dtype)
+    return call(u, v, omega, yacc)
+
+
+@functools.partial(jax.jit, static_argnames=())
+def sample_update_jit(uk, vk, ui, vi, omega, yacc):
+    return sample_update(uk, vk, ui, vi, omega, yacc)

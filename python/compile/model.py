@@ -1,0 +1,56 @@
+"""L2: the JAX compute graphs the rust coordinator executes via PJRT.
+
+Each function composes the L1 Pallas kernels into the batched steps of the
+left-looking TLR factorization (paper Alg 4/5):
+
+* ``sample_step``     — one batched update term (Eq 2), the unit the rust
+                        runtime loops over per (tile, j) pair;
+* ``sample_step_ldl`` — the D-interposed LDL^T variant (Eq 3);
+* ``tile_apply``      — original-tile term A(i,k) Omega (and TLR matvec
+                        tile products, §4.4);
+* ``panel_sample``    — the whole Eq 1 expression for a panel: a
+                        lax.scan over J stacked update terms fused into a
+                        single HLO so XLA schedules the serial chain
+                        without host round-trips.
+
+All are shape-monomorphic at lowering time; aot.py emits one artifact per
+(m, k_max, bs, B[, J]) variant, and the rust runtime pads ranks up to
+k_max (zero columns are exact — DESIGN.md §6 padding contract).
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import sample as k
+
+
+def sample_step(uk, vk, ui, vi, omega, yacc):
+    """One batched left-looking update term: Yacc + L(i,j) L(k,j)^T Omega."""
+    return (k.sample_update(uk, vk, ui, vi, omega, yacc),)
+
+
+def sample_step_ldl(uk, vk, ui, vi, d, omega, yacc):
+    """LDL^T update term with the diagonal interposed (Eq 3)."""
+    return (k.sample_update_ldl(uk, vk, ui, vi, d, omega, yacc),)
+
+
+def tile_apply(u, v, omega, yacc):
+    """Batched low-rank tile application Yacc + U V^T Omega."""
+    return (k.lr_apply(u, v, omega, yacc),)
+
+
+def panel_sample(uks, vks, uis, vis, aik_u, aik_v, omega):
+    """Fused Eq 1 sampling: A(i,k) Omega − Σ_j L(i,j) L(k,j)^T Omega.
+
+    uks...: (J, B, m, k) stacked update factors; lax.scan accumulates the
+    J serial steps inside one executable.
+    """
+    zero = jnp.zeros_like(omega)
+    y0 = k.lr_apply(aik_u, aik_v, omega, zero)
+
+    def body(acc, term):
+        tuk, tvk, tui, tvi = term
+        return k.sample_update(tuk, tvk, tui, tvi, omega, acc), None
+
+    acc, _ = jax.lax.scan(body, zero, (uks, vks, uis, vis))
+    return (y0 - acc,)

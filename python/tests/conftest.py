@@ -1,0 +1,25 @@
+"""Shared pytest fixtures for the kernel/model/AOT test suites."""
+
+import jax
+import numpy as np
+import pytest
+
+jax.config.update("jax_enable_x64", True)
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0xC0FFEE)
+
+
+def make_batch(rng, b, m, k, bs, dtype=np.float64):
+    """Random factor/omega/yacc batch for the sampling chains."""
+    return {
+        "uk": rng.standard_normal((b, m, k)).astype(dtype),
+        "vk": rng.standard_normal((b, m, k)).astype(dtype),
+        "ui": rng.standard_normal((b, m, k)).astype(dtype),
+        "vi": rng.standard_normal((b, m, k)).astype(dtype),
+        "d": rng.standard_normal((b, m)).astype(dtype),
+        "omega": rng.standard_normal((b, m, bs)).astype(dtype),
+        "yacc": rng.standard_normal((b, m, bs)).astype(dtype),
+    }

@@ -1,0 +1,148 @@
+"""L1 Pallas kernels vs the pure-jnp oracle (ref.py) — the core
+correctness signal for everything the rust runtime later executes.
+
+Hypothesis sweeps shapes and dtypes; fixed tests pin the exact AOT
+variant shapes and the padding contract.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+from numpy.testing import assert_allclose
+
+from compile.kernels import ref
+from compile.kernels import sample as k
+
+from .conftest import make_batch
+
+
+def _np(x):
+    return np.asarray(x)
+
+
+class TestSampleUpdate:
+    def test_matches_ref_fixed(self, rng):
+        b = make_batch(rng, 4, 32, 8, 8)
+        got = k.sample_update(b["uk"], b["vk"], b["ui"], b["vi"], b["omega"], b["yacc"])
+        want = ref.sample_update_ref(b["uk"], b["vk"], b["ui"], b["vi"], b["omega"], b["yacc"])
+        assert_allclose(_np(got), _np(want), rtol=1e-12, atol=1e-12)
+
+    def test_matches_dense_composition(self, rng):
+        # Independent oracle: materialize the low-rank products densely.
+        b, m, kk, bs = 2, 16, 4, 4
+        d = make_batch(rng, b, m, kk, bs)
+        got = _np(k.sample_update(d["uk"], d["vk"], d["ui"], d["vi"], d["omega"], d["yacc"]))
+        for t in range(b):
+            lkj = d["uk"][t] @ d["vk"][t].T  # L(k,j) = U V^T
+            lij = d["ui"][t] @ d["vi"][t].T
+            want = d["yacc"][t] + lij @ lkj.T @ d["omega"][t]
+            assert_allclose(got[t], want, rtol=1e-10, atol=1e-10)
+
+    @settings(max_examples=15, deadline=None)
+    @given(
+        b=st.integers(1, 5),
+        m=st.sampled_from([8, 16, 33, 64]),
+        kk=st.integers(1, 16),
+        bs=st.sampled_from([1, 4, 8]),
+    )
+    def test_shape_sweep(self, b, m, kk, bs):
+        rng = np.random.default_rng(b * 1000 + m * 10 + kk + bs)
+        d = make_batch(rng, b, m, kk, bs)
+        got = k.sample_update(d["uk"], d["vk"], d["ui"], d["vi"], d["omega"], d["yacc"])
+        want = ref.sample_update_ref(d["uk"], d["vk"], d["ui"], d["vi"], d["omega"], d["yacc"])
+        assert got.shape == (b, m, bs)
+        assert_allclose(_np(got), _np(want), rtol=1e-11, atol=1e-11)
+
+    @pytest.mark.parametrize("dtype,tol", [(np.float32, 1e-5), (np.float64, 1e-12)])
+    def test_dtypes(self, rng, dtype, tol):
+        d = make_batch(rng, 2, 16, 4, 4, dtype=dtype)
+        got = k.sample_update(d["uk"], d["vk"], d["ui"], d["vi"], d["omega"], d["yacc"])
+        want = ref.sample_update_ref(d["uk"], d["vk"], d["ui"], d["vi"], d["omega"], d["yacc"])
+        assert _np(got).dtype == dtype
+        assert_allclose(_np(got), _np(want), rtol=tol, atol=tol)
+
+    def test_zero_padding_is_exact(self, rng):
+        # The DESIGN.md §6 contract: padding factor columns with zeros
+        # must not change the result.
+        b, m, kk, bs, kpad = 3, 16, 5, 4, 11
+        d = make_batch(rng, b, m, kk, bs)
+        padded = {
+            key: np.concatenate([d[key], np.zeros((b, m, kpad - kk))], axis=2)
+            for key in ("uk", "vk", "ui", "vi")
+        }
+        got = k.sample_update(
+            padded["uk"], padded["vk"], padded["ui"], padded["vi"], d["omega"], d["yacc"]
+        )
+        want = k.sample_update(d["uk"], d["vk"], d["ui"], d["vi"], d["omega"], d["yacc"])
+        # Padding adds only zero terms, but changes the contraction
+        # blocking — equal to accumulation-order rounding.
+        assert_allclose(_np(got), _np(want), rtol=1e-12, atol=1e-12)
+
+
+class TestSampleUpdateLdl:
+    def test_matches_ref(self, rng):
+        d = make_batch(rng, 4, 32, 8, 8)
+        got = k.sample_update_ldl(
+            d["uk"], d["vk"], d["ui"], d["vi"], d["d"], d["omega"], d["yacc"]
+        )
+        want = ref.sample_update_ldl_ref(
+            d["uk"], d["vk"], d["ui"], d["vi"], d["d"], d["omega"], d["yacc"]
+        )
+        assert_allclose(_np(got), _np(want), rtol=1e-12, atol=1e-12)
+
+    def test_unit_diagonal_reduces_to_plain(self, rng):
+        d = make_batch(rng, 2, 16, 4, 4)
+        ones = np.ones_like(d["d"])
+        got = k.sample_update_ldl(d["uk"], d["vk"], d["ui"], d["vi"], ones, d["omega"], d["yacc"])
+        want = k.sample_update(d["uk"], d["vk"], d["ui"], d["vi"], d["omega"], d["yacc"])
+        assert_allclose(_np(got), _np(want), rtol=1e-12, atol=1e-12)
+
+    @settings(max_examples=10, deadline=None)
+    @given(b=st.integers(1, 4), m=st.sampled_from([8, 24]), kk=st.integers(1, 8))
+    def test_shape_sweep(self, b, m, kk):
+        rng = np.random.default_rng(b * 100 + m + kk)
+        d = make_batch(rng, b, m, kk, 4)
+        got = k.sample_update_ldl(
+            d["uk"], d["vk"], d["ui"], d["vi"], d["d"], d["omega"], d["yacc"]
+        )
+        want = ref.sample_update_ldl_ref(
+            d["uk"], d["vk"], d["ui"], d["vi"], d["d"], d["omega"], d["yacc"]
+        )
+        assert_allclose(_np(got), _np(want), rtol=1e-11, atol=1e-11)
+
+
+class TestLrApply:
+    def test_matches_ref(self, rng):
+        d = make_batch(rng, 4, 32, 8, 8)
+        got = k.lr_apply(d["uk"], d["vk"], d["omega"], d["yacc"])
+        want = ref.lr_apply_ref(d["uk"], d["vk"], d["omega"], d["yacc"])
+        assert_allclose(_np(got), _np(want), rtol=1e-12, atol=1e-12)
+
+    @settings(max_examples=10, deadline=None)
+    @given(b=st.integers(1, 4), m=st.sampled_from([8, 16, 40]), kk=st.integers(1, 12))
+    def test_shape_sweep(self, b, m, kk):
+        rng = np.random.default_rng(b + m + kk)
+        d = make_batch(rng, b, m, kk, 4)
+        got = k.lr_apply(d["uk"], d["vk"], d["omega"], d["yacc"])
+        want = ref.lr_apply_ref(d["uk"], d["vk"], d["omega"], d["yacc"])
+        assert_allclose(_np(got), _np(want), rtol=1e-11, atol=1e-11)
+
+
+class TestAotVariantShapes:
+    """Pin the exact shapes `aot.py` lowers, so artifact regeneration can
+    never drift from what the rust runtime expects."""
+
+    @pytest.mark.parametrize("b,m,kk,bs", [(8, 64, 16, 8), (16, 128, 32, 16)])
+    def test_sample_update_variant(self, rng, b, m, kk, bs):
+        d = make_batch(rng, b, m, kk, bs)
+        got = k.sample_update(d["uk"], d["vk"], d["ui"], d["vi"], d["omega"], d["yacc"])
+        want = ref.sample_update_ref(d["uk"], d["vk"], d["ui"], d["vi"], d["omega"], d["yacc"])
+        assert got.shape == (b, m, bs)
+        assert_allclose(_np(got), _np(want), rtol=1e-11, atol=1e-11)
+
+    def test_ldl_variant(self, rng):
+        d = make_batch(rng, 8, 64, 16, 8)
+        got = k.sample_update_ldl(
+            d["uk"], d["vk"], d["ui"], d["vi"], d["d"], d["omega"], d["yacc"]
+        )
+        assert got.shape == (8, 64, 8)

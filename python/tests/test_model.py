@@ -1,0 +1,90 @@
+"""L2 JAX graphs (model.py): the batched steps the rust coordinator
+executes, including the fused scan-based panel sampler."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from numpy.testing import assert_allclose
+
+from compile import model
+from compile.kernels import ref
+
+from .conftest import make_batch
+
+
+def test_sample_step_is_tuple_wrapped(rng):
+    d = make_batch(rng, 2, 16, 4, 4)
+    out = model.sample_step(d["uk"], d["vk"], d["ui"], d["vi"], d["omega"], d["yacc"])
+    assert isinstance(out, tuple) and len(out) == 1
+    want = ref.sample_update_ref(d["uk"], d["vk"], d["ui"], d["vi"], d["omega"], d["yacc"])
+    assert_allclose(np.asarray(out[0]), np.asarray(want), rtol=1e-12)
+
+
+def test_sample_step_ldl(rng):
+    d = make_batch(rng, 2, 16, 4, 4)
+    out = model.sample_step_ldl(
+        d["uk"], d["vk"], d["ui"], d["vi"], d["d"], d["omega"], d["yacc"]
+    )
+    want = ref.sample_update_ldl_ref(
+        d["uk"], d["vk"], d["ui"], d["vi"], d["d"], d["omega"], d["yacc"]
+    )
+    assert_allclose(np.asarray(out[0]), np.asarray(want), rtol=1e-12)
+
+
+def test_tile_apply(rng):
+    d = make_batch(rng, 2, 16, 4, 4)
+    out = model.tile_apply(d["uk"], d["vk"], d["omega"], d["yacc"])
+    want = ref.lr_apply_ref(d["uk"], d["vk"], d["omega"], d["yacc"])
+    assert_allclose(np.asarray(out[0]), np.asarray(want), rtol=1e-12)
+
+
+def test_panel_sample_matches_ref(rng):
+    j, b, m, kk, bs = 3, 2, 16, 4, 4
+    stacked = {
+        key: rng.standard_normal((j, b, m, kk)) for key in ("uks", "vks", "uis", "vis")
+    }
+    aik_u = rng.standard_normal((b, m, kk))
+    aik_v = rng.standard_normal((b, m, kk))
+    omega = rng.standard_normal((b, m, bs))
+    out = model.panel_sample(
+        stacked["uks"], stacked["vks"], stacked["uis"], stacked["vis"], aik_u, aik_v, omega
+    )
+    want = ref.panel_sample_ref(
+        stacked["uks"], stacked["vks"], stacked["uis"], stacked["vis"], aik_u, aik_v, omega
+    )
+    assert_allclose(np.asarray(out[0]), np.asarray(want), rtol=1e-11, atol=1e-11)
+
+
+def test_panel_sample_scan_equals_manual_loop(rng):
+    # The lax.scan fusion must agree with a hand-rolled python loop over
+    # the update terms.
+    j, b, m, kk, bs = 4, 1, 8, 3, 2
+    uks = rng.standard_normal((j, b, m, kk))
+    vks = rng.standard_normal((j, b, m, kk))
+    uis = rng.standard_normal((j, b, m, kk))
+    vis = rng.standard_normal((j, b, m, kk))
+    aik_u = rng.standard_normal((b, m, kk))
+    aik_v = rng.standard_normal((b, m, kk))
+    omega = rng.standard_normal((b, m, bs))
+    (got,) = model.panel_sample(uks, vks, uis, vis, aik_u, aik_v, omega)
+
+    manual = aik_u[0] @ (aik_v[0].T @ omega[0])
+    for t in range(j):
+        manual = manual - uis[t, 0] @ (vis[t, 0].T @ (vks[t, 0] @ (uks[t, 0].T @ omega[0])))
+    assert_allclose(np.asarray(got[0]), manual, rtol=1e-11, atol=1e-11)
+
+
+def test_graphs_are_jittable(rng):
+    # The AOT path jits these; make sure nothing relies on python side
+    # effects at trace time.
+    d = make_batch(rng, 2, 16, 4, 4)
+    jitted = jax.jit(model.sample_step)
+    (a,) = jitted(d["uk"], d["vk"], d["ui"], d["vi"], d["omega"], d["yacc"])
+    (b_,) = model.sample_step(d["uk"], d["vk"], d["ui"], d["vi"], d["omega"], d["yacc"])
+    assert_allclose(np.asarray(a), np.asarray(b_), rtol=1e-12)
+
+
+def test_float64_enabled():
+    # aot.py lowers f64 artifacts; the x64 flag must be active under test.
+    assert jnp.zeros(1).dtype == jnp.float32 or jax.config.jax_enable_x64
+    assert np.asarray(jnp.array([1.0], dtype=jnp.float64)).dtype == np.float64

@@ -1,0 +1,162 @@
+//! Point-cloud generators for the paper's evaluation problems (§6):
+//! uniform grids in 2D/3D and random points in a 3D ball (Fig 1, Fig 6b).
+
+use crate::linalg::rng::Rng;
+
+/// A set of points in `dim`-dimensional space, stored point-major:
+/// `coords[p * dim + d]`.
+#[derive(Debug, Clone)]
+pub struct PointSet {
+    pub dim: usize,
+    pub coords: Vec<f64>,
+}
+
+impl PointSet {
+    pub fn len(&self) -> usize {
+        self.coords.len() / self.dim
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.coords.is_empty()
+    }
+
+    #[inline]
+    pub fn point(&self, p: usize) -> &[f64] {
+        &self.coords[p * self.dim..(p + 1) * self.dim]
+    }
+
+    /// Euclidean distance between points `a` and `b`.
+    #[inline]
+    pub fn dist(&self, a: usize, b: usize) -> f64 {
+        self.point(a)
+            .iter()
+            .zip(self.point(b))
+            .map(|(x, y)| (x - y) * (x - y))
+            .sum::<f64>()
+            .sqrt()
+    }
+
+    /// Reorder the points by the given permutation: point `i` of the new
+    /// set is point `perm[i]` of the old.
+    pub fn permuted(&self, perm: &[usize]) -> PointSet {
+        assert_eq!(perm.len(), self.len());
+        let mut coords = Vec::with_capacity(self.coords.len());
+        for &p in perm {
+            coords.extend_from_slice(self.point(p));
+        }
+        PointSet { dim: self.dim, coords }
+    }
+
+    /// Axis-aligned bounding box: `(mins, maxs)`.
+    pub fn bbox(&self, idx: &[usize]) -> (Vec<f64>, Vec<f64>) {
+        let mut mins = vec![f64::INFINITY; self.dim];
+        let mut maxs = vec![f64::NEG_INFINITY; self.dim];
+        for &p in idx {
+            for (d, &c) in self.point(p).iter().enumerate() {
+                mins[d] = mins[d].min(c);
+                maxs[d] = maxs[d].max(c);
+            }
+        }
+        (mins, maxs)
+    }
+}
+
+/// Uniform grid of ~`n` points in the unit square/cube (`dim` = 2 or 3).
+/// The actual count is the largest `side^dim ≤ n` rounded up to cover `n`
+/// by trimming — we generate exactly `n` points by walking the grid in
+/// lexicographic order, which matches the paper's "uniformly distributed
+/// in a grid" setting.
+pub fn grid(n: usize, dim: usize) -> PointSet {
+    assert!(dim == 1 || dim == 2 || dim == 3);
+    let side = (n as f64).powf(1.0 / dim as f64).ceil() as usize;
+    let h = 1.0 / (side.max(2) - 1) as f64;
+    let mut coords = Vec::with_capacity(n * dim);
+    'outer: for i in 0..side {
+        for j in 0..if dim >= 2 { side } else { 1 } {
+            for k in 0..if dim >= 3 { side } else { 1 } {
+                if coords.len() >= n * dim {
+                    break 'outer;
+                }
+                coords.push(i as f64 * h);
+                if dim >= 2 {
+                    coords.push(j as f64 * h);
+                }
+                if dim >= 3 {
+                    coords.push(k as f64 * h);
+                }
+            }
+        }
+    }
+    PointSet { dim, coords }
+}
+
+/// `n` points drawn uniformly from the unit ball in `dim` dimensions
+/// (rejection sampling) — the paper's Fig 1 / Fig 6b geometry.
+pub fn random_ball(n: usize, dim: usize, seed: u64) -> PointSet {
+    let mut rng = Rng::new(seed);
+    let mut coords = Vec::with_capacity(n * dim);
+    let mut accepted = 0;
+    while accepted < n {
+        let p: Vec<f64> = (0..dim).map(|_| rng.uniform_in(-1.0, 1.0)).collect();
+        if p.iter().map(|x| x * x).sum::<f64>() <= 1.0 {
+            coords.extend_from_slice(&p);
+            accepted += 1;
+        }
+    }
+    PointSet { dim, coords }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn grid_counts_and_range() {
+        for dim in [1, 2, 3] {
+            let ps = grid(1000, dim);
+            assert_eq!(ps.len(), 1000);
+            assert!(ps.coords.iter().all(|&c| (0.0..=1.0).contains(&c)));
+        }
+    }
+
+    #[test]
+    fn grid_points_distinct() {
+        let ps = grid(64, 2);
+        for i in 0..ps.len() {
+            for j in i + 1..ps.len() {
+                assert!(ps.dist(i, j) > 1e-9, "duplicate points {i},{j}");
+            }
+        }
+    }
+
+    #[test]
+    fn ball_inside_unit_sphere() {
+        let ps = random_ball(500, 3, 42);
+        assert_eq!(ps.len(), 500);
+        for p in 0..ps.len() {
+            let r2: f64 = ps.point(p).iter().map(|x| x * x).sum();
+            assert!(r2 <= 1.0 + 1e-12);
+        }
+    }
+
+    #[test]
+    fn permutation_reorders() {
+        let ps = grid(10, 2);
+        let perm: Vec<usize> = (0..10).rev().collect();
+        let q = ps.permuted(&perm);
+        assert_eq!(q.point(0), ps.point(9));
+        assert_eq!(q.point(9), ps.point(0));
+    }
+
+    #[test]
+    fn bbox_covers() {
+        let ps = random_ball(100, 2, 7);
+        let idx: Vec<usize> = (0..100).collect();
+        let (mins, maxs) = ps.bbox(&idx);
+        for p in 0..100 {
+            for d in 0..2 {
+                assert!(ps.point(p)[d] >= mins[d] && ps.point(p)[d] <= maxs[d]);
+            }
+        }
+    }
+}

@@ -1,0 +1,160 @@
+//! KD-tree geometric ordering (paper §6): recursively sort each cluster of
+//! points by projection along the largest dimension of its bounding box,
+//! split off a left cluster of size `2^⌈log2(nb)⌉/2 · m` (so leaves come out
+//! exactly tile-sized except possibly the last), and recurse. The leaf
+//! order is the TLR row/column ordering; leaf boundaries are the tiles.
+
+use super::geometry::PointSet;
+
+/// The ordering produced by [`kdtree_order`].
+#[derive(Debug, Clone)]
+pub struct Clustering {
+    /// Permutation: position `i` in the TLR ordering is original point
+    /// `perm[i]`.
+    pub perm: Vec<usize>,
+    /// Start offsets of each leaf/tile, plus a final `n` sentinel.
+    /// `tile t` covers `offsets[t]..offsets[t+1]`.
+    pub offsets: Vec<usize>,
+}
+
+impl Clustering {
+    pub fn n_tiles(&self) -> usize {
+        self.offsets.len() - 1
+    }
+
+    pub fn tile_range(&self, t: usize) -> std::ops::Range<usize> {
+        self.offsets[t]..self.offsets[t + 1]
+    }
+
+    pub fn tile_size(&self, t: usize) -> usize {
+        self.offsets[t + 1] - self.offsets[t]
+    }
+}
+
+/// Build the KD-tree ordering with target tile size `m`.
+pub fn kdtree_order(points: &PointSet, m: usize) -> Clustering {
+    assert!(m >= 1);
+    let n = points.len();
+    let mut perm: Vec<usize> = (0..n).collect();
+    let mut offsets = vec![0usize];
+    split_recursive(points, &mut perm, 0, n, m, &mut offsets);
+    offsets.push(n);
+    // offsets currently holds starts in order; dedup + sort for safety.
+    offsets.sort_unstable();
+    offsets.dedup();
+    Clustering { perm, offsets }
+}
+
+fn split_recursive(
+    points: &PointSet,
+    perm: &mut [usize],
+    lo: usize,
+    hi: usize,
+    m: usize,
+    offsets: &mut Vec<usize>,
+) {
+    let size = hi - lo;
+    if size <= m {
+        if lo != 0 {
+            offsets.push(lo);
+        }
+        return;
+    }
+    // Sort the cluster's points by projection along the largest bbox axis.
+    let idx = &perm[lo..hi];
+    let (mins, maxs) = points.bbox(idx);
+    let axis = (0..points.dim)
+        .max_by(|&a, &b| (maxs[a] - mins[a]).partial_cmp(&(maxs[b] - mins[b])).unwrap())
+        .unwrap();
+    perm[lo..hi].sort_by(|&a, &b| {
+        points.point(a)[axis].partial_cmp(&points.point(b)[axis]).unwrap()
+    });
+    // Left size: half the closest power-of-two tile count, times m.
+    let nb = size.div_ceil(m);
+    let p2 = nb.next_power_of_two();
+    let left = ((p2 / 2) * m).clamp(m, size - 1);
+    split_recursive(points, perm, lo, lo + left, m, offsets);
+    split_recursive(points, perm, lo + left, hi, m, offsets);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::apps::geometry::{grid, random_ball};
+
+    fn is_permutation(perm: &[usize], n: usize) -> bool {
+        let mut seen = vec![false; n];
+        for &p in perm {
+            if p >= n || seen[p] {
+                return false;
+            }
+            seen[p] = true;
+        }
+        perm.len() == n
+    }
+
+    #[test]
+    fn power_of_two_input_gives_uniform_tiles() {
+        let ps = grid(4096, 2);
+        let c = kdtree_order(&ps, 512);
+        assert!(is_permutation(&c.perm, 4096));
+        assert_eq!(c.n_tiles(), 8);
+        for t in 0..c.n_tiles() {
+            assert_eq!(c.tile_size(t), 512);
+        }
+    }
+
+    #[test]
+    fn ragged_input_pads_only_last_tile() {
+        // Paper: "leaves are all the same size with the possible exception
+        // of the right most leaf".
+        let ps = random_ball(1000, 3, 1);
+        let c = kdtree_order(&ps, 256);
+        assert!(is_permutation(&c.perm, 1000));
+        let sizes: Vec<usize> = (0..c.n_tiles()).map(|t| c.tile_size(t)).collect();
+        for &s in &sizes[..sizes.len() - 1] {
+            assert_eq!(s, 256, "sizes={sizes:?}");
+        }
+        assert!(*sizes.last().unwrap() <= 256);
+        assert_eq!(sizes.iter().sum::<usize>(), 1000);
+    }
+
+    #[test]
+    fn clusters_are_spatially_coherent() {
+        // Points in a tile should be closer to each other on average than
+        // to the full cloud — the whole point of the ordering.
+        let ps = random_ball(1024, 3, 2);
+        let c = kdtree_order(&ps, 128);
+        let reordered = ps.permuted(&c.perm);
+        let mut intra = 0.0;
+        let mut cnt = 0;
+        for t in 0..c.n_tiles() {
+            let r = c.tile_range(t);
+            for i in r.clone().step_by(17) {
+                for j in r.clone().step_by(13) {
+                    intra += reordered.dist(i, j);
+                    cnt += 1;
+                }
+            }
+        }
+        intra /= cnt as f64;
+        let mut global = 0.0;
+        let mut gcnt = 0;
+        for i in (0..1024).step_by(31) {
+            for j in (0..1024).step_by(29) {
+                global += reordered.dist(i, j);
+                gcnt += 1;
+            }
+        }
+        global /= gcnt as f64;
+        assert!(intra < 0.7 * global, "intra={intra} global={global}");
+    }
+
+    #[test]
+    fn tiny_input_single_tile() {
+        let ps = grid(10, 2);
+        let c = kdtree_order(&ps, 64);
+        assert_eq!(c.n_tiles(), 1);
+        assert_eq!(c.tile_size(0), 10);
+    }
+}

@@ -1,0 +1,82 @@
+//! The `MatGen` abstraction: a symmetric matrix defined by an entry
+//! generator `(i, j) ↦ a_ij`. TLR construction samples tiles from it
+//! without ever materializing the full `N²` matrix — this is what lets the
+//! library work at sizes where the dense representation no longer fits.
+
+use crate::linalg::matrix::Matrix;
+
+/// A symmetric matrix given implicitly by its entries.
+pub trait MatGen: Sync {
+    /// Order of the matrix.
+    fn n(&self) -> usize;
+
+    /// Entry `(i, j)`. Implementations must be symmetric.
+    fn entry(&self, i: usize, j: usize) -> f64;
+
+    /// Materialize the dense block `rows × cols` at `(r0, c0)`.
+    fn block(&self, r0: usize, c0: usize, rows: usize, cols: usize) -> Matrix {
+        Matrix::from_fn(rows, cols, |i, j| self.entry(r0 + i, c0 + j))
+    }
+
+    /// Materialize the full dense matrix (only for baselines/tests).
+    fn dense(&self) -> Matrix {
+        self.block(0, 0, self.n(), self.n())
+    }
+}
+
+/// A dense matrix viewed as a generator (testing convenience).
+pub struct DenseGen(pub Matrix);
+
+impl MatGen for DenseGen {
+    fn n(&self) -> usize {
+        self.0.rows()
+    }
+    fn entry(&self, i: usize, j: usize) -> f64 {
+        self.0[(i, j)]
+    }
+}
+
+/// Generator wrapper adding `shift·I` — the paper's `A + εI` regularization
+/// used when building preconditioners for ill-conditioned systems (§6.2).
+pub struct Shifted<'a, G: MatGen + ?Sized> {
+    pub inner: &'a G,
+    pub shift: f64,
+}
+
+impl<'a, G: MatGen + ?Sized> MatGen for Shifted<'a, G> {
+    fn n(&self) -> usize {
+        self.inner.n()
+    }
+    fn entry(&self, i: usize, j: usize) -> f64 {
+        let v = self.inner.entry(i, j);
+        if i == j {
+            v + self.shift
+        } else {
+            v
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dense_gen_roundtrip() {
+        let a = Matrix::from_rows(3, 3, &[2., 1., 0., 1., 2., 1., 0., 1., 2.]);
+        let g = DenseGen(a.clone());
+        assert_eq!(g.dense(), a);
+        let b = g.block(1, 0, 2, 2);
+        assert_eq!(b[(0, 0)], 1.0);
+        assert_eq!(b[(1, 1)], 1.0);
+    }
+
+    #[test]
+    fn shifted_adds_diagonal() {
+        let a = Matrix::identity(3);
+        let g = DenseGen(a);
+        let s = Shifted { inner: &g, shift: 0.5 };
+        assert_eq!(s.entry(0, 0), 1.5);
+        assert_eq!(s.entry(0, 1), 0.0);
+    }
+}

@@ -1,0 +1,15 @@
+//! The paper's evaluation problems: point clouds, KD-tree orderings and
+//! the two matrix families (§6) — spatial-statistics covariance and 3D
+//! fractional diffusion — expressed as implicit symmetric generators.
+
+pub mod covariance;
+pub mod fracdiff;
+pub mod geometry;
+pub mod kdtree;
+pub mod matgen;
+
+pub use covariance::ExpCovariance;
+pub use fracdiff::FracDiffusion;
+pub use geometry::PointSet;
+pub use kdtree::{kdtree_order, Clustering};
+pub use matgen::MatGen;

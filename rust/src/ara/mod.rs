@@ -1,0 +1,391 @@
+//! Adaptive Randomized Approximation (paper §3.1, Alg 1) and its batched,
+//! dynamically-scheduled variant (paper §4.2, Alg 5).
+//!
+//! ARA compresses a linear operator given only black-box products `A Ω`
+//! and `Aᵀ Ω`: it grows an orthonormal basis `Q` block-by-block until the
+//! residual samples fall below the threshold ε, then projects to get
+//! `A ≈ Q Bᵀ` with `B = Aᵀ Q`. The operator is never materialized — this
+//! is what lets the TLR Cholesky compress updated tiles *ab initio* from
+//! their generator expression (Eq 1) with a single compression per tile.
+
+pub mod sampler;
+
+pub use sampler::{DenseSampler, Sampler};
+
+use crate::batch::{parallel_map, BatchStats, DynamicBatcher};
+use crate::linalg::gemm::matmul;
+use crate::linalg::matrix::Matrix;
+use crate::linalg::qr::{convergence_estimate, orthog, qrcp};
+use crate::linalg::rng::Rng;
+use crate::tlr::tile::LowRank;
+
+/// ARA options.
+#[derive(Debug, Clone, Copy)]
+pub struct AraOpts {
+    /// Samples per block (`bs`): 16 for the paper's 2D problems, 32 in 3D.
+    pub bs: usize,
+    /// Absolute convergence threshold ε: stop when the residual sample
+    /// norms fall below it.
+    pub eps: f64,
+    /// Consecutive converged blocks required (guards against a fluky small
+    /// sample; 1 matches the paper's Alg 1, 2 is belt-and-braces).
+    pub consecutive: usize,
+    /// Hard rank cap (≤ min(rows, cols); tiles may legitimately approach
+    /// full rank).
+    pub max_rank: usize,
+    /// Trim the detected factors to the minimal rank at `eps` with an
+    /// O((m+n)r² + r³) factor-level truncation after projection. Blocked
+    /// sampling detects ranks in multiples of `bs`; the trim recovers the
+    /// sub-block optimum (the paper's ARA lands within ~5% of the SVD
+    /// rank — Fig 11b — which requires exactly this).
+    pub trim: bool,
+}
+
+impl AraOpts {
+    pub fn new(bs: usize, eps: f64) -> Self {
+        AraOpts { bs, eps, consecutive: 1, max_rank: usize::MAX, trim: true }
+    }
+}
+
+/// Factor-level rank truncation of `U Vᵀ` at threshold `eps`, assuming
+/// `U` orthonormal (ARA's `Q`): a rank-revealing column-pivoted QR of
+/// `V` finds the numerical rank from the decay of `|R_jj|`, then the
+/// factors are cut to the leading block. `O(n r² + m r k)`, never
+/// touching an `m×n` dense form (an SVD here cost more than it saved —
+/// EXPERIMENTS.md §Perf).
+///
+/// With `V P = Q_b R_b`: `U Vᵀ = (U P·R_bᵀ) Q_bᵀ`; dropping trailing
+/// rows of `R_b` whose diagonal falls below `eps` perturbs the product
+/// by at most `‖R_b[k.., ..]‖ ≲ √(r−k)·eps` — same order as the ARA
+/// threshold itself.
+/// Recompress an arbitrary (non-orthonormal) `U Vᵀ` pair to `eps`
+/// without materializing the dense tile: orthonormalize `U = Q_u R_u`
+/// (`O(m r²)`), fold `R_u` into `V`, then [`trim_factors`].
+/// `O((m+n) r²)` versus the `O(m n min(m,n))`-plus-SVD dense path of
+/// [`LowRank::recompress`].
+pub fn recompress_factors(lr: &LowRank, eps: f64) -> LowRank {
+    if lr.rank() == 0 {
+        return lr.clone();
+    }
+    if lr.rank() > lr.rows() || lr.rank() > lr.cols() {
+        // Wider than the tile (freshly concatenated sums, e.g. the RBT
+        // transform): the factored QRs need tall operands. Re-detect the
+        // rank by sampling the factor pair with ARA — the chain runs on
+        // the vectorized gemm path, an order of magnitude faster than a
+        // dense SVD of the materialized tile (EXPERIMENTS §Perf #13).
+        let samp = sampler::LowRankSampler(lr);
+        let mut rng = Rng::new(0x5EC0_0000 ^ (lr.rank() as u64) << 32 ^ lr.rows() as u64);
+        let opts = AraOpts { bs: 32.min(lr.rows()).max(1), ..AraOpts::new(32, eps) };
+        return ara(&samp, &opts, &mut rng).lr;
+    }
+    let (qu, ru) = crate::linalg::qr::panel_qr(&lr.u);
+    // A = Q_u R_u Vᵀ = Q_u (V R_uᵀ)ᵀ
+    let v = matmul(&lr.v, &ru.transpose());
+    trim_factors(LowRank { u: qu, v }, eps)
+}
+
+pub(crate) fn trim_factors(lr: LowRank, eps: f64) -> LowRank {
+    let r = lr.rank();
+    if r == 0 {
+        return lr;
+    }
+    let (qb, rb, perm) = qrcp(&lr.v);
+    // The pivoted diagonal tracks the singular values closely; drop the
+    // rows where it falls below eps. (A follow-up exact SVD of the kept
+    // k×r block changed no ranks in our experiments while costing ~50%
+    // more factor time — see EXPERIMENTS.md §Perf — so the QRCP cut is
+    // the whole trim.)
+    let k = (0..r).take_while(|&j| rb[(j, j)].abs() > eps).count();
+    if k >= r {
+        return lr;
+    }
+    // V P = Q_b R_b  ⇒  U Vᵀ = (U P) R_bᵀ Q_bᵀ: reorder U's columns by
+    // the pivot, fold the truncated R_bᵀ into the left factor, keep
+    // Q_b's leading (orthonormal) columns as the right factor.
+    let m = lr.u.rows();
+    let mut u_perm = Matrix::zeros(m, r);
+    for (j, &pj) in perm.iter().enumerate() {
+        u_perm.col_mut(j).copy_from_slice(lr.u.col(pj));
+    }
+    let rbk_t = rb.submatrix(0, 0, k, r).transpose();
+    LowRank { u: matmul(&u_perm, &rbk_t), v: qb.submatrix(0, 0, qb.rows(), k) }
+}
+
+/// Outcome of a single-operator ARA run.
+#[derive(Debug)]
+pub struct AraResult {
+    /// `A ≈ u vᵀ` with `u = Q` (orthonormal) and `v = B = Aᵀ Q`.
+    pub lr: LowRank,
+    /// Number of sampling rounds used.
+    pub rounds: usize,
+    /// Final residual estimate.
+    pub residual: f64,
+}
+
+/// Adaptive randomized approximation of a single operator (paper Alg 1).
+pub fn ara(op: &dyn Sampler, opts: &AraOpts, rng: &mut Rng) -> AraResult {
+    let (rows, cols) = (op.rows(), op.cols());
+    let max_rank = opts.max_rank.min(rows.min(cols));
+    // The sample block can never usefully exceed the operator height
+    // (and the panel QR needs tall blocks) — clamp for tiny tiles such
+    // as a short final KD-tree leaf.
+    let bs = opts.bs.min(rows).max(1);
+    let mut q = Matrix::zeros(rows, 0);
+    let mut rounds = 0;
+    let mut ok_streak = 0;
+    let mut residual = f64::INFINITY;
+    while q.cols() < max_rank {
+        let omega = rng.normal_matrix(cols, bs);
+        let y = op.sample(&omega);
+        let o = orthog(&q, &y);
+        residual = convergence_estimate(&o.r);
+        rounds += 1;
+        if residual <= opts.eps {
+            ok_streak += 1;
+            if ok_streak >= opts.consecutive {
+                break;
+            }
+        } else {
+            ok_streak = 0;
+            q.append_cols(&o.q_new);
+        }
+    }
+    if q.cols() > max_rank {
+        q.truncate_cols(max_rank);
+    }
+    let b = if q.cols() > 0 { op.sample_t(&q) } else { Matrix::zeros(cols, 0) };
+    let mut lr = LowRank { u: q, v: b };
+    if opts.trim {
+        lr = trim_factors(lr, opts.eps);
+    }
+    AraResult { lr, rounds, residual }
+}
+
+/// Per-tile result of a batched ARA run.
+pub struct BatchedAraResult {
+    pub tiles: Vec<LowRank>,
+    pub stats: BatchStats,
+    /// Residual estimate each tile converged at.
+    pub residuals: Vec<f64>,
+}
+
+/// Batched ARA with the paper's dynamic batching (Alg 5):
+/// operators are admitted to a lock-step processing batch of size
+/// `capacity` in descending `priority` order (the paper uses the tiles'
+/// pre-update ranks); each round every in-flight operator draws a block of
+/// `bs` samples, orthogonalizes against its basis, and retires when
+/// converged, letting the next pending operator take its slot.
+///
+/// Each operator gets an independent RNG stream split from `seed`, so the
+/// computed factorization does not depend on the batch capacity —
+/// scheduling is performance-only (verified by `batch_size_invariance`).
+pub fn batched_ara(
+    ops: &[&dyn Sampler],
+    priorities: &[usize],
+    capacity: usize,
+    opts: &AraOpts,
+    seed: u64,
+) -> BatchedAraResult {
+    let n = ops.len();
+    assert_eq!(priorities.len(), n);
+    if n == 0 {
+        return BatchedAraResult { tiles: Vec::new(), stats: BatchStats::default(), residuals: Vec::new() };
+    }
+    struct State {
+        q: Matrix,
+        streak: usize,
+        rng: Rng,
+        residual: f64,
+    }
+    let root = Rng::new(seed);
+    let mut states: Vec<State> = (0..n)
+        .map(|i| State {
+            q: Matrix::zeros(ops[i].rows(), 0),
+            streak: 0,
+            rng: root.split(i as u64),
+            residual: f64::INFINITY,
+        })
+        .collect();
+    let mut batcher = DynamicBatcher::new(priorities, capacity.max(1));
+    while !batcher.is_done() {
+        let active = batcher.active().to_vec();
+        // One ARA round for every in-flight tile, in parallel. Each round
+        // returns the new basis block and the residual estimate.
+        let round: Vec<(Matrix, f64, Rng)> = {
+            let states_ref = &states;
+            parallel_map(active.len(), |pos| {
+                let i = active[pos];
+                let st = &states_ref[i];
+                let mut rng = st.rng.clone();
+                // Clamp like `ara`: short tiles take smaller blocks.
+                let bs = opts.bs.min(ops[i].rows()).max(1);
+                let omega = rng.normal_matrix(ops[i].cols(), bs);
+                let y = ops[i].sample(&omega);
+                let o = orthog(&st.q, &y);
+                let e = convergence_estimate(&o.r);
+                (o.q_new, e, rng)
+            })
+        };
+        let mut converged = vec![false; active.len()];
+        for (pos, (q_new, e, rng)) in round.into_iter().enumerate() {
+            let i = active[pos];
+            let max_rank = opts.max_rank.min(ops[i].rows().min(ops[i].cols()));
+            let st = &mut states[i];
+            st.rng = rng;
+            st.residual = e;
+            if e <= opts.eps {
+                st.streak += 1;
+                if st.streak >= opts.consecutive {
+                    converged[pos] = true;
+                    continue;
+                }
+            } else {
+                st.streak = 0;
+                st.q.append_cols(&q_new);
+            }
+            if st.q.cols() >= max_rank {
+                st.q.truncate_cols(max_rank);
+                converged[pos] = true;
+            }
+        }
+        batcher.complete_round(&converged);
+    }
+    // Projection phase (Alg 5 line 21): B = Aᵀ Q for every tile, batched.
+    let tiles: Vec<LowRank> = {
+        let states_ref = &states;
+        parallel_map(n, |i| {
+            let q = &states_ref[i].q;
+            let b = if q.cols() > 0 {
+                ops[i].sample_t(q)
+            } else {
+                Matrix::zeros(ops[i].cols(), 0)
+            };
+            let lr = LowRank { u: q.clone(), v: b };
+            if opts.trim {
+                trim_factors(lr, opts.eps)
+            } else {
+                lr
+            }
+        })
+    };
+    let residuals = states.iter().map(|s| s.residual).collect();
+    BatchedAraResult { tiles, stats: batcher.stats().clone(), residuals }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::gemm::matmul_nt;
+
+    fn lowrank_matrix(m: usize, n: usize, k: usize, seed: u64) -> Matrix {
+        let mut rng = Rng::new(seed);
+        let u = rng.normal_matrix(m, k);
+        let v = rng.normal_matrix(n, k);
+        matmul_nt(&u, &v)
+    }
+
+    #[test]
+    fn ara_recovers_exact_low_rank() {
+        let a = lowrank_matrix(60, 40, 5, 1);
+        let s = DenseSampler(&a);
+        let mut rng = Rng::new(2);
+        let r = ara(&s, &AraOpts::new(8, 1e-10), &mut rng);
+        // Rank detected within one block of the true rank.
+        assert!(r.lr.rank() >= 5 && r.lr.rank() <= 5 + 8, "rank={}", r.lr.rank());
+        let err = r.lr.to_dense().sub(&a).norm_fro();
+        assert!(err < 1e-8, "err={err}");
+    }
+
+    #[test]
+    fn ara_threshold_controls_error() {
+        // A matrix with geometrically decaying singular values.
+        let mut rng = Rng::new(3);
+        let n = 50;
+        let u = crate::linalg::qr::panel_qr(&rng.normal_matrix(n, n)).0;
+        let mut a = Matrix::zeros(n, n);
+        for k in 0..n {
+            let sv = 0.5f64.powi(k as i32);
+            for i in 0..n {
+                for j in 0..n {
+                    a[(i, j)] += sv * u[(i, k)] * u[(j, k)];
+                }
+            }
+        }
+        for eps in [1e-2, 1e-5, 1e-8] {
+            let s = DenseSampler(&a);
+            let mut r1 = Rng::new(4);
+            let r = ara(&s, &AraOpts::new(4, eps), &mut r1);
+            let err = r.lr.to_dense().sub(&a).norm_fro();
+            // Fro-norm error within a small factor of the absolute eps.
+            assert!(err < 20.0 * eps, "eps={eps} err={err}");
+            // and not wastefully accurate (rank should shrink with eps)
+            if eps > 1e-7 {
+                assert!(r.lr.rank() < n, "eps={eps} rank={}", r.lr.rank());
+            }
+        }
+    }
+
+    #[test]
+    fn ara_zero_matrix_rank_zero() {
+        let a = Matrix::zeros(30, 20);
+        let s = DenseSampler(&a);
+        let mut rng = Rng::new(5);
+        let r = ara(&s, &AraOpts::new(8, 1e-12), &mut rng);
+        assert_eq!(r.lr.rank(), 0);
+        assert_eq!(r.rounds, 1);
+    }
+
+    #[test]
+    fn ara_full_rank_capped() {
+        let mut rng = Rng::new(6);
+        let a = rng.normal_matrix(20, 20);
+        let s = DenseSampler(&a);
+        let mut r1 = Rng::new(7);
+        let r = ara(&s, &AraOpts::new(4, 1e-14), &mut r1);
+        assert!(r.lr.rank() <= 20);
+        // Full-rank capture should still reconstruct well.
+        let rel = r.lr.to_dense().sub(&a).norm_fro() / a.norm_fro();
+        assert!(rel < 1e-8, "rel={rel}");
+    }
+
+    #[test]
+    fn batched_matches_quality_of_single() {
+        let mats: Vec<Matrix> =
+            (0..7).map(|i| lowrank_matrix(40, 40, 2 + i, 10 + i as u64)).collect();
+        let samplers: Vec<DenseSampler> = mats.iter().map(DenseSampler).collect();
+        let ops: Vec<&dyn Sampler> = samplers.iter().map(|s| s as &dyn Sampler).collect();
+        let prios: Vec<usize> = (0..7).map(|i| 2 + i).collect();
+        let opts = AraOpts::new(4, 1e-9);
+        let out = batched_ara(&ops, &prios, 3, &opts, 42);
+        assert_eq!(out.tiles.len(), 7);
+        for (t, a) in out.tiles.iter().zip(&mats) {
+            let err = t.to_dense().sub(a).norm_fro();
+            assert!(err < 1e-7, "err={err}");
+        }
+        assert!(out.stats.rounds > 0);
+        assert!(out.stats.max_in_flight <= 3);
+    }
+
+    #[test]
+    fn batch_size_invariance() {
+        // The computed factors must not depend on the batch capacity —
+        // scheduling is performance-only (per-tile RNG streams).
+        let mats: Vec<Matrix> = (0..5).map(|i| lowrank_matrix(30, 30, 3, 20 + i as u64)).collect();
+        let samplers: Vec<DenseSampler> = mats.iter().map(DenseSampler).collect();
+        let ops: Vec<&dyn Sampler> = samplers.iter().map(|s| s as &dyn Sampler).collect();
+        let prios = vec![1usize; 5];
+        let opts = AraOpts::new(4, 1e-9);
+        let a = batched_ara(&ops, &prios, 1, &opts, 7);
+        let b = batched_ara(&ops, &prios, 5, &opts, 7);
+        for (x, y) in a.tiles.iter().zip(&b.tiles) {
+            assert_eq!(x.rank(), y.rank());
+            assert!(x.to_dense().sub(&y.to_dense()).norm_max() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn batched_empty_input() {
+        let out = batched_ara(&[], &[], 4, &AraOpts::new(4, 1e-6), 1);
+        assert!(out.tiles.is_empty());
+    }
+}

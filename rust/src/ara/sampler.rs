@@ -1,0 +1,120 @@
+//! Black-box operators that ARA can sample: the `Sampler` trait plus the
+//! concrete samplers used across the library. The left-looking Cholesky
+//! sampler (the paper's `sampleLeft`/`sampleLeftT`) lives in
+//! [`crate::factor::sample`], next to the algorithm that owns it.
+
+use crate::linalg::gemm::{matmul, matmul_tn};
+use crate::linalg::matrix::Matrix;
+use crate::tlr::tile::LowRank;
+
+/// A linear operator that can be sampled from both sides.
+pub trait Sampler: Sync {
+    fn rows(&self) -> usize;
+    fn cols(&self) -> usize;
+    /// `Y = A Ω`, `Ω: cols × bs`.
+    fn sample(&self, omega: &Matrix) -> Matrix;
+    /// `Z = Aᵀ Ω`, `Ω: rows × bs`.
+    fn sample_t(&self, omega: &Matrix) -> Matrix;
+}
+
+/// Sample a materialized dense matrix (construction path and tests).
+pub struct DenseSampler<'a>(pub &'a Matrix);
+
+impl Sampler for DenseSampler<'_> {
+    fn rows(&self) -> usize {
+        self.0.rows()
+    }
+    fn cols(&self) -> usize {
+        self.0.cols()
+    }
+    fn sample(&self, omega: &Matrix) -> Matrix {
+        matmul(self.0, omega)
+    }
+    fn sample_t(&self, omega: &Matrix) -> Matrix {
+        matmul_tn(self.0, omega)
+    }
+}
+
+/// Sample an existing low-rank tile (used when recompressing).
+pub struct LowRankSampler<'a>(pub &'a LowRank);
+
+impl Sampler for LowRankSampler<'_> {
+    fn rows(&self) -> usize {
+        self.0.rows()
+    }
+    fn cols(&self) -> usize {
+        self.0.cols()
+    }
+    fn sample(&self, omega: &Matrix) -> Matrix {
+        self.0.apply(omega)
+    }
+    fn sample_t(&self, omega: &Matrix) -> Matrix {
+        self.0.apply_t(omega)
+    }
+}
+
+/// A difference of two samplers, `A − B` (used to sample compression
+/// remainders, e.g. Schur compensation terms).
+pub struct DiffSampler<'a> {
+    pub a: &'a dyn Sampler,
+    pub b: &'a dyn Sampler,
+}
+
+impl Sampler for DiffSampler<'_> {
+    fn rows(&self) -> usize {
+        self.a.rows()
+    }
+    fn cols(&self) -> usize {
+        self.a.cols()
+    }
+    fn sample(&self, omega: &Matrix) -> Matrix {
+        let mut y = self.a.sample(omega);
+        y.axpy(-1.0, &self.b.sample(omega));
+        y
+    }
+    fn sample_t(&self, omega: &Matrix) -> Matrix {
+        let mut y = self.a.sample_t(omega);
+        y.axpy(-1.0, &self.b.sample_t(omega));
+        y
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::rng::Rng;
+
+    #[test]
+    fn dense_sampler_matches_matmul() {
+        let mut rng = Rng::new(1);
+        let a = rng.normal_matrix(8, 6);
+        let om = rng.normal_matrix(6, 3);
+        let s = DenseSampler(&a);
+        assert!(s.sample(&om).sub(&matmul(&a, &om)).norm_max() < 1e-14);
+        let omt = rng.normal_matrix(8, 3);
+        assert!(s.sample_t(&omt).sub(&matmul_tn(&a, &omt)).norm_max() < 1e-14);
+    }
+
+    #[test]
+    fn lowrank_sampler_matches_dense() {
+        let mut rng = Rng::new(2);
+        let lr = LowRank { u: rng.normal_matrix(10, 2), v: rng.normal_matrix(7, 2) };
+        let d = lr.to_dense();
+        let om = rng.normal_matrix(7, 4);
+        let s = LowRankSampler(&lr);
+        assert!(s.sample(&om).sub(&matmul(&d, &om)).norm_max() < 1e-12);
+    }
+
+    #[test]
+    fn diff_sampler_subtracts() {
+        let mut rng = Rng::new(3);
+        let a = rng.normal_matrix(5, 5);
+        let b = rng.normal_matrix(5, 5);
+        let sa = DenseSampler(&a);
+        let sb = DenseSampler(&b);
+        let d = DiffSampler { a: &sa, b: &sb };
+        let om = rng.normal_matrix(5, 2);
+        let expect = matmul(&a.sub(&b), &om);
+        assert!(d.sample(&om).sub(&expect).norm_max() < 1e-13);
+    }
+}

@@ -1,0 +1,134 @@
+//! Parallel sample buffers (paper §4.1, Fig 3).
+//!
+//! When sampling the `k−1` left-looking updates of a panel, the updates to
+//! each tile are accumulated into `pb` *independent* buffers `Y_j` — a
+//! `tiles × pb` matrix of buffers — processed in `⌈(k−1)/pb⌉` serial steps,
+//! then combined by a parallel row reduction. More buffers = more
+//! parallelism = more workspace memory: the paper's key tunable (set to
+//! `3/2·b` buffers total in §6).
+
+use crate::linalg::matrix::Matrix;
+
+/// A bank of accumulation buffers for one panel sampling pass.
+pub struct ParallelBuffers {
+    /// `bufs[t * pb + j]`: buffer `j` of tile `t`, each `m × bs`.
+    bufs: Vec<Matrix>,
+    /// Buffers per tile.
+    pb: usize,
+    n_tiles: usize,
+}
+
+impl ParallelBuffers {
+    /// Allocate a bank for `n_tiles` tiles with `pb` buffers each, every
+    /// buffer `rows × cols` zeros.
+    pub fn new(n_tiles: usize, pb: usize, rows: usize, cols: usize) -> Self {
+        assert!(pb >= 1);
+        let bufs = (0..n_tiles * pb).map(|_| Matrix::zeros(rows, cols)).collect();
+        ParallelBuffers { bufs, pb, n_tiles }
+    }
+
+    /// Number of buffers per tile (how many updates can be sampled
+    /// concurrently per tile).
+    pub fn per_tile(&self) -> usize {
+        self.pb
+    }
+
+    pub fn n_tiles(&self) -> usize {
+        self.n_tiles
+    }
+
+    /// Total workspace in f64 values (for the memory reports).
+    pub fn memory_f64(&self) -> usize {
+        self.bufs.iter().map(|b| b.rows() * b.cols()).sum()
+    }
+
+    /// Mutable access to buffer `(tile, j)`.
+    pub fn buf_mut(&mut self, tile: usize, j: usize) -> &mut Matrix {
+        &mut self.bufs[tile * self.pb + j]
+    }
+
+    /// Split the bank into per-buffer mutable references, for handing each
+    /// `(tile, j)` slot to a different worker. Order: tile-major.
+    pub fn slots_mut(&mut self) -> Vec<&mut Matrix> {
+        self.bufs.iter_mut().collect()
+    }
+
+    /// Parallel row-reduction (paper Fig 3 final step): sum the `pb`
+    /// buffers of each tile into one `Y` per tile. Buffers are zeroed for
+    /// reuse.
+    pub fn reduce(&mut self) -> Vec<Matrix> {
+        let pb = self.pb;
+        let mut out: Vec<Matrix> = Vec::with_capacity(self.n_tiles);
+        for t in 0..self.n_tiles {
+            // Tree reduction within the tile's buffers.
+            let base = t * pb;
+            let mut stride = 1;
+            while stride < pb {
+                for j in (0..pb).step_by(2 * stride) {
+                    if j + stride < pb {
+                        let (a, b) = two(&mut self.bufs, base + j, base + j + stride);
+                        a.axpy(1.0, b);
+                    }
+                }
+                stride *= 2;
+            }
+            out.push(self.bufs[base].clone());
+        }
+        for b in self.bufs.iter_mut() {
+            b.as_mut_slice().fill(0.0);
+        }
+        out
+    }
+}
+
+fn two<T>(v: &mut [T], a: usize, b: usize) -> (&mut T, &mut T) {
+    assert!(a < b);
+    let (lo, hi) = v.split_at_mut(b);
+    (&mut lo[a], &mut hi[0])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn reduce_sums_buffers() {
+        let mut pbuf = ParallelBuffers::new(2, 3, 2, 2);
+        for t in 0..2 {
+            for j in 0..3 {
+                let m = pbuf.buf_mut(t, j);
+                m[(0, 0)] = (t * 10 + j + 1) as f64;
+            }
+        }
+        let reduced = pbuf.reduce();
+        assert_eq!(reduced.len(), 2);
+        assert_eq!(reduced[0][(0, 0)], 1.0 + 2.0 + 3.0);
+        assert_eq!(reduced[1][(0, 0)], 11.0 + 12.0 + 13.0);
+        // Buffers cleared after reduce.
+        assert_eq!(pbuf.buf_mut(0, 0).norm_max(), 0.0);
+    }
+
+    #[test]
+    fn reduce_single_buffer_identity() {
+        let mut pbuf = ParallelBuffers::new(1, 1, 3, 1);
+        pbuf.buf_mut(0, 0)[(2, 0)] = 5.0;
+        let r = pbuf.reduce();
+        assert_eq!(r[0][(2, 0)], 5.0);
+    }
+
+    #[test]
+    fn reduce_non_power_of_two() {
+        let mut pbuf = ParallelBuffers::new(1, 5, 1, 1);
+        for j in 0..5 {
+            pbuf.buf_mut(0, j)[(0, 0)] = 1.0;
+        }
+        let r = pbuf.reduce();
+        assert_eq!(r[0][(0, 0)], 5.0);
+    }
+
+    #[test]
+    fn memory_accounting() {
+        let pbuf = ParallelBuffers::new(4, 2, 8, 16);
+        assert_eq!(pbuf.memory_f64(), 4 * 2 * 8 * 16);
+    }
+}

@@ -1,0 +1,684 @@
+//! `report` — regenerate every table and figure of the paper's
+//! evaluation section (H2OPUS-TLR §6) at CI scale.
+//!
+//! Scales are reduced relative to the paper's V100 runs (DESIGN.md §3);
+//! the *shape* of each result — who wins, asymptotic slopes, crossovers,
+//! phase mixes, convergence behaviour — is the reproduction target.
+//! `--scale large` raises the problem sizes toward the paper's.
+//!
+//! Usage: `report <experiment> [--scale small|large]` where experiment is
+//! one of: fig1 fig4 fig5 fig6 table1 fig7 fig8a fig8b fig9 fig10 fig11a
+//! fig11b fig12 fig13 pivot_cost solve_cost all
+
+use h2opus_tlr::config::Problem;
+use h2opus_tlr::experiments::*;
+use h2opus_tlr::factor::{cholesky, ldlt, FactorOpts, Pivoting};
+use h2opus_tlr::linalg::rng::Rng;
+use h2opus_tlr::profile::{Phase, PHASE_NAMES};
+use h2opus_tlr::solve::{chol_solve, pcg, tlr_matvec, tlr_trsv_lower, TlrOp};
+
+const HELP: &str = "\
+report — regenerate the paper's tables and figures (H2OPUS-TLR §6)
+
+USAGE: report <experiment> [--scale small|large]
+
+EXPERIMENTS:
+  fig1        TLR structure + rank distribution (3D ball)
+  fig4        rank heatmaps of the Cholesky factors (fracdiff + cov3d)
+  fig5        memory growth vs N for various eps (2D & 3D) vs dense N^2
+  fig6        rank distributions: 3D grid vs 3D ball
+  table1      tile-size sweep: memory and factorization time
+  fig7        factorization time vs N and eps; dense baseline crossover
+  fig8a       phase profile (GEMM share) for 2D & 3D
+  fig8b       factorization GFLOP/s vs N + batched-GEMM roofline bracket
+  fig9        PCG convergence vs preconditioner accuracy (fracdiff)
+  fig10       preconditioner build time + phase mix vs eps (fracdiff)
+  fig11a      preconditioner rank distribution per eps (fracdiff)
+  fig11b      ARA-detected vs SVD-optimal ranks (~5% memory delta)
+  fig12       rank heatmaps without/with pivoting (cov3d)
+  fig13       rank distribution shift from pivoting (cov & fracdiff)
+  pivot_cost  pivot-selection cost: Frobenius vs 2-norm; LDL^T cost
+  solve_cost  TLR matvec + triangular solve vs factorization time
+  all         run everything
+";
+
+/// Problem scales. `small` finishes the full `all` sweep in minutes;
+/// `large` stretches toward the paper's sizes (tens of minutes).
+struct Scale {
+    /// N sweep for memory/time curves.
+    ns: Vec<usize>,
+    /// Largest N used for single-instance experiments.
+    n_big: usize,
+    /// Tile size cap for 2D problems (paper: 1024 at N=2^17).
+    m2: usize,
+    /// Tile size cap for 3D problems (paper: 512 at N=2^17).
+    m3: usize,
+    /// Max N for the O(N^3) dense baseline.
+    n_dense_max: usize,
+}
+
+impl Scale {
+    fn parse(name: &str) -> Scale {
+        match name {
+            "large" => Scale {
+                ns: vec![1024, 2048, 4096, 8192, 16384],
+                n_big: 16384,
+                m2: 512,
+                m3: 512,
+                n_dense_max: 8192,
+            },
+            _ => Scale {
+                ns: vec![512, 1024, 2048, 4096],
+                n_big: 4096,
+                m2: 256,
+                m3: 256,
+                n_dense_max: 2048,
+            },
+        }
+    }
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let mut exp = String::new();
+    let mut scale = "small".to_string();
+    let mut i = 0;
+    while i < args.len() {
+        match args[i].as_str() {
+            "--scale" => {
+                scale = args.get(i + 1).cloned().unwrap_or_default();
+                i += 2;
+            }
+            "--help" | "-h" => {
+                print!("{HELP}");
+                return;
+            }
+            a if !a.starts_with('-') && exp.is_empty() => {
+                exp = a.to_string();
+                i += 1;
+            }
+            other => {
+                eprintln!("unexpected argument '{other}'\n\n{HELP}");
+                std::process::exit(2);
+            }
+        }
+    }
+    if exp.is_empty() {
+        print!("{HELP}");
+        std::process::exit(2);
+    }
+    let s = Scale::parse(&scale);
+    let t0 = std::time::Instant::now();
+    match exp.as_str() {
+        "fig1" => fig1(&s),
+        "fig4" => fig4(&s),
+        "fig5" => fig5(&s),
+        "fig6" => fig6(&s),
+        "table1" => table1(&s),
+        "fig7" => fig7(&s),
+        "fig8a" => fig8a(&s),
+        "fig8b" => fig8b(&s),
+        "fig9" => fig9(&s),
+        "fig10" => fig10(&s),
+        "fig11a" => fig11a(&s),
+        "fig11b" => fig11b(&s),
+        "fig12" => fig12(&s),
+        "fig13" => fig13(&s),
+        "pivot_cost" => pivot_cost(&s),
+        "solve_cost" => solve_cost(&s),
+        "all" => {
+            for f in [
+                fig1 as fn(&Scale),
+                fig4,
+                fig5,
+                fig6,
+                table1,
+                fig7,
+                fig8a,
+                fig8b,
+                fig9,
+                fig10,
+                fig11a,
+                fig11b,
+                fig12,
+                fig13,
+                pivot_cost,
+                solve_cost,
+            ] {
+                f(&s);
+                println!();
+            }
+        }
+        other => {
+            eprintln!("unknown experiment '{other}'\n\n{HELP}");
+            std::process::exit(2);
+        }
+    }
+    eprintln!("[report done in {:.1}s]", t0.elapsed().as_secs_f64());
+}
+
+fn header(title: &str) {
+    println!("==== {title} ====");
+}
+
+// ---------------------------------------------------------------- fig 1
+
+/// Paper Fig 1: TLR matrix of a 3D-ball statistics problem — rank
+/// distribution of the off-diagonal tiles + realized compression.
+fn fig1(s: &Scale) {
+    header("Fig 1 — TLR structure and rank distribution (3D ball)");
+    let n = s.n_big.min(8192);
+    let m = s.m3.min(n / 8);
+    let inst = instance(Problem::Cov3dBall, n, m, 1e-6, 1);
+    let mem = inst.tlr.memory();
+    let rs = rank_stats(&inst.tlr);
+    println!("N={n} m={m} eps=1e-6  (paper: N=8192, m=512)");
+    println!(
+        "off-diag ranks: mean {:.1}, min {}, max {} (tile size {m})",
+        rs.mean, rs.min, rs.max
+    );
+    println!(
+        "memory: {:.4} GB vs dense {:.4} GB — compression {:.1}x",
+        mem.total_gb(),
+        mem.full_dense_gb(),
+        mem.compression()
+    );
+    println!("rank distribution (tiles sorted by rank, descending):");
+    let curve = rank_curve(&inst.tlr);
+    for (idx, r) in downsample(&curve, 12) {
+        let bar = "#".repeat((r * 50 / rs.max.max(1)).max(1));
+        println!("  tile {idx:>6}: rank {r:>4}  {bar}");
+    }
+}
+
+// ---------------------------------------------------------------- fig 4
+
+/// Paper Fig 4: rank heatmaps of the TLR Cholesky factors.
+fn fig4(s: &Scale) {
+    header("Fig 4 — rank heatmaps of Cholesky factors");
+    let n = s.n_big.min(4096);
+    let m = (n / 16).max(64);
+    for (name, problem) in
+        [("3D fractional diffusion", Problem::FracDiff), ("3D covariance", Problem::Cov3d)]
+    {
+        let inst = instance(problem, n, m, 1e-6, 4);
+        let shift = if problem == Problem::FracDiff { 1e-6 } else { 0.0 };
+        let (f, _) = time_cholesky(
+            inst.tlr,
+            &FactorOpts { eps: 1e-6, bs: 16, shift, ..Default::default() },
+        );
+        println!("{name} (N={n}, m={m}, eps=1e-6):");
+        print!("{}", render_heatmap(&f.l.rank_heatmap(), m));
+        let rs = rank_stats(&f.l);
+        println!("factor ranks: mean {:.1}, max {}\n", rs.mean, rs.max);
+    }
+    println!("(paper: N=2^17, m=1024 — same qualitative structure: banded decay,");
+    println!(" fracdiff ranks > covariance ranks)");
+}
+
+// ---------------------------------------------------------------- fig 5
+
+/// Paper Fig 5: memory growth vs N, per eps, 2D & 3D, against dense N².
+fn fig5(s: &Scale) {
+    header("Fig 5 — memory growth vs N (TLR vs dense)");
+    for (name, problem, m_div) in
+        [("2D covariance", Problem::Cov2d, 8), ("3D covariance", Problem::Cov3d, 8)]
+    {
+        println!("{name} (m = N/{m_div}, capped):");
+        println!(
+            "  {:>7} {:>11} {:>11} {:>11} {:>11} {:>11}",
+            "N", "eps=1e-2", "eps=1e-4", "eps=1e-6", "eps=1e-8", "dense"
+        );
+        let mut per_eps: Vec<Vec<f64>> = vec![Vec::new(); 4];
+        for &n in &s.ns {
+            let m = (n / m_div).clamp(64, if problem == Problem::Cov2d { s.m2 } else { s.m3 });
+            let mut row = format!("  {n:>7}");
+            for (e_idx, eps) in [1e-2, 1e-4, 1e-6, 1e-8].into_iter().enumerate() {
+                let inst = instance(problem, n, m, eps, 5);
+                let gb = inst.tlr.memory().total_gb();
+                per_eps[e_idx].push(gb);
+                row.push_str(&format!(" {gb:>11.5}"));
+            }
+            let dense = (n * n) as f64 * 8.0 / 1e9;
+            row.push_str(&format!(" {dense:>11.5}"));
+            println!("{row}");
+        }
+        let xs: Vec<f64> = s.ns.iter().map(|&n| n as f64).collect();
+        for (e_idx, eps) in [1e-2, 1e-4, 1e-6, 1e-8].into_iter().enumerate() {
+            let slope = loglog_slope(&xs, &per_eps[e_idx]);
+            println!("  slope(eps={eps:.0e}) = N^{slope:.2}   (paper: ~N^1.5; dense: N^2)");
+        }
+    }
+}
+
+// ---------------------------------------------------------------- fig 6
+
+/// Paper Fig 6: rank distributions for a 3D grid vs points in a ball.
+fn fig6(s: &Scale) {
+    header("Fig 6 — rank distribution: 3D regular grid vs random ball");
+    let n = s.n_big.min(8192);
+    let m = (n / 16).max(64);
+    for (name, problem) in [("regular grid", Problem::Cov3d), ("random ball", Problem::Cov3dBall)]
+    {
+        let inst = instance(problem, n, m, 1e-6, 6);
+        let rs = rank_stats(&inst.tlr);
+        let over_half = inst.tlr.offdiag_ranks().iter().filter(|&&r| r > m / 2).count();
+        let total = inst.tlr.offdiag_ranks().len();
+        println!("{name} (N={n}, m={m}): mean rank {:.1}, max {}", rs.mean, rs.max);
+        println!("  tiles with k > m/2 (memory overhead vs dense): {over_half}/{total}");
+        let curve = rank_curve(&inst.tlr);
+        for (idx, r) in downsample(&curve, 8) {
+            let bar = "#".repeat((r * 40 / m).max(1));
+            println!("  tile {idx:>6}: rank {r:>4}  {bar}");
+        }
+    }
+    println!("(paper: grid shows plateaus of equal ranks; ball is smoother — compare bars)");
+}
+
+// --------------------------------------------------------------- table 1
+
+/// Paper Table 1: tile-size sweep — memory (total/dense/low-rank) and
+/// Cholesky time, for two 3D covariance sizes.
+fn table1(s: &Scale) {
+    header("Table 1 — tile size vs memory and factorization time (3D covariance)");
+    let n_small = s.n_big / 2;
+    let n_large = s.n_big;
+    for n in [n_small, n_large] {
+        println!("N = {n}  (eps = 1e-6):");
+        println!(
+            "  {:>9} {:>11} {:>11} {:>11} {:>11}",
+            "tile", "total GB", "dense GB", "LR GB", "chol (s)"
+        );
+        let mut best: Option<(usize, f64)> = None;
+        let mut m = 64;
+        while m <= n / 4 {
+            let inst = instance(Problem::Cov3d, n, m, 1e-6, 7);
+            let mem = inst.tlr.memory();
+            let (_, secs) =
+                time_cholesky(inst.tlr, &FactorOpts { eps: 1e-6, bs: 16, ..Default::default() });
+            println!(
+                "  {m:>9} {:>11.5} {:>11.5} {:>11.5} {:>11.3}",
+                mem.total_gb(),
+                mem.dense_gb(),
+                mem.lowrank_gb(),
+                secs
+            );
+            if best.map(|(_, b)| secs < b).unwrap_or(true) {
+                best = Some((m, secs));
+            }
+            m *= 2;
+        }
+        if let Some((m, _)) = best {
+            println!("  fastest tile size: {m}  (paper: interior optimum, grows with N)");
+        }
+    }
+}
+
+// ---------------------------------------------------------------- fig 7
+
+/// Paper Fig 7: factorization time vs N per eps + dense baseline.
+fn fig7(s: &Scale) {
+    header("Fig 7 — TLR Cholesky time vs N and eps; dense baseline");
+    for (name, problem) in [("2D covariance", Problem::Cov2d), ("3D covariance", Problem::Cov3d)]
+    {
+        println!("{name}:");
+        println!(
+            "  {:>7} {:>11} {:>11} {:>11} {:>12}",
+            "N", "eps=1e-2", "eps=1e-4", "eps=1e-6", "dense chol"
+        );
+        let mut tlr_t: Vec<f64> = Vec::new();
+        let mut xs: Vec<f64> = Vec::new();
+        for &n in &s.ns {
+            let m = (n / 8).clamp(64, if problem == Problem::Cov2d { s.m2 } else { s.m3 });
+            let mut row = format!("  {n:>7}");
+            for eps in [1e-2, 1e-4, 1e-6] {
+                let inst = instance(problem, n, m, eps, 8);
+                let shift = if eps >= 1e-3 { eps * 0.1 } else { 0.0 };
+                let (_, secs) = time_cholesky(
+                    inst.tlr,
+                    &FactorOpts {
+                        eps,
+                        bs: 16,
+                        shift,
+                        schur_comp: eps >= 1e-3,
+                        ..Default::default()
+                    },
+                );
+                if (eps - 1e-6).abs() < 1e-18 {
+                    tlr_t.push(secs);
+                    xs.push(n as f64);
+                }
+                row.push_str(&format!(" {secs:>11.3}"));
+            }
+            if n <= s.n_dense_max {
+                let inst = instance(problem, n, (n / 8).max(64), 1e-6, 8);
+                let (dsecs, _) = dense_baseline(inst.gen.as_ref());
+                row.push_str(&format!(" {dsecs:>12.3}"));
+            } else {
+                row.push_str(&format!(" {:>12}", "(skipped)"));
+            }
+            println!("{row}");
+        }
+        let slope = loglog_slope(&xs, &tlr_t);
+        println!("  time slope at eps=1e-6: N^{slope:.2}  (paper: ~N^2 TLR vs N^3 dense)");
+    }
+}
+
+// ---------------------------------------------------------------- fig 8a
+
+/// Paper Fig 8a: phase breakdown of the factorization.
+fn fig8a(s: &Scale) {
+    header("Fig 8a — factorization phase profile (share of work)");
+    for (name, problem, bs) in
+        [("2D covariance", Problem::Cov2d, 16), ("3D covariance", Problem::Cov3d, 32)]
+    {
+        let n = s.n_big;
+        let m = n / 16;
+        let inst = instance(problem, n, m, 1e-6, 9);
+        let (f, _) = time_cholesky(inst.tlr, &FactorOpts { eps: 1e-6, bs, ..Default::default() });
+        let p = &f.stats.profile;
+        println!("{name} (N={n}, m={m}, eps=1e-6):");
+        let shares = p.shares();
+        for (i, &sh) in shares.iter().enumerate() {
+            if sh > 0.001 {
+                let bar = "#".repeat((sh * 50.0) as usize);
+                println!("  {:<13} {:>5.1}%  {bar}", PHASE_NAMES[i], sh * 100.0);
+            }
+        }
+        println!("  GEMM-shaped share: {:.1}%  (paper: 80-90%)\n", 100.0 * p.gemm_share());
+    }
+}
+
+// ---------------------------------------------------------------- fig 8b
+
+/// Paper Fig 8b: achieved FLOP/s vs N, bracketed by the batched-GEMM
+/// rooflines of the sampling and projection shapes.
+fn fig8b(s: &Scale) {
+    header("Fig 8b — factorization GFLOP/s vs batched-GEMM roofline bracket");
+    let m = s.m3;
+    // Roofline bracket: the paper benchmarks MAGMA batched GEMM at the
+    // sampling shape (n=bs) and the projection shape (n ~ detected rank).
+    let (ab, atb) = batched_gemm_roofline(m, 16, 48, 32, 256, 10);
+    println!("batched-GEMM roofline at m={m}, k in [16,48], batch=256:");
+    println!("  AB   (m x k)(k x bs):  {ab:>8.2} GFLOP/s");
+    println!("  AtB  (m x k)^T(m x n): {atb:>8.2} GFLOP/s");
+    println!("3D covariance factorization (eps=1e-6):");
+    println!("  {:>7} {:>10} {:>12}", "N", "GFLOP/s", "of roofline");
+    for &n in &s.ns {
+        let mtile = (n / 8).clamp(64, s.m3);
+        let inst = instance(Problem::Cov3d, n, mtile, 1e-6, 10);
+        let (f, secs) =
+            time_cholesky(inst.tlr, &FactorOpts { eps: 1e-6, bs: 32, ..Default::default() });
+        let gf = f.stats.profile.total_flops() as f64 / secs / 1e9;
+        let frac = gf / ab.max(atb);
+        println!("  {n:>7} {gf:>10.2} {:>11.0}%", frac * 100.0);
+    }
+    println!("(paper: achieved performance lands between the two batched-GEMM estimates,");
+    println!(" rising with N as batches fill; low ranks bound efficiency)");
+}
+
+// ---------------------------------------------------------------- fig 9
+
+/// Paper Fig 9: PCG convergence with the factorization of A + eps·I as
+/// the preconditioner, per compression threshold eps.
+fn fig9(s: &Scale) {
+    header("Fig 9 — PCG convergence vs preconditioner accuracy (fracdiff)");
+    let n = s.n_big.min(4096);
+    let m = (n / 16).max(64);
+    // High-contrast coefficients put kappa in the paper's ~1e7 regime
+    // (see apps::fracdiff::with_contrast) so the loosest preconditioner
+    // genuinely stalls, as in Fig 9.
+    let fd_cfg = |eps| h2opus_tlr::config::RunConfig {
+        problem: Problem::FracDiff,
+        n,
+        m,
+        eps,
+        seed: 11,
+        frac_alpha: 1e-4,
+        frac_contrast: 6.0,
+        ..Default::default()
+    };
+    let inst = from_config(fd_cfg(1e-8));
+    println!("3D fractional diffusion N={n}, m={m}, high-contrast (kappa ~ 1e7 regime)");
+    let mut rng = Rng::new(12);
+    let b: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+    let plain = pcg(&TlrOp(&inst.tlr), &|r| r.to_vec(), &b, 1e-6, 300);
+    println!("  unpreconditioned CG: {} iters, converged={}", plain.iters, plain.converged);
+    println!("  {:>9} {:>7} {:>11} {:>10}", "eps", "iters", "residual", "converged");
+    for eps in [1e-1, 1e-2, 1e-3, 1e-4, 1e-5, 1e-6] {
+        // Rebuild the preconditioner at each threshold from A (paper: the
+        // factorization of A + eps I compressed at eps).
+        let pre_inst = from_config(fd_cfg(eps));
+        let f = cholesky(
+            pre_inst.tlr,
+            &FactorOpts { eps, bs: 16, shift: eps, ..Default::default() },
+        );
+        match f {
+            Ok(f) => {
+                let r = pcg(&TlrOp(&inst.tlr), &|r| chol_solve(&f, r), &b, 1e-6, 300);
+                println!(
+                    "  {eps:>9.0e} {:>7} {:>11.3e} {:>10}",
+                    r.iters,
+                    r.history.last().unwrap(),
+                    r.converged
+                );
+            }
+            Err(e) => println!("  {eps:>9.0e}  factorization failed: {e}"),
+        }
+    }
+    println!("(paper: loosest eps stalls >300 iters; tighter eps converges fast)");
+}
+
+// ---------------------------------------------------------------- fig 10
+
+/// Paper Fig 10: preconditioner construction time and phase mix vs eps.
+fn fig10(s: &Scale) {
+    header("Fig 10 — preconditioner build time and phase mix vs eps (fracdiff)");
+    let n = s.n_big.min(4096);
+    let m = (n / 16).max(64);
+    println!("  {:>9} {:>10} {:>11} {:>12}", "eps", "build (s)", "factor (s)", "GEMM share");
+    for eps in [1e-1, 1e-2, 1e-3, 1e-4, 1e-5, 1e-6] {
+        let inst = from_config(h2opus_tlr::config::RunConfig {
+            problem: Problem::FracDiff,
+            n,
+            m,
+            eps,
+            seed: 13,
+            frac_alpha: 1e-4,
+            frac_contrast: 6.0,
+            ..Default::default()
+        });
+        let (f, secs) = time_cholesky(
+            inst.tlr,
+            &FactorOpts { eps, bs: 16, shift: eps, ..Default::default() },
+        );
+        println!(
+            "  {eps:>9.0e} {:>10.3} {secs:>11.3} {:>11.1}%",
+            inst.build_secs,
+            100.0 * f.stats.profile.gemm_share()
+        );
+    }
+    println!("(paper: GEMM share falls with looser eps but stays ~70% at the loosest)");
+}
+
+// ---------------------------------------------------------------- fig 11a
+
+/// Paper Fig 11a: rank distribution of the preconditioner per eps.
+fn fig11a(s: &Scale) {
+    header("Fig 11a — preconditioner rank distribution per eps (fracdiff)");
+    let n = s.n_big.min(4096);
+    let m = (n / 8).max(64);
+    for eps in [1e-2, 1e-4, 1e-6] {
+        let inst = instance(Problem::FracDiff, n, m, eps, 14);
+        let (f, _) = time_cholesky(
+            inst.tlr,
+            &FactorOpts { eps, bs: 16, shift: eps, ..Default::default() },
+        );
+        let rs = rank_stats(&f.l);
+        let mem = f.l.memory();
+        println!(
+            "eps={eps:.0e}: mean rank {:>6.1}, max {:>4}, memory {:.4} GB ({:.1}x vs dense)",
+            rs.mean,
+            rs.max,
+            mem.total_gb(),
+            mem.compression()
+        );
+        let curve = rank_curve(&f.l);
+        for (idx, r) in downsample(&curve, 6) {
+            let bar = "#".repeat((r * 40 / m).max(1));
+            println!("    tile {idx:>6}: rank {r:>4}  {bar}");
+        }
+    }
+    println!(
+        "(paper: memory savings grow with looser thresholds; k>m/2 overhead negligible)"
+    );
+}
+
+// ---------------------------------------------------------------- fig 11b
+
+/// Paper Fig 11b: ARA-detected ranks vs the SVD optimum (~5% memory).
+fn fig11b(s: &Scale) {
+    header("Fig 11b — ARA-detected vs SVD-optimal ranks");
+    let n = s.n_big.min(4096);
+    let m = (n / 16).max(64);
+    let inst = instance(Problem::FracDiff, n, m, 1e-6, 15);
+    let (f, _) = time_cholesky(
+        inst.tlr,
+        &FactorOpts { eps: 1e-6, bs: 16, shift: 1e-6, ..Default::default() },
+    );
+    let (ara, svd) = svd_recompressed_ranks(&f.l, 1e-6);
+    let sum_ara: usize = ara.iter().sum();
+    let sum_svd: usize = svd.iter().sum();
+    let overhead = 100.0 * (sum_ara as f64 - sum_svd as f64) / sum_svd.max(1) as f64;
+    println!("fracdiff N={n} m={m} eps=1e-6:");
+    println!("  ARA total rank mass {sum_ara}, SVD optimum {sum_svd} — overhead {overhead:.1}%");
+    let max_gap = ara.iter().zip(&svd).map(|(a, s)| a - s).max().unwrap_or(0);
+    println!("  worst per-tile gap: {max_gap} columns");
+    println!("(paper: ~5% average memory overhead; SVD post-pass recovers it for ~20% time)");
+}
+
+// ---------------------------------------------------------------- fig 12
+
+/// Paper Fig 12: rank heatmaps without and with inter-tile pivoting.
+fn fig12(s: &Scale) {
+    header("Fig 12 — rank heatmaps without/with pivoting (3D covariance)");
+    let n = s.n_big.min(4096);
+    let m = (n / 16).max(64);
+    let inst = instance(Problem::Cov3d, n, m, 1e-6, 16);
+    for (name, pivot) in
+        [("without pivoting", Pivoting::None), ("with pivoting (Frobenius)", Pivoting::Frobenius)]
+    {
+        let (f, _) = time_cholesky(
+            inst.tlr.clone(),
+            &FactorOpts { eps: 1e-6, bs: 16, pivot, ..Default::default() },
+        );
+        let rs = rank_stats(&f.l);
+        println!("{name}: mean rank {:.1}, max {}", rs.mean, rs.max);
+        print!("{}", render_heatmap(&f.l.rank_heatmap(), m));
+    }
+    println!("(paper: pivoted ranks are less clustered but lower on covariance problems)");
+}
+
+// ---------------------------------------------------------------- fig 13
+
+/// Paper Fig 13: pivoting decreases covariance ranks but random pivoting
+/// increases fracdiff ranks.
+fn fig13(s: &Scale) {
+    header("Fig 13 — rank distribution changes due to pivoting");
+    let n = s.n_big.min(4096);
+    let m = (n / 16).max(64);
+    // (a) covariance: Frobenius pivoting lowers ranks.
+    let inst = instance(Problem::Cov3d, n, m, 1e-6, 17);
+    for (name, pivot) in
+        [("unpivoted", Pivoting::None), ("pivoted (Frobenius)", Pivoting::Frobenius)]
+    {
+        let (f, _) = time_cholesky(
+            inst.tlr.clone(),
+            &FactorOpts { eps: 1e-6, bs: 16, pivot, ..Default::default() },
+        );
+        let rs = rank_stats(&f.l);
+        println!("3D covariance, {name}: mean rank {:.2}, max {}", rs.mean, rs.max);
+    }
+    // (b) fracdiff: random pivoting raises ranks.
+    let inst = instance(Problem::FracDiff, n, m, 1e-6, 17);
+    for (name, pivot) in [("unpivoted", Pivoting::None), ("random pivot", Pivoting::Random)] {
+        let (f, _) = time_cholesky(
+            inst.tlr.clone(),
+            &FactorOpts { eps: 1e-6, bs: 16, shift: 1e-6, pivot, ..Default::default() },
+        );
+        let rs = rank_stats(&f.l);
+        println!("fracdiff, {name}: mean rank {:.2}, max {}", rs.mean, rs.max);
+    }
+    println!("(paper: covariance mean rank falls 32 -> 24 with pivoting; fracdiff rises");
+    println!(" 16 -> 20 under random pivots — directions should match)");
+}
+
+// ----------------------------------------------------------- pivot cost
+
+/// Paper §6.3 text: Frobenius pivot selection is ~10x cheaper than the
+/// power-iteration 2-norm; LDLᵀ costs about the same as unpivoted
+/// Cholesky.
+fn pivot_cost(s: &Scale) {
+    header("§6.3 — pivot-selection cost and LDL^T cost (3D covariance)");
+    let n = s.n_big.min(4096);
+    let m = (n / 16).max(64);
+    let inst = instance(Problem::Cov3d, n, m, 1e-6, 18);
+    println!("  {:>24} {:>11} {:>11} {:>9}", "variant", "total (s)", "pivot (s)", "mean rank");
+    for (name, pivot) in [
+        ("unpivoted", Pivoting::None),
+        ("pivot: Frobenius", Pivoting::Frobenius),
+        ("pivot: 2-norm (power)", Pivoting::Norm2),
+        ("pivot: random", Pivoting::Random),
+    ] {
+        let before = h2opus_tlr::profile::snapshot();
+        let (f, secs) = time_cholesky(
+            inst.tlr.clone(),
+            &FactorOpts { eps: 1e-6, bs: 16, pivot, ..Default::default() },
+        );
+        let prof = h2opus_tlr::profile::snapshot().since(&before);
+        let pivot_s = prof.nanos[Phase::Pivot as usize] as f64 / 1e9;
+        let rs = rank_stats(&f.l);
+        println!("  {name:>24} {secs:>11.3} {pivot_s:>11.3} {:>9.1}", rs.mean);
+    }
+    let lsecs = {
+        let t0 = std::time::Instant::now();
+        let _f = ldlt(inst.tlr.clone(), &FactorOpts { eps: 1e-6, bs: 16, ..Default::default() })
+            .expect("ldlt");
+        t0.elapsed().as_secs_f64()
+    };
+    println!("  {:>24} {lsecs:>11.3} {:>11} {:>9}", "LDL^T (unpivoted)", "-", "-");
+    println!("(paper: 2-norm selection ~10x Frobenius; LDL^T ~ unpivoted Cholesky time)");
+}
+
+// ----------------------------------------------------------- solve cost
+
+/// Paper §6.2 text: TLR matvec and triangular solves complete quickly
+/// relative to factorization.
+fn solve_cost(s: &Scale) {
+    header("§6.2 — TLR matvec and triangular solve vs factorization time");
+    let n = s.n_big.min(4096);
+    let m = (n / 16).max(64);
+    let inst = instance(Problem::FracDiff, n, m, 1e-4, 19);
+    let (f, fsecs) = time_cholesky(
+        inst.tlr.clone(),
+        &FactorOpts { eps: 1e-4, bs: 16, shift: 1e-4, ..Default::default() },
+    );
+    let mut rng = Rng::new(20);
+    let x: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+    let reps = 20;
+    let t0 = std::time::Instant::now();
+    for _ in 0..reps {
+        std::hint::black_box(tlr_matvec(&inst.tlr, &x));
+    }
+    let mv = t0.elapsed().as_secs_f64() / reps as f64;
+    let t0 = std::time::Instant::now();
+    for _ in 0..reps {
+        std::hint::black_box(tlr_trsv_lower(&f.l, &x));
+    }
+    let tr = t0.elapsed().as_secs_f64() / reps as f64;
+    println!("fracdiff N={n} m={m} eps=1e-4:");
+    println!("  factorization: {fsecs:>9.3} s");
+    println!("  TLR matvec   : {mv:>9.5} s  ({:.0}x faster)", fsecs / mv);
+    println!("  TLR trsv     : {tr:>9.5} s  ({:.0}x faster)", fsecs / tr);
+    println!("(paper: matvec 0.177s / trsv 0.385s vs ~100s factorization on CPU)");
+}

@@ -1,0 +1,481 @@
+//! Run configuration: the launcher-facing description of a problem +
+//! factorization + solver, assembled from CLI flags (`--key value`) or a
+//! JSON config file (`--config run.json`), with CLI flags overriding file
+//! values. This is the L3 coordinator's config system; `main.rs`,
+//! `bin/report.rs` and the examples all build on it.
+
+use crate::apps::covariance::ExpCovariance;
+use crate::apps::fracdiff::FracDiffusion;
+use crate::apps::geometry::{grid, random_ball, PointSet};
+use crate::apps::kdtree::{kdtree_order, Clustering};
+use crate::apps::matgen::MatGen;
+use crate::factor::{FactorOpts, Pivoting};
+use crate::runtime::json::{self, Json};
+use crate::tlr::construct::{build_tlr, BuildOpts, Compression};
+use crate::tlr::matrix::TlrMatrix;
+
+/// Which evaluation problem to generate (paper §6).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Problem {
+    /// 2D covariance, uniform grid, ℓ = 0.1 (paper Figs 5a/7a).
+    Cov2d,
+    /// 3D covariance, uniform grid, ℓ = 0.2 (paper Figs 5b/7b).
+    Cov3d,
+    /// 3D covariance on a random ball point cloud (paper Figs 1/6b).
+    Cov3dBall,
+    /// 3D fractional diffusion (paper §6.2).
+    FracDiff,
+}
+
+impl Problem {
+    pub fn parse(s: &str) -> Result<Problem, ConfigError> {
+        match s {
+            "cov2d" => Ok(Problem::Cov2d),
+            "cov3d" => Ok(Problem::Cov3d),
+            "cov3d-ball" | "cov3d_ball" => Ok(Problem::Cov3dBall),
+            "fracdiff" => Ok(Problem::FracDiff),
+            other => Err(ConfigError(format!(
+                "unknown problem '{other}' (cov2d | cov3d | cov3d-ball | fracdiff)"
+            ))),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Problem::Cov2d => "cov2d",
+            Problem::Cov3d => "cov3d",
+            Problem::Cov3dBall => "cov3d-ball",
+            Problem::FracDiff => "fracdiff",
+        }
+    }
+
+    pub fn dim(&self) -> usize {
+        match self {
+            Problem::Cov2d => 2,
+            _ => 3,
+        }
+    }
+}
+
+/// Factorization kind.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum FactorKind {
+    #[default]
+    Cholesky,
+    Ldlt,
+}
+
+/// Execution backend selector (resolved to [`crate::runtime::Backend`]
+/// at run time, once a [`crate::runtime::PjrtEngine`] exists).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum BackendKind {
+    #[default]
+    Native,
+    Pjrt,
+}
+
+/// The full run description.
+#[derive(Debug, Clone)]
+pub struct RunConfig {
+    pub problem: Problem,
+    /// Matrix order N.
+    pub n: usize,
+    /// Tile size m.
+    pub m: usize,
+    /// Compression threshold ε (build + factorization).
+    pub eps: f64,
+    /// ARA sampling block size (paper: 16 in 2D, 32 in 3D — scaled down
+    /// for small tiles when left at 0 = auto).
+    pub bs: usize,
+    /// Dynamic batch capacity.
+    pub capacity: usize,
+    pub kind: FactorKind,
+    pub pivot: Pivoting,
+    pub schur_comp: bool,
+    pub mod_chol: bool,
+    /// Diagonal shift (A + shift·I); `-1` means "use ε" (the paper's
+    /// preconditioner recipe).
+    pub shift: f64,
+    pub seed: u64,
+    pub backend: BackendKind,
+    /// Artifact directory for the PJRT backend.
+    pub artifacts: std::path::PathBuf,
+    /// Fractional order s and reaction α (fracdiff only).
+    pub frac_s: f64,
+    pub frac_alpha: f64,
+    /// High-contrast coefficient decades for fracdiff (0 = homogeneous).
+    pub frac_contrast: f64,
+    /// Covariance correlation length override (0 = paper default).
+    pub corr_len: f64,
+}
+
+impl Default for RunConfig {
+    fn default() -> Self {
+        RunConfig {
+            problem: Problem::Cov3d,
+            n: 4096,
+            m: 256,
+            eps: 1e-6,
+            bs: 0,
+            capacity: 8,
+            kind: FactorKind::Cholesky,
+            pivot: Pivoting::None,
+            schur_comp: false,
+            mod_chol: false,
+            shift: 0.0,
+            seed: 0x5EED,
+            backend: BackendKind::Native,
+            artifacts: crate::runtime::default_artifacts_dir(),
+            frac_s: 0.5,
+            frac_alpha: 1.0,
+            frac_contrast: 0.0,
+            corr_len: 0.0,
+        }
+    }
+}
+
+/// Config error (parse failure or invalid combination).
+#[derive(Debug)]
+pub struct ConfigError(pub String);
+
+impl std::fmt::Display for ConfigError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "config error: {}", self.0)
+    }
+}
+
+impl std::error::Error for ConfigError {}
+
+impl RunConfig {
+    /// Effective ARA block size: explicit, or the paper's dimension
+    /// defaults (16 in 2D, 32 in 3D) capped at m/4 for small tiles.
+    pub fn effective_bs(&self) -> usize {
+        if self.bs > 0 {
+            return self.bs;
+        }
+        let base = if self.problem.dim() == 2 { 16 } else { 32 };
+        base.min((self.m / 4).max(4))
+    }
+
+    /// Effective shift (resolves the `-1` = ε convention).
+    pub fn effective_shift(&self) -> f64 {
+        if self.shift < 0.0 {
+            self.eps
+        } else {
+            self.shift
+        }
+    }
+
+    /// The [`FactorOpts`] this config describes.
+    pub fn factor_opts(&self) -> FactorOpts {
+        FactorOpts {
+            eps: self.eps,
+            bs: self.effective_bs(),
+            batch_capacity: self.capacity,
+            consecutive: 1,
+            seed: self.seed,
+            schur_comp: self.schur_comp,
+            mod_chol: self.mod_chol,
+            shift: self.effective_shift(),
+            pivot: self.pivot,
+        }
+    }
+
+    /// Generate the point set for this problem.
+    pub fn points(&self) -> PointSet {
+        match self.problem {
+            Problem::Cov2d => grid(self.n, 2),
+            Problem::Cov3d | Problem::FracDiff => grid(self.n, 3),
+            Problem::Cov3dBall => random_ball(self.n, 3, self.seed),
+        }
+    }
+
+    /// Build generator + clustering for this problem (KD-tree ordered).
+    pub fn generator(&self) -> (Box<dyn MatGen>, Clustering) {
+        let pts = self.points();
+        let c = kdtree_order(&pts, self.m);
+        let ordered = pts.permuted(&c.perm);
+        let gen: Box<dyn MatGen> = match self.problem {
+            Problem::FracDiff if self.frac_contrast > 0.0 => Box::new(
+                FracDiffusion::with_contrast(ordered, self.frac_s, self.frac_alpha, self.frac_contrast),
+            ),
+            Problem::FracDiff => Box::new(FracDiffusion::new(ordered, self.frac_s, self.frac_alpha)),
+            _ => {
+                let mut cov = ExpCovariance::paper_default(ordered);
+                if self.corr_len > 0.0 {
+                    cov.corr_len = self.corr_len;
+                }
+                Box::new(cov)
+            }
+        };
+        (gen, c)
+    }
+
+    /// Build the TLR matrix (ARA compression, the paper's default path).
+    pub fn build(&self) -> (TlrMatrix, Box<dyn MatGen>, Clustering) {
+        let (gen, c) = self.generator();
+        let tlr = build_tlr(
+            gen.as_ref(),
+            &c.offsets,
+            &BuildOpts {
+                eps: self.eps,
+                method: Compression::Ara { bs: self.effective_bs() },
+                seed: self.seed,
+            },
+        );
+        (tlr, gen, c)
+    }
+
+    /// Parse `--key value` style arguments (after the subcommand), with
+    /// `--config file.json` merged first.
+    pub fn from_args(args: &[String]) -> Result<RunConfig, ConfigError> {
+        let mut cfg = RunConfig::default();
+        // First pass: find --config and load it as the base.
+        let mut i = 0;
+        while i < args.len() {
+            if args[i] == "--config" {
+                let path = args
+                    .get(i + 1)
+                    .ok_or_else(|| ConfigError("--config needs a path".into()))?;
+                let text = std::fs::read_to_string(path)
+                    .map_err(|e| ConfigError(format!("cannot read {path}: {e}")))?;
+                let doc = json::parse(&text).map_err(|e| ConfigError(e.to_string()))?;
+                cfg.merge_json(&doc)?;
+            }
+            i += 1;
+        }
+        // Second pass: CLI flags override.
+        let mut i = 0;
+        while i < args.len() {
+            let key = &args[i];
+            if !key.starts_with("--") {
+                return Err(ConfigError(format!("unexpected argument '{key}'")));
+            }
+            if key == "--config" {
+                i += 2;
+                continue;
+            }
+            let flag = &key[2..];
+            // Boolean flags.
+            match flag {
+                "schur-comp" => {
+                    cfg.schur_comp = true;
+                    i += 1;
+                    continue;
+                }
+                "mod-chol" => {
+                    cfg.mod_chol = true;
+                    i += 1;
+                    continue;
+                }
+                "ldlt" => {
+                    cfg.kind = FactorKind::Ldlt;
+                    i += 1;
+                    continue;
+                }
+                _ => {}
+            }
+            let val = args
+                .get(i + 1)
+                .ok_or_else(|| ConfigError(format!("--{flag} needs a value")))?;
+            cfg.set(flag, val)?;
+            i += 2;
+        }
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    /// Set one key from its string form (shared by CLI and JSON paths).
+    pub fn set(&mut self, key: &str, val: &str) -> Result<(), ConfigError> {
+        let num = |v: &str| -> Result<f64, ConfigError> {
+            v.parse::<f64>().map_err(|_| ConfigError(format!("--{key}: bad number '{v}'")))
+        };
+        match key {
+            "problem" => self.problem = Problem::parse(val)?,
+            "n" => self.n = num(val)? as usize,
+            "m" | "tile-size" => self.m = num(val)? as usize,
+            "eps" => self.eps = num(val)?,
+            "bs" => self.bs = num(val)? as usize,
+            "capacity" => self.capacity = num(val)? as usize,
+            "seed" => self.seed = num(val)? as u64,
+            "shift" => self.shift = num(val)?,
+            "frac-s" => self.frac_s = num(val)?,
+            "frac-alpha" => self.frac_alpha = num(val)?,
+            "frac-contrast" => self.frac_contrast = num(val)?,
+            "corr-len" => self.corr_len = num(val)?,
+            "artifacts" => self.artifacts = val.into(),
+            "factor" => {
+                self.kind = match val {
+                    "cholesky" => FactorKind::Cholesky,
+                    "ldlt" => FactorKind::Ldlt,
+                    _ => return Err(ConfigError(format!("--factor: '{val}' (cholesky | ldlt)"))),
+                }
+            }
+            "pivot" => {
+                self.pivot = match val {
+                    "none" => Pivoting::None,
+                    "frobenius" | "fro" => Pivoting::Frobenius,
+                    "norm2" | "2norm" => Pivoting::Norm2,
+                    "random" => Pivoting::Random,
+                    _ => {
+                        return Err(ConfigError(format!(
+                            "--pivot: '{val}' (none | frobenius | norm2 | random)"
+                        )))
+                    }
+                }
+            }
+            "backend" => {
+                self.backend = match val {
+                    "native" => BackendKind::Native,
+                    "pjrt" => BackendKind::Pjrt,
+                    _ => return Err(ConfigError(format!("--backend: '{val}' (native | pjrt)"))),
+                }
+            }
+            other => return Err(ConfigError(format!("unknown option '--{other}'"))),
+        }
+        Ok(())
+    }
+
+    fn merge_json(&mut self, doc: &Json) -> Result<(), ConfigError> {
+        let Json::Obj(map) = doc else {
+            return Err(ConfigError("config root must be an object".into()));
+        };
+        for (k, v) in map {
+            match v {
+                Json::Str(s) => self.set(k, s)?,
+                Json::Num(x) => self.set(k, &format!("{x}"))?,
+                Json::Bool(true) => match k.as_str() {
+                    "schur-comp" => self.schur_comp = true,
+                    "mod-chol" => self.mod_chol = true,
+                    "ldlt" => self.kind = FactorKind::Ldlt,
+                    _ => return Err(ConfigError(format!("'{k}' is not a boolean option"))),
+                },
+                Json::Bool(false) => {}
+                _ => return Err(ConfigError(format!("'{k}': unsupported value type"))),
+            }
+        }
+        Ok(())
+    }
+
+    pub fn validate(&self) -> Result<(), ConfigError> {
+        if self.n == 0 || self.m == 0 {
+            return Err(ConfigError("n and m must be positive".into()));
+        }
+        if self.m > self.n {
+            return Err(ConfigError(format!("tile size m={} exceeds N={}", self.m, self.n)));
+        }
+        if !(self.eps > 0.0) {
+            return Err(ConfigError("eps must be > 0".into()));
+        }
+        if self.kind == FactorKind::Ldlt && self.pivot != Pivoting::None {
+            return Err(ConfigError("pivoted LDLᵀ is not supported (paper §5.3)".into()));
+        }
+        Ok(())
+    }
+
+    /// One-line human summary.
+    pub fn summary(&self) -> String {
+        format!(
+            "{} N={} m={} eps={:.0e} bs={} {:?} pivot={:?} backend={:?}",
+            self.problem.name(),
+            self.n,
+            self.m,
+            self.eps,
+            self.effective_bs(),
+            self.kind,
+            self.pivot,
+            self.backend
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &str) -> Vec<String> {
+        s.split_whitespace().map(String::from).collect()
+    }
+
+    #[test]
+    fn defaults_and_flags() {
+        let c = RunConfig::from_args(&argv("--problem cov2d --n 1024 --m 128 --eps 1e-4")).unwrap();
+        assert_eq!(c.problem, Problem::Cov2d);
+        assert_eq!(c.n, 1024);
+        assert_eq!(c.m, 128);
+        assert_eq!(c.eps, 1e-4);
+        assert_eq!(c.effective_bs(), 16);
+    }
+
+    #[test]
+    fn bool_flags() {
+        let c = RunConfig::from_args(&argv("--schur-comp --mod-chol --ldlt --pivot none")).unwrap();
+        assert!(c.schur_comp && c.mod_chol);
+        assert_eq!(c.kind, FactorKind::Ldlt);
+    }
+
+    #[test]
+    fn pivot_and_backend() {
+        let c = RunConfig::from_args(&argv("--pivot frobenius --backend pjrt")).unwrap();
+        assert_eq!(c.pivot, Pivoting::Frobenius);
+        assert_eq!(c.backend, BackendKind::Pjrt);
+    }
+
+    #[test]
+    fn shift_eps_convention() {
+        let c = RunConfig::from_args(&argv("--eps 1e-3 --shift -1")).unwrap();
+        assert_eq!(c.effective_shift(), 1e-3);
+    }
+
+    #[test]
+    fn rejects_bad_input() {
+        assert!(RunConfig::from_args(&argv("--problem mars")).is_err());
+        assert!(RunConfig::from_args(&argv("--n 0")).is_err());
+        assert!(RunConfig::from_args(&argv("--m 512 --n 64")).is_err());
+        assert!(RunConfig::from_args(&argv("--frobnicate 7")).is_err());
+        assert!(RunConfig::from_args(&argv("--ldlt --pivot frobenius")).is_err());
+        assert!(RunConfig::from_args(&argv("stray")).is_err());
+    }
+
+    #[test]
+    fn json_config_file() {
+        let dir = std::env::temp_dir().join("h2opus_cfg_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("run.json");
+        std::fs::write(
+            &path,
+            r#"{"problem": "fracdiff", "n": 2048, "m": 256, "eps": 1e-2, "schur-comp": true}"#,
+        )
+        .unwrap();
+        let args = vec![
+            "--config".to_string(),
+            path.to_str().unwrap().to_string(),
+            "--n".to_string(),
+            "1024".to_string(),
+        ];
+        let c = RunConfig::from_args(&args).unwrap();
+        assert_eq!(c.problem, Problem::FracDiff);
+        assert_eq!(c.n, 1024, "CLI overrides file");
+        assert_eq!(c.m, 256);
+        assert!(c.schur_comp);
+    }
+
+    #[test]
+    fn effective_bs_3d_and_cap() {
+        let mut c = RunConfig { problem: Problem::Cov3d, m: 512, ..Default::default() };
+        assert_eq!(c.effective_bs(), 32);
+        c.m = 16;
+        assert_eq!(c.effective_bs(), 4);
+        c.bs = 12;
+        assert_eq!(c.effective_bs(), 12);
+    }
+
+    #[test]
+    fn generator_shapes() {
+        let c = RunConfig { problem: Problem::Cov2d, n: 256, m: 64, ..Default::default() };
+        let (gen, cl) = c.generator();
+        assert_eq!(gen.n(), 256);
+        assert_eq!(*cl.offsets.last().unwrap(), 256);
+        assert!(cl.n_tiles() >= 4);
+    }
+}

@@ -1,0 +1,167 @@
+//! TLR LDLᵀ factorization (paper §5.3, Alg 10): the indefinite-capable
+//! variant. Diagonal tiles are factored as dense `L(k,k) D(k,k) L(k,k)ᵀ`,
+//! panel solves pick up the diagonal scaling `B := D^{-1} L^{-1} B`, and
+//! sampling uses the 5-product chain of Eq 3 (the `D(j,j)`-interposed
+//! version of Eq 2).
+
+use crate::factor::sample::dense_diag_update;
+use crate::factor::{apply_shift, panel_ara, trsm_panel, FactorError, FactorOpts, FactorStats};
+use crate::linalg::ldl::ldl;
+use crate::profile::{self, Phase, Timer};
+use crate::tlr::matrix::TlrMatrix;
+use crate::tlr::tile::Tile;
+
+/// LDLᵀ factor: unit-lower TLR `l` (diagonal tiles hold the dense unit
+/// lower factors) and the block diagonal `d` (one vector per tile).
+pub struct LdlFactor {
+    pub l: TlrMatrix,
+    pub d: Vec<Vec<f64>>,
+    pub stats: FactorStats,
+}
+
+/// Left-looking TLR LDLᵀ (paper Alg 10, unpivoted) on the native backend.
+pub fn ldlt(a: TlrMatrix, opts: &FactorOpts) -> Result<LdlFactor, FactorError> {
+    ldlt_with(a, opts, crate::runtime::Backend::Native)
+}
+
+/// [`ldlt`] with an explicit execution backend (see
+/// [`crate::factor::cholesky_with`]).
+pub fn ldlt_with(
+    mut a: TlrMatrix,
+    opts: &FactorOpts,
+    backend: crate::runtime::Backend,
+) -> Result<LdlFactor, FactorError> {
+    let t0 = std::time::Instant::now();
+    let prof0 = profile::snapshot();
+    let nb = a.nb();
+    let mut stats = FactorStats { perm: (0..nb).collect(), ..Default::default() };
+    apply_shift(&mut a, opts.shift);
+    let mut dblocks: Vec<Vec<f64>> = Vec::with_capacity(nb);
+
+    for k in 0..nb {
+        // Dense diagonal update with the D-weighted expansion (Eq 3).
+        let dk = dense_diag_update(&a, k, k, Some(&dblocks));
+        let mut akk = a.tile(k, k).as_dense().clone();
+        akk.axpy(-1.0, &dk);
+        akk.symmetrize();
+        // Dense LDLᵀ of the diagonal tile.
+        let f = {
+            let _t = Timer::new(Phase::DiagFactor);
+            profile::add_flops(Phase::DiagFactor, crate::linalg::chol::potrf_flops(akk.rows()));
+            ldl(&akk).map_err(|e| FactorError::SingularPivot { block: k, index: e.index })?
+        };
+        a.set_tile(k, k, Tile::Dense(f.l));
+        dblocks.push(f.d);
+
+        if k + 1 < nb {
+            // Panel ARA with the 5-product sampling chain, then
+            // B := D(k,k)^{-1} L(k,k)^{-1} B.
+            let mut tiles = panel_ara(&a, k, Some(&dblocks), opts, &mut stats, backend);
+            let lkk = a.tile(k, k).as_dense();
+            let dinv: Vec<f64> = dblocks[k].iter().map(|&x| 1.0 / x).collect();
+            trsm_panel(lkk, &mut tiles, Some(&dinv));
+            for (idx, lr) in tiles.into_iter().enumerate() {
+                a.set_tile(k + 1 + idx, k, Tile::LowRank(lr));
+            }
+        }
+    }
+
+    stats.seconds = t0.elapsed().as_secs_f64();
+    stats.profile = profile::snapshot().since(&prof0);
+    if stats.batch.rounds > 0 {
+        stats.mean_occupancy = stats.batch.occupancy_sum as f64 / stats.batch.rounds as f64;
+    }
+    Ok(LdlFactor { l: a, d: dblocks, stats })
+}
+
+impl LdlFactor {
+    /// Flat diagonal of `D` (length N).
+    pub fn diag_flat(&self) -> Vec<f64> {
+        self.d.iter().flatten().cloned().collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::factor::tests::tlr_covariance;
+    use crate::linalg::blas::scale_cols;
+    use crate::linalg::gemm::{gemm, Trans};
+    use crate::linalg::matrix::Matrix;
+
+    fn reconstruct(f: &LdlFactor) -> Matrix {
+        let l = f.l.to_dense_lower();
+        let mut ld = l.clone();
+        scale_cols(&mut ld, &f.diag_flat());
+        let mut out = Matrix::zeros(l.rows(), l.rows());
+        gemm(Trans::No, Trans::Yes, 1.0, &ld, &l, 0.0, &mut out);
+        out
+    }
+
+    #[test]
+    fn ldlt_reconstructs_spd() {
+        let (tlr, dense) = tlr_covariance(256, 64, 2, 1e-8, 31);
+        let f = ldlt(tlr, &FactorOpts { eps: 1e-8, bs: 8, ..Default::default() }).unwrap();
+        let r = reconstruct(&f).sub(&dense).norm_fro() / dense.norm_fro();
+        assert!(r < 1e-5, "residual={r}");
+        // SPD input: all D entries positive.
+        assert!(f.diag_flat().iter().all(|&x| x > 0.0));
+    }
+
+    #[test]
+    fn ldlt_handles_indefinite() {
+        // Shift the covariance down so it is symmetric indefinite —
+        // Cholesky fails, LDLᵀ must succeed.
+        let (mut tlr, mut dense) = tlr_covariance(200, 50, 2, 1e-9, 32);
+        for k in 0..tlr.nb() {
+            let start = tlr.offsets()[k];
+            if let Tile::Dense(d) = tlr.tile_mut(k, k) {
+                for i in 0..d.rows() {
+                    d[(i, i)] -= 1.2;
+                    dense[(start + i, start + i)] -= 1.2;
+                }
+            }
+        }
+        assert!(crate::factor::cholesky(
+            tlr.clone(),
+            &FactorOpts { eps: 1e-9, bs: 8, ..Default::default() }
+        )
+        .is_err());
+        let f = ldlt(tlr, &FactorOpts { eps: 1e-9, bs: 8, ..Default::default() }).unwrap();
+        let r = reconstruct(&f).sub(&dense).norm_fro() / dense.norm_fro();
+        assert!(r < 1e-4, "residual={r}");
+        // Indefinite: D has both signs.
+        let d = f.diag_flat();
+        assert!(d.iter().any(|&x| x < 0.0) && d.iter().any(|&x| x > 0.0));
+    }
+
+    #[test]
+    fn ldlt_unit_lower_diagonal_tiles() {
+        let (tlr, _) = tlr_covariance(128, 32, 2, 1e-8, 33);
+        let f = ldlt(tlr, &FactorOpts { eps: 1e-8, bs: 8, ..Default::default() }).unwrap();
+        for k in 0..f.l.nb() {
+            let d = f.l.tile(k, k).as_dense();
+            for i in 0..d.rows() {
+                assert!((d[(i, i)] - 1.0).abs() < 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn ldlt_matches_cholesky_on_spd() {
+        // L_chol = L_ldl * sqrt(D) when both succeed on an SPD matrix.
+        let (tlr, _) = tlr_covariance(128, 32, 2, 1e-10, 34);
+        let fc = crate::factor::cholesky(
+            tlr.clone(),
+            &FactorOpts { eps: 1e-10, bs: 8, ..Default::default() },
+        )
+        .unwrap();
+        let fl = ldlt(tlr, &FactorOpts { eps: 1e-10, bs: 8, ..Default::default() }).unwrap();
+        let mut lsd = fl.l.to_dense_lower();
+        let sqrt_d: Vec<f64> = fl.diag_flat().iter().map(|x| x.sqrt()).collect();
+        scale_cols(&mut lsd, &sqrt_d);
+        let lc = fc.l.to_dense_lower();
+        let diff = lsd.sub(&lc).norm_fro() / lc.norm_fro();
+        assert!(diff < 1e-4, "diff={diff}");
+    }
+}

@@ -1,0 +1,132 @@
+//! Inter-tile symmetric pivot selection (paper §5.2):
+//! at step `k`, pick the unfinished diagonal tile with the largest norm of
+//! its *updated* value `A(i,i) − D_i` and swap it (pointer swaps only)
+//! into position `k`. Frobenius selection is the cheap default; 2-norm
+//! power iteration and random-above-threshold selection reproduce the
+//! §6.3 comparisons.
+
+use crate::factor::{FactorOpts, FactorStats, Pivoting};
+use crate::linalg::matrix::Matrix;
+use crate::linalg::norms::norm2_sym;
+use crate::linalg::rng::Rng;
+use crate::profile::{Phase, Timer};
+use crate::tlr::matrix::TlrMatrix;
+
+/// Select the pivot tile for step `k`. `running[i]` holds the accumulated
+/// dense update `D_i` of diagonal tile `i` (valid for `i ≥ k`).
+pub fn select_pivot(
+    a: &TlrMatrix,
+    running: &[Matrix],
+    k: usize,
+    opts: &FactorOpts,
+    stats: &mut FactorStats,
+) -> usize {
+    let _t = Timer::new(Phase::Pivot);
+    let nb = a.nb();
+    if k + 1 >= nb {
+        return k;
+    }
+    // Updated diagonal tiles A(i,i) − D_i for i = k..nb.
+    let norms: Vec<f64> = crate::batch::parallel_map(nb - k, |idx| {
+        let i = k + idx;
+        let mut d = a.tile(i, i).as_dense().clone();
+        d.axpy(-1.0, &running[i]);
+        match opts.pivot {
+            Pivoting::Frobenius | Pivoting::Random => d.norm_fro(),
+            Pivoting::Norm2 => norm2_sym(&d, 30, opts.seed ^ (i as u64)),
+            Pivoting::None => unreachable!("select_pivot called without pivoting"),
+        }
+    });
+    match opts.pivot {
+        Pivoting::Frobenius | Pivoting::Norm2 => {
+            let best = norms
+                .iter()
+                .enumerate()
+                .max_by(|x, y| x.1.partial_cmp(y.1).unwrap())
+                .map(|(idx, _)| k + idx)
+                .unwrap_or(k);
+            let _ = stats;
+            best
+        }
+        Pivoting::Random => {
+            // Paper §6.3 stressor: any tile above a minimum norm may be
+            // picked.
+            let max = norms.iter().cloned().fold(0.0f64, f64::max);
+            let candidates: Vec<usize> = norms
+                .iter()
+                .enumerate()
+                .filter(|(_, &n)| n >= 0.25 * max)
+                .map(|(idx, _)| k + idx)
+                .collect();
+            let mut rng = Rng::new(opts.seed ^ ((k as u64) << 32) ^ 0xDEAD);
+            candidates[rng.below(candidates.len())]
+        }
+        Pivoting::None => unreachable!(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::factor::tests::tlr_covariance;
+    use crate::factor::{cholesky, tile_perm_to_scalar, FactorOpts};
+    use crate::linalg::gemm::matmul_nt;
+
+    fn residual_permuted(f: &crate::factor::CholFactor, a: &Matrix) -> f64 {
+        // P A Pᵀ = L Lᵀ: compare LLᵀ against the permuted dense matrix.
+        let perm = f.scalar_perm();
+        let pa = Matrix::from_fn(a.rows(), a.cols(), |i, j| a[(perm[i], perm[j])]);
+        let ld = f.l.to_dense_lower();
+        matmul_nt(&ld, &ld).sub(&pa).norm_fro() / a.norm_fro()
+    }
+
+    #[test]
+    fn frobenius_pivoted_cholesky_correct() {
+        let (tlr, dense) = tlr_covariance(256, 64, 2, 1e-8, 21);
+        let f = cholesky(
+            tlr,
+            &FactorOpts { eps: 1e-8, bs: 8, pivot: Pivoting::Frobenius, ..Default::default() },
+        )
+        .unwrap();
+        let r = residual_permuted(&f, &dense);
+        assert!(r < 1e-5, "residual={r}");
+        // perm must be a permutation.
+        let mut sorted = f.stats.perm.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..f.l.nb()).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn norm2_pivoted_cholesky_correct() {
+        let (tlr, dense) = tlr_covariance(200, 50, 2, 1e-8, 22);
+        let f = cholesky(
+            tlr,
+            &FactorOpts { eps: 1e-8, bs: 8, pivot: Pivoting::Norm2, ..Default::default() },
+        )
+        .unwrap();
+        let r = residual_permuted(&f, &dense);
+        assert!(r < 1e-5, "residual={r}");
+    }
+
+    #[test]
+    fn random_pivoted_cholesky_correct() {
+        let (tlr, dense) = tlr_covariance(200, 50, 2, 1e-8, 23);
+        let f = cholesky(
+            tlr,
+            &FactorOpts { eps: 1e-8, bs: 8, pivot: Pivoting::Random, ..Default::default() },
+        )
+        .unwrap();
+        let r = residual_permuted(&f, &dense);
+        assert!(r < 1e-5, "residual={r}");
+    }
+
+    #[test]
+    fn scalar_perm_expansion() {
+        let offsets = [0usize, 4, 8, 12];
+        let perm = [2usize, 0, 1];
+        let sp = tile_perm_to_scalar(&perm, &offsets);
+        assert_eq!(&sp[0..4], &[8, 9, 10, 11]);
+        assert_eq!(&sp[4..8], &[0, 1, 2, 3]);
+        assert_eq!(&sp[8..12], &[4, 5, 6, 7]);
+    }
+}

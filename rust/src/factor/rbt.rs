@@ -1,0 +1,442 @@
+//! Random Butterfly Transformation (RBT) at tile granularity — the
+//! paper's §5.3/§7 alternative to pivoting for symmetric indefinite
+//! matrices: "a symmetric randomization of the matrix with recursive
+//! butterfly matrices appears to provide the stability needed for
+//! indefinite factorization to succeed without pivoting" (ref [10],
+//! Becker–Baboulin–Dongarra).
+//!
+//! A depth-`d` recursive butterfly is `W = W₁ W₂ … W_d`, where level ℓ
+//! is block-diagonal with `2^{ℓ−1}` butterflies
+//!
+//! ```text
+//!   B = 1/√2 [ R  S ]        R, S random ±1 diagonal ⇒ B orthogonal
+//!            [ R −S ]
+//! ```
+//!
+//! The two-sided transform `Ã = Wᵀ A W` spreads any troublesome pivot
+//! mass across the matrix, after which the **unpivoted** TLR LDLᵀ
+//! succeeds with high probability; the solve unwinds the transform
+//! (`Ã y = Wᵀ b`, `x = W y`).
+//!
+//! On a TLR matrix the transform stays in tile arithmetic: each output
+//! tile is a ±-combination of four source tiles scaled by the random
+//! diagonals. Diagonal scaling and additions preserve the low-rank
+//! format (ranks add, then recompress to ε); diagonal tiles only ever
+//! combine with diagonal tiles plus their paired off-diagonals, staying
+//! dense. The butterfly halves are tile-aligned, so data sparsity
+//! degrades gracefully (ranks at most double per level before
+//! recompression) instead of being destroyed by a scalar permutation.
+
+use crate::factor::{ldlt, FactorError, FactorOpts, LdlFactor};
+use crate::linalg::matrix::Matrix;
+use crate::linalg::rng::Rng;
+use crate::tlr::matrix::TlrMatrix;
+use crate::tlr::tile::{LowRank, Tile};
+
+const INV_SQRT2: f64 = std::f64::consts::FRAC_1_SQRT_2;
+
+/// The random signs of one butterfly level: `r[i]`/`s[i]` are the ±1
+/// diagonals, stored over the full index range (segment layout is
+/// implied by the level number).
+#[derive(Debug, Clone)]
+struct Level {
+    r: Vec<f64>,
+    s: Vec<f64>,
+}
+
+/// A sampled recursive butterfly, reusable for any number of solves.
+#[derive(Debug, Clone)]
+pub struct Rbt {
+    offsets: Vec<usize>,
+    levels: Vec<Level>,
+}
+
+impl Rbt {
+    /// Sample a depth-`depth` butterfly for the tiling `offsets`.
+    /// Requires uniform tile sizes and `nb % 2^depth == 0`.
+    pub fn sample(offsets: &[usize], depth: usize, seed: u64) -> Rbt {
+        let nb = offsets.len() - 1;
+        assert!(depth >= 1, "depth must be >= 1");
+        assert_eq!(nb % (1 << depth), 0, "nb must be divisible by 2^depth");
+        let m0 = offsets[1] - offsets[0];
+        for t in 0..nb {
+            assert_eq!(offsets[t + 1] - offsets[t], m0, "RBT needs uniform tiles");
+        }
+        let n = *offsets.last().unwrap();
+        let mut rng = Rng::new(seed);
+        let mut sign = |out: &mut Vec<f64>| {
+            for _ in 0..n {
+                out.push(if rng.below(2) == 0 { 1.0 } else { -1.0 });
+            }
+        };
+        let levels = (0..depth)
+            .map(|_| {
+                let (mut r, mut s) = (Vec::new(), Vec::new());
+                sign(&mut r);
+                sign(&mut s);
+                Level { r, s }
+            })
+            .collect();
+        Rbt { offsets: offsets.to_vec(), levels }
+    }
+
+    fn n(&self) -> usize {
+        *self.offsets.last().unwrap()
+    }
+
+    fn nb(&self) -> usize {
+        self.offsets.len() - 1
+    }
+
+    /// `y = Wᵀ x` (applied level 1 → d, matching the matrix transform).
+    pub fn apply_t(&self, x: &[f64]) -> Vec<f64> {
+        let mut y = x.to_vec();
+        for (lvl, signs) in self.levels.iter().enumerate() {
+            self.level_apply(&mut y, lvl, signs, true);
+        }
+        y
+    }
+
+    /// `y = W x` (applied level d → 1).
+    pub fn apply(&self, x: &[f64]) -> Vec<f64> {
+        let mut y = x.to_vec();
+        for (lvl, signs) in self.levels.iter().enumerate().rev() {
+            self.level_apply(&mut y, lvl, signs, false);
+        }
+        y
+    }
+
+    /// One block-diagonal butterfly level on a vector.
+    /// `Bᵀ x = [R(x₁+x₂); S(x₁−x₂)]/√2`, `B x = [Rx₁+Sx₂; Rx₁−Sx₂]/√2`.
+    fn level_apply(&self, x: &mut [f64], lvl: usize, signs: &Level, transpose: bool) {
+        let n = self.n();
+        let seg = n >> lvl; // scalar segment size at this level
+        let h = seg / 2;
+        for g in (0..n).step_by(seg) {
+            for i in 0..h {
+                let (a, b) = (x[g + i], x[g + h + i]);
+                let (r, s) = (signs.r[g + i], signs.s[g + i]);
+                if transpose {
+                    x[g + i] = r * (a + b) * INV_SQRT2;
+                    x[g + h + i] = s * (a - b) * INV_SQRT2;
+                } else {
+                    x[g + i] = (r * a + s * b) * INV_SQRT2;
+                    x[g + h + i] = (r * a - s * b) * INV_SQRT2;
+                }
+            }
+        }
+    }
+
+    /// Two-sided tile-level transform `Ã = Wᵀ A W`, recompressing
+    /// off-diagonal tiles to `eps` after each level.
+    pub fn transform(&self, a: &TlrMatrix, eps: f64) -> TlrMatrix {
+        assert_eq!(a.offsets(), &self.offsets[..]);
+        let nb = self.nb();
+        // Full (not lower-packed) working grid.
+        let mut grid: Vec<Vec<Tile>> = (0..nb)
+            .map(|i| {
+                (0..nb)
+                    .map(|j| {
+                        if j <= i {
+                            a.tile(i, j).clone()
+                        } else {
+                            transpose_tile(a.tile(j, i))
+                        }
+                    })
+                    .collect()
+            })
+            .collect();
+
+        for (lvl, signs) in self.levels.iter().enumerate() {
+            grid = self.transform_level(&grid, lvl, signs, eps);
+        }
+
+        // Extract the lower triangle back into symmetric TLR storage.
+        let mut tiles = Vec::with_capacity(nb * (nb + 1) / 2);
+        for (i, row) in grid.iter().enumerate() {
+            for t in row.iter().take(i + 1) {
+                tiles.push(t.clone());
+            }
+        }
+        TlrMatrix::from_tiles(self.offsets.clone(), tiles)
+    }
+
+    fn transform_level(
+        &self,
+        grid: &[Vec<Tile>],
+        lvl: usize,
+        signs: &Level,
+        eps: f64,
+    ) -> Vec<Vec<Tile>> {
+        let nb = self.nb();
+        let seg_tiles = nb >> lvl; // tiles per segment at this level
+        let h = seg_tiles / 2;
+        let off = &self.offsets;
+        // For output tile index t: its source pair and position.
+        let pair = |t: usize| -> (usize, usize, bool) {
+            // (src_first, src_second, is_second_half)
+            let g = (t / seg_tiles) * seg_tiles;
+            let p = t - g;
+            if p < h {
+                (g + p, g + p + h, false)
+            } else {
+                (g + p - h, g + p, true)
+            }
+        };
+        let scale_vec = |t: usize, second: bool| -> &[f64] {
+            // σ for output tile t: r over the tile's scalar range for
+            // first-half outputs, s for second-half. The sign vectors are
+            // indexed by the *first-half* scalar position of the pair.
+            let (first, _, _) = pair(t);
+            let range = off[first]..off[first] + (off[t + 1] - off[t]);
+            if second {
+                &signs.s[range]
+            } else {
+                &signs.r[range]
+            }
+        };
+
+        (0..nb)
+            .map(|i| {
+                let (i1, i2, i_second) = pair(i);
+                let row_coeffs = [1.0, if i_second { -1.0 } else { 1.0 }];
+                let sr = scale_vec(i, i_second);
+                (0..nb)
+                    .map(|j| {
+                        let (j1, j2, j_second) = pair(j);
+                        let col_coeffs = [1.0, if j_second { -1.0 } else { 1.0 }];
+                        let sc = scale_vec(j, j_second);
+                        let srcs = [
+                            (&grid[i1][j1], row_coeffs[0] * col_coeffs[0]),
+                            (&grid[i1][j2], row_coeffs[0] * col_coeffs[1]),
+                            (&grid[i2][j1], row_coeffs[1] * col_coeffs[0]),
+                            (&grid[i2][j2], row_coeffs[1] * col_coeffs[1]),
+                        ];
+                        combine_tiles(&srcs, sr, sc, i == j, eps)
+                    })
+                    .collect()
+            })
+            .collect()
+    }
+
+    /// Solve `A x = b` through a factorization of the transformed matrix.
+    pub fn solve(&self, f: &LdlFactor, b: &[f64]) -> Vec<f64> {
+        let bt = self.apply_t(b);
+        let y = crate::solve::ldl_solve(f, &bt);
+        self.apply(&y)
+    }
+}
+
+fn transpose_tile(t: &Tile) -> Tile {
+    match t {
+        Tile::Dense(d) => Tile::Dense(d.transpose()),
+        Tile::LowRank(lr) => Tile::LowRank(lr.transpose()),
+    }
+}
+
+/// `out = 1/2 · diag(sr) (Σ cₖ Tₖ) diag(sc)`, dense on the diagonal,
+/// low-rank (recompressed to `eps`) off it.
+fn combine_tiles(
+    srcs: &[(&Tile, f64); 4],
+    sr: &[f64],
+    sc: &[f64],
+    diagonal: bool,
+    eps: f64,
+) -> Tile {
+    let rows = srcs[0].0.rows();
+    let cols = srcs[0].0.cols();
+    if diagonal {
+        let mut out = Matrix::zeros(rows, cols);
+        for (t, c) in srcs {
+            out.axpy(0.5 * c, &t.to_dense());
+        }
+        // Two-sided diagonal scaling.
+        for j in 0..cols {
+            for i in 0..rows {
+                out[(i, j)] *= sr[i] * sc[j];
+            }
+        }
+        Tile::Dense(out)
+    } else {
+        // Concatenate the low-rank factors (ranks add), scale, recompress.
+        let mut u = Matrix::zeros(rows, 0);
+        let mut v = Matrix::zeros(cols, 0);
+        for (t, c) in srcs {
+            let lr = match t {
+                Tile::LowRank(lr) => lr.clone(),
+                // A dense source can only appear here if the input had
+                // dense off-diagonal tiles; handle it by compression.
+                Tile::Dense(d) => LowRank::compress_svd(d, eps, rows.min(cols)),
+            };
+            if lr.rank() == 0 {
+                continue;
+            }
+            let mut lu = lr.u;
+            lu.scale(0.5 * c);
+            u.append_cols(&lu);
+            v.append_cols(&lr.v);
+        }
+        let mut lr = LowRank { u, v };
+        if lr.rank() > 0 {
+            for q in 0..lr.rank() {
+                for (i, x) in lr.u.col_mut(q).iter_mut().enumerate() {
+                    *x *= sr[i];
+                }
+                for (i, x) in lr.v.col_mut(q).iter_mut().enumerate() {
+                    *x *= sc[i];
+                }
+            }
+            lr = crate::ara::recompress_factors(&lr, eps);
+        }
+        Tile::LowRank(lr)
+    }
+}
+
+/// Factor `Ã = Wᵀ A W` with the **unpivoted** TLR LDLᵀ and keep the
+/// butterfly for solves — the paper's pivoting-free indefinite path.
+pub struct RbtLdl {
+    pub rbt: Rbt,
+    pub f: LdlFactor,
+}
+
+/// Run the RBT + LDLᵀ pipeline.
+pub fn rbt_ldlt(
+    a: &TlrMatrix,
+    depth: usize,
+    opts: &FactorOpts,
+) -> Result<RbtLdl, FactorError> {
+    let rbt = Rbt::sample(a.offsets(), depth, opts.seed ^ 0xB077E7F1);
+    let at = rbt.transform(a, opts.eps);
+    let f = ldlt(at, opts)?;
+    Ok(RbtLdl { rbt, f })
+}
+
+impl RbtLdl {
+    /// Solve `A x = b`.
+    pub fn solve(&self, b: &[f64]) -> Vec<f64> {
+        self.rbt.solve(&self.f, b)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::apps::covariance::ExpCovariance;
+    use crate::apps::geometry::grid;
+    use crate::apps::kdtree::kdtree_order;
+    use crate::apps::matgen::MatGen;
+    use crate::linalg::gemm::matmul;
+    use crate::solve::tlr_matvec;
+
+    fn cov_tlr(n: usize, m: usize, eps: f64, seed: u64) -> (TlrMatrix, Matrix) {
+        use crate::tlr::construct::{build_tlr, BuildOpts, Compression};
+        let pts = grid(n, 2);
+        let c = kdtree_order(&pts, m);
+        let cov = ExpCovariance::paper_default(pts.permuted(&c.perm));
+        let t = build_tlr(&cov, &c.offsets, &BuildOpts { eps, method: Compression::Svd, seed });
+        (t, cov.dense())
+    }
+
+    #[test]
+    fn butterfly_is_orthogonal_on_vectors() {
+        let offsets: Vec<usize> = (0..=8).map(|i| i * 16).collect();
+        for depth in [1, 2, 3] {
+            let rbt = Rbt::sample(&offsets, depth, 7 + depth as u64);
+            let mut rng = Rng::new(depth as u64);
+            let x: Vec<f64> = (0..128).map(|_| rng.normal()).collect();
+            // WᵀW x == x
+            let wx = rbt.apply(&x);
+            let wtwx = rbt.apply_t(&wx);
+            let err = wtwx.iter().zip(&x).map(|(a, b)| (a - b).abs()).fold(0.0, f64::max);
+            assert!(err < 1e-12, "depth={depth} err={err}");
+            // Norm preserved.
+            let nx: f64 = x.iter().map(|v| v * v).sum();
+            let nwx: f64 = wx.iter().map(|v| v * v).sum();
+            assert!((nx - nwx).abs() / nx < 1e-12);
+        }
+    }
+
+    #[test]
+    fn transform_matches_dense_congruence() {
+        // Tile-level transform == scalar-level Wᵀ A W computed densely.
+        let (a, dense) = cov_tlr(128, 16, 1e-12, 1);
+        let rbt = Rbt::sample(a.offsets(), 2, 11);
+        let at = rbt.transform(&a, 1e-12);
+        // Build W densely column by column through apply().
+        let n = 128;
+        let mut w = Matrix::zeros(n, n);
+        for j in 0..n {
+            let mut e = vec![0.0; n];
+            e[j] = 1.0;
+            let col = rbt.apply(&e);
+            for i in 0..n {
+                w[(i, j)] = col[i];
+            }
+        }
+        let expect = matmul(&matmul(&w.transpose(), &dense), &w);
+        let got = at.to_dense();
+        let err = got.sub(&expect).norm_max();
+        assert!(err < 1e-8, "err={err}");
+    }
+
+    #[test]
+    fn rbt_enables_unpivoted_indefinite_ldlt() {
+        // An indefinite matrix engineered to hit a ~zero pivot in plain
+        // LDL^T: a covariance matrix with a zeroed leading diagonal tile
+        // entrypoint. RBT + unpivoted LDL^T must factor it and solve
+        // correctly.
+        let (mut a, mut dense) = cov_tlr(256, 32, 1e-10, 2);
+        // Make A indefinite and create a tiny leading pivot.
+        let t0 = a.offsets()[0];
+        if let Tile::Dense(d) = a.tile_mut(0, 0) {
+            d[(0, 0)] = 0.0;
+            dense[(0, 0)] = 0.0;
+            for q in 1..dense.rows().min(32) {
+                d[(q, q)] -= 1.5;
+                dense[(t0 + q, t0 + q)] -= 1.5;
+            }
+        }
+        let opts = FactorOpts { eps: 1e-10, bs: 8, ..Default::default() };
+        // The RBT pipeline must succeed...
+        let rf = rbt_ldlt(&a, 2, &opts).expect("rbt ldlt");
+        // ... and solve A x = b accurately.
+        let mut rng = Rng::new(3);
+        let x_true: Vec<f64> = (0..256).map(|_| rng.normal()).collect();
+        let b = tlr_matvec(&a, &x_true);
+        let x = rf.solve(&b);
+        let err = x.iter().zip(&x_true).map(|(p, q)| (p - q).abs()).fold(0.0, f64::max);
+        assert!(err < 1e-5, "rbt solve error {err}");
+    }
+
+    #[test]
+    fn rbt_solve_matches_plain_on_spd() {
+        let (a, _) = cov_tlr(128, 16, 1e-10, 4);
+        let opts = FactorOpts { eps: 1e-10, bs: 8, ..Default::default() };
+        let rf = rbt_ldlt(&a, 1, &opts).unwrap();
+        let mut rng = Rng::new(5);
+        let x_true: Vec<f64> = (0..128).map(|_| rng.normal()).collect();
+        let b = tlr_matvec(&a, &x_true);
+        let x = rf.solve(&b);
+        let err = x.iter().zip(&x_true).map(|(p, q)| (p - q).abs()).fold(0.0, f64::max);
+        assert!(err < 1e-6, "err={err}");
+    }
+
+    #[test]
+    fn rank_growth_is_bounded_by_recompression() {
+        let (a, _) = cov_tlr(256, 32, 1e-8, 6);
+        let before: usize = a.offdiag_ranks().iter().sum();
+        let rbt = Rbt::sample(a.offsets(), 2, 7);
+        let at = rbt.transform(&a, 1e-8);
+        let after: usize = at.offdiag_ranks().iter().sum();
+        // Mixing can raise ranks, but recompression keeps it well below
+        // the worst-case 4x per level.
+        assert!(after < before * 4, "before={before} after={after}");
+    }
+
+    #[test]
+    #[should_panic]
+    fn rejects_non_power_tilings() {
+        let offsets = vec![0usize, 16, 32, 48]; // nb=3
+        let _ = Rbt::sample(&offsets, 1, 1);
+    }
+}

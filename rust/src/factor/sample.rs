@@ -1,0 +1,277 @@
+//! Left-looking sampling (paper §4.1, Alg 4): the updated panel tile
+//!
+//! `Â(i,k) = A(i,k) − Σ_{j<k} L(i,j) L(k,j)ᵀ`            (Eq 1)
+//!
+//! exposed as a black-box [`Sampler`] so ARA can compress it *ab initio*.
+//! Each update term is sampled through the 4-GEMM chain
+//!
+//! `Y += U(i,j) ( V(i,j)ᵀ ( V(k,j) ( U(k,j)ᵀ Ω )))`      (Eq 2)
+//!
+//! (5 products with the diagonal `D(j,j)` interposed for LDLᵀ, Eq 3) —
+//! the tile is never materialized. This chain is also the computation the
+//! L1 Pallas kernel implements (`python/compile/kernels/sample.py`); the
+//! PJRT runtime backend routes `sample`/`sample_t` through the AOT
+//! artifact instead of the native gemm path.
+
+use crate::ara::sampler::Sampler;
+use crate::linalg::blas::scale_rows;
+use crate::linalg::matrix::Matrix;
+use crate::profile::{add_flops, Phase, Timer};
+use crate::tlr::matrix::TlrMatrix;
+use crate::tlr::tile::Tile;
+
+/// FLOPs of applying a tile to a `bs`-column block (the 2mnk convention).
+fn apply_flops(t: &Tile, bs: usize) -> u64 {
+    match t {
+        Tile::Dense(m) => 2 * (m.rows() * m.cols() * bs) as u64,
+        Tile::LowRank(lr) => {
+            2 * (lr.rank() * (lr.rows() + lr.cols()) * bs) as u64
+        }
+    }
+}
+
+/// Samples `Â(i,k)` of Eq 1 against the partially-factored TLR matrix.
+///
+/// Tiles in block columns `0..k` of `a` must already hold `L`; tile
+/// `(i, k)` still holds the original `A`. For LDLᵀ, `dblocks` holds the
+/// per-column diagonal vectors `D(j,j)` and the 5-product chain of Eq 3
+/// is used.
+pub struct LeftSampler<'a> {
+    pub a: &'a TlrMatrix,
+    pub i: usize,
+    pub k: usize,
+    /// `Some(d)` for LDLᵀ: `d[j]` is the diagonal of `D(j,j)`.
+    pub dblocks: Option<&'a [Vec<f64>]>,
+}
+
+impl<'a> LeftSampler<'a> {
+    pub fn new(a: &'a TlrMatrix, i: usize, k: usize) -> Self {
+        assert!(i > k, "panel sampler addresses strictly-lower tiles");
+        LeftSampler { a, i, k, dblocks: None }
+    }
+
+    pub fn with_diag(a: &'a TlrMatrix, i: usize, k: usize, d: &'a [Vec<f64>]) -> Self {
+        assert!(i > k);
+        LeftSampler { a, i, k, dblocks: Some(d) }
+    }
+}
+
+impl Sampler for LeftSampler<'_> {
+    fn rows(&self) -> usize {
+        self.a.tile_size(self.i)
+    }
+
+    fn cols(&self) -> usize {
+        self.a.tile_size(self.k)
+    }
+
+    /// `Y = Â(i,k) Ω` — Alg 4 forward chain.
+    fn sample(&self, omega: &Matrix) -> Matrix {
+        let mut t = Timer::new(Phase::Sample);
+        let bs = omega.cols();
+        let (i, k) = (self.i, self.k);
+        // Original tile contribution.
+        let aik = self.a.tile(i, k);
+        let mut y = aik.apply(omega);
+        t.add_flops(apply_flops(aik, bs));
+        // Left-looking update chain.
+        for j in 0..k {
+            let lkj = self.a.tile(k, j);
+            let lij = self.a.tile(i, j);
+            // W = L(k,j)ᵀ Ω   (two GEMMs through the low-rank factors)
+            let mut w = lkj.apply_t(omega);
+            if let Some(d) = self.dblocks {
+                scale_rows(&mut w, &d[j]); // Eq 3: interpose D(j,j)
+            }
+            // Y -= L(i,j) W  (two more GEMMs)
+            let upd = lij.apply(&w);
+            y.axpy(-1.0, &upd);
+            t.add_flops(apply_flops(lkj, bs) + apply_flops(lij, bs));
+        }
+        y
+    }
+
+    /// `Z = Â(i,k)ᵀ Ω` — used for the projection phase (`sampleLeftT`).
+    fn sample_t(&self, omega: &Matrix) -> Matrix {
+        let mut t = Timer::new(Phase::Projection);
+        let bs = omega.cols();
+        let (i, k) = (self.i, self.k);
+        let aik = self.a.tile(i, k);
+        let mut z = aik.apply_t(omega);
+        t.add_flops(apply_flops(aik, bs));
+        for j in 0..k {
+            let lkj = self.a.tile(k, j);
+            let lij = self.a.tile(i, j);
+            // Âᵀ = A(i,k)ᵀ − Σ L(k,j) [D] L(i,j)ᵀ
+            let mut w = lij.apply_t(omega);
+            if let Some(d) = self.dblocks {
+                scale_rows(&mut w, &d[j]);
+            }
+            let upd = lkj.apply(&w);
+            z.axpy(-1.0, &upd);
+            t.add_flops(apply_flops(lkj, bs) + apply_flops(lij, bs));
+        }
+        z
+    }
+}
+
+/// Accumulate the dense diagonal update `D_k = Σ_{j<k} L(k,j) [D(j,j)] L(k,j)ᵀ`
+/// (paper Alg 6 line 10 / Alg 10 line 11). Expansion per term:
+/// `T = V(k,j)ᵀ [D] V(k,j)` (k×k), then `(U T) Uᵀ` — `O(m²k)` instead of
+/// materializing the tile.
+pub fn dense_diag_update(
+    a: &TlrMatrix,
+    k: usize,
+    upto: usize,
+    dblocks: Option<&[Vec<f64>]>,
+) -> Matrix {
+    use crate::linalg::gemm::{gemm, matmul, matmul_tn, Trans};
+    let _t = Timer::new(Phase::DenseUpdate);
+    let m = a.tile_size(k);
+    let mut d = Matrix::zeros(m, m);
+    for j in 0..upto {
+        let lkj = a.tile(k, j);
+        match lkj {
+            Tile::LowRank(lr) => {
+                if lr.rank() == 0 {
+                    continue;
+                }
+                let mut v = lr.v.clone();
+                if let Some(db) = dblocks {
+                    scale_rows(&mut v, &db[j]);
+                }
+                // T = V_scaledᵀ V  (rank×rank)
+                let t = matmul_tn(&v, &lr.v);
+                let ut = matmul(&lr.u, &t);
+                gemm(Trans::No, Trans::Yes, 1.0, &ut, &lr.u, 1.0, &mut d);
+                let (mm, kk) = (m as u64, lr.rank() as u64);
+                add_flops(Phase::DenseUpdate, 2 * kk * kk * (m as u64) + 2 * mm * kk * kk + 2 * mm * mm * kk);
+            }
+            Tile::Dense(w) => {
+                // Dense L tile (only if a caller chose dense storage):
+                // D += W Wᵀ.
+                gemm(Trans::No, Trans::Yes, 1.0, w, w, 1.0, &mut d);
+                add_flops(Phase::DenseUpdate, 2 * (m * m * w.cols()) as u64);
+            }
+        }
+    }
+    d.symmetrize();
+    d
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::gemm::{matmul, matmul_nt, matmul_tn};
+    use crate::linalg::rng::Rng;
+    use crate::tlr::tile::LowRank;
+
+    /// Build a 3×3-tile TLR "mid-factorization" state: columns 0..k hold
+    /// synthetic L tiles, column k holds original A tiles.
+    fn setup(seed: u64) -> (TlrMatrix, usize, usize) {
+        let sizes = [8usize, 8, 8];
+        let mut offsets = vec![0];
+        for s in sizes {
+            offsets.push(offsets.last().unwrap() + s);
+        }
+        let mut rng = Rng::new(seed);
+        let mut tiles = Vec::new();
+        for i in 0..3 {
+            for j in 0..=i {
+                if i == j {
+                    let mut d = rng.normal_matrix(8, 8);
+                    d.symmetrize();
+                    tiles.push(Tile::Dense(d));
+                } else {
+                    tiles.push(Tile::LowRank(LowRank {
+                        u: rng.normal_matrix(8, 3),
+                        v: rng.normal_matrix(8, 3),
+                    }));
+                }
+            }
+        }
+        (TlrMatrix::from_tiles(offsets, tiles), 2, 2) // sample tile (2, 2)? no: (i=2, k=2) invalid; use k=2? i must be > k
+    }
+
+    #[test]
+    fn sample_matches_explicit_expression() {
+        // i = 2, k = 2 is invalid; sample tile (2, 1): k = 1, updates j = 0.
+        let (a, _, _) = setup(1);
+        let (i, k) = (2usize, 1usize);
+        let s = LeftSampler::new(&a, i, k);
+        let mut rng = Rng::new(2);
+        let omega = rng.normal_matrix(8, 5);
+        let y = s.sample(&omega);
+        // Explicit: Â = A(2,1) − L(2,0) L(1,0)ᵀ.
+        let a21 = a.tile(2, 1).to_dense();
+        let l20 = a.tile(2, 0).to_dense();
+        let l10 = a.tile(1, 0).to_dense();
+        let ahat = a21.sub(&matmul_nt(&l20, &l10));
+        let expect = matmul(&ahat, &omega);
+        assert!(y.sub(&expect).norm_max() < 1e-11);
+        // Transpose side.
+        let omt = rng.normal_matrix(8, 5);
+        let z = s.sample_t(&omt);
+        let expect_t = matmul_tn(&ahat, &omt);
+        assert!(z.sub(&expect_t).norm_max() < 1e-11);
+    }
+
+    #[test]
+    fn sample_with_diagonal_matches_eq3() {
+        let (a, _, _) = setup(3);
+        let (i, k) = (2usize, 1usize);
+        let d0: Vec<f64> = (0..8).map(|q| 1.0 + q as f64).collect();
+        let dblocks = vec![d0.clone(), vec![1.0; 8], vec![1.0; 8]];
+        let s = LeftSampler::with_diag(&a, i, k, &dblocks);
+        let mut rng = Rng::new(4);
+        let omega = rng.normal_matrix(8, 4);
+        let y = s.sample(&omega);
+        // Explicit: Â = A(2,1) − L(2,0) D0 L(1,0)ᵀ.
+        let a21 = a.tile(2, 1).to_dense();
+        let l20 = a.tile(2, 0).to_dense();
+        let mut l10t = a.tile(1, 0).to_dense().transpose();
+        scale_rows(&mut l10t, &d0);
+        let ahat = a21.sub(&matmul(&l20, &l10t));
+        let expect = matmul(&ahat, &omega);
+        assert!(y.sub(&expect).norm_max() < 1e-10);
+    }
+
+    #[test]
+    fn dense_diag_update_matches_explicit() {
+        let (a, _, _) = setup(5);
+        // D_2 with upto=2: L(2,0) L(2,0)ᵀ + L(2,1) L(2,1)ᵀ.
+        let d = dense_diag_update(&a, 2, 2, None);
+        let l20 = a.tile(2, 0).to_dense();
+        let l21 = a.tile(2, 1).to_dense();
+        let expect = matmul_nt(&l20, &l20).add(&matmul_nt(&l21, &l21));
+        assert!(d.sub(&expect).norm_max() < 1e-11);
+    }
+
+    #[test]
+    fn dense_diag_update_with_dscale() {
+        let (a, _, _) = setup(6);
+        let d0: Vec<f64> = (0..8).map(|q| 0.5 + q as f64).collect();
+        let dblocks = vec![d0.clone()];
+        let d = dense_diag_update(&a, 1, 1, Some(&dblocks));
+        // L(1,0) D0 L(1,0)ᵀ
+        let l10 = a.tile(1, 0).to_dense();
+        let mut l10d = l10.transpose();
+        scale_rows(&mut l10d, &d0);
+        let expect = matmul(&l10, &l10d);
+        assert!(d.sub(&expect).norm_max() < 1e-11);
+    }
+
+    #[test]
+    fn sampler_shapes() {
+        let (a, _, _) = setup(7);
+        let s = LeftSampler::new(&a, 2, 0);
+        assert_eq!(s.rows(), 8);
+        assert_eq!(s.cols(), 8);
+        // k = 0: no updates, pure original tile.
+        let mut rng = Rng::new(8);
+        let om = rng.normal_matrix(8, 2);
+        let y = s.sample(&om);
+        let expect = matmul(&a.tile(2, 0).to_dense(), &om);
+        assert!(y.sub(&expect).norm_max() < 1e-12);
+    }
+}

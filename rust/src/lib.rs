@@ -1,0 +1,40 @@
+//! # h2opus-tlr
+//!
+//! A reproduction of *H2OPUS-TLR: High Performance Tile Low Rank Symmetric
+//! Factorizations using Adaptive Randomized Approximation* (Boukaram,
+//! Zampini, Turkiyyah, Keyes; 2021).
+//!
+//! The crate provides:
+//!
+//! * a dense linear-algebra substrate ([`linalg`]) — blocked GEMM, Cholesky,
+//!   LDLᵀ, QR, SVD, norms — built from scratch in safe Rust;
+//! * the Tile Low Rank matrix format ([`tlr`]) with adaptive per-tile ranks;
+//! * adaptive randomized approximation ([`ara`]) with the paper's dynamic
+//!   batching scheme;
+//! * the non-uniform batched-GEMM engine ([`batch`]) that the factorization
+//!   is marshaled onto;
+//! * left-looking TLR Cholesky / pivoted Cholesky / LDLᵀ ([`factor`]);
+//! * solvers that consume the factors ([`solve`]): TLR matvec, triangular
+//!   solves and preconditioned CG;
+//! * the paper's evaluation problems ([`apps`]): spatial-statistics
+//!   covariance matrices and a 3D fractional-diffusion integral operator,
+//!   with KD-tree geometric orderings;
+//! * an AOT/PJRT runtime ([`runtime`]) that loads JAX/Pallas-lowered HLO
+//!   artifacts and runs the sampling hot loop through them, proving the
+//!   three-layer composition;
+//! * phase/FLOP profiling ([`profile`]) used by the experiment reports.
+
+pub mod apps;
+pub mod ara;
+pub mod batch;
+pub mod config;
+pub mod experiments;
+pub mod factor;
+pub mod linalg;
+pub mod profile;
+pub mod runtime;
+pub mod solve;
+pub mod tlr;
+
+pub use linalg::matrix::Matrix;
+pub use tlr::matrix::TlrMatrix;

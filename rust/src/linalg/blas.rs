@@ -1,0 +1,292 @@
+//! Level-3 BLAS-style helpers built on the blocked GEMM: symmetric rank-k
+//! updates and triangular solves, the two other primitives the tiled
+//! Cholesky needs (paper Alg 2/3 lines `chol`, `trsm`, `syrk`).
+
+use super::gemm::{gemm, Trans};
+use super::matrix::Matrix;
+
+/// Which triangle of a matrix an operation refers to.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum Uplo {
+    Lower,
+    Upper,
+}
+
+/// Side of a triangular solve.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum Side {
+    Left,
+    Right,
+}
+
+/// `C := alpha * A * Aᵀ + beta * C` (or `AᵀA` when `trans`), writing only
+/// the `uplo` triangle of the square `C` and mirroring it for symmetry.
+pub fn syrk(uplo: Uplo, trans: Trans, alpha: f64, a: &Matrix, beta: f64, c: &mut Matrix) {
+    assert!(c.is_square());
+    // Full-product implementation: compute into C then resymmetrize. The
+    // tiles here are small (≤ 2048); the factor-of-two savings of a true
+    // triangular SYRK is traded for reuse of the packed GEMM kernel.
+    match trans {
+        Trans::No => gemm(Trans::No, Trans::Yes, alpha, a, a, beta, c),
+        Trans::Yes => gemm(Trans::Yes, Trans::No, alpha, a, a, beta, c),
+    }
+    let n = c.rows();
+    match uplo {
+        Uplo::Lower => {
+            for j in 0..n {
+                for i in 0..j {
+                    c[(i, j)] = c[(j, i)];
+                }
+            }
+        }
+        Uplo::Upper => {
+            for j in 0..n {
+                for i in 0..j {
+                    c[(j, i)] = c[(i, j)];
+                }
+            }
+        }
+    }
+}
+
+/// Triangular solve with a lower-triangular matrix `L`:
+///
+/// * `Side::Right`, transposed: `X := B L^{-T}` — the tiled Cholesky panel
+///   update `L(i,k) = A(i,k) L(k,k)^{-T}` (paper Alg 2 line 6).
+/// * `Side::Left`, not transposed: `X := L^{-1} B` — forward substitution.
+///
+/// Only the lower triangle of `l` is referenced.
+pub fn trsm_lower(side: Side, trans: Trans, l: &Matrix, b: &mut Matrix) {
+    assert!(l.is_square());
+    let n = l.rows();
+    match (side, trans) {
+        (Side::Left, Trans::No) => {
+            // Solve L X = B blocked: scalar forward substitution on NB×NB
+            // diagonal blocks, gemm for the trailing update (the scalar
+            // row-dot walks L with stride n — moving the bulk of the work
+            // into gemm tripled panel-trsm throughput; EXPERIMENTS §Perf).
+            assert_eq!(b.rows(), n);
+            const NB: usize = 64;
+            let ncols = b.cols();
+            for k0 in (0..n).step_by(NB) {
+                let kb = NB.min(n - k0);
+                for j in 0..ncols {
+                    let col = b.col_mut(j);
+                    for i in k0..k0 + kb {
+                        let mut s = col[i];
+                        for p in k0..i {
+                            s -= l[(i, p)] * col[p];
+                        }
+                        col[i] = s / l[(i, i)];
+                    }
+                }
+                let rest = n - k0 - kb;
+                if rest > 0 {
+                    let lblk = l.submatrix(k0 + kb, k0, rest, kb);
+                    let xblk = b.submatrix(k0, 0, kb, ncols);
+                    let mut tail = b.submatrix(k0 + kb, 0, rest, ncols);
+                    super::gemm::gemm(Trans::No, Trans::No, -1.0, &lblk, &xblk, 1.0, &mut tail);
+                    b.set_submatrix(k0 + kb, 0, &tail);
+                }
+            }
+        }
+        (Side::Left, Trans::Yes) => {
+            // Solve Lᵀ X = B blocked, bottom-up (backward substitution).
+            assert_eq!(b.rows(), n);
+            const NB: usize = 64;
+            let ncols = b.cols();
+            let mut k0 = n;
+            while k0 > 0 {
+                let kb = NB.min(k0);
+                k0 -= kb;
+                for j in 0..ncols {
+                    let col = b.col_mut(j);
+                    for i in (k0..k0 + kb).rev() {
+                        let mut s = col[i];
+                        for p in i + 1..k0 + kb {
+                            s -= l[(p, i)] * col[p];
+                        }
+                        col[i] = s / l[(i, i)];
+                    }
+                }
+                if k0 > 0 {
+                    // B[0..k0] -= L[k0..k0+kb, 0..k0]ᵀ X_k
+                    let lblk = l.submatrix(k0, 0, kb, k0);
+                    let xblk = b.submatrix(k0, 0, kb, ncols);
+                    let mut head = b.submatrix(0, 0, k0, ncols);
+                    super::gemm::gemm(Trans::Yes, Trans::No, -1.0, &lblk, &xblk, 1.0, &mut head);
+                    b.set_submatrix(0, 0, &head);
+                }
+            }
+        }
+        (Side::Right, Trans::Yes) => {
+            // Solve X Lᵀ = B, i.e. for each row x of B: x Lᵀ = b.
+            // Column j of X: X[:,j] = (B[:,j] - Σ_{p<j} X[:,p] L(j,p)) / L(j,j).
+            assert_eq!(b.cols(), n);
+            for j in 0..n {
+                let inv = 1.0 / l[(j, j)];
+                for p in 0..j {
+                    let lj = l[(j, p)];
+                    if lj == 0.0 {
+                        continue;
+                    }
+                    let (cp, cj) = two_cols(b, p, j);
+                    for i in 0..cp.len() {
+                        cj[i] -= lj * cp[i];
+                    }
+                }
+                for v in b.col_mut(j) {
+                    *v *= inv;
+                }
+            }
+        }
+        (Side::Right, Trans::No) => {
+            // Solve X L = B: process columns right-to-left.
+            assert_eq!(b.cols(), n);
+            for j in (0..n).rev() {
+                let inv = 1.0 / l[(j, j)];
+                for v in b.col_mut(j) {
+                    *v *= inv;
+                }
+                for p in 0..j {
+                    let lj = l[(j, p)];
+                    if lj == 0.0 {
+                        continue;
+                    }
+                    let (cp, cj) = two_cols(b, p, j);
+                    for i in 0..cp.len() {
+                        cp[i] -= lj * cj[i];
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Borrow two distinct columns of `m` mutably: returns `(col_a, col_b)`.
+fn two_cols(m: &mut Matrix, a: usize, b: usize) -> (&mut [f64], &mut [f64]) {
+    assert_ne!(a, b);
+    let rows = m.rows();
+    let (lo, hi, swap) = if a < b { (a, b, false) } else { (b, a, true) };
+    let data = m.as_mut_slice();
+    let (left, right) = data.split_at_mut(hi * rows);
+    let ca = &mut left[lo * rows..(lo + 1) * rows];
+    let cb = &mut right[..rows];
+    if swap {
+        (cb, ca)
+    } else {
+        (ca, cb)
+    }
+}
+
+/// Scale the columns of `B` by `d`: `B := B * diag(d)`.
+pub fn scale_cols(b: &mut Matrix, d: &[f64]) {
+    assert_eq!(b.cols(), d.len());
+    for j in 0..b.cols() {
+        let dj = d[j];
+        for v in b.col_mut(j) {
+            *v *= dj;
+        }
+    }
+}
+
+/// Scale the rows of `B` by `d`: `B := diag(d) * B`.
+pub fn scale_rows(b: &mut Matrix, d: &[f64]) {
+    assert_eq!(b.rows(), d.len());
+    for j in 0..b.cols() {
+        for (v, dj) in b.col_mut(j).iter_mut().zip(d) {
+            *v *= dj;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::gemm::{matmul, matmul_nt, matmul_tn};
+    use crate::linalg::rng::Rng;
+
+    fn random_lower(n: usize, seed: u64) -> Matrix {
+        let mut rng = Rng::new(seed);
+        Matrix::from_fn(n, n, |i, j| {
+            if i > j {
+                rng.normal() * 0.3
+            } else if i == j {
+                2.0 + rng.uniform()
+            } else {
+                0.0
+            }
+        })
+    }
+
+    #[test]
+    fn syrk_matches_gemm() {
+        let mut rng = Rng::new(1);
+        let a = rng.normal_matrix(9, 4);
+        let mut c = Matrix::zeros(9, 9);
+        syrk(Uplo::Lower, Trans::No, 1.0, &a, 0.0, &mut c);
+        let expect = matmul_nt(&a, &a);
+        assert!(c.sub(&expect).norm_max() < 1e-12);
+        let mut ct = Matrix::zeros(4, 4);
+        syrk(Uplo::Lower, Trans::Yes, 2.0, &a, 0.0, &mut ct);
+        let mut expect_t = matmul_tn(&a, &a);
+        expect_t.scale(2.0);
+        assert!(ct.sub(&expect_t).norm_max() < 1e-12);
+    }
+
+    #[test]
+    fn trsm_left_no() {
+        let l = random_lower(8, 2);
+        let mut rng = Rng::new(3);
+        let x_true = rng.normal_matrix(8, 3);
+        let b = matmul(&l, &x_true);
+        let mut x = b.clone();
+        trsm_lower(Side::Left, Trans::No, &l, &mut x);
+        assert!(x.sub(&x_true).norm_max() < 1e-10);
+    }
+
+    #[test]
+    fn trsm_left_trans() {
+        let l = random_lower(8, 4);
+        let mut rng = Rng::new(5);
+        let x_true = rng.normal_matrix(8, 3);
+        let b = matmul_tn(&l, &x_true);
+        let mut x = b.clone();
+        trsm_lower(Side::Left, Trans::Yes, &l, &mut x);
+        assert!(x.sub(&x_true).norm_max() < 1e-10);
+    }
+
+    #[test]
+    fn trsm_right_trans() {
+        let l = random_lower(6, 6);
+        let mut rng = Rng::new(7);
+        let x_true = rng.normal_matrix(4, 6);
+        let b = matmul_nt(&x_true, &l);
+        let mut x = b.clone();
+        trsm_lower(Side::Right, Trans::Yes, &l, &mut x);
+        assert!(x.sub(&x_true).norm_max() < 1e-10);
+    }
+
+    #[test]
+    fn trsm_right_no() {
+        let l = random_lower(6, 8);
+        let mut rng = Rng::new(9);
+        let x_true = rng.normal_matrix(4, 6);
+        let b = matmul(&x_true, &l);
+        let mut x = b.clone();
+        trsm_lower(Side::Right, Trans::No, &l, &mut x);
+        assert!(x.sub(&x_true).norm_max() < 1e-10);
+    }
+
+    #[test]
+    fn scale_cols_rows() {
+        let mut b = Matrix::from_rows(2, 2, &[1., 2., 3., 4.]);
+        scale_cols(&mut b, &[2.0, 10.0]);
+        assert_eq!(b[(1, 1)], 40.0);
+        assert_eq!(b[(1, 0)], 6.0);
+        let mut b2 = Matrix::from_rows(2, 2, &[1., 2., 3., 4.]);
+        scale_rows(&mut b2, &[2.0, 10.0]);
+        assert_eq!(b2[(0, 1)], 4.0);
+        assert_eq!(b2[(1, 0)], 30.0);
+    }
+}

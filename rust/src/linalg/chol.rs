@@ -1,0 +1,185 @@
+//! Dense Cholesky factorization (POTRF) — unblocked and blocked variants —
+//! plus the dense full-matrix factor/solve used as the paper's "dense
+//! baseline" comparator (MKL dpotrf in the paper, ours here).
+
+use super::blas::{trsm_lower, Side};
+use super::gemm::{gemm, Trans};
+use super::matrix::Matrix;
+
+/// Error returned when a pivot is non-positive (matrix not SPD to working
+/// precision). Carries the failing index — the paper's extensions (§5) key
+/// off this to trigger modified Cholesky.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct NotSpd {
+    /// Index of the first non-positive pivot.
+    pub index: usize,
+    /// Value of the offending pivot.
+    pub pivot: f64,
+}
+
+impl std::fmt::Display for NotSpd {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "matrix is not positive definite: pivot {} at index {}", self.pivot, self.index)
+    }
+}
+
+impl std::error::Error for NotSpd {}
+
+/// Unblocked in-place lower Cholesky of the leading `n×n` of `a`.
+/// On success the lower triangle holds `L`; the strict upper triangle is
+/// zeroed so `a` can be used directly as a triangular operand.
+pub fn potrf_unblocked(a: &mut Matrix) -> Result<(), NotSpd> {
+    assert!(a.is_square());
+    let n = a.rows();
+    for j in 0..n {
+        let mut d = a[(j, j)];
+        for p in 0..j {
+            d -= a[(j, p)] * a[(j, p)];
+        }
+        if d <= 0.0 || !d.is_finite() {
+            return Err(NotSpd { index: j, pivot: d });
+        }
+        let djj = d.sqrt();
+        a[(j, j)] = djj;
+        let inv = 1.0 / djj;
+        for i in j + 1..n {
+            let mut s = a[(i, j)];
+            for p in 0..j {
+                s -= a[(i, p)] * a[(j, p)];
+            }
+            a[(i, j)] = s * inv;
+        }
+    }
+    // Zero the strict upper triangle.
+    for j in 1..n {
+        for i in 0..j {
+            a[(i, j)] = 0.0;
+        }
+    }
+    Ok(())
+}
+
+/// Blocked in-place lower Cholesky (right-looking, panel width `nb`).
+/// This is the dense baseline factorization for the paper's Fig 7
+/// comparison and the diagonal-tile factor in the TLR algorithm.
+pub fn potrf(a: &mut Matrix, nb: usize) -> Result<(), NotSpd> {
+    assert!(a.is_square());
+    let n = a.rows();
+    if n <= nb {
+        return potrf_unblocked(a);
+    }
+    let mut k = 0;
+    while k < n {
+        let b = nb.min(n - k);
+        // Factor the diagonal block.
+        let mut akk = a.submatrix(k, k, b, b);
+        potrf_unblocked(&mut akk).map_err(|e| NotSpd { index: k + e.index, pivot: e.pivot })?;
+        a.set_submatrix(k, k, &akk);
+        let rest = n - k - b;
+        if rest > 0 {
+            // Panel solve: A(k+b.., k..k+b) := A(k+b.., k..k+b) * Lkk^{-T}.
+            let mut panel = a.submatrix(k + b, k, rest, b);
+            trsm_lower(Side::Right, Trans::Yes, &akk, &mut panel);
+            a.set_submatrix(k + b, k, &panel);
+            // Trailing update: A22 -= panel * panelᵀ (lower triangle).
+            let mut a22 = a.submatrix(k + b, k + b, rest, rest);
+            gemm(Trans::No, Trans::Yes, -1.0, &panel, &panel, 1.0, &mut a22);
+            a.set_submatrix(k + b, k + b, &a22);
+        }
+        k += b;
+    }
+    for j in 1..n {
+        for i in 0..j {
+            a[(i, j)] = 0.0;
+        }
+    }
+    Ok(())
+}
+
+/// Solve `A x = b` given the Cholesky factor `L` (forward + backward).
+pub fn chol_solve(l: &Matrix, b: &[f64]) -> Vec<f64> {
+    let n = l.rows();
+    assert_eq!(b.len(), n);
+    let mut x = Matrix::from_vec(n, 1, b.to_vec());
+    trsm_lower(Side::Left, Trans::No, l, &mut x);
+    trsm_lower(Side::Left, Trans::Yes, l, &mut x);
+    x.as_slice().to_vec()
+}
+
+/// FLOP count of an `n×n` Cholesky (n³/3 convention).
+pub fn potrf_flops(n: usize) -> u64 {
+    (n as u64).pow(3) / 3
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::gemm::matmul_nt;
+    use crate::linalg::rng::Rng;
+
+    /// Random SPD matrix: G Gᵀ + n·I.
+    pub fn random_spd(n: usize, seed: u64) -> Matrix {
+        let mut rng = Rng::new(seed);
+        let g = rng.normal_matrix(n, n);
+        let mut a = matmul_nt(&g, &g);
+        for i in 0..n {
+            a[(i, i)] += n as f64;
+        }
+        a
+    }
+
+    fn check_reconstruct(n: usize, nb: usize, seed: u64) {
+        let a = random_spd(n, seed);
+        let mut l = a.clone();
+        potrf(&mut l, nb).unwrap();
+        let r = matmul_nt(&l, &l).sub(&a);
+        let rel = r.norm_fro() / a.norm_fro();
+        assert!(rel < 1e-13, "n={n} nb={nb} rel={rel}");
+        // Upper triangle must be clean.
+        for j in 1..n {
+            for i in 0..j {
+                assert_eq!(l[(i, j)], 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn potrf_reconstructs() {
+        check_reconstruct(1, 4, 1);
+        check_reconstruct(5, 2, 2);
+        check_reconstruct(16, 4, 3);
+        check_reconstruct(64, 16, 4);
+        check_reconstruct(100, 32, 5);
+    }
+
+    #[test]
+    fn potrf_blocked_equals_unblocked() {
+        let a = random_spd(37, 6);
+        let mut l1 = a.clone();
+        potrf_unblocked(&mut l1).unwrap();
+        let mut l2 = a.clone();
+        potrf(&mut l2, 8).unwrap();
+        assert!(l1.sub(&l2).norm_max() < 1e-11);
+    }
+
+    #[test]
+    fn potrf_rejects_indefinite() {
+        let mut a = Matrix::from_rows(2, 2, &[1., 2., 2., 1.]); // eigenvalues 3, -1
+        let err = potrf_unblocked(&mut a).unwrap_err();
+        assert_eq!(err.index, 1);
+        assert!(err.pivot <= 0.0);
+    }
+
+    #[test]
+    fn chol_solve_roundtrip() {
+        let a = random_spd(20, 7);
+        let mut rng = Rng::new(8);
+        let x_true: Vec<f64> = (0..20).map(|_| rng.normal()).collect();
+        let b = a.matvec(&x_true);
+        let mut l = a.clone();
+        potrf(&mut l, 8).unwrap();
+        let x = chol_solve(&l, &b);
+        let err: f64 = x.iter().zip(&x_true).map(|(a, b)| (a - b).abs()).fold(0.0, f64::max);
+        assert!(err < 1e-10, "err={err}");
+    }
+}

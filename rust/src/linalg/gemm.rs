@@ -1,0 +1,330 @@
+//! Blocked dense matrix-matrix multiplication.
+//!
+//! This is the innermost engine of the whole library: the paper's profile
+//! (Fig 8a) shows 80–90% of the factorization inside small GEMMs, so the
+//! batched engine in [`crate::batch`] dispatches every tile product here.
+//!
+//! The kernel is a classic three-level cache-blocked GEMM (GotoBLAS
+//! scheme): packed `MC×KC` panels of `A` and `KC×NC` panels of `B`, with an
+//! `MR×NR` register microkernel in the middle. Everything is `f64` and
+//! column-major.
+
+use super::matrix::Matrix;
+
+/// Transposition flag for [`gemm`] operands.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum Trans {
+    /// Use the operand as stored.
+    No,
+    /// Use the operand's transpose.
+    Yes,
+}
+
+// Cache-blocking parameters, tuned on the test machine (see EXPERIMENTS.md
+// §Perf). KC*MR and KC*NR panels stay in L1; MC*KC block of A in L2.
+const MC: usize = 128;
+const KC: usize = 256;
+const NC: usize = 512;
+const MR: usize = 16;
+const NR: usize = 4;
+
+/// `C := alpha * op(A) * op(B) + beta * C`.
+///
+/// Shapes: `op(A)` is `m×k`, `op(B)` is `k×n`, `C` is `m×n`.
+pub fn gemm(ta: Trans, tb: Trans, alpha: f64, a: &Matrix, b: &Matrix, beta: f64, c: &mut Matrix) {
+    let (m, ka) = match ta {
+        Trans::No => a.shape(),
+        Trans::Yes => (a.cols(), a.rows()),
+    };
+    let (kb, n) = match tb {
+        Trans::No => b.shape(),
+        Trans::Yes => (b.cols(), b.rows()),
+    };
+    assert_eq!(ka, kb, "gemm: inner dimension mismatch");
+    assert_eq!(c.shape(), (m, n), "gemm: output shape mismatch");
+    let k = ka;
+
+    if beta != 1.0 {
+        if beta == 0.0 {
+            c.as_mut_slice().fill(0.0);
+        } else {
+            c.scale(beta);
+        }
+    }
+    if m == 0 || n == 0 || k == 0 || alpha == 0.0 {
+        return;
+    }
+
+    // Packing buffers (panel copies in the blocked layout), sized to the
+    // actual blocks: the factorization's GEMMs are mostly small
+    // (m ~ tile size, k ~ rank, n ~ bs), and allocating/zeroing the full
+    // MC*KC / KC*NC panels per call used to dominate their runtime
+    // (EXPERIMENTS.md §Perf).
+    let mc_max = MC.min(m).div_ceil(MR) * MR;
+    let kc_max = KC.min(k);
+    let nc_max = NC.min(n).div_ceil(NR) * NR;
+    let mut apack = vec![0.0f64; mc_max * kc_max];
+    let mut bpack = vec![0.0f64; kc_max * nc_max];
+
+    for jc in (0..n).step_by(NC) {
+        let nc = NC.min(n - jc);
+        for pc in (0..k).step_by(KC) {
+            let kc = KC.min(k - pc);
+            pack_b(tb, b, pc, jc, kc, nc, &mut bpack);
+            for ic in (0..m).step_by(MC) {
+                let mc = MC.min(m - ic);
+                pack_a(ta, a, ic, pc, mc, kc, &mut apack);
+                macro_block(alpha, &apack, &bpack, mc, nc, kc, c, ic, jc);
+            }
+        }
+    }
+}
+
+/// Pack an `mc×kc` block of `op(A)` starting at `(ic, pc)` into row-panels
+/// of height `MR`: panel p holds rows `[p*MR, p*MR+MR)` stored k-major.
+fn pack_a(ta: Trans, a: &Matrix, ic: usize, pc: usize, mc: usize, kc: usize, apack: &mut [f64]) {
+    let mut idx = 0;
+    for p in (0..mc).step_by(MR) {
+        let mr = MR.min(mc - p);
+        for kk in 0..kc {
+            for i in 0..MR {
+                apack[idx] = if i < mr {
+                    match ta {
+                        Trans::No => a[(ic + p + i, pc + kk)],
+                        Trans::Yes => a[(pc + kk, ic + p + i)],
+                    }
+                } else {
+                    0.0
+                };
+                idx += 1;
+            }
+        }
+    }
+}
+
+/// Pack a `kc×nc` block of `op(B)` starting at `(pc, jc)` into column-panels
+/// of width `NR`: panel q holds cols `[q*NR, q*NR+NR)` stored k-major.
+fn pack_b(tb: Trans, b: &Matrix, pc: usize, jc: usize, kc: usize, nc: usize, bpack: &mut [f64]) {
+    let mut idx = 0;
+    for q in (0..nc).step_by(NR) {
+        let nr = NR.min(nc - q);
+        for kk in 0..kc {
+            for j in 0..NR {
+                bpack[idx] = if j < nr {
+                    match tb {
+                        Trans::No => b[(pc + kk, jc + q + j)],
+                        Trans::Yes => b[(jc + q + j, pc + kk)],
+                    }
+                } else {
+                    0.0
+                };
+                idx += 1;
+            }
+        }
+    }
+}
+
+/// Multiply the packed `mc×kc` A-block with the packed `kc×nc` B-block,
+/// accumulating `alpha * A * B` into `C[ic.., jc..]`.
+fn macro_block(
+    alpha: f64,
+    apack: &[f64],
+    bpack: &[f64],
+    mc: usize,
+    nc: usize,
+    kc: usize,
+    c: &mut Matrix,
+    ic: usize,
+    jc: usize,
+) {
+    let ldc = c.rows();
+    let cdata = c.as_mut_slice();
+    for q in (0..nc).step_by(NR) {
+        let nr = NR.min(nc - q);
+        let bpanel = &bpack[q / NR * (kc * NR)..][..kc * NR];
+        for p in (0..mc).step_by(MR) {
+            let mr = MR.min(mc - p);
+            let apanel = &apack[p / MR * (kc * MR)..][..kc * MR];
+            microkernel(alpha, apanel, bpanel, kc, cdata, ldc, ic + p, jc + q, mr, nr);
+        }
+    }
+}
+
+/// `MR×NR` register-blocked microkernel: `acc += A_panel * B_panel`, then
+/// scaled-accumulate the live `mr×nr` corner into C.
+#[inline(always)]
+fn microkernel(
+    alpha: f64,
+    apanel: &[f64],
+    bpanel: &[f64],
+    kc: usize,
+    cdata: &mut [f64],
+    ldc: usize,
+    ci: usize,
+    cj: usize,
+    mr: usize,
+    nr: usize,
+) {
+    let mut acc = [[0.0f64; MR]; NR];
+    // chunks_exact gives the compiler compile-time-known slice lengths:
+    // no bounds checks, accumulators stay in vector registers across k.
+    // (A 2-step k-unroll was tried and halved throughput — the fused
+    // a·b0 + a'·b1 expression broke LLVM's vectorization; see
+    // EXPERIMENTS.md §Perf.)
+    for (a, b) in apanel[..kc * MR]
+        .chunks_exact(MR)
+        .zip(bpanel[..kc * NR].chunks_exact(NR))
+    {
+        for j in 0..NR {
+            let bj = b[j];
+            let accj = &mut acc[j];
+            for i in 0..MR {
+                accj[i] += a[i] * bj;
+            }
+        }
+    }
+    for j in 0..nr {
+        let ccol = &mut cdata[(cj + j) * ldc + ci..(cj + j) * ldc + ci + mr];
+        let accj = &acc[j];
+        for i in 0..mr {
+            ccol[i] += alpha * accj[i];
+        }
+    }
+}
+
+/// `A * B` as a fresh matrix.
+pub fn matmul(a: &Matrix, b: &Matrix) -> Matrix {
+    let mut c = Matrix::zeros(a.rows(), b.cols());
+    gemm(Trans::No, Trans::No, 1.0, a, b, 0.0, &mut c);
+    c
+}
+
+/// `Aᵀ * B` as a fresh matrix.
+pub fn matmul_tn(a: &Matrix, b: &Matrix) -> Matrix {
+    let mut c = Matrix::zeros(a.cols(), b.cols());
+    gemm(Trans::Yes, Trans::No, 1.0, a, b, 0.0, &mut c);
+    c
+}
+
+/// `A * Bᵀ` as a fresh matrix.
+pub fn matmul_nt(a: &Matrix, b: &Matrix) -> Matrix {
+    let mut c = Matrix::zeros(a.rows(), b.rows());
+    gemm(Trans::No, Trans::Yes, 1.0, a, b, 0.0, &mut c);
+    c
+}
+
+/// FLOP count of a `m×k by k×n` GEMM (the 2mnk convention the paper uses).
+pub fn gemm_flops(m: usize, n: usize, k: usize) -> u64 {
+    2 * m as u64 * n as u64 * k as u64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::rng::Rng;
+
+    fn naive(ta: Trans, tb: Trans, a: &Matrix, b: &Matrix) -> Matrix {
+        let (m, k) = match ta {
+            Trans::No => a.shape(),
+            Trans::Yes => (a.cols(), a.rows()),
+        };
+        let n = match tb {
+            Trans::No => b.cols(),
+            Trans::Yes => b.rows(),
+        };
+        let get_a = |i: usize, p: usize| match ta {
+            Trans::No => a[(i, p)],
+            Trans::Yes => a[(p, i)],
+        };
+        let get_b = |p: usize, j: usize| match tb {
+            Trans::No => b[(p, j)],
+            Trans::Yes => b[(j, p)],
+        };
+        Matrix::from_fn(m, n, |i, j| (0..k).map(|p| get_a(i, p) * get_b(p, j)).sum())
+    }
+
+    fn check_case(m: usize, n: usize, k: usize, ta: Trans, tb: Trans, seed: u64) {
+        let mut rng = Rng::new(seed);
+        let a = match ta {
+            Trans::No => rng.normal_matrix(m, k),
+            Trans::Yes => rng.normal_matrix(k, m),
+        };
+        let b = match tb {
+            Trans::No => rng.normal_matrix(k, n),
+            Trans::Yes => rng.normal_matrix(n, k),
+        };
+        let mut c = rng.normal_matrix(m, n);
+        let mut expect = naive(ta, tb, &a, &b);
+        expect.scale(0.5);
+        let mut cc = c.clone();
+        cc.scale(-1.0);
+        expect.axpy(-1.0, &cc); // expect = 0.5*op(A)op(B) + 1.0*c
+        gemm(ta, tb, 0.5, &a, &b, 1.0, &mut c);
+        let diff = c.sub(&expect).norm_max();
+        assert!(diff < 1e-11 * (k as f64).max(1.0), "m={m} n={n} k={k} diff={diff}");
+    }
+
+    #[test]
+    fn gemm_matches_naive_all_transposes() {
+        for (ta, tb) in [
+            (Trans::No, Trans::No),
+            (Trans::Yes, Trans::No),
+            (Trans::No, Trans::Yes),
+            (Trans::Yes, Trans::Yes),
+        ] {
+            check_case(7, 5, 3, ta, tb, 1);
+            check_case(16, 16, 16, ta, tb, 2);
+            check_case(33, 21, 57, ta, tb, 3);
+        }
+    }
+
+    #[test]
+    fn gemm_blocked_sizes() {
+        // Sizes straddling the blocking parameters.
+        check_case(MR, NR, 1, Trans::No, Trans::No, 4);
+        check_case(MC + 3, NC / 4 + 1, KC + 5, Trans::No, Trans::No, 5);
+        check_case(130, 70, 300, Trans::Yes, Trans::No, 6);
+    }
+
+    #[test]
+    fn gemm_beta_zero_overwrites_nan() {
+        // beta = 0 must not propagate garbage from C.
+        let a = Matrix::identity(2);
+        let b = Matrix::identity(2);
+        let mut c = Matrix::from_rows(2, 2, &[f64::NAN; 4]);
+        gemm(Trans::No, Trans::No, 1.0, &a, &b, 0.0, &mut c);
+        assert_eq!(c, Matrix::identity(2));
+    }
+
+    #[test]
+    fn gemm_empty_k() {
+        let a = Matrix::zeros(3, 0);
+        let b = Matrix::zeros(0, 2);
+        let mut c = Matrix::from_fn(3, 2, |_, _| 7.0);
+        gemm(Trans::No, Trans::No, 1.0, &a, &b, 1.0, &mut c);
+        assert_eq!(c[(0, 0)], 7.0);
+    }
+
+    #[test]
+    fn matmul_identity() {
+        let mut rng = Rng::new(9);
+        let a = rng.normal_matrix(13, 13);
+        let i = Matrix::identity(13);
+        assert!(matmul(&a, &i).sub(&a).norm_max() < 1e-14);
+        assert!(matmul(&i, &a).sub(&a).norm_max() < 1e-14);
+    }
+
+    #[test]
+    fn matmul_tn_nt_agree_with_transpose() {
+        let mut rng = Rng::new(10);
+        let a = rng.normal_matrix(6, 4);
+        let b = rng.normal_matrix(6, 5);
+        let r1 = matmul_tn(&a, &b);
+        let r2 = matmul(&a.transpose(), &b);
+        assert!(r1.sub(&r2).norm_max() < 1e-12);
+        let c = rng.normal_matrix(5, 6);
+        let r3 = matmul_nt(&c, &a.transpose());
+        let r4 = matmul(&c, &a);
+        assert!(r3.sub(&r4).norm_max() < 1e-12);
+    }
+}

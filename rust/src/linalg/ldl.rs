@@ -1,0 +1,212 @@
+//! Dense LDLᵀ factorization (unpivoted, 1×1 pivots) and the modified
+//! Cholesky of paper §5.1.2: when a diagonal tile loses definiteness under
+//! compression, factor it as `P A Pᵀ = L D Lᵀ`, perturb `D + F ⪰ δI`, and
+//! Cholesky-factor the augmented tile `A + E`.
+
+use super::chol::{potrf, NotSpd};
+use super::matrix::Matrix;
+
+/// Result of [`ldl`]: unit lower triangular `l` (ones stored on the
+/// diagonal) and the diagonal `d` as a vector.
+#[derive(Debug, Clone)]
+pub struct Ldl {
+    pub l: Matrix,
+    pub d: Vec<f64>,
+}
+
+/// Error for an exactly-singular pivot in LDLᵀ.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SingularPivot {
+    pub index: usize,
+}
+
+impl std::fmt::Display for SingularPivot {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "LDL^T pivot at index {} is zero", self.index)
+    }
+}
+
+impl std::error::Error for SingularPivot {}
+
+/// Unpivoted LDLᵀ with 1×1 pivots: `A = L D Lᵀ` for symmetric `A`.
+///
+/// Suitable for the diagonal tiles of the TLR LDLᵀ (paper Alg 10), which
+/// are symmetric and — by the compensation machinery — close to definite.
+/// Scalar (intra-tile) pivoting is the responsibility of this level in the
+/// paper ("we assume that intra-tile pivoting is handled at that level");
+/// we mirror LAPACK's unpivoted `dsytrf`-style kernel and surface exact
+/// breakdowns as errors.
+pub fn ldl(a: &Matrix) -> Result<Ldl, SingularPivot> {
+    assert!(a.is_square());
+    let n = a.rows();
+    let mut l = Matrix::identity(n);
+    let mut d = vec![0.0; n];
+    // v[p] scratch for L(j, 0..j) * d(0..j).
+    let mut v = vec![0.0; n];
+    for j in 0..n {
+        for p in 0..j {
+            v[p] = l[(j, p)] * d[p];
+        }
+        let mut dj = a[(j, j)];
+        for p in 0..j {
+            dj -= l[(j, p)] * v[p];
+        }
+        if dj == 0.0 || !dj.is_finite() {
+            return Err(SingularPivot { index: j });
+        }
+        d[j] = dj;
+        let inv = 1.0 / dj;
+        for i in j + 1..n {
+            let mut s = a[(i, j)];
+            for p in 0..j {
+                s -= l[(i, p)] * v[p];
+            }
+            l[(i, j)] = s * inv;
+        }
+    }
+    Ok(Ldl { l, d })
+}
+
+/// Reconstruct `L D Lᵀ` (test/diagnostic helper).
+pub fn ldl_reconstruct(f: &Ldl) -> Matrix {
+    let n = f.l.rows();
+    let mut ld = f.l.clone();
+    super::blas::scale_cols(&mut ld, &f.d);
+    let mut out = Matrix::zeros(n, n);
+    super::gemm::gemm(super::gemm::Trans::No, super::gemm::Trans::Yes, 1.0, &ld, &f.l, 0.0, &mut out);
+    out
+}
+
+/// Outcome of [`modified_cholesky`].
+#[derive(Debug, Clone)]
+pub struct ModChol {
+    /// Cholesky factor of `A + E`.
+    pub l: Matrix,
+    /// Frobenius norm of the perturbation `E` that was applied
+    /// (0 when `A` was already positive definite).
+    pub perturbation: f64,
+}
+
+/// Modified Cholesky (paper Alg 8, after Cheng–Higham):
+///
+/// 1. try plain Cholesky — if it succeeds, `E = 0`;
+/// 2. otherwise factor `A = L D Lᵀ`, clamp `D + F ⪰ δ‖A‖·I`, rebuild
+///    `Ã = L (D+F) Lᵀ` and Cholesky-factor it.
+///
+/// `delta` is the relative floor for the modified eigenvalue-surrogates
+/// (e.g. the compression threshold ε, per §5.1).
+pub fn modified_cholesky(a: &Matrix, delta: f64) -> Result<ModChol, NotSpd> {
+    let mut l = a.clone();
+    if potrf(&mut l, 64).is_ok() {
+        return Ok(ModChol { l, perturbation: 0.0 });
+    }
+    let scale = a.norm_max().max(f64::MIN_POSITIVE);
+    let floor = delta * scale;
+    let f = ldl(a).map_err(|e| NotSpd { index: e.index, pivot: 0.0 })?;
+    let mut fd = f.clone();
+    let mut fro2 = 0.0;
+    for dj in fd.d.iter_mut() {
+        let modified = if *dj < floor { floor.max(dj.abs()) } else { *dj };
+        let delta_d = modified - *dj;
+        fro2 += delta_d * delta_d;
+        *dj = modified;
+    }
+    let mut atilde = ldl_reconstruct(&fd);
+    atilde.symmetrize();
+    potrf(&mut atilde, 64)?;
+    Ok(ModChol { l: atilde, perturbation: fro2.sqrt() })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::gemm::{matmul_nt, matmul};
+    use crate::linalg::rng::Rng;
+
+    fn random_symmetric(n: usize, seed: u64) -> Matrix {
+        let mut rng = Rng::new(seed);
+        let mut a = rng.normal_matrix(n, n);
+        a.symmetrize();
+        a
+    }
+
+    #[test]
+    fn ldl_reconstructs_indefinite() {
+        let a = random_symmetric(12, 1);
+        let f = ldl(&a).unwrap();
+        let rel = ldl_reconstruct(&f).sub(&a).norm_fro() / a.norm_fro();
+        assert!(rel < 1e-10, "rel={rel}");
+        // indefinite: expect mixed signs in d for a random symmetric matrix
+        assert!(f.d.iter().any(|&x| x < 0.0) && f.d.iter().any(|&x| x > 0.0));
+    }
+
+    #[test]
+    fn ldl_unit_diagonal() {
+        let a = random_symmetric(6, 2);
+        let f = ldl(&a).unwrap();
+        for i in 0..6 {
+            assert_eq!(f.l[(i, i)], 1.0);
+            for j in i + 1..6 {
+                assert_eq!(f.l[(i, j)], 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn ldl_matches_cholesky_on_spd() {
+        let mut rng = Rng::new(3);
+        let g = rng.normal_matrix(10, 10);
+        let mut a = matmul_nt(&g, &g);
+        for i in 0..10 {
+            a[(i, i)] += 10.0;
+        }
+        let f = ldl(&a).unwrap();
+        assert!(f.d.iter().all(|&x| x > 0.0));
+        // L * sqrt(D) should equal the Cholesky factor.
+        let mut lsd = f.l.clone();
+        let sqrt_d: Vec<f64> = f.d.iter().map(|x| x.sqrt()).collect();
+        crate::linalg::blas::scale_cols(&mut lsd, &sqrt_d);
+        let mut lc = a.clone();
+        crate::linalg::chol::potrf(&mut lc, 4).unwrap();
+        assert!(lsd.sub(&lc).norm_max() < 1e-10);
+    }
+
+    #[test]
+    fn modchol_identity_on_spd() {
+        let mut rng = Rng::new(4);
+        let g = rng.normal_matrix(8, 8);
+        let mut a = matmul_nt(&g, &g);
+        for i in 0..8 {
+            a[(i, i)] += 8.0;
+        }
+        let m = modified_cholesky(&a, 1e-6).unwrap();
+        assert_eq!(m.perturbation, 0.0);
+        assert!(matmul_nt(&m.l, &m.l).sub(&a).norm_fro() / a.norm_fro() < 1e-12);
+    }
+
+    #[test]
+    fn modchol_fixes_indefinite() {
+        // SPD matrix pushed indefinite by a rank-1 subtraction — the shape
+        // of a compression-induced breakdown.
+        let mut rng = Rng::new(5);
+        let g = rng.normal_matrix(8, 8);
+        let mut a = matmul_nt(&g, &g);
+        for i in 0..8 {
+            a[(i, i)] += 0.1;
+        }
+        let u = rng.normal_matrix(8, 1);
+        let uut = matmul(&u, &u.transpose());
+        a.axpy(-2.0, &uut);
+        a.symmetrize();
+        assert!(crate::linalg::chol::potrf(&mut a.clone(), 4).is_err());
+        let m = modified_cholesky(&a, 1e-6).unwrap();
+        assert!(m.perturbation > 0.0);
+        // L Lᵀ must be close to A: the perturbation is bounded.
+        let diff = matmul_nt(&m.l, &m.l).sub(&a).norm_fro();
+        assert!(diff.is_finite());
+        // And the factor must be a valid Cholesky factor (finite, PD).
+        for i in 0..8 {
+            assert!(m.l[(i, i)] > 0.0);
+        }
+    }
+}

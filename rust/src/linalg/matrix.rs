@@ -1,0 +1,338 @@
+//! Column-major dense `f64` matrix — the storage type every tile and
+//! workspace buffer in the library is built on.
+//!
+//! Column-major is chosen to match the BLAS/LAPACK conventions the paper's
+//! MAGMA/MKL kernels use, so the blocked algorithms translate one-to-one.
+
+use std::fmt;
+
+/// Dense column-major `f64` matrix.
+#[derive(Clone, PartialEq)]
+pub struct Matrix {
+    rows: usize,
+    cols: usize,
+    /// `data[i + j * rows]` is entry `(i, j)`.
+    data: Vec<f64>,
+}
+
+impl Matrix {
+    /// All-zeros `rows × cols` matrix.
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Matrix { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    /// Identity matrix of order `n`.
+    pub fn identity(n: usize) -> Self {
+        let mut m = Self::zeros(n, n);
+        for i in 0..n {
+            m[(i, i)] = 1.0;
+        }
+        m
+    }
+
+    /// Build from a column-major data vector.
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f64>) -> Self {
+        assert_eq!(data.len(), rows * cols, "data length must be rows*cols");
+        Matrix { rows, cols, data }
+    }
+
+    /// Build from a closure over `(row, col)`.
+    pub fn from_fn(rows: usize, cols: usize, mut f: impl FnMut(usize, usize) -> f64) -> Self {
+        let mut data = Vec::with_capacity(rows * cols);
+        for j in 0..cols {
+            for i in 0..rows {
+                data.push(f(i, j));
+            }
+        }
+        Matrix { rows, cols, data }
+    }
+
+    /// Build from row-major data (convenience for literals in tests).
+    pub fn from_rows(rows: usize, cols: usize, row_major: &[f64]) -> Self {
+        assert_eq!(row_major.len(), rows * cols);
+        Self::from_fn(rows, cols, |i, j| row_major[i * cols + j])
+    }
+
+    #[inline(always)]
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    #[inline(always)]
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    /// `(rows, cols)`.
+    #[inline(always)]
+    pub fn shape(&self) -> (usize, usize) {
+        (self.rows, self.cols)
+    }
+
+    pub fn is_square(&self) -> bool {
+        self.rows == self.cols
+    }
+
+    /// Raw column-major storage.
+    #[inline(always)]
+    pub fn as_slice(&self) -> &[f64] {
+        &self.data
+    }
+
+    #[inline(always)]
+    pub fn as_mut_slice(&mut self) -> &mut [f64] {
+        &mut self.data
+    }
+
+    /// Column `j` as a contiguous slice.
+    #[inline(always)]
+    pub fn col(&self, j: usize) -> &[f64] {
+        &self.data[j * self.rows..(j + 1) * self.rows]
+    }
+
+    #[inline(always)]
+    pub fn col_mut(&mut self, j: usize) -> &mut [f64] {
+        &mut self.data[j * self.rows..(j + 1) * self.rows]
+    }
+
+    /// Transposed copy.
+    pub fn transpose(&self) -> Matrix {
+        let mut t = Matrix::zeros(self.cols, self.rows);
+        for j in 0..self.cols {
+            for i in 0..self.rows {
+                t[(j, i)] = self[(i, j)];
+            }
+        }
+        t
+    }
+
+    /// Copy of the `nr × nc` submatrix starting at `(r0, c0)`.
+    pub fn submatrix(&self, r0: usize, c0: usize, nr: usize, nc: usize) -> Matrix {
+        assert!(r0 + nr <= self.rows && c0 + nc <= self.cols);
+        let mut s = Matrix::zeros(nr, nc);
+        for j in 0..nc {
+            s.col_mut(j).copy_from_slice(&self.col(c0 + j)[r0..r0 + nr]);
+        }
+        s
+    }
+
+    /// Overwrite the submatrix at `(r0, c0)` with `src`.
+    pub fn set_submatrix(&mut self, r0: usize, c0: usize, src: &Matrix) {
+        assert!(r0 + src.rows <= self.rows && c0 + src.cols <= self.cols);
+        for j in 0..src.cols {
+            let dst_col = self.col_mut(c0 + j);
+            dst_col[r0..r0 + src.rows].copy_from_slice(src.col(j));
+        }
+    }
+
+    /// Horizontally concatenate columns of `other` onto `self`
+    /// (in-place append; rows must match). Used to grow the ARA basis `Q`.
+    pub fn append_cols(&mut self, other: &Matrix) {
+        if self.cols == 0 && self.rows == 0 {
+            *self = other.clone();
+            return;
+        }
+        assert_eq!(self.rows, other.rows, "append_cols: row mismatch");
+        self.data.extend_from_slice(&other.data);
+        self.cols += other.cols;
+    }
+
+    /// Keep only the first `k` columns (truncate the storage).
+    pub fn truncate_cols(&mut self, k: usize) {
+        assert!(k <= self.cols);
+        self.data.truncate(self.rows * k);
+        self.cols = k;
+    }
+
+    /// Frobenius norm.
+    pub fn norm_fro(&self) -> f64 {
+        self.data.iter().map(|x| x * x).sum::<f64>().sqrt()
+    }
+
+    /// Max-abs entry.
+    pub fn norm_max(&self) -> f64 {
+        self.data.iter().fold(0.0f64, |a, &x| a.max(x.abs()))
+    }
+
+    /// `self += alpha * other` (same shape).
+    pub fn axpy(&mut self, alpha: f64, other: &Matrix) {
+        assert_eq!(self.shape(), other.shape());
+        for (d, s) in self.data.iter_mut().zip(other.data.iter()) {
+            *d += alpha * s;
+        }
+    }
+
+    /// `alpha * self` (in place).
+    pub fn scale(&mut self, alpha: f64) {
+        for d in self.data.iter_mut() {
+            *d *= alpha;
+        }
+    }
+
+    /// `self - other` as a new matrix.
+    pub fn sub(&self, other: &Matrix) -> Matrix {
+        assert_eq!(self.shape(), other.shape());
+        let data = self.data.iter().zip(&other.data).map(|(a, b)| a - b).collect();
+        Matrix { rows: self.rows, cols: self.cols, data }
+    }
+
+    /// `self + other` as a new matrix.
+    pub fn add(&self, other: &Matrix) -> Matrix {
+        assert_eq!(self.shape(), other.shape());
+        let data = self.data.iter().zip(&other.data).map(|(a, b)| a + b).collect();
+        Matrix { rows: self.rows, cols: self.cols, data }
+    }
+
+    /// Symmetrize in place: `A := (A + Aᵀ)/2`. Guards drift in SPD tiles.
+    pub fn symmetrize(&mut self) {
+        assert!(self.is_square());
+        for j in 0..self.cols {
+            for i in 0..j {
+                let v = 0.5 * (self[(i, j)] + self[(j, i)]);
+                self[(i, j)] = v;
+                self[(j, i)] = v;
+            }
+        }
+    }
+
+    /// Matrix-vector product `y = A x`.
+    pub fn matvec(&self, x: &[f64]) -> Vec<f64> {
+        assert_eq!(x.len(), self.cols);
+        let mut y = vec![0.0; self.rows];
+        for j in 0..self.cols {
+            let xj = x[j];
+            if xj == 0.0 {
+                continue;
+            }
+            let col = self.col(j);
+            for i in 0..self.rows {
+                y[i] += col[i] * xj;
+            }
+        }
+        y
+    }
+
+    /// `y = Aᵀ x`.
+    pub fn matvec_t(&self, x: &[f64]) -> Vec<f64> {
+        assert_eq!(x.len(), self.rows);
+        let mut y = vec![0.0; self.cols];
+        for j in 0..self.cols {
+            y[j] = self.col(j).iter().zip(x).map(|(a, b)| a * b).sum();
+        }
+        y
+    }
+}
+
+impl std::ops::Index<(usize, usize)> for Matrix {
+    type Output = f64;
+    #[inline(always)]
+    fn index(&self, (i, j): (usize, usize)) -> &f64 {
+        debug_assert!(i < self.rows && j < self.cols);
+        &self.data[i + j * self.rows]
+    }
+}
+
+impl std::ops::IndexMut<(usize, usize)> for Matrix {
+    #[inline(always)]
+    fn index_mut(&mut self, (i, j): (usize, usize)) -> &mut f64 {
+        debug_assert!(i < self.rows && j < self.cols);
+        &mut self.data[i + j * self.rows]
+    }
+}
+
+impl fmt::Debug for Matrix {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        writeln!(f, "Matrix {}x{} [", self.rows, self.cols)?;
+        let rmax = self.rows.min(8);
+        let cmax = self.cols.min(8);
+        for i in 0..rmax {
+            write!(f, "  ")?;
+            for j in 0..cmax {
+                write!(f, "{:>11.4e} ", self[(i, j)])?;
+            }
+            writeln!(f, "{}", if cmax < self.cols { "..." } else { "" })?;
+        }
+        if rmax < self.rows {
+            writeln!(f, "  ...")?;
+        }
+        write!(f, "]")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn index_col_major() {
+        let m = Matrix::from_vec(2, 3, vec![1., 2., 3., 4., 5., 6.]);
+        assert_eq!(m[(0, 0)], 1.);
+        assert_eq!(m[(1, 0)], 2.);
+        assert_eq!(m[(0, 1)], 3.);
+        assert_eq!(m[(1, 2)], 6.);
+    }
+
+    #[test]
+    fn from_rows_matches_index() {
+        let m = Matrix::from_rows(2, 2, &[1., 2., 3., 4.]);
+        assert_eq!(m[(0, 1)], 2.);
+        assert_eq!(m[(1, 0)], 3.);
+    }
+
+    #[test]
+    fn transpose_roundtrip() {
+        let m = Matrix::from_fn(3, 5, |i, j| (i * 7 + j) as f64);
+        let t = m.transpose();
+        assert_eq!(t.shape(), (5, 3));
+        assert_eq!(t.transpose(), m);
+    }
+
+    #[test]
+    fn submatrix_and_set() {
+        let m = Matrix::from_fn(4, 4, |i, j| (i + 10 * j) as f64);
+        let s = m.submatrix(1, 2, 2, 2);
+        assert_eq!(s[(0, 0)], m[(1, 2)]);
+        assert_eq!(s[(1, 1)], m[(2, 3)]);
+        let mut z = Matrix::zeros(4, 4);
+        z.set_submatrix(1, 2, &s);
+        assert_eq!(z[(2, 3)], m[(2, 3)]);
+        assert_eq!(z[(0, 0)], 0.0);
+    }
+
+    #[test]
+    fn append_truncate_cols() {
+        let mut q = Matrix::zeros(0, 0);
+        q.append_cols(&Matrix::from_fn(3, 2, |i, j| (i + j) as f64));
+        assert_eq!(q.shape(), (3, 2));
+        q.append_cols(&Matrix::from_fn(3, 1, |_, _| 9.0));
+        assert_eq!(q.shape(), (3, 3));
+        assert_eq!(q[(2, 2)], 9.0);
+        q.truncate_cols(1);
+        assert_eq!(q.shape(), (3, 1));
+        assert_eq!(q[(0, 1.min(0))], 0.0);
+    }
+
+    #[test]
+    fn matvec_matches_manual() {
+        let m = Matrix::from_rows(2, 3, &[1., 2., 3., 4., 5., 6.]);
+        let y = m.matvec(&[1., 1., 1.]);
+        assert_eq!(y, vec![6., 15.]);
+        let yt = m.matvec_t(&[1., 1.]);
+        assert_eq!(yt, vec![5., 7., 9.]);
+    }
+
+    #[test]
+    fn norms() {
+        let m = Matrix::from_rows(2, 2, &[3., 0., 0., 4.]);
+        assert!((m.norm_fro() - 5.0).abs() < 1e-14);
+        assert_eq!(m.norm_max(), 4.0);
+    }
+
+    #[test]
+    fn symmetrize_makes_symmetric() {
+        let mut m = Matrix::from_rows(2, 2, &[1., 2., 4., 1.]);
+        m.symmetrize();
+        assert_eq!(m[(0, 1)], 3.0);
+        assert_eq!(m[(1, 0)], 3.0);
+    }
+}

@@ -1,0 +1,17 @@
+//! Dense linear-algebra substrate, built from scratch: the library never
+//! links BLAS/LAPACK — every kernel the TLR factorization needs lives here.
+
+pub mod blas;
+pub mod chol;
+pub mod gemm;
+pub mod ldl;
+pub mod matrix;
+pub mod norms;
+pub mod qr;
+pub mod rng;
+pub mod svd;
+
+pub use blas::{Side, Uplo};
+pub use gemm::Trans;
+pub use matrix::Matrix;
+pub use rng::Rng;

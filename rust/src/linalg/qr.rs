@@ -1,0 +1,402 @@
+//! Orthogonalization kernels for ARA: Cholesky QR, Householder QR
+//! (fallback), and the paper's `orthog(Q, Y)` — two passes of block
+//! Gram–Schmidt whose panel QR is Cholesky QR (§3.1).
+
+use super::chol::potrf_unblocked;
+use super::gemm::{gemm, matmul_tn, Trans};
+use super::matrix::Matrix;
+
+/// QR of a tall matrix `y` (m ≥ n) via Cholesky QR:
+/// `G = YᵀY`, `Rᵀ R = G`, `Q = Y R⁻¹`.
+///
+/// Returns `(q, r)` with `r` upper triangular, or `None` when the Gram
+/// matrix is numerically rank-deficient (caller falls back to Householder).
+pub fn chol_qr(y: &Matrix) -> Option<(Matrix, Matrix)> {
+    let g = matmul_tn(y, y);
+    let mut lt = g.clone();
+    if potrf_unblocked(&mut lt).is_err() {
+        return None;
+    }
+    // lt holds L with G = L Lᵀ, so R = Lᵀ.
+    let r = lt.transpose();
+    let mut q = y.clone();
+    // Q = Y R⁻¹  ⇔  Q Lᵀ = Y — right-solve with the lower factor transposed.
+    super::blas::trsm_lower(super::blas::Side::Right, Trans::Yes, &lt, &mut q);
+    Some((q, r))
+}
+
+/// Householder QR returning thin `(q, r)` (`q`: m×n with orthonormal
+/// columns, `r`: n×n upper triangular). Robust fallback path.
+pub fn householder_qr(a: &Matrix) -> (Matrix, Matrix) {
+    let (m, n) = a.shape();
+    assert!(m >= n, "householder_qr expects a tall matrix");
+    let mut r = a.clone();
+    // Householder vectors stored in-place below the diagonal; betas aside.
+    let mut betas = vec![0.0; n];
+    for k in 0..n {
+        // Build the reflector for column k.
+        let mut normx = 0.0;
+        for i in k..m {
+            normx += r[(i, k)] * r[(i, k)];
+        }
+        normx = normx.sqrt();
+        if normx == 0.0 {
+            betas[k] = 0.0;
+            continue;
+        }
+        let alpha = if r[(k, k)] >= 0.0 { -normx } else { normx };
+        let v0 = r[(k, k)] - alpha;
+        // Normalize so v[k] = 1.
+        let mut vnorm2 = v0 * v0;
+        for i in k + 1..m {
+            vnorm2 += r[(i, k)] * r[(i, k)];
+        }
+        if vnorm2 == 0.0 {
+            betas[k] = 0.0;
+            r[(k, k)] = alpha;
+            continue;
+        }
+        betas[k] = 2.0 * v0 * v0 / vnorm2;
+        for i in k + 1..m {
+            r[(i, k)] /= v0;
+        }
+        r[(k, k)] = alpha;
+        // Apply reflector to trailing columns: A := (I − β v vᵀ) A.
+        for j in k + 1..n {
+            let mut dot = r[(k, j)];
+            for i in k + 1..m {
+                dot += r[(i, k)] * r[(i, j)];
+            }
+            let s = betas[k] * dot;
+            r[(k, j)] -= s;
+            for i in k + 1..m {
+                let vik = r[(i, k)];
+                r[(i, j)] -= s * vik;
+            }
+        }
+    }
+    // Accumulate thin Q by applying reflectors to the first n columns of I.
+    let mut q = Matrix::zeros(m, n);
+    for j in 0..n {
+        q[(j, j)] = 1.0;
+    }
+    for k in (0..n).rev() {
+        if betas[k] == 0.0 {
+            continue;
+        }
+        for j in 0..n {
+            let mut dot = q[(k, j)];
+            for i in k + 1..m {
+                dot += r[(i, k)] * q[(i, j)];
+            }
+            let s = betas[k] * dot;
+            q[(k, j)] -= s;
+            for i in k + 1..m {
+                let vik = r[(i, k)];
+                q[(i, j)] -= s * vik;
+            }
+        }
+    }
+    // Extract the upper-triangular R (zero the reflector storage).
+    let mut rout = Matrix::zeros(n, n);
+    for j in 0..n {
+        for i in 0..=j.min(n - 1) {
+            rout[(i, j)] = r[(i, j)];
+        }
+    }
+    (q, rout)
+}
+
+/// Panel QR: Cholesky QR with Householder fallback on breakdown.
+/// (The paper uses mixed-precision CholQR; breakdown maps to our fallback.)
+pub fn panel_qr(y: &Matrix) -> (Matrix, Matrix) {
+    match chol_qr(y) {
+        Some(qr) => qr,
+        None => householder_qr(y),
+    }
+}
+
+/// Column-pivoted Householder QR (rank-revealing): `A P = Q R` with the
+/// diagonal of `R` non-increasing in magnitude. Returns `(q, r, perm)`
+/// where `perm[j]` is the original column placed at position `j`.
+///
+/// Used by ARA's factor trimming ([`crate::ara`]) to find the numerical
+/// rank at a threshold in `O(m n²)` — an order of magnitude cheaper than
+/// an SVD of the same factor (EXPERIMENTS.md §Perf).
+pub fn qrcp(a: &Matrix) -> (Matrix, Matrix, Vec<usize>) {
+    let (m, n) = a.shape();
+    assert!(m >= n, "qrcp expects a tall matrix");
+    let mut r = a.clone();
+    let mut perm: Vec<usize> = (0..n).collect();
+    let mut betas = vec![0.0; n];
+    // Running squared column norms of the trailing block.
+    let mut cnorm: Vec<f64> = (0..n)
+        .map(|j| r.col(j).iter().map(|x| x * x).sum())
+        .collect();
+    for k in 0..n {
+        // Pivot: largest remaining column norm.
+        let (piv, _) = cnorm[k..]
+            .iter()
+            .enumerate()
+            .fold((0usize, f64::MIN), |acc, (i, &v)| if v > acc.1 { (i, v) } else { acc });
+        let piv = k + piv;
+        if piv != k {
+            perm.swap(k, piv);
+            cnorm.swap(k, piv);
+            for i in 0..m {
+                let t = r[(i, k)];
+                r[(i, k)] = r[(i, piv)];
+                r[(i, piv)] = t;
+            }
+        }
+        // Householder reflector for column k (same scheme as
+        // `householder_qr`).
+        let mut normx = 0.0;
+        for i in k..m {
+            normx += r[(i, k)] * r[(i, k)];
+        }
+        let normx = normx.sqrt();
+        if normx == 0.0 {
+            betas[k] = 0.0;
+            continue;
+        }
+        let alpha = if r[(k, k)] >= 0.0 { -normx } else { normx };
+        let v0 = r[(k, k)] - alpha;
+        r[(k, k)] = alpha;
+        for i in k + 1..m {
+            r[(i, k)] /= v0;
+        }
+        betas[k] = -v0 / alpha;
+        // Apply to the trailing columns and downdate their norms.
+        for j in k + 1..n {
+            let mut dot = r[(k, j)];
+            for i in k + 1..m {
+                dot += r[(i, k)] * r[(i, j)];
+            }
+            dot *= betas[k];
+            r[(k, j)] -= dot;
+            for i in k + 1..m {
+                r[(i, j)] -= dot * r[(i, k)];
+            }
+            cnorm[j] = (cnorm[j] - r[(k, j)] * r[(k, j)]).max(0.0);
+        }
+    }
+    // Accumulate thin Q by applying reflectors to I (back to front).
+    let mut q = Matrix::zeros(m, n);
+    for j in 0..n {
+        q[(j, j)] = 1.0;
+    }
+    for k in (0..n).rev() {
+        if betas[k] == 0.0 {
+            continue;
+        }
+        for j in k..n {
+            let mut dot = q[(k, j)];
+            for i in k + 1..m {
+                dot += r[(i, k)] * q[(i, j)];
+            }
+            dot *= betas[k];
+            q[(k, j)] -= dot;
+            for i in k + 1..m {
+                q[(i, j)] -= dot * r[(i, k)];
+            }
+        }
+    }
+    // Zero the sub-diagonal reflector storage, leaving clean R.
+    for k in 0..n {
+        for i in k + 1..m.min(n) {
+            r[(i, k)] = 0.0;
+        }
+    }
+    let r = r.submatrix(0, 0, n, n);
+    (q, r, perm)
+}
+
+/// Result of [`orthog`]: the orthonormalized new block and the triangular
+/// factor whose column norms measure the *new mass* the block brought in —
+/// the quantity ARA's convergence test reads (paper `convergence(R)`).
+pub struct Orthog {
+    pub q_new: Matrix,
+    pub r: Matrix,
+}
+
+/// The paper's `orthog(Q, Y)`: make `Y` orthonormal and orthogonal to the
+/// existing basis `Q` using two passes of block Gram–Schmidt; each pass
+/// projects out `Q` then panel-QRs the remainder.
+///
+/// `q` may be empty (0 columns). Returns `r` from the *first* pass: its
+/// column norms are the norms of the sample columns after removing the
+/// already-captured subspace, which is the ARA error estimate.
+pub fn orthog(q: &Matrix, y: &Matrix) -> Orthog {
+    let mut w = y.clone();
+    let mut r_first: Option<Matrix> = None;
+    for pass in 0..2 {
+        if q.cols() > 0 {
+            // W := W − Q (Qᵀ W)
+            let proj = matmul_tn(q, &w);
+            gemm(Trans::No, Trans::No, -1.0, q, &proj, 1.0, &mut w);
+        }
+        let (qn, r) = panel_qr(&w);
+        w = qn;
+        if pass == 0 {
+            r_first = Some(r);
+        }
+    }
+    Orthog { q_new: w, r: r_first.unwrap() }
+}
+
+/// ARA convergence estimate from `orthog`'s `r`: the max 2-norm over the
+/// columns of `R` (norm of each residual sample vector).
+pub fn convergence_estimate(r: &Matrix) -> f64 {
+    let mut e: f64 = 0.0;
+    for j in 0..r.cols() {
+        let c: f64 = r.col(j).iter().map(|x| x * x).sum::<f64>().sqrt();
+        e = e.max(c);
+    }
+    e
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::gemm::matmul;
+    use crate::linalg::rng::Rng;
+
+    fn assert_orthonormal(q: &Matrix, tol: f64) {
+        let g = matmul_tn(q, q);
+        let i = Matrix::identity(q.cols());
+        let d = g.sub(&i).norm_max();
+        assert!(d < tol, "orthonormality defect {d}");
+    }
+
+    #[test]
+    fn qrcp_reconstructs_and_reveals_rank() {
+        let mut rng = Rng::new(42);
+        // Build a 20x8 matrix of true rank 5.
+        let a = matmul(&rng.normal_matrix(20, 5), &rng.normal_matrix(5, 8).transpose().transpose());
+        let (q, r, perm) = qrcp(&a);
+        assert_orthonormal(&q, 1e-10);
+        // Diagonal non-increasing in magnitude.
+        for j in 1..8 {
+            assert!(r[(j, j)].abs() <= r[(j - 1, j - 1)].abs() + 1e-12, "diag order at {j}");
+        }
+        // Rank revealed: |r_55..| tiny.
+        assert!(r[(5, 5)].abs() < 1e-10, "r55={}", r[(5, 5)]);
+        assert!(r[(4, 4)].abs() > 1e-6);
+        // Reconstruction: Q R == A P.
+        let qr = matmul(&q, &r);
+        for j in 0..8 {
+            for i in 0..20 {
+                let d = (qr[(i, j)] - a[(i, perm[j])]).abs();
+                assert!(d < 1e-10, "({i},{j}): {d}");
+            }
+        }
+        // perm is a permutation.
+        let mut sp = perm.clone();
+        sp.sort_unstable();
+        assert_eq!(sp, (0..8).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn qrcp_full_rank_dense() {
+        let mut rng = Rng::new(43);
+        let a = rng.normal_matrix(12, 12);
+        let (q, r, perm) = qrcp(&a);
+        assert_orthonormal(&q, 1e-10);
+        let qr = matmul(&q, &r);
+        for j in 0..12 {
+            for i in 0..12 {
+                assert!((qr[(i, j)] - a[(i, perm[j])]).abs() < 1e-10);
+            }
+        }
+    }
+
+    #[test]
+    fn qrcp_zero_matrix() {
+        let a = Matrix::zeros(10, 4);
+        let (_q, r, _perm) = qrcp(&a);
+        for j in 0..4 {
+            assert_eq!(r[(j, j)], 0.0);
+        }
+    }
+
+    #[test]
+    fn cholqr_wellconditioned() {
+        let mut rng = Rng::new(1);
+        let y = rng.normal_matrix(50, 8);
+        let (q, r) = chol_qr(&y).unwrap();
+        assert_orthonormal(&q, 1e-10);
+        assert!(matmul(&q, &r).sub(&y).norm_max() < 1e-10);
+    }
+
+    #[test]
+    fn cholqr_detects_rank_deficiency() {
+        let mut rng = Rng::new(2);
+        let mut y = rng.normal_matrix(20, 4);
+        let c0 = y.col(0).to_vec();
+        y.col_mut(3).copy_from_slice(&c0); // exact duplicate column
+        assert!(chol_qr(&y).is_none());
+    }
+
+    #[test]
+    fn householder_qr_reconstructs() {
+        let mut rng = Rng::new(3);
+        let a = rng.normal_matrix(30, 7);
+        let (q, r) = householder_qr(&a);
+        assert_orthonormal(&q, 1e-12);
+        assert!(matmul(&q, &r).sub(&a).norm_max() < 1e-11);
+        // R upper triangular
+        for j in 0..7 {
+            for i in j + 1..7 {
+                assert_eq!(r[(i, j)], 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn householder_qr_rank_deficient_ok() {
+        let mut rng = Rng::new(4);
+        let mut a = rng.normal_matrix(20, 5);
+        let c = a.col(1).to_vec();
+        a.col_mut(4).copy_from_slice(&c);
+        let (q, r) = householder_qr(&a);
+        assert!(matmul(&q, &r).sub(&a).norm_max() < 1e-11);
+    }
+
+    #[test]
+    fn orthog_empty_basis() {
+        let mut rng = Rng::new(5);
+        let y = rng.normal_matrix(40, 6);
+        let o = orthog(&Matrix::zeros(40, 0), &y);
+        assert_orthonormal(&o.q_new, 1e-12);
+        // R captures the full mass of Y.
+        let e = convergence_estimate(&o.r);
+        assert!(e > 1.0);
+    }
+
+    #[test]
+    fn orthog_against_existing_basis() {
+        let mut rng = Rng::new(6);
+        let y0 = rng.normal_matrix(40, 6);
+        let o0 = orthog(&Matrix::zeros(40, 0), &y0);
+        let q = o0.q_new;
+        let y1 = rng.normal_matrix(40, 4);
+        let o1 = orthog(&q, &y1);
+        assert_orthonormal(&o1.q_new, 1e-12);
+        // New block orthogonal to old basis.
+        let cross = matmul_tn(&q, &o1.q_new).norm_max();
+        assert!(cross < 1e-12, "cross={cross}");
+    }
+
+    #[test]
+    fn orthog_detects_contained_samples() {
+        // If Y lies in span(Q), the residual R must be ~0.
+        let mut rng = Rng::new(7);
+        let y0 = rng.normal_matrix(40, 8);
+        let q = orthog(&Matrix::zeros(40, 0), &y0).q_new;
+        let coeff = rng.normal_matrix(8, 3);
+        let y_in_span = matmul(&q, &coeff);
+        let o = orthog(&q, &y_in_span);
+        assert!(convergence_estimate(&o.r) < 1e-10);
+    }
+}

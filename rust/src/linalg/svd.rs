@@ -1,0 +1,192 @@
+//! Singular value decomposition via one-sided Jacobi — the "gold standard"
+//! compressor the paper compares ARA against (Fig 11b), and the truncation
+//! kernel used for SVD-based TLR construction.
+
+use super::gemm::matmul;
+use super::matrix::Matrix;
+use super::qr::householder_qr;
+
+/// Thin SVD `A = U diag(s) Vᵀ` with singular values sorted descending.
+#[derive(Debug, Clone)]
+pub struct Svd {
+    pub u: Matrix,
+    pub s: Vec<f64>,
+    pub v: Matrix,
+}
+
+/// One-sided Jacobi SVD of `a` (any shape). For m < n the transpose is
+/// factored and the roles of U/V swapped. Cost is O(mn²) per sweep; tiles
+/// here are small enough (≤ 2048) that a handful of sweeps converge.
+pub fn svd(a: &Matrix) -> Svd {
+    let (m, n) = a.shape();
+    if m < n {
+        let t = svd(&a.transpose());
+        return Svd { u: t.v, s: t.s, v: t.u };
+    }
+    // Pre-QR: Jacobi on the n×n R factor is much cheaper for tall matrices.
+    let (q0, r0) = householder_qr(a);
+    let mut u = r0; // n×n working matrix whose columns converge to U Σ
+    let n2 = u.cols();
+    let mut v = Matrix::identity(n2);
+    let eps = 1e-14;
+    let max_sweeps = 60;
+    for _ in 0..max_sweeps {
+        let mut off = 0.0f64;
+        for p in 0..n2 {
+            for q in p + 1..n2 {
+                // Gram entries for the (p,q) column pair.
+                let (mut app, mut aqq, mut apq) = (0.0, 0.0, 0.0);
+                for i in 0..u.rows() {
+                    let up = u[(i, p)];
+                    let uq = u[(i, q)];
+                    app += up * up;
+                    aqq += uq * uq;
+                    apq += up * uq;
+                }
+                let scale = (app * aqq).sqrt();
+                if scale <= f64::MIN_POSITIVE || apq.abs() <= eps * scale {
+                    continue;
+                }
+                off = off.max(apq.abs() / scale);
+                // Jacobi rotation zeroing the (p,q) Gram entry.
+                let tau = (aqq - app) / (2.0 * apq);
+                let t = tau.signum() / (tau.abs() + (1.0 + tau * tau).sqrt());
+                let c = 1.0 / (1.0 + t * t).sqrt();
+                let s = c * t;
+                for i in 0..u.rows() {
+                    let up = u[(i, p)];
+                    let uq = u[(i, q)];
+                    u[(i, p)] = c * up - s * uq;
+                    u[(i, q)] = s * up + c * uq;
+                }
+                for i in 0..n2 {
+                    let vp = v[(i, p)];
+                    let vq = v[(i, q)];
+                    v[(i, p)] = c * vp - s * vq;
+                    v[(i, q)] = s * vp + c * vq;
+                }
+            }
+        }
+        if off < eps {
+            break;
+        }
+    }
+    // Column norms are the singular values.
+    let mut order: Vec<usize> = (0..n2).collect();
+    let mut s: Vec<f64> = (0..n2)
+        .map(|j| u.col(j).iter().map(|x| x * x).sum::<f64>().sqrt())
+        .collect();
+    order.sort_by(|&a, &b| s[b].partial_cmp(&s[a]).unwrap());
+    let mut u_sorted = Matrix::zeros(u.rows(), n2);
+    let mut v_sorted = Matrix::zeros(n2, n2);
+    for (dst, &src) in order.iter().enumerate() {
+        let sv = s[src];
+        if sv > 0.0 {
+            let inv = 1.0 / sv;
+            for i in 0..u.rows() {
+                u_sorted[(i, dst)] = u[(i, src)] * inv;
+            }
+        }
+        for i in 0..n2 {
+            v_sorted[(i, dst)] = v[(i, src)];
+        }
+    }
+    s.sort_by(|a, b| b.partial_cmp(a).unwrap());
+    // Undo the pre-QR: U_full = Q0 * U_r.
+    let u_full = matmul(&q0, &u_sorted);
+    Svd { u: u_full, s, v: v_sorted }
+}
+
+impl Svd {
+    /// Smallest rank `k` with truncation error below `tol`
+    /// (absolute, in the 2-norm: `s[k] ≤ tol`).
+    pub fn rank_for_tol(&self, tol: f64) -> usize {
+        self.s.iter().take_while(|&&sv| sv > tol).count()
+    }
+
+    /// Truncate to rank `k`, returning `(U·diag(s_k), V_k)` — the
+    /// `U Vᵀ`-form low-rank factors used by TLR tiles.
+    pub fn truncate(&self, k: usize) -> (Matrix, Matrix) {
+        let k = k.min(self.s.len());
+        let mut u = self.u.submatrix(0, 0, self.u.rows(), k);
+        super::blas::scale_cols(&mut u, &self.s[..k]);
+        let v = self.v.submatrix(0, 0, self.v.rows(), k);
+        (u, v)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::gemm::{matmul_nt, matmul_tn};
+    use crate::linalg::rng::Rng;
+
+    fn reconstruct(f: &Svd, k: usize) -> Matrix {
+        let (u, v) = f.truncate(k);
+        matmul_nt(&u, &v)
+    }
+
+    #[test]
+    fn svd_reconstructs_random() {
+        let mut rng = Rng::new(1);
+        let a = rng.normal_matrix(20, 8);
+        let f = svd(&a);
+        let rel = reconstruct(&f, 8).sub(&a).norm_fro() / a.norm_fro();
+        assert!(rel < 1e-10, "rel={rel}");
+    }
+
+    #[test]
+    fn svd_wide_matrix() {
+        let mut rng = Rng::new(2);
+        let a = rng.normal_matrix(5, 17);
+        let f = svd(&a);
+        let rel = reconstruct(&f, 5).sub(&a).norm_fro() / a.norm_fro();
+        assert!(rel < 1e-10, "rel={rel}");
+    }
+
+    #[test]
+    fn singular_values_sorted_and_orthonormal_factors() {
+        let mut rng = Rng::new(3);
+        let a = rng.normal_matrix(30, 10);
+        let f = svd(&a);
+        for w in f.s.windows(2) {
+            assert!(w[0] >= w[1]);
+        }
+        let du = matmul_tn(&f.u, &f.u).sub(&Matrix::identity(10)).norm_max();
+        let dv = matmul_tn(&f.v, &f.v).sub(&Matrix::identity(10)).norm_max();
+        assert!(du < 1e-10 && dv < 1e-10, "du={du} dv={dv}");
+    }
+
+    #[test]
+    fn detects_exact_low_rank() {
+        let mut rng = Rng::new(4);
+        let u = rng.normal_matrix(25, 3);
+        let v = rng.normal_matrix(12, 3);
+        let a = matmul_nt(&u, &v);
+        let f = svd(&a);
+        assert_eq!(f.rank_for_tol(1e-8 * f.s[0]), 3);
+        let rel = reconstruct(&f, 3).sub(&a).norm_fro() / a.norm_fro();
+        assert!(rel < 1e-10);
+    }
+
+    #[test]
+    fn truncation_error_matches_tail() {
+        let mut rng = Rng::new(5);
+        let a = rng.normal_matrix(16, 16);
+        let f = svd(&a);
+        let k = 6;
+        let err = reconstruct(&f, k).sub(&a).norm_fro();
+        let tail: f64 = f.s[k..].iter().map(|x| x * x).sum::<f64>().sqrt();
+        assert!((err - tail).abs() < 1e-9 * f.s[0], "err={err} tail={tail}");
+    }
+
+    #[test]
+    fn known_singular_values() {
+        // diag(3, 2, 1) embedded in a rotation-free matrix.
+        let a = Matrix::from_rows(3, 3, &[3., 0., 0., 0., 2., 0., 0., 0., 1.]);
+        let f = svd(&a);
+        assert!((f.s[0] - 3.0).abs() < 1e-12);
+        assert!((f.s[1] - 2.0).abs() < 1e-12);
+        assert!((f.s[2] - 1.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,213 @@
+//! Phase timers and FLOP counters — the instrumentation behind the
+//! paper's Fig 8a/8b and Fig 10b (phase breakdown and achieved FLOP/s).
+//!
+//! Counters are global atomics so the batched kernels can record from any
+//! worker thread without synchronization overhead beyond a relaxed add.
+//! NOTE: concurrent phases double-count wall time (each worker adds its own
+//! elapsed time), which is exactly what we want: phase shares are shares of
+//! *work*, like CUDA-event accounting in the paper.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Instant;
+
+/// Phases of the TLR factorization, matching the paper's taxonomy:
+/// the GEMM-dominated phases (`Sample`, `Projection`) versus "misc"
+/// (diagonal factorization, orthogonalization, RNG, marshaling, reduction).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[repr(usize)]
+pub enum Phase {
+    /// ARA forward sampling (the 4-GEMM chains of Eq 2).
+    Sample = 0,
+    /// Projection `B = Aᵀ Q` (transpose sampling chains).
+    Projection = 1,
+    /// Block Gram-Schmidt + panel QR.
+    Orthog = 2,
+    /// Dense expansion of low-rank updates onto diagonal tiles.
+    DenseUpdate = 3,
+    /// Dense Cholesky/LDLᵀ of diagonal tiles.
+    DiagFactor = 4,
+    /// Batched triangular solves on the panel.
+    Trsm = 5,
+    /// Random number generation.
+    Randn = 6,
+    /// Buffer reduction.
+    Reduce = 7,
+    /// Pivot selection (pivoted variants).
+    Pivot = 8,
+    /// Everything else (marshaling, bookkeeping).
+    Misc = 9,
+}
+
+pub const N_PHASES: usize = 10;
+
+pub const PHASE_NAMES: [&str; N_PHASES] = [
+    "sample", "projection", "orthog", "dense-update", "diag-factor", "trsm", "randn", "reduce",
+    "pivot", "misc",
+];
+
+static NANOS: [AtomicU64; N_PHASES] = [const { AtomicU64::new(0) }; N_PHASES];
+static FLOPS: [AtomicU64; N_PHASES] = [const { AtomicU64::new(0) }; N_PHASES];
+
+/// Reset all counters (call before a profiled run).
+pub fn reset() {
+    for i in 0..N_PHASES {
+        NANOS[i].store(0, Ordering::Relaxed);
+        FLOPS[i].store(0, Ordering::Relaxed);
+    }
+}
+
+/// Record `flops` floating-point operations in `phase` (no timing).
+pub fn add_flops(phase: Phase, flops: u64) {
+    FLOPS[phase as usize].fetch_add(flops, Ordering::Relaxed);
+}
+
+/// RAII phase timer: records elapsed wall time (and optional flops) into
+/// the phase on drop.
+pub struct Timer {
+    phase: Phase,
+    start: Instant,
+    flops: u64,
+}
+
+impl Timer {
+    pub fn new(phase: Phase) -> Self {
+        Timer { phase, start: Instant::now(), flops: 0 }
+    }
+
+    pub fn with_flops(phase: Phase, flops: u64) -> Self {
+        Timer { phase, start: Instant::now(), flops }
+    }
+
+    pub fn add_flops(&mut self, flops: u64) {
+        self.flops += flops;
+    }
+}
+
+impl Drop for Timer {
+    fn drop(&mut self) {
+        let ns = self.start.elapsed().as_nanos() as u64;
+        NANOS[self.phase as usize].fetch_add(ns, Ordering::Relaxed);
+        if self.flops > 0 {
+            FLOPS[self.phase as usize].fetch_add(self.flops, Ordering::Relaxed);
+        }
+    }
+}
+
+/// Snapshot of the counters.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Report {
+    pub nanos: [u64; N_PHASES],
+    pub flops: [u64; N_PHASES],
+}
+
+pub fn snapshot() -> Report {
+    let mut r = Report::default();
+    for i in 0..N_PHASES {
+        r.nanos[i] = NANOS[i].load(Ordering::Relaxed);
+        r.flops[i] = FLOPS[i].load(Ordering::Relaxed);
+    }
+    r
+}
+
+impl Report {
+    /// Difference vs an earlier snapshot.
+    pub fn since(&self, earlier: &Report) -> Report {
+        let mut r = Report::default();
+        for i in 0..N_PHASES {
+            r.nanos[i] = self.nanos[i] - earlier.nanos[i];
+            r.flops[i] = self.flops[i] - earlier.flops[i];
+        }
+        r
+    }
+
+    pub fn total_nanos(&self) -> u64 {
+        self.nanos.iter().sum()
+    }
+
+    pub fn total_flops(&self) -> u64 {
+        self.flops.iter().sum()
+    }
+
+    /// Share of the work spent in the GEMM-shaped phases (sampling,
+    /// projection, dense updates, trsm) — the paper's "high-efficiency
+    /// kernels represent about 80–90% of the total" claim (Fig 8a).
+    pub fn gemm_share(&self) -> f64 {
+        let gemm: u64 = [Phase::Sample, Phase::Projection, Phase::DenseUpdate, Phase::Trsm]
+            .iter()
+            .map(|&p| self.nanos[p as usize])
+            .sum();
+        let total = self.total_nanos();
+        if total == 0 {
+            0.0
+        } else {
+            gemm as f64 / total as f64
+        }
+    }
+
+    /// Phase shares as fractions of total recorded time.
+    pub fn shares(&self) -> [f64; N_PHASES] {
+        let total = self.total_nanos().max(1) as f64;
+        let mut s = [0.0; N_PHASES];
+        for i in 0..N_PHASES {
+            s[i] = self.nanos[i] as f64 / total;
+        }
+        s
+    }
+
+    /// Pretty one-line-per-phase table.
+    pub fn table(&self) -> String {
+        let mut out = String::new();
+        let total = self.total_nanos().max(1) as f64;
+        for i in 0..N_PHASES {
+            if self.nanos[i] == 0 {
+                continue;
+            }
+            let ms = self.nanos[i] as f64 / 1e6;
+            let pct = 100.0 * self.nanos[i] as f64 / total;
+            let gf = if self.nanos[i] > 0 {
+                self.flops[i] as f64 / self.nanos[i] as f64
+            } else {
+                0.0
+            };
+            out.push_str(&format!(
+                "  {:<13} {:>10.1} ms  {:>5.1}%  {:>7.2} GFLOP/s\n",
+                PHASE_NAMES[i], ms, pct, gf
+            ));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn timer_records() {
+        let before = snapshot();
+        {
+            let _t = Timer::with_flops(Phase::Sample, 1000);
+            std::thread::sleep(std::time::Duration::from_millis(2));
+        }
+        let after = snapshot().since(&before);
+        assert!(after.nanos[Phase::Sample as usize] >= 1_000_000);
+        assert_eq!(after.flops[Phase::Sample as usize], 1000);
+    }
+
+    #[test]
+    fn shares_sum_to_one() {
+        let before = snapshot();
+        {
+            let _a = Timer::new(Phase::Orthog);
+            std::thread::sleep(std::time::Duration::from_millis(1));
+        }
+        {
+            let _b = Timer::new(Phase::Trsm);
+            std::thread::sleep(std::time::Duration::from_millis(1));
+        }
+        let r = snapshot().since(&before);
+        let sum: f64 = r.shares().iter().sum();
+        assert!((sum - 1.0).abs() < 1e-9);
+        assert!(r.gemm_share() > 0.0);
+    }
+}

@@ -1,0 +1,156 @@
+//! PJRT-backed left-looking sampler: the same matrix expression as
+//! [`crate::factor::sample::LeftSampler`], but with the Eq 2 / Eq 3
+//! product chains routed through the AOT artifacts instead of the native
+//! gemm path.
+//!
+//! Tiles whose rank exceeds every available artifact variant fall back to
+//! the native chain term-by-term (the paper's outlier tiles); the result
+//! is numerically identical either way, which `rust/tests/pjrt_roundtrip.rs`
+//! asserts.
+
+use super::engine::{PjrtEngine, TermRef};
+use crate::ara::sampler::Sampler;
+use crate::linalg::blas::scale_rows;
+use crate::linalg::matrix::Matrix;
+use crate::tlr::matrix::TlrMatrix;
+use crate::tlr::tile::Tile;
+
+/// Which execution engine the factorization samples through.
+#[derive(Clone, Copy, Default)]
+pub enum Backend<'e> {
+    /// Native rust batched-gemm path (default, fastest on CPU).
+    #[default]
+    Native,
+    /// Route the sampling chains through the PJRT artifacts.
+    Pjrt(&'e PjrtEngine),
+}
+
+impl std::fmt::Debug for Backend<'_> {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Backend::Native => write!(f, "Backend::Native"),
+            Backend::Pjrt(_) => write!(f, "Backend::Pjrt"),
+        }
+    }
+}
+
+/// Samples `Â(i,k) = A(i,k) − Σ_{j<k} L(i,j) [D] L(k,j)ᵀ` via PJRT.
+pub struct PjrtLeftSampler<'a> {
+    pub a: &'a TlrMatrix,
+    pub i: usize,
+    pub k: usize,
+    pub dblocks: Option<&'a [Vec<f64>]>,
+    pub engine: &'a PjrtEngine,
+}
+
+impl<'a> PjrtLeftSampler<'a> {
+    pub fn new(a: &'a TlrMatrix, i: usize, k: usize, engine: &'a PjrtEngine) -> Self {
+        assert!(i > k);
+        PjrtLeftSampler { a, i, k, dblocks: None, engine }
+    }
+
+    pub fn with_diag(
+        a: &'a TlrMatrix,
+        i: usize,
+        k: usize,
+        d: &'a [Vec<f64>],
+        engine: &'a PjrtEngine,
+    ) -> Self {
+        assert!(i > k);
+        PjrtLeftSampler { a, i, k, dblocks: Some(d), engine }
+    }
+
+    /// Shared body of `sample`/`sample_t`. For the transpose, the roles of
+    /// the `(i,·)` and `(k,·)` factors swap:
+    /// `(L(i,j) L(k,j)ᵀ)ᵀ = L(k,j) L(i,j)ᵀ`.
+    fn sample_impl(&self, omega: &Matrix, transpose: bool) -> Matrix {
+        let (i, k) = (self.i, self.k);
+        let op = if self.dblocks.is_some() { "sample_update_ldl" } else { "sample_update" };
+        let m_tile = self.a.tile_size(i).max(self.a.tile_size(k));
+        let kmax = self.engine.max_rank(op, m_tile, omega.cols());
+
+        // Original-tile contribution A(i,k) Ω (or its transpose).
+        let aik = self.a.tile(i, k).as_lowrank();
+        let mut y = if aik.rank() == 0 {
+            let rows = if transpose { aik.cols() } else { aik.rows() };
+            Matrix::zeros(rows, omega.cols())
+        } else if aik.rank() <= self.engine.max_rank("tile_apply", m_tile, omega.cols()) {
+            let pair = if transpose { (&aik.v, &aik.u) } else { (&aik.u, &aik.v) };
+            self.engine
+                .tile_apply(&[pair], &[omega])
+                .expect("pjrt tile_apply failed")
+                .pop()
+                .unwrap()
+        } else if transpose {
+            self.a.tile(i, k).apply_t(omega)
+        } else {
+            self.a.tile(i, k).apply(omega)
+        };
+
+        // Update terms, marshaled into one batched launch; outlier ranks
+        // fall back to the native chain.
+        let mut terms: Vec<TermRef> = Vec::new();
+        let mut native: Vec<usize> = Vec::new();
+        for j in 0..k {
+            let (lkj, lij) = (self.a.tile(k, j), self.a.tile(i, j));
+            let (lkj, lij) = match (lkj, lij) {
+                (Tile::LowRank(a), Tile::LowRank(b)) => (a, b),
+                _ => unreachable!("off-diagonal tiles are low-rank"),
+            };
+            if lkj.rank() == 0 || lij.rank() == 0 {
+                continue;
+            }
+            if lkj.rank() > kmax || lij.rank() > kmax {
+                native.push(j);
+                continue;
+            }
+            // Kernel chain: ui (viᵀ ([d] (vk (ukᵀ Ω)))). Forward wants
+            // L(i,j) L(k,j)ᵀ Ω ⇒ (uk,vk) = L(k,j), (ui,vi) = L(i,j);
+            // transpose swaps the two pairs.
+            let (first, second) = if transpose { (lij, lkj) } else { (lkj, lij) };
+            terms.push(TermRef {
+                uk: &first.u,
+                vk: &first.v,
+                ui: &second.u,
+                vi: &second.v,
+                d: self.dblocks.map(|d| d[j].as_slice()),
+            });
+        }
+        if !terms.is_empty() {
+            let omegas: Vec<&Matrix> = std::iter::repeat(omega).take(terms.len()).collect();
+            let outs = self.engine.sample_update(&terms, &omegas).expect("pjrt sample failed");
+            for upd in outs {
+                y.axpy(-1.0, &upd);
+            }
+        }
+        for j in native {
+            let (lkj, lij) = (self.a.tile(k, j), self.a.tile(i, j));
+            let (first, second) = if transpose { (lij, lkj) } else { (lkj, lij) };
+            let mut w = first.apply_t(omega);
+            if let Some(d) = self.dblocks {
+                scale_rows(&mut w, &d[j]);
+            }
+            let upd = second.apply(&w);
+            y.axpy(-1.0, &upd);
+        }
+        y
+    }
+}
+
+impl Sampler for PjrtLeftSampler<'_> {
+    fn rows(&self) -> usize {
+        self.a.tile_size(self.i)
+    }
+
+    fn cols(&self) -> usize {
+        self.a.tile_size(self.k)
+    }
+
+    fn sample(&self, omega: &Matrix) -> Matrix {
+        self.sample_impl(omega, false)
+    }
+
+    fn sample_t(&self, omega: &Matrix) -> Matrix {
+        self.sample_impl(omega, true)
+    }
+}

@@ -1,0 +1,379 @@
+//! PJRT execution engine: loads the AOT artifacts produced by
+//! `python/compile/aot.py` and runs the batched sampling chains on them.
+//!
+//! This is the seam that proves the three-layer composition: the L1
+//! Pallas kernels (interpret-lowered inside the L2 JAX graphs) arrive
+//! here as HLO text, get compiled **once** per variant on the PJRT CPU
+//! client, and are then invoked from the L3 factorization hot loop with
+//! zero Python involvement.
+//!
+//! ## Padding contract
+//!
+//! Every executable is shape-monomorphic at `(b, m, k, bs)`. A batch of
+//! tiles with ranks `k_t ≤ k` and tile sizes `m_t ≤ m` is zero-padded:
+//! zero factor columns/rows contribute nothing to the product chain
+//! `U₂(V₂ᵀ(V₁(U₁ᵀΩ)))`, so padding is *exact*, not approximate. Batches
+//! larger than `b` are split across launches.
+
+use super::manifest::{Manifest, ManifestError, Variant};
+use crate::linalg::matrix::Matrix;
+use crate::profile::{Phase, Timer};
+use std::collections::HashMap;
+use std::sync::Mutex;
+
+/// Runtime errors.
+#[derive(Debug)]
+pub enum RuntimeError {
+    Manifest(ManifestError),
+    Xla(String),
+    /// No artifact variant covers the requested shape.
+    NoVariant { op: String, m: usize, k: usize, bs: usize },
+}
+
+impl std::fmt::Display for RuntimeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            RuntimeError::Manifest(e) => write!(f, "{e}"),
+            RuntimeError::Xla(e) => write!(f, "xla error: {e}"),
+            RuntimeError::NoVariant { op, m, k, bs } => {
+                write!(f, "no artifact variant covers {op} m={m} k={k} bs={bs} (run `make artifacts`)")
+            }
+        }
+    }
+}
+
+impl std::error::Error for RuntimeError {}
+
+impl From<ManifestError> for RuntimeError {
+    fn from(e: ManifestError) -> Self {
+        RuntimeError::Manifest(e)
+    }
+}
+
+impl From<xla::Error> for RuntimeError {
+    fn from(e: xla::Error) -> Self {
+        RuntimeError::Xla(e.to_string())
+    }
+}
+
+/// One update term of the Eq 2 / Eq 3 chain, by reference into the TLR
+/// factors. The chain computed is `ui (viᵀ ([d] (vk (ukᵀ Ω))))`.
+pub struct TermRef<'a> {
+    pub uk: &'a Matrix,
+    pub vk: &'a Matrix,
+    pub ui: &'a Matrix,
+    pub vi: &'a Matrix,
+    /// `Some(d)`: the LDLᵀ 5-product chain with `D(j,j) = diag(d)`.
+    pub d: Option<&'a [f64]>,
+}
+
+struct Inner {
+    client: xla::PjRtClient,
+    cache: HashMap<String, xla::PjRtLoadedExecutable>,
+}
+
+/// The PJRT engine: a CPU PJRT client plus a compile-once executable
+/// cache keyed by variant name.
+///
+/// The raw `xla` wrapper types carry no `Send`/`Sync` impls because they
+/// hold opaque C pointers; the PJRT CPU client itself is thread-safe and
+/// every use here is additionally serialized behind one `Mutex`, so the
+/// unsafe impls below are sound.
+pub struct PjrtEngine {
+    manifest: Manifest,
+    inner: Mutex<Inner>,
+    /// Launch statistics (executions per op).
+    stats: Mutex<EngineStats>,
+}
+
+unsafe impl Send for PjrtEngine {}
+unsafe impl Sync for PjrtEngine {}
+
+/// Execution counters, used by the PJRT roundtrip tests and reports.
+#[derive(Debug, Clone, Default)]
+pub struct EngineStats {
+    pub launches: usize,
+    pub compiled: usize,
+    pub padded_elems: usize,
+    pub real_elems: usize,
+}
+
+impl PjrtEngine {
+    /// Create an engine over an artifact directory (compiles lazily).
+    pub fn new(artifacts_dir: impl AsRef<std::path::Path>) -> Result<Self, RuntimeError> {
+        let manifest = Manifest::load(artifacts_dir)?;
+        let client = xla::PjRtClient::cpu()?;
+        Ok(PjrtEngine {
+            manifest,
+            inner: Mutex::new(Inner { client, cache: HashMap::new() }),
+            stats: Mutex::new(EngineStats::default()),
+        })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn stats(&self) -> EngineStats {
+        self.stats.lock().unwrap().clone()
+    }
+
+    /// Largest rank any `sample_update` variant supports for tile size
+    /// `m` and block size `bs` (native fallback threshold).
+    pub fn max_rank(&self, op: &str, m: usize, bs: usize) -> usize {
+        self.manifest
+            .of_op(op)
+            .filter(|v| v.m >= m && v.bs >= bs)
+            .map(|v| v.k)
+            .max()
+            .unwrap_or(0)
+    }
+
+    /// Batched Eq 2 / Eq 3 chain: for each term `t` with its sampling
+    /// block `omegas[t]` (shape `m_k × bs_t`), returns
+    /// `ui (viᵀ ([d] (vk (ukᵀ Ω))))` of shape `m_i × bs_t`.
+    pub fn sample_update(
+        &self,
+        terms: &[TermRef],
+        omegas: &[&Matrix],
+    ) -> Result<Vec<Matrix>, RuntimeError> {
+        assert_eq!(terms.len(), omegas.len());
+        if terms.is_empty() {
+            return Ok(Vec::new());
+        }
+        let has_d = terms.iter().any(|t| t.d.is_some());
+        let op = if has_d { "sample_update_ldl" } else { "sample_update" };
+        // Required variant dims over the whole batch.
+        let need_m = terms
+            .iter()
+            .flat_map(|t| [t.uk.rows(), t.vk.rows(), t.ui.rows(), t.vi.rows()])
+            .max()
+            .unwrap();
+        let need_k = terms.iter().map(|t| t.uk.cols().max(t.ui.cols())).max().unwrap();
+        let need_bs = omegas.iter().map(|o| o.cols()).max().unwrap();
+        let v = self
+            .manifest
+            .pick(op, need_m, need_k, need_bs)
+            .ok_or(RuntimeError::NoVariant { op: op.into(), m: need_m, k: need_k, bs: need_bs })?
+            .clone();
+
+        let mut t = Timer::new(Phase::Sample);
+        let mut out = Vec::with_capacity(terms.len());
+        for (chunk_t, chunk_o) in terms.chunks(v.b).zip(omegas.chunks(v.b)) {
+            out.extend(self.launch_sample_update(&v, chunk_t, chunk_o, has_d)?);
+        }
+        for (term, om) in terms.iter().zip(omegas) {
+            let bs = om.cols();
+            t.add_flops(
+                2 * (term.uk.cols() * (term.uk.rows() + term.vk.rows()) * bs) as u64
+                    + 2 * (term.ui.cols() * (term.ui.rows() + term.vi.rows()) * bs) as u64,
+            );
+        }
+        Ok(out)
+    }
+
+    /// Batched low-rank tile application: `out[t] = U_t V_tᵀ Ω_t`.
+    pub fn tile_apply(
+        &self,
+        tiles: &[(&Matrix, &Matrix)],
+        omegas: &[&Matrix],
+    ) -> Result<Vec<Matrix>, RuntimeError> {
+        assert_eq!(tiles.len(), omegas.len());
+        if tiles.is_empty() {
+            return Ok(Vec::new());
+        }
+        let need_m = tiles.iter().flat_map(|(u, v)| [u.rows(), v.rows()]).max().unwrap();
+        let need_k = tiles.iter().map(|(u, _)| u.cols()).max().unwrap();
+        let need_bs = omegas.iter().map(|o| o.cols()).max().unwrap();
+        let v = self
+            .manifest
+            .pick("tile_apply", need_m, need_k, need_bs)
+            .ok_or(RuntimeError::NoVariant {
+                op: "tile_apply".into(),
+                m: need_m,
+                k: need_k,
+                bs: need_bs,
+            })?
+            .clone();
+
+        let mut t = Timer::new(Phase::Sample);
+        let mut out = Vec::with_capacity(tiles.len());
+        for (chunk_t, chunk_o) in tiles.chunks(v.b).zip(omegas.chunks(v.b)) {
+            out.extend(self.launch_tile_apply(&v, chunk_t, chunk_o)?);
+        }
+        for ((u, vm), om) in tiles.iter().zip(omegas) {
+            t.add_flops(2 * (u.cols() * (u.rows() + vm.rows()) * om.cols()) as u64);
+        }
+        Ok(out)
+    }
+
+    // ---- launches -------------------------------------------------------
+
+    fn launch_sample_update(
+        &self,
+        v: &Variant,
+        terms: &[TermRef],
+        omegas: &[&Matrix],
+        has_d: bool,
+    ) -> Result<Vec<Matrix>, RuntimeError> {
+        let (b, m, k, bs) = (v.b, v.m, v.k, v.bs);
+        let uk = pack_factors(terms.iter().map(|t| t.uk), b, m, k);
+        let vk = pack_factors(terms.iter().map(|t| t.vk), b, m, k);
+        let ui = pack_factors(terms.iter().map(|t| t.ui), b, m, k);
+        let vi = pack_factors(terms.iter().map(|t| t.vi), b, m, k);
+        let om = pack_factors(omegas.iter().copied(), b, m, bs);
+        let yacc = vec![0.0f64; b * m * bs];
+
+        let mut args: Vec<xla::Literal> = Vec::with_capacity(7);
+        args.push(lit3(&uk, b, m, k)?);
+        args.push(lit3(&vk, b, m, k)?);
+        args.push(lit3(&ui, b, m, k)?);
+        args.push(lit3(&vi, b, m, k)?);
+        if has_d {
+            let mut d = vec![0.0f64; b * m];
+            for (t_idx, term) in terms.iter().enumerate() {
+                let dv = term.d.expect("mixed d/no-d batches are not allowed");
+                d[t_idx * m..t_idx * m + dv.len()].copy_from_slice(dv);
+            }
+            args.push(lit2(&d, b, m)?);
+        }
+        args.push(lit3(&om, b, m, bs)?);
+        args.push(lit3(&yacc, b, m, bs)?);
+
+        let result = self.execute(v, &args)?;
+        self.bump(terms.len(), b);
+        Ok(unpack(
+            &result,
+            m,
+            bs,
+            terms.iter().map(|t| t.ui.rows()),
+            omegas.iter().map(|o| o.cols()),
+        ))
+    }
+
+    fn launch_tile_apply(
+        &self,
+        v: &Variant,
+        tiles: &[(&Matrix, &Matrix)],
+        omegas: &[&Matrix],
+    ) -> Result<Vec<Matrix>, RuntimeError> {
+        let (b, m, k, bs) = (v.b, v.m, v.k, v.bs);
+        let u = pack_factors(tiles.iter().map(|(u, _)| *u), b, m, k);
+        let vv = pack_factors(tiles.iter().map(|(_, v)| *v), b, m, k);
+        let om = pack_factors(omegas.iter().copied(), b, m, bs);
+        let yacc = vec![0.0f64; b * m * bs];
+        let args = [
+            lit3(&u, b, m, k)?,
+            lit3(&vv, b, m, k)?,
+            lit3(&om, b, m, bs)?,
+            lit3(&yacc, b, m, bs)?,
+        ];
+        let result = self.execute(v, &args)?;
+        self.bump(tiles.len(), b);
+        Ok(unpack(
+            &result,
+            m,
+            bs,
+            tiles.iter().map(|(u, _)| u.rows()),
+            omegas.iter().map(|o| o.cols()),
+        ))
+    }
+
+    /// Compile-once lookup + execution; returns the flat f64 output.
+    fn execute(&self, v: &Variant, args: &[xla::Literal]) -> Result<Vec<f64>, RuntimeError> {
+        let mut inner = self.inner.lock().unwrap();
+        if !inner.cache.contains_key(&v.name) {
+            let path = self.manifest.path(v);
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().expect("artifact path must be utf-8"),
+            )?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = inner.client.compile(&comp)?;
+            inner.cache.insert(v.name.clone(), exe);
+            self.stats.lock().unwrap().compiled += 1;
+        }
+        let exe = &inner.cache[&v.name];
+        let result = exe.execute::<xla::Literal>(args)?[0][0].to_literal_sync()?;
+        // aot.py lowers with return_tuple=True: unwrap the 1-tuple.
+        let out = result.to_tuple1()?;
+        Ok(out.to_vec::<f64>()?)
+    }
+
+    fn bump(&self, real: usize, padded: usize) {
+        let mut s = self.stats.lock().unwrap();
+        s.launches += 1;
+        s.real_elems += real;
+        s.padded_elems += padded - real;
+    }
+}
+
+/// Pack matrices into a row-major `(b, m, k)` buffer, zero-padded.
+/// XLA literals use descending (row-major) layout; our [`Matrix`] is
+/// column-major, so this transposes element order on the fly.
+fn pack_factors<'a>(
+    mats: impl Iterator<Item = &'a Matrix>,
+    b: usize,
+    m: usize,
+    k: usize,
+) -> Vec<f64> {
+    let mut out = vec![0.0f64; b * m * k];
+    for (t, mat) in mats.enumerate() {
+        assert!(mat.rows() <= m && mat.cols() <= k, "tile exceeds variant dims");
+        let base = t * m * k;
+        for c in 0..mat.cols() {
+            let col = mat.col(c);
+            for (r, &x) in col.iter().enumerate() {
+                out[base + r * k + c] = x;
+            }
+        }
+    }
+    out
+}
+
+/// Slice the row-major `(b, m, bs)` result back into per-tile matrices of
+/// the original (unpadded) shapes.
+fn unpack(
+    flat: &[f64],
+    m: usize,
+    bs: usize,
+    rows: impl Iterator<Item = usize>,
+    cols: impl Iterator<Item = usize>,
+) -> Vec<Matrix> {
+    rows.zip(cols)
+        .enumerate()
+        .map(|(t, (nr, nc))| {
+            let base = t * m * bs;
+            Matrix::from_fn(nr, nc, |r, c| flat[base + r * bs + c])
+        })
+        .collect()
+}
+
+fn lit3(data: &[f64], b: usize, m: usize, k: usize) -> Result<xla::Literal, RuntimeError> {
+    Ok(xla::Literal::vec1(data).reshape(&[b as i64, m as i64, k as i64])?)
+}
+
+fn lit2(data: &[f64], b: usize, m: usize) -> Result<xla::Literal, RuntimeError> {
+    Ok(xla::Literal::vec1(data).reshape(&[b as i64, m as i64])?)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::rng::Rng;
+
+    #[test]
+    fn pack_unpack_roundtrip() {
+        let mut rng = Rng::new(1);
+        let a = rng.normal_matrix(3, 2);
+        let b = rng.normal_matrix(4, 2);
+        let flat = pack_factors([&a, &b].into_iter(), 2, 4, 3);
+        assert_eq!(flat.len(), 2 * 4 * 3);
+        // a[(1,0)] lands at row-major (tile 0, r 1, c 0).
+        assert_eq!(flat[3], a[(1, 0)]);
+        // padding is zero
+        assert_eq!(flat[2], 0.0); // (t0, r0, c2) — a has only 2 cols
+        let out = unpack(&flat, 4, 3, [3usize, 4].into_iter(), [2usize, 2].into_iter());
+        assert!(out[0].sub(&a).norm_max() == 0.0);
+        assert!(out[1].sub(&b).norm_max() == 0.0);
+    }
+}

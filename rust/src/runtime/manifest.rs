@@ -1,0 +1,180 @@
+//! Artifact manifest: the contract between `python/compile/aot.py` and the
+//! rust runtime.
+//!
+//! `make artifacts` writes `artifacts/manifest.json` listing one entry per
+//! lowered HLO variant. Each variant is shape-monomorphic — the runtime
+//! pads a batch up to the variant's `(b, m, k, bs)` and relies on the
+//! zero-padding contract (zero factor columns contribute nothing to the
+//! sampling chain, so padding is exact; DESIGN.md §6).
+
+use super::json::{self, Json};
+use std::path::{Path, PathBuf};
+
+/// One AOT-lowered executable variant.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Variant {
+    pub name: String,
+    pub file: PathBuf,
+    pub op: String,
+    /// Batch capacity (tiles per launch).
+    pub b: usize,
+    /// Tile dimension.
+    pub m: usize,
+    /// Maximum factor rank.
+    pub k: usize,
+    /// Sample block size.
+    pub bs: usize,
+    /// Serial update terms for fused `panel_sample` variants (0 otherwise).
+    pub j: usize,
+}
+
+/// Manifest load error.
+#[derive(Debug)]
+pub enum ManifestError {
+    Io(std::io::Error),
+    Parse(String),
+}
+
+impl std::fmt::Display for ManifestError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ManifestError::Io(e) => write!(f, "manifest io error: {e}"),
+            ManifestError::Parse(m) => write!(f, "manifest parse error: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for ManifestError {}
+
+impl From<std::io::Error> for ManifestError {
+    fn from(e: std::io::Error) -> Self {
+        ManifestError::Io(e)
+    }
+}
+
+/// The set of available artifacts.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub variants: Vec<Variant>,
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Manifest, ManifestError> {
+        let dir = dir.as_ref().to_path_buf();
+        let text = std::fs::read_to_string(dir.join("manifest.json"))?;
+        let doc = json::parse(&text).map_err(|e| ManifestError::Parse(e.to_string()))?;
+        let arr = doc
+            .as_arr()
+            .ok_or_else(|| ManifestError::Parse("manifest root must be an array".into()))?;
+        let mut variants = Vec::with_capacity(arr.len());
+        for (idx, v) in arr.iter().enumerate() {
+            variants.push(parse_variant(v, idx)?);
+        }
+        Ok(Manifest { dir, variants })
+    }
+
+    /// Smallest variant of `op` that covers a batch needing at least
+    /// `m × k` factors and `bs` samples. "Smallest" = least padded launch
+    /// cost `b·m·k`.
+    pub fn pick(&self, op: &str, m: usize, k: usize, bs: usize) -> Option<&Variant> {
+        self.variants
+            .iter()
+            .filter(|v| v.op == op && v.m >= m && v.k >= k && v.bs >= bs)
+            .min_by_key(|v| v.b * v.m * v.k)
+    }
+
+    /// All variants of an op.
+    pub fn of_op(&self, op: &str) -> impl Iterator<Item = &Variant> {
+        let op = op.to_string();
+        self.variants.iter().filter(move |v| v.op == op)
+    }
+
+    /// Absolute path of a variant's HLO text.
+    pub fn path(&self, v: &Variant) -> PathBuf {
+        self.dir.join(&v.file)
+    }
+}
+
+fn parse_variant(v: &Json, idx: usize) -> Result<Variant, ManifestError> {
+    let field = |key: &str| {
+        v.get(key)
+            .ok_or_else(|| ManifestError::Parse(format!("variant {idx}: missing '{key}'")))
+    };
+    let num = |key: &str| -> Result<usize, ManifestError> {
+        field(key)?
+            .as_usize()
+            .ok_or_else(|| ManifestError::Parse(format!("variant {idx}: '{key}' not a number")))
+    };
+    let s = |key: &str| -> Result<String, ManifestError> {
+        Ok(field(key)?
+            .as_str()
+            .ok_or_else(|| ManifestError::Parse(format!("variant {idx}: '{key}' not a string")))?
+            .to_string())
+    };
+    Ok(Variant {
+        name: s("name")?,
+        file: PathBuf::from(s("file")?),
+        op: s("op")?,
+        b: num("b")?,
+        m: num("m")?,
+        k: num("k")?,
+        bs: num("bs")?,
+        j: v.get("j").and_then(Json::as_usize).unwrap_or(0),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_manifest() -> Manifest {
+        let doc = r#"[
+          {"name":"sample_update_b8_m64_k16_bs8","file":"a.hlo.txt","op":"sample_update","b":8,"m":64,"k":16,"bs":8},
+          {"name":"sample_update_b16_m128_k32_bs16","file":"b.hlo.txt","op":"sample_update","b":16,"m":128,"k":32,"bs":16},
+          {"name":"tile_apply_b8_m64_k16_bs8","file":"c.hlo.txt","op":"tile_apply","b":8,"m":64,"k":16,"bs":8},
+          {"name":"panel_sample_b4_m64_k16_bs8_j3","file":"d.hlo.txt","op":"panel_sample","b":4,"m":64,"k":16,"bs":8,"j":3}
+        ]"#;
+        let arr = json::parse(doc).unwrap();
+        let variants = arr
+            .as_arr()
+            .unwrap()
+            .iter()
+            .enumerate()
+            .map(|(i, v)| parse_variant(v, i).unwrap())
+            .collect();
+        Manifest { dir: PathBuf::from("/tmp"), variants }
+    }
+
+    #[test]
+    fn pick_smallest_covering() {
+        let m = sample_manifest();
+        let v = m.pick("sample_update", 64, 16, 8).unwrap();
+        assert_eq!(v.m, 64);
+        let v = m.pick("sample_update", 64, 20, 8).unwrap();
+        assert_eq!(v.k, 32, "k=20 needs the larger variant");
+        assert!(m.pick("sample_update", 256, 16, 8).is_none());
+    }
+
+    #[test]
+    fn panel_variant_has_j() {
+        let m = sample_manifest();
+        let v = m.of_op("panel_sample").next().unwrap();
+        assert_eq!(v.j, 3);
+    }
+
+    #[test]
+    fn loads_real_artifacts_if_present() {
+        // When `make artifacts` has run, the real manifest must parse.
+        let dir = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts");
+        if std::path::Path::new(dir).join("manifest.json").exists() {
+            let m = Manifest::load(dir).unwrap();
+            assert!(!m.variants.is_empty());
+            assert!(m.pick("sample_update", 64, 16, 8).is_some());
+            for v in &m.variants {
+                assert!(m.path(v).exists(), "missing artifact file {:?}", v.file);
+            }
+        }
+    }
+}

@@ -1,0 +1,28 @@
+//! AOT/PJRT runtime — the L3 side of the three-layer stack.
+//!
+//! `python/compile/aot.py` lowers the L2 JAX graphs (which call the L1
+//! Pallas kernels) to HLO **text** artifacts once, at build time
+//! (`make artifacts`). This module loads them, compiles each variant once
+//! on the PJRT CPU client ([`engine::PjrtEngine`]), and exposes the
+//! batched sampling chains to the factorization
+//! ([`backend::PjrtLeftSampler`]). Python never runs on the solve path.
+//!
+//! * [`json`] — dependency-free JSON parsing for the manifest;
+//! * [`manifest`] — artifact registry + variant selection;
+//! * [`engine`] — PJRT client, compile-once cache, padding contract;
+//! * [`backend`] — the `Sampler` impl that plugs into batched ARA.
+
+pub mod backend;
+pub mod engine;
+pub mod json;
+pub mod manifest;
+
+pub use backend::{Backend, PjrtLeftSampler};
+pub use engine::{EngineStats, PjrtEngine, RuntimeError, TermRef};
+pub use manifest::{Manifest, Variant};
+
+/// Default artifact directory, resolved relative to the crate root so
+/// tests and binaries work from any CWD.
+pub fn default_artifacts_dir() -> std::path::PathBuf {
+    std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}

@@ -1,0 +1,319 @@
+//! Operating on TLR matrices and factors (paper §4.4): symmetric matvec,
+//! triangular solves (Alg 7), full factor solves, preconditioned CG
+//! (§6.2), and the power-iteration verification `‖A − LLᵀ‖₂` the paper
+//! uses to validate every factorization.
+
+pub mod cg;
+
+pub use cg::{pcg, CgResult};
+
+use crate::batch::parallel_map;
+use crate::factor::{CholFactor, LdlFactor};
+use crate::linalg::blas::trsm_lower;
+use crate::linalg::matrix::Matrix;
+use crate::linalg::norms::SymOp;
+use crate::linalg::{Side, Trans};
+use crate::tlr::matrix::TlrMatrix;
+
+/// Symmetric TLR matvec `y = A x`: every block row accumulates its lower
+/// tiles forward and the mirrored upper contributions through transposes,
+/// parallelized across block rows into independent buffers (the paper's
+/// buffered product with a final reduction).
+pub fn tlr_matvec(a: &TlrMatrix, x: &[f64]) -> Vec<f64> {
+    assert_eq!(x.len(), a.n());
+    let nb = a.nb();
+    let blocks: Vec<Vec<f64>> = parallel_map(nb, |i| {
+        let (r0, ri) = (a.tile_start(i), a.tile_size(i));
+        let mut y = vec![0.0; ri];
+        // Lower tiles of block row i (including dense diagonal).
+        for j in 0..=i {
+            let xj = &x[a.tile_start(j)..a.tile_start(j) + a.tile_size(j)];
+            let xm = Matrix::from_vec(xj.len(), 1, xj.to_vec());
+            let contrib = a.tile(i, j).apply(&xm);
+            for (q, v) in y.iter_mut().enumerate() {
+                *v += contrib[(q, 0)];
+            }
+        }
+        // Upper contributions: A(i,j) = A(j,i)ᵀ for j > i.
+        for j in i + 1..nb {
+            let xj = &x[a.tile_start(j)..a.tile_start(j) + a.tile_size(j)];
+            let xm = Matrix::from_vec(xj.len(), 1, xj.to_vec());
+            let contrib = a.tile(j, i).apply_t(&xm);
+            for (q, v) in y.iter_mut().enumerate() {
+                *v += contrib[(q, 0)];
+            }
+        }
+        let _ = r0;
+        y
+    });
+    blocks.concat()
+}
+
+/// Lower-triangular TLR matvec `y = L x` (uses only stored tiles).
+pub fn tlr_matvec_lower(l: &TlrMatrix, x: &[f64]) -> Vec<f64> {
+    assert_eq!(x.len(), l.n());
+    let nb = l.nb();
+    let blocks: Vec<Vec<f64>> = parallel_map(nb, |i| {
+        let ri = l.tile_size(i);
+        let mut y = vec![0.0; ri];
+        for j in 0..=i {
+            let xj = &x[l.tile_start(j)..l.tile_start(j) + l.tile_size(j)];
+            let xm = Matrix::from_vec(xj.len(), 1, xj.to_vec());
+            let contrib = l.tile(i, j).apply(&xm);
+            for (q, v) in y.iter_mut().enumerate() {
+                *v += contrib[(q, 0)];
+            }
+        }
+        y
+    });
+    blocks.concat()
+}
+
+/// Transposed lower-triangular TLR matvec `y = Lᵀ x`.
+pub fn tlr_matvec_lower_t(l: &TlrMatrix, x: &[f64]) -> Vec<f64> {
+    assert_eq!(x.len(), l.n());
+    let nb = l.nb();
+    let blocks: Vec<Vec<f64>> = parallel_map(nb, |j| {
+        let rj = l.tile_size(j);
+        let mut y = vec![0.0; rj];
+        for i in j..nb {
+            let xi = &x[l.tile_start(i)..l.tile_start(i) + l.tile_size(i)];
+            let xm = Matrix::from_vec(xi.len(), 1, xi.to_vec());
+            let contrib = l.tile(i, j).apply_t(&xm);
+            for (q, v) in y.iter_mut().enumerate() {
+                *v += contrib[(q, 0)];
+            }
+        }
+        y
+    });
+    blocks.concat()
+}
+
+/// TLR forward triangular solve `L x = y` (paper Alg 7): dense solve on
+/// each diagonal tile followed by a parallel low-rank update of the
+/// remaining blocks.
+pub fn tlr_trsv_lower(l: &TlrMatrix, y: &[f64]) -> Vec<f64> {
+    assert_eq!(y.len(), l.n());
+    let nb = l.nb();
+    let mut x = y.to_vec();
+    for k in 0..nb {
+        let (k0, ks) = (l.tile_start(k), l.tile_size(k));
+        // Dense triangular solve on the diagonal tile.
+        let mut xk = Matrix::from_vec(ks, 1, x[k0..k0 + ks].to_vec());
+        trsm_lower(Side::Left, Trans::No, l.tile(k, k).as_dense(), &mut xk);
+        x[k0..k0 + ks].copy_from_slice(xk.as_slice());
+        // Parallel update of all blocks below: x_i -= L(i,k) x_k.
+        let updates: Vec<(usize, Vec<f64>)> = parallel_map(nb - k - 1, |idx| {
+            let i = k + 1 + idx;
+            let contrib = l.tile(i, k).apply(&xk);
+            (i, contrib.as_slice().to_vec())
+        });
+        for (i, upd) in updates {
+            let (i0, is) = (l.tile_start(i), l.tile_size(i));
+            for q in 0..is {
+                x[i0 + q] -= upd[q];
+            }
+        }
+    }
+    x
+}
+
+/// TLR backward triangular solve `Lᵀ x = y`.
+pub fn tlr_trsv_lower_t(l: &TlrMatrix, y: &[f64]) -> Vec<f64> {
+    assert_eq!(y.len(), l.n());
+    let nb = l.nb();
+    let mut x = y.to_vec();
+    for k in (0..nb).rev() {
+        let (k0, ks) = (l.tile_start(k), l.tile_size(k));
+        let mut xk = Matrix::from_vec(ks, 1, x[k0..k0 + ks].to_vec());
+        trsm_lower(Side::Left, Trans::Yes, l.tile(k, k).as_dense(), &mut xk);
+        x[k0..k0 + ks].copy_from_slice(xk.as_slice());
+        // x_j -= L(k,j)ᵀ x_k for j < k, in parallel.
+        let updates: Vec<(usize, Vec<f64>)> = parallel_map(k, |j| {
+            let contrib = l.tile(k, j).apply_t(&xk);
+            (j, contrib.as_slice().to_vec())
+        });
+        for (j, upd) in updates {
+            let (j0, js) = (l.tile_start(j), l.tile_size(j));
+            for q in 0..js {
+                x[j0 + q] -= upd[q];
+            }
+        }
+    }
+    x
+}
+
+/// Solve `A x = b` with a TLR Cholesky factor (`P A Pᵀ = L Lᵀ`).
+pub fn chol_solve(f: &CholFactor, b: &[f64]) -> Vec<f64> {
+    let perm = f.scalar_perm();
+    let pb: Vec<f64> = perm.iter().map(|&p| b[p]).collect();
+    let z = tlr_trsv_lower(&f.l, &pb);
+    let px = tlr_trsv_lower_t(&f.l, &z);
+    let mut x = vec![0.0; b.len()];
+    for (i, &p) in perm.iter().enumerate() {
+        x[p] = px[i];
+    }
+    x
+}
+
+/// Solve `A x = b` with a TLR LDLᵀ factor.
+pub fn ldl_solve(f: &LdlFactor, b: &[f64]) -> Vec<f64> {
+    let z = tlr_trsv_lower(&f.l, b);
+    let d = f.diag_flat();
+    let zd: Vec<f64> = z.iter().zip(&d).map(|(v, dd)| v / dd).collect();
+    tlr_trsv_lower_t(&f.l, &zd)
+}
+
+/// `A x` through the symmetric TLR representation, as a [`SymOp`].
+pub struct TlrOp<'a>(pub &'a TlrMatrix);
+
+impl SymOp for TlrOp<'_> {
+    fn dim(&self) -> usize {
+        self.0.n()
+    }
+    fn apply(&self, x: &[f64]) -> Vec<f64> {
+        tlr_matvec(self.0, x)
+    }
+}
+
+/// The residual operator `x ↦ A x − Pᵀ L Lᵀ P x` (symmetric), used to
+/// estimate the factorization error `‖A − PᵀLLᵀP‖₂` by power iteration —
+/// the paper's §6 verification.
+pub struct ResidualOp<'a> {
+    pub a: &'a TlrMatrix,
+    pub f: &'a CholFactor,
+    perm: Vec<usize>,
+}
+
+impl<'a> ResidualOp<'a> {
+    pub fn new(a: &'a TlrMatrix, f: &'a CholFactor) -> Self {
+        ResidualOp { a, f, perm: f.scalar_perm() }
+    }
+}
+
+impl SymOp for ResidualOp<'_> {
+    fn dim(&self) -> usize {
+        self.a.n()
+    }
+    fn apply(&self, x: &[f64]) -> Vec<f64> {
+        let ax = tlr_matvec(self.a, x);
+        // Pᵀ L Lᵀ P x
+        let px: Vec<f64> = self.perm.iter().map(|&p| x[p]).collect();
+        let ltpx = tlr_matvec_lower_t(&self.f.l, &px);
+        let llt = tlr_matvec_lower(&self.f.l, &ltpx);
+        let mut out = ax;
+        for (i, &p) in self.perm.iter().enumerate() {
+            out[p] -= llt[i];
+        }
+        out
+    }
+}
+
+/// Estimate `‖A − PᵀLLᵀP‖₂` by power iteration (paper §6 verification).
+pub fn factorization_error(a: &TlrMatrix, f: &CholFactor, iters: usize, seed: u64) -> f64 {
+    let op = ResidualOp::new(a, f);
+    crate::linalg::norms::norm2_sym(&op, iters, seed)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::factor::tests::tlr_covariance;
+    use crate::factor::{cholesky, ldlt, FactorOpts, Pivoting};
+    use crate::linalg::rng::Rng;
+
+    #[test]
+    fn matvec_matches_dense() {
+        let (tlr, dense) = tlr_covariance(256, 64, 2, 1e-9, 41);
+        let mut rng = Rng::new(1);
+        let x: Vec<f64> = (0..256).map(|_| rng.normal()).collect();
+        let y = tlr_matvec(&tlr, &x);
+        let yd = dense.matvec(&x);
+        let err: f64 =
+            y.iter().zip(&yd).map(|(a, b)| (a - b).abs()).fold(0.0, f64::max);
+        assert!(err < 1e-5, "err={err}");
+    }
+
+    #[test]
+    fn lower_matvec_and_trsv_roundtrip() {
+        let (tlr, _) = tlr_covariance(200, 50, 2, 1e-9, 42);
+        let f = cholesky(tlr, &FactorOpts { eps: 1e-9, bs: 8, ..Default::default() }).unwrap();
+        let mut rng = Rng::new(2);
+        let x: Vec<f64> = (0..200).map(|_| rng.normal()).collect();
+        // L (L^{-1} x) == x
+        let y = tlr_matvec_lower(&f.l, &x);
+        let back = tlr_trsv_lower(&f.l, &y);
+        let err: f64 =
+            back.iter().zip(&x).map(|(a, b)| (a - b).abs()).fold(0.0, f64::max);
+        assert!(err < 1e-9, "err={err}");
+        // Lᵀ roundtrip
+        let yt = tlr_matvec_lower_t(&f.l, &x);
+        let backt = tlr_trsv_lower_t(&f.l, &yt);
+        let errt: f64 =
+            backt.iter().zip(&x).map(|(a, b)| (a - b).abs()).fold(0.0, f64::max);
+        assert!(errt < 1e-9, "errt={errt}");
+    }
+
+    #[test]
+    fn chol_solve_accuracy() {
+        let (tlr, dense) = tlr_covariance(256, 64, 2, 1e-10, 43);
+        let f =
+            cholesky(tlr.clone(), &FactorOpts { eps: 1e-10, bs: 8, ..Default::default() }).unwrap();
+        let mut rng = Rng::new(3);
+        let x_true: Vec<f64> = (0..256).map(|_| rng.normal()).collect();
+        let b = dense.matvec(&x_true);
+        let x = chol_solve(&f, &b);
+        let err: f64 =
+            x.iter().zip(&x_true).map(|(a, b)| (a - b).abs()).fold(0.0, f64::max);
+        // covariance matrices are moderately conditioned; expect decent digits
+        assert!(err < 1e-3, "err={err}");
+    }
+
+    #[test]
+    fn chol_solve_with_pivoting() {
+        let (tlr, dense) = tlr_covariance(200, 50, 2, 1e-10, 44);
+        let f = cholesky(
+            tlr,
+            &FactorOpts { eps: 1e-10, bs: 8, pivot: Pivoting::Frobenius, ..Default::default() },
+        )
+        .unwrap();
+        let mut rng = Rng::new(4);
+        let x_true: Vec<f64> = (0..200).map(|_| rng.normal()).collect();
+        let b = dense.matvec(&x_true);
+        let x = chol_solve(&f, &b);
+        let err: f64 =
+            x.iter().zip(&x_true).map(|(a, b)| (a - b).abs()).fold(0.0, f64::max);
+        assert!(err < 1e-3, "err={err}");
+    }
+
+    #[test]
+    fn ldl_solve_accuracy() {
+        let (tlr, dense) = tlr_covariance(200, 50, 2, 1e-10, 45);
+        let f = ldlt(tlr, &FactorOpts { eps: 1e-10, bs: 8, ..Default::default() }).unwrap();
+        let mut rng = Rng::new(5);
+        let x_true: Vec<f64> = (0..200).map(|_| rng.normal()).collect();
+        let b = dense.matvec(&x_true);
+        let x = ldl_solve(&f, &b);
+        let err: f64 =
+            x.iter().zip(&x_true).map(|(a, b)| (a - b).abs()).fold(0.0, f64::max);
+        assert!(err < 1e-3, "err={err}");
+    }
+
+    #[test]
+    fn factorization_error_tracks_eps() {
+        let (tlr_loose, _) = tlr_covariance(256, 64, 2, 1e-3, 46);
+        let (tlr_tight, _) = tlr_covariance(256, 64, 2, 1e-9, 46);
+        let fl = cholesky(
+            tlr_loose.clone(),
+            &FactorOpts { eps: 1e-3, bs: 8, schur_comp: true, ..Default::default() },
+        )
+        .unwrap();
+        let ft =
+            cholesky(tlr_tight.clone(), &FactorOpts { eps: 1e-9, bs: 8, ..Default::default() })
+                .unwrap();
+        let el = factorization_error(&tlr_loose, &fl, 30, 1);
+        let et = factorization_error(&tlr_tight, &ft, 30, 1);
+        assert!(et < el, "loose={el} tight={et}");
+        assert!(et < 1e-6, "tight error {et}");
+    }
+}

@@ -1,0 +1,147 @@
+//! TLR construction: compress each off-diagonal tile of an implicit
+//! symmetric generator to the threshold ε, in parallel, via ARA (the
+//! paper's default) or SVD (the oracle used in the Fig 11b comparison).
+
+use crate::apps::matgen::MatGen;
+use crate::ara::{ara, AraOpts, DenseSampler};
+use crate::batch::parallel_map;
+use crate::linalg::rng::Rng;
+use crate::tlr::matrix::TlrMatrix;
+use crate::tlr::tile::{LowRank, Tile};
+
+/// Per-tile compression method.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Compression {
+    /// Adaptive randomized approximation with the given block size.
+    Ara { bs: usize },
+    /// Truncated SVD (smallest possible ranks; slower).
+    Svd,
+}
+
+/// Options for [`build_tlr`].
+#[derive(Debug, Clone, Copy)]
+pub struct BuildOpts {
+    /// Absolute compression threshold ε.
+    pub eps: f64,
+    pub method: Compression,
+    /// RNG seed (ARA sampling streams are split per tile).
+    pub seed: u64,
+}
+
+impl Default for BuildOpts {
+    fn default() -> Self {
+        BuildOpts { eps: 1e-6, method: Compression::Ara { bs: 16 }, seed: 0x5EED }
+    }
+}
+
+/// Build a TLR approximation of `gen` with tile boundaries `offsets`.
+///
+/// Diagonal tiles are materialized dense; each strictly-lower tile is
+/// compressed independently (batched across the worker pool). The dense
+/// tile block is materialized once per tile — `O(m²)` transient memory per
+/// worker — and discarded after compression, so the full `N²` matrix never
+/// exists.
+pub fn build_tlr(gen: &dyn MatGen, offsets: &[usize], opts: &BuildOpts) -> TlrMatrix {
+    assert_eq!(*offsets.last().unwrap(), gen.n(), "offsets must cover the matrix");
+    let nb = offsets.len() - 1;
+    let root = Rng::new(opts.seed);
+    // Enumerate lower-triangle tiles (i, j), j <= i, in packed order.
+    let coords: Vec<(usize, usize)> = (0..nb).flat_map(|i| (0..=i).map(move |j| (i, j))).collect();
+    let tiles: Vec<Tile> = parallel_map(coords.len(), |idx| {
+        let (i, j) = coords[idx];
+        let (r0, c0) = (offsets[i], offsets[j]);
+        let (ri, rj) = (offsets[i + 1] - r0, offsets[j + 1] - c0);
+        let block = gen.block(r0, c0, ri, rj);
+        if i == j {
+            return Tile::Dense(block);
+        }
+        match opts.method {
+            Compression::Svd => {
+                Tile::LowRank(LowRank::compress_svd(&block, opts.eps, ri.min(rj)))
+            }
+            Compression::Ara { bs } => {
+                let mut rng = root.split(idx as u64);
+                let sampler = DenseSampler(&block);
+                let r = ara(&sampler, &AraOpts::new(bs, opts.eps), &mut rng);
+                Tile::LowRank(r.lr)
+            }
+        }
+    });
+    TlrMatrix::from_tiles(offsets.to_vec(), tiles)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::apps::covariance::ExpCovariance;
+    use crate::apps::geometry::grid;
+    use crate::apps::kdtree::kdtree_order;
+    use crate::apps::matgen::DenseGen;
+
+    fn covariance_setup(n: usize, m: usize) -> (ExpCovariance, Vec<usize>) {
+        let pts = grid(n, 2);
+        let c = kdtree_order(&pts, m);
+        let ordered = pts.permuted(&c.perm);
+        (ExpCovariance::paper_default(ordered), c.offsets)
+    }
+
+    #[test]
+    fn construction_error_bounded_ara_and_svd() {
+        let (cov, offsets) = covariance_setup(256, 64);
+        let dense = cov.dense();
+        for method in [Compression::Svd, Compression::Ara { bs: 8 }] {
+            let eps = 1e-4;
+            let tlr = build_tlr(&cov, &offsets, &BuildOpts { eps, method, seed: 1 });
+            let err = tlr.to_dense().sub(&dense).norm_fro();
+            // Each of the O(nb²) tiles is compressed to absolute eps.
+            let nb = tlr.nb() as f64;
+            assert!(err < eps * nb * nb, "method={method:?} err={err}");
+            // And it actually compresses.
+            assert!(tlr.memory().total_f64() < dense.rows() * dense.rows());
+        }
+    }
+
+    #[test]
+    fn ara_ranks_close_to_svd_ranks() {
+        // Paper Fig 11b: ARA detects ranks ~5% above the SVD optimum.
+        let (cov, offsets) = covariance_setup(400, 100);
+        let eps = 1e-6;
+        let t_svd = build_tlr(&cov, &offsets, &BuildOpts { eps, method: Compression::Svd, seed: 1 });
+        let t_ara =
+            build_tlr(&cov, &offsets, &BuildOpts { eps, method: Compression::Ara { bs: 8 }, seed: 1 });
+        let svd_total: usize = t_svd.offdiag_ranks().iter().sum();
+        let ara_total: usize = t_ara.offdiag_ranks().iter().sum();
+        assert!(ara_total >= svd_total, "ARA cannot beat the SVD optimum");
+        assert!(
+            (ara_total as f64) < 1.6 * (svd_total as f64).max(1.0),
+            "ARA ranks too loose: {ara_total} vs SVD {svd_total}"
+        );
+    }
+
+    #[test]
+    fn tighter_eps_higher_ranks() {
+        let (cov, offsets) = covariance_setup(256, 64);
+        let loose = build_tlr(
+            &cov,
+            &offsets,
+            &BuildOpts { eps: 1e-2, method: Compression::Svd, seed: 1 },
+        );
+        let tight = build_tlr(
+            &cov,
+            &offsets,
+            &BuildOpts { eps: 1e-8, method: Compression::Svd, seed: 1 },
+        );
+        let lsum: usize = loose.offdiag_ranks().iter().sum();
+        let tsum: usize = tight.offdiag_ranks().iter().sum();
+        assert!(tsum > lsum, "tight={tsum} loose={lsum}");
+    }
+
+    #[test]
+    fn identity_matrix_rank_zero_offdiag() {
+        let eye = crate::linalg::matrix::Matrix::identity(64);
+        let gen = DenseGen(eye);
+        let offsets = vec![0, 16, 32, 48, 64];
+        let tlr = build_tlr(&gen, &offsets, &BuildOpts::default());
+        assert!(tlr.offdiag_ranks().iter().all(|&r| r == 0));
+    }
+}

@@ -1,0 +1,369 @@
+//! The symmetric TLR matrix: dense diagonal tiles, adaptive-rank low-rank
+//! lower off-diagonal tiles, upper triangle implicit by symmetry.
+
+use crate::linalg::matrix::Matrix;
+use crate::tlr::tile::{LowRank, Tile};
+
+/// Symmetric tile low rank matrix (lower-triangle storage).
+#[derive(Debug, Clone)]
+pub struct TlrMatrix {
+    /// Tile boundaries: tile `i` covers rows/cols `offsets[i]..offsets[i+1]`.
+    offsets: Vec<usize>,
+    /// Lower-triangle packed tiles: `(i, j)` with `j ≤ i` at
+    /// `i(i+1)/2 + j`. Diagonal tiles are `Tile::Dense`, off-diagonal
+    /// `Tile::LowRank`.
+    tiles: Vec<Tile>,
+}
+
+impl TlrMatrix {
+    /// Assemble from parts. `tiles` must be lower-triangle packed.
+    pub fn from_tiles(offsets: Vec<usize>, tiles: Vec<Tile>) -> Self {
+        let nb = offsets.len() - 1;
+        assert_eq!(tiles.len(), nb * (nb + 1) / 2);
+        let m = TlrMatrix { offsets, tiles };
+        m.check_shapes();
+        m
+    }
+
+    /// Zero TLR matrix with the given tiling (dense zero diagonals,
+    /// rank-0 off-diagonals).
+    pub fn zeros(offsets: Vec<usize>) -> Self {
+        let nb = offsets.len() - 1;
+        let mut tiles = Vec::with_capacity(nb * (nb + 1) / 2);
+        for i in 0..nb {
+            for j in 0..=i {
+                let (ri, rj) = (offsets[i + 1] - offsets[i], offsets[j + 1] - offsets[j]);
+                tiles.push(if i == j {
+                    Tile::Dense(Matrix::zeros(ri, ri))
+                } else {
+                    Tile::LowRank(LowRank::zero(ri, rj))
+                });
+            }
+        }
+        TlrMatrix { offsets, tiles }
+    }
+
+    fn check_shapes(&self) {
+        for i in 0..self.nb() {
+            for j in 0..=i {
+                let t = self.tile(i, j);
+                assert_eq!(t.rows(), self.tile_size(i), "tile ({i},{j}) rows");
+                assert_eq!(t.cols(), self.tile_size(j), "tile ({i},{j}) cols");
+                if i == j {
+                    assert!(matches!(t, Tile::Dense(_)), "diagonal tile ({i},{i}) must be dense");
+                }
+            }
+        }
+    }
+
+    #[inline]
+    fn tri(&self, i: usize, j: usize) -> usize {
+        debug_assert!(j <= i && i < self.nb());
+        i * (i + 1) / 2 + j
+    }
+
+    /// Matrix order N.
+    pub fn n(&self) -> usize {
+        *self.offsets.last().unwrap()
+    }
+
+    /// Number of tile rows/columns.
+    pub fn nb(&self) -> usize {
+        self.offsets.len() - 1
+    }
+
+    pub fn offsets(&self) -> &[usize] {
+        &self.offsets
+    }
+
+    pub fn tile_start(&self, i: usize) -> usize {
+        self.offsets[i]
+    }
+
+    pub fn tile_size(&self, i: usize) -> usize {
+        self.offsets[i + 1] - self.offsets[i]
+    }
+
+    /// Tile `(i, j)` with `j ≤ i`.
+    pub fn tile(&self, i: usize, j: usize) -> &Tile {
+        assert!(j <= i, "TLR storage is lower-triangular; use transposes for (i<j)");
+        &self.tiles[self.tri(i, j)]
+    }
+
+    pub fn tile_mut(&mut self, i: usize, j: usize) -> &mut Tile {
+        assert!(j <= i);
+        let idx = self.tri(i, j);
+        &mut self.tiles[idx]
+    }
+
+    pub fn set_tile(&mut self, i: usize, j: usize, t: Tile) {
+        assert_eq!(t.rows(), self.tile_size(i));
+        assert_eq!(t.cols(), self.tile_size(j));
+        if i == j {
+            assert!(matches!(t, Tile::Dense(_)));
+        }
+        let idx = self.tri(i, j);
+        self.tiles[idx] = t;
+    }
+
+    /// Swap tile rows/columns `a` and `b` of the *lower symmetric*
+    /// structure (inter-tile symmetric pivoting, paper §5.2). Requires
+    /// equal tile sizes. Pointer swaps only — no tile data is copied,
+    /// matching the paper's "simply swap pointers around".
+    pub fn swap_symmetric(&mut self, a: usize, b: usize) {
+        if a == b {
+            return;
+        }
+        let (a, b) = (a.min(b), a.max(b));
+        assert_eq!(self.tile_size(a), self.tile_size(b), "inter-tile pivoting needs equal tiles");
+        let nb = self.nb();
+        // Diagonal tiles.
+        let (iaa, ibb) = (self.tri(a, a), self.tri(b, b));
+        self.tiles.swap(iaa, ibb);
+        // Tile (b, a) maps to its own transpose; low-rank transpose is a
+        // factor swap.
+        let iba = self.tri(b, a);
+        if let Tile::LowRank(lr) = &mut self.tiles[iba] {
+            std::mem::swap(&mut lr.u, &mut lr.v);
+        } else {
+            panic!("off-diagonal tile (b, a) must be low-rank");
+        }
+        // Columns j < a: swap rows a and b of block column j.
+        for j in 0..a {
+            let (x, y) = (self.tri(a, j), self.tri(b, j));
+            self.tiles.swap(x, y);
+        }
+        // Rows i > b: swap columns a and b of block row i.
+        for i in b + 1..nb {
+            let (x, y) = (self.tri(i, a), self.tri(i, b));
+            self.tiles.swap(x, y);
+        }
+        // Middle indices a < k < b: tile (k, a) ↔ tile (b, k)ᵀ.
+        for k in a + 1..b {
+            let (x, y) = (self.tri(k, a), self.tri(b, k));
+            self.tiles.swap(x, y);
+            for idx in [x, y] {
+                if let Tile::LowRank(lr) = &mut self.tiles[idx] {
+                    std::mem::swap(&mut lr.u, &mut lr.v);
+                } else {
+                    panic!("off-diagonal tiles must be low-rank");
+                }
+            }
+        }
+    }
+
+    /// Materialize the full symmetric dense matrix (tests/baselines only).
+    pub fn to_dense(&self) -> Matrix {
+        let n = self.n();
+        let mut a = Matrix::zeros(n, n);
+        for i in 0..self.nb() {
+            for j in 0..=i {
+                let d = self.tile(i, j).to_dense();
+                a.set_submatrix(self.offsets[i], self.offsets[j], &d);
+                if i != j {
+                    a.set_submatrix(self.offsets[j], self.offsets[i], &d.transpose());
+                }
+            }
+        }
+        a
+    }
+
+    /// Materialize only the lower triangle (for factor matrices `L`,
+    /// where the upper triangle is *not* implied by symmetry).
+    pub fn to_dense_lower(&self) -> Matrix {
+        let n = self.n();
+        let mut a = Matrix::zeros(n, n);
+        for i in 0..self.nb() {
+            for j in 0..=i {
+                let d = self.tile(i, j).to_dense();
+                a.set_submatrix(self.offsets[i], self.offsets[j], &d);
+            }
+        }
+        a
+    }
+
+    /// Ranks of all strictly-lower tiles as a flat list.
+    pub fn offdiag_ranks(&self) -> Vec<usize> {
+        let mut out = Vec::new();
+        for i in 0..self.nb() {
+            for j in 0..i {
+                out.push(self.tile(i, j).rank());
+            }
+        }
+        out
+    }
+
+    /// `nb × nb` rank heatmap (lower triangle filled; diagonal = tile
+    /// size; upper mirrored) — the paper's Figs 4 and 12.
+    pub fn rank_heatmap(&self) -> Vec<Vec<usize>> {
+        let nb = self.nb();
+        let mut h = vec![vec![0usize; nb]; nb];
+        for i in 0..nb {
+            h[i][i] = self.tile_size(i);
+            for j in 0..i {
+                let r = self.tile(i, j).rank();
+                h[i][j] = r;
+                h[j][i] = r;
+            }
+        }
+        h
+    }
+
+    /// Memory footprint report.
+    pub fn memory(&self) -> MemoryReport {
+        let mut dense = 0usize;
+        let mut lowrank = 0usize;
+        for i in 0..self.nb() {
+            for j in 0..=i {
+                let t = self.tile(i, j);
+                match t {
+                    Tile::Dense(_) => dense += t.memory_f64(),
+                    Tile::LowRank(_) => lowrank += t.memory_f64(),
+                }
+            }
+        }
+        let n = self.n();
+        MemoryReport { dense_f64: dense, lowrank_f64: 2 * lowrank, full_dense_f64: n * n }
+    }
+}
+
+/// Memory accounting in f64 counts (×8 for bytes). Off-diagonal storage is
+/// doubled to account for the implicit upper triangle, matching how the
+/// paper reports total matrix memory against the dense `N²`.
+#[derive(Debug, Clone, Copy)]
+pub struct MemoryReport {
+    pub dense_f64: usize,
+    pub lowrank_f64: usize,
+    pub full_dense_f64: usize,
+}
+
+impl MemoryReport {
+    pub fn total_f64(&self) -> usize {
+        self.dense_f64 + self.lowrank_f64
+    }
+
+    pub fn total_gb(&self) -> f64 {
+        self.total_f64() as f64 * 8.0 / 1e9
+    }
+
+    pub fn dense_gb(&self) -> f64 {
+        self.dense_f64 as f64 * 8.0 / 1e9
+    }
+
+    pub fn lowrank_gb(&self) -> f64 {
+        self.lowrank_f64 as f64 * 8.0 / 1e9
+    }
+
+    pub fn full_dense_gb(&self) -> f64 {
+        self.full_dense_f64 as f64 * 8.0 / 1e9
+    }
+
+    /// Compression ratio vs the dense representation.
+    pub fn compression(&self) -> f64 {
+        self.full_dense_f64 as f64 / self.total_f64() as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::rng::Rng;
+
+    /// Small random symmetric TLR matrix for structure tests.
+    pub fn random_tlr(sizes: &[usize], rank: usize, seed: u64) -> TlrMatrix {
+        let mut offsets = vec![0];
+        for &s in sizes {
+            offsets.push(offsets.last().unwrap() + s);
+        }
+        let nb = sizes.len();
+        let mut rng = Rng::new(seed);
+        let mut tiles = Vec::new();
+        for i in 0..nb {
+            for j in 0..=i {
+                if i == j {
+                    let mut d = rng.normal_matrix(sizes[i], sizes[i]);
+                    d.symmetrize();
+                    for q in 0..sizes[i] {
+                        d[(q, q)] += 10.0;
+                    }
+                    tiles.push(Tile::Dense(d));
+                } else {
+                    let k = rank.min(sizes[i]).min(sizes[j]);
+                    tiles.push(Tile::LowRank(LowRank {
+                        u: rng.normal_matrix(sizes[i], k),
+                        v: rng.normal_matrix(sizes[j], k),
+                    }));
+                }
+            }
+        }
+        TlrMatrix::from_tiles(offsets, tiles)
+    }
+
+    #[test]
+    fn dense_roundtrip_symmetric() {
+        let a = random_tlr(&[4, 4, 3], 2, 1);
+        let d = a.to_dense();
+        assert!(d.sub(&d.transpose()).norm_max() < 1e-13);
+        assert_eq!(d.rows(), 11);
+    }
+
+    #[test]
+    fn tile_indexing() {
+        let a = random_tlr(&[4, 4, 4], 2, 2);
+        assert_eq!(a.nb(), 3);
+        assert_eq!(a.n(), 12);
+        assert_eq!(a.tile(2, 0).rank(), 2);
+        assert_eq!(a.tile(1, 1).rank(), 4); // dense diagonal: full rank
+    }
+
+    #[test]
+    fn memory_report_counts() {
+        let a = random_tlr(&[4, 4], 2, 3);
+        let m = a.memory();
+        assert_eq!(m.dense_f64, 2 * 16);
+        // one off-diag tile of rank 2: 2*(4+4)*2 (doubled for symmetry)
+        assert_eq!(m.lowrank_f64, 2 * 16);
+        assert_eq!(m.full_dense_f64, 64);
+        assert!(m.compression() > 0.9);
+    }
+
+    #[test]
+    fn heatmap_symmetric_with_diag() {
+        let a = random_tlr(&[4, 4, 4], 3, 4);
+        let h = a.rank_heatmap();
+        assert_eq!(h[0][0], 4);
+        assert_eq!(h[2][1], 3);
+        assert_eq!(h[1][2], 3);
+    }
+
+    #[test]
+    fn swap_symmetric_matches_dense_permutation() {
+        let a = random_tlr(&[3, 3, 3, 3], 2, 5);
+        let d = a.to_dense();
+        for (x, y) in [(1, 2), (0, 3), (0, 1), (2, 3), (1, 3)] {
+            let mut b = a.clone();
+            b.swap_symmetric(x, y);
+            let db = b.to_dense();
+            // Build the permuted dense: swap block rows/cols x and y.
+            let mut perm: Vec<usize> = (0..12).collect();
+            for q in 0..3 {
+                perm.swap(x * 3 + q, y * 3 + q);
+            }
+            let expect = Matrix::from_fn(12, 12, |i, j| d[(perm[i], perm[j])]);
+            assert!(db.sub(&expect).norm_max() < 1e-13, "swap ({x},{y})");
+        }
+    }
+
+    #[test]
+    fn offdiag_ranks_flat() {
+        let a = random_tlr(&[2, 2, 2], 1, 6);
+        assert_eq!(a.offdiag_ranks(), vec![1, 1, 1]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn upper_access_panics() {
+        let a = random_tlr(&[2, 2], 1, 7);
+        let _ = a.tile(0, 1);
+    }
+}

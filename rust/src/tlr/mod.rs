@@ -1,0 +1,12 @@
+//! Tile Low Rank matrix format: tile storage, symmetric TLR matrices,
+//! construction from implicit generators, and memory/rank accounting.
+
+pub mod construct;
+pub mod matrix;
+pub mod mixed;
+pub mod tile;
+
+pub use construct::{build_tlr, BuildOpts, Compression};
+pub use matrix::{MemoryReport, TlrMatrix};
+pub use mixed::MixedTlr;
+pub use tile::{LowRank, Tile};

@@ -1,0 +1,221 @@
+//! A single tile of a TLR matrix: dense (diagonal tiles) or an adaptive
+//! rank low-rank factorization `U Vᵀ` (off-diagonal tiles).
+
+use crate::linalg::gemm::{gemm, matmul, matmul_tn, Trans};
+use crate::linalg::matrix::Matrix;
+use crate::linalg::svd;
+
+/// Low-rank factors `A ≈ U Vᵀ`, `u: rows×k`, `v: cols×k`.
+#[derive(Debug, Clone)]
+pub struct LowRank {
+    pub u: Matrix,
+    pub v: Matrix,
+}
+
+impl LowRank {
+    pub fn rank(&self) -> usize {
+        self.u.cols()
+    }
+
+    pub fn rows(&self) -> usize {
+        self.u.rows()
+    }
+
+    pub fn cols(&self) -> usize {
+        self.v.rows()
+    }
+
+    /// Zero tile of the given shape.
+    pub fn zero(rows: usize, cols: usize) -> Self {
+        LowRank { u: Matrix::zeros(rows, 0), v: Matrix::zeros(cols, 0) }
+    }
+
+    /// Materialize `U Vᵀ`.
+    pub fn to_dense(&self) -> Matrix {
+        let mut d = Matrix::zeros(self.rows(), self.cols());
+        gemm(Trans::No, Trans::Yes, 1.0, &self.u, &self.v, 0.0, &mut d);
+        d
+    }
+
+    /// `Y = (U Vᵀ) X` via the two-product chain (never forms the tile).
+    pub fn apply(&self, x: &Matrix) -> Matrix {
+        let t = matmul_tn(&self.v, x);
+        matmul(&self.u, &t)
+    }
+
+    /// `Y = (U Vᵀ)ᵀ X = V (Uᵀ X)`.
+    pub fn apply_t(&self, x: &Matrix) -> Matrix {
+        let t = matmul_tn(&self.u, x);
+        matmul(&self.v, &t)
+    }
+
+    /// The transpose tile `V Uᵀ` (cheap: swaps the factors).
+    pub fn transpose(&self) -> LowRank {
+        LowRank { u: self.v.clone(), v: self.u.clone() }
+    }
+
+    /// Number of f64 values stored.
+    pub fn memory_f64(&self) -> usize {
+        self.rank() * (self.rows() + self.cols())
+    }
+
+    /// Compress a dense block to absolute 2-norm tolerance `tol` via SVD.
+    pub fn compress_svd(a: &Matrix, tol: f64, max_rank: usize) -> LowRank {
+        let f = svd::svd(a);
+        let k = f.rank_for_tol(tol).min(max_rank);
+        let (u, v) = f.truncate(k);
+        LowRank { u, v }
+    }
+
+    /// Recompress `self` to tolerance `tol` (rank reduction). Used by the
+    /// Schur-compensation path to split an update into kept + dropped
+    /// parts.
+    pub fn recompress(&self, tol: f64) -> LowRank {
+        if self.rank() == 0 {
+            return self.clone();
+        }
+        Self::compress_svd(&self.to_dense(), tol, self.rank())
+    }
+}
+
+/// A TLR tile.
+#[derive(Debug, Clone)]
+pub enum Tile {
+    Dense(Matrix),
+    LowRank(LowRank),
+}
+
+impl Tile {
+    pub fn rows(&self) -> usize {
+        match self {
+            Tile::Dense(m) => m.rows(),
+            Tile::LowRank(lr) => lr.rows(),
+        }
+    }
+
+    pub fn cols(&self) -> usize {
+        match self {
+            Tile::Dense(m) => m.cols(),
+            Tile::LowRank(lr) => lr.cols(),
+        }
+    }
+
+    /// Rank: `min(rows, cols)` for dense tiles, `k` for low-rank tiles.
+    pub fn rank(&self) -> usize {
+        match self {
+            Tile::Dense(m) => m.rows().min(m.cols()),
+            Tile::LowRank(lr) => lr.rank(),
+        }
+    }
+
+    pub fn to_dense(&self) -> Matrix {
+        match self {
+            Tile::Dense(m) => m.clone(),
+            Tile::LowRank(lr) => lr.to_dense(),
+        }
+    }
+
+    /// `Y = T X`.
+    pub fn apply(&self, x: &Matrix) -> Matrix {
+        match self {
+            Tile::Dense(m) => matmul(m, x),
+            Tile::LowRank(lr) => lr.apply(x),
+        }
+    }
+
+    /// `Y = Tᵀ X`.
+    pub fn apply_t(&self, x: &Matrix) -> Matrix {
+        match self {
+            Tile::Dense(m) => matmul_tn(m, x),
+            Tile::LowRank(lr) => lr.apply_t(x),
+        }
+    }
+
+    pub fn memory_f64(&self) -> usize {
+        match self {
+            Tile::Dense(m) => m.rows() * m.cols(),
+            Tile::LowRank(lr) => lr.memory_f64(),
+        }
+    }
+
+    pub fn as_lowrank(&self) -> &LowRank {
+        match self {
+            Tile::LowRank(lr) => lr,
+            Tile::Dense(_) => panic!("expected low-rank tile"),
+        }
+    }
+
+    pub fn as_dense(&self) -> &Matrix {
+        match self {
+            Tile::Dense(m) => m,
+            Tile::LowRank(_) => panic!("expected dense tile"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::rng::Rng;
+
+    fn random_lowrank_dense(m: usize, n: usize, k: usize, seed: u64) -> (Matrix, LowRank) {
+        let mut rng = Rng::new(seed);
+        let u = rng.normal_matrix(m, k);
+        let v = rng.normal_matrix(n, k);
+        let lr = LowRank { u, v };
+        (lr.to_dense(), lr)
+    }
+
+    #[test]
+    fn apply_matches_dense() {
+        let (d, lr) = random_lowrank_dense(12, 9, 3, 1);
+        let mut rng = Rng::new(2);
+        let x = rng.normal_matrix(9, 4);
+        let y1 = lr.apply(&x);
+        let y2 = matmul(&d, &x);
+        assert!(y1.sub(&y2).norm_max() < 1e-12);
+        let xt = rng.normal_matrix(12, 4);
+        let z1 = lr.apply_t(&xt);
+        let z2 = matmul_tn(&d, &xt);
+        assert!(z1.sub(&z2).norm_max() < 1e-12);
+    }
+
+    #[test]
+    fn compress_svd_hits_tolerance() {
+        let (d, _) = random_lowrank_dense(20, 20, 4, 3);
+        let lr = LowRank::compress_svd(&d, 1e-10, 20);
+        assert_eq!(lr.rank(), 4);
+        assert!(lr.to_dense().sub(&d).norm_fro() < 1e-8);
+    }
+
+    #[test]
+    fn compress_svd_respects_max_rank() {
+        let mut rng = Rng::new(4);
+        let d = rng.normal_matrix(16, 16);
+        let lr = LowRank::compress_svd(&d, 0.0, 5);
+        assert_eq!(lr.rank(), 5);
+    }
+
+    #[test]
+    fn transpose_swaps() {
+        let (d, lr) = random_lowrank_dense(10, 6, 2, 5);
+        let t = lr.transpose();
+        assert!(t.to_dense().sub(&d.transpose()).norm_max() < 1e-13);
+    }
+
+    #[test]
+    fn memory_accounting() {
+        let (_, lr) = random_lowrank_dense(10, 6, 2, 6);
+        assert_eq!(lr.memory_f64(), 2 * 16);
+        let t = Tile::Dense(Matrix::zeros(8, 8));
+        assert_eq!(t.memory_f64(), 64);
+    }
+
+    #[test]
+    fn zero_tile() {
+        let z = LowRank::zero(5, 7);
+        assert_eq!(z.rank(), 0);
+        let x = Matrix::from_fn(7, 2, |_, _| 1.0);
+        assert_eq!(z.apply(&x).norm_max(), 0.0);
+    }
+}

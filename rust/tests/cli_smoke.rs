@@ -1,0 +1,109 @@
+//! CLI smoke tests: run the real `h2opus-tlr` binary end-to-end on small
+//! problems and assert on exit codes and key output lines.
+
+use std::process::Command;
+
+fn run(args: &[&str]) -> (bool, String) {
+    let out = Command::new(env!("CARGO_BIN_EXE_h2opus-tlr"))
+        .args(args)
+        .output()
+        .expect("binary must run");
+    let text = format!(
+        "{}{}",
+        String::from_utf8_lossy(&out.stdout),
+        String::from_utf8_lossy(&out.stderr)
+    );
+    (out.status.success(), text)
+}
+
+#[test]
+fn help_prints_usage() {
+    let (ok, text) = run(&["help"]);
+    assert!(ok);
+    assert!(text.contains("SUBCOMMANDS"));
+    assert!(text.contains("--backend"));
+}
+
+#[test]
+fn no_args_fails_with_usage() {
+    let (ok, text) = run(&[]);
+    assert!(!ok);
+    assert!(text.contains("USAGE"));
+}
+
+#[test]
+fn unknown_flag_is_rejected() {
+    let (ok, text) = run(&["factor", "--bogus", "1"]);
+    assert!(!ok);
+    assert!(text.contains("unknown option"));
+}
+
+#[test]
+fn factor_small_cov2d() {
+    let (ok, text) = run(&[
+        "factor", "--problem", "cov2d", "--n", "256", "--m", "64", "--eps", "1e-6", "--bs", "8",
+    ]);
+    assert!(ok, "{text}");
+    assert!(text.contains("memory"), "{text}");
+    assert!(text.contains("verify"), "{text}");
+    assert!(text.contains("GEMM-shaped"), "{text}");
+}
+
+#[test]
+fn solve_with_shift_runs_pcg() {
+    let (ok, text) = run(&[
+        "solve", "--problem", "fracdiff", "--n", "256", "--m", "64", "--eps", "1e-3", "--shift",
+        "-1", "--bs", "8",
+    ]);
+    assert!(ok, "{text}");
+    assert!(text.contains("pcg"), "{text}");
+    assert!(text.contains("converged=true"), "{text}");
+}
+
+#[test]
+fn ldlt_factor_runs() {
+    let (ok, text) = run(&[
+        "factor", "--problem", "cov2d", "--n", "256", "--m", "64", "--eps", "1e-6", "--ldlt",
+        "--bs", "8",
+    ]);
+    assert!(ok, "{text}");
+    assert!(text.contains("min diagonal entry"), "{text}");
+}
+
+#[test]
+fn info_prints_histogram() {
+    let (ok, text) =
+        run(&["info", "--problem", "cov3d-ball", "--n", "256", "--m", "64", "--bs", "8"]);
+    assert!(ok, "{text}");
+    assert!(text.contains("rank histogram"), "{text}");
+}
+
+#[test]
+fn verify_exercises_artifacts_when_present() {
+    if !std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("artifacts/manifest.json")
+        .exists()
+    {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let (ok, text) = run(&["verify"]);
+    assert!(ok, "{text}");
+    assert!(text.contains("all artifacts OK"), "{text}");
+}
+
+#[test]
+fn pjrt_backend_smoke() {
+    if !std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("artifacts/manifest.json")
+        .exists()
+    {
+        return;
+    }
+    let (ok, text) = run(&[
+        "factor", "--problem", "cov2d", "--n", "256", "--m", "64", "--eps", "1e-4", "--bs", "8",
+        "--backend", "pjrt",
+    ]);
+    assert!(ok, "{text}");
+    assert!(text.contains("verify"), "{text}");
+}

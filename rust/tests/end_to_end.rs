@@ -1,0 +1,146 @@
+//! End-to-end integration: generator → KD-tree ordering → TLR build →
+//! factorization → solve, on both evaluation problems of the paper
+//! (spatial-statistics covariance and 3D fractional diffusion).
+
+use h2opus_tlr::apps::covariance::ExpCovariance;
+use h2opus_tlr::apps::fracdiff::FracDiffusion;
+use h2opus_tlr::apps::geometry::{grid, random_ball};
+use h2opus_tlr::apps::kdtree::kdtree_order;
+use h2opus_tlr::apps::matgen::MatGen;
+use h2opus_tlr::factor::{cholesky, ldlt, FactorOpts, Pivoting};
+use h2opus_tlr::linalg::norms::l2;
+use h2opus_tlr::linalg::rng::Rng;
+use h2opus_tlr::solve::{chol_solve, factorization_error, ldl_solve, pcg, tlr_matvec, TlrOp};
+use h2opus_tlr::tlr::construct::{build_tlr, BuildOpts, Compression};
+
+#[test]
+fn covariance_2d_factor_solve_roundtrip() {
+    let n = 400;
+    let pts = grid(n, 2);
+    let c = kdtree_order(&pts, 64);
+    let cov = ExpCovariance::paper_default(pts.permuted(&c.perm));
+    let tlr = build_tlr(&cov, &c.offsets, &BuildOpts { eps: 1e-8, method: Compression::Ara { bs: 8 }, seed: 1 });
+    let dense = cov.dense();
+
+    let f = cholesky(tlr.clone(), &FactorOpts { eps: 1e-8, bs: 8, ..Default::default() }).unwrap();
+
+    // Solve A x = b through the factor and check against the dense matvec.
+    let mut rng = Rng::new(2);
+    let x_true: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+    let b = dense.matvec(&x_true);
+    let x = chol_solve(&f, &b);
+    let err = x.iter().zip(&x_true).map(|(a, b)| (a - b).abs()).fold(0.0, f64::max);
+    assert!(err < 1e-4, "solve error {err}");
+
+    // Power-iteration estimate of ‖A − L Lᵀ‖₂ (the paper's verification).
+    let e2 = factorization_error(&tlr, &f, 30, 3);
+    assert!(e2 < 1e-5, "‖A − LLᵀ‖₂ ≈ {e2}");
+}
+
+#[test]
+fn covariance_3d_ball_with_pivoting() {
+    let n = 384;
+    let pts = random_ball(n, 3, 7);
+    let c = kdtree_order(&pts, 64);
+    let cov = ExpCovariance::paper_default(pts.permuted(&c.perm));
+    let tlr = build_tlr(&cov, &c.offsets, &BuildOpts { eps: 1e-7, method: Compression::Ara { bs: 8 }, seed: 4 });
+    let dense = cov.dense();
+
+    let f = cholesky(
+        tlr,
+        &FactorOpts { eps: 1e-7, bs: 8, pivot: Pivoting::Frobenius, ..Default::default() },
+    )
+    .unwrap();
+
+    // P A Pᵀ = L Lᵀ: verify through the scalar permutation.
+    let perm = f.scalar_perm();
+    let ld = f.l.to_dense_lower();
+    let mut rng = Rng::new(5);
+    // Spot-check reconstruction entries (full O(n³) reconstruction is fine
+    // at this size, but entrywise keeps the test sharp about the perm).
+    for _ in 0..200 {
+        let i = rng.below(n);
+        let j = rng.below(n);
+        let mut lij = 0.0;
+        for q in 0..n {
+            lij += ld[(i, q)] * ld[(j, q)];
+        }
+        let aij = dense[(perm[i], perm[j])];
+        assert!((lij - aij).abs() < 1e-4, "({i},{j}): {lij} vs {aij}");
+    }
+}
+
+#[test]
+fn fracdiff_preconditioned_cg_converges() {
+    // The paper's §6.2 scenario: ill-conditioned fractional-diffusion
+    // system, preconditioned with the TLR Cholesky of A + εI.
+    let n = 512;
+    let pts = grid(n, 3);
+    let c = kdtree_order(&pts, 64);
+    let fd = FracDiffusion::new(pts.permuted(&c.perm), 0.5, 1.0);
+    let tlr = build_tlr(&fd, &c.offsets, &BuildOpts { eps: 1e-4, method: Compression::Ara { bs: 8 }, seed: 8 });
+
+    let eps = 1e-4;
+    let f = cholesky(
+        tlr.clone(),
+        &FactorOpts { eps, bs: 8, shift: eps, ..Default::default() },
+    )
+    .unwrap();
+
+    let mut rng = Rng::new(9);
+    let b: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+    let pre = pcg(&TlrOp(&tlr), &|r| chol_solve(&f, r), &b, 1e-8, 300);
+    assert!(pre.converged, "PCG stalled: {} iters, residual {}", pre.iters, pre.history.last().unwrap());
+
+    let plain = pcg(&TlrOp(&tlr), &|r| r.to_vec(), &b, 1e-8, 300);
+    assert!(
+        !plain.converged || pre.iters < plain.iters,
+        "preconditioner should help: pre={} plain={}",
+        pre.iters,
+        plain.iters
+    );
+
+    // Check the solution against the TLR operator itself.
+    let ax = tlr_matvec(&tlr, &pre.x);
+    let rnorm = l2(&ax.iter().zip(&b).map(|(a, b)| a - b).collect::<Vec<_>>()) / l2(&b);
+    assert!(rnorm < 1e-7, "residual {rnorm}");
+}
+
+#[test]
+fn ldlt_solve_roundtrip() {
+    let n = 256;
+    let pts = grid(n, 2);
+    let c = kdtree_order(&pts, 64);
+    let cov = ExpCovariance::paper_default(pts.permuted(&c.perm));
+    let tlr = build_tlr(&cov, &c.offsets, &BuildOpts { eps: 1e-9, method: Compression::Svd, seed: 11 });
+    let dense = cov.dense();
+    let f = ldlt(tlr, &FactorOpts { eps: 1e-9, bs: 8, ..Default::default() }).unwrap();
+    let mut rng = Rng::new(12);
+    let x_true: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+    let b = dense.matvec(&x_true);
+    let x = ldl_solve(&f, &b);
+    let err = x.iter().zip(&x_true).map(|(a, b)| (a - b).abs()).fold(0.0, f64::max);
+    assert!(err < 1e-5, "ldl solve error {err}");
+}
+
+#[test]
+fn schur_compensation_enables_loose_epsilon() {
+    // At very loose ε the plain factorization of an ill-conditioned matrix
+    // can break down; Schur compensation (§5.1.1) must keep it SPD.
+    let n = 512;
+    let pts = grid(n, 3);
+    let c = kdtree_order(&pts, 64);
+    let fd = FracDiffusion::new(pts.permuted(&c.perm), 0.5, 1.0);
+    let tlr = build_tlr(&fd, &c.offsets, &BuildOpts { eps: 1e-2, method: Compression::Ara { bs: 8 }, seed: 13 });
+    let comp = cholesky(
+        tlr.clone(),
+        &FactorOpts { eps: 1e-2, bs: 8, schur_comp: true, ..Default::default() },
+    );
+    assert!(comp.is_ok(), "compensated factorization must not break down");
+    // And it should still be a usable preconditioner.
+    let f = comp.unwrap();
+    let mut rng = Rng::new(14);
+    let b: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+    let r = pcg(&TlrOp(&tlr), &|r| chol_solve(&f, r), &b, 1e-6, 300);
+    assert!(r.converged, "compensated preconditioner failed: {} iters", r.iters);
+}

@@ -1,0 +1,186 @@
+//! Integration proof of the three-layer composition: the TLR Cholesky /
+//! LDLᵀ running with `Backend::Pjrt` — every ARA sampling chain executed
+//! by the AOT-compiled JAX/Pallas artifacts through the PJRT C API —
+//! must agree with the native rust gemm backend.
+//!
+//! Requires `make artifacts` (skipped with a message otherwise, so
+//! `cargo test` works on a fresh checkout before the python step).
+
+use h2opus_tlr::apps::covariance::ExpCovariance;
+use h2opus_tlr::apps::geometry::grid;
+use h2opus_tlr::apps::kdtree::kdtree_order;
+use h2opus_tlr::apps::matgen::MatGen;
+use h2opus_tlr::ara::sampler::Sampler;
+use h2opus_tlr::factor::{cholesky, cholesky_with, ldlt, ldlt_with, FactorOpts};
+use h2opus_tlr::linalg::gemm::{matmul, matmul_nt, matmul_tn};
+use h2opus_tlr::linalg::rng::Rng;
+use h2opus_tlr::runtime::{default_artifacts_dir, Backend, PjrtEngine, TermRef};
+use h2opus_tlr::tlr::construct::{build_tlr, BuildOpts, Compression};
+use h2opus_tlr::tlr::matrix::TlrMatrix;
+use h2opus_tlr::Matrix;
+
+fn engine() -> Option<PjrtEngine> {
+    let dir = default_artifacts_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping: no artifacts at {dir:?} (run `make artifacts`)");
+        return None;
+    }
+    Some(PjrtEngine::new(dir).expect("engine construction"))
+}
+
+fn covariance_tlr(n: usize, m: usize, eps: f64, seed: u64) -> (TlrMatrix, Matrix) {
+    let pts = grid(n, 2);
+    let c = kdtree_order(&pts, m);
+    let cov = ExpCovariance::paper_default(pts.permuted(&c.perm));
+    let dense = cov.dense();
+    let tlr = build_tlr(&cov, &c.offsets, &BuildOpts { eps, method: Compression::Svd, seed });
+    (tlr, dense)
+}
+
+#[test]
+fn engine_sample_update_matches_native_chain() {
+    let Some(e) = engine() else { return };
+    let mut rng = Rng::new(11);
+    // Mixed shapes within one batch: ranks 3/9/16, tile sizes 64/48.
+    let cases = [(64usize, 3usize), (64, 9), (48, 16), (64, 16), (32, 5)];
+    let mats: Vec<[Matrix; 4]> = cases
+        .iter()
+        .map(|&(m, k)| {
+            [
+                rng.normal_matrix(m, k),
+                rng.normal_matrix(m, k),
+                rng.normal_matrix(m, k),
+                rng.normal_matrix(m, k),
+            ]
+        })
+        .collect();
+    let omegas: Vec<Matrix> = cases.iter().map(|&(m, _)| rng.normal_matrix(m, 8)).collect();
+    let terms: Vec<TermRef> = mats
+        .iter()
+        .map(|[uk, vk, ui, vi]| TermRef { uk, vk, ui, vi, d: None })
+        .collect();
+    let omega_refs: Vec<&Matrix> = omegas.iter().collect();
+    let got = e.sample_update(&terms, &omega_refs).unwrap();
+    for (idx, ([uk, vk, ui, vi], om)) in mats.iter().zip(&omegas).enumerate() {
+        // ui (viᵀ (vk (ukᵀ Ω)))
+        let expect = matmul(ui, &matmul_tn(vi, &matmul(vk, &matmul_tn(uk, om))));
+        let d = got[idx].sub(&expect).norm_max();
+        assert!(d < 1e-10, "case {idx}: pjrt vs native diff {d}");
+    }
+    assert!(e.stats().launches > 0);
+}
+
+#[test]
+fn engine_ldl_chain_matches_native() {
+    let Some(e) = engine() else { return };
+    let mut rng = Rng::new(12);
+    let (m, k, bs) = (64usize, 10usize, 8usize);
+    let uk = rng.normal_matrix(m, k);
+    let vk = rng.normal_matrix(m, k);
+    let ui = rng.normal_matrix(m, k);
+    let vi = rng.normal_matrix(m, k);
+    let d: Vec<f64> = (0..m).map(|i| 0.5 + i as f64 / 7.0).collect();
+    let om = rng.normal_matrix(m, bs);
+    let got = e
+        .sample_update(&[TermRef { uk: &uk, vk: &vk, ui: &ui, vi: &vi, d: Some(&d) }], &[&om])
+        .unwrap();
+    // ui (viᵀ (D (vk (ukᵀ Ω))))
+    let mut t2 = matmul(&vk, &matmul_tn(&uk, &om));
+    for r in 0..m {
+        for c in 0..bs {
+            t2[(r, c)] *= d[r];
+        }
+    }
+    let expect = matmul(&ui, &matmul_tn(&vi, &t2));
+    assert!(got[0].sub(&expect).norm_max() < 1e-10);
+}
+
+#[test]
+fn engine_tile_apply_matches_native() {
+    let Some(e) = engine() else { return };
+    let mut rng = Rng::new(13);
+    let u = rng.normal_matrix(40, 7);
+    let v = rng.normal_matrix(64, 7);
+    let om = rng.normal_matrix(64, 6);
+    let got = e.tile_apply(&[(&u, &v)], &[&om]).unwrap();
+    let expect = matmul(&u, &matmul_tn(&v, &om));
+    assert!(got[0].sub(&expect).norm_max() < 1e-10);
+}
+
+#[test]
+fn pjrt_left_sampler_matches_native_sampler() {
+    let Some(e) = engine() else { return };
+    let (tlr, _) = covariance_tlr(256, 64, 1e-6, 21);
+    // Mid-factorization state is not needed for agreement: both samplers
+    // evaluate the same expression over the same tiles.
+    let native = h2opus_tlr::factor::sample::LeftSampler::new(&tlr, 3, 1);
+    let pjrt = h2opus_tlr::runtime::PjrtLeftSampler::new(&tlr, 3, 1, &e);
+    let mut rng = Rng::new(22);
+    let om = rng.normal_matrix(64, 8);
+    let d = native.sample(&om).sub(&pjrt.sample(&om)).norm_max();
+    assert!(d < 1e-10, "forward sample diff {d}");
+    let omt = rng.normal_matrix(64, 8);
+    let dt = native.sample_t(&omt).sub(&pjrt.sample_t(&omt)).norm_max();
+    assert!(dt < 1e-10, "transpose sample diff {dt}");
+}
+
+#[test]
+fn cholesky_pjrt_backend_agrees_with_native() {
+    let Some(e) = engine() else { return };
+    let (tlr, dense) = covariance_tlr(256, 64, 1e-6, 23);
+    let opts = FactorOpts { eps: 1e-6, bs: 8, ..Default::default() };
+    let fn_ = cholesky(tlr.clone(), &opts).unwrap();
+    let fp = cholesky_with(tlr, &opts, Backend::Pjrt(&e)).unwrap();
+    // Same RNG streams, numerically near-identical chains ⇒ the factors
+    // agree to well below the compression threshold.
+    let ln = fn_.l.to_dense_lower();
+    let lp = fp.l.to_dense_lower();
+    let diff = ln.sub(&lp).norm_fro() / ln.norm_fro();
+    assert!(diff < 1e-6, "backend divergence {diff}");
+    // And both reconstruct A.
+    let r = matmul_nt(&lp, &lp).sub(&dense).norm_fro() / dense.norm_fro();
+    assert!(r < 1e-3, "pjrt factor residual {r}");
+    // The artifacts were actually exercised.
+    let st = e.stats();
+    assert!(st.launches > 0, "pjrt path was never hit");
+    assert!(st.compiled >= 1);
+}
+
+#[test]
+fn ldlt_pjrt_backend_agrees_with_native() {
+    let Some(e) = engine() else { return };
+    let (tlr, _) = covariance_tlr(192, 48, 1e-6, 24);
+    let opts = FactorOpts { eps: 1e-6, bs: 8, ..Default::default() };
+    let fn_ = ldlt(tlr.clone(), &opts).unwrap();
+    let fp = ldlt_with(tlr, &opts, Backend::Pjrt(&e)).unwrap();
+    let ln = fn_.l.to_dense_lower();
+    let lp = fp.l.to_dense_lower();
+    let diff = ln.sub(&lp).norm_fro() / ln.norm_fro();
+    assert!(diff < 1e-6, "ldl backend divergence {diff}");
+    let dd: f64 = fn_
+        .diag_flat()
+        .iter()
+        .zip(fp.diag_flat())
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0, f64::max);
+    assert!(dd < 1e-8, "ldl diagonal divergence {dd}");
+}
+
+#[test]
+fn oversize_ranks_fall_back_to_native() {
+    let Some(e) = engine() else { return };
+    // Rank 40 exceeds every artifact variant (k ≤ 32): the sampler must
+    // silently take the native path and still be correct.
+    let (mut tlr, _) = covariance_tlr(256, 64, 1e-6, 25);
+    let mut rng = Rng::new(26);
+    let fat = h2opus_tlr::tlr::tile::LowRank {
+        u: rng.normal_matrix(64, 40),
+        v: rng.normal_matrix(64, 40),
+    };
+    tlr.set_tile(2, 0, h2opus_tlr::tlr::tile::Tile::LowRank(fat));
+    let native = h2opus_tlr::factor::sample::LeftSampler::new(&tlr, 2, 1);
+    let pjrt = h2opus_tlr::runtime::PjrtLeftSampler::new(&tlr, 2, 1, &e);
+    let om = rng.normal_matrix(64, 8);
+    let d = native.sample(&om).sub(&pjrt.sample(&om)).norm_max();
+    assert!(d < 1e-10, "fallback diff {d}");
+}
