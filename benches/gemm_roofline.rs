@@ -1,17 +1,28 @@
 //! Bench: non-uniform batched GEMM throughput — the roofline bracket of
-//! paper Fig 8b. Sweeps tile size, rank range and batch size for both the
-//! sampling shape `(m×k)(k×bs)` and the projection shape `(m×k)ᵀ(m×n)`.
+//! paper Fig 8b, measured two ways: the old `parallel_map`-over-`matmul`
+//! loop (fresh packing panels per call) against the op-stream executor
+//! (`batch::NativeBatch`: plan marshaled once, per-worker packing arenas
+//! reused across every op). Sweeps tile size, rank range and batch size
+//! for both the sampling shape `(m×k)(k×bs)` and the projection shape
+//! `(m×k)ᵀ(m×bs)`; ranks are drawn uniformly per tile (skewed batches).
+//!
+//! Acceptance bar (ISSUE 1): the batched executor must be no slower
+//! than the per-call loop on the skewed-rank workload. Record the
+//! numbers in EXPERIMENTS.md §Perf.
 //!
 //! Run: `cargo bench --bench gemm_roofline`
 
-use h2opus_tlr::experiments::batched_gemm_roofline;
+use h2opus_tlr::experiments::roofline_loop_vs_batch;
 
 fn main() {
-    println!("== bench gemm_roofline (paper Fig 8b bracket) ==");
+    println!("== bench gemm_roofline (paper Fig 8b bracket; loop vs op-stream) ==");
     println!(
-        "  {:>5} {:>9} {:>5} {:>7} {:>12} {:>12}",
-        "m", "k range", "bs", "batch", "AB GF/s", "AtB GF/s"
+        "  {:>5} {:>9} {:>5} {:>7} {:>11} {:>11} {:>8} {:>11} {:>11} {:>8}",
+        "m", "k range", "bs", "batch", "AB loop", "AB batch", "speedup", "AtB loop", "AtB batch",
+        "speedup"
     );
+    let mut worst_ab = f64::INFINITY;
+    let mut worst_atb = f64::INFINITY;
     for (m, k_lo, k_hi, bs) in [
         (128usize, 8usize, 24usize, 16usize),
         (256, 16, 48, 16),
@@ -20,13 +31,20 @@ fn main() {
         (512, 64, 128, 32),
     ] {
         for batch in [32usize, 128, 512] {
-            let (ab, atb) = batched_gemm_roofline(m, k_lo, k_hi, bs, batch, 99);
+            let c = roofline_loop_vs_batch(m, k_lo, k_hi, bs, batch, 99);
+            let s_ab = c.batch_ab / c.loop_ab;
+            let s_atb = c.batch_atb / c.loop_atb;
+            worst_ab = worst_ab.min(s_ab);
+            worst_atb = worst_atb.min(s_atb);
             println!(
-                "  {m:>5} {:>4}-{:<4} {bs:>5} {batch:>7} {ab:>12.2} {atb:>12.2}",
-                k_lo, k_hi
+                "  {m:>5} {:>4}-{:<4} {bs:>5} {batch:>7} {:>11.2} {:>11.2} {s_ab:>7.2}x \
+                 {:>11.2} {:>11.2} {s_atb:>7.2}x",
+                k_lo, k_hi, c.loop_ab, c.batch_ab, c.loop_atb, c.batch_atb
             );
         }
     }
+    println!("(GFLOP/s; speedup = batch/loop, higher is better)");
+    println!("worst-case batched/loop speedup: AB {worst_ab:.2}x, AtB {worst_atb:.2}x");
     println!("(paper: sampling lands between the AB and AtB MAGMA estimates; batch");
     println!(" size and rank k set the achievable fraction of peak)");
 }

@@ -12,12 +12,32 @@ pub mod sampler;
 
 pub use sampler::{DenseSampler, Sampler};
 
-use crate::batch::{parallel_map, BatchStats, DynamicBatcher};
+use crate::batch::{parallel_map, run_single, BatchStats, DynamicBatcher, NativeBatch, StreamBuilder};
 use crate::linalg::gemm::matmul;
 use crate::linalg::matrix::Matrix;
 use crate::linalg::qr::{convergence_estimate, orthog, qrcp};
 use crate::linalg::rng::Rng;
+use crate::profile::Phase;
 use crate::tlr::tile::LowRank;
+
+/// Evaluate `A Ω` (or `Aᵀ Ω`) through the batched-GEMM layer: the
+/// sampler emits its ops onto a stream and the executor runs them. Small
+/// plans run inline on the calling thread, so this is safe to use from
+/// within an outer `parallel_map` (the TLR construction path does).
+/// Samplers that cannot emit (e.g. composite `DiffSampler`s over opaque
+/// operators) fall back to their direct implementation.
+fn sample_via_stream(
+    op: &dyn Sampler,
+    omega: &Matrix,
+    transpose: bool,
+    exec: &NativeBatch,
+) -> Matrix {
+    let rows = if transpose { op.cols() } else { op.rows() };
+    run_single(rows, omega.cols(), exec, |sb, dst| {
+        op.emit_sample(sb, omega, transpose, 1.0, dst)
+    })
+    .unwrap_or_else(|| if transpose { op.sample_t(omega) } else { op.sample(omega) })
+}
 
 /// ARA options.
 #[derive(Debug, Clone, Copy)]
@@ -123,8 +143,13 @@ pub struct AraResult {
 }
 
 /// Adaptive randomized approximation of a single operator (paper Alg 1).
+///
+/// Every `A Ω` / `Aᵀ Ω` product dispatches through the batched-GEMM
+/// layer ([`sample_via_stream`]); numerically this is identical to the
+/// direct chain, so results are a function of the RNG stream only.
 pub fn ara(op: &dyn Sampler, opts: &AraOpts, rng: &mut Rng) -> AraResult {
     let (rows, cols) = (op.rows(), op.cols());
+    let exec = NativeBatch::new();
     let max_rank = opts.max_rank.min(rows.min(cols));
     // The sample block can never usefully exceed the operator height
     // (and the panel QR needs tall blocks) — clamp for tiny tiles such
@@ -136,7 +161,7 @@ pub fn ara(op: &dyn Sampler, opts: &AraOpts, rng: &mut Rng) -> AraResult {
     let mut residual = f64::INFINITY;
     while q.cols() < max_rank {
         let omega = rng.normal_matrix(cols, bs);
-        let y = op.sample(&omega);
+        let y = sample_via_stream(op, &omega, false, &exec);
         let o = orthog(&q, &y);
         residual = convergence_estimate(&o.r);
         rounds += 1;
@@ -153,7 +178,11 @@ pub fn ara(op: &dyn Sampler, opts: &AraOpts, rng: &mut Rng) -> AraResult {
     if q.cols() > max_rank {
         q.truncate_cols(max_rank);
     }
-    let b = if q.cols() > 0 { op.sample_t(&q) } else { Matrix::zeros(cols, 0) };
+    let b = if q.cols() > 0 {
+        sample_via_stream(op, &q, true, &exec)
+    } else {
+        Matrix::zeros(cols, 0)
+    };
     let mut lr = LowRank { u: q, v: b };
     if opts.trim {
         lr = trim_factors(lr, opts.eps);
@@ -176,9 +205,19 @@ pub struct BatchedAraResult {
 /// `bs` samples, orthogonalizes against its basis, and retires when
 /// converged, letting the next pending operator take its slot.
 ///
-/// Each operator gets an independent RNG stream split from `seed`, so the
-/// computed factorization does not depend on the batch capacity —
-/// scheduling is performance-only (verified by `batch_size_invariance`).
+/// Execution is where the paper's "non-uniform batched GEMM" claim
+/// lives: every in-flight operator emits its sampling chain onto one
+/// op-stream per round ([`Sampler::emit_sample`]), and the
+/// [`NativeBatch`] executor runs the merged waves — the w-th GEMM of
+/// every chain forms one variable-shape batch. The projection phase
+/// `B = Aᵀ Q` is marshaled the same way. Wave/op/FLOP counts land in
+/// the returned [`BatchStats`].
+///
+/// Each operator gets an independent RNG stream split from `seed`, and
+/// op results depend only on operand values (never on wave
+/// composition), so the computed factorization does not depend on the
+/// batch capacity — scheduling is performance-only (verified by
+/// `batch_size_invariance`).
 pub fn batched_ara(
     ops: &[&dyn Sampler],
     priorities: &[usize],
@@ -197,6 +236,11 @@ pub fn batched_ara(
         rng: Rng,
         residual: f64,
     }
+    // Phase-tagged executors: per-op worker time and per-plan FLOPs are
+    // booked into Sample/Projection, preserving the summed-work phase
+    // accounting the old per-sampler timers produced.
+    let exec_sample = NativeBatch::for_phase(Phase::Sample);
+    let exec_proj = NativeBatch::for_phase(Phase::Projection);
     let root = Rng::new(seed);
     let mut states: Vec<State> = (0..n)
         .map(|i| State {
@@ -207,31 +251,64 @@ pub fn batched_ara(
         })
         .collect();
     let mut batcher = DynamicBatcher::new(priorities, capacity.max(1));
+    let mut gemm_stats = (0usize, 0usize, 0u64); // (waves, ops, flops)
     while !batcher.is_done() {
         let active = batcher.active().to_vec();
-        // One ARA round for every in-flight tile, in parallel. Each round
-        // returns the new basis block and the residual estimate.
-        let round: Vec<(Matrix, f64, Rng)> = {
+        // Draw every in-flight tile's sampling block in parallel (each
+        // tile advances its private stream), then marshal all chains
+        // into one batch.
+        let draws: Vec<(Matrix, Rng)> = {
             let states_ref = &states;
             parallel_map(active.len(), |pos| {
                 let i = active[pos];
-                let st = &states_ref[i];
-                let mut rng = st.rng.clone();
+                let mut rng = states_ref[i].rng.clone();
                 // Clamp like `ara`: short tiles take smaller blocks.
                 let bs = opts.bs.min(ops[i].rows()).max(1);
                 let omega = rng.normal_matrix(ops[i].cols(), bs);
-                let y = ops[i].sample(&omega);
-                let o = orthog(&st.q, &y);
+                (omega, rng)
+            })
+        };
+        let ys: Vec<Matrix> = {
+            let mut sb = StreamBuilder::new();
+            let mut slots = Vec::with_capacity(active.len());
+            let mut direct: Vec<usize> = Vec::new();
+            for (pos, &i) in active.iter().enumerate() {
+                let dst = sb.output(ops[i].rows(), draws[pos].0.cols());
+                slots.push(dst);
+                if !ops[i].emit_sample(&mut sb, &draws[pos].0, false, 1.0, dst) {
+                    direct.push(pos);
+                }
+            }
+            let stream = sb.finish();
+            gemm_stats.0 += stream.plan().waves().len();
+            gemm_stats.1 += stream.plan().ops().len();
+            gemm_stats.2 += stream.plan().flops();
+            let mut outs = stream.execute(&exec_sample);
+            for pos in direct {
+                outs[slots[pos]] = ops[active[pos]].sample(&draws[pos].0);
+            }
+            slots
+                .into_iter()
+                .map(|s| std::mem::replace(&mut outs[s], Matrix::zeros(0, 0)))
+                .collect()
+        };
+        // Orthogonalize each tile's new block against its basis.
+        let round: Vec<(Matrix, f64)> = {
+            let states_ref = &states;
+            let ys_ref = &ys;
+            parallel_map(active.len(), |pos| {
+                let i = active[pos];
+                let o = orthog(&states_ref[i].q, &ys_ref[pos]);
                 let e = convergence_estimate(&o.r);
-                (o.q_new, e, rng)
+                (o.q_new, e)
             })
         };
         let mut converged = vec![false; active.len()];
-        for (pos, (q_new, e, rng)) in round.into_iter().enumerate() {
+        for (pos, (q_new, e)) in round.into_iter().enumerate() {
             let i = active[pos];
             let max_rank = opts.max_rank.min(ops[i].rows().min(ops[i].cols()));
             let st = &mut states[i];
-            st.rng = rng;
+            st.rng = draws[pos].1.clone();
             st.residual = e;
             if e <= opts.eps {
                 st.streak += 1;
@@ -250,17 +327,47 @@ pub fn batched_ara(
         }
         batcher.complete_round(&converged);
     }
-    // Projection phase (Alg 5 line 21): B = Aᵀ Q for every tile, batched.
+    // Projection phase (Alg 5 line 21): B = Aᵀ Q for every tile, as one
+    // non-uniform batch.
+    let bs_proj: Vec<Matrix> = {
+        let mut sb = StreamBuilder::new();
+        let mut slots: Vec<Option<usize>> = Vec::with_capacity(n);
+        let mut direct: Vec<usize> = Vec::new();
+        for (i, st) in states.iter().enumerate() {
+            if st.q.cols() == 0 {
+                slots.push(None);
+                continue;
+            }
+            let dst = sb.output(ops[i].cols(), st.q.cols());
+            slots.push(Some(dst));
+            if !ops[i].emit_sample(&mut sb, &st.q, true, 1.0, dst) {
+                direct.push(i);
+            }
+        }
+        let stream = sb.finish();
+        gemm_stats.0 += stream.plan().waves().len();
+        gemm_stats.1 += stream.plan().ops().len();
+        gemm_stats.2 += stream.plan().flops();
+        let mut outs = stream.execute(&exec_proj);
+        for i in direct {
+            if let Some(s) = slots[i] {
+                outs[s] = ops[i].sample_t(&states[i].q);
+            }
+        }
+        slots
+            .into_iter()
+            .enumerate()
+            .map(|(i, slot)| match slot {
+                Some(s) => std::mem::replace(&mut outs[s], Matrix::zeros(0, 0)),
+                None => Matrix::zeros(ops[i].cols(), 0),
+            })
+            .collect()
+    };
     let tiles: Vec<LowRank> = {
         let states_ref = &states;
+        let bs_ref = &bs_proj;
         parallel_map(n, |i| {
-            let q = &states_ref[i].q;
-            let b = if q.cols() > 0 {
-                ops[i].sample_t(q)
-            } else {
-                Matrix::zeros(ops[i].cols(), 0)
-            };
-            let lr = LowRank { u: q.clone(), v: b };
+            let lr = LowRank { u: states_ref[i].q.clone(), v: bs_ref[i].clone() };
             if opts.trim {
                 trim_factors(lr, opts.eps)
             } else {
@@ -268,8 +375,12 @@ pub fn batched_ara(
             }
         })
     };
+    let mut stats = batcher.stats().clone();
+    stats.gemm_waves = gemm_stats.0;
+    stats.gemm_ops = gemm_stats.1;
+    stats.gemm_flops = gemm_stats.2;
     let residuals = states.iter().map(|s| s.residual).collect();
-    BatchedAraResult { tiles, stats: batcher.stats().clone(), residuals }
+    BatchedAraResult { tiles, stats, residuals }
 }
 
 #[cfg(test)]

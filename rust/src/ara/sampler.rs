@@ -3,11 +3,20 @@
 //! sampler (the paper's `sampleLeft`/`sampleLeftT`) lives in
 //! [`crate::factor::sample`], next to the algorithm that owns it.
 
-use crate::linalg::gemm::{matmul, matmul_tn};
+use crate::batch::{Arg, StreamBuilder};
+use crate::linalg::gemm::{matmul, matmul_tn, Trans};
 use crate::linalg::matrix::Matrix;
 use crate::tlr::tile::LowRank;
 
 /// A linear operator that can be sampled from both sides.
+///
+/// Samplers participate in the batched-GEMM op-stream through
+/// [`Sampler::emit_sample`]: rather than computing `A Ω` privately, a
+/// sampler describes the product as [`crate::batch::GemmOp`]s so the
+/// batched executors can marshal many samplers' chains into one
+/// non-uniform batch (the paper's §4 execution model). `sample` /
+/// `sample_t` remain as the scalar entry points; `batched_ara` and the
+/// factorization only go through the stream.
 pub trait Sampler: Sync {
     fn rows(&self) -> usize;
     fn cols(&self) -> usize;
@@ -15,6 +24,23 @@ pub trait Sampler: Sync {
     fn sample(&self, omega: &Matrix) -> Matrix;
     /// `Z = Aᵀ Ω`, `Ω: rows × bs`.
     fn sample_t(&self, omega: &Matrix) -> Matrix;
+
+    /// Emit `out[dst] += alpha * A Ω` (`Aᵀ Ω` when `transpose`) onto a
+    /// batch stream. Returns `false` when this sampler cannot express
+    /// itself as ops (the caller then falls back to
+    /// [`Sampler::sample`]); implementations must emit either all of
+    /// their ops or none.
+    fn emit_sample<'a>(
+        &'a self,
+        sb: &mut StreamBuilder<'a>,
+        omega: &'a Matrix,
+        transpose: bool,
+        alpha: f64,
+        dst: usize,
+    ) -> bool {
+        let _ = (sb, omega, transpose, alpha, dst);
+        false
+    }
 }
 
 /// Sample a materialized dense matrix (construction path and tests).
@@ -33,6 +59,20 @@ impl Sampler for DenseSampler<'_> {
     fn sample_t(&self, omega: &Matrix) -> Matrix {
         matmul_tn(self.0, omega)
     }
+    fn emit_sample<'a>(
+        &'a self,
+        sb: &mut StreamBuilder<'a>,
+        omega: &'a Matrix,
+        transpose: bool,
+        alpha: f64,
+        dst: usize,
+    ) -> bool {
+        let a = sb.input(self.0);
+        let om = sb.input(omega);
+        let ta = if transpose { Trans::Yes } else { Trans::No };
+        sb.gemm(ta, Trans::No, alpha, a, om, 1.0, dst);
+        true
+    }
 }
 
 /// Sample an existing low-rank tile (used when recompressing).
@@ -50,6 +90,27 @@ impl Sampler for LowRankSampler<'_> {
     }
     fn sample_t(&self, omega: &Matrix) -> Matrix {
         self.0.apply_t(omega)
+    }
+    fn emit_sample<'a>(
+        &'a self,
+        sb: &mut StreamBuilder<'a>,
+        omega: &'a Matrix,
+        transpose: bool,
+        alpha: f64,
+        dst: usize,
+    ) -> bool {
+        let lr = self.0;
+        if lr.rank() == 0 {
+            return true; // zero contribution, no ops
+        }
+        let (first, second) = if transpose { (&lr.u, &lr.v) } else { (&lr.v, &lr.u) };
+        let f = sb.input(first);
+        let s = sb.input(second);
+        let om = sb.input(omega);
+        let tmp = sb.output(lr.rank(), omega.cols());
+        sb.gemm(Trans::Yes, Trans::No, 1.0, f, om, 1.0, tmp);
+        sb.gemm(Trans::No, Trans::No, alpha, s, Arg::Out(tmp), 1.0, dst);
+        true
     }
 }
 
@@ -103,6 +164,30 @@ mod tests {
         let om = rng.normal_matrix(7, 4);
         let s = LowRankSampler(&lr);
         assert!(s.sample(&om).sub(&matmul(&d, &om)).norm_max() < 1e-12);
+    }
+
+    #[test]
+    fn emit_matches_direct_sample() {
+        use crate::batch::NativeBatch;
+        let mut rng = Rng::new(9);
+        let a = rng.normal_matrix(9, 7);
+        let lr = LowRank { u: rng.normal_matrix(9, 3), v: rng.normal_matrix(7, 3) };
+        let ds = DenseSampler(&a);
+        let ls = LowRankSampler(&lr);
+        let om_f = rng.normal_matrix(7, 4);
+        let om_t = rng.normal_matrix(9, 4);
+        let exec = NativeBatch::new();
+        for s in [&ds as &dyn Sampler, &ls as &dyn Sampler] {
+            for (transpose, om) in [(false, &om_f), (true, &om_t)] {
+                let mut sb = StreamBuilder::new();
+                let out_rows = if transpose { s.cols() } else { s.rows() };
+                let dst = sb.output(out_rows, 4);
+                assert!(s.emit_sample(&mut sb, om, transpose, 1.0, dst));
+                let outs = sb.finish().execute(&exec);
+                let want = if transpose { s.sample_t(om) } else { s.sample(om) };
+                assert!(outs[dst].sub(&want).norm_max() < 1e-12);
+            }
+        }
     }
 
     #[test]

@@ -1,0 +1,876 @@
+//! The non-uniform batched-GEMM op-stream (paper §4: "performance is
+//! limited by the performance of batched GEMM operations").
+//!
+//! Every layer of the factorization — ARA sampling chains, projections,
+//! TLR matvecs, triangular-solve updates, construction — describes its
+//! tile products as a stream of [`GemmOp`]s over shared operands instead
+//! of hand-rolling `parallel_for`-over-`matmul` loops. A [`BatchPlan`]
+//! groups the stream into *waves*: maximal sets of ops with no
+//! read-after-write, write-after-read, or write-after-write hazard
+//! between them, so every op of a wave can run concurrently. A
+//! [`BatchedGemm`] executor then runs the waves:
+//!
+//! * [`NativeBatch`] — the production executor: one worker pool per
+//!   plan, ops of a wave dealt out atomically (non-uniform sizes still
+//!   load-balance), each worker reusing a single
+//!   [`GemmWorkspace`](crate::linalg::gemm::GemmWorkspace) packing arena
+//!   across all ops it runs (a plain `gemm` call allocates fresh panels
+//!   every time — the arena is where the batched speedup comes from);
+//! * [`RefBatch`] — a naive serial triple-loop executor used as the
+//!   testing oracle (`rust/tests/batch_plan.rs` asserts the two agree on
+//!   randomly generated plans).
+//!
+//! Scheduling is performance-only: an op's result depends on its operand
+//! values alone, and hazard ordering fixes those, so any executor (and
+//! any wave composition) computes the same numbers.
+//!
+//! The stream also carries the two non-GEMM bits the paper's chains
+//! need: row scalings (the `D(j,j)` interposition of the LDLᵀ Eq-3
+//! chain) appear as [`BatchOp::ScaleRows`], and the whole Eq-2 4-GEMM /
+//! Eq-3 5-GEMM update term is expressible as one fused [`SampleChain`]
+//! descriptor that [`StreamBuilder::sample_chain`] lowers onto the
+//! stream.
+
+use crate::linalg::gemm::{gemm_flops, gemm_with, GemmWorkspace, Trans};
+use crate::linalg::matrix::Matrix;
+use crate::profile::{self, Phase, Timer};
+use crate::tlr::tile::Tile;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::Barrier;
+
+/// An operand of a [`GemmOp`]: a caller-provided read-only input, or the
+/// current value of an output slot (the result of earlier ops).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Arg {
+    /// `inputs[i]` of the stream.
+    In(usize),
+    /// Output slot `i`.
+    Out(usize),
+}
+
+/// One GEMM of the stream:
+/// `out[dst] := alpha * op(a) * op(b) + beta * out[dst]`.
+///
+/// Operand shapes are fully variable per op — this is what makes the
+/// batch *non-uniform*. `a`/`b` may not alias `dst` (the builder
+/// enforces it), so an executor can hold `dst` mutably while reading the
+/// operands.
+#[derive(Clone, Copy, Debug)]
+pub struct GemmOp {
+    pub ta: Trans,
+    pub tb: Trans,
+    pub alpha: f64,
+    pub beta: f64,
+    pub a: Arg,
+    pub b: Arg,
+    pub dst: usize,
+}
+
+/// One operation of a batch stream.
+#[derive(Clone, Copy, Debug)]
+pub enum BatchOp {
+    Gemm(GemmOp),
+    /// `out[dst] := diag(diags[d]) * out[dst]` — the Eq-3 `D(j,j)`
+    /// interposition.
+    ScaleRows { dst: usize, d: usize },
+}
+
+impl BatchOp {
+    fn dst(&self) -> usize {
+        match self {
+            BatchOp::Gemm(g) => g.dst,
+            BatchOp::ScaleRows { dst, .. } => *dst,
+        }
+    }
+
+    /// Output slots this op reads (its own `dst` counts as a read for
+    /// `Gemm` with `beta != 0` and always for `ScaleRows`, but hazard
+    /// scheduling handles `dst` separately — this lists only operand
+    /// reads).
+    fn reads(&self) -> [Option<usize>; 2] {
+        match self {
+            BatchOp::Gemm(g) => {
+                let f = |arg: Arg| match arg {
+                    Arg::Out(s) => Some(s),
+                    Arg::In(_) => None,
+                };
+                [f(g.a), f(g.b)]
+            }
+            BatchOp::ScaleRows { .. } => [None, None],
+        }
+    }
+}
+
+/// A scheduled op-stream: the ops, their operand/output shapes, and the
+/// hazard-free wave grouping.
+#[derive(Debug, Clone)]
+pub struct BatchPlan {
+    in_shapes: Vec<(usize, usize)>,
+    out_shapes: Vec<(usize, usize)>,
+    diag_lens: Vec<usize>,
+    ops: Vec<BatchOp>,
+    /// Op indices per wave, in program order within each wave.
+    waves: Vec<Vec<usize>>,
+    flops: u64,
+}
+
+impl BatchPlan {
+    pub fn ops(&self) -> &[BatchOp] {
+        &self.ops
+    }
+
+    pub fn waves(&self) -> &[Vec<usize>] {
+        &self.waves
+    }
+
+    pub fn n_outputs(&self) -> usize {
+        self.out_shapes.len()
+    }
+
+    pub fn out_shape(&self, slot: usize) -> (usize, usize) {
+        self.out_shapes[slot]
+    }
+
+    /// Total FLOPs of the stream (2mnk per GEMM).
+    pub fn flops(&self) -> u64 {
+        self.flops
+    }
+
+    /// Width of the widest wave — the available concurrency.
+    pub fn max_wave_width(&self) -> usize {
+        self.waves.iter().map(Vec::len).max().unwrap_or(0)
+    }
+
+    /// Re-derive the hazard invariants from scratch and panic on any
+    /// violation. Used by the property tests and by `debug_assert!` in
+    /// the executors:
+    ///
+    /// 1. every op appears in exactly one wave;
+    /// 2. an op never reads a slot written by an op of the same wave
+    ///    (RAW within a wave);
+    /// 3. no two ops of a wave write the same slot (WAW within a wave);
+    /// 4. dependent ops are never reordered: a reader of slot `s` sits
+    ///    in a strictly later wave than every earlier writer of `s`, and
+    ///    a writer sits strictly later than every earlier reader/writer.
+    pub fn assert_valid(&self) {
+        let n_ops = self.ops.len();
+        let mut wave_of = vec![usize::MAX; n_ops];
+        for (w, wave) in self.waves.iter().enumerate() {
+            for &op in wave {
+                assert!(op < n_ops, "wave {w} references op {op} out of range");
+                assert_eq!(wave_of[op], usize::MAX, "op {op} scheduled twice");
+                wave_of[op] = w;
+            }
+        }
+        assert!(wave_of.iter().all(|&w| w != usize::MAX), "unscheduled op");
+        for (i, op) in self.ops.iter().enumerate() {
+            let wi = wave_of[i];
+            for (j, other) in self.ops.iter().enumerate().take(i) {
+                let wj = wave_of[j];
+                let i_reads_j = op.reads().iter().flatten().any(|&s| s == other.dst());
+                let waw = op.dst() == other.dst();
+                let war = other.reads().iter().flatten().any(|&s| s == op.dst());
+                if i_reads_j || waw || war {
+                    assert!(
+                        wj < wi,
+                        "dependent ops {j} (wave {wj}) and {i} (wave {wi}) not ordered"
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// A fused descriptor of one left-looking update term (paper Eq 2, and
+/// Eq 3 when `d` is set): the contribution
+///
+/// `ui (viᵀ ([diag(d)] (vk (ukᵀ Ω))))`
+///
+/// — four GEMMs (five ops with the diagonal interposed) that
+/// [`StreamBuilder::sample_chain`] lowers onto the stream as one unit.
+/// This is the same contract as the PJRT `sample_update` artifact
+/// ([`crate::runtime::TermRef`]), so both backends speak one op
+/// vocabulary.
+pub struct SampleChain<'a> {
+    pub uk: &'a Matrix,
+    pub vk: &'a Matrix,
+    pub ui: &'a Matrix,
+    pub vi: &'a Matrix,
+    pub d: Option<&'a [f64]>,
+    pub omega: Arg,
+}
+
+/// Builds an op-stream: collects operand references, allocates output
+/// slots, pushes shape-checked ops, and schedules the waves.
+#[derive(Default)]
+pub struct StreamBuilder<'a> {
+    inputs: Vec<&'a Matrix>,
+    diags: Vec<&'a [f64]>,
+    out_shapes: Vec<(usize, usize)>,
+    ops: Vec<BatchOp>,
+}
+
+impl<'a> StreamBuilder<'a> {
+    pub fn new() -> StreamBuilder<'a> {
+        StreamBuilder::default()
+    }
+
+    /// Register a read-only input operand.
+    pub fn input(&mut self, m: &'a Matrix) -> Arg {
+        self.inputs.push(m);
+        Arg::In(self.inputs.len() - 1)
+    }
+
+    /// Allocate a zero-initialized output slot of the given shape.
+    /// Slots double as temporaries: later ops may read them via
+    /// [`Arg::Out`].
+    pub fn output(&mut self, rows: usize, cols: usize) -> usize {
+        self.out_shapes.push((rows, cols));
+        self.out_shapes.len() - 1
+    }
+
+    fn shape(&self, arg: Arg) -> (usize, usize) {
+        match arg {
+            Arg::In(i) => self.inputs[i].shape(),
+            Arg::Out(s) => self.out_shapes[s],
+        }
+    }
+
+    /// Push `out[dst] := alpha * op(a) * op(b) + beta * out[dst]`.
+    #[allow(clippy::too_many_arguments)]
+    pub fn gemm(&mut self, ta: Trans, tb: Trans, alpha: f64, a: Arg, b: Arg, beta: f64, dst: usize) {
+        assert!(a != Arg::Out(dst) && b != Arg::Out(dst), "gemm operand aliases its destination");
+        let (ar, ac) = self.shape(a);
+        let (m, ka) = if ta == Trans::No { (ar, ac) } else { (ac, ar) };
+        let (br, bc) = self.shape(b);
+        let (kb, n) = if tb == Trans::No { (br, bc) } else { (bc, br) };
+        assert_eq!(ka, kb, "batch gemm: inner dimension mismatch");
+        assert_eq!(self.out_shapes[dst], (m, n), "batch gemm: output shape mismatch");
+        self.ops.push(BatchOp::Gemm(GemmOp { ta, tb, alpha, beta, a, b, dst }));
+    }
+
+    /// Push `out[dst] := diag(d) * out[dst]`.
+    pub fn scale_rows(&mut self, dst: usize, d: &'a [f64]) {
+        assert_eq!(self.out_shapes[dst].0, d.len(), "scale_rows: diagonal length mismatch");
+        self.diags.push(d);
+        let idx = self.diags.len() - 1;
+        self.ops.push(BatchOp::ScaleRows { dst, d: idx });
+    }
+
+    /// Accumulate a tile product: `out[dst] += alpha * T x`
+    /// (`Tᵀ x` when `transpose`). Dense tiles are one GEMM; low-rank
+    /// tiles are the two-product chain through a temporary; rank-0 tiles
+    /// contribute nothing.
+    pub fn apply_tile(&mut self, t: &'a Tile, x: Arg, alpha: f64, dst: usize, transpose: bool) {
+        let (_, bs) = self.shape(x);
+        match t {
+            Tile::Dense(m) => {
+                let a = self.input(m);
+                let ta = if transpose { Trans::Yes } else { Trans::No };
+                self.gemm(ta, Trans::No, alpha, a, x, 1.0, dst);
+            }
+            Tile::LowRank(lr) => {
+                if lr.rank() == 0 {
+                    return;
+                }
+                let (first, second) = if transpose { (&lr.u, &lr.v) } else { (&lr.v, &lr.u) };
+                let f = self.input(first);
+                let s = self.input(second);
+                let tmp = self.output(lr.rank(), bs);
+                // tmp = firstᵀ x ; dst += alpha * second * tmp
+                self.gemm(Trans::Yes, Trans::No, 1.0, f, x, 1.0, tmp);
+                self.gemm(Trans::No, Trans::No, alpha, s, Arg::Out(tmp), 1.0, dst);
+            }
+        }
+    }
+
+    /// Accumulate one fused Eq-2/Eq-3 update term:
+    /// `out[dst] += alpha * ui (viᵀ ([d] (vk (ukᵀ Ω))))`.
+    ///
+    /// Rank-0 factors short-circuit to nothing, matching the native
+    /// chain's zero contribution.
+    pub fn sample_chain(&mut self, ch: &SampleChain<'a>, alpha: f64, dst: usize) {
+        if ch.uk.cols() == 0 || ch.ui.cols() == 0 {
+            return;
+        }
+        let (_, bs) = self.shape(ch.omega);
+        let uk = self.input(ch.uk);
+        let vk = self.input(ch.vk);
+        let ui = self.input(ch.ui);
+        let vi = self.input(ch.vi);
+        let t1 = self.output(ch.uk.cols(), bs);
+        self.gemm(Trans::Yes, Trans::No, 1.0, uk, ch.omega, 1.0, t1);
+        let t2 = self.output(ch.vk.rows(), bs);
+        self.gemm(Trans::No, Trans::No, 1.0, vk, Arg::Out(t1), 1.0, t2);
+        if let Some(d) = ch.d {
+            self.scale_rows(t2, d);
+        }
+        let t3 = self.output(ch.vi.cols(), bs);
+        self.gemm(Trans::Yes, Trans::No, 1.0, vi, Arg::Out(t2), 1.0, t3);
+        self.gemm(Trans::No, Trans::No, alpha, ui, Arg::Out(t3), 1.0, dst);
+    }
+
+    /// Schedule the stream into waves and seal it.
+    ///
+    /// Waves are assigned greedily in program order: each op lands in
+    /// the earliest wave after (a) every writer of a slot it reads, (b)
+    /// every earlier writer of its destination (WAW — accumulations onto
+    /// one slot stay in program order), and (c) every earlier reader of
+    /// its destination (WAR). Independent ops — the vast majority of a
+    /// tile-product batch — all land in the same early waves, which is
+    /// the non-uniform batch the executors parallelize over.
+    pub fn finish(self) -> GemmStream<'a> {
+        let n_out = self.out_shapes.len();
+        // write_done[s]: earliest wave an op reading slot s may take;
+        // read_done[s]: earliest wave a writer of slot s may take.
+        let mut write_done = vec![0usize; n_out];
+        let mut read_done = vec![0usize; n_out];
+        let mut waves: Vec<Vec<usize>> = Vec::new();
+        let mut flops = 0u64;
+        for (i, op) in self.ops.iter().enumerate() {
+            let dst = op.dst();
+            let mut w = write_done[dst].max(read_done[dst]);
+            for s in op.reads().into_iter().flatten() {
+                w = w.max(write_done[s]);
+            }
+            if w >= waves.len() {
+                waves.resize_with(w + 1, Vec::new);
+            }
+            waves[w].push(i);
+            for s in op.reads().into_iter().flatten() {
+                read_done[s] = read_done[s].max(w + 1);
+            }
+            write_done[dst] = w + 1;
+            if let BatchOp::Gemm(g) = op {
+                let (m, n) = self.out_shapes[g.dst];
+                let (ar, ac) = match g.a {
+                    Arg::In(x) => self.inputs[x].shape(),
+                    Arg::Out(x) => self.out_shapes[x],
+                };
+                let k = if g.ta == Trans::No { ac } else { ar };
+                flops += gemm_flops(m, n, k);
+            }
+        }
+        let plan = BatchPlan {
+            in_shapes: self.inputs.iter().map(|m| m.shape()).collect(),
+            out_shapes: self.out_shapes,
+            diag_lens: self.diags.iter().map(|d| d.len()).collect(),
+            ops: self.ops,
+            waves,
+            flops,
+        };
+        debug_assert!({
+            plan.assert_valid();
+            true
+        });
+        GemmStream { plan, inputs: self.inputs, diags: self.diags }
+    }
+}
+
+/// A sealed op-stream: the plan plus the operand references it was built
+/// over, ready to hand to any [`BatchedGemm`] executor.
+pub struct GemmStream<'a> {
+    plan: BatchPlan,
+    inputs: Vec<&'a Matrix>,
+    diags: Vec<&'a [f64]>,
+}
+
+impl GemmStream<'_> {
+    pub fn plan(&self) -> &BatchPlan {
+        &self.plan
+    }
+
+    /// True when the stream contains no ops (all outputs stay zero).
+    pub fn is_empty(&self) -> bool {
+        self.plan.ops.is_empty()
+    }
+
+    /// Run the stream, returning the final value of every output slot.
+    pub fn execute(&self, exec: &dyn BatchedGemm) -> Vec<Matrix> {
+        exec.execute(&self.plan, &self.inputs, &self.diags)
+    }
+}
+
+/// A non-uniform batched-GEMM executor.
+///
+/// Contract: outputs start as zeros of `plan.out_shape(..)`, ops take
+/// effect in an order consistent with the plan's hazard ordering, and
+/// the returned vector holds the final slot values. Implementations
+/// must be value-deterministic: the result may not depend on scheduling.
+pub trait BatchedGemm: Sync {
+    fn name(&self) -> &'static str;
+    fn execute(&self, plan: &BatchPlan, inputs: &[&Matrix], diags: &[&[f64]]) -> Vec<Matrix>;
+}
+
+fn check_operands(plan: &BatchPlan, inputs: &[&Matrix], diags: &[&[f64]]) {
+    assert_eq!(inputs.len(), plan.in_shapes.len(), "input count mismatch");
+    for (i, m) in inputs.iter().enumerate() {
+        assert_eq!(m.shape(), plan.in_shapes[i], "input {i} shape changed since planning");
+    }
+    assert_eq!(diags.len(), plan.diag_lens.len(), "diagonal count mismatch");
+    for (i, d) in diags.iter().enumerate() {
+        assert_eq!(d.len(), plan.diag_lens[i], "diagonal {i} length changed since planning");
+    }
+}
+
+/// Output slot table shared across a worker pool: the crate-wide
+/// [`DisjointSlots`](super::DisjointSlots) hand-out, whose safety
+/// protocol here is the plan invariants (see
+/// [`BatchPlan::assert_valid`]): within one wave, every op writes a
+/// distinct slot and reads only slots no op of the wave writes, so
+/// handing out `&mut` to an op's `dst` alongside `&` to its operand
+/// slots never aliases.
+type SlotTable = super::DisjointSlots<Matrix>;
+
+/// Run one op against the slot table.
+///
+/// # Safety
+/// The caller must guarantee that no other thread concurrently accesses
+/// this op's `dst` slot and that no thread concurrently writes any slot
+/// the op reads — i.e. the op is dispatched inside its scheduled wave.
+unsafe fn run_op(
+    op: &BatchOp,
+    slots: &SlotTable,
+    inputs: &[&Matrix],
+    diags: &[&[f64]],
+    ws: &mut GemmWorkspace,
+) {
+    match op {
+        BatchOp::Gemm(g) => {
+            let c = slots.slot(g.dst);
+            let a = match g.a {
+                Arg::In(i) => inputs[i],
+                Arg::Out(s) => slots.get(s),
+            };
+            let b = match g.b {
+                Arg::In(i) => inputs[i],
+                Arg::Out(s) => slots.get(s),
+            };
+            gemm_with(g.ta, g.tb, g.alpha, a, b, g.beta, c, ws);
+        }
+        BatchOp::ScaleRows { dst, d } => {
+            let c = slots.slot(*dst);
+            crate::linalg::blas::scale_rows(c, diags[*d]);
+        }
+    }
+}
+
+/// Build and run a single-output stream: `emit` receives the builder and
+/// the prepared `rows × cols` output slot and returns whether it emitted
+/// (the [`Sampler::emit_sample`](crate::ara::sampler::Sampler) contract).
+/// Returns `None` when `emit` declines, so the caller can fall back to a
+/// direct evaluation.
+pub fn run_single<'a, F>(
+    rows: usize,
+    cols: usize,
+    exec: &dyn BatchedGemm,
+    emit: F,
+) -> Option<Matrix>
+where
+    F: FnOnce(&mut StreamBuilder<'a>, usize) -> bool,
+{
+    let mut sb = StreamBuilder::new();
+    let dst = sb.output(rows, cols);
+    if !emit(&mut sb, dst) {
+        return None;
+    }
+    let mut outs = sb.finish().execute(exec);
+    Some(outs.swap_remove(dst))
+}
+
+/// Executor-side accounting: how many plans/waves/ops/FLOPs an executor
+/// instance has run. `ops / waves` is the realized batch occupancy —
+/// the op-stream analogue of [`super::BatchStats::mean_occupancy`].
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ExecStats {
+    pub plans: u64,
+    pub waves: u64,
+    pub ops: u64,
+    pub flops: u64,
+}
+
+impl ExecStats {
+    pub fn mean_wave_width(&self) -> f64 {
+        if self.waves == 0 {
+            0.0
+        } else {
+            self.ops as f64 / self.waves as f64
+        }
+    }
+}
+
+/// The production executor: a worker pool per plan, one packing arena
+/// per worker, atomic op dispatch inside each wave, a barrier between
+/// waves.
+///
+/// Plans with no exploitable concurrency (single-op waves, or fewer ops
+/// than the spawn overhead is worth) run inline on the calling thread —
+/// which keeps nested use cheap: an outer `parallel_for` over tiles can
+/// freely issue tiny per-tile streams.
+///
+/// An executor can carry a profiling [`Phase`]
+/// ([`NativeBatch::for_phase`]): each op is then timed inside the worker
+/// that runs it, preserving the summed-work phase accounting the profile
+/// module documents (concurrent workers each add their own elapsed
+/// time), and the plan's FLOPs are credited to the phase.
+#[derive(Debug, Default)]
+pub struct NativeBatch {
+    phase: Option<Phase>,
+    plans: AtomicU64,
+    waves: AtomicU64,
+    ops: AtomicU64,
+    flops: AtomicU64,
+}
+
+impl NativeBatch {
+    pub fn new() -> NativeBatch {
+        NativeBatch::default()
+    }
+
+    /// An executor that books per-op time and per-plan FLOPs into
+    /// `phase`.
+    pub fn for_phase(phase: Phase) -> NativeBatch {
+        NativeBatch { phase: Some(phase), ..NativeBatch::default() }
+    }
+
+    pub fn stats(&self) -> ExecStats {
+        ExecStats {
+            plans: self.plans.load(Ordering::Relaxed),
+            waves: self.waves.load(Ordering::Relaxed),
+            ops: self.ops.load(Ordering::Relaxed),
+            flops: self.flops.load(Ordering::Relaxed),
+        }
+    }
+
+    fn bump(&self, plan: &BatchPlan) {
+        self.plans.fetch_add(1, Ordering::Relaxed);
+        self.waves.fetch_add(plan.waves.len() as u64, Ordering::Relaxed);
+        self.ops.fetch_add(plan.ops.len() as u64, Ordering::Relaxed);
+        self.flops.fetch_add(plan.flops, Ordering::Relaxed);
+        profile::add_batch_exec(plan.waves.len() as u64, plan.ops.len() as u64, plan.flops);
+        if let Some(p) = self.phase {
+            profile::add_flops(p, plan.flops);
+        }
+    }
+
+    /// Run one op, booking its time into the executor's phase if set.
+    ///
+    /// # Safety
+    /// Same contract as [`run_op`].
+    unsafe fn run_op_timed(
+        &self,
+        op: &BatchOp,
+        slots: &SlotTable,
+        inputs: &[&Matrix],
+        diags: &[&[f64]],
+        ws: &mut GemmWorkspace,
+    ) {
+        match self.phase {
+            Some(p) => {
+                let _t = Timer::new(p);
+                run_op(op, slots, inputs, diags, ws);
+            }
+            None => run_op(op, slots, inputs, diags, ws),
+        }
+    }
+}
+
+impl BatchedGemm for NativeBatch {
+    fn name(&self) -> &'static str {
+        "native"
+    }
+
+    fn execute(&self, plan: &BatchPlan, inputs: &[&Matrix], diags: &[&[f64]]) -> Vec<Matrix> {
+        check_operands(plan, inputs, diags);
+        self.bump(plan);
+        let mut outs: Vec<Matrix> =
+            plan.out_shapes.iter().map(|&(r, c)| Matrix::zeros(r, c)).collect();
+        if plan.ops.is_empty() {
+            return outs;
+        }
+        let nt = super::num_threads().min(plan.max_wave_width());
+        if nt <= 1 || plan.ops.len() < 4 {
+            // Inline path: program order is a valid serial schedule.
+            let slots = SlotTable::new(&mut outs);
+            let mut ws = GemmWorkspace::new();
+            for op in &plan.ops {
+                // SAFETY: single thread; operands never alias dst
+                // (builder invariant).
+                unsafe { self.run_op_timed(op, &slots, inputs, diags, &mut ws) };
+            }
+            return outs;
+        }
+        let counters: Vec<AtomicUsize> = plan.waves.iter().map(|_| AtomicUsize::new(0)).collect();
+        let barrier = Barrier::new(nt);
+        let slots = SlotTable::new(&mut outs);
+        std::thread::scope(|scope| {
+            for _ in 0..nt {
+                scope.spawn(|| {
+                    let mut ws = GemmWorkspace::new();
+                    for (wi, wave) in plan.waves.iter().enumerate() {
+                        loop {
+                            let t = counters[wi].fetch_add(1, Ordering::Relaxed);
+                            if t >= wave.len() {
+                                break;
+                            }
+                            let op = &plan.ops[wave[t]];
+                            // SAFETY: within a wave each op writes a
+                            // distinct slot and reads only slots no op
+                            // of the wave writes (plan invariant), and
+                            // the barrier orders the waves.
+                            unsafe { self.run_op_timed(op, &slots, inputs, diags, &mut ws) };
+                        }
+                        barrier.wait();
+                    }
+                });
+            }
+        });
+        outs
+    }
+}
+
+/// The testing oracle: serial program-order execution with a naive
+/// `O(mnk)` triple loop — deliberately sharing nothing with the blocked
+/// production kernel so agreement between the two is meaningful.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct RefBatch;
+
+fn naive_gemm(g: &GemmOp, a: &Matrix, b: &Matrix, c: &mut Matrix) {
+    let (m, n) = c.shape();
+    let k = if g.ta == Trans::No { a.cols() } else { a.rows() };
+    let get_a = |i: usize, p: usize| if g.ta == Trans::No { a[(i, p)] } else { a[(p, i)] };
+    let get_b = |p: usize, j: usize| if g.tb == Trans::No { b[(p, j)] } else { b[(j, p)] };
+    for j in 0..n {
+        for i in 0..m {
+            let mut acc = 0.0;
+            for p in 0..k {
+                acc += get_a(i, p) * get_b(p, j);
+            }
+            c[(i, j)] = g.alpha * acc + g.beta * c[(i, j)];
+        }
+    }
+}
+
+impl BatchedGemm for RefBatch {
+    fn name(&self) -> &'static str {
+        "reference"
+    }
+
+    fn execute(&self, plan: &BatchPlan, inputs: &[&Matrix], diags: &[&[f64]]) -> Vec<Matrix> {
+        check_operands(plan, inputs, diags);
+        let mut outs: Vec<Matrix> =
+            plan.out_shapes.iter().map(|&(r, c)| Matrix::zeros(r, c)).collect();
+        for op in &plan.ops {
+            match op {
+                BatchOp::Gemm(g) => {
+                    let a = match g.a {
+                        Arg::In(i) => inputs[i].clone(),
+                        Arg::Out(s) => outs[s].clone(),
+                    };
+                    let b = match g.b {
+                        Arg::In(i) => inputs[i].clone(),
+                        Arg::Out(s) => outs[s].clone(),
+                    };
+                    naive_gemm(g, &a, &b, &mut outs[g.dst]);
+                }
+                BatchOp::ScaleRows { dst, d } => {
+                    crate::linalg::blas::scale_rows(&mut outs[*dst], diags[*d]);
+                }
+            }
+        }
+        outs
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::gemm::{matmul, matmul_tn};
+    use crate::linalg::rng::Rng;
+    use crate::tlr::tile::LowRank;
+
+    fn close(a: &Matrix, b: &Matrix, tol: f64) -> bool {
+        let scale = a.norm_max().max(b.norm_max()).max(1.0);
+        a.sub(b).norm_max() <= tol * scale
+    }
+
+    #[test]
+    fn independent_ops_form_one_wave() {
+        let mut rng = Rng::new(1);
+        let mats: Vec<(Matrix, Matrix)> = (0..6)
+            .map(|i| (rng.normal_matrix(4 + i, 3), rng.normal_matrix(3, 2)))
+            .collect();
+        let mut sb = StreamBuilder::new();
+        for (a, b) in &mats {
+            let (ar, br) = (sb.input(a), sb.input(b));
+            let dst = sb.output(a.rows(), b.cols());
+            sb.gemm(Trans::No, Trans::No, 1.0, ar, br, 1.0, dst);
+        }
+        let stream = sb.finish();
+        assert_eq!(stream.plan().waves().len(), 1);
+        assert_eq!(stream.plan().max_wave_width(), 6);
+        stream.plan().assert_valid();
+        let exec = NativeBatch::new();
+        let outs = stream.execute(&exec);
+        for (i, (a, b)) in mats.iter().enumerate() {
+            assert!(close(&outs[i], &matmul(a, b), 1e-13), "op {i}");
+        }
+        assert_eq!(exec.stats().plans, 1);
+        assert_eq!(exec.stats().ops, 6);
+    }
+
+    #[test]
+    fn chained_ops_are_wave_ordered() {
+        let mut rng = Rng::new(2);
+        let a = rng.normal_matrix(5, 4);
+        let b = rng.normal_matrix(4, 3);
+        let c = rng.normal_matrix(5, 3);
+        let mut sb = StreamBuilder::new();
+        let (ar, br, cr) = (sb.input(&a), sb.input(&b), sb.input(&c));
+        let t = sb.output(5, 3);
+        sb.gemm(Trans::No, Trans::No, 1.0, ar, br, 1.0, t); // t = A B
+        let out = sb.output(4, 3);
+        sb.gemm(Trans::Yes, Trans::No, 1.0, ar, Arg::Out(t), 1.0, out); // out = Aᵀ t
+        let out2 = sb.output(4, 3);
+        sb.gemm(Trans::Yes, Trans::No, 2.0, ar, cr, 1.0, out2); // independent
+        let stream = sb.finish();
+        assert_eq!(stream.plan().waves().len(), 2);
+        // The independent op shares wave 0 with the first.
+        assert_eq!(stream.plan().waves()[0].len(), 2);
+        stream.plan().assert_valid();
+        let outs = stream.execute(&NativeBatch::new());
+        let expect_t = matmul(&a, &b);
+        assert!(close(&outs[t], &expect_t, 1e-13));
+        assert!(close(&outs[out], &matmul_tn(&a, &expect_t), 1e-13));
+        let mut e2 = matmul_tn(&a, &c);
+        e2.scale(2.0);
+        assert!(close(&outs[out2], &e2, 1e-13));
+    }
+
+    #[test]
+    fn accumulations_onto_one_slot_serialize() {
+        let mut rng = Rng::new(3);
+        let terms: Vec<(Matrix, Matrix)> =
+            (0..5).map(|_| (rng.normal_matrix(6, 2), rng.normal_matrix(2, 3))).collect();
+        let mut sb = StreamBuilder::new();
+        let y = sb.output(6, 3);
+        for (a, b) in &terms {
+            let (ar, br) = (sb.input(a), sb.input(b));
+            sb.gemm(Trans::No, Trans::No, -1.0, ar, br, 1.0, y);
+        }
+        let stream = sb.finish();
+        assert_eq!(stream.plan().waves().len(), 5, "WAW must serialize");
+        stream.plan().assert_valid();
+        let outs = stream.execute(&NativeBatch::new());
+        let mut expect = Matrix::zeros(6, 3);
+        for (a, b) in &terms {
+            expect.axpy(-1.0, &matmul(a, b));
+        }
+        assert!(close(&outs[y], &expect, 1e-13));
+    }
+
+    #[test]
+    fn sample_chain_matches_manual_chain() {
+        let mut rng = Rng::new(4);
+        let (m, k, bs) = (10usize, 3usize, 4usize);
+        let uk = rng.normal_matrix(m, k);
+        let vk = rng.normal_matrix(8, k);
+        let ui = rng.normal_matrix(7, 5);
+        let vi = rng.normal_matrix(8, 5);
+        let om = rng.normal_matrix(m, bs);
+        let d: Vec<f64> = (0..8).map(|i| 0.5 + i as f64).collect();
+        for dopt in [None, Some(d.as_slice())] {
+            let mut sb = StreamBuilder::new();
+            let omega = sb.input(&om);
+            let y = sb.output(7, bs);
+            sb.sample_chain(
+                &SampleChain { uk: &uk, vk: &vk, ui: &ui, vi: &vi, d: dopt, omega },
+                -1.0,
+                y,
+            );
+            let stream = sb.finish();
+            stream.plan().assert_valid();
+            let native = stream.execute(&NativeBatch::new());
+            let oracle = stream.execute(&RefBatch);
+            // Manual chain: ui (viᵀ ([d] (vk (ukᵀ Ω)))).
+            let mut t2 = matmul(&vk, &matmul_tn(&uk, &om));
+            if let Some(dv) = dopt {
+                crate::linalg::blas::scale_rows(&mut t2, dv);
+            }
+            let mut expect = matmul(&ui, &matmul_tn(&vi, &t2));
+            expect.scale(-1.0);
+            assert!(close(&native[y], &expect, 1e-12));
+            assert!(close(&oracle[y], &expect, 1e-12));
+        }
+    }
+
+    #[test]
+    fn apply_tile_both_kinds() {
+        let mut rng = Rng::new(5);
+        let dense = Tile::Dense(rng.normal_matrix(6, 6));
+        let lr = LowRank { u: rng.normal_matrix(6, 2), v: rng.normal_matrix(5, 2) };
+        let low = Tile::LowRank(lr);
+        let zero = Tile::LowRank(LowRank::zero(6, 5));
+        let x6 = rng.normal_matrix(6, 3);
+        let x5 = rng.normal_matrix(5, 3);
+        let mut sb = StreamBuilder::new();
+        let (x6r, x5r) = (sb.input(&x6), sb.input(&x5));
+        let y0 = sb.output(6, 3);
+        sb.apply_tile(&dense, x6r, 1.0, y0, false);
+        let y1 = sb.output(6, 3);
+        sb.apply_tile(&low, x5r, 1.0, y1, false);
+        let y2 = sb.output(5, 3);
+        sb.apply_tile(&low, x6r, 1.0, y2, true);
+        let y3 = sb.output(6, 3);
+        sb.apply_tile(&zero, x5r, 1.0, y3, false);
+        let stream = sb.finish();
+        let outs = stream.execute(&NativeBatch::new());
+        assert!(close(&outs[y0], &dense.apply(&x6), 1e-13));
+        assert!(close(&outs[y1], &low.apply(&x5), 1e-13));
+        assert!(close(&outs[y2], &low.apply_t(&x6), 1e-13));
+        assert_eq!(outs[y3].norm_max(), 0.0);
+    }
+
+    #[test]
+    fn empty_stream_returns_zeros() {
+        let mut sb = StreamBuilder::new();
+        let y = sb.output(3, 2);
+        let stream = sb.finish();
+        assert!(stream.is_empty());
+        let outs = stream.execute(&NativeBatch::new());
+        assert_eq!(outs[y].shape(), (3, 2));
+        assert_eq!(outs[y].norm_max(), 0.0);
+    }
+
+    #[test]
+    fn flop_accounting_matches_shapes() {
+        let mut rng = Rng::new(6);
+        let a = rng.normal_matrix(8, 5);
+        let b = rng.normal_matrix(5, 7);
+        let mut sb = StreamBuilder::new();
+        let (ar, br) = (sb.input(&a), sb.input(&b));
+        let y = sb.output(8, 7);
+        sb.gemm(Trans::No, Trans::No, 1.0, ar, br, 1.0, y);
+        let stream = sb.finish();
+        assert_eq!(stream.plan().flops(), 2 * 8 * 5 * 7);
+    }
+
+    #[test]
+    #[should_panic(expected = "aliases its destination")]
+    fn self_referential_gemm_rejected() {
+        let mut sb = StreamBuilder::new();
+        let y = sb.output(3, 3);
+        sb.gemm(Trans::No, Trans::No, 1.0, Arg::Out(y), Arg::Out(y), 1.0, y);
+    }
+
+    #[test]
+    #[should_panic(expected = "inner dimension")]
+    fn shape_mismatch_rejected() {
+        let a = Matrix::zeros(3, 4);
+        let b = Matrix::zeros(5, 2);
+        let mut sb = StreamBuilder::new();
+        let (ar, br) = (sb.input(&a), sb.input(&b));
+        let y = sb.output(3, 2);
+        sb.gemm(Trans::No, Trans::No, 1.0, ar, br, 1.0, y);
+    }
+}

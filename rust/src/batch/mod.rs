@@ -5,15 +5,32 @@
 //! threaded MKL on the CPU), plus a **dynamic batching** scheme that keeps
 //! the processing batch full while ARA tiles converge at different rates.
 //!
-//! On this testbed the execution substrate is a scoped-thread work pool
-//! ([`parallel_for`] / [`parallel_map`]); the scheduling layer —
-//! [`DynamicBatcher`] — is substrate-independent and is exactly the
-//! paper's Algorithm 5 bookkeeping: sort by rank, take a subset, retire
-//! converged tiles, refill from the remainder.
+//! Both halves of that story live here:
+//!
+//! * **Execution** — the non-uniform batched-GEMM op-stream
+//!   ([`gemm_batch`]): layers describe their tile products as
+//!   [`GemmOp`]s over a [`StreamBuilder`], the resulting [`BatchPlan`]
+//!   groups them into hazard-free waves, and a [`BatchedGemm`] executor
+//!   ([`NativeBatch`] in production, [`RefBatch`] as the testing oracle)
+//!   runs the waves on the worker pool with per-thread packing-arena
+//!   reuse. Every tile product in `ara/`, `factor/sample.rs`, `solve/`
+//!   and `tlr/construct.rs` dispatches through this one layer.
+//! * **Scheduling** — [`DynamicBatcher`], the paper's Algorithm 5
+//!   bookkeeping: sort by rank, take a subset, retire converged tiles,
+//!   refill from the remainder.
+//!
+//! The execution substrate is a scoped-thread work pool
+//! ([`parallel_for`] / [`parallel_map`]) with atomic index hand-out, so
+//! non-uniform job costs still load-balance.
 
 pub mod buffer;
+pub mod gemm_batch;
 
 pub use buffer::ParallelBuffers;
+pub use gemm_batch::{
+    run_single, Arg, BatchOp, BatchPlan, BatchedGemm, ExecStats, GemmOp, GemmStream, NativeBatch,
+    RefBatch, SampleChain, StreamBuilder,
+};
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 
@@ -57,15 +74,62 @@ pub fn parallel_for(n: usize, f: impl Fn(usize) + Sync) {
     });
 }
 
-/// Parallel map with result collection (ordered by index).
+/// Lock-free disjoint-slot access to a slice from the worker pool — the
+/// one audited `unsafe` hand-out shared by [`parallel_map`],
+/// [`parallel_for_each_mut`], and the batched-GEMM executor's slot table
+/// ([`gemm_batch::NativeBatch`]).
+///
+/// The soundness argument is the caller's dispatch discipline:
+/// [`parallel_for`] hands out every index in `0..n` exactly once, and
+/// the batch executor's wave invariants guarantee one writer per slot
+/// per wave with readers never overlapping a writer — so no per-item
+/// lock is needed, only disjointness. (The previous `parallel_map`
+/// wrapped every output slot in a `Mutex`, paying a lock acquisition
+/// per item on the hottest fan-out path; see EXPERIMENTS.md §Perf.)
+pub(crate) struct DisjointSlots<T> {
+    ptr: *mut T,
+    len: usize,
+}
+
+unsafe impl<T: Send> Sync for DisjointSlots<T> {}
+
+impl<T> DisjointSlots<T> {
+    pub(crate) fn new(items: &mut [T]) -> DisjointSlots<T> {
+        DisjointSlots { ptr: items.as_mut_ptr(), len: items.len() }
+    }
+
+    /// Exclusive reference to slot `i`.
+    ///
+    /// # Safety
+    /// The caller must guarantee no concurrent access (read or write)
+    /// to the same `i` — e.g. `parallel_for`'s exactly-once index
+    /// hand-out, or a batch plan's one-writer-per-wave invariant.
+    #[allow(clippy::mut_from_ref)]
+    pub(crate) unsafe fn slot(&self, i: usize) -> &mut T {
+        assert!(i < self.len, "slot index out of range");
+        &mut *self.ptr.add(i)
+    }
+
+    /// Shared reference to slot `i`.
+    ///
+    /// # Safety
+    /// The caller must guarantee no concurrent writer of the same `i`
+    /// (e.g. a batch plan's no-reads-of-written-slots wave invariant).
+    pub(crate) unsafe fn get(&self, i: usize) -> &T {
+        assert!(i < self.len, "slot index out of range");
+        &*self.ptr.add(i)
+    }
+}
+
+/// Parallel map with result collection (ordered by index: `out[i] = f(i)`).
 pub fn parallel_map<T: Send, F: Fn(usize) -> T + Sync>(n: usize, f: F) -> Vec<T> {
     let mut out: Vec<Option<T>> = (0..n).map(|_| None).collect();
     {
-        let slots: Vec<std::sync::Mutex<&mut Option<T>>> =
-            out.iter_mut().map(std::sync::Mutex::new).collect();
+        let slots = DisjointSlots::new(&mut out);
         parallel_for(n, |i| {
             let v = f(i);
-            **slots[i].lock().unwrap() = Some(v);
+            // SAFETY: parallel_for dispatches each index exactly once.
+            unsafe { *slots.slot(i) = Some(v) };
         });
     }
     out.into_iter().map(|v| v.unwrap()).collect()
@@ -73,10 +137,11 @@ pub fn parallel_map<T: Send, F: Fn(usize) -> T + Sync>(n: usize, f: F) -> Vec<T>
 
 /// Mutate each element of a slice in parallel.
 pub fn parallel_for_each_mut<T: Send>(items: &mut [T], f: impl Fn(usize, &mut T) + Sync) {
-    let slots: Vec<std::sync::Mutex<&mut T>> = items.iter_mut().map(std::sync::Mutex::new).collect();
-    parallel_for(slots.len(), |i| {
-        let mut guard = slots[i].lock().unwrap();
-        f(i, &mut guard);
+    let n = items.len();
+    let slots = DisjointSlots::new(items);
+    parallel_for(n, |i| {
+        // SAFETY: parallel_for dispatches each index exactly once.
+        f(i, unsafe { slots.slot(i) });
     });
 }
 
@@ -94,6 +159,14 @@ pub struct BatchStats {
     pub max_in_flight: usize,
     /// Per-item number of rounds it stayed in the batch.
     pub item_rounds: Vec<usize>,
+    /// Execution waves run by the batched-GEMM layer on this run's
+    /// behalf (see [`gemm_batch`]).
+    pub gemm_waves: usize,
+    /// GEMM-stream ops executed; `gemm_ops / gemm_waves` is the realized
+    /// wave occupancy.
+    pub gemm_ops: usize,
+    /// FLOPs issued through the batched-GEMM layer.
+    pub gemm_flops: u64,
 }
 
 impl BatchStats {

@@ -142,10 +142,104 @@ pub fn loglog_slope(xs: &[f64], ys: &[f64]) -> f64 {
     (n * sxy - sx * sy) / (n * sxx - sx * sx)
 }
 
-/// Measured throughput of the native non-uniform batched GEMM engine on
-/// sampling-shaped (`m×k · k×bs`) and projection-shaped (`m×k)ᵀ · m×bs`)
-/// batches — the analogue of the paper's MAGMA roofline bracket in
-/// Fig 8b. Ranks are drawn uniformly from `k_lo..=k_hi`.
+/// Loop-path vs batched-executor throughput on the roofline workload
+/// (GFLOP/s each); see [`roofline_loop_vs_batch`].
+#[derive(Debug, Clone, Copy)]
+pub struct RooflineComparison {
+    /// `parallel_map` over per-call `matmul` (the pre-op-stream path),
+    /// sampling shape `(m×k)(k×bs)`.
+    pub loop_ab: f64,
+    /// The [`crate::batch::NativeBatch`] op-stream executor, same shape.
+    pub batch_ab: f64,
+    /// Loop path, projection shape `(m×k)ᵀ(m×bs)`.
+    pub loop_atb: f64,
+    /// Batched executor, projection shape.
+    pub batch_atb: f64,
+}
+
+/// Measure the non-uniform batched-GEMM workload of paper Fig 8b two
+/// ways: the old `parallel_for`-over-`matmul` loop (every call allocates
+/// fresh packing panels) against the op-stream executor (plan marshaled
+/// once, per-worker packing arenas reused across ops and repetitions).
+/// Ranks are drawn uniformly from `k_lo..=k_hi` — the skewed-rank
+/// regime where per-call overheads are the largest share of runtime.
+pub fn roofline_loop_vs_batch(
+    m: usize,
+    k_lo: usize,
+    k_hi: usize,
+    bs: usize,
+    batch: usize,
+    seed: u64,
+) -> RooflineComparison {
+    use crate::batch::{parallel_map, NativeBatch, StreamBuilder};
+    use crate::linalg::gemm::{matmul, matmul_tn, Trans};
+    let mut rng = Rng::new(seed);
+    let ks: Vec<usize> = (0..batch).map(|_| k_lo + rng.below(k_hi - k_lo + 1)).collect();
+    let lhs: Vec<Matrix> = ks.iter().map(|&k| rng.normal_matrix(m, k)).collect();
+    let rhs_ab: Vec<Matrix> = ks.iter().map(|&k| rng.normal_matrix(k, bs)).collect();
+    let rhs_atb: Vec<Matrix> = (0..batch).map(|_| rng.normal_matrix(m, bs)).collect();
+
+    let flops: u64 = ks.iter().map(|&k| 2 * (m * k * bs) as u64).sum();
+    let reps = 5;
+    let gflops = |secs: f64| reps as f64 * flops as f64 / secs / 1e9;
+    let exec = NativeBatch::new();
+
+    // Loop path, AB: (m×k)(k×bs) per call.
+    let t0 = std::time::Instant::now();
+    for _ in 0..reps {
+        let out = parallel_map(batch, |i| matmul(&lhs[i], &rhs_ab[i]));
+        std::hint::black_box(&out);
+    }
+    let loop_ab = gflops(t0.elapsed().as_secs_f64());
+    // Loop path, AᵀB: (m×k)ᵀ(m×bs) per call.
+    let t0 = std::time::Instant::now();
+    for _ in 0..reps {
+        let out = parallel_map(batch, |i| matmul_tn(&lhs[i], &rhs_atb[i]));
+        std::hint::black_box(&out);
+    }
+    let loop_atb = gflops(t0.elapsed().as_secs_f64());
+
+    // Batched executor: marshal each shape once, then execute.
+    let stream_ab = {
+        let mut sb = StreamBuilder::new();
+        for i in 0..batch {
+            let a = sb.input(&lhs[i]);
+            let b = sb.input(&rhs_ab[i]);
+            let dst = sb.output(m, bs);
+            sb.gemm(Trans::No, Trans::No, 1.0, a, b, 1.0, dst);
+        }
+        sb.finish()
+    };
+    let t0 = std::time::Instant::now();
+    for _ in 0..reps {
+        let out = stream_ab.execute(&exec);
+        std::hint::black_box(&out);
+    }
+    let batch_ab = gflops(t0.elapsed().as_secs_f64());
+
+    let stream_atb = {
+        let mut sb = StreamBuilder::new();
+        for i in 0..batch {
+            let a = sb.input(&lhs[i]);
+            let b = sb.input(&rhs_atb[i]);
+            let dst = sb.output(ks[i], bs);
+            sb.gemm(Trans::Yes, Trans::No, 1.0, a, b, 1.0, dst);
+        }
+        sb.finish()
+    };
+    let t0 = std::time::Instant::now();
+    for _ in 0..reps {
+        let out = stream_atb.execute(&exec);
+        std::hint::black_box(&out);
+    }
+    let batch_atb = gflops(t0.elapsed().as_secs_f64());
+
+    RooflineComparison { loop_ab, batch_ab, loop_atb, batch_atb }
+}
+
+/// Batched-executor throughput on sampling-shaped (`m×k · k×bs`) and
+/// projection-shaped (`(m×k)ᵀ · m×bs`) batches — the analogue of the
+/// paper's MAGMA roofline bracket in Fig 8b.
 pub fn batched_gemm_roofline(
     m: usize,
     k_lo: usize,
@@ -154,31 +248,8 @@ pub fn batched_gemm_roofline(
     batch: usize,
     seed: u64,
 ) -> (f64, f64) {
-    use crate::batch::parallel_map;
-    use crate::linalg::gemm::{matmul, matmul_tn};
-    let mut rng = Rng::new(seed);
-    let ks: Vec<usize> = (0..batch).map(|_| k_lo + rng.below(k_hi - k_lo + 1)).collect();
-    let lhs: Vec<Matrix> = ks.iter().map(|&k| rng.normal_matrix(m, k)).collect();
-    let rhs_ab: Vec<Matrix> = ks.iter().map(|&k| rng.normal_matrix(k, bs)).collect();
-    let rhs_atb: Vec<Matrix> = (0..batch).map(|_| rng.normal_matrix(m, bs)).collect();
-
-    let flops_ab: u64 = ks.iter().map(|&k| 2 * (m * k * bs) as u64).sum();
-    // AB: (m×k)(k×bs), batched.
-    let reps = 5;
-    let t0 = std::time::Instant::now();
-    for _ in 0..reps {
-        let out = parallel_map(batch, |i| matmul(&lhs[i], &rhs_ab[i]));
-        std::hint::black_box(&out);
-    }
-    let ab = reps as f64 * flops_ab as f64 / t0.elapsed().as_secs_f64() / 1e9;
-    // AᵀB: (m×k)ᵀ(m×bs), batched.
-    let t0 = std::time::Instant::now();
-    for _ in 0..reps {
-        let out = parallel_map(batch, |i| matmul_tn(&lhs[i], &rhs_atb[i]));
-        std::hint::black_box(&out);
-    }
-    let atb = reps as f64 * flops_ab as f64 / t0.elapsed().as_secs_f64() / 1e9;
-    (ab, atb)
+    let c = roofline_loop_vs_batch(m, k_lo, k_hi, bs, batch, seed);
+    (c.batch_ab, c.batch_atb)
 }
 
 /// Memory of a factor's tiles after an SVD recompression pass at `eps` —
@@ -259,6 +330,13 @@ mod tests {
     fn roofline_is_positive() {
         let (ab, atb) = batched_gemm_roofline(64, 8, 16, 8, 16, 4);
         assert!(ab > 0.0 && atb > 0.0);
+    }
+
+    #[test]
+    fn roofline_comparison_runs_both_paths() {
+        let c = roofline_loop_vs_batch(48, 4, 12, 8, 24, 9);
+        assert!(c.loop_ab > 0.0 && c.batch_ab > 0.0);
+        assert!(c.loop_atb > 0.0 && c.batch_atb > 0.0);
     }
 
     #[test]

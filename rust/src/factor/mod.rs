@@ -364,10 +364,13 @@ pub(crate) fn panel_ara(
         trim: true,
     };
     let out = batched_ara(&ops, &priorities, opts.batch_capacity, &ara_opts, opts.seed ^ ((k as u64) << 20));
-    // Aggregate batch stats.
+    // Aggregate batch stats (scheduler occupancy + executor waves/FLOPs).
     stats.batch.rounds += out.stats.rounds;
     stats.batch.occupancy_sum += out.stats.occupancy_sum;
     stats.batch.max_in_flight = stats.batch.max_in_flight.max(out.stats.max_in_flight);
+    stats.batch.gemm_waves += out.stats.gemm_waves;
+    stats.batch.gemm_ops += out.stats.gemm_ops;
+    stats.batch.gemm_flops += out.stats.gemm_flops;
     out.tiles
 }
 

@@ -8,27 +8,22 @@
 //! `Y += U(i,j) ( V(i,j)ᵀ ( V(k,j) ( U(k,j)ᵀ Ω )))`      (Eq 2)
 //!
 //! (5 products with the diagonal `D(j,j)` interposed for LDLᵀ, Eq 3) —
-//! the tile is never materialized. This chain is also the computation the
-//! L1 Pallas kernel implements (`python/compile/kernels/sample.py`); the
-//! PJRT runtime backend routes `sample`/`sample_t` through the AOT
-//! artifact instead of the native gemm path.
+//! the tile is never materialized. The chain is not computed here:
+//! [`LeftSampler::emit_sample`] lowers it as fused
+//! [`SampleChain`](crate::batch::SampleChain) descriptors onto the
+//! batched-GEMM op-stream, so `batched_ara` marshals every in-flight
+//! panel tile's chains into one non-uniform batch per round. The same
+//! chain is the computation the L1 Pallas kernel implements
+//! (`python/compile/kernels/sample.py`); the PJRT runtime backend routes
+//! it through the AOT artifact instead of the native executor.
 
 use crate::ara::sampler::Sampler;
+use crate::batch::{run_single, Arg, NativeBatch, SampleChain, StreamBuilder};
 use crate::linalg::blas::scale_rows;
 use crate::linalg::matrix::Matrix;
 use crate::profile::{add_flops, Phase, Timer};
 use crate::tlr::matrix::TlrMatrix;
 use crate::tlr::tile::Tile;
-
-/// FLOPs of applying a tile to a `bs`-column block (the 2mnk convention).
-fn apply_flops(t: &Tile, bs: usize) -> u64 {
-    match t {
-        Tile::Dense(m) => 2 * (m.rows() * m.cols() * bs) as u64,
-        Tile::LowRank(lr) => {
-            2 * (lr.rank() * (lr.rows() + lr.cols()) * bs) as u64
-        }
-    }
-}
 
 /// Samples `Â(i,k)` of Eq 1 against the partially-factored TLR matrix.
 ///
@@ -56,6 +51,20 @@ impl<'a> LeftSampler<'a> {
     }
 }
 
+impl LeftSampler<'_> {
+    /// Evaluate one side of the sampler through a private single-chain
+    /// stream (used by the standalone `sample`/`sample_t` entry points;
+    /// `batched_ara` emits into a shared stream instead). The
+    /// phase-tagged executor books the op time and FLOPs.
+    fn sample_stream(&self, omega: &Matrix, transpose: bool, phase: Phase) -> Matrix {
+        let rows = if transpose { self.cols() } else { self.rows() };
+        run_single(rows, omega.cols(), &NativeBatch::for_phase(phase), |sb, dst| {
+            self.emit_sample(sb, omega, transpose, 1.0, dst)
+        })
+        .expect("LeftSampler always emits")
+    }
+}
+
 impl Sampler for LeftSampler<'_> {
     fn rows(&self) -> usize {
         self.a.tile_size(self.i)
@@ -67,51 +76,55 @@ impl Sampler for LeftSampler<'_> {
 
     /// `Y = Â(i,k) Ω` — Alg 4 forward chain.
     fn sample(&self, omega: &Matrix) -> Matrix {
-        let mut t = Timer::new(Phase::Sample);
-        let bs = omega.cols();
-        let (i, k) = (self.i, self.k);
-        // Original tile contribution.
-        let aik = self.a.tile(i, k);
-        let mut y = aik.apply(omega);
-        t.add_flops(apply_flops(aik, bs));
-        // Left-looking update chain.
-        for j in 0..k {
-            let lkj = self.a.tile(k, j);
-            let lij = self.a.tile(i, j);
-            // W = L(k,j)ᵀ Ω   (two GEMMs through the low-rank factors)
-            let mut w = lkj.apply_t(omega);
-            if let Some(d) = self.dblocks {
-                scale_rows(&mut w, &d[j]); // Eq 3: interpose D(j,j)
-            }
-            // Y -= L(i,j) W  (two more GEMMs)
-            let upd = lij.apply(&w);
-            y.axpy(-1.0, &upd);
-            t.add_flops(apply_flops(lkj, bs) + apply_flops(lij, bs));
-        }
-        y
+        self.sample_stream(omega, false, Phase::Sample)
     }
 
     /// `Z = Â(i,k)ᵀ Ω` — used for the projection phase (`sampleLeftT`).
     fn sample_t(&self, omega: &Matrix) -> Matrix {
-        let mut t = Timer::new(Phase::Projection);
-        let bs = omega.cols();
+        self.sample_stream(omega, true, Phase::Projection)
+    }
+
+    /// Lower Eq 1 onto the op-stream: the original-tile product plus one
+    /// fused Eq-2/Eq-3 [`SampleChain`] per finished column `j < k`. The
+    /// transpose side swaps the roles of the `(i,·)` and `(k,·)`
+    /// factors: `(L(i,j) [D] L(k,j)ᵀ)ᵀ = L(k,j) [D] L(i,j)ᵀ`.
+    fn emit_sample<'a>(
+        &'a self,
+        sb: &mut StreamBuilder<'a>,
+        omega: &'a Matrix,
+        transpose: bool,
+        alpha: f64,
+        dst: usize,
+    ) -> bool {
         let (i, k) = (self.i, self.k);
-        let aik = self.a.tile(i, k);
-        let mut z = aik.apply_t(omega);
-        t.add_flops(apply_flops(aik, bs));
+        let om = sb.input(omega);
+        sb.apply_tile(self.a.tile(i, k), om, alpha, dst, transpose);
         for j in 0..k {
             let lkj = self.a.tile(k, j);
             let lij = self.a.tile(i, j);
-            // Âᵀ = A(i,k)ᵀ − Σ L(k,j) [D] L(i,j)ᵀ
-            let mut w = lij.apply_t(omega);
-            if let Some(d) = self.dblocks {
-                scale_rows(&mut w, &d[j]);
+            let (first, second) = if transpose { (lij, lkj) } else { (lkj, lij) };
+            let d = self.dblocks.map(|d| d[j].as_slice());
+            match (first, second) {
+                (Tile::LowRank(f), Tile::LowRank(s)) => {
+                    sb.sample_chain(
+                        &SampleChain { uk: &f.u, vk: &f.v, ui: &s.u, vi: &s.v, d, omega: om },
+                        -alpha,
+                        dst,
+                    );
+                }
+                _ => {
+                    // Dense update tiles (only if a caller chose dense
+                    // storage): the unfused two-apply form.
+                    let w = sb.output(first.cols(), omega.cols());
+                    sb.apply_tile(first, om, 1.0, w, true);
+                    if let Some(dv) = d {
+                        sb.scale_rows(w, dv);
+                    }
+                    sb.apply_tile(second, Arg::Out(w), -alpha, dst, false);
+                }
             }
-            let upd = lkj.apply(&w);
-            z.axpy(-1.0, &upd);
-            t.add_flops(apply_flops(lkj, bs) + apply_flops(lij, bs));
         }
-        z
+        true
     }
 }
 

@@ -23,6 +23,38 @@
 //!   artifacts and runs the sampling hot loop through them, proving the
 //!   three-layer composition;
 //! * phase/FLOP profiling ([`profile`]) used by the experiment reports.
+//!
+//! ## The op-stream architecture
+//!
+//! The paper's profile (Fig 8a) puts 80–90% of the factorization inside
+//! small variable-size GEMMs, so the crate routes **every** tile product
+//! through a single dispatch point: the batched-GEMM op-stream in
+//! [`batch::gemm_batch`]. A layer describes its work as
+//! [`batch::GemmOp`]s (plus the fused Eq-2/Eq-3 sampling chains,
+//! [`batch::SampleChain`]) on a [`batch::StreamBuilder`]; the sealed
+//! [`batch::BatchPlan`] groups ops into hazard-free *waves*; and a
+//! [`batch::BatchedGemm`] executor runs the waves — the production
+//! [`batch::NativeBatch`] on the worker pool with per-thread packing
+//! arenas, or the naive [`batch::RefBatch`] oracle in tests.
+//!
+//! Producers of op-streams:
+//!
+//! * [`ara::batched_ara`] — each dynamic-batching round merges every
+//!   in-flight tile's sampling chain into one plan (and the projection
+//!   `B = AᵀQ` into another);
+//! * [`factor::sample::LeftSampler`] — emits the left-looking Eq-1
+//!   expression as one original-tile product plus fused chains;
+//! * [`solve`] — TLR matvecs and triangular-solve updates;
+//! * [`tlr::construct`] — per-tile compression via [`ara::ara`], whose
+//!   samples run through the same layer (inline for tiny plans, so the
+//!   outer tile parallelism composes).
+//!
+//! Scheduling never changes values — op results depend only on operand
+//! values, fixed by the hazard ordering — so batch capacity and executor
+//! choice are performance knobs, not numerics knobs. Executor occupancy
+//! and FLOP counts feed [`batch::BatchStats`] /
+//! [`profile::batch_exec_snapshot`]; see EXPERIMENTS.md §Perf for the
+//! batched-vs-loop numbers from `benches/gemm_roofline.rs`.
 
 pub mod apps;
 pub mod ara;

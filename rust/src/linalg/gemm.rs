@@ -28,10 +28,46 @@ const NC: usize = 512;
 const MR: usize = 16;
 const NR: usize = 4;
 
+/// Reusable packing buffers for [`gemm_with`].
+///
+/// A plain [`gemm`] call allocates (and zero-fills) fresh `MC×KC` /
+/// `KC×NC` panel copies; for the factorization's many small GEMMs that
+/// allocation used to dominate their runtime (EXPERIMENTS.md §Perf).
+/// The batched executor ([`crate::batch::NativeBatch`]) keeps one
+/// workspace per worker thread and reuses it across every op of a
+/// [`crate::batch::BatchPlan`].
+#[derive(Debug, Default)]
+pub struct GemmWorkspace {
+    apack: Vec<f64>,
+    bpack: Vec<f64>,
+}
+
+impl GemmWorkspace {
+    pub fn new() -> GemmWorkspace {
+        GemmWorkspace { apack: Vec::new(), bpack: Vec::new() }
+    }
+}
+
 /// `C := alpha * op(A) * op(B) + beta * C`.
 ///
 /// Shapes: `op(A)` is `m×k`, `op(B)` is `k×n`, `C` is `m×n`.
 pub fn gemm(ta: Trans, tb: Trans, alpha: f64, a: &Matrix, b: &Matrix, beta: f64, c: &mut Matrix) {
+    gemm_with(ta, tb, alpha, a, b, beta, c, &mut GemmWorkspace::new());
+}
+
+/// [`gemm`] with caller-provided packing buffers (no per-call allocation
+/// once the workspace has warmed up to the largest panel it has seen).
+#[allow(clippy::too_many_arguments)]
+pub fn gemm_with(
+    ta: Trans,
+    tb: Trans,
+    alpha: f64,
+    a: &Matrix,
+    b: &Matrix,
+    beta: f64,
+    c: &mut Matrix,
+    ws: &mut GemmWorkspace,
+) {
     let (m, ka) = match ta {
         Trans::No => a.shape(),
         Trans::Yes => (a.cols(), a.rows()),
@@ -63,18 +99,24 @@ pub fn gemm(ta: Trans, tb: Trans, alpha: f64, a: &Matrix, b: &Matrix, beta: f64,
     let mc_max = MC.min(m).div_ceil(MR) * MR;
     let kc_max = KC.min(k);
     let nc_max = NC.min(n).div_ceil(NR) * NR;
-    let mut apack = vec![0.0f64; mc_max * kc_max];
-    let mut bpack = vec![0.0f64; kc_max * nc_max];
+    // The pack routines overwrite every entry they cover (padding
+    // included), so a larger leftover buffer never leaks stale values.
+    if ws.apack.len() < mc_max * kc_max {
+        ws.apack.resize(mc_max * kc_max, 0.0);
+    }
+    if ws.bpack.len() < kc_max * nc_max {
+        ws.bpack.resize(kc_max * nc_max, 0.0);
+    }
 
     for jc in (0..n).step_by(NC) {
         let nc = NC.min(n - jc);
         for pc in (0..k).step_by(KC) {
             let kc = KC.min(k - pc);
-            pack_b(tb, b, pc, jc, kc, nc, &mut bpack);
+            pack_b(tb, b, pc, jc, kc, nc, &mut ws.bpack);
             for ic in (0..m).step_by(MC) {
                 let mc = MC.min(m - ic);
-                pack_a(ta, a, ic, pc, mc, kc, &mut apack);
-                macro_block(alpha, &apack, &bpack, mc, nc, kc, c, ic, jc);
+                pack_a(ta, a, ic, pc, mc, kc, &mut ws.apack);
+                macro_block(alpha, &ws.apack, &ws.bpack, mc, nc, kc, c, ic, jc);
             }
         }
     }
@@ -284,6 +326,23 @@ mod tests {
         check_case(MR, NR, 1, Trans::No, Trans::No, 4);
         check_case(MC + 3, NC / 4 + 1, KC + 5, Trans::No, Trans::No, 5);
         check_case(130, 70, 300, Trans::Yes, Trans::No, 6);
+    }
+
+    #[test]
+    fn gemm_with_reused_workspace_matches_fresh() {
+        // Shrinking then growing shapes through one workspace must not
+        // leak stale panel data (pack overwrites its full coverage).
+        let mut ws = GemmWorkspace::new();
+        let mut rng = Rng::new(77);
+        for &(m, n, k) in &[(130usize, 70usize, 300usize), (5, 4, 3), (64, 64, 64), (7, 300, 9)] {
+            let a = rng.normal_matrix(m, k);
+            let b = rng.normal_matrix(k, n);
+            let mut c1 = rng.normal_matrix(m, n);
+            let mut c2 = c1.clone();
+            gemm(Trans::No, Trans::No, 1.3, &a, &b, 0.7, &mut c1);
+            gemm_with(Trans::No, Trans::No, 1.3, &a, &b, 0.7, &mut c2, &mut ws);
+            assert_eq!(c1, c2, "m={m} n={n} k={k}");
+        }
     }
 
     #[test]

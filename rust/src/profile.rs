@@ -48,11 +48,65 @@ pub const PHASE_NAMES: [&str; N_PHASES] = [
 static NANOS: [AtomicU64; N_PHASES] = [const { AtomicU64::new(0) }; N_PHASES];
 static FLOPS: [AtomicU64; N_PHASES] = [const { AtomicU64::new(0) }; N_PHASES];
 
+// Batched-GEMM executor counters (crate::batch::NativeBatch reports every
+// plan it runs): wave count, op count, and FLOPs issued through the
+// op-stream. `ops / waves` is the realized wave occupancy — the
+// execution-side companion of the DynamicBatcher's scheduling occupancy.
+static BATCH_WAVES: AtomicU64 = AtomicU64::new(0);
+static BATCH_OPS: AtomicU64 = AtomicU64::new(0);
+static BATCH_FLOPS: AtomicU64 = AtomicU64::new(0);
+
 /// Reset all counters (call before a profiled run).
 pub fn reset() {
     for i in 0..N_PHASES {
         NANOS[i].store(0, Ordering::Relaxed);
         FLOPS[i].store(0, Ordering::Relaxed);
+    }
+    BATCH_WAVES.store(0, Ordering::Relaxed);
+    BATCH_OPS.store(0, Ordering::Relaxed);
+    BATCH_FLOPS.store(0, Ordering::Relaxed);
+}
+
+/// Record one executed batch plan (called by the batched-GEMM executor).
+pub fn add_batch_exec(waves: u64, ops: u64, flops: u64) {
+    BATCH_WAVES.fetch_add(waves, Ordering::Relaxed);
+    BATCH_OPS.fetch_add(ops, Ordering::Relaxed);
+    BATCH_FLOPS.fetch_add(flops, Ordering::Relaxed);
+}
+
+/// Snapshot of the batched-GEMM executor counters.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct BatchExecReport {
+    pub waves: u64,
+    pub ops: u64,
+    pub flops: u64,
+}
+
+impl BatchExecReport {
+    /// Difference vs an earlier snapshot.
+    pub fn since(&self, earlier: &BatchExecReport) -> BatchExecReport {
+        BatchExecReport {
+            waves: self.waves - earlier.waves,
+            ops: self.ops - earlier.ops,
+            flops: self.flops - earlier.flops,
+        }
+    }
+
+    /// Mean ops per wave — how full the execution batches actually ran.
+    pub fn mean_wave_width(&self) -> f64 {
+        if self.waves == 0 {
+            0.0
+        } else {
+            self.ops as f64 / self.waves as f64
+        }
+    }
+}
+
+pub fn batch_exec_snapshot() -> BatchExecReport {
+    BatchExecReport {
+        waves: BATCH_WAVES.load(Ordering::Relaxed),
+        ops: BATCH_OPS.load(Ordering::Relaxed),
+        flops: BATCH_FLOPS.load(Ordering::Relaxed),
     }
 }
 
@@ -192,6 +246,18 @@ mod tests {
         let after = snapshot().since(&before);
         assert!(after.nanos[Phase::Sample as usize] >= 1_000_000);
         assert_eq!(after.flops[Phase::Sample as usize], 1000);
+    }
+
+    #[test]
+    fn batch_exec_counters_accumulate() {
+        let before = batch_exec_snapshot();
+        add_batch_exec(2, 10, 1000);
+        let after = batch_exec_snapshot().since(&before);
+        // Other tests may execute plans concurrently; assert lower bounds.
+        assert!(after.waves >= 2);
+        assert!(after.ops >= 10);
+        assert!(after.flops >= 1000);
+        assert!(after.mean_wave_width() > 0.0);
     }
 
     #[test]

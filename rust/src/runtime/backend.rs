@@ -10,10 +10,10 @@
 
 use super::engine::{PjrtEngine, TermRef};
 use crate::ara::sampler::Sampler;
-use crate::linalg::blas::scale_rows;
+use crate::batch::{run_single, NativeBatch, SampleChain};
 use crate::linalg::matrix::Matrix;
 use crate::tlr::matrix::TlrMatrix;
-use crate::tlr::tile::Tile;
+use crate::tlr::tile::{LowRank, Tile};
 
 /// Which execution engine the factorization samples through.
 #[derive(Clone, Copy, Default)]
@@ -81,16 +81,21 @@ impl<'a> PjrtLeftSampler<'a> {
                 .expect("pjrt tile_apply failed")
                 .pop()
                 .unwrap()
-        } else if transpose {
-            self.a.tile(i, k).apply_t(omega)
         } else {
-            self.a.tile(i, k).apply(omega)
+            // Oversize rank: native batched-GEMM fallback.
+            let rows = if transpose { aik.cols() } else { aik.rows() };
+            run_single(rows, omega.cols(), &NativeBatch::new(), |sb, dst| {
+                let om = sb.input(omega);
+                sb.apply_tile(self.a.tile(i, k), om, 1.0, dst, transpose);
+                true
+            })
+            .unwrap()
         };
 
         // Update terms, marshaled into one batched launch; outlier ranks
         // fall back to the native chain.
         let mut terms: Vec<TermRef> = Vec::new();
-        let mut native: Vec<usize> = Vec::new();
+        let mut native: Vec<(usize, &LowRank, &LowRank)> = Vec::new();
         for j in 0..k {
             let (lkj, lij) = (self.a.tile(k, j), self.a.tile(i, j));
             let (lkj, lij) = match (lkj, lij) {
@@ -101,7 +106,7 @@ impl<'a> PjrtLeftSampler<'a> {
                 continue;
             }
             if lkj.rank() > kmax || lij.rank() > kmax {
-                native.push(j);
+                native.push((j, lkj, lij));
                 continue;
             }
             // Kernel chain: ui (viᵀ ([d] (vk (ukᵀ Ω)))). Forward wants
@@ -123,15 +128,30 @@ impl<'a> PjrtLeftSampler<'a> {
                 y.axpy(-1.0, &upd);
             }
         }
-        for j in native {
-            let (lkj, lij) = (self.a.tile(k, j), self.a.tile(i, j));
-            let (first, second) = if transpose { (lij, lkj) } else { (lkj, lij) };
-            let mut w = first.apply_t(omega);
-            if let Some(d) = self.dblocks {
-                scale_rows(&mut w, &d[j]);
-            }
-            let upd = second.apply(&w);
-            y.axpy(-1.0, &upd);
+        // Outlier-rank terms: the same fused chains, issued through the
+        // native batched-GEMM layer instead of the PJRT artifact.
+        if !native.is_empty() {
+            let upd = run_single(y.rows(), omega.cols(), &NativeBatch::new(), |sb, dst| {
+                let om = sb.input(omega);
+                for &(j, lkj, lij) in &native {
+                    let (first, second) = if transpose { (lij, lkj) } else { (lkj, lij) };
+                    sb.sample_chain(
+                        &SampleChain {
+                            uk: &first.u,
+                            vk: &first.v,
+                            ui: &second.u,
+                            vi: &second.v,
+                            d: self.dblocks.map(|d| d[j].as_slice()),
+                            omega: om,
+                        },
+                        -1.0,
+                        dst,
+                    );
+                }
+                true
+            })
+            .unwrap();
+            y.axpy(1.0, &upd);
         }
         y
     }

@@ -16,6 +16,7 @@
 //! larger than `b` are split across launches.
 
 use super::manifest::{Manifest, ManifestError, Variant};
+use super::xla;
 use crate::linalg::matrix::Matrix;
 use crate::profile::{Phase, Timer};
 use std::collections::HashMap;

@@ -10,12 +10,16 @@
 //! * [`json`] — dependency-free JSON parsing for the manifest;
 //! * [`manifest`] — artifact registry + variant selection;
 //! * [`engine`] — PJRT client, compile-once cache, padding contract;
-//! * [`backend`] — the `Sampler` impl that plugs into batched ARA.
+//! * [`backend`] — the `Sampler` impl that plugs into batched ARA;
+//! * [`xla`] — the in-tree API shim for the PJRT wrapper crate (the
+//!   repository builds dependency-free; swap the shim for the real
+//!   `xla` crate to enable the backend — see the module docs).
 
 pub mod backend;
 pub mod engine;
 pub mod json;
 pub mod manifest;
+pub mod xla;
 
 pub use backend::{Backend, PjrtLeftSampler};
 pub use engine::{EngineStats, PjrtEngine, RuntimeError, TermRef};

@@ -1,0 +1,158 @@
+//! In-tree stand-in for the `xla` PJRT wrapper crate.
+//!
+//! The real backend links libxla's PJRT C API and is only available on
+//! hosts with the XLA toolchain installed. This repository must build
+//! dependency-free (the container bakes no crates registry), so the
+//! runtime is compiled against this API-compatible shim instead:
+//! [`PjRtClient::cpu`] reports an unavailability error, which
+//! [`super::engine::PjrtEngine::new`] surfaces as
+//! [`super::engine::RuntimeError::Xla`]. Every caller already handles
+//! that path — tests skip when no artifacts/engine exist, and the CLI
+//! prints the error — so the native batched-gemm backend remains the
+//! default everywhere.
+//!
+//! To run against real PJRT, replace this module with the actual `xla`
+//! crate; `engine.rs` is written against exactly this surface.
+
+/// Error type mirroring `xla::Error` (the engine only formats it).
+#[derive(Debug, Clone)]
+pub struct Error(pub String);
+
+impl std::fmt::Display for Error {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+fn unavailable() -> Error {
+    Error("PJRT backend not compiled in (in-tree xla shim; native backend only)".to_string())
+}
+
+/// A host literal: flat f64 data plus dimensions.
+#[derive(Debug, Clone)]
+pub struct Literal {
+    data: Vec<f64>,
+    dims: Vec<i64>,
+}
+
+impl Literal {
+    /// Rank-1 literal over a host slice.
+    pub fn vec1(data: &[f64]) -> Literal {
+        Literal { data: data.to_vec(), dims: vec![data.len() as i64] }
+    }
+
+    /// Reshape without reordering (element count must match).
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal, Error> {
+        let count: i64 = dims.iter().product();
+        if count != self.data.len() as i64 {
+            return Err(Error(format!(
+                "reshape: {} elements into {dims:?}",
+                self.data.len()
+            )));
+        }
+        Ok(Literal { data: self.data.clone(), dims: dims.to_vec() })
+    }
+
+    /// Unwrap a 1-tuple result (aot.py lowers with `return_tuple=True`).
+    pub fn to_tuple1(&self) -> Result<Literal, Error> {
+        Err(unavailable())
+    }
+
+    /// Copy out as a host vector.
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>, Error> {
+        Ok(self.data.iter().map(|&x| T::from_f64(x)).collect())
+    }
+
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+}
+
+/// Element types a [`Literal`] can be read back as.
+pub trait NativeType {
+    fn from_f64(x: f64) -> Self;
+}
+
+impl NativeType for f64 {
+    fn from_f64(x: f64) -> f64 {
+        x
+    }
+}
+
+/// Parsed HLO module (text form).
+#[derive(Debug, Clone)]
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto, Error> {
+        Err(unavailable())
+    }
+}
+
+/// A computation ready for compilation.
+#[derive(Debug, Clone)]
+pub struct XlaComputation;
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation
+    }
+}
+
+/// Device buffer handle returned by an execution.
+#[derive(Debug)]
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal, Error> {
+        Err(unavailable())
+    }
+}
+
+/// Compiled executable handle.
+#[derive(Debug)]
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    pub fn execute<L>(&self, _args: &[L]) -> Result<Vec<Vec<PjRtBuffer>>, Error> {
+        Err(unavailable())
+    }
+}
+
+/// PJRT client handle.
+#[derive(Debug)]
+pub struct PjRtClient;
+
+impl PjRtClient {
+    /// The shim has no PJRT runtime: constructing the CPU client fails,
+    /// and the engine surfaces that as `RuntimeError::Xla`.
+    pub fn cpu() -> Result<PjRtClient, Error> {
+        Err(unavailable())
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable, Error> {
+        Err(unavailable())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn client_reports_unavailable() {
+        let err = PjRtClient::cpu().unwrap_err();
+        assert!(err.to_string().contains("shim"));
+    }
+
+    #[test]
+    fn literal_roundtrip() {
+        let l = Literal::vec1(&[1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        let r = l.reshape(&[2, 3]).unwrap();
+        assert_eq!(r.dims(), &[2, 3]);
+        assert_eq!(r.to_vec::<f64>().unwrap(), vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        assert!(l.reshape(&[7]).is_err());
+    }
+}

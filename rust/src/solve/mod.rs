@@ -7,7 +7,7 @@ pub mod cg;
 
 pub use cg::{pcg, CgResult};
 
-use crate::batch::parallel_map;
+use crate::batch::{Arg, NativeBatch, StreamBuilder};
 use crate::factor::{CholFactor, LdlFactor};
 use crate::linalg::blas::trsm_lower;
 use crate::linalg::matrix::Matrix;
@@ -15,86 +15,101 @@ use crate::linalg::norms::SymOp;
 use crate::linalg::{Side, Trans};
 use crate::tlr::matrix::TlrMatrix;
 
+/// Chop a length-N vector into per-tile column matrices (op-stream
+/// operands).
+fn block_columns(a: &TlrMatrix, x: &[f64]) -> Vec<Matrix> {
+    (0..a.nb())
+        .map(|j| {
+            let (s, len) = (a.tile_start(j), a.tile_size(j));
+            Matrix::from_vec(len, 1, x[s..s + len].to_vec())
+        })
+        .collect()
+}
+
+/// Concatenate output slots (one column per block row) back into a flat
+/// vector.
+fn concat_blocks(outs: &[Matrix], slots: &[usize]) -> Vec<f64> {
+    let mut y = Vec::with_capacity(slots.iter().map(|&s| outs[s].rows()).sum());
+    for &s in slots {
+        y.extend_from_slice(outs[s].as_slice());
+    }
+    y
+}
+
 /// Symmetric TLR matvec `y = A x`: every block row accumulates its lower
-/// tiles forward and the mirrored upper contributions through transposes,
-/// parallelized across block rows into independent buffers (the paper's
-/// buffered product with a final reduction).
+/// tiles forward and the mirrored upper contributions through
+/// transposes. All tile products are issued as one op-stream batch — the
+/// first wave holds every `Vᵀx` product of every tile, later waves
+/// pipeline the per-row accumulations — and run on the batched-GEMM
+/// executor.
 pub fn tlr_matvec(a: &TlrMatrix, x: &[f64]) -> Vec<f64> {
     assert_eq!(x.len(), a.n());
     let nb = a.nb();
-    let blocks: Vec<Vec<f64>> = parallel_map(nb, |i| {
-        let (r0, ri) = (a.tile_start(i), a.tile_size(i));
-        let mut y = vec![0.0; ri];
+    let xs = block_columns(a, x);
+    let mut sb = StreamBuilder::new();
+    let xargs: Vec<Arg> = xs.iter().map(|m| sb.input(m)).collect();
+    let mut slots = Vec::with_capacity(nb);
+    for i in 0..nb {
+        let dst = sb.output(a.tile_size(i), 1);
+        slots.push(dst);
         // Lower tiles of block row i (including dense diagonal).
         for j in 0..=i {
-            let xj = &x[a.tile_start(j)..a.tile_start(j) + a.tile_size(j)];
-            let xm = Matrix::from_vec(xj.len(), 1, xj.to_vec());
-            let contrib = a.tile(i, j).apply(&xm);
-            for (q, v) in y.iter_mut().enumerate() {
-                *v += contrib[(q, 0)];
-            }
+            sb.apply_tile(a.tile(i, j), xargs[j], 1.0, dst, false);
         }
         // Upper contributions: A(i,j) = A(j,i)ᵀ for j > i.
         for j in i + 1..nb {
-            let xj = &x[a.tile_start(j)..a.tile_start(j) + a.tile_size(j)];
-            let xm = Matrix::from_vec(xj.len(), 1, xj.to_vec());
-            let contrib = a.tile(j, i).apply_t(&xm);
-            for (q, v) in y.iter_mut().enumerate() {
-                *v += contrib[(q, 0)];
-            }
+            sb.apply_tile(a.tile(j, i), xargs[j], 1.0, dst, true);
         }
-        let _ = r0;
-        y
-    });
-    blocks.concat()
+    }
+    let outs = sb.finish().execute(&NativeBatch::new());
+    concat_blocks(&outs, &slots)
 }
 
 /// Lower-triangular TLR matvec `y = L x` (uses only stored tiles).
 pub fn tlr_matvec_lower(l: &TlrMatrix, x: &[f64]) -> Vec<f64> {
     assert_eq!(x.len(), l.n());
     let nb = l.nb();
-    let blocks: Vec<Vec<f64>> = parallel_map(nb, |i| {
-        let ri = l.tile_size(i);
-        let mut y = vec![0.0; ri];
+    let xs = block_columns(l, x);
+    let mut sb = StreamBuilder::new();
+    let xargs: Vec<Arg> = xs.iter().map(|m| sb.input(m)).collect();
+    let mut slots = Vec::with_capacity(nb);
+    for i in 0..nb {
+        let dst = sb.output(l.tile_size(i), 1);
+        slots.push(dst);
         for j in 0..=i {
-            let xj = &x[l.tile_start(j)..l.tile_start(j) + l.tile_size(j)];
-            let xm = Matrix::from_vec(xj.len(), 1, xj.to_vec());
-            let contrib = l.tile(i, j).apply(&xm);
-            for (q, v) in y.iter_mut().enumerate() {
-                *v += contrib[(q, 0)];
-            }
+            sb.apply_tile(l.tile(i, j), xargs[j], 1.0, dst, false);
         }
-        y
-    });
-    blocks.concat()
+    }
+    let outs = sb.finish().execute(&NativeBatch::new());
+    concat_blocks(&outs, &slots)
 }
 
 /// Transposed lower-triangular TLR matvec `y = Lᵀ x`.
 pub fn tlr_matvec_lower_t(l: &TlrMatrix, x: &[f64]) -> Vec<f64> {
     assert_eq!(x.len(), l.n());
     let nb = l.nb();
-    let blocks: Vec<Vec<f64>> = parallel_map(nb, |j| {
-        let rj = l.tile_size(j);
-        let mut y = vec![0.0; rj];
+    let xs = block_columns(l, x);
+    let mut sb = StreamBuilder::new();
+    let xargs: Vec<Arg> = xs.iter().map(|m| sb.input(m)).collect();
+    let mut slots = Vec::with_capacity(nb);
+    for j in 0..nb {
+        let dst = sb.output(l.tile_size(j), 1);
+        slots.push(dst);
         for i in j..nb {
-            let xi = &x[l.tile_start(i)..l.tile_start(i) + l.tile_size(i)];
-            let xm = Matrix::from_vec(xi.len(), 1, xi.to_vec());
-            let contrib = l.tile(i, j).apply_t(&xm);
-            for (q, v) in y.iter_mut().enumerate() {
-                *v += contrib[(q, 0)];
-            }
+            sb.apply_tile(l.tile(i, j), xargs[i], 1.0, dst, true);
         }
-        y
-    });
-    blocks.concat()
+    }
+    let outs = sb.finish().execute(&NativeBatch::new());
+    concat_blocks(&outs, &slots)
 }
 
 /// TLR forward triangular solve `L x = y` (paper Alg 7): dense solve on
-/// each diagonal tile followed by a parallel low-rank update of the
-/// remaining blocks.
+/// each diagonal tile followed by a batched low-rank update of the
+/// remaining blocks (one op-stream per column step).
 pub fn tlr_trsv_lower(l: &TlrMatrix, y: &[f64]) -> Vec<f64> {
     assert_eq!(y.len(), l.n());
     let nb = l.nb();
+    let exec = NativeBatch::new();
     let mut x = y.to_vec();
     for k in 0..nb {
         let (k0, ks) = (l.tile_start(k), l.tile_size(k));
@@ -102,16 +117,24 @@ pub fn tlr_trsv_lower(l: &TlrMatrix, y: &[f64]) -> Vec<f64> {
         let mut xk = Matrix::from_vec(ks, 1, x[k0..k0 + ks].to_vec());
         trsm_lower(Side::Left, Trans::No, l.tile(k, k).as_dense(), &mut xk);
         x[k0..k0 + ks].copy_from_slice(xk.as_slice());
-        // Parallel update of all blocks below: x_i -= L(i,k) x_k.
-        let updates: Vec<(usize, Vec<f64>)> = parallel_map(nb - k - 1, |idx| {
-            let i = k + 1 + idx;
-            let contrib = l.tile(i, k).apply(&xk);
-            (i, contrib.as_slice().to_vec())
-        });
-        for (i, upd) in updates {
-            let (i0, is) = (l.tile_start(i), l.tile_size(i));
-            for q in 0..is {
-                x[i0 + q] -= upd[q];
+        if k + 1 >= nb {
+            continue;
+        }
+        // Batched update of all blocks below: x_i -= L(i,k) x_k.
+        let mut sb = StreamBuilder::new();
+        let xr = sb.input(&xk);
+        let slots: Vec<usize> = (k + 1..nb)
+            .map(|i| {
+                let dst = sb.output(l.tile_size(i), 1);
+                sb.apply_tile(l.tile(i, k), xr, 1.0, dst, false);
+                dst
+            })
+            .collect();
+        let outs = sb.finish().execute(&exec);
+        for (idx, i) in (k + 1..nb).enumerate() {
+            let i0 = l.tile_start(i);
+            for (q, v) in outs[slots[idx]].as_slice().iter().enumerate() {
+                x[i0 + q] -= *v;
             }
         }
     }
@@ -122,21 +145,31 @@ pub fn tlr_trsv_lower(l: &TlrMatrix, y: &[f64]) -> Vec<f64> {
 pub fn tlr_trsv_lower_t(l: &TlrMatrix, y: &[f64]) -> Vec<f64> {
     assert_eq!(y.len(), l.n());
     let nb = l.nb();
+    let exec = NativeBatch::new();
     let mut x = y.to_vec();
     for k in (0..nb).rev() {
         let (k0, ks) = (l.tile_start(k), l.tile_size(k));
         let mut xk = Matrix::from_vec(ks, 1, x[k0..k0 + ks].to_vec());
         trsm_lower(Side::Left, Trans::Yes, l.tile(k, k).as_dense(), &mut xk);
         x[k0..k0 + ks].copy_from_slice(xk.as_slice());
-        // x_j -= L(k,j)ᵀ x_k for j < k, in parallel.
-        let updates: Vec<(usize, Vec<f64>)> = parallel_map(k, |j| {
-            let contrib = l.tile(k, j).apply_t(&xk);
-            (j, contrib.as_slice().to_vec())
-        });
-        for (j, upd) in updates {
-            let (j0, js) = (l.tile_start(j), l.tile_size(j));
-            for q in 0..js {
-                x[j0 + q] -= upd[q];
+        if k == 0 {
+            continue;
+        }
+        // Batched update: x_j -= L(k,j)ᵀ x_k for j < k.
+        let mut sb = StreamBuilder::new();
+        let xr = sb.input(&xk);
+        let slots: Vec<usize> = (0..k)
+            .map(|j| {
+                let dst = sb.output(l.tile_size(j), 1);
+                sb.apply_tile(l.tile(k, j), xr, 1.0, dst, true);
+                dst
+            })
+            .collect();
+        let outs = sb.finish().execute(&exec);
+        for (j, &slot) in slots.iter().enumerate() {
+            let j0 = l.tile_start(j);
+            for (q, v) in outs[slot].as_slice().iter().enumerate() {
+                x[j0 + q] -= *v;
             }
         }
     }

@@ -1,6 +1,13 @@
 //! TLR construction: compress each off-diagonal tile of an implicit
 //! symmetric generator to the threshold ε, in parallel, via ARA (the
 //! paper's default) or SVD (the oracle used in the Fig 11b comparison).
+//!
+//! The tile fan-out is the scheduling layer here; each tile's ARA
+//! samples dispatch through the batched-GEMM op-stream inside
+//! [`ara`] (tiny per-tile plans run inline on the worker that issues
+//! them, so the outer parallelism composes without nested thread
+//! pools). The dense block is materialized once per tile — `O(m²)`
+//! transient memory per worker — so the full `N²` matrix never exists.
 
 use crate::apps::matgen::MatGen;
 use crate::ara::{ara, AraOpts, DenseSampler};

@@ -6,7 +6,7 @@
 use h2opus_tlr::ara::{ara, batched_ara, AraOpts, DenseSampler, Sampler};
 use h2opus_tlr::batch::DynamicBatcher;
 use h2opus_tlr::factor::{cholesky, FactorOpts, Pivoting};
-use h2opus_tlr::linalg::blas::{trsm_lower, Side, Uplo};
+use h2opus_tlr::linalg::blas::{trsm_lower, Side};
 use h2opus_tlr::linalg::chol::potrf;
 use h2opus_tlr::linalg::gemm::{gemm, matmul, matmul_nt, matmul_tn, Trans};
 use h2opus_tlr::linalg::ldl::{ldl, ldl_reconstruct, modified_cholesky};
