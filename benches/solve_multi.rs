@@ -1,0 +1,78 @@
+//! Bench: looped single-RHS solves vs one blocked multi-RHS solve at
+//! several panel widths — the GEMV→GEMM transition the `serve/`
+//! subsystem exists to exploit (EXPERIMENTS.md §Multi-RHS).
+//!
+//! Run: `cargo bench --bench solve_multi`
+//!
+//! Besides the table, the run records its numbers into
+//! `BENCH_solve.json` at the repo root so EXPERIMENTS.md has a stable
+//! artifact to cite.
+
+use h2opus_tlr::batch::NativeBatch;
+use h2opus_tlr::config::Problem;
+use h2opus_tlr::experiments::{bench_time, instance, time_cholesky};
+use h2opus_tlr::factor::FactorOpts;
+use h2opus_tlr::linalg::rng::Rng;
+use h2opus_tlr::runtime::json::{to_string, Json};
+use h2opus_tlr::solve::{chol_solve, chol_solve_multi_with, solve_flop_estimate};
+use std::collections::BTreeMap;
+
+fn main() {
+    println!("== bench solve_multi (serve/: blocked multi-RHS solves) ==");
+    let (n, m) = (2048usize, 128usize);
+    let inst = instance(Problem::Cov2d, n, m, 1e-6, 37);
+    let (f, fsecs) = time_cholesky(
+        inst.tlr.clone(),
+        &FactorOpts { eps: 1e-6, bs: 16, ..Default::default() },
+    );
+    let mut rng = Rng::new(38);
+    let exec = NativeBatch::new();
+    println!("cov2d N={n} m={m} eps=1e-6 (factorization {fsecs:.3}s)");
+    println!(
+        "  {:>6} {:>6} {:>12} {:>12} {:>9} {:>10} {:>10}",
+        "r", "reps", "looped (s)", "blocked (s)", "speedup", "cols/s", "GFLOP/s"
+    );
+    let mut json_rows: Vec<Json> = Vec::new();
+    for &w in &[1usize, 4, 16, 64] {
+        let b = rng.normal_matrix(n, w);
+        let reps = (128 / w).clamp(2, 10);
+        // Looped baseline: w independent single-RHS solves.
+        let (_, looped) = bench_time(reps, || {
+            for j in 0..w {
+                std::hint::black_box(chol_solve(&f, b.col(j)));
+            }
+        });
+        // Blocked: one panel solve on a long-lived executor.
+        let (_, blocked) = bench_time(reps, || {
+            std::hint::black_box(chol_solve_multi_with(&f, &b, &exec));
+        });
+        let speedup = looped / blocked;
+        let cols_per_s = w as f64 / blocked;
+        let gflops = solve_flop_estimate(&f.l, w) / blocked / 1e9;
+        println!(
+            "  {w:>6} {reps:>6} {looped:>12.6} {blocked:>12.6} {speedup:>8.2}x \
+             {cols_per_s:>10.1} {gflops:>10.2}"
+        );
+        let mut row = BTreeMap::new();
+        row.insert("width".to_string(), Json::Num(w as f64));
+        row.insert("looped_mean_s".to_string(), Json::Num(looped));
+        row.insert("blocked_mean_s".to_string(), Json::Num(blocked));
+        row.insert("speedup".to_string(), Json::Num(speedup));
+        row.insert("cols_per_s".to_string(), Json::Num(cols_per_s));
+        row.insert("gflops".to_string(), Json::Num(gflops));
+        json_rows.push(Json::Obj(row));
+    }
+    let mut doc = BTreeMap::new();
+    doc.insert("bench".to_string(), Json::Str("solve_multi".to_string()));
+    doc.insert("status".to_string(), Json::Str("measured".to_string()));
+    doc.insert(
+        "problem".to_string(),
+        Json::Str(format!("cov2d N={n} m={m} eps=1e-6 seed=37")),
+    );
+    doc.insert("factor_seconds".to_string(), Json::Num(fsecs));
+    doc.insert("widths".to_string(), Json::Arr(json_rows));
+    match std::fs::write("BENCH_solve.json", to_string(&Json::Obj(doc))) {
+        Ok(()) => println!("wrote BENCH_solve.json"),
+        Err(e) => eprintln!("could not write BENCH_solve.json: {e}"),
+    }
+}

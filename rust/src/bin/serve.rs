@@ -1,0 +1,295 @@
+//! `serve` — factor once, persist the factor, and serve a synthetic
+//! stream of single-RHS solve requests through the coalescing
+//! [`SolveService`](h2opus_tlr::serve::SolveService).
+//!
+//! Two measurements are printed:
+//!
+//! 1. a **panel-width sweep**: direct blocked-solve throughput at
+//!    `r ∈ widths`, showing the GEMV→GEMM transition multi-RHS solves
+//!    buy (EXPERIMENTS.md §Multi-RHS);
+//! 2. a **service run**: `--requests` independent single-RHS requests
+//!    streamed through the coalescer, with throughput, latency
+//!    percentiles and realized batching efficiency.
+//!
+//! The factor is stored under the problem-config hash: a second run of
+//! the same config (a fresh process) skips the factorization and serves
+//! straight from disk.
+
+use h2opus_tlr::batch::NativeBatch;
+use h2opus_tlr::config::{FactorKind, RunConfig};
+use h2opus_tlr::factor::{cholesky, ldlt};
+use h2opus_tlr::linalg::rng::Rng;
+use h2opus_tlr::serve::{FactorStore, ServeOpts, SolveService, StoredFactor};
+use h2opus_tlr::solve::{chol_solve_multi_with, ldl_solve_multi_with, solve_flop_estimate};
+use h2opus_tlr::Matrix;
+use std::time::{Duration, Instant};
+
+const HELP: &str = "\
+serve — factor once, persist, and serve a multi-RHS request stream
+
+USAGE: serve [SERVE OPTIONS] [PROBLEM/FACTOR OPTIONS]
+
+SERVE OPTIONS:
+    --requests <R>      synthetic single-RHS requests   (default 128)
+    --widths <list>     panel widths for the sweep      (default 1,4,16,64)
+    --store <dir>       factor store root               (default target/factor-store)
+    --panel <W>         service max panel width         (default 16)
+    --deadline-ms <D>   service flush deadline in ms    (default 2)
+
+All problem/factorization options of `h2opus-tlr` apply (e.g.
+--problem cov2d --n 1024 --m 128 --eps 1e-6 --bs 8 --ldlt). See
+`h2opus-tlr help`.
+";
+
+struct ServeArgs {
+    requests: usize,
+    widths: Vec<usize>,
+    store: String,
+    panel: usize,
+    deadline_ms: u64,
+}
+
+impl Default for ServeArgs {
+    fn default() -> Self {
+        ServeArgs {
+            requests: 128,
+            widths: vec![1, 4, 16, 64],
+            store: "target/factor-store".into(),
+            panel: 16,
+            deadline_ms: 2,
+        }
+    }
+}
+
+fn fail(msg: &str) -> ! {
+    eprintln!("{msg}\n\n{HELP}");
+    std::process::exit(2);
+}
+
+/// The value of flag `args[i]`, or die.
+fn take_val(args: &[String], i: usize) -> &String {
+    args.get(i + 1).unwrap_or_else(|| fail(&format!("{} needs a value", args[i])))
+}
+
+/// Split serve-specific flags off; the remainder goes to `RunConfig`.
+fn parse_args(args: &[String]) -> (ServeArgs, Vec<String>) {
+    let mut sa = ServeArgs::default();
+    let mut rest = Vec::new();
+    let mut i = 0;
+    while i < args.len() {
+        match args[i].as_str() {
+            "--help" | "-h" => {
+                print!("{HELP}");
+                std::process::exit(0);
+            }
+            "--requests" => {
+                sa.requests = take_val(args, i).parse().unwrap_or_else(|_| fail("bad --requests"));
+                i += 2;
+            }
+            "--widths" => {
+                sa.widths = take_val(args, i)
+                    .split(',')
+                    .map(|w| w.trim().parse().unwrap_or_else(|_| fail("bad --widths")))
+                    .collect();
+                i += 2;
+            }
+            "--store" => {
+                sa.store = take_val(args, i).clone();
+                i += 2;
+            }
+            "--panel" => {
+                sa.panel = take_val(args, i).parse().unwrap_or_else(|_| fail("bad --panel"));
+                i += 2;
+            }
+            "--deadline-ms" => {
+                let v = take_val(args, i);
+                sa.deadline_ms = v.parse().unwrap_or_else(|_| fail("bad --deadline-ms"));
+                i += 2;
+            }
+            _ => {
+                rest.push(args[i].clone());
+                i += 1;
+            }
+        }
+    }
+    if sa.requests == 0 || sa.panel == 0 || sa.widths.is_empty() {
+        fail("--requests, --panel and --widths must be positive");
+    }
+    (sa, rest)
+}
+
+fn obtain_factor(cfg: &RunConfig, store: &FactorStore, key: u64) -> StoredFactor {
+    if let Some(f) = store.load(key).unwrap_or_else(|e| {
+        eprintln!("store: failed to load key {key:016x}: {e}");
+        std::process::exit(1);
+    }) {
+        println!("store      : cache hit — loaded factor {key:016x} (no factorization)");
+        return f;
+    }
+    println!("store      : miss for key {key:016x} — factoring");
+    let t0 = Instant::now();
+    let (tlr, _gen, _c) = cfg.build();
+    let build_secs = t0.elapsed().as_secs_f64();
+    let opts = cfg.factor_opts();
+    let t1 = Instant::now();
+    let stored = match cfg.kind {
+        FactorKind::Cholesky => match cholesky(tlr, &opts) {
+            Ok(f) => StoredFactor::Chol(f),
+            Err(e) => {
+                eprintln!("factorization failed: {e}");
+                eprintln!("hint: try --schur-comp, --mod-chol or --shift -1");
+                std::process::exit(1);
+            }
+        },
+        FactorKind::Ldlt => match ldlt(tlr, &opts) {
+            Ok(f) => StoredFactor::Ldl(f),
+            Err(e) => {
+                eprintln!("factorization failed: {e}");
+                std::process::exit(1);
+            }
+        },
+    };
+    let factor_secs = t1.elapsed().as_secs_f64();
+    let path = match &stored {
+        StoredFactor::Chol(f) => store.save_chol(key, f, &cfg.summary()),
+        StoredFactor::Ldl(f) => store.save_ldl(key, f, &cfg.summary()),
+    }
+    .unwrap_or_else(|e| {
+        eprintln!("store: failed to save factor: {e}");
+        std::process::exit(1);
+    });
+    println!(
+        "factor     : build {build_secs:.3}s + factor {factor_secs:.3}s, saved to {}",
+        path.display()
+    );
+    stored
+}
+
+/// Direct blocked-solve throughput sweep over panel widths.
+fn width_sweep(factor: &StoredFactor, widths: &[usize], seed: u64) {
+    let n = factor.n();
+    let l = match factor {
+        StoredFactor::Chol(f) => &f.l,
+        StoredFactor::Ldl(f) => &f.l,
+    };
+    let mut rng = Rng::new(seed);
+    let exec = NativeBatch::new();
+    println!("panel-width sweep (direct blocked solve, N={n}):");
+    println!(
+        "  {:>6} {:>6} {:>12} {:>12} {:>10} {:>10}",
+        "r", "reps", "solve (s)", "cols/s", "GFLOP/s", "vs r=1"
+    );
+    let mut base_cols_per_s = 0.0;
+    for &w in widths {
+        let b = rng.normal_matrix(n, w);
+        // Bound total work: fewer reps at wider panels.
+        let reps = (256 / w).clamp(2, 16);
+        // Warm-up.
+        run_solve(factor, &b, &exec);
+        let t0 = Instant::now();
+        for _ in 0..reps {
+            std::hint::black_box(run_solve(factor, &b, &exec));
+        }
+        let secs = t0.elapsed().as_secs_f64() / reps as f64;
+        let cols_per_s = w as f64 / secs;
+        let gf = solve_flop_estimate(l, w) / secs / 1e9;
+        if base_cols_per_s == 0.0 {
+            base_cols_per_s = cols_per_s;
+        }
+        println!(
+            "  {w:>6} {reps:>6} {secs:>12.6} {cols_per_s:>12.1} {gf:>10.2} {:>9.2}x",
+            cols_per_s / base_cols_per_s
+        );
+    }
+}
+
+fn run_solve(factor: &StoredFactor, b: &Matrix, exec: &NativeBatch) -> Matrix {
+    match factor {
+        StoredFactor::Chol(f) => chol_solve_multi_with(f, b, exec),
+        StoredFactor::Ldl(f) => ldl_solve_multi_with(f, b, exec),
+    }
+}
+
+/// Stream `requests` single-RHS requests through the coalescing service.
+fn service_run(store_dir: &str, key: u64, n: usize, sa: &ServeArgs, seed: u64) {
+    let store = FactorStore::open(store_dir).unwrap_or_else(|e| {
+        eprintln!("store: {e}");
+        std::process::exit(1);
+    });
+    let service = SolveService::start(
+        store,
+        ServeOpts {
+            max_panel: sa.panel,
+            flush_deadline: Duration::from_millis(sa.deadline_ms),
+            cache_capacity: 4,
+        },
+    );
+    let mut rng = Rng::new(seed ^ 0x5E4E);
+    let t0 = Instant::now();
+    let tickets: Vec<_> = (0..sa.requests)
+        .map(|_| {
+            let rhs: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+            service.submit(key, rhs)
+        })
+        .collect();
+    let mut latencies_ms: Vec<f64> = Vec::with_capacity(sa.requests);
+    for t in tickets {
+        match t.wait() {
+            Ok(resp) => {
+                latencies_ms.push(resp.latency.as_secs_f64() * 1e3);
+            }
+            Err(e) => {
+                eprintln!("request failed: {e}");
+                std::process::exit(1);
+            }
+        }
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let stats = service.stats();
+    latencies_ms.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let pct = |p: f64| latencies_ms[((latencies_ms.len() - 1) as f64 * p) as usize];
+    let mean: f64 = latencies_ms.iter().sum::<f64>() / latencies_ms.len() as f64;
+    println!(
+        "service run: {} requests, max_panel={}, deadline={}ms",
+        sa.requests, sa.panel, sa.deadline_ms
+    );
+    println!("  throughput : {:>10.1} requests/s", sa.requests as f64 / wall);
+    println!("  latency    : mean {mean:.3} ms, p50 {:.3} ms, p99 {:.3} ms", pct(0.5), pct(0.99));
+    println!(
+        "  batching   : {} blocked solves, mean panel width {:.2}, max {}",
+        stats.batches,
+        stats.mean_panel_width(),
+        stats.max_panel
+    );
+    let prof = h2opus_tlr::profile::serve_snapshot();
+    println!(
+        "  profile    : {} serve requests, {} panels, efficiency {:.2} cols/solve",
+        prof.requests,
+        prof.batches,
+        prof.batching_efficiency()
+    );
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let (sa, rest) = parse_args(&args);
+    let cfg = match RunConfig::from_args(&rest) {
+        Ok(c) => c,
+        Err(e) => {
+            eprintln!("{e}");
+            std::process::exit(2);
+        }
+    };
+    println!("problem    : {}", cfg.summary());
+    let key = cfg.factor_key();
+    let store = FactorStore::open(&sa.store).unwrap_or_else(|e| {
+        eprintln!("store: {e}");
+        std::process::exit(1);
+    });
+    let factor = obtain_factor(&cfg, &store, key);
+    let n = factor.n();
+    width_sweep(&factor, &sa.widths, cfg.seed);
+    drop(factor); // the service re-loads from disk — persistence, proven
+    service_run(&sa.store, key, n, &sa, cfg.seed);
+    println!("serve done");
+}

@@ -373,6 +373,35 @@ impl RunConfig {
         Ok(())
     }
 
+    /// Stable identity of the factorization this config produces — the
+    /// [`crate::serve::FactorStore`] directory key. Covers every field
+    /// that changes the factor's values (problem, sizes, thresholds,
+    /// seeds, robustness options) but *not* execution-only knobs
+    /// (backend, artifact paths, batch capacity — scheduling never
+    /// changes numerics, see the crate docs). Versioned so a future
+    /// format change cannot silently collide with old stores.
+    pub fn factor_key(&self) -> u64 {
+        let desc = format!(
+            "fk1|{}|n={}|m={}|eps={:e}|bs={}|kind={:?}|pivot={:?}|schur={}|modchol={}|shift={:e}|seed={}|fs={:e}|fa={:e}|fc={:e}|cl={:e}",
+            self.problem.name(),
+            self.n,
+            self.m,
+            self.eps,
+            self.effective_bs(),
+            self.kind,
+            self.pivot,
+            self.schur_comp,
+            self.mod_chol,
+            self.effective_shift(),
+            self.seed,
+            self.frac_s,
+            self.frac_alpha,
+            self.frac_contrast,
+            self.corr_len
+        );
+        crate::serve::store::fnv1a(desc.as_bytes())
+    }
+
     /// One-line human summary.
     pub fn summary(&self) -> String {
         format!(
@@ -468,6 +497,21 @@ mod tests {
         assert_eq!(c.effective_bs(), 4);
         c.bs = 12;
         assert_eq!(c.effective_bs(), 12);
+    }
+
+    #[test]
+    fn factor_key_tracks_numerics_only() {
+        let base = RunConfig::default();
+        let same = RunConfig { backend: BackendKind::Pjrt, ..base.clone() };
+        assert_eq!(base.factor_key(), same.factor_key(), "backend must not change the key");
+        let same_cap = RunConfig { capacity: 32, ..base.clone() };
+        assert_eq!(base.factor_key(), same_cap.factor_key(), "capacity is scheduling-only");
+        let diff_eps = RunConfig { eps: 1e-7, ..base.clone() };
+        assert_ne!(base.factor_key(), diff_eps.factor_key());
+        let diff_n = RunConfig { n: 8192, ..base.clone() };
+        assert_ne!(base.factor_key(), diff_n.factor_key());
+        let diff_kind = RunConfig { kind: FactorKind::Ldlt, ..base.clone() };
+        assert_ne!(base.factor_key(), diff_kind.factor_key());
     }
 
     #[test]

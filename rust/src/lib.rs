@@ -15,7 +15,11 @@
 //!   is marshaled onto;
 //! * left-looking TLR Cholesky / pivoted Cholesky / LDLᵀ ([`factor`]);
 //! * solvers that consume the factors ([`solve`]): TLR matvec, triangular
-//!   solves and preconditioned CG;
+//!   solves and preconditioned CG, each with an `n × r` multi-RHS panel
+//!   form that keeps the op-stream in the GEMM regime;
+//! * a serving layer ([`serve`]): factor serialization + on-disk store,
+//!   and a request-coalescing solve service that turns streams of
+//!   single-RHS requests into blocked panel solves;
 //! * the paper's evaluation problems ([`apps`]): spatial-statistics
 //!   covariance matrices and a 3D fractional-diffusion integral operator,
 //!   with KD-tree geometric orderings;
@@ -65,6 +69,7 @@ pub mod factor;
 pub mod linalg;
 pub mod profile;
 pub mod runtime;
+pub mod serve;
 pub mod solve;
 pub mod tlr;
 

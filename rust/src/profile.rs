@@ -56,6 +56,14 @@ static BATCH_WAVES: AtomicU64 = AtomicU64::new(0);
 static BATCH_OPS: AtomicU64 = AtomicU64::new(0);
 static BATCH_FLOPS: AtomicU64 = AtomicU64::new(0);
 
+// Serve-layer counters (crate::serve::SolveService reports every panel
+// it executes): answered requests, executed blocked solves, and time
+// spent inside them. `requests / batches` is the realized batching
+// efficiency of the request coalescer.
+static SERVE_REQUESTS: AtomicU64 = AtomicU64::new(0);
+static SERVE_BATCHES: AtomicU64 = AtomicU64::new(0);
+static SERVE_NANOS: AtomicU64 = AtomicU64::new(0);
+
 /// Reset all counters (call before a profiled run).
 pub fn reset() {
     for i in 0..N_PHASES {
@@ -65,6 +73,54 @@ pub fn reset() {
     BATCH_WAVES.store(0, Ordering::Relaxed);
     BATCH_OPS.store(0, Ordering::Relaxed);
     BATCH_FLOPS.store(0, Ordering::Relaxed);
+    SERVE_REQUESTS.store(0, Ordering::Relaxed);
+    SERVE_BATCHES.store(0, Ordering::Relaxed);
+    SERVE_NANOS.store(0, Ordering::Relaxed);
+}
+
+/// Record one executed serve panel: `requests` coalesced RHS columns
+/// answered by a blocked solve that took `nanos`.
+pub fn add_serve_batch(requests: u64, nanos: u64) {
+    SERVE_REQUESTS.fetch_add(requests, Ordering::Relaxed);
+    SERVE_BATCHES.fetch_add(1, Ordering::Relaxed);
+    SERVE_NANOS.fetch_add(nanos, Ordering::Relaxed);
+}
+
+/// Snapshot of the serve-layer counters.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ServeReport {
+    pub requests: u64,
+    pub batches: u64,
+    pub nanos: u64,
+}
+
+impl ServeReport {
+    /// Difference vs an earlier snapshot.
+    pub fn since(&self, earlier: &ServeReport) -> ServeReport {
+        ServeReport {
+            requests: self.requests - earlier.requests,
+            batches: self.batches - earlier.batches,
+            nanos: self.nanos - earlier.nanos,
+        }
+    }
+
+    /// Mean requests per blocked solve — how well coalescing worked
+    /// (1.0 means the service degenerated to single-RHS solves).
+    pub fn batching_efficiency(&self) -> f64 {
+        if self.batches == 0 {
+            0.0
+        } else {
+            self.requests as f64 / self.batches as f64
+        }
+    }
+}
+
+pub fn serve_snapshot() -> ServeReport {
+    ServeReport {
+        requests: SERVE_REQUESTS.load(Ordering::Relaxed),
+        batches: SERVE_BATCHES.load(Ordering::Relaxed),
+        nanos: SERVE_NANOS.load(Ordering::Relaxed),
+    }
 }
 
 /// Record one executed batch plan (called by the batched-GEMM executor).
@@ -246,6 +302,19 @@ mod tests {
         let after = snapshot().since(&before);
         assert!(after.nanos[Phase::Sample as usize] >= 1_000_000);
         assert_eq!(after.flops[Phase::Sample as usize], 1000);
+    }
+
+    #[test]
+    fn serve_counters_accumulate() {
+        let before = serve_snapshot();
+        add_serve_batch(16, 1000);
+        add_serve_batch(4, 500);
+        let after = serve_snapshot().since(&before);
+        // Other tests may serve concurrently; assert lower bounds.
+        assert!(after.requests >= 20);
+        assert!(after.batches >= 2);
+        assert!(after.nanos >= 1500);
+        assert!(after.batching_efficiency() > 1.0);
     }
 
     #[test]

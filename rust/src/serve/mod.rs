@@ -1,0 +1,35 @@
+//! Serving TLR factorizations: factor once, answer many (the ROADMAP
+//! north star, and the regime of the paper's spatial-statistics use
+//! case where one covariance factorization backs a stream of
+//! independent solves).
+//!
+//! Three layers:
+//!
+//! * **Blocked solves** — live in [`crate::solve`]: every solve has an
+//!   `n × r` panel form whose tile products are rank-`r` GEMMs on the
+//!   batched op-stream, so a coalesced batch of requests runs at GEMM
+//!   (compute-bound) rather than GEMV (bandwidth-bound) intensity.
+//! * **Persistence** — [`store`]: a versioned, checksummed,
+//!   `mmap`-friendly binary format for [`crate::TlrMatrix`],
+//!   [`crate::factor::CholFactor`] and [`crate::factor::LdlFactor`],
+//!   and a [`store::FactorStore`] directory keyed by the problem-config
+//!   hash (`RunConfig::factor_key`), so a factor computed by one
+//!   process serves traffic in another.
+//! * **The service** — [`service::SolveService`]: accepts single-RHS
+//!   requests, coalesces them into panels up to a configurable width
+//!   under a flush deadline (the [`crate::batch::DynamicBatcher`]
+//!   admission idiom applied to requests instead of tiles), executes
+//!   each panel as one blocked solve on a long-lived executor, and
+//!   reports latency and batching-efficiency counters into
+//!   [`crate::profile`].
+//!
+//! The `serve` binary (`rust/src/bin/serve.rs`) wires the three layers
+//! into a factor-then-serve loop over a synthetic request stream and
+//! prints the throughput/latency table recorded in EXPERIMENTS.md
+//! §Multi-RHS.
+
+pub mod service;
+pub mod store;
+
+pub use service::{ServeError, ServeOpts, ServiceStats, SolveResponse, SolveService, Ticket};
+pub use store::{FactorStore, StoreError, StoredFactor};

@@ -1,0 +1,440 @@
+//! The caching solve service: coalesces independent single-RHS solve
+//! requests into multi-RHS panels and answers them through the blocked
+//! solves of [`crate::solve`].
+//!
+//! Serving is where the GEMV/GEMM gap bites: one request at a time, a
+//! triangular solve reads every stored tile once per column — pure
+//! memory bandwidth. The service therefore admits requests the way the
+//! paper's [`crate::batch::DynamicBatcher`] admits tiles: hold a batch
+//! open until it is full (`max_panel` columns) or a flush deadline
+//! expires, then run the whole panel as one blocked solve whose tile
+//! products are rank-`r` GEMMs. Factors are loaded on demand from a
+//! [`FactorStore`] and kept in a small LRU cache, so a long-running
+//! server amortizes both the factorization *and* the deserialization
+//! over many requests.
+//!
+//! Per-request latency (queue wait + solve) and batching-efficiency
+//! counters (requests per executed panel) are reported through
+//! [`crate::profile::add_serve_batch`] as well as the service's own
+//! [`ServiceStats`].
+
+use crate::batch::NativeBatch;
+use crate::linalg::matrix::Matrix;
+use crate::profile;
+use crate::serve::store::{FactorStore, StoreError, StoredFactor};
+use crate::solve::{chol_solve_multi_with, ldl_solve_multi_with};
+use std::collections::{HashMap, VecDeque};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+/// Service configuration.
+#[derive(Debug, Clone)]
+pub struct ServeOpts {
+    /// Maximum RHS columns coalesced into one blocked solve.
+    pub max_panel: usize,
+    /// How long the first queued request may wait for the panel to fill
+    /// before the batch is flushed anyway.
+    pub flush_deadline: Duration,
+    /// Loaded factors kept in the worker's LRU cache.
+    pub cache_capacity: usize,
+}
+
+impl Default for ServeOpts {
+    fn default() -> Self {
+        ServeOpts {
+            max_panel: 64,
+            flush_deadline: Duration::from_millis(2),
+            cache_capacity: 4,
+        }
+    }
+}
+
+/// A solve answer.
+#[derive(Debug, Clone)]
+pub struct SolveResponse {
+    /// Solution vector `x` with `A x = b`.
+    pub x: Vec<f64>,
+    /// End-to-end latency: submit → response (queue wait + panel solve).
+    pub latency: Duration,
+    /// Width of the panel this request was answered in.
+    pub panel_width: usize,
+}
+
+/// A request-level failure.
+#[derive(Debug, Clone)]
+pub enum ServeError {
+    /// No factor is registered or stored under the key.
+    UnknownFactor(u64),
+    /// The store had the key but loading failed.
+    Store(String),
+    /// RHS length does not match the factor's matrix order.
+    BadRhs { expected: usize, got: usize },
+    /// The service shut down before answering.
+    Canceled,
+}
+
+impl std::fmt::Display for ServeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ServeError::UnknownFactor(k) => write!(f, "no factor under key {k:016x}"),
+            ServeError::Store(m) => write!(f, "factor load failed: {m}"),
+            ServeError::BadRhs { expected, got } => {
+                write!(f, "rhs length {got} does not match matrix order {expected}")
+            }
+            ServeError::Canceled => write!(f, "service shut down before answering"),
+        }
+    }
+}
+
+impl std::error::Error for ServeError {}
+
+/// Handle to a submitted request; [`Ticket::wait`] blocks for the
+/// response.
+pub struct Ticket(Receiver<Result<SolveResponse, ServeError>>);
+
+impl Ticket {
+    pub fn wait(self) -> Result<SolveResponse, ServeError> {
+        self.0.recv().unwrap_or(Err(ServeError::Canceled))
+    }
+}
+
+/// Cumulative service counters (atomic snapshots, monotone).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ServiceStats {
+    /// Requests answered (including errored ones).
+    pub requests: u64,
+    /// Blocked solves executed.
+    pub batches: u64,
+    /// Total RHS columns across executed panels.
+    pub panel_cols: u64,
+    /// Widest panel executed.
+    pub max_panel: u64,
+    /// Nanoseconds spent inside blocked solves.
+    pub solve_nanos: u64,
+}
+
+impl ServiceStats {
+    /// Mean columns per blocked solve — the batching efficiency the
+    /// coalescer achieved (1.0 means no coalescing happened).
+    pub fn mean_panel_width(&self) -> f64 {
+        if self.batches == 0 {
+            0.0
+        } else {
+            self.panel_cols as f64 / self.batches as f64
+        }
+    }
+}
+
+struct PendingReq {
+    key: u64,
+    rhs: Vec<f64>,
+    enqueued: Instant,
+    tx: Sender<Result<SolveResponse, ServeError>>,
+}
+
+#[derive(Default)]
+struct QueueState {
+    pending: VecDeque<PendingReq>,
+    shutdown: bool,
+}
+
+#[derive(Default)]
+struct Counters {
+    requests: AtomicU64,
+    batches: AtomicU64,
+    panel_cols: AtomicU64,
+    max_panel: AtomicU64,
+    solve_nanos: AtomicU64,
+}
+
+struct Inner {
+    queue: Mutex<QueueState>,
+    cv: Condvar,
+    /// Factors registered in-process (e.g. freshly computed by the
+    /// caller), checked before the on-disk store.
+    registry: Mutex<HashMap<u64, Arc<StoredFactor>>>,
+    counters: Counters,
+}
+
+/// Tiny LRU over loaded factors (worker-thread local; capacities are
+/// single digits, so a vector beats a linked structure).
+struct FactorCache {
+    cap: usize,
+    entries: Vec<(u64, Arc<StoredFactor>)>,
+}
+
+impl FactorCache {
+    fn new(cap: usize) -> Self {
+        FactorCache { cap: cap.max(1), entries: Vec::new() }
+    }
+
+    fn get(&mut self, key: u64) -> Option<Arc<StoredFactor>> {
+        let pos = self.entries.iter().position(|(k, _)| *k == key)?;
+        let entry = self.entries.remove(pos);
+        let f = entry.1.clone();
+        self.entries.insert(0, entry);
+        Some(f)
+    }
+
+    fn insert(&mut self, key: u64, f: Arc<StoredFactor>) {
+        self.entries.retain(|(k, _)| *k != key);
+        self.entries.insert(0, (key, f));
+        self.entries.truncate(self.cap);
+    }
+}
+
+/// The solve service. Construction spawns one worker thread; dropping
+/// the service drains the queue and joins the worker.
+pub struct SolveService {
+    inner: Arc<Inner>,
+    worker: Option<std::thread::JoinHandle<()>>,
+}
+
+impl SolveService {
+    /// Start a service over `store` with the given batching options.
+    pub fn start(store: FactorStore, opts: ServeOpts) -> SolveService {
+        assert!(opts.max_panel > 0, "max_panel must be positive");
+        let inner = Arc::new(Inner {
+            queue: Mutex::new(QueueState::default()),
+            cv: Condvar::new(),
+            registry: Mutex::new(HashMap::new()),
+            counters: Counters::default(),
+        });
+        let worker_inner = inner.clone();
+        let worker = std::thread::Builder::new()
+            .name("h2opus-serve".into())
+            .spawn(move || worker_loop(&worker_inner, &store, &opts))
+            .expect("spawn serve worker");
+        SolveService { inner, worker: Some(worker) }
+    }
+
+    /// Register an in-memory factor under `key` (bypasses the store for
+    /// that key). Useful right after factoring, before or instead of
+    /// persisting.
+    pub fn register(&self, key: u64, f: StoredFactor) {
+        self.inner.registry.lock().unwrap().insert(key, Arc::new(f));
+    }
+
+    /// Submit a single-RHS solve against the factor under `key`.
+    /// Returns immediately; the request is coalesced with its
+    /// neighbors.
+    pub fn submit(&self, key: u64, rhs: Vec<f64>) -> Ticket {
+        let (tx, rx) = channel();
+        {
+            let mut q = self.inner.queue.lock().unwrap();
+            q.pending.push_back(PendingReq { key, rhs, enqueued: Instant::now(), tx });
+        }
+        self.inner.cv.notify_all();
+        Ticket(rx)
+    }
+
+    /// Snapshot of the cumulative counters.
+    pub fn stats(&self) -> ServiceStats {
+        let c = &self.inner.counters;
+        ServiceStats {
+            requests: c.requests.load(Ordering::Relaxed),
+            batches: c.batches.load(Ordering::Relaxed),
+            panel_cols: c.panel_cols.load(Ordering::Relaxed),
+            max_panel: c.max_panel.load(Ordering::Relaxed),
+            solve_nanos: c.solve_nanos.load(Ordering::Relaxed),
+        }
+    }
+}
+
+impl Drop for SolveService {
+    fn drop(&mut self) {
+        {
+            let mut q = self.inner.queue.lock().unwrap();
+            q.shutdown = true;
+        }
+        self.inner.cv.notify_all();
+        if let Some(w) = self.worker.take() {
+            let _ = w.join();
+        }
+    }
+}
+
+/// Resolve `key` through registry → LRU cache → disk store. The
+/// registry is consulted first so a re-[`SolveService::register`]ed
+/// factor takes effect immediately instead of being shadowed by a
+/// stale LRU entry.
+fn resolve_factor(
+    key: u64,
+    inner: &Inner,
+    store: &FactorStore,
+    cache: &mut FactorCache,
+) -> Result<Arc<StoredFactor>, ServeError> {
+    if let Some(f) = inner.registry.lock().unwrap().get(&key).cloned() {
+        cache.insert(key, f.clone());
+        return Ok(f);
+    }
+    if let Some(f) = cache.get(key) {
+        return Ok(f);
+    }
+    match store.load(key) {
+        Ok(Some(f)) => {
+            let f = Arc::new(f);
+            cache.insert(key, f.clone());
+            Ok(f)
+        }
+        Ok(None) => Err(ServeError::UnknownFactor(key)),
+        Err(StoreError::Io(e)) => Err(ServeError::Store(e.to_string())),
+        Err(StoreError::Format(m)) => Err(ServeError::Store(m)),
+    }
+}
+
+fn worker_loop(inner: &Inner, store: &FactorStore, opts: &ServeOpts) {
+    let mut cache = FactorCache::new(opts.cache_capacity);
+    // One long-lived executor for every blocked solve this worker runs
+    // (see the `solve` module docs on executor threading).
+    let exec = NativeBatch::new();
+    loop {
+        // -- Admission: wait for work, then hold the batch open until
+        //    the panel fills or the first request's deadline expires
+        //    (the DynamicBatcher idiom: keep the processing batch full,
+        //    but never stall a request past the deadline).
+        let batch: Vec<PendingReq> = {
+            let mut q = inner.queue.lock().unwrap();
+            while q.pending.is_empty() {
+                if q.shutdown {
+                    return;
+                }
+                q = inner.cv.wait(q).unwrap();
+            }
+            let (first_key, first_t) = {
+                let f = q.pending.front().unwrap();
+                (f.key, f.enqueued)
+            };
+            let deadline = first_t + opts.flush_deadline;
+            loop {
+                let same = q.pending.iter().filter(|r| r.key == first_key).count();
+                if same >= opts.max_panel || q.shutdown {
+                    break;
+                }
+                let now = Instant::now();
+                if now >= deadline {
+                    break;
+                }
+                let (qq, _timeout) = inner.cv.wait_timeout(q, deadline - now).unwrap();
+                q = qq;
+                if q.pending.is_empty() {
+                    // Spurious state change; restart admission.
+                    break;
+                }
+            }
+            if q.pending.is_empty() {
+                continue;
+            }
+            let mut batch = Vec::new();
+            let mut rest = VecDeque::new();
+            while let Some(r) = q.pending.pop_front() {
+                if r.key == first_key && batch.len() < opts.max_panel {
+                    batch.push(r);
+                } else {
+                    rest.push_back(r);
+                }
+            }
+            q.pending = rest;
+            batch
+        };
+        if batch.is_empty() {
+            continue;
+        }
+        run_batch(batch, inner, store, &mut cache, &exec);
+    }
+}
+
+fn run_batch(
+    batch: Vec<PendingReq>,
+    inner: &Inner,
+    store: &FactorStore,
+    cache: &mut FactorCache,
+    exec: &NativeBatch,
+) {
+    let key = batch[0].key;
+    let factor = match resolve_factor(key, inner, store, cache) {
+        Ok(f) => f,
+        Err(e) => {
+            inner.counters.requests.fetch_add(batch.len() as u64, Ordering::Relaxed);
+            for req in batch {
+                let _ = req.tx.send(Err(e.clone()));
+            }
+            return;
+        }
+    };
+    let n = factor.n();
+    // Partition out malformed RHS vectors before building the panel.
+    let mut valid = Vec::with_capacity(batch.len());
+    for req in batch {
+        if req.rhs.len() == n {
+            valid.push(req);
+        } else {
+            inner.counters.requests.fetch_add(1, Ordering::Relaxed);
+            let got = req.rhs.len();
+            let _ = req.tx.send(Err(ServeError::BadRhs { expected: n, got }));
+        }
+    }
+    if valid.is_empty() {
+        return;
+    }
+    let w = valid.len();
+    let mut panel = Matrix::zeros(n, w);
+    for (j, req) in valid.iter().enumerate() {
+        panel.col_mut(j).copy_from_slice(&req.rhs);
+    }
+    let t0 = Instant::now();
+    let x = match factor.as_ref() {
+        StoredFactor::Chol(f) => chol_solve_multi_with(f, &panel, exec),
+        StoredFactor::Ldl(f) => ldl_solve_multi_with(f, &panel, exec),
+    };
+    let solve_nanos = t0.elapsed().as_nanos() as u64;
+    let c = &inner.counters;
+    c.requests.fetch_add(w as u64, Ordering::Relaxed);
+    c.batches.fetch_add(1, Ordering::Relaxed);
+    c.panel_cols.fetch_add(w as u64, Ordering::Relaxed);
+    c.max_panel.fetch_max(w as u64, Ordering::Relaxed);
+    c.solve_nanos.fetch_add(solve_nanos, Ordering::Relaxed);
+    profile::add_serve_batch(w as u64, solve_nanos);
+    let now = Instant::now();
+    for (j, req) in valid.into_iter().enumerate() {
+        let resp = SolveResponse {
+            x: x.col(j).to_vec(),
+            latency: now.duration_since(req.enqueued),
+            panel_width: w,
+        };
+        let _ = req.tx.send(Ok(resp));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lru_evicts_oldest() {
+        use crate::factor::{CholFactor, FactorStats};
+        use crate::tlr::matrix::TlrMatrix;
+        use crate::tlr::tile::Tile;
+        // A minimal 1-tile factor as a cache payload.
+        let mk = |n: usize| {
+            let l = TlrMatrix::from_tiles(
+                vec![0, n],
+                vec![Tile::Dense(Matrix::identity(n))],
+            );
+            Arc::new(StoredFactor::Chol(CholFactor {
+                l,
+                stats: FactorStats { perm: vec![0], ..Default::default() },
+            }))
+        };
+        let mut c = FactorCache::new(2);
+        c.insert(1, mk(1));
+        c.insert(2, mk(2));
+        assert!(c.get(1).is_some()); // touch 1 → MRU
+        c.insert(3, mk(3)); // evicts 2
+        assert!(c.get(2).is_none());
+        assert!(c.get(1).is_some());
+        assert!(c.get(3).is_some());
+    }
+}

@@ -1,0 +1,672 @@
+//! Versioned binary serialization for TLR matrices and factors, plus the
+//! on-disk [`FactorStore`] the solve service loads from.
+//!
+//! The paper's serving regime — many solves against one amortized
+//! factorization — only works if the factor outlives the process that
+//! computed it. The format here is deliberately boring and
+//! `mmap`-friendly:
+//!
+//! ```text
+//! magic "H2OTLRSF" | version u32 | kind u32 | header_len u64
+//! | payload_len u64 (f64 count) | checksum u64 (FNV-1a, header+payload)
+//! | header (header_len bytes, all u64 LE)
+//! | payload (payload_len × 8 bytes, f64 LE, contiguous)
+//! ```
+//!
+//! All integers are little-endian. The fixed prefix is 40 bytes and the
+//! header is a whole number of `u64`s, so the payload starts 8-byte
+//! aligned — a reader may map the file and view the payload as `&[f64]`
+//! directly. Tile data is stored contiguously in lower-triangle packed
+//! order (`(i, j ≤ i)`, row by row): dense tiles as column-major
+//! `rows × cols`, low-rank tiles as `U` (`rows × k`) then `V`
+//! (`cols × k`). `f64` values round-trip bitwise
+//! (`to_le_bytes`/`from_le_bytes`), which the property tests in
+//! `rust/tests/serve.rs` assert.
+//!
+//! Three kinds share the layout:
+//!
+//! * kind 0 — a symmetric [`TlrMatrix`];
+//! * kind 1 — a [`CholFactor`]: the TLR `L` plus the tile permutation;
+//! * kind 2 — an [`LdlFactor`]: the TLR `L` plus the flat diagonal `D`
+//!   appended to the payload.
+
+use crate::factor::{CholFactor, FactorStats, LdlFactor};
+use crate::linalg::matrix::Matrix;
+use crate::tlr::matrix::TlrMatrix;
+use crate::tlr::tile::{LowRank, Tile};
+use std::path::{Path, PathBuf};
+
+const MAGIC: &[u8; 8] = b"H2OTLRSF";
+const VERSION: u32 = 1;
+
+const KIND_TLR: u32 = 0;
+const KIND_CHOL: u32 = 1;
+const KIND_LDL: u32 = 2;
+
+const TAG_DENSE: u64 = 0;
+const TAG_LOWRANK: u64 = 1;
+
+/// Serialization / store failure.
+#[derive(Debug)]
+pub enum StoreError {
+    Io(std::io::Error),
+    /// Structural problem with the bytes (bad magic, truncation,
+    /// checksum mismatch, inconsistent shapes).
+    Format(String),
+}
+
+impl std::fmt::Display for StoreError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            StoreError::Io(e) => write!(f, "store io error: {e}"),
+            StoreError::Format(m) => write!(f, "store format error: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for StoreError {}
+
+impl From<std::io::Error> for StoreError {
+    fn from(e: std::io::Error) -> Self {
+        StoreError::Io(e)
+    }
+}
+
+fn format_err<T>(msg: impl Into<String>) -> Result<T, StoreError> {
+    Err(StoreError::Format(msg.into()))
+}
+
+// ------------------------------------------------------------- hashing
+
+const FNV_OFFSET: u64 = 0xcbf29ce484222325;
+const FNV_PRIME: u64 = 0x100000001b3;
+
+/// Extend a running FNV-1a 64-bit hash with `bytes`.
+pub fn fnv1a_extend(mut h: u64, bytes: &[u8]) -> u64 {
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(FNV_PRIME);
+    }
+    h
+}
+
+/// FNV-1a 64-bit hash of `bytes` — the file checksum and the
+/// [`FactorStore`] key hash (see `RunConfig::factor_key`).
+pub fn fnv1a(bytes: &[u8]) -> u64 {
+    fnv1a_extend(FNV_OFFSET, bytes)
+}
+
+// ------------------------------------------------- header construction
+
+/// Little-endian `u64` writer for the header section.
+#[derive(Default)]
+struct HeaderWriter {
+    buf: Vec<u8>,
+}
+
+impl HeaderWriter {
+    fn u64(&mut self, v: u64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+    fn usize(&mut self, v: usize) {
+        self.u64(v as u64);
+    }
+}
+
+/// Little-endian `u64` reader over the header section.
+struct HeaderReader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> HeaderReader<'a> {
+    fn new(buf: &'a [u8]) -> Self {
+        HeaderReader { buf, pos: 0 }
+    }
+    fn u64(&mut self) -> Result<u64, StoreError> {
+        if self.pos + 8 > self.buf.len() {
+            return format_err("truncated header");
+        }
+        let mut b = [0u8; 8];
+        b.copy_from_slice(&self.buf[self.pos..self.pos + 8]);
+        self.pos += 8;
+        Ok(u64::from_le_bytes(b))
+    }
+    fn usize(&mut self) -> Result<usize, StoreError> {
+        Ok(self.u64()? as usize)
+    }
+    fn done(&self) -> Result<(), StoreError> {
+        if self.pos != self.buf.len() {
+            return format_err("trailing header bytes");
+        }
+        Ok(())
+    }
+}
+
+fn tlr_header(h: &mut HeaderWriter, a: &TlrMatrix) {
+    let nb = a.nb();
+    h.usize(nb);
+    for &off in a.offsets() {
+        h.usize(off);
+    }
+    for i in 0..nb {
+        for j in 0..=i {
+            match a.tile(i, j) {
+                Tile::Dense(m) => {
+                    h.u64(TAG_DENSE);
+                    h.usize(m.rows());
+                    h.usize(m.cols());
+                    h.u64(0);
+                }
+                Tile::LowRank(lr) => {
+                    h.u64(TAG_LOWRANK);
+                    h.usize(lr.rows());
+                    h.usize(lr.cols());
+                    h.usize(lr.rank());
+                }
+            }
+        }
+    }
+}
+
+fn tlr_payload(payload: &mut Vec<f64>, a: &TlrMatrix) {
+    for i in 0..a.nb() {
+        for j in 0..=i {
+            match a.tile(i, j) {
+                Tile::Dense(m) => payload.extend_from_slice(m.as_slice()),
+                Tile::LowRank(lr) => {
+                    payload.extend_from_slice(lr.u.as_slice());
+                    payload.extend_from_slice(lr.v.as_slice());
+                }
+            }
+        }
+    }
+}
+
+/// Per-tile metadata from the header: `(tag, rows, cols, rank)`.
+type TileMeta = (u64, usize, usize, usize);
+
+fn read_tlr_header(
+    h: &mut HeaderReader<'_>,
+) -> Result<(Vec<usize>, Vec<TileMeta>), StoreError> {
+    let nb = h.usize()?;
+    if nb == 0 || nb > 1 << 24 {
+        return format_err(format!("implausible tile count {nb}"));
+    }
+    let mut offsets = Vec::with_capacity(nb + 1);
+    for _ in 0..nb + 1 {
+        offsets.push(h.usize()?);
+    }
+    if offsets[0] != 0 || offsets.windows(2).any(|w| w[0] >= w[1]) {
+        return format_err("offsets not strictly increasing from 0");
+    }
+    let mut tiles = Vec::with_capacity(nb * (nb + 1) / 2);
+    for i in 0..nb {
+        for j in 0..=i {
+            let tag = h.u64()?;
+            let rows = h.usize()?;
+            let cols = h.usize()?;
+            let rank = h.usize()?;
+            if rows != offsets[i + 1] - offsets[i] || cols != offsets[j + 1] - offsets[j] {
+                return format_err(format!("tile ({i},{j}) shape disagrees with offsets"));
+            }
+            match tag {
+                // Dense is legal anywhere (diagonals always; off-diagonal
+                // dense tiles are a supported storage choice). Low-rank
+                // diagonals are not.
+                TAG_DENSE => {}
+                TAG_LOWRANK if i != j && rank <= rows.min(cols) => {}
+                _ => return format_err(format!("tile ({i},{j}): bad tag/rank ({tag}/{rank})")),
+            }
+            tiles.push((tag, rows, cols, rank));
+        }
+    }
+    Ok((offsets, tiles))
+}
+
+fn read_tlr_payload(
+    payload: &[f64],
+    pos: &mut usize,
+    offsets: Vec<usize>,
+    metas: &[TileMeta],
+) -> Result<TlrMatrix, StoreError> {
+    let mut take = |count: usize| -> Result<Vec<f64>, StoreError> {
+        if *pos + count > payload.len() {
+            return format_err("truncated payload");
+        }
+        let v = payload[*pos..*pos + count].to_vec();
+        *pos += count;
+        Ok(v)
+    };
+    let mut tiles = Vec::with_capacity(metas.len());
+    for &(tag, rows, cols, rank) in metas {
+        if tag == TAG_DENSE {
+            tiles.push(Tile::Dense(Matrix::from_vec(rows, cols, take(rows * cols)?)));
+        } else {
+            let u = Matrix::from_vec(rows, rank, take(rows * rank)?);
+            let v = Matrix::from_vec(cols, rank, take(cols * rank)?);
+            tiles.push(Tile::LowRank(LowRank { u, v }));
+        }
+    }
+    Ok(TlrMatrix::from_tiles(offsets, tiles))
+}
+
+// -------------------------------------------------------- file framing
+
+fn frame(kind: u32, header: &[u8], payload: &[f64]) -> Vec<u8> {
+    let mut payload_bytes = Vec::with_capacity(payload.len() * 8);
+    for &v in payload {
+        payload_bytes.extend_from_slice(&v.to_le_bytes());
+    }
+    let checksum = fnv1a_extend(fnv1a(header), &payload_bytes);
+    let mut out = Vec::with_capacity(40 + header.len() + payload_bytes.len());
+    out.extend_from_slice(MAGIC);
+    out.extend_from_slice(&VERSION.to_le_bytes());
+    out.extend_from_slice(&kind.to_le_bytes());
+    out.extend_from_slice(&(header.len() as u64).to_le_bytes());
+    out.extend_from_slice(&(payload.len() as u64).to_le_bytes());
+    out.extend_from_slice(&checksum.to_le_bytes());
+    out.extend_from_slice(header);
+    out.extend_from_slice(&payload_bytes);
+    out
+}
+
+fn unframe(bytes: &[u8], want_kind: u32) -> Result<(&[u8], Vec<f64>), StoreError> {
+    if bytes.len() < 40 {
+        return format_err("file shorter than the fixed prefix");
+    }
+    if &bytes[0..8] != MAGIC {
+        return format_err("bad magic (not an H2OPUS-TLR factor file)");
+    }
+    let u32_at = |at: usize| u32::from_le_bytes(bytes[at..at + 4].try_into().unwrap());
+    let u64_at = |at: usize| u64::from_le_bytes(bytes[at..at + 8].try_into().unwrap());
+    let version = u32_at(8);
+    if version != VERSION {
+        return format_err(format!("unsupported version {version} (expected {VERSION})"));
+    }
+    let kind = u32_at(12);
+    if kind != want_kind {
+        return format_err(format!("kind mismatch: file has {kind}, expected {want_kind}"));
+    }
+    let header_len = u64_at(16) as usize;
+    let payload_len = u64_at(24) as usize;
+    let checksum = u64_at(32);
+    let expect = 40usize
+        .checked_add(header_len)
+        .and_then(|v| payload_len.checked_mul(8).and_then(|p| v.checked_add(p)));
+    if expect != Some(bytes.len()) {
+        return format_err(format!(
+            "length mismatch: {} bytes, header_len={header_len}, payload_len={payload_len}",
+            bytes.len()
+        ));
+    }
+    let header = &bytes[40..40 + header_len];
+    let payload_bytes = &bytes[40 + header_len..];
+    if fnv1a_extend(fnv1a(header), payload_bytes) != checksum {
+        return format_err("checksum mismatch (corrupted file)");
+    }
+    let mut payload = Vec::with_capacity(payload_len);
+    for chunk in payload_bytes.chunks_exact(8) {
+        payload.push(f64::from_le_bytes(chunk.try_into().unwrap()));
+    }
+    Ok((header, payload))
+}
+
+// ------------------------------------------------------- encode/decode
+
+/// Serialize a symmetric [`TlrMatrix`] (kind 0).
+pub fn encode_tlr(a: &TlrMatrix) -> Vec<u8> {
+    let mut h = HeaderWriter::default();
+    tlr_header(&mut h, a);
+    let mut payload = Vec::new();
+    tlr_payload(&mut payload, a);
+    frame(KIND_TLR, &h.buf, &payload)
+}
+
+/// Deserialize a [`TlrMatrix`] written by [`encode_tlr`].
+pub fn decode_tlr(bytes: &[u8]) -> Result<TlrMatrix, StoreError> {
+    let (header, payload) = unframe(bytes, KIND_TLR)?;
+    let mut h = HeaderReader::new(header);
+    let (offsets, metas) = read_tlr_header(&mut h)?;
+    h.done()?;
+    let mut pos = 0;
+    let a = read_tlr_payload(&payload, &mut pos, offsets, &metas)?;
+    if pos != payload.len() {
+        return format_err("trailing payload values");
+    }
+    Ok(a)
+}
+
+/// Serialize a [`CholFactor`] (kind 1): the TLR `L` plus the tile
+/// permutation. Run statistics are ephemeral and not stored.
+pub fn encode_chol(f: &CholFactor) -> Vec<u8> {
+    let mut h = HeaderWriter::default();
+    tlr_header(&mut h, &f.l);
+    assert_eq!(f.stats.perm.len(), f.l.nb(), "factor permutation must cover every tile");
+    for &p in &f.stats.perm {
+        h.usize(p);
+    }
+    let mut payload = Vec::new();
+    tlr_payload(&mut payload, &f.l);
+    frame(KIND_CHOL, &h.buf, &payload)
+}
+
+/// Deserialize a [`CholFactor`] written by [`encode_chol`]. The returned
+/// factor carries default (empty) run statistics with the stored
+/// permutation.
+pub fn decode_chol(bytes: &[u8]) -> Result<CholFactor, StoreError> {
+    let (header, payload) = unframe(bytes, KIND_CHOL)?;
+    let mut h = HeaderReader::new(header);
+    let (offsets, metas) = read_tlr_header(&mut h)?;
+    let nb = offsets.len() - 1;
+    let mut perm = Vec::with_capacity(nb);
+    for _ in 0..nb {
+        let p = h.usize()?;
+        if p >= nb {
+            return format_err(format!("permutation entry {p} out of range"));
+        }
+        perm.push(p);
+    }
+    h.done()?;
+    let mut pos = 0;
+    let l = read_tlr_payload(&payload, &mut pos, offsets, &metas)?;
+    if pos != payload.len() {
+        return format_err("trailing payload values");
+    }
+    Ok(CholFactor { l, stats: FactorStats { perm, ..Default::default() } })
+}
+
+/// Serialize an [`LdlFactor`] (kind 2): the TLR `L` with the flat
+/// diagonal `D` appended to the payload (its block lengths are the tile
+/// sizes, so no extra header is needed).
+pub fn encode_ldl(f: &LdlFactor) -> Vec<u8> {
+    let mut h = HeaderWriter::default();
+    tlr_header(&mut h, &f.l);
+    let mut payload = Vec::new();
+    tlr_payload(&mut payload, &f.l);
+    assert_eq!(
+        f.d.iter().map(Vec::len).sum::<usize>(),
+        f.l.n(),
+        "LDL diagonal must have one entry per row"
+    );
+    for block in &f.d {
+        payload.extend_from_slice(block);
+    }
+    frame(KIND_LDL, &h.buf, &payload)
+}
+
+/// Deserialize an [`LdlFactor`] written by [`encode_ldl`].
+pub fn decode_ldl(bytes: &[u8]) -> Result<LdlFactor, StoreError> {
+    let (header, payload) = unframe(bytes, KIND_LDL)?;
+    let mut h = HeaderReader::new(header);
+    let (offsets, metas) = read_tlr_header(&mut h)?;
+    h.done()?;
+    let nb = offsets.len() - 1;
+    let sizes: Vec<usize> = (0..nb).map(|i| offsets[i + 1] - offsets[i]).collect();
+    let n = *offsets.last().unwrap();
+    let mut pos = 0;
+    let l = read_tlr_payload(&payload, &mut pos, offsets, &metas)?;
+    if pos + n != payload.len() {
+        return format_err("LDL diagonal length disagrees with offsets");
+    }
+    let mut d = Vec::with_capacity(nb);
+    for sz in sizes {
+        d.push(payload[pos..pos + sz].to_vec());
+        pos += sz;
+    }
+    Ok(LdlFactor { l, d, stats: FactorStats::default() })
+}
+
+// -------------------------------------------------------- file helpers
+
+/// Write `bytes` atomically-ish: to a sibling temp file, then rename.
+fn write_file(path: &Path, bytes: &[u8]) -> Result<(), StoreError> {
+    if let Some(dir) = path.parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    let tmp = path.with_extension("tmp");
+    std::fs::write(&tmp, bytes)?;
+    std::fs::rename(&tmp, path)?;
+    Ok(())
+}
+
+/// Save a [`TlrMatrix`] to `path`.
+pub fn save_tlr(path: &Path, a: &TlrMatrix) -> Result<(), StoreError> {
+    write_file(path, &encode_tlr(a))
+}
+
+/// Load a [`TlrMatrix`] from `path`.
+pub fn load_tlr(path: &Path) -> Result<TlrMatrix, StoreError> {
+    decode_tlr(&std::fs::read(path)?)
+}
+
+/// Save a [`CholFactor`] to `path`.
+pub fn save_chol(path: &Path, f: &CholFactor) -> Result<(), StoreError> {
+    write_file(path, &encode_chol(f))
+}
+
+/// Load a [`CholFactor`] from `path`.
+pub fn load_chol(path: &Path) -> Result<CholFactor, StoreError> {
+    decode_chol(&std::fs::read(path)?)
+}
+
+/// Save an [`LdlFactor`] to `path`.
+pub fn save_ldl(path: &Path, f: &LdlFactor) -> Result<(), StoreError> {
+    write_file(path, &encode_ldl(f))
+}
+
+/// Load an [`LdlFactor`] from `path`.
+pub fn load_ldl(path: &Path) -> Result<LdlFactor, StoreError> {
+    decode_ldl(&std::fs::read(path)?)
+}
+
+// --------------------------------------------------------- FactorStore
+
+/// A factor loaded from a store: either factorization kind.
+pub enum StoredFactor {
+    Chol(CholFactor),
+    Ldl(LdlFactor),
+}
+
+impl StoredFactor {
+    /// Matrix order served by this factor.
+    pub fn n(&self) -> usize {
+        match self {
+            StoredFactor::Chol(f) => f.l.n(),
+            StoredFactor::Ldl(f) => f.l.n(),
+        }
+    }
+}
+
+/// Directory of persisted factors keyed by a problem-config hash
+/// (`RunConfig::factor_key`). Layout:
+///
+/// ```text
+/// <root>/<key as 016x hex>/chol.bin   (or ldl.bin)
+/// <root>/<key as 016x hex>/meta.txt   (human-readable description)
+/// ```
+///
+/// One directory per key keeps eviction and inspection trivial (`rm -r`
+/// a key, `ls` the root).
+pub struct FactorStore {
+    root: PathBuf,
+}
+
+impl FactorStore {
+    /// Open (creating if needed) a store rooted at `root`.
+    pub fn open(root: impl Into<PathBuf>) -> Result<FactorStore, StoreError> {
+        let root = root.into();
+        std::fs::create_dir_all(&root)?;
+        Ok(FactorStore { root })
+    }
+
+    pub fn root(&self) -> &Path {
+        &self.root
+    }
+
+    fn key_dir(&self, key: u64) -> PathBuf {
+        self.root.join(format!("{key:016x}"))
+    }
+
+    fn chol_path(&self, key: u64) -> PathBuf {
+        self.key_dir(key).join("chol.bin")
+    }
+
+    fn ldl_path(&self, key: u64) -> PathBuf {
+        self.key_dir(key).join("ldl.bin")
+    }
+
+    /// Does any factor exist under `key`?
+    pub fn contains(&self, key: u64) -> bool {
+        self.chol_path(key).exists() || self.ldl_path(key).exists()
+    }
+
+    /// Persist a Cholesky factor under `key`, with a human-readable
+    /// description alongside. A key holds exactly one factor: saving
+    /// replaces a previously stored factor of the other kind.
+    pub fn save_chol(&self, key: u64, f: &CholFactor, desc: &str) -> Result<PathBuf, StoreError> {
+        let path = self.chol_path(key);
+        save_chol(&path, f)?;
+        let _ = std::fs::remove_file(self.ldl_path(key));
+        let _ = std::fs::write(self.key_dir(key).join("meta.txt"), desc);
+        Ok(path)
+    }
+
+    /// Persist an LDLᵀ factor under `key` (replacing a Cholesky factor
+    /// previously stored there, if any — a key holds one factor).
+    pub fn save_ldl(&self, key: u64, f: &LdlFactor, desc: &str) -> Result<PathBuf, StoreError> {
+        let path = self.ldl_path(key);
+        save_ldl(&path, f)?;
+        let _ = std::fs::remove_file(self.chol_path(key));
+        let _ = std::fs::write(self.key_dir(key).join("meta.txt"), desc);
+        Ok(path)
+    }
+
+    /// Load whichever factor kind is stored under `key`; `Ok(None)` if
+    /// the key has never been saved.
+    pub fn load(&self, key: u64) -> Result<Option<StoredFactor>, StoreError> {
+        let cp = self.chol_path(key);
+        if cp.exists() {
+            return Ok(Some(StoredFactor::Chol(load_chol(&cp)?)));
+        }
+        let lp = self.ldl_path(key);
+        if lp.exists() {
+            return Ok(Some(StoredFactor::Ldl(load_ldl(&lp)?)));
+        }
+        Ok(None)
+    }
+
+    /// All keys present in the store.
+    pub fn keys(&self) -> Result<Vec<u64>, StoreError> {
+        let mut out = Vec::new();
+        for entry in std::fs::read_dir(&self.root)? {
+            let entry = entry?;
+            if let Some(name) = entry.file_name().to_str() {
+                if let Ok(k) = u64::from_str_radix(name, 16) {
+                    out.push(k);
+                }
+            }
+        }
+        out.sort_unstable();
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::rng::Rng;
+
+    fn random_tlr(sizes: &[usize], rank: usize, seed: u64) -> TlrMatrix {
+        let mut offsets = vec![0];
+        for &s in sizes {
+            offsets.push(offsets.last().unwrap() + s);
+        }
+        let mut rng = Rng::new(seed);
+        let mut tiles = Vec::new();
+        for i in 0..sizes.len() {
+            for j in 0..=i {
+                if i == j {
+                    let mut d = rng.normal_matrix(sizes[i], sizes[i]);
+                    d.symmetrize();
+                    tiles.push(Tile::Dense(d));
+                } else {
+                    let k = rank.min(sizes[i]).min(sizes[j]);
+                    tiles.push(Tile::LowRank(LowRank {
+                        u: rng.normal_matrix(sizes[i], k),
+                        v: rng.normal_matrix(sizes[j], k),
+                    }));
+                }
+            }
+        }
+        TlrMatrix::from_tiles(offsets, tiles)
+    }
+
+    fn assert_tiles_bitwise(a: &TlrMatrix, b: &TlrMatrix) {
+        assert_eq!(a.offsets(), b.offsets());
+        for i in 0..a.nb() {
+            for j in 0..=i {
+                match (a.tile(i, j), b.tile(i, j)) {
+                    (Tile::Dense(x), Tile::Dense(y)) => assert_eq!(x, y, "tile ({i},{j})"),
+                    (Tile::LowRank(x), Tile::LowRank(y)) => {
+                        assert_eq!(x.u, y.u, "tile ({i},{j}) U");
+                        assert_eq!(x.v, y.v, "tile ({i},{j}) V");
+                    }
+                    _ => panic!("tile ({i},{j}) kind changed in round trip"),
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn tlr_roundtrip_bitwise() {
+        let a = random_tlr(&[5, 7, 4], 2, 1);
+        let back = decode_tlr(&encode_tlr(&a)).unwrap();
+        assert_tiles_bitwise(&a, &back);
+    }
+
+    #[test]
+    fn dense_offdiagonal_tile_roundtrips() {
+        // Off-diagonal tiles may be stored dense (a legal storage
+        // choice elsewhere in the crate); the decoder must accept them.
+        let mut rng = Rng::new(9);
+        let mut a = random_tlr(&[4, 4], 2, 9);
+        a.set_tile(1, 0, Tile::Dense(rng.normal_matrix(4, 4)));
+        let back = decode_tlr(&encode_tlr(&a)).unwrap();
+        assert_tiles_bitwise(&a, &back);
+    }
+
+    #[test]
+    fn corrupted_payload_detected() {
+        let a = random_tlr(&[4, 4], 2, 2);
+        let mut bytes = encode_tlr(&a);
+        let last = bytes.len() - 1;
+        bytes[last] ^= 0x40;
+        match decode_tlr(&bytes) {
+            Err(StoreError::Format(m)) => assert!(m.contains("checksum"), "{m}"),
+            other => panic!("expected checksum error, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn truncated_file_detected() {
+        let a = random_tlr(&[4, 4], 2, 3);
+        let bytes = encode_tlr(&a);
+        assert!(decode_tlr(&bytes[..bytes.len() - 8]).is_err());
+        assert!(decode_tlr(&bytes[..16]).is_err());
+    }
+
+    #[test]
+    fn kind_mismatch_detected() {
+        let a = random_tlr(&[4, 4], 2, 4);
+        let bytes = encode_tlr(&a);
+        assert!(decode_chol(&bytes).is_err());
+    }
+
+    #[test]
+    fn fnv_is_stable() {
+        // Pin the hash so stored keys stay valid across releases.
+        assert_eq!(fnv1a(b""), 0xcbf29ce484222325);
+        assert_eq!(fnv1a(b"a"), 0xaf63dc4c8601ec8c);
+    }
+}

@@ -1,8 +1,47 @@
 //! Preconditioned conjugate gradients (paper §6.2): the low-accuracy TLR
 //! Cholesky of `A + εI` is used as the preconditioner for the
 //! ill-conditioned fractional-diffusion systems.
+//!
+//! The implementation is the blocked [`pcg_multi`]: `r` independent CG
+//! recurrences carried in an `n × r` panel, so every matvec and
+//! preconditioner application is a rank-`r` panel operation (a batched
+//! GEMM through [`crate::solve::tlr_matvec_multi`] /
+//! [`crate::solve::chol_solve_multi`]) instead of `r` GEMV-shaped
+//! passes over the tiles. Columns converge independently: a converged
+//! (or broken-down) column freezes — its x/r/p stop updating — while the
+//! rest keep iterating. The scalar recurrences (`α_j`, `β_j`, residual
+//! tracking) are per column, so each column computes exactly the values
+//! the single-RHS CG would; [`pcg`] is the `r = 1` wrapper.
 
+use crate::linalg::matrix::Matrix;
 use crate::linalg::norms::{dot, l2, SymOp};
+
+/// An operator applied to an `n × r` panel of vectors at once — the
+/// multi-RHS counterpart of [`SymOp`]. Implemented by
+/// [`crate::solve::TlrOp`] via the batched panel matvec.
+pub trait PanelOp {
+    fn dim(&self) -> usize;
+    /// `Y = A X` for an `n × r` panel `X`.
+    fn apply_panel(&self, x: &Matrix) -> Matrix;
+}
+
+/// Adapter: drive a [`SymOp`] column by column as a [`PanelOp`]. Used by
+/// the single-RHS [`pcg`] wrapper; panel-native operators should
+/// implement [`PanelOp`] directly instead.
+pub struct ColumnwiseOp<'a>(pub &'a dyn SymOp);
+
+impl PanelOp for ColumnwiseOp<'_> {
+    fn dim(&self) -> usize {
+        self.0.dim()
+    }
+    fn apply_panel(&self, x: &Matrix) -> Matrix {
+        let mut y = Matrix::zeros(x.rows(), x.cols());
+        for j in 0..x.cols() {
+            y.col_mut(j).copy_from_slice(&self.0.apply(x.col(j)));
+        }
+        y
+    }
+}
 
 /// Outcome of a (P)CG solve.
 #[derive(Debug, Clone)]
@@ -17,8 +56,34 @@ pub struct CgResult {
     pub converged: bool,
 }
 
+/// Outcome of a blocked (P)CG solve over an `n × r` RHS panel.
+#[derive(Debug, Clone)]
+pub struct MultiCgResult {
+    /// Solution panel (column `j` solves `A x = b_j`).
+    pub x: Matrix,
+    /// Per-column iteration counts.
+    pub iters: Vec<usize>,
+    /// Per-column relative residual histories.
+    pub history: Vec<Vec<f64>>,
+    /// Per-column convergence flags.
+    pub converged: Vec<bool>,
+}
+
+impl MultiCgResult {
+    /// Extract column `j` as a single-RHS [`CgResult`].
+    pub fn column(&self, j: usize) -> CgResult {
+        CgResult {
+            x: self.x.col(j).to_vec(),
+            iters: self.iters[j],
+            history: self.history[j].clone(),
+            converged: self.converged[j],
+        }
+    }
+}
+
 /// Preconditioned CG on `A x = b` with preconditioner application
 /// `minv(r) ≈ A^{-1} r`. Pass `|r| r.to_vec()` for unpreconditioned CG.
+/// The `r = 1` wrapper of [`pcg_multi`].
 pub fn pcg(
     a: &dyn SymOp,
     minv: &dyn Fn(&[f64]) -> Vec<f64>,
@@ -28,43 +93,101 @@ pub fn pcg(
 ) -> CgResult {
     let n = a.dim();
     assert_eq!(b.len(), n);
-    let bnorm = l2(b).max(f64::MIN_POSITIVE);
-    let mut x = vec![0.0; n];
-    let mut r = b.to_vec();
-    let mut z = minv(&r);
+    let bm = Matrix::from_vec(n, 1, b.to_vec());
+    let minv_panel = |r: &Matrix| -> Matrix {
+        let mut z = Matrix::zeros(r.rows(), r.cols());
+        for j in 0..r.cols() {
+            z.col_mut(j).copy_from_slice(&minv(r.col(j)));
+        }
+        z
+    };
+    let res = pcg_multi(&ColumnwiseOp(a), &minv_panel, &bm, tol, max_iters);
+    res.column(0)
+}
+
+/// Blocked preconditioned CG on `A X = B` for an `n × r` RHS panel:
+/// one panel matvec and one panel preconditioner application per
+/// iteration, per-column scalar recurrences, per-column convergence.
+///
+/// A column freezes when it converges or when `pᵀAp` loses positivity
+/// (operator or preconditioner not SPD for that direction); frozen
+/// columns still ride along in the panel products but their results are
+/// discarded, keeping the iteration GEMM-shaped to the end.
+pub fn pcg_multi(
+    a: &dyn PanelOp,
+    minv: &dyn Fn(&Matrix) -> Matrix,
+    b: &Matrix,
+    tol: f64,
+    max_iters: usize,
+) -> MultiCgResult {
+    let n = a.dim();
+    let r = b.cols();
+    assert_eq!(b.rows(), n);
+    let bnorm: Vec<f64> = (0..r).map(|j| l2(b.col(j)).max(f64::MIN_POSITIVE)).collect();
+    let mut x = Matrix::zeros(n, r);
+    let mut res = b.clone();
+    let mut z = minv(&res);
     let mut p = z.clone();
-    let mut rz = dot(&r, &z);
-    let mut history = vec![l2(&r) / bnorm];
-    let mut converged = history[0] <= tol;
-    let mut iters = 0;
-    while !converged && iters < max_iters {
-        let ap = a.apply(&p);
-        let pap = dot(&p, &ap);
-        if pap <= 0.0 || !pap.is_finite() {
-            // Operator (or preconditioner) lost definiteness — stop.
+    let mut rz: Vec<f64> = (0..r).map(|j| dot(res.col(j), z.col(j))).collect();
+    let mut history: Vec<Vec<f64>> = (0..r).map(|j| vec![l2(res.col(j)) / bnorm[j]]).collect();
+    let mut converged: Vec<bool> = history.iter().map(|h| h[0] <= tol).collect();
+    // Broken-down columns (pᵀAp ≤ 0 or non-finite): frozen, not converged.
+    let mut broken = vec![false; r];
+    let mut iters = vec![0usize; r];
+    let active = |converged: &[bool], broken: &[bool]| {
+        converged.iter().zip(broken).any(|(&c, &br)| !c && !br)
+    };
+    let mut k = 0;
+    while k < max_iters && active(&converged, &broken) {
+        let ap = a.apply_panel(&p);
+        for j in 0..r {
+            if converged[j] || broken[j] {
+                continue;
+            }
+            let pap = dot(p.col(j), ap.col(j));
+            if pap <= 0.0 || !pap.is_finite() {
+                broken[j] = true;
+                continue;
+            }
+            let alpha = rz[j] / pap;
+            {
+                let xc = x.col_mut(j);
+                for (xi, pi) in xc.iter_mut().zip(p.col(j)) {
+                    *xi += alpha * pi;
+                }
+            }
+            {
+                let rc = res.col_mut(j);
+                for (ri, api) in rc.iter_mut().zip(ap.col(j)) {
+                    *ri -= alpha * api;
+                }
+            }
+            let rnorm = l2(res.col(j)) / bnorm[j];
+            history[j].push(rnorm);
+            iters[j] += 1;
+            if rnorm <= tol {
+                converged[j] = true;
+            }
+        }
+        k += 1;
+        if !active(&converged, &broken) {
             break;
         }
-        let alpha = rz / pap;
-        for i in 0..n {
-            x[i] += alpha * p[i];
-            r[i] -= alpha * ap[i];
-        }
-        let rnorm = l2(&r) / bnorm;
-        history.push(rnorm);
-        iters += 1;
-        if rnorm <= tol {
-            converged = true;
-            break;
-        }
-        z = minv(&r);
-        let rz_new = dot(&r, &z);
-        let beta = rz_new / rz;
-        rz = rz_new;
-        for i in 0..n {
-            p[i] = z[i] + beta * p[i];
+        z = minv(&res);
+        for j in 0..r {
+            if converged[j] || broken[j] {
+                continue;
+            }
+            let rz_new = dot(res.col(j), z.col(j));
+            let beta = rz_new / rz[j];
+            rz[j] = rz_new;
+            let pc = p.col_mut(j);
+            for (pi, zi) in pc.iter_mut().zip(z.col(j)) {
+                *pi = zi + beta * *pi;
+            }
         }
     }
-    CgResult { x, iters, history, converged }
+    MultiCgResult { x, iters, history, converged }
 }
 
 #[cfg(test)]
@@ -136,5 +259,45 @@ mod tests {
         assert!(r.converged);
         // Final residual below initial.
         assert!(r.history.last().unwrap() < &r.history[0]);
+    }
+
+    #[test]
+    fn blocked_cg_matches_single_columns() {
+        let a = spd(36, 7);
+        let mut rng = Rng::new(8);
+        let r = 4;
+        let b = rng.normal_matrix(36, r);
+        let multi = pcg_multi(&ColumnwiseOp(&a), &|r| r.clone(), &b, 1e-11, 300);
+        for j in 0..r {
+            let single = pcg(&a, &|r| r.to_vec(), b.col(j), 1e-11, 300);
+            assert_eq!(multi.iters[j], single.iters, "col {j}");
+            assert_eq!(multi.converged[j], single.converged, "col {j}");
+            let err: f64 = multi
+                .x
+                .col(j)
+                .iter()
+                .zip(&single.x)
+                .map(|(a, b)| (a - b).abs())
+                .fold(0.0, f64::max);
+            assert!(err < 1e-12, "col {j}: err={err}");
+        }
+    }
+
+    #[test]
+    fn blocked_cg_freezes_converged_columns() {
+        // Column 0 is the zero RHS (converged at iteration 0); column 1
+        // needs real work. The zero column's solution must stay exactly
+        // zero while the other iterates.
+        let a = spd(24, 9);
+        let mut rng = Rng::new(10);
+        let mut b = Matrix::zeros(24, 2);
+        for v in b.col_mut(1) {
+            *v = rng.normal();
+        }
+        let multi = pcg_multi(&ColumnwiseOp(&a), &|r| r.clone(), &b, 1e-10, 200);
+        assert!(multi.converged[0] && multi.converged[1]);
+        assert_eq!(multi.iters[0], 0);
+        assert!(multi.iters[1] > 0);
+        assert!(multi.x.col(0).iter().all(|&v| v == 0.0));
     }
 }

@@ -2,12 +2,32 @@
 //! triangular solves (Alg 7), full factor solves, preconditioned CG
 //! (§6.2), and the power-iteration verification `‖A − LLᵀ‖₂` the paper
 //! uses to validate every factorization.
+//!
+//! ## Multi-RHS panel solves
+//!
+//! Every operation here is implemented for an `n × r` RHS *panel*
+//! ([`tlr_matvec_multi`], [`tlr_trsm_lower`], [`chol_solve_multi`],
+//! [`ldl_solve_multi`], [`cg::pcg_multi`]) and issues rank-`r` GEMMs
+//! through the batched op-stream ([`crate::batch::StreamBuilder`]).
+//! The single-RHS functions are thin `r = 1` wrappers. This matters for
+//! serving: one RHS at a time runs the op-stream at memory-bandwidth
+//! speed (every tile is read once per GEMV-shaped product), while a fat
+//! panel amortizes each tile read over `r` columns and moves the solve
+//! back into the GEMM regime the paper's factorization lives in. The
+//! [`crate::serve`] subsystem coalesces independent single-RHS requests
+//! into exactly these panels.
+//!
+//! Each public solve constructs **one** batched-GEMM executor and
+//! threads it through every op-stream of the solve (the `_with`
+//! variants accept a caller-owned executor, e.g. the serve worker's
+//! long-lived one), instead of re-deriving worker-pool state on each of
+//! the `nb` column steps of a triangular solve.
 
 pub mod cg;
 
-pub use cg::{pcg, CgResult};
+pub use cg::{pcg, pcg_multi, CgResult, ColumnwiseOp, MultiCgResult, PanelOp};
 
-use crate::batch::{Arg, NativeBatch, StreamBuilder};
+use crate::batch::{Arg, BatchedGemm, NativeBatch, StreamBuilder};
 use crate::factor::{CholFactor, LdlFactor};
 use crate::linalg::blas::trsm_lower;
 use crate::linalg::matrix::Matrix;
@@ -15,42 +35,61 @@ use crate::linalg::norms::SymOp;
 use crate::linalg::{Side, Trans};
 use crate::tlr::matrix::TlrMatrix;
 
-/// Chop a length-N vector into per-tile column matrices (op-stream
+/// Chop an `N × r` RHS panel into per-tile row panels (op-stream
 /// operands).
-fn block_columns(a: &TlrMatrix, x: &[f64]) -> Vec<Matrix> {
+fn block_panels(a: &TlrMatrix, x: &Matrix) -> Vec<Matrix> {
     (0..a.nb())
         .map(|j| {
             let (s, len) = (a.tile_start(j), a.tile_size(j));
-            Matrix::from_vec(len, 1, x[s..s + len].to_vec())
+            x.submatrix(s, 0, len, x.cols())
         })
         .collect()
 }
 
-/// Concatenate output slots (one column per block row) back into a flat
-/// vector.
-fn concat_blocks(outs: &[Matrix], slots: &[usize]) -> Vec<f64> {
-    let mut y = Vec::with_capacity(slots.iter().map(|&s| outs[s].rows()).sum());
+/// Concatenate output slots (one row panel per block row) back into a
+/// flat `N × r` panel.
+fn concat_panels(outs: &[Matrix], slots: &[usize], n: usize, r: usize) -> Matrix {
+    let mut y = Matrix::zeros(n, r);
+    let mut row = 0;
     for &s in slots {
-        y.extend_from_slice(outs[s].as_slice());
+        y.set_submatrix(row, 0, &outs[s]);
+        row += outs[s].rows();
     }
     y
 }
 
-/// Symmetric TLR matvec `y = A x`: every block row accumulates its lower
-/// tiles forward and the mirrored upper contributions through
-/// transposes. All tile products are issued as one op-stream batch — the
-/// first wave holds every `Vᵀx` product of every tile, later waves
-/// pipeline the per-row accumulations — and run on the batched-GEMM
-/// executor.
+/// Wrap a length-N vector as an `N × 1` panel.
+fn as_panel(n: usize, x: &[f64]) -> Matrix {
+    assert_eq!(x.len(), n);
+    Matrix::from_vec(n, 1, x.to_vec())
+}
+
+/// Symmetric TLR matvec `y = A x` — the `r = 1` wrapper of
+/// [`tlr_matvec_multi`].
 pub fn tlr_matvec(a: &TlrMatrix, x: &[f64]) -> Vec<f64> {
-    assert_eq!(x.len(), a.n());
+    tlr_matvec_multi(a, &as_panel(a.n(), x)).as_slice().to_vec()
+}
+
+/// Symmetric TLR panel product `Y = A X` for an `n × r` panel: every
+/// block row accumulates its lower tiles forward and the mirrored upper
+/// contributions through transposes. All tile products are issued as one
+/// op-stream batch of rank-`r` GEMMs — the first wave holds every `Vᵀx`
+/// product of every tile, later waves pipeline the per-row
+/// accumulations — and run on the batched-GEMM executor.
+pub fn tlr_matvec_multi(a: &TlrMatrix, x: &Matrix) -> Matrix {
+    tlr_matvec_multi_with(a, x, &NativeBatch::new())
+}
+
+/// [`tlr_matvec_multi`] on a caller-owned executor.
+pub fn tlr_matvec_multi_with(a: &TlrMatrix, x: &Matrix, exec: &dyn BatchedGemm) -> Matrix {
+    assert_eq!(x.rows(), a.n());
     let nb = a.nb();
-    let xs = block_columns(a, x);
+    let xs = block_panels(a, x);
     let mut sb = StreamBuilder::new();
     let xargs: Vec<Arg> = xs.iter().map(|m| sb.input(m)).collect();
     let mut slots = Vec::with_capacity(nb);
     for i in 0..nb {
-        let dst = sb.output(a.tile_size(i), 1);
+        let dst = sb.output(a.tile_size(i), x.cols());
         slots.push(dst);
         // Lower tiles of block row i (including dense diagonal).
         for j in 0..=i {
@@ -61,143 +100,230 @@ pub fn tlr_matvec(a: &TlrMatrix, x: &[f64]) -> Vec<f64> {
             sb.apply_tile(a.tile(j, i), xargs[j], 1.0, dst, true);
         }
     }
-    let outs = sb.finish().execute(&NativeBatch::new());
-    concat_blocks(&outs, &slots)
+    let outs = sb.finish().execute(exec);
+    concat_panels(&outs, &slots, a.n(), x.cols())
 }
 
-/// Lower-triangular TLR matvec `y = L x` (uses only stored tiles).
+/// Lower-triangular TLR matvec `y = L x` (uses only stored tiles) — the
+/// `r = 1` wrapper of [`tlr_matvec_lower_multi`].
 pub fn tlr_matvec_lower(l: &TlrMatrix, x: &[f64]) -> Vec<f64> {
-    assert_eq!(x.len(), l.n());
+    tlr_matvec_lower_multi(l, &as_panel(l.n(), x)).as_slice().to_vec()
+}
+
+/// Lower-triangular TLR panel product `Y = L X`.
+pub fn tlr_matvec_lower_multi(l: &TlrMatrix, x: &Matrix) -> Matrix {
+    tlr_matvec_lower_multi_with(l, x, &NativeBatch::new())
+}
+
+/// [`tlr_matvec_lower_multi`] on a caller-owned executor.
+pub fn tlr_matvec_lower_multi_with(l: &TlrMatrix, x: &Matrix, exec: &dyn BatchedGemm) -> Matrix {
+    assert_eq!(x.rows(), l.n());
     let nb = l.nb();
-    let xs = block_columns(l, x);
+    let xs = block_panels(l, x);
     let mut sb = StreamBuilder::new();
     let xargs: Vec<Arg> = xs.iter().map(|m| sb.input(m)).collect();
     let mut slots = Vec::with_capacity(nb);
     for i in 0..nb {
-        let dst = sb.output(l.tile_size(i), 1);
+        let dst = sb.output(l.tile_size(i), x.cols());
         slots.push(dst);
         for j in 0..=i {
             sb.apply_tile(l.tile(i, j), xargs[j], 1.0, dst, false);
         }
     }
-    let outs = sb.finish().execute(&NativeBatch::new());
-    concat_blocks(&outs, &slots)
+    let outs = sb.finish().execute(exec);
+    concat_panels(&outs, &slots, l.n(), x.cols())
 }
 
-/// Transposed lower-triangular TLR matvec `y = Lᵀ x`.
+/// Transposed lower-triangular TLR matvec `y = Lᵀ x` — the `r = 1`
+/// wrapper of [`tlr_matvec_lower_t_multi`].
 pub fn tlr_matvec_lower_t(l: &TlrMatrix, x: &[f64]) -> Vec<f64> {
-    assert_eq!(x.len(), l.n());
+    tlr_matvec_lower_t_multi(l, &as_panel(l.n(), x)).as_slice().to_vec()
+}
+
+/// Transposed lower-triangular TLR panel product `Y = Lᵀ X`.
+pub fn tlr_matvec_lower_t_multi(l: &TlrMatrix, x: &Matrix) -> Matrix {
+    tlr_matvec_lower_t_multi_with(l, x, &NativeBatch::new())
+}
+
+/// [`tlr_matvec_lower_t_multi`] on a caller-owned executor.
+pub fn tlr_matvec_lower_t_multi_with(l: &TlrMatrix, x: &Matrix, exec: &dyn BatchedGemm) -> Matrix {
+    assert_eq!(x.rows(), l.n());
     let nb = l.nb();
-    let xs = block_columns(l, x);
+    let xs = block_panels(l, x);
     let mut sb = StreamBuilder::new();
     let xargs: Vec<Arg> = xs.iter().map(|m| sb.input(m)).collect();
     let mut slots = Vec::with_capacity(nb);
     for j in 0..nb {
-        let dst = sb.output(l.tile_size(j), 1);
+        let dst = sb.output(l.tile_size(j), x.cols());
         slots.push(dst);
         for i in j..nb {
             sb.apply_tile(l.tile(i, j), xargs[i], 1.0, dst, true);
         }
     }
-    let outs = sb.finish().execute(&NativeBatch::new());
-    concat_blocks(&outs, &slots)
+    let outs = sb.finish().execute(exec);
+    concat_panels(&outs, &slots, l.n(), x.cols())
 }
 
-/// TLR forward triangular solve `L x = y` (paper Alg 7): dense solve on
-/// each diagonal tile followed by a batched low-rank update of the
-/// remaining blocks (one op-stream per column step).
+/// TLR forward triangular solve `L x = y` (paper Alg 7) — the `r = 1`
+/// wrapper of [`tlr_trsm_lower`].
 pub fn tlr_trsv_lower(l: &TlrMatrix, y: &[f64]) -> Vec<f64> {
-    assert_eq!(y.len(), l.n());
+    tlr_trsm_lower(l, &as_panel(l.n(), y)).as_slice().to_vec()
+}
+
+/// TLR forward triangular panel solve `L X = B` for an `n × r` RHS
+/// panel: dense trsm on each diagonal tile followed by a batched rank-`r`
+/// low-rank update of the remaining blocks (one op-stream per column
+/// step).
+pub fn tlr_trsm_lower(l: &TlrMatrix, b: &Matrix) -> Matrix {
+    tlr_trsm_lower_with(l, b, &NativeBatch::new())
+}
+
+/// [`tlr_trsm_lower`] on a caller-owned executor.
+pub fn tlr_trsm_lower_with(l: &TlrMatrix, b: &Matrix, exec: &dyn BatchedGemm) -> Matrix {
+    assert_eq!(b.rows(), l.n());
     let nb = l.nb();
-    let exec = NativeBatch::new();
-    let mut x = y.to_vec();
+    let r = b.cols();
+    let mut x = b.clone();
     for k in 0..nb {
         let (k0, ks) = (l.tile_start(k), l.tile_size(k));
         // Dense triangular solve on the diagonal tile.
-        let mut xk = Matrix::from_vec(ks, 1, x[k0..k0 + ks].to_vec());
+        let mut xk = x.submatrix(k0, 0, ks, r);
         trsm_lower(Side::Left, Trans::No, l.tile(k, k).as_dense(), &mut xk);
-        x[k0..k0 + ks].copy_from_slice(xk.as_slice());
+        x.set_submatrix(k0, 0, &xk);
         if k + 1 >= nb {
             continue;
         }
-        // Batched update of all blocks below: x_i -= L(i,k) x_k.
+        // Batched update of all blocks below: X_i -= L(i,k) X_k.
         let mut sb = StreamBuilder::new();
         let xr = sb.input(&xk);
         let slots: Vec<usize> = (k + 1..nb)
             .map(|i| {
-                let dst = sb.output(l.tile_size(i), 1);
+                let dst = sb.output(l.tile_size(i), r);
                 sb.apply_tile(l.tile(i, k), xr, 1.0, dst, false);
                 dst
             })
             .collect();
-        let outs = sb.finish().execute(&exec);
+        let outs = sb.finish().execute(exec);
         for (idx, i) in (k + 1..nb).enumerate() {
             let i0 = l.tile_start(i);
-            for (q, v) in outs[slots[idx]].as_slice().iter().enumerate() {
-                x[i0 + q] -= *v;
+            let upd = &outs[slots[idx]];
+            for j in 0..r {
+                let col = x.col_mut(j);
+                for (q, v) in upd.col(j).iter().enumerate() {
+                    col[i0 + q] -= *v;
+                }
             }
         }
     }
     x
 }
 
-/// TLR backward triangular solve `Lᵀ x = y`.
+/// TLR backward triangular solve `Lᵀ x = y` — the `r = 1` wrapper of
+/// [`tlr_trsm_lower_t`].
 pub fn tlr_trsv_lower_t(l: &TlrMatrix, y: &[f64]) -> Vec<f64> {
-    assert_eq!(y.len(), l.n());
+    tlr_trsm_lower_t(l, &as_panel(l.n(), y)).as_slice().to_vec()
+}
+
+/// TLR backward triangular panel solve `Lᵀ X = B`.
+pub fn tlr_trsm_lower_t(l: &TlrMatrix, b: &Matrix) -> Matrix {
+    tlr_trsm_lower_t_with(l, b, &NativeBatch::new())
+}
+
+/// [`tlr_trsm_lower_t`] on a caller-owned executor.
+pub fn tlr_trsm_lower_t_with(l: &TlrMatrix, b: &Matrix, exec: &dyn BatchedGemm) -> Matrix {
+    assert_eq!(b.rows(), l.n());
     let nb = l.nb();
-    let exec = NativeBatch::new();
-    let mut x = y.to_vec();
+    let r = b.cols();
+    let mut x = b.clone();
     for k in (0..nb).rev() {
         let (k0, ks) = (l.tile_start(k), l.tile_size(k));
-        let mut xk = Matrix::from_vec(ks, 1, x[k0..k0 + ks].to_vec());
+        let mut xk = x.submatrix(k0, 0, ks, r);
         trsm_lower(Side::Left, Trans::Yes, l.tile(k, k).as_dense(), &mut xk);
-        x[k0..k0 + ks].copy_from_slice(xk.as_slice());
+        x.set_submatrix(k0, 0, &xk);
         if k == 0 {
             continue;
         }
-        // Batched update: x_j -= L(k,j)ᵀ x_k for j < k.
+        // Batched update: X_j -= L(k,j)ᵀ X_k for j < k.
         let mut sb = StreamBuilder::new();
         let xr = sb.input(&xk);
         let slots: Vec<usize> = (0..k)
             .map(|j| {
-                let dst = sb.output(l.tile_size(j), 1);
+                let dst = sb.output(l.tile_size(j), r);
                 sb.apply_tile(l.tile(k, j), xr, 1.0, dst, true);
                 dst
             })
             .collect();
-        let outs = sb.finish().execute(&exec);
+        let outs = sb.finish().execute(exec);
         for (j, &slot) in slots.iter().enumerate() {
             let j0 = l.tile_start(j);
-            for (q, v) in outs[slot].as_slice().iter().enumerate() {
-                x[j0 + q] -= *v;
+            let upd = &outs[slot];
+            for c in 0..r {
+                let col = x.col_mut(c);
+                for (q, v) in upd.col(c).iter().enumerate() {
+                    col[j0 + q] -= *v;
+                }
             }
         }
     }
     x
 }
 
-/// Solve `A x = b` with a TLR Cholesky factor (`P A Pᵀ = L Lᵀ`).
+/// Solve `A x = b` with a TLR Cholesky factor (`P A Pᵀ = L Lᵀ`) — the
+/// `r = 1` wrapper of [`chol_solve_multi`].
 pub fn chol_solve(f: &CholFactor, b: &[f64]) -> Vec<f64> {
+    chol_solve_multi(f, &as_panel(f.l.n(), b)).as_slice().to_vec()
+}
+
+/// Solve `A X = B` for an `n × r` RHS panel with a TLR Cholesky factor.
+pub fn chol_solve_multi(f: &CholFactor, b: &Matrix) -> Matrix {
+    chol_solve_multi_with(f, b, &NativeBatch::new())
+}
+
+/// [`chol_solve_multi`] on a caller-owned executor (one executor spans
+/// both triangular sweeps).
+pub fn chol_solve_multi_with(f: &CholFactor, b: &Matrix, exec: &dyn BatchedGemm) -> Matrix {
+    let (n, r) = b.shape();
+    assert_eq!(n, f.l.n());
     let perm = f.scalar_perm();
-    let pb: Vec<f64> = perm.iter().map(|&p| b[p]).collect();
-    let z = tlr_trsv_lower(&f.l, &pb);
-    let px = tlr_trsv_lower_t(&f.l, &z);
-    let mut x = vec![0.0; b.len()];
-    for (i, &p) in perm.iter().enumerate() {
-        x[p] = px[i];
+    let mut pb = Matrix::zeros(n, r);
+    for j in 0..r {
+        for (i, &p) in perm.iter().enumerate() {
+            pb[(i, j)] = b[(p, j)];
+        }
+    }
+    let z = tlr_trsm_lower_with(&f.l, &pb, exec);
+    let px = tlr_trsm_lower_t_with(&f.l, &z, exec);
+    let mut x = Matrix::zeros(n, r);
+    for j in 0..r {
+        for (i, &p) in perm.iter().enumerate() {
+            x[(p, j)] = px[(i, j)];
+        }
     }
     x
 }
 
-/// Solve `A x = b` with a TLR LDLᵀ factor.
+/// Solve `A x = b` with a TLR LDLᵀ factor — the `r = 1` wrapper of
+/// [`ldl_solve_multi`].
 pub fn ldl_solve(f: &LdlFactor, b: &[f64]) -> Vec<f64> {
-    let z = tlr_trsv_lower(&f.l, b);
-    let d = f.diag_flat();
-    let zd: Vec<f64> = z.iter().zip(&d).map(|(v, dd)| v / dd).collect();
-    tlr_trsv_lower_t(&f.l, &zd)
+    ldl_solve_multi(f, &as_panel(f.l.n(), b)).as_slice().to_vec()
 }
 
-/// `A x` through the symmetric TLR representation, as a [`SymOp`].
+/// Solve `A X = B` for an `n × r` RHS panel with a TLR LDLᵀ factor.
+pub fn ldl_solve_multi(f: &LdlFactor, b: &Matrix) -> Matrix {
+    ldl_solve_multi_with(f, b, &NativeBatch::new())
+}
+
+/// [`ldl_solve_multi`] on a caller-owned executor.
+pub fn ldl_solve_multi_with(f: &LdlFactor, b: &Matrix, exec: &dyn BatchedGemm) -> Matrix {
+    assert_eq!(b.rows(), f.l.n());
+    let mut z = tlr_trsm_lower_with(&f.l, b, exec);
+    let dinv: Vec<f64> = f.diag_flat().iter().map(|&d| 1.0 / d).collect();
+    crate::linalg::blas::scale_rows(&mut z, &dinv);
+    tlr_trsm_lower_t_with(&f.l, &z, exec)
+}
+
+/// `A x` through the symmetric TLR representation, as a [`SymOp`] (and a
+/// [`PanelOp`] for the blocked CG).
 pub struct TlrOp<'a>(pub &'a TlrMatrix);
 
 impl SymOp for TlrOp<'_> {
@@ -206,6 +332,15 @@ impl SymOp for TlrOp<'_> {
     }
     fn apply(&self, x: &[f64]) -> Vec<f64> {
         tlr_matvec(self.0, x)
+    }
+}
+
+impl PanelOp for TlrOp<'_> {
+    fn dim(&self) -> usize {
+        self.0.n()
+    }
+    fn apply_panel(&self, x: &Matrix) -> Matrix {
+        tlr_matvec_multi(self.0, x)
     }
 }
 
@@ -246,6 +381,14 @@ impl SymOp for ResidualOp<'_> {
 pub fn factorization_error(a: &TlrMatrix, f: &CholFactor, iters: usize, seed: u64) -> f64 {
     let op = ResidualOp::new(a, f);
     crate::linalg::norms::norm2_sym(&op, iters, seed)
+}
+
+/// Rough FLOP estimate of a full factor solve (`L` then `Lᵀ` sweep) on
+/// `cols` RHS columns: 2 flops per stored factor entry per sweep per
+/// column. Used by the serve CLI and `benches/solve_multi.rs` to report
+/// comparable GFLOP/s.
+pub fn solve_flop_estimate(l: &TlrMatrix, cols: usize) -> f64 {
+    4.0 * l.memory().factor_f64() as f64 * cols as f64
 }
 
 #[cfg(test)]
@@ -330,6 +473,50 @@ mod tests {
         let err: f64 =
             x.iter().zip(&x_true).map(|(a, b)| (a - b).abs()).fold(0.0, f64::max);
         assert!(err < 1e-3, "err={err}");
+    }
+
+    #[test]
+    fn multi_solve_matches_columnwise_single() {
+        let (tlr, _) = tlr_covariance(200, 50, 2, 1e-10, 47);
+        let f =
+            cholesky(tlr.clone(), &FactorOpts { eps: 1e-10, bs: 8, ..Default::default() }).unwrap();
+        let mut rng = Rng::new(7);
+        let r = 5;
+        let b = rng.normal_matrix(200, r);
+        let xm = chol_solve_multi(&f, &b);
+        for j in 0..r {
+            let xj = chol_solve(&f, b.col(j));
+            let scale =
+                xj.iter().fold(0.0f64, |a, &v| a.max(v.abs())).max(1.0);
+            let err: f64 = xm
+                .col(j)
+                .iter()
+                .zip(&xj)
+                .map(|(a, b)| (a - b).abs())
+                .fold(0.0, f64::max);
+            assert!(err <= 1e-13 * scale, "col {j}: err={err}");
+        }
+    }
+
+    #[test]
+    fn multi_matvec_matches_columnwise_single() {
+        let (tlr, _) = tlr_covariance(256, 64, 2, 1e-9, 48);
+        let mut rng = Rng::new(8);
+        let r = 4;
+        let x = rng.normal_matrix(256, r);
+        let ym = tlr_matvec_multi(&tlr, &x);
+        for j in 0..r {
+            let yj = tlr_matvec(&tlr, x.col(j));
+            let scale =
+                yj.iter().fold(0.0f64, |a, &v| a.max(v.abs())).max(1.0);
+            let err: f64 = ym
+                .col(j)
+                .iter()
+                .zip(&yj)
+                .map(|(a, b)| (a - b).abs())
+                .fold(0.0, f64::max);
+            assert!(err <= 1e-13 * scale, "col {j}: err={err}");
+        }
     }
 
     #[test]

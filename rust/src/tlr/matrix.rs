@@ -262,6 +262,13 @@ impl MemoryReport {
     pub fn compression(&self) -> f64 {
         self.full_dense_f64 as f64 / self.total_f64() as f64
     }
+
+    /// Stored f64 count when the matrix is a triangular *factor*:
+    /// low-rank memory counted once, since a factor has no implicit
+    /// symmetric mirror (the `lowrank_f64` field reports it doubled).
+    pub fn factor_f64(&self) -> usize {
+        self.dense_f64 + self.lowrank_f64 / 2
+    }
 }
 
 #[cfg(test)]

@@ -1,0 +1,361 @@
+//! Integration tests for the `serve/` subsystem, in the seed-sweep
+//! property style of `rust/tests/batch_plan.rs` (no proptest in the
+//! vendored crate set; every assertion carries its seed):
+//!
+//! * serialization round trips are **bitwise**: random TLR matrices and
+//!   real Cholesky/LDLᵀ factors survive save → load with every tile
+//!   payload exactly equal;
+//! * corruption (bit flips, truncation) is detected by the checksum;
+//! * blocked multi-RHS solves match column-wise single solves to 1e-13;
+//! * the [`SolveService`] coalesces ≥16 single-RHS requests into one
+//!   blocked solve, loading the factor from a store written on disk —
+//!   and the `serve` CLI proves the fresh-process path end to end.
+
+use h2opus_tlr::apps::covariance::ExpCovariance;
+use h2opus_tlr::apps::geometry::grid;
+use h2opus_tlr::apps::kdtree::kdtree_order;
+use h2opus_tlr::factor::{cholesky, ldlt, FactorOpts, Pivoting};
+use h2opus_tlr::linalg::rng::Rng;
+use h2opus_tlr::serve::store::{
+    decode_chol, decode_ldl, decode_tlr, encode_chol, encode_ldl, encode_tlr,
+};
+use h2opus_tlr::serve::{FactorStore, ServeError, ServeOpts, SolveService, StoredFactor};
+use h2opus_tlr::solve::{
+    chol_solve, chol_solve_multi, ldl_solve, ldl_solve_multi, pcg, pcg_multi, tlr_matvec,
+    tlr_matvec_multi, tlr_trsm_lower, tlr_trsv_lower, TlrOp,
+};
+use h2opus_tlr::tlr::construct::{build_tlr, BuildOpts, Compression};
+use h2opus_tlr::tlr::tile::{LowRank, Tile};
+use h2opus_tlr::{Matrix, TlrMatrix};
+use std::path::PathBuf;
+use std::time::Duration;
+
+fn temp_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir()
+        .join(format!("h2opus_serve_test_{}_{tag}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+/// Random symmetric TLR matrix with per-tile random ranks.
+fn random_tlr(rng: &mut Rng, nb: usize) -> TlrMatrix {
+    let sizes: Vec<usize> = (0..nb).map(|_| 3 + rng.below(10)).collect();
+    let mut offsets = vec![0usize];
+    for &s in &sizes {
+        offsets.push(offsets.last().unwrap() + s);
+    }
+    let mut tiles = Vec::new();
+    for i in 0..nb {
+        for j in 0..=i {
+            if i == j {
+                let mut d = rng.normal_matrix(sizes[i], sizes[i]);
+                d.symmetrize();
+                tiles.push(Tile::Dense(d));
+            } else {
+                let k = rng.below(1 + sizes[i].min(sizes[j]));
+                tiles.push(Tile::LowRank(LowRank {
+                    u: rng.normal_matrix(sizes[i], k),
+                    v: rng.normal_matrix(sizes[j], k),
+                }));
+            }
+        }
+    }
+    TlrMatrix::from_tiles(offsets, tiles)
+}
+
+/// Small 2D covariance TLR matrix (the factor tests' recipe).
+fn tlr_cov(n: usize, m: usize, eps: f64, seed: u64) -> TlrMatrix {
+    let pts = grid(n, 2);
+    let c = kdtree_order(&pts, m);
+    let cov = ExpCovariance::paper_default(pts.permuted(&c.perm));
+    build_tlr(&cov, &c.offsets, &BuildOpts { eps, method: Compression::Svd, seed })
+}
+
+fn assert_tiles_bitwise(a: &TlrMatrix, b: &TlrMatrix, ctx: &str) {
+    assert_eq!(a.offsets(), b.offsets(), "{ctx}: offsets");
+    for i in 0..a.nb() {
+        for j in 0..=i {
+            match (a.tile(i, j), b.tile(i, j)) {
+                (Tile::Dense(x), Tile::Dense(y)) => {
+                    assert_eq!(x, y, "{ctx}: tile ({i},{j})");
+                }
+                (Tile::LowRank(x), Tile::LowRank(y)) => {
+                    assert_eq!(x.u, y.u, "{ctx}: tile ({i},{j}) U");
+                    assert_eq!(x.v, y.v, "{ctx}: tile ({i},{j}) V");
+                }
+                _ => panic!("{ctx}: tile ({i},{j}) kind changed"),
+            }
+        }
+    }
+}
+
+fn assert_cols_close(panel: &Matrix, j: usize, single: &[f64], tol: f64, ctx: &str) {
+    let scale = single.iter().fold(0.0f64, |a, &v| a.max(v.abs())).max(1.0);
+    let err: f64 = panel
+        .col(j)
+        .iter()
+        .zip(single)
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0, f64::max);
+    assert!(err <= tol * scale, "{ctx}: col {j} err {err} > {tol} * {scale}");
+}
+
+// ------------------------------------------------ serialization props
+
+#[test]
+fn prop_tlr_roundtrip_bitwise() {
+    for seed in 0..12u64 {
+        let mut rng = Rng::new(0x57E0 + seed);
+        let nb = 1 + rng.below(6);
+        let a = random_tlr(&mut rng, nb);
+        let back = decode_tlr(&encode_tlr(&a)).unwrap();
+        assert_tiles_bitwise(&a, &back, &format!("seed={seed}"));
+    }
+}
+
+#[test]
+fn prop_tlr_corruption_detected() {
+    for seed in 0..12u64 {
+        let mut rng = Rng::new(0xC0DE + seed);
+        let nb = 2 + rng.below(4);
+        let a = random_tlr(&mut rng, nb);
+        let bytes = encode_tlr(&a);
+        // Flip one bit somewhere past the fixed prefix.
+        let mut corrupt = bytes.clone();
+        let at = 40 + rng.below(corrupt.len() - 40);
+        corrupt[at] ^= 1 << rng.below(8);
+        assert!(decode_tlr(&corrupt).is_err(), "seed={seed}: flipped byte {at} undetected");
+        // Truncations are rejected too.
+        assert!(decode_tlr(&bytes[..bytes.len() - 1]).is_err(), "seed={seed}");
+    }
+}
+
+#[test]
+fn chol_factor_roundtrip_bitwise_with_pivoting() {
+    let tlr = tlr_cov(200, 50, 1e-8, 21);
+    let f = cholesky(
+        tlr,
+        &FactorOpts { eps: 1e-8, bs: 8, pivot: Pivoting::Frobenius, ..Default::default() },
+    )
+    .unwrap();
+    let dir = temp_dir("chol_rt");
+    let path = dir.join("f.bin");
+    h2opus_tlr::serve::store::save_chol(&path, &f).unwrap();
+    let back = h2opus_tlr::serve::store::load_chol(&path).unwrap();
+    assert_tiles_bitwise(&f.l, &back.l, "chol");
+    assert_eq!(f.stats.perm, back.stats.perm, "tile permutation");
+    assert_eq!(f.scalar_perm(), back.scalar_perm(), "scalar permutation");
+    // In-memory encode agrees with the file path.
+    assert_eq!(encode_chol(&f), std::fs::read(&path).unwrap());
+    let _ = decode_chol(&encode_chol(&f)).unwrap();
+    // The loaded factor solves identically (bitwise inputs → 1e-13).
+    let mut rng = Rng::new(22);
+    let b: Vec<f64> = (0..200).map(|_| rng.normal()).collect();
+    let x0 = chol_solve(&f, &b);
+    let x1 = chol_solve(&back, &b);
+    let panel = Matrix::from_vec(200, 1, x1);
+    assert_cols_close(&panel, 0, &x0, 1e-13, "loaded-factor solve");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn ldl_factor_roundtrip_bitwise() {
+    let tlr = tlr_cov(160, 40, 1e-8, 23);
+    let f = ldlt(tlr, &FactorOpts { eps: 1e-8, bs: 8, ..Default::default() }).unwrap();
+    let bytes = encode_ldl(&f);
+    let back = decode_ldl(&bytes).unwrap();
+    assert_tiles_bitwise(&f.l, &back.l, "ldl");
+    assert_eq!(f.d, back.d, "block diagonal");
+}
+
+// ----------------------------------------------------- blocked solves
+
+#[test]
+fn multi_solves_match_columnwise_singles() {
+    let tlr = tlr_cov(256, 64, 1e-9, 24);
+    let fc = cholesky(tlr.clone(), &FactorOpts { eps: 1e-9, bs: 8, ..Default::default() })
+        .unwrap();
+    let fl = ldlt(tlr.clone(), &FactorOpts { eps: 1e-9, bs: 8, ..Default::default() }).unwrap();
+    let mut rng = Rng::new(25);
+    for &r in &[1usize, 3, 16] {
+        let b = rng.normal_matrix(256, r);
+        let xc = chol_solve_multi(&fc, &b);
+        let xl = ldl_solve_multi(&fl, &b);
+        let ym = tlr_matvec_multi(&tlr, &b);
+        let tm = tlr_trsm_lower(&fc.l, &b);
+        for j in 0..r {
+            let ctx = format!("r={r}");
+            assert_cols_close(&xc, j, &chol_solve(&fc, b.col(j)), 1e-13, &format!("{ctx} chol"));
+            assert_cols_close(&xl, j, &ldl_solve(&fl, b.col(j)), 1e-13, &format!("{ctx} ldl"));
+            let mv = tlr_matvec(&tlr, b.col(j));
+            assert_cols_close(&ym, j, &mv, 1e-13, &format!("{ctx} matvec"));
+            let tv = tlr_trsv_lower(&fc.l, b.col(j));
+            assert_cols_close(&tm, j, &tv, 1e-13, &format!("{ctx} trsm"));
+        }
+    }
+}
+
+#[test]
+fn blocked_pcg_matches_columnwise_single() {
+    let tlr = tlr_cov(200, 50, 1e-9, 26);
+    let opts = FactorOpts { eps: 1e-3, bs: 8, shift: 1e-3, ..Default::default() };
+    let f = cholesky(tlr.clone(), &opts).unwrap();
+    let mut rng = Rng::new(27);
+    let r = 4;
+    let b = rng.normal_matrix(200, r);
+    let op = TlrOp(&tlr);
+    let minv_panel = |res: &Matrix| chol_solve_multi(&f, res);
+    let multi = pcg_multi(&op, &minv_panel, &b, 1e-9, 200);
+    for j in 0..r {
+        let single = pcg(&op, &|res| chol_solve(&f, res), b.col(j), 1e-9, 200);
+        assert!(multi.converged[j] && single.converged, "col {j}");
+        // Iteration counts may differ by at most rounding at the tol
+        // boundary (the exact per-column match is asserted
+        // deterministically in solve::cg's unit tests).
+        assert!(
+            multi.iters[j].abs_diff(single.iters) <= 1,
+            "col {j}: {} vs {} iterations",
+            multi.iters[j],
+            single.iters
+        );
+        let panel = &multi.x;
+        assert_cols_close(panel, j, &single.x, 1e-6, "pcg");
+    }
+}
+
+// ----------------------------------------------------------- service
+
+#[test]
+fn service_coalesces_16_requests_into_one_blocked_solve() {
+    let n = 256;
+    let tlr = tlr_cov(n, 64, 1e-9, 28);
+    let f = cholesky(tlr, &FactorOpts { eps: 1e-9, bs: 8, ..Default::default() }).unwrap();
+    let dir = temp_dir("svc");
+    let key = 0xFACADEu64;
+    FactorStore::open(&dir).unwrap().save_chol(key, &f, "test factor").unwrap();
+    // The service gets its own store handle: the factor crosses only
+    // through the disk format.
+    let service = SolveService::start(
+        FactorStore::open(&dir).unwrap(),
+        ServeOpts {
+            max_panel: 16,
+            flush_deadline: Duration::from_millis(2000),
+            cache_capacity: 2,
+        },
+    );
+    let mut rng = Rng::new(29);
+    let rhss: Vec<Vec<f64>> =
+        (0..16).map(|_| (0..n).map(|_| rng.normal()).collect()).collect();
+    let tickets: Vec<_> = rhss.iter().map(|b| service.submit(key, b.clone())).collect();
+    for (i, t) in tickets.into_iter().enumerate() {
+        let resp = t.wait().unwrap();
+        assert_eq!(resp.panel_width, 16, "request {i} not coalesced");
+        let single = chol_solve(&f, &rhss[i]);
+        let panel = Matrix::from_vec(n, 1, resp.x);
+        assert_cols_close(&panel, 0, &single, 1e-13, &format!("request {i}"));
+        assert!(resp.latency > Duration::ZERO);
+    }
+    let stats = service.stats();
+    assert_eq!(stats.requests, 16);
+    assert_eq!(stats.batches, 1, "16 requests must run as one blocked solve");
+    assert_eq!(stats.max_panel, 16);
+    assert!((stats.mean_panel_width() - 16.0).abs() < 1e-9);
+    drop(service);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn service_reports_unknown_key_and_bad_rhs() {
+    let n = 160;
+    let tlr = tlr_cov(n, 40, 1e-8, 30);
+    let f = ldlt(tlr, &FactorOpts { eps: 1e-8, bs: 8, ..Default::default() }).unwrap();
+    let dir = temp_dir("svc_err");
+    let key = 0xBEEFu64;
+    let service = SolveService::start(
+        FactorStore::open(&dir).unwrap(),
+        ServeOpts { max_panel: 4, flush_deadline: Duration::from_millis(5), ..Default::default() },
+    );
+    // Unknown key: the store is empty.
+    match service.submit(0xDEAD, vec![0.0; n]).wait() {
+        Err(ServeError::UnknownFactor(k)) => assert_eq!(k, 0xDEAD),
+        other => panic!("expected UnknownFactor, got {other:?}"),
+    }
+    // Register in memory (no disk write) and solve through the registry,
+    // including a malformed RHS alongside a valid one.
+    service.register(key, StoredFactor::Ldl(f));
+    let bad = service.submit(key, vec![1.0; n + 3]);
+    let good = service.submit(key, vec![1.0; n]);
+    match bad.wait() {
+        Err(ServeError::BadRhs { expected, got }) => {
+            assert_eq!(expected, n);
+            assert_eq!(got, n + 3);
+        }
+        other => panic!("expected BadRhs, got {other:?}"),
+    }
+    let resp = good.wait().unwrap();
+    assert_eq!(resp.x.len(), n);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn factor_store_keys_and_missing() {
+    let dir = temp_dir("store_keys");
+    let store = FactorStore::open(&dir).unwrap();
+    assert!(store.load(42).unwrap().is_none());
+    assert!(!store.contains(42));
+    let tlr = tlr_cov(128, 32, 1e-6, 31);
+    let f = cholesky(tlr, &FactorOpts { eps: 1e-6, bs: 8, ..Default::default() }).unwrap();
+    store.save_chol(7, &f, "seven").unwrap();
+    store.save_chol(9, &f, "nine").unwrap();
+    assert!(store.contains(7));
+    assert_eq!(store.keys().unwrap(), vec![7, 9]);
+    match store.load(7).unwrap() {
+        Some(StoredFactor::Chol(back)) => assert_tiles_bitwise(&f.l, &back.l, "store"),
+        other => panic!("expected Chol factor, got {:?}", other.map(|f| f.n())),
+    }
+    // A key holds exactly one factor: saving the other kind replaces it.
+    let tlr2 = tlr_cov(128, 32, 1e-6, 31);
+    let fl = ldlt(tlr2, &FactorOpts { eps: 1e-6, bs: 8, ..Default::default() }).unwrap();
+    store.save_ldl(7, &fl, "seven-ldl").unwrap();
+    match store.load(7).unwrap() {
+        Some(StoredFactor::Ldl(back)) => assert_eq!(fl.d, back.d),
+        _ => panic!("save_ldl must replace the chol factor under the same key"),
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+// -------------------------------------------------------- CLI smoke
+
+#[test]
+fn serve_cli_smoke_fresh_process_reload() {
+    let dir = temp_dir("cli");
+    let store = dir.join("store");
+    let run = |tag: &str| {
+        let out = std::process::Command::new(env!("CARGO_BIN_EXE_serve"))
+            .args([
+                "--problem", "cov2d", "--n", "256", "--m", "64", "--eps", "1e-5", "--bs", "8",
+                "--requests", "24", "--widths", "1,4", "--panel", "8", "--deadline-ms", "20",
+                "--store", store.to_str().unwrap(),
+            ])
+            .output()
+            .expect("serve binary must run");
+        let text = format!(
+            "{}{}",
+            String::from_utf8_lossy(&out.stdout),
+            String::from_utf8_lossy(&out.stderr)
+        );
+        assert!(out.status.success(), "{tag}: {text}");
+        text
+    };
+    let first = run("first");
+    assert!(first.contains("store      : miss"), "{first}");
+    assert!(first.contains("panel-width sweep"), "{first}");
+    assert!(first.contains("requests/s"), "{first}");
+    assert!(first.contains("serve done"), "{first}");
+    // Second run is a fresh process: it must reuse the persisted factor.
+    let second = run("second");
+    assert!(second.contains("store      : cache hit"), "{second}");
+    assert!(second.contains("serve done"), "{second}");
+    let _ = std::fs::remove_dir_all(&dir);
+}
