@@ -14,12 +14,21 @@ use h2opus_tlr::experiments::{bench_time, instance, time_cholesky};
 use h2opus_tlr::factor::FactorOpts;
 use h2opus_tlr::linalg::rng::Rng;
 use h2opus_tlr::runtime::json::{to_string, Json};
+use h2opus_tlr::serve::store::{load_chol, load_chol_mapped, save_chol};
 use h2opus_tlr::solve::{chol_solve, chol_solve_multi_with, solve_flop_estimate};
 use std::collections::BTreeMap;
 
+fn env_usize(key: &str, default: usize) -> usize {
+    std::env::var(key).ok().and_then(|s| s.parse().ok()).unwrap_or(default)
+}
+
 fn main() {
     println!("== bench solve_multi (serve/: blocked multi-RHS solves) ==");
-    let (n, m) = (2048usize, 128usize);
+    // Problem size is env-tunable so CI runners can use a smaller
+    // instance (H2OPUS_BENCH_N / H2OPUS_BENCH_M) while local runs keep
+    // the paper-scale default.
+    let n = env_usize("H2OPUS_BENCH_N", 2048);
+    let m = env_usize("H2OPUS_BENCH_M", 128);
     let inst = instance(Problem::Cov2d, n, m, 1e-6, 37);
     let (f, fsecs) = time_cholesky(
         inst.tlr.clone(),
@@ -62,9 +71,44 @@ fn main() {
         row.insert("gflops".to_string(), Json::Num(gflops));
         json_rows.push(Json::Obj(row));
     }
+    // -- mmap vs owned factor loading (EXPERIMENTS.md §Zero-copy
+    //    loading): persist the factor, then compare a full owned decode
+    //    against the zero-copy mapped load, each followed by one
+    //    16-wide solve. In-process the page cache is warm, so this
+    //    measures the decode/copy overhead the mapped path removes;
+    //    cross-process cold numbers need `echo 3 > drop_caches` and are
+    //    recorded separately in EXPERIMENTS.md when available.
+    let dir = std::env::temp_dir().join(format!("h2opus_bench_store_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let fpath = dir.join("chol.bin");
+    save_chol(&fpath, &f).expect("persist factor for load bench");
+    let bytes = std::fs::metadata(&fpath).map(|m| m.len()).unwrap_or(0);
+    let bw = rng.normal_matrix(n, 16);
+    let reps = 5;
+    let (_, t_owned) = bench_time(reps, || {
+        let lf = load_chol(&fpath).expect("owned load");
+        std::hint::black_box(chol_solve_multi_with(&lf, &bw, &exec));
+    });
+    let (_, t_mmap) = bench_time(reps, || {
+        let lf = load_chol_mapped(&fpath).expect("mapped load");
+        std::hint::black_box(chol_solve_multi_with(&lf.value, &bw, &exec));
+    });
+    println!(
+        "factor load + 16-wide solve ({bytes} bytes): owned {t_owned:.6}s, \
+         mmap {t_mmap:.6}s ({:.2}x)",
+        t_owned / t_mmap
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+    let mut load = BTreeMap::new();
+    load.insert("factor_bytes".to_string(), Json::Num(bytes as f64));
+    load.insert("owned_load_solve_s".to_string(), Json::Num(t_owned));
+    load.insert("mmap_load_solve_s".to_string(), Json::Num(t_mmap));
+    load.insert("speedup".to_string(), Json::Num(t_owned / t_mmap));
+
     let mut doc = BTreeMap::new();
     doc.insert("bench".to_string(), Json::Str("solve_multi".to_string()));
     doc.insert("status".to_string(), Json::Str("measured".to_string()));
+    doc.insert("load".to_string(), Json::Obj(load));
     doc.insert(
         "problem".to_string(),
         Json::Str(format!("cov2d N={n} m={m} eps=1e-6 seed=37")),

@@ -12,7 +12,9 @@ pub mod sampler;
 
 pub use sampler::{DenseSampler, Sampler};
 
-use crate::batch::{parallel_map, run_single, BatchStats, DynamicBatcher, NativeBatch, StreamBuilder};
+use crate::batch::{
+    parallel_map, run_single, BatchStats, DynamicBatcher, NativeBatch, StreamBuilder,
+};
 use crate::linalg::gemm::matmul;
 use crate::linalg::matrix::Matrix;
 use crate::linalg::qr::{convergence_estimate, orthog, qrcp};
@@ -228,7 +230,11 @@ pub fn batched_ara(
     let n = ops.len();
     assert_eq!(priorities.len(), n);
     if n == 0 {
-        return BatchedAraResult { tiles: Vec::new(), stats: BatchStats::default(), residuals: Vec::new() };
+        return BatchedAraResult {
+            tiles: Vec::new(),
+            stats: BatchStats::default(),
+            residuals: Vec::new(),
+        };
     }
     struct State {
         q: Matrix,

@@ -238,7 +238,16 @@ impl<'a> StreamBuilder<'a> {
 
     /// Push `out[dst] := alpha * op(a) * op(b) + beta * out[dst]`.
     #[allow(clippy::too_many_arguments)]
-    pub fn gemm(&mut self, ta: Trans, tb: Trans, alpha: f64, a: Arg, b: Arg, beta: f64, dst: usize) {
+    pub fn gemm(
+        &mut self,
+        ta: Trans,
+        tb: Trans,
+        alpha: f64,
+        a: Arg,
+        b: Arg,
+        beta: f64,
+        dst: usize,
+    ) {
         assert!(a != Arg::Out(dst) && b != Arg::Out(dst), "gemm operand aliases its destination");
         let (ar, ac) = self.shape(a);
         let (m, ka) = if ta == Trans::No { (ar, ac) } else { (ac, ar) };

@@ -22,6 +22,25 @@
 //! The execution substrate is a scoped-thread work pool
 //! ([`parallel_for`] / [`parallel_map`]) with atomic index hand-out, so
 //! non-uniform job costs still load-balance.
+//!
+//! ## Example
+//!
+//! Describe a product on the stream, seal it, and run it on the
+//! production executor:
+//!
+//! ```
+//! use h2opus_tlr::batch::{NativeBatch, StreamBuilder};
+//! use h2opus_tlr::linalg::{Matrix, Trans};
+//!
+//! let a = Matrix::from_rows(2, 2, &[1.0, 0.0, 0.0, 2.0]);
+//! let x = Matrix::from_rows(2, 1, &[3.0, 4.0]);
+//! let mut sb = StreamBuilder::new();
+//! let (ar, xr) = (sb.input(&a), sb.input(&x));
+//! let y = sb.output(2, 1);
+//! sb.gemm(Trans::No, Trans::No, 1.0, ar, xr, 1.0, y);
+//! let outs = sb.finish().execute(&NativeBatch::new());
+//! assert_eq!(outs[y].col(0), &[3.0, 8.0]);
+//! ```
 
 pub mod buffer;
 pub mod gemm_batch;

@@ -19,7 +19,7 @@ use h2opus_tlr::batch::NativeBatch;
 use h2opus_tlr::config::{FactorKind, RunConfig};
 use h2opus_tlr::factor::{cholesky, ldlt};
 use h2opus_tlr::linalg::rng::Rng;
-use h2opus_tlr::serve::{FactorStore, ServeOpts, SolveService, StoredFactor};
+use h2opus_tlr::serve::{FactorStore, ServeError, ServeOpts, SolveService, StoredFactor};
 use h2opus_tlr::solve::{chol_solve_multi_with, ldl_solve_multi_with, solve_flop_estimate};
 use h2opus_tlr::Matrix;
 use std::time::{Duration, Instant};
@@ -35,6 +35,8 @@ SERVE OPTIONS:
     --store <dir>       factor store root               (default target/factor-store)
     --panel <W>         service max panel width         (default 16)
     --deadline-ms <D>   service flush deadline in ms    (default 2)
+    --backlog <B>       per-key admission limit         (default 1024)
+    --no-mmap           load factors by owned decode instead of mmap
 
 All problem/factorization options of `h2opus-tlr` apply (e.g.
 --problem cov2d --n 1024 --m 128 --eps 1e-6 --bs 8 --ldlt). See
@@ -47,6 +49,8 @@ struct ServeArgs {
     store: String,
     panel: usize,
     deadline_ms: u64,
+    backlog: usize,
+    no_mmap: bool,
 }
 
 impl Default for ServeArgs {
@@ -57,6 +61,8 @@ impl Default for ServeArgs {
             store: "target/factor-store".into(),
             panel: 16,
             deadline_ms: 2,
+            backlog: 1024,
+            no_mmap: false,
         }
     }
 }
@@ -106,24 +112,41 @@ fn parse_args(args: &[String]) -> (ServeArgs, Vec<String>) {
                 sa.deadline_ms = v.parse().unwrap_or_else(|_| fail("bad --deadline-ms"));
                 i += 2;
             }
+            "--backlog" => {
+                sa.backlog = take_val(args, i).parse().unwrap_or_else(|_| fail("bad --backlog"));
+                i += 2;
+            }
+            "--no-mmap" => {
+                sa.no_mmap = true;
+                i += 1;
+            }
             _ => {
                 rest.push(args[i].clone());
                 i += 1;
             }
         }
     }
-    if sa.requests == 0 || sa.panel == 0 || sa.widths.is_empty() {
-        fail("--requests, --panel and --widths must be positive");
+    if sa.requests == 0 || sa.panel == 0 || sa.widths.is_empty() || sa.backlog == 0 {
+        fail("--requests, --panel, --backlog and --widths must be positive");
     }
     (sa, rest)
 }
 
-fn obtain_factor(cfg: &RunConfig, store: &FactorStore, key: u64) -> StoredFactor {
-    if let Some(f) = store.load(key).unwrap_or_else(|e| {
+fn obtain_factor(cfg: &RunConfig, store: &FactorStore, key: u64, use_mmap: bool) -> StoredFactor {
+    fn die(key: u64, e: h2opus_tlr::serve::StoreError) -> ! {
         eprintln!("store: failed to load key {key:016x}: {e}");
         std::process::exit(1);
-    }) {
-        println!("store      : cache hit — loaded factor {key:016x} (no factorization)");
+    }
+    if use_mmap {
+        if let Some(m) = store.load_mapped(key).unwrap_or_else(|e| die(key, e)) {
+            println!(
+                "store      : cache hit — mapped factor {key:016x} zero-copy ({} bytes)",
+                m.mapped_bytes
+            );
+            return m.value;
+        }
+    } else if let Some(f) = store.load(key).unwrap_or_else(|e| die(key, e)) {
+        println!("store      : cache hit — decoded factor {key:016x} (owned, --no-mmap)");
         return f;
     }
     println!("store      : miss for key {key:016x} — factoring");
@@ -222,14 +245,33 @@ fn service_run(store_dir: &str, key: u64, n: usize, sa: &ServeArgs, seed: u64) {
             max_panel: sa.panel,
             flush_deadline: Duration::from_millis(sa.deadline_ms),
             cache_capacity: 4,
+            max_backlog: sa.backlog,
+            mmap: !sa.no_mmap,
+            ..Default::default()
         },
     );
     let mut rng = Rng::new(seed ^ 0x5E4E);
     let t0 = Instant::now();
     let tickets: Vec<_> = (0..sa.requests)
         .map(|_| {
-            let rhs: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
-            service.submit(key, rhs)
+            let mut rhs: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+            // Backpressure: when the submission loop outruns the worker
+            // into the admission limit, wait and retry instead of
+            // aborting the run (a fresh random RHS per retry is fine —
+            // the stream is synthetic).
+            loop {
+                match service.submit(key, std::mem::take(&mut rhs)) {
+                    Ok(t) => break t,
+                    Err(ServeError::Overloaded { .. }) => {
+                        std::thread::sleep(Duration::from_micros(200));
+                        rhs = (0..n).map(|_| rng.normal()).collect();
+                    }
+                    Err(e) => {
+                        eprintln!("request rejected: {e}");
+                        std::process::exit(1);
+                    }
+                }
+            }
         })
         .collect();
     let mut latencies_ms: Vec<f64> = Vec::with_capacity(sa.requests);
@@ -261,6 +303,10 @@ fn service_run(store_dir: &str, key: u64, n: usize, sa: &ServeArgs, seed: u64) {
         stats.mean_panel_width(),
         stats.max_panel
     );
+    println!(
+        "  admission  : {} rejected (per-key backlog limit {})",
+        stats.rejected, sa.backlog
+    );
     let prof = h2opus_tlr::profile::serve_snapshot();
     println!(
         "  profile    : {} serve requests, {} panels, efficiency {:.2} cols/solve",
@@ -286,7 +332,7 @@ fn main() {
         eprintln!("store: {e}");
         std::process::exit(1);
     });
-    let factor = obtain_factor(&cfg, &store, key);
+    let factor = obtain_factor(&cfg, &store, key, !sa.no_mmap);
     let n = factor.n();
     width_sweep(&factor, &sa.widths, cfg.seed);
     drop(factor); // the service re-loads from disk — persistence, proven

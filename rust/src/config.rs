@@ -197,9 +197,16 @@ impl RunConfig {
         let ordered = pts.permuted(&c.perm);
         let gen: Box<dyn MatGen> = match self.problem {
             Problem::FracDiff if self.frac_contrast > 0.0 => Box::new(
-                FracDiffusion::with_contrast(ordered, self.frac_s, self.frac_alpha, self.frac_contrast),
+                FracDiffusion::with_contrast(
+                    ordered,
+                    self.frac_s,
+                    self.frac_alpha,
+                    self.frac_contrast,
+                ),
             ),
-            Problem::FracDiff => Box::new(FracDiffusion::new(ordered, self.frac_s, self.frac_alpha)),
+            Problem::FracDiff => {
+                Box::new(FracDiffusion::new(ordered, self.frac_s, self.frac_alpha))
+            }
             _ => {
                 let mut cov = ExpCovariance::paper_default(ordered);
                 if self.corr_len > 0.0 {

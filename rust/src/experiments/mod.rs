@@ -301,7 +301,8 @@ mod tests {
     fn instance_builds_and_factors() {
         let inst = instance(Problem::Cov2d, 256, 64, 1e-6, 1);
         assert_eq!(inst.tlr.n(), 256);
-        let (f, secs) = time_cholesky(inst.tlr, &FactorOpts { eps: 1e-6, bs: 8, ..Default::default() });
+        let fopts = FactorOpts { eps: 1e-6, bs: 8, ..Default::default() };
+        let (f, secs) = time_cholesky(inst.tlr, &fopts);
         assert!(secs > 0.0);
         assert!(f.stats.batch.rounds > 0);
     }
@@ -349,7 +350,8 @@ mod tests {
     #[test]
     fn svd_recompression_never_grows_ranks() {
         let inst = instance(Problem::Cov2d, 256, 64, 1e-6, 6);
-        let (f, _) = time_cholesky(inst.tlr, &FactorOpts { eps: 1e-6, bs: 8, ..Default::default() });
+        let fopts = FactorOpts { eps: 1e-6, bs: 8, ..Default::default() };
+        let (f, _) = time_cholesky(inst.tlr, &fopts);
         let (ara, svd) = svd_recompressed_ranks(&f.l, 1e-6);
         assert_eq!(ara.len(), svd.len());
         for (a, s) in ara.iter().zip(&svd) {

@@ -13,6 +13,7 @@ use crate::tlr::tile::Tile;
 
 /// LDLᵀ factor: unit-lower TLR `l` (diagonal tiles hold the dense unit
 /// lower factors) and the block diagonal `d` (one vector per tile).
+#[derive(Clone)]
 pub struct LdlFactor {
     pub l: TlrMatrix,
     pub d: Vec<Vec<f64>>,

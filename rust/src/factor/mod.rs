@@ -139,6 +139,7 @@ pub struct FactorStats {
 }
 
 /// Cholesky factor `L` (TLR, lower) with `P A Pᵀ = L Lᵀ`.
+#[derive(Clone)]
 pub struct CholFactor {
     pub l: TlrMatrix,
     pub stats: FactorStats,
@@ -241,7 +242,12 @@ pub fn cholesky_with(
                     let mut fresh = a.tile(k, k).as_dense().clone();
                     if opts.schur_comp {
                         // Recreate the compensated update deterministically.
-                        let c = schur::schur_compensate(&dk, opts.eps, opts.bs, opts.seed ^ (k as u64) << 8);
+                        let c = schur::schur_compensate(
+                            &dk,
+                            opts.eps,
+                            opts.bs,
+                            opts.seed ^ (k as u64) << 8,
+                        );
                         fresh.axpy(-1.0, &c.dbar);
                         for i in 0..fresh.rows() {
                             fresh[(i, i)] += c.diag_comp[i];
@@ -320,7 +326,8 @@ fn dense_diag_update_single(a: &TlrMatrix, i: usize, k: usize) -> Matrix {
             let ut = matmul(&lr.u, &t);
             gemm(Trans::No, Trans::Yes, 1.0, &ut, &lr.u, 1.0, &mut d);
             let (mm, kk) = (m as u64, lr.rank() as u64);
-            profile::add_flops(Phase::DenseUpdate, 2 * kk * kk * mm + 2 * mm * kk * kk + 2 * mm * mm * kk);
+            let flops = 2 * kk * kk * mm + 2 * mm * kk * kk + 2 * mm * mm * kk;
+            profile::add_flops(Phase::DenseUpdate, flops);
         }
     }
     d
@@ -363,7 +370,8 @@ pub(crate) fn panel_ara(
         max_rank: usize::MAX,
         trim: true,
     };
-    let out = batched_ara(&ops, &priorities, opts.batch_capacity, &ara_opts, opts.seed ^ ((k as u64) << 20));
+    let seed = opts.seed ^ ((k as u64) << 20);
+    let out = batched_ara(&ops, &priorities, opts.batch_capacity, &ara_opts, seed);
     // Aggregate batch stats (scheduler occupancy + executor waves/FLOPs).
     stats.batch.rounds += out.stats.rounds;
     stats.batch.occupancy_sum += out.stats.occupancy_sum;
@@ -404,7 +412,13 @@ pub mod tests {
     use crate::linalg::gemm::matmul_nt;
     use crate::tlr::construct::{build_tlr, BuildOpts, Compression};
 
-    pub fn tlr_covariance(n: usize, m: usize, dim: usize, eps: f64, seed: u64) -> (TlrMatrix, Matrix) {
+    pub fn tlr_covariance(
+        n: usize,
+        m: usize,
+        dim: usize,
+        eps: f64,
+        seed: u64,
+    ) -> (TlrMatrix, Matrix) {
         let pts = if dim == 2 { grid(n, 2) } else { random_ball(n, 3, seed) };
         let c = kdtree_order(&pts, m);
         let cov = ExpCovariance::paper_default(pts.permuted(&c.perm));
@@ -440,8 +454,8 @@ pub mod tests {
     fn eps_controls_residual() {
         let (tlr_a, dense) = tlr_covariance(256, 64, 2, 1e-3, 3);
         let (tlr_b, _) = tlr_covariance(256, 64, 2, 1e-9, 3);
-        let fa = cholesky(tlr_a, &FactorOpts { eps: 1e-3, bs: 8, schur_comp: true, ..Default::default() })
-            .unwrap();
+        let opts_a = FactorOpts { eps: 1e-3, bs: 8, schur_comp: true, ..Default::default() };
+        let fa = cholesky(tlr_a, &opts_a).unwrap();
         let fb = cholesky(tlr_b, &FactorOpts { eps: 1e-9, bs: 8, ..Default::default() }).unwrap();
         let ra = residual(&fa.l, &dense);
         let rb = residual(&fb.l, &dense);

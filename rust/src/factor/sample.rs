@@ -158,7 +158,8 @@ pub fn dense_diag_update(
                 let ut = matmul(&lr.u, &t);
                 gemm(Trans::No, Trans::Yes, 1.0, &ut, &lr.u, 1.0, &mut d);
                 let (mm, kk) = (m as u64, lr.rank() as u64);
-                add_flops(Phase::DenseUpdate, 2 * kk * kk * (m as u64) + 2 * mm * kk * kk + 2 * mm * mm * kk);
+                let fl = 2 * kk * kk * (m as u64) + 2 * mm * kk * kk + 2 * mm * mm * kk;
+                add_flops(Phase::DenseUpdate, fl);
             }
             Tile::Dense(w) => {
                 // Dense L tile (only if a caller chose dense storage):
@@ -203,7 +204,7 @@ mod tests {
                 }
             }
         }
-        (TlrMatrix::from_tiles(offsets, tiles), 2, 2) // sample tile (2, 2)? no: (i=2, k=2) invalid; use k=2? i must be > k
+        (TlrMatrix::from_tiles(offsets, tiles), 2, 2)
     }
 
     #[test]

@@ -73,7 +73,8 @@ pub fn ldl_reconstruct(f: &Ldl) -> Matrix {
     let mut ld = f.l.clone();
     super::blas::scale_cols(&mut ld, &f.d);
     let mut out = Matrix::zeros(n, n);
-    super::gemm::gemm(super::gemm::Trans::No, super::gemm::Trans::Yes, 1.0, &ld, &f.l, 0.0, &mut out);
+    use super::gemm::Trans;
+    super::gemm::gemm(Trans::No, Trans::Yes, 1.0, &ld, &f.l, 0.0, &mut out);
     out
 }
 

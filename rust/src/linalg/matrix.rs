@@ -3,22 +3,31 @@
 //!
 //! Column-major is chosen to match the BLAS/LAPACK conventions the paper's
 //! MAGMA/MKL kernels use, so the blocked algorithms translate one-to-one.
+//!
+//! The payload lives behind the borrow-or-own
+//! [`TileStorage`](crate::linalg::storage::TileStorage): owned `Vec<f64>`
+//! for matrices built in-process, or a zero-copy view into an mmapped
+//! factor file for matrices loaded by
+//! [`FactorStore::load_mapped`](crate::serve::store::FactorStore::load_mapped).
+//! Reads are uniform and copy-free; the mutating accessors promote a
+//! mapped payload to an owned copy first (see the storage module docs).
 
+use crate::linalg::storage::{MappedSlice, TileStorage};
 use std::fmt;
 
 /// Dense column-major `f64` matrix.
-#[derive(Clone, PartialEq)]
+#[derive(Clone)]
 pub struct Matrix {
     rows: usize,
     cols: usize,
     /// `data[i + j * rows]` is entry `(i, j)`.
-    data: Vec<f64>,
+    data: TileStorage,
 }
 
 impl Matrix {
     /// All-zeros `rows × cols` matrix.
     pub fn zeros(rows: usize, cols: usize) -> Self {
-        Matrix { rows, cols, data: vec![0.0; rows * cols] }
+        Matrix { rows, cols, data: TileStorage::Owned(vec![0.0; rows * cols]) }
     }
 
     /// Identity matrix of order `n`.
@@ -33,7 +42,24 @@ impl Matrix {
     /// Build from a column-major data vector.
     pub fn from_vec(rows: usize, cols: usize, data: Vec<f64>) -> Self {
         assert_eq!(data.len(), rows * cols, "data length must be rows*cols");
+        Matrix { rows, cols, data: TileStorage::Owned(data) }
+    }
+
+    /// Build over an existing storage (owned or mapped). The zero-copy
+    /// constructor the store's mapped decoder uses.
+    pub fn from_storage(rows: usize, cols: usize, data: TileStorage) -> Self {
+        assert_eq!(data.len(), rows * cols, "storage length must be rows*cols");
         Matrix { rows, cols, data }
+    }
+
+    /// Build as a zero-copy view into a mapping.
+    pub fn from_mapped(rows: usize, cols: usize, view: MappedSlice) -> Self {
+        Self::from_storage(rows, cols, TileStorage::Mapped(view))
+    }
+
+    /// Is the payload a zero-copy view into a mapping?
+    pub fn is_mapped(&self) -> bool {
+        self.data.is_mapped()
     }
 
     /// Build from a closure over `(row, col)`.
@@ -44,7 +70,7 @@ impl Matrix {
                 data.push(f(i, j));
             }
         }
-        Matrix { rows, cols, data }
+        Matrix { rows, cols, data: TileStorage::Owned(data) }
     }
 
     /// Build from row-major data (convenience for literals in tests).
@@ -76,23 +102,26 @@ impl Matrix {
     /// Raw column-major storage.
     #[inline(always)]
     pub fn as_slice(&self) -> &[f64] {
-        &self.data
+        self.data.as_slice()
     }
 
+    /// Mutable storage (promotes a mapped payload to owned — see
+    /// [`TileStorage::make_mut`]).
     #[inline(always)]
     pub fn as_mut_slice(&mut self) -> &mut [f64] {
-        &mut self.data
+        self.data.make_mut().as_mut_slice()
     }
 
     /// Column `j` as a contiguous slice.
     #[inline(always)]
     pub fn col(&self, j: usize) -> &[f64] {
-        &self.data[j * self.rows..(j + 1) * self.rows]
+        &self.data.as_slice()[j * self.rows..(j + 1) * self.rows]
     }
 
     #[inline(always)]
     pub fn col_mut(&mut self, j: usize) -> &mut [f64] {
-        &mut self.data[j * self.rows..(j + 1) * self.rows]
+        let rows = self.rows;
+        &mut self.data.make_mut()[j * rows..(j + 1) * rows]
     }
 
     /// Transposed copy.
@@ -133,38 +162,39 @@ impl Matrix {
             return;
         }
         assert_eq!(self.rows, other.rows, "append_cols: row mismatch");
-        self.data.extend_from_slice(&other.data);
+        self.data.make_mut().extend_from_slice(other.data.as_slice());
         self.cols += other.cols;
     }
 
     /// Keep only the first `k` columns (truncate the storage).
     pub fn truncate_cols(&mut self, k: usize) {
         assert!(k <= self.cols);
-        self.data.truncate(self.rows * k);
+        let keep = self.rows * k;
+        self.data.make_mut().truncate(keep);
         self.cols = k;
     }
 
     /// Frobenius norm.
     pub fn norm_fro(&self) -> f64 {
-        self.data.iter().map(|x| x * x).sum::<f64>().sqrt()
+        self.data.as_slice().iter().map(|x| x * x).sum::<f64>().sqrt()
     }
 
     /// Max-abs entry.
     pub fn norm_max(&self) -> f64 {
-        self.data.iter().fold(0.0f64, |a, &x| a.max(x.abs()))
+        self.data.as_slice().iter().fold(0.0f64, |a, &x| a.max(x.abs()))
     }
 
     /// `self += alpha * other` (same shape).
     pub fn axpy(&mut self, alpha: f64, other: &Matrix) {
         assert_eq!(self.shape(), other.shape());
-        for (d, s) in self.data.iter_mut().zip(other.data.iter()) {
+        for (d, s) in self.data.make_mut().iter_mut().zip(other.data.as_slice()) {
             *d += alpha * s;
         }
     }
 
     /// `alpha * self` (in place).
     pub fn scale(&mut self, alpha: f64) {
-        for d in self.data.iter_mut() {
+        for d in self.data.make_mut().iter_mut() {
             *d *= alpha;
         }
     }
@@ -172,15 +202,27 @@ impl Matrix {
     /// `self - other` as a new matrix.
     pub fn sub(&self, other: &Matrix) -> Matrix {
         assert_eq!(self.shape(), other.shape());
-        let data = self.data.iter().zip(&other.data).map(|(a, b)| a - b).collect();
-        Matrix { rows: self.rows, cols: self.cols, data }
+        let data = self
+            .data
+            .as_slice()
+            .iter()
+            .zip(other.data.as_slice())
+            .map(|(a, b)| a - b)
+            .collect();
+        Matrix { rows: self.rows, cols: self.cols, data: TileStorage::Owned(data) }
     }
 
     /// `self + other` as a new matrix.
     pub fn add(&self, other: &Matrix) -> Matrix {
         assert_eq!(self.shape(), other.shape());
-        let data = self.data.iter().zip(&other.data).map(|(a, b)| a + b).collect();
-        Matrix { rows: self.rows, cols: self.cols, data }
+        let data = self
+            .data
+            .as_slice()
+            .iter()
+            .zip(other.data.as_slice())
+            .map(|(a, b)| a + b)
+            .collect();
+        Matrix { rows: self.rows, cols: self.cols, data: TileStorage::Owned(data) }
     }
 
     /// Symmetrize in place: `A := (A + Aᵀ)/2`. Guards drift in SPD tiles.
@@ -223,12 +265,22 @@ impl Matrix {
     }
 }
 
+impl PartialEq for Matrix {
+    /// Value equality (bitwise on the payload) — a mapped matrix equals
+    /// its owned twin.
+    fn eq(&self, other: &Matrix) -> bool {
+        self.rows == other.rows
+            && self.cols == other.cols
+            && self.data.as_slice() == other.data.as_slice()
+    }
+}
+
 impl std::ops::Index<(usize, usize)> for Matrix {
     type Output = f64;
     #[inline(always)]
     fn index(&self, (i, j): (usize, usize)) -> &f64 {
         debug_assert!(i < self.rows && j < self.cols);
-        &self.data[i + j * self.rows]
+        &self.data.as_slice()[i + j * self.rows]
     }
 }
 
@@ -236,7 +288,8 @@ impl std::ops::IndexMut<(usize, usize)> for Matrix {
     #[inline(always)]
     fn index_mut(&mut self, (i, j): (usize, usize)) -> &mut f64 {
         debug_assert!(i < self.rows && j < self.cols);
-        &mut self.data[i + j * self.rows]
+        let rows = self.rows;
+        &mut self.data.make_mut()[i + j * rows]
     }
 }
 
@@ -326,6 +379,30 @@ mod tests {
         let m = Matrix::from_rows(2, 2, &[3., 0., 0., 4.]);
         assert!((m.norm_fro() - 5.0).abs() < 1e-14);
         assert_eq!(m.norm_max(), 4.0);
+    }
+
+    #[test]
+    fn mapped_matrix_reads_zero_copy_and_promotes_on_write() {
+        use crate::linalg::storage::{Mapping, MappedSlice};
+        use std::sync::Arc;
+        struct VecMapping(Vec<f64>);
+        impl Mapping for VecMapping {
+            fn as_f64(&self) -> &[f64] {
+                &self.0
+            }
+        }
+        let base: Arc<dyn Mapping> = Arc::new(VecMapping((0..6).map(|i| i as f64).collect()));
+        let lo = base.as_f64().as_ptr() as usize;
+        let hi = lo + 6 * std::mem::size_of::<f64>();
+        let mut m = Matrix::from_mapped(2, 3, MappedSlice::new(base, 0, 6));
+        assert!(m.is_mapped());
+        assert_eq!(m[(1, 2)], 5.0);
+        let p = m.as_slice().as_ptr() as usize;
+        assert!((lo..hi).contains(&p), "mapped matrix must view the mapping");
+        assert_eq!(m, Matrix::from_vec(2, 3, (0..6).map(|i| i as f64).collect()));
+        m[(0, 0)] = -1.0; // write promotes to owned
+        assert!(!m.is_mapped());
+        assert_eq!(m[(0, 0)], -1.0);
     }
 
     #[test]

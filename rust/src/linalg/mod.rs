@@ -9,9 +9,11 @@ pub mod matrix;
 pub mod norms;
 pub mod qr;
 pub mod rng;
+pub mod storage;
 pub mod svd;
 
 pub use blas::{Side, Uplo};
 pub use gemm::Trans;
 pub use matrix::Matrix;
 pub use rng::Rng;
+pub use storage::{Mapping, MappedSlice, TileStorage};

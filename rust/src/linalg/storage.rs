@@ -1,0 +1,201 @@
+//! Borrow-or-own payload storage for [`Matrix`](crate::linalg::matrix::Matrix).
+//!
+//! Every tile payload in the library is a column-major `f64` buffer. For
+//! matrices built in-process the buffer is an owned `Vec<f64>`; for
+//! factors loaded from the on-disk store it can instead be a *view* into
+//! an 8-byte-aligned memory mapping of the factor file
+//! ([`crate::serve::store::FactorStore::load_mapped`]), so deserializing
+//! a factor copies no `f64` payload at all — the kernel's page cache is
+//! the only copy, shared by every process that maps the same file.
+//!
+//! The contract, in one sentence: **reads never copy, writes promote**.
+//!
+//! * Read access ([`TileStorage::as_slice`]) is uniform over both
+//!   variants and never copies.
+//! * Mutable access ([`TileStorage::make_mut`]) promotes a mapped view
+//!   to an owned copy first (copy-on-write). Solves only *read* factor
+//!   tiles, so a served factor stays zero-copy for its whole LRU
+//!   lifetime; promotion only triggers if a caller mutates a loaded
+//!   factor (e.g. re-factoring in place).
+//!
+//! The mapping itself is abstracted behind [`Mapping`] so this layer
+//! stays independent of how the bytes were mapped (`serve/mmap.rs`
+//! provides the `mmap(2)` implementation); dropping the last
+//! [`MappedSlice`] referring to a mapping drops the mapping — for the
+//! serve LRU, eviction *is* `munmap`.
+
+use std::sync::Arc;
+
+/// A shared, immutable, 8-byte-aligned byte region viewable as `&[f64]`.
+///
+/// Implementors guarantee the returned slice is stable for the lifetime
+/// of the value (the slice is re-derived on each call, but always
+/// identical), and that the underlying memory outlives every
+/// [`MappedSlice`] holding an `Arc` to it.
+pub trait Mapping: Send + Sync {
+    /// The whole mapping as `f64` values (native little-endian order —
+    /// the store format is little-endian and the mapped path is gated to
+    /// little-endian hosts).
+    fn as_f64(&self) -> &[f64];
+}
+
+/// A sub-range view into a shared [`Mapping`]: `as_f64()[off..off+len]`
+/// (offsets and lengths in `f64` units).
+#[derive(Clone)]
+pub struct MappedSlice {
+    base: Arc<dyn Mapping>,
+    off: usize,
+    len: usize,
+}
+
+impl MappedSlice {
+    /// View `base.as_f64()[off..off + len]`. Panics if out of range —
+    /// callers (the store decoder) bounds-check against the validated
+    /// header before constructing views.
+    pub fn new(base: Arc<dyn Mapping>, off: usize, len: usize) -> MappedSlice {
+        let total = base.as_f64().len();
+        assert!(
+            off <= total && len <= total - off,
+            "mapped slice {off}+{len} out of range (mapping holds {total} f64s)"
+        );
+        MappedSlice { base, off, len }
+    }
+
+    #[inline]
+    pub fn as_slice(&self) -> &[f64] {
+        &self.base.as_f64()[self.off..self.off + self.len]
+    }
+
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+}
+
+impl std::fmt::Debug for MappedSlice {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "MappedSlice {{ off: {}, len: {} }}", self.off, self.len)
+    }
+}
+
+/// Borrow-or-own `f64` payload storage — the backing of every
+/// [`Matrix`](crate::linalg::matrix::Matrix), and therefore of every
+/// TLR tile and factor.
+#[derive(Debug, Clone)]
+pub enum TileStorage {
+    /// Heap-owned payload (the default for everything built in-process).
+    Owned(Vec<f64>),
+    /// Zero-copy view into a shared mapping of a store file.
+    Mapped(MappedSlice),
+}
+
+impl TileStorage {
+    /// Uniform read access; never copies.
+    #[inline]
+    pub fn as_slice(&self) -> &[f64] {
+        match self {
+            TileStorage::Owned(v) => v,
+            TileStorage::Mapped(m) => m.as_slice(),
+        }
+    }
+
+    #[inline]
+    pub fn len(&self) -> usize {
+        match self {
+            TileStorage::Owned(v) => v.len(),
+            TileStorage::Mapped(m) => m.len(),
+        }
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Is this a zero-copy view into a mapping?
+    #[inline]
+    pub fn is_mapped(&self) -> bool {
+        matches!(self, TileStorage::Mapped(_))
+    }
+
+    /// Mutable access, promoting a mapped view to an owned copy first
+    /// (copy-on-write). Read-only consumers — every solve — never call
+    /// this, which is what keeps served factors zero-copy.
+    pub fn make_mut(&mut self) -> &mut Vec<f64> {
+        if let TileStorage::Mapped(m) = self {
+            *self = TileStorage::Owned(m.as_slice().to_vec());
+        }
+        match self {
+            TileStorage::Owned(v) => v,
+            TileStorage::Mapped(_) => unreachable!("promoted above"),
+        }
+    }
+}
+
+impl PartialEq for TileStorage {
+    fn eq(&self, other: &Self) -> bool {
+        self.as_slice() == other.as_slice()
+    }
+}
+
+impl From<Vec<f64>> for TileStorage {
+    fn from(v: Vec<f64>) -> TileStorage {
+        TileStorage::Owned(v)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    struct VecMapping(Vec<f64>);
+
+    impl Mapping for VecMapping {
+        fn as_f64(&self) -> &[f64] {
+            &self.0
+        }
+    }
+
+    fn mapping() -> Arc<dyn Mapping> {
+        Arc::new(VecMapping((0..16).map(|i| i as f64).collect()))
+    }
+
+    #[test]
+    fn mapped_view_is_zero_copy() {
+        let base = mapping();
+        let range = base.as_f64().as_ptr() as usize
+            ..base.as_f64().as_ptr() as usize + 16 * std::mem::size_of::<f64>();
+        let s = TileStorage::Mapped(MappedSlice::new(base, 4, 8));
+        assert!(s.is_mapped());
+        assert_eq!(s.len(), 8);
+        assert_eq!(s.as_slice()[0], 4.0);
+        let p = s.as_slice().as_ptr() as usize;
+        assert!(range.contains(&p), "view must point into the mapping");
+    }
+
+    #[test]
+    fn make_mut_promotes_to_owned() {
+        let mut s = TileStorage::Mapped(MappedSlice::new(mapping(), 0, 4));
+        s.make_mut()[0] = 99.0;
+        assert!(!s.is_mapped());
+        assert_eq!(s.as_slice(), &[99.0, 1.0, 2.0, 3.0]);
+    }
+
+    #[test]
+    fn owned_and_mapped_compare_by_value() {
+        let owned = TileStorage::Owned(vec![2.0, 3.0, 4.0]);
+        let mapped = TileStorage::Mapped(MappedSlice::new(mapping(), 2, 3));
+        assert_eq!(owned, mapped);
+    }
+
+    #[test]
+    #[should_panic(expected = "out of range")]
+    fn out_of_range_view_rejected() {
+        let _ = MappedSlice::new(mapping(), 10, 8);
+    }
+}

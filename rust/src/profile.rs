@@ -63,6 +63,7 @@ static BATCH_FLOPS: AtomicU64 = AtomicU64::new(0);
 static SERVE_REQUESTS: AtomicU64 = AtomicU64::new(0);
 static SERVE_BATCHES: AtomicU64 = AtomicU64::new(0);
 static SERVE_NANOS: AtomicU64 = AtomicU64::new(0);
+static SERVE_REJECTED: AtomicU64 = AtomicU64::new(0);
 
 /// Reset all counters (call before a profiled run).
 pub fn reset() {
@@ -76,6 +77,12 @@ pub fn reset() {
     SERVE_REQUESTS.store(0, Ordering::Relaxed);
     SERVE_BATCHES.store(0, Ordering::Relaxed);
     SERVE_NANOS.store(0, Ordering::Relaxed);
+    SERVE_REJECTED.store(0, Ordering::Relaxed);
+}
+
+/// Record `count` submissions rejected by serve admission control.
+pub fn add_serve_rejected(count: u64) {
+    SERVE_REJECTED.fetch_add(count, Ordering::Relaxed);
 }
 
 /// Record one executed serve panel: `requests` coalesced RHS columns
@@ -92,6 +99,9 @@ pub struct ServeReport {
     pub requests: u64,
     pub batches: u64,
     pub nanos: u64,
+    /// Submissions rejected by admission control (bounded per-key
+    /// backlog in the serve layer).
+    pub rejected: u64,
 }
 
 impl ServeReport {
@@ -101,6 +111,7 @@ impl ServeReport {
             requests: self.requests - earlier.requests,
             batches: self.batches - earlier.batches,
             nanos: self.nanos - earlier.nanos,
+            rejected: self.rejected - earlier.rejected,
         }
     }
 
@@ -120,6 +131,7 @@ pub fn serve_snapshot() -> ServeReport {
         requests: SERVE_REQUESTS.load(Ordering::Relaxed),
         batches: SERVE_BATCHES.load(Ordering::Relaxed),
         nanos: SERVE_NANOS.load(Ordering::Relaxed),
+        rejected: SERVE_REJECTED.load(Ordering::Relaxed),
     }
 }
 

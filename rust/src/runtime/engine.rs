@@ -37,7 +37,10 @@ impl std::fmt::Display for RuntimeError {
             RuntimeError::Manifest(e) => write!(f, "{e}"),
             RuntimeError::Xla(e) => write!(f, "xla error: {e}"),
             RuntimeError::NoVariant { op, m, k, bs } => {
-                write!(f, "no artifact variant covers {op} m={m} k={k} bs={bs} (run `make artifacts`)")
+                write!(
+                    f,
+                    "no artifact variant covers {op} m={m} k={k} bs={bs} (run `make artifacts`)"
+                )
             }
         }
     }

@@ -1,0 +1,220 @@
+//! Read-only memory mapping of factor files — the zero-copy substrate
+//! behind [`FactorStore::load_mapped`](crate::serve::store::FactorStore::load_mapped).
+//!
+//! The crate is dependency-free by design, so on Unix the mapping is a
+//! direct `mmap(2)`/`munmap(2)` syscall pair through `extern "C"`
+//! declarations (libc is already linked into every std binary). The
+//! store format's payload is 8-byte aligned by construction and the
+//! mapping is page aligned, so the mapped bytes reinterpret directly as
+//! `&[f64]` — no decode, no heap copy; a fresh process faults in only
+//! the pages a solve actually touches, and dropping the mapping (LRU
+//! eviction in the serve layer) is an `munmap`.
+//!
+//! On non-Unix targets (no `mmap`), [`Mmap::map`] degrades to reading
+//! the file into an owned, 8-byte-aligned buffer: the same API and
+//! numerics, without the page-cache sharing. The `f64` reinterpretation
+//! additionally requires a little-endian host (the format is
+//! little-endian); [`SUPPORTS_ZERO_COPY`] reports whether the build
+//! gets true zero-copy loads.
+
+use crate::linalg::storage::Mapping;
+use std::fs::File;
+use std::io;
+
+/// True when this build maps files zero-copy (Unix, little-endian).
+#[cfg(all(unix, target_endian = "little", target_pointer_width = "64"))]
+pub const SUPPORTS_ZERO_COPY: bool = true;
+/// True when this build maps files zero-copy (Unix, little-endian).
+#[cfg(not(all(unix, target_endian = "little", target_pointer_width = "64")))]
+pub const SUPPORTS_ZERO_COPY: bool = false;
+
+#[cfg(all(unix, target_endian = "little", target_pointer_width = "64"))]
+mod sys {
+    use std::ffi::c_void;
+    use std::fs::File;
+    use std::io;
+    use std::os::unix::io::AsRawFd;
+
+    const PROT_READ: i32 = 1;
+    const MAP_PRIVATE: i32 = 2;
+
+    extern "C" {
+        fn mmap(
+            addr: *mut c_void,
+            len: usize,
+            prot: i32,
+            flags: i32,
+            fd: i32,
+            offset: i64,
+        ) -> *mut c_void;
+        fn munmap(addr: *mut c_void, len: usize) -> i32;
+    }
+
+    /// An owned read-only `mmap` region, unmapped on drop.
+    pub struct RawMap {
+        ptr: *mut c_void,
+        len: usize,
+    }
+
+    // SAFETY: the region is read-only for its whole lifetime and the
+    // pointer is not tied to any thread.
+    unsafe impl Send for RawMap {}
+    unsafe impl Sync for RawMap {}
+
+    impl RawMap {
+        pub fn map(file: &File, len: usize) -> io::Result<RawMap> {
+            assert!(len > 0, "cannot map an empty file");
+            // SAFETY: fd is valid for the duration of the call; a
+            // read-only private mapping of a regular file has no
+            // aliasing obligations on our side.
+            let ptr = unsafe {
+                mmap(std::ptr::null_mut(), len, PROT_READ, MAP_PRIVATE, file.as_raw_fd(), 0)
+            };
+            if ptr as isize == -1 || ptr.is_null() {
+                return Err(io::Error::last_os_error());
+            }
+            Ok(RawMap { ptr, len })
+        }
+
+        pub fn bytes(&self) -> &[u8] {
+            // SAFETY: `ptr` is a live mapping of `len` readable bytes.
+            unsafe { std::slice::from_raw_parts(self.ptr as *const u8, self.len) }
+        }
+    }
+
+    impl Drop for RawMap {
+        fn drop(&mut self) {
+            // SAFETY: `ptr`/`len` came from a successful mmap and are
+            // unmapped exactly once.
+            unsafe {
+                munmap(self.ptr, self.len);
+            }
+        }
+    }
+}
+
+#[cfg(not(all(unix, target_endian = "little", target_pointer_width = "64")))]
+mod sys {
+    use std::fs::File;
+    use std::io::{self, Read};
+
+    /// Fallback "mapping": the file read into an owned 8-byte-aligned
+    /// buffer (a `Vec<u64>` re-viewed as bytes).
+    pub struct RawMap {
+        buf: Vec<u64>,
+        len: usize,
+    }
+
+    impl RawMap {
+        pub fn map(file: &File, len: usize) -> io::Result<RawMap> {
+            let mut buf = vec![0u64; len.div_ceil(8)];
+            // SAFETY: u64 storage reinterpreted as bytes for reading.
+            let bytes = unsafe {
+                std::slice::from_raw_parts_mut(buf.as_mut_ptr() as *mut u8, len)
+            };
+            let mut f = file;
+            f.read_exact(bytes)?;
+            Ok(RawMap { buf, len })
+        }
+
+        pub fn bytes(&self) -> &[u8] {
+            // SAFETY: the buffer holds at least `len` initialized bytes.
+            unsafe { std::slice::from_raw_parts(self.buf.as_ptr() as *const u8, self.len) }
+        }
+    }
+}
+
+/// A read-only mapping of a whole factor file.
+///
+/// Implements [`Mapping`], so [`MappedSlice`](crate::linalg::storage::MappedSlice)
+/// views handed out by the store decoder keep the file mapped for as
+/// long as any tile references it; when the serve LRU evicts the last
+/// reference, the drop unmaps.
+pub struct Mmap {
+    raw: sys::RawMap,
+}
+
+impl Mmap {
+    /// Map `file` (its full current length). Fails on empty files and on
+    /// any OS-level mapping error.
+    pub fn map(file: &File) -> io::Result<Mmap> {
+        let len = file.metadata()?.len();
+        if len == 0 {
+            return Err(io::Error::new(io::ErrorKind::UnexpectedEof, "empty file"));
+        }
+        let len = usize::try_from(len)
+            .map_err(|_| io::Error::new(io::ErrorKind::InvalidData, "file too large to map"))?;
+        Ok(Mmap { raw: sys::RawMap::map(file, len)? })
+    }
+
+    /// The mapped bytes.
+    pub fn bytes(&self) -> &[u8] {
+        self.raw.bytes()
+    }
+
+    /// Length in bytes.
+    pub fn len(&self) -> usize {
+        self.bytes().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Address range of the mapping, for diagnostics and the zero-copy
+    /// assertions in tests.
+    pub fn addr_range(&self) -> std::ops::Range<usize> {
+        let lo = self.bytes().as_ptr() as usize;
+        lo..lo + self.len()
+    }
+}
+
+impl Mapping for Mmap {
+    fn as_f64(&self) -> &[f64] {
+        let bytes = self.bytes();
+        // The store prefix (40 bytes) and header (whole u64s) keep every
+        // f64 in the file 8-byte aligned; the mapping base is
+        // page-aligned (or Vec<u64>-aligned in the fallback), so the
+        // whole-file f64 view is aligned. Trailing non-multiple-of-8
+        // bytes (malformed files) are simply not exposed.
+        let n = bytes.len() / 8;
+        // SAFETY: alignment argued above; any bit pattern is a valid f64;
+        // the view borrows `self`.
+        unsafe { std::slice::from_raw_parts(bytes.as_ptr() as *const f64, n) }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write;
+
+    #[test]
+    fn maps_file_bytes_and_f64s() {
+        let dir = std::env::temp_dir().join(format!("h2opus_mmap_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("m.bin");
+        let vals = [1.5f64, -2.25, 3.0];
+        let mut f = std::fs::File::create(&path).unwrap();
+        for v in vals {
+            f.write_all(&v.to_le_bytes()).unwrap();
+        }
+        drop(f);
+        let map = Mmap::map(&std::fs::File::open(&path).unwrap()).unwrap();
+        assert_eq!(map.len(), 24);
+        #[cfg(target_endian = "little")]
+        assert_eq!(map.as_f64(), &vals);
+        assert!(map.addr_range().contains(&(map.bytes().as_ptr() as usize)));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn empty_file_rejected() {
+        let dir = std::env::temp_dir().join(format!("h2opus_mmap_e_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("empty.bin");
+        std::fs::File::create(&path).unwrap();
+        assert!(Mmap::map(&std::fs::File::open(&path).unwrap()).is_err());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -3,7 +3,7 @@
 //! case where one covariance factorization backs a stream of
 //! independent solves).
 //!
-//! Three layers:
+//! Four layers:
 //!
 //! * **Blocked solves** — live in [`crate::solve`]: every solve has an
 //!   `n × r` panel form whose tile products are rank-`r` GEMMs on the
@@ -15,21 +15,78 @@
 //!   and a [`store::FactorStore`] directory keyed by the problem-config
 //!   hash (`RunConfig::factor_key`), so a factor computed by one
 //!   process serves traffic in another.
-//! * **The service** — [`service::SolveService`]: accepts single-RHS
-//!   requests, coalesces them into panels up to a configurable width
-//!   under a flush deadline (the [`crate::batch::DynamicBatcher`]
-//!   admission idiom applied to requests instead of tiles), executes
-//!   each panel as one blocked solve on a long-lived executor, and
-//!   reports latency and batching-efficiency counters into
-//!   [`crate::profile`].
+//! * **Zero-copy loading** — [`mmap`] plus the borrow-or-own storage
+//!   contract (below): [`store::FactorStore::load_mapped`] maps the
+//!   factor file and hands out tiles that *view* the mapping instead of
+//!   copying it.
+//! * **The service** — [`service::SolveService`]: per-key queues under
+//!   deficit-round-robin fairness with bounded-backlog admission
+//!   control; coalesces single-RHS requests (direct solves *and*
+//!   preconditioned-CG requests via [`service::SolveService::submit_pcg`])
+//!   into panels under a flush deadline, executes each panel as one
+//!   blocked solve on a long-lived executor, and reports latency,
+//!   batching and fairness counters into [`crate::profile`].
 //!
-//! The `serve` binary (`rust/src/bin/serve.rs`) wires the three layers
-//! into a factor-then-serve loop over a synthetic request stream and
-//! prints the throughput/latency table recorded in EXPERIMENTS.md
-//! §Multi-RHS.
+//! ## The borrow-or-own storage contract
+//!
+//! Every tile payload is a
+//! [`TileStorage`](crate::linalg::storage::TileStorage): either an
+//! owned `Vec<f64>` or a [`MappedSlice`](crate::linalg::storage::MappedSlice)
+//! view into an 8-byte-aligned `mmap` of a store file. The rules:
+//!
+//! 1. **Reads never copy.** Every read accessor (`as_slice`, `col`,
+//!    indexing) is uniform over both variants. Solves only read factor
+//!    tiles, so a served factor stays zero-copy for its whole cache
+//!    lifetime, and mapped solves are **bitwise identical** to owned
+//!    ones (same bytes, same arithmetic — asserted in
+//!    `rust/tests/serve.rs`).
+//! 2. **Writes promote.** Mutable accessors copy a mapped payload into
+//!    an owned buffer first (copy-on-write), so mutation never touches
+//!    the mapping and never needs a writable file.
+//! 3. **Views keep the mapping alive; dropping the last view unmaps.**
+//!    The service LRU holds `Arc`s of mapped factors: eviction is an
+//!    `munmap`, and a fresh process re-serving a stored factor faults
+//!    in only the pages its solves actually read.
+//! 4. **Nothing is trusted before the checksum.** `load_mapped`
+//!    validates the FNV-1a checksum and every header-declared length
+//!    against the real file size (overflow-checked) before any view is
+//!    constructed; truncated or bit-flipped files produce a typed
+//!    [`StoreError`], never a panic or a wild allocation.
+//!
+//! ## Example
+//!
+//! Serve direct solves and PCG requests from a persisted factor:
+//!
+//! ```no_run
+//! use h2opus_tlr::serve::{FactorStore, ServeOpts, SolveService};
+//!
+//! # fn main() -> Result<(), Box<dyn std::error::Error>> {
+//! let store = FactorStore::open("target/factor-store")?;
+//! let key = 0x42;
+//! let n = 1024;
+//! // Factors load zero-copy (mmap) by default; per-key backlog is
+//! // bounded, and keys share the worker fairly under DRR.
+//! let service = SolveService::start(store, ServeOpts::default());
+//! let ticket = service.submit(key, vec![1.0; n])?;
+//! let resp = ticket.wait()?;
+//! println!("x[0] = {}, panel width {}", resp.x[0], resp.panel_width);
+//! // CG on the stored operator, preconditioned by the stored factor:
+//! let pcg = service.submit_pcg(key, vec![1.0; n], 1e-8, 200)?;
+//! let resp = pcg.wait()?;
+//! println!("converged = {} in {} iterations", resp.converged, resp.iters);
+//! # Ok(())
+//! # }
+//! ```
+//!
+//! The `serve` binary (`rust/src/bin/serve.rs`) wires the layers into a
+//! factor-then-serve loop over a synthetic request stream and prints
+//! the throughput/latency table recorded in EXPERIMENTS.md §Multi-RHS.
 
+pub mod mmap;
 pub mod service;
 pub mod store;
 
-pub use service::{ServeError, ServeOpts, ServiceStats, SolveResponse, SolveService, Ticket};
-pub use store::{FactorStore, StoreError, StoredFactor};
+pub use service::{
+    ServeError, ServeOpts, ServedBatch, ServiceStats, SolveResponse, SolveService, Ticket,
+};
+pub use store::{FactorStore, Mapped, StoreError, StoredFactor};

@@ -1,28 +1,60 @@
-//! The caching solve service: coalesces independent single-RHS solve
-//! requests into multi-RHS panels and answers them through the blocked
-//! solves of [`crate::solve`].
+//! The multi-tenant caching solve service: per-key request queues under
+//! deficit-round-robin fairness, bounded-backlog admission control, and
+//! panel coalescing into the blocked solves of [`crate::solve`].
 //!
 //! Serving is where the GEMV/GEMM gap bites: one request at a time, a
 //! triangular solve reads every stored tile once per column — pure
-//! memory bandwidth. The service therefore admits requests the way the
-//! paper's [`crate::batch::DynamicBatcher`] admits tiles: hold a batch
-//! open until it is full (`max_panel` columns) or a flush deadline
-//! expires, then run the whole panel as one blocked solve whose tile
-//! products are rank-`r` GEMMs. Factors are loaded on demand from a
-//! [`FactorStore`] and kept in a small LRU cache, so a long-running
-//! server amortizes both the factorization *and* the deserialization
-//! over many requests.
+//! memory bandwidth. The service therefore coalesces requests the way
+//! the paper's [`crate::batch::DynamicBatcher`] admits tiles: hold a
+//! panel open until it is full or a flush deadline expires, then run the
+//! whole panel as one blocked solve whose tile products are rank-`r`
+//! GEMMs.
 //!
-//! Per-request latency (queue wait + solve) and batching-efficiency
-//! counters (requests per executed panel) are reported through
-//! [`crate::profile::add_serve_batch`] as well as the service's own
-//! [`ServiceStats`].
+//! ## Multi-tenancy
+//!
+//! Requests are queued **per factor key** and scheduled by deficit round
+//! robin (DRR): each scheduling round credits the key at the front of
+//! the rotation with a `quantum` of RHS columns, serves up to
+//! `min(deficit, max_panel)` of its requests as one panel, and rotates.
+//! A tenant flooding its queue therefore costs every other tenant at
+//! most one panel of extra wait per round — the minority tenant's
+//! latency is bounded by the quantum, not by the hog's backlog (the
+//! fairness test in `rust/tests/serve.rs` pins this down). The flush
+//! hold is work-conserving: a sub-panel batch waits for its deadline
+//! only while no other tenant has a full panel queued, so one tenant's
+//! trickle never converts into idle latency for everyone else.
+//! Admission is bounded per key: once `max_backlog` requests are queued
+//! under a key, further submissions are rejected with
+//! [`ServeError::Overloaded`] instead of growing the queue without
+//! bound.
+//!
+//! ## Factor resolution
+//!
+//! Factors resolve through registry → LRU cache → disk store. By
+//! default the store path uses [`FactorStore::load_mapped`]: the factor
+//! is validated once and its tiles are zero-copy views into an `mmap`
+//! of the factor file, so the LRU holds *mappings* — eviction is an
+//! `munmap`, and a fresh-process reload touches only the pages the
+//! solves actually read.
+//!
+//! ## Request kinds
+//!
+//! Besides direct factor solves ([`SolveService::submit`]), the service
+//! answers preconditioned-CG requests ([`SolveService::submit_pcg`]):
+//! the stored factor acts as the preconditioner and the TLR operator
+//! stored under the same key (see [`FactorStore::save_matrix`]) as `A`,
+//! coalesced into blocked [`crate::solve::pcg_multi`] panels.
+//!
+//! Per-request latency and batching/fairness counters are reported
+//! through [`crate::profile::add_serve_batch`] as well as the service's
+//! own [`ServiceStats`].
 
 use crate::batch::NativeBatch;
 use crate::linalg::matrix::Matrix;
 use crate::profile;
 use crate::serve::store::{FactorStore, StoreError, StoredFactor};
-use crate::solve::{chol_solve_multi_with, ldl_solve_multi_with};
+use crate::solve::{chol_solve_multi_with, ldl_solve_multi_with, pcg_multi, TlrPanelOp};
+use crate::tlr::matrix::TlrMatrix;
 use std::collections::{HashMap, VecDeque};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
@@ -34,11 +66,20 @@ use std::time::{Duration, Instant};
 pub struct ServeOpts {
     /// Maximum RHS columns coalesced into one blocked solve.
     pub max_panel: usize,
-    /// How long the first queued request may wait for the panel to fill
-    /// before the batch is flushed anyway.
+    /// How long the oldest queued request of the scheduled key may wait
+    /// for its panel to fill before the batch is flushed anyway.
     pub flush_deadline: Duration,
     /// Loaded factors kept in the worker's LRU cache.
     pub cache_capacity: usize,
+    /// DRR quantum: RHS columns credited to a key per scheduling round.
+    /// Defaults to `max_panel` (0 means "use `max_panel`").
+    pub quantum: usize,
+    /// Admission bound: maximum queued requests per key; submissions
+    /// beyond it are rejected with [`ServeError::Overloaded`].
+    pub max_backlog: usize,
+    /// Load store factors via the zero-copy `mmap` path
+    /// ([`FactorStore::load_mapped`]). Disable to force owned decoding.
+    pub mmap: bool,
 }
 
 impl Default for ServeOpts {
@@ -47,6 +88,19 @@ impl Default for ServeOpts {
             max_panel: 64,
             flush_deadline: Duration::from_millis(2),
             cache_capacity: 4,
+            quantum: 0,
+            max_backlog: 1024,
+            mmap: true,
+        }
+    }
+}
+
+impl ServeOpts {
+    fn effective_quantum(&self) -> usize {
+        if self.quantum == 0 {
+            self.max_panel
+        } else {
+            self.quantum
         }
     }
 }
@@ -60,6 +114,11 @@ pub struct SolveResponse {
     pub latency: Duration,
     /// Width of the panel this request was answered in.
     pub panel_width: usize,
+    /// CG iterations (0 for direct factor solves).
+    pub iters: usize,
+    /// Converged flag (always `true` for direct factor solves; for PCG,
+    /// whether the column reached the requested tolerance).
+    pub converged: bool,
 }
 
 /// A request-level failure.
@@ -67,10 +126,16 @@ pub struct SolveResponse {
 pub enum ServeError {
     /// No factor is registered or stored under the key.
     UnknownFactor(u64),
+    /// A PCG request needs the TLR operator matrix under the key, and
+    /// none is registered or stored ([`FactorStore::save_matrix`]).
+    UnknownMatrix(u64),
     /// The store had the key but loading failed.
     Store(String),
     /// RHS length does not match the factor's matrix order.
     BadRhs { expected: usize, got: usize },
+    /// Admission control: the key's queue is at `max_backlog`; the
+    /// request was rejected, not queued.
+    Overloaded { key: u64, backlog: usize, limit: usize },
     /// The service shut down before answering.
     Canceled,
 }
@@ -79,10 +144,17 @@ impl std::fmt::Display for ServeError {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         match self {
             ServeError::UnknownFactor(k) => write!(f, "no factor under key {k:016x}"),
+            ServeError::UnknownMatrix(k) => {
+                write!(f, "no TLR operator matrix under key {k:016x} (needed for pcg)")
+            }
             ServeError::Store(m) => write!(f, "factor load failed: {m}"),
             ServeError::BadRhs { expected, got } => {
                 write!(f, "rhs length {got} does not match matrix order {expected}")
             }
+            ServeError::Overloaded { key, backlog, limit } => write!(
+                f,
+                "key {key:016x} backlog {backlog} at admission limit {limit}; request rejected"
+            ),
             ServeError::Canceled => write!(f, "service shut down before answering"),
         }
     }
@@ -113,6 +185,8 @@ pub struct ServiceStats {
     pub max_panel: u64,
     /// Nanoseconds spent inside blocked solves.
     pub solve_nanos: u64,
+    /// Submissions rejected by admission control.
+    pub rejected: u64,
 }
 
 impl ServiceStats {
@@ -127,16 +201,65 @@ impl ServiceStats {
     }
 }
 
+/// The kind of work a request asks for.
+#[derive(Debug, Clone, Copy)]
+enum ReqMode {
+    /// Direct factor solve `A x = b`.
+    Direct,
+    /// Preconditioned CG on the stored operator with the stored factor
+    /// as preconditioner. Only requests with identical `(tol,
+    /// max_iters)` coalesce into one blocked `pcg_multi`.
+    Pcg { tol: f64, max_iters: usize },
+}
+
+impl PartialEq for ReqMode {
+    /// Batch-compatibility equality. Tolerances compare by bit pattern
+    /// so a NaN tol equals itself — combined with the scheduler taking
+    /// the front request unconditionally, a nonsense tolerance can
+    /// never wedge the queue (the request just runs in its own panel
+    /// and reports non-convergence).
+    fn eq(&self, other: &Self) -> bool {
+        match (self, other) {
+            (ReqMode::Direct, ReqMode::Direct) => true,
+            (
+                ReqMode::Pcg { tol: a, max_iters: i },
+                ReqMode::Pcg { tol: b, max_iters: j },
+            ) => a.to_bits() == b.to_bits() && i == j,
+            _ => false,
+        }
+    }
+}
+
 struct PendingReq {
     key: u64,
+    mode: ReqMode,
     rhs: Vec<f64>,
     enqueued: Instant,
     tx: Sender<Result<SolveResponse, ServeError>>,
 }
 
+/// One executed panel, for the fairness log.
+#[derive(Debug, Clone, Copy)]
+pub struct ServedBatch {
+    pub key: u64,
+    /// RHS columns in the panel.
+    pub width: usize,
+    /// Was this a PCG panel?
+    pub pcg: bool,
+}
+
 #[derive(Default)]
 struct QueueState {
-    pending: VecDeque<PendingReq>,
+    /// Per-key FIFO queues (the multi-tenant change: one queue per key,
+    /// not one global FIFO).
+    queues: HashMap<u64, VecDeque<PendingReq>>,
+    /// DRR rotation over keys with non-empty queues.
+    order: VecDeque<u64>,
+    /// DRR deficit (in RHS columns) per key with a non-empty queue.
+    /// Resets when the queue drains, per standard DRR.
+    deficit: HashMap<u64, usize>,
+    /// Total queued requests across keys.
+    total: usize,
     shutdown: bool,
 }
 
@@ -147,30 +270,42 @@ struct Counters {
     panel_cols: AtomicU64,
     max_panel: AtomicU64,
     solve_nanos: AtomicU64,
+    rejected: AtomicU64,
 }
 
+/// How many executed panels the fairness log retains.
+const SERVED_LOG_CAP: usize = 65536;
+
 struct Inner {
+    opts: ServeOpts,
     queue: Mutex<QueueState>,
     cv: Condvar,
     /// Factors registered in-process (e.g. freshly computed by the
     /// caller), checked before the on-disk store.
     registry: Mutex<HashMap<u64, Arc<StoredFactor>>>,
+    /// Operator matrices registered in-process (for PCG requests).
+    registry_mat: Mutex<HashMap<u64, Arc<TlrMatrix>>>,
     counters: Counters,
+    /// Executed-panel log (bounded), for fairness assertions and
+    /// diagnostics.
+    served: Mutex<Vec<ServedBatch>>,
 }
 
-/// Tiny LRU over loaded factors (worker-thread local; capacities are
-/// single digits, so a vector beats a linked structure).
-struct FactorCache {
+/// Tiny LRU keyed by factor key (worker-thread local; capacities are
+/// single digits, so a vector beats a linked structure). When the
+/// entries are mmap-backed factors, eviction drops the last `Arc` and
+/// therefore unmaps the file.
+struct LruCache<T> {
     cap: usize,
-    entries: Vec<(u64, Arc<StoredFactor>)>,
+    entries: Vec<(u64, Arc<T>)>,
 }
 
-impl FactorCache {
+impl<T> LruCache<T> {
     fn new(cap: usize) -> Self {
-        FactorCache { cap: cap.max(1), entries: Vec::new() }
+        LruCache { cap: cap.max(1), entries: Vec::new() }
     }
 
-    fn get(&mut self, key: u64) -> Option<Arc<StoredFactor>> {
+    fn get(&mut self, key: u64) -> Option<Arc<T>> {
         let pos = self.entries.iter().position(|(k, _)| *k == key)?;
         let entry = self.entries.remove(pos);
         let f = entry.1.clone();
@@ -178,7 +313,7 @@ impl FactorCache {
         Some(f)
     }
 
-    fn insert(&mut self, key: u64, f: Arc<StoredFactor>) {
+    fn insert(&mut self, key: u64, f: Arc<T>) {
         self.entries.retain(|(k, _)| *k != key);
         self.entries.insert(0, (key, f));
         self.entries.truncate(self.cap);
@@ -196,16 +331,20 @@ impl SolveService {
     /// Start a service over `store` with the given batching options.
     pub fn start(store: FactorStore, opts: ServeOpts) -> SolveService {
         assert!(opts.max_panel > 0, "max_panel must be positive");
+        assert!(opts.max_backlog > 0, "max_backlog must be positive");
         let inner = Arc::new(Inner {
+            opts,
             queue: Mutex::new(QueueState::default()),
             cv: Condvar::new(),
             registry: Mutex::new(HashMap::new()),
+            registry_mat: Mutex::new(HashMap::new()),
             counters: Counters::default(),
+            served: Mutex::new(Vec::new()),
         });
         let worker_inner = inner.clone();
         let worker = std::thread::Builder::new()
             .name("h2opus-serve".into())
-            .spawn(move || worker_loop(&worker_inner, &store, &opts))
+            .spawn(move || worker_loop(&worker_inner, &store))
             .expect("spawn serve worker");
         SolveService { inner, worker: Some(worker) }
     }
@@ -217,17 +356,62 @@ impl SolveService {
         self.inner.registry.lock().unwrap().insert(key, Arc::new(f));
     }
 
-    /// Submit a single-RHS solve against the factor under `key`.
-    /// Returns immediately; the request is coalesced with its
-    /// neighbors.
-    pub fn submit(&self, key: u64, rhs: Vec<f64>) -> Ticket {
+    /// Register the TLR operator matrix under `key`, enabling
+    /// [`SolveService::submit_pcg`] for keys whose operator is not in
+    /// the store.
+    pub fn register_matrix(&self, key: u64, a: TlrMatrix) {
+        self.inner.registry_mat.lock().unwrap().insert(key, Arc::new(a));
+    }
+
+    /// Submit a single-RHS direct solve against the factor under `key`.
+    /// Returns immediately; the request coalesces with its same-key
+    /// neighbors. Rejected with [`ServeError::Overloaded`] when the
+    /// key's backlog is at the admission limit.
+    pub fn submit(&self, key: u64, rhs: Vec<f64>) -> Result<Ticket, ServeError> {
+        self.submit_mode(key, rhs, ReqMode::Direct)
+    }
+
+    /// Submit a single-RHS preconditioned-CG solve: CG on the TLR
+    /// operator stored/registered under `key`, preconditioned by the
+    /// factor under `key`. Requests with identical `(tol, max_iters)`
+    /// coalesce into one blocked [`crate::solve::pcg_multi`].
+    pub fn submit_pcg(
+        &self,
+        key: u64,
+        rhs: Vec<f64>,
+        tol: f64,
+        max_iters: usize,
+    ) -> Result<Ticket, ServeError> {
+        self.submit_mode(key, rhs, ReqMode::Pcg { tol, max_iters })
+    }
+
+    fn submit_mode(&self, key: u64, rhs: Vec<f64>, mode: ReqMode) -> Result<Ticket, ServeError> {
         let (tx, rx) = channel();
         {
-            let mut q = self.inner.queue.lock().unwrap();
-            q.pending.push_back(PendingReq { key, rhs, enqueued: Instant::now(), tx });
+            let mut guard = self.inner.queue.lock().unwrap();
+            let q = &mut *guard;
+            if q.shutdown {
+                return Err(ServeError::Canceled);
+            }
+            let queue = q.queues.entry(key).or_default();
+            if queue.len() >= self.inner.opts.max_backlog {
+                self.inner.counters.rejected.fetch_add(1, Ordering::Relaxed);
+                profile::add_serve_rejected(1);
+                return Err(ServeError::Overloaded {
+                    key,
+                    backlog: queue.len(),
+                    limit: self.inner.opts.max_backlog,
+                });
+            }
+            let was_empty = queue.is_empty();
+            queue.push_back(PendingReq { key, mode, rhs, enqueued: Instant::now(), tx });
+            if was_empty {
+                q.order.push_back(key);
+            }
+            q.total += 1;
         }
         self.inner.cv.notify_all();
-        Ticket(rx)
+        Ok(Ticket(rx))
     }
 
     /// Snapshot of the cumulative counters.
@@ -239,7 +423,15 @@ impl SolveService {
             panel_cols: c.panel_cols.load(Ordering::Relaxed),
             max_panel: c.max_panel.load(Ordering::Relaxed),
             solve_nanos: c.solve_nanos.load(Ordering::Relaxed),
+            rejected: c.rejected.load(Ordering::Relaxed),
         }
+    }
+
+    /// The executed-panel log (key + width per blocked solve, in
+    /// execution order; the log stops growing after 65536 panels). The
+    /// fairness test asserts the DRR interleaving bound on this.
+    pub fn served_log(&self) -> Vec<ServedBatch> {
+        self.inner.served.lock().unwrap().clone()
     }
 }
 
@@ -256,93 +448,206 @@ impl Drop for SolveService {
     }
 }
 
-/// Resolve `key` through registry → LRU cache → disk store. The
-/// registry is consulted first so a re-[`SolveService::register`]ed
-/// factor takes effect immediately instead of being shadowed by a
-/// stale LRU entry.
-fn resolve_factor(
+/// Worker-local caches: factors and operator matrices.
+struct WorkerCaches {
+    factors: LruCache<StoredFactor>,
+    matrices: LruCache<TlrMatrix>,
+}
+
+/// Shared resolution path: registry → LRU cache → disk store. The
+/// registry is consulted first so a re-registered value takes effect
+/// immediately instead of being shadowed by a stale LRU entry.
+fn resolve_cached<T>(
     key: u64,
-    inner: &Inner,
-    store: &FactorStore,
-    cache: &mut FactorCache,
-) -> Result<Arc<StoredFactor>, ServeError> {
-    if let Some(f) = inner.registry.lock().unwrap().get(&key).cloned() {
-        cache.insert(key, f.clone());
-        return Ok(f);
+    registry: &Mutex<HashMap<u64, Arc<T>>>,
+    cache: &mut LruCache<T>,
+    load: impl FnOnce() -> Result<Option<T>, StoreError>,
+    missing: impl FnOnce(u64) -> ServeError,
+) -> Result<Arc<T>, ServeError> {
+    // Registry hits are NOT inserted into the LRU: the registry is
+    // consulted first on every resolution, so an LRU entry for a
+    // registered key would never be read and would only evict mapped
+    // store-loaded entries (whose re-validation is the cost the LRU
+    // amortizes).
+    if let Some(v) = registry.lock().unwrap().get(&key).cloned() {
+        return Ok(v);
     }
-    if let Some(f) = cache.get(key) {
-        return Ok(f);
+    if let Some(v) = cache.get(key) {
+        return Ok(v);
     }
-    match store.load(key) {
-        Ok(Some(f)) => {
-            let f = Arc::new(f);
-            cache.insert(key, f.clone());
-            Ok(f)
+    match load() {
+        Ok(Some(v)) => {
+            let v = Arc::new(v);
+            cache.insert(key, v.clone());
+            Ok(v)
         }
-        Ok(None) => Err(ServeError::UnknownFactor(key)),
+        Ok(None) => Err(missing(key)),
         Err(StoreError::Io(e)) => Err(ServeError::Store(e.to_string())),
         Err(StoreError::Format(m)) => Err(ServeError::Store(m)),
     }
 }
 
-fn worker_loop(inner: &Inner, store: &FactorStore, opts: &ServeOpts) {
-    let mut cache = FactorCache::new(opts.cache_capacity);
+/// Resolve the factor for `key` (mapped store load by default).
+fn resolve_factor(
+    key: u64,
+    inner: &Inner,
+    store: &FactorStore,
+    cache: &mut LruCache<StoredFactor>,
+) -> Result<Arc<StoredFactor>, ServeError> {
+    resolve_cached(
+        key,
+        &inner.registry,
+        cache,
+        || {
+            if inner.opts.mmap {
+                store.load_mapped(key).map(|o| o.map(|m| m.value))
+            } else {
+                store.load(key)
+            }
+        },
+        ServeError::UnknownFactor,
+    )
+}
+
+/// Resolve the TLR operator for `key` (PCG requests).
+fn resolve_matrix(
+    key: u64,
+    inner: &Inner,
+    store: &FactorStore,
+    cache: &mut LruCache<TlrMatrix>,
+) -> Result<Arc<TlrMatrix>, ServeError> {
+    resolve_cached(
+        key,
+        &inner.registry_mat,
+        cache,
+        || {
+            if inner.opts.mmap {
+                store.load_matrix_mapped(key).map(|o| o.map(|m| m.value))
+            } else {
+                store.load_matrix(key)
+            }
+        },
+        ServeError::UnknownMatrix,
+    )
+}
+
+/// Scope guard: whatever takes the worker down (normal shutdown or an
+/// uncaught panic), mark the service shut down and drop every queued
+/// request's sender so `Ticket::wait` returns `Canceled` instead of
+/// blocking forever.
+struct DrainOnExit<'a>(&'a Inner);
+
+impl Drop for DrainOnExit<'_> {
+    fn drop(&mut self) {
+        let mut q = self.0.queue.lock().unwrap_or_else(|p| p.into_inner());
+        q.shutdown = true;
+        q.queues.clear();
+        q.order.clear();
+        q.deficit.clear();
+        q.total = 0;
+    }
+}
+
+fn worker_loop(inner: &Inner, store: &FactorStore) {
+    let _drain = DrainOnExit(inner);
+    let opts = &inner.opts;
+    let mut caches = WorkerCaches {
+        factors: LruCache::new(opts.cache_capacity),
+        matrices: LruCache::new(opts.cache_capacity),
+    };
     // One long-lived executor for every blocked solve this worker runs
     // (see the `solve` module docs on executor threading).
     let exec = NativeBatch::new();
+    let quantum = opts.effective_quantum().max(1);
+    // DRR burst cap: a key may bank at most one max panel of credit.
+    let deficit_cap = quantum.max(opts.max_panel);
     loop {
-        // -- Admission: wait for work, then hold the batch open until
-        //    the panel fills or the first request's deadline expires
-        //    (the DynamicBatcher idiom: keep the processing batch full,
-        //    but never stall a request past the deadline).
+        // -- Scheduling: DRR over the per-key queues, then hold the
+        //    chosen key's panel open until it fills or the deadline of
+        //    its oldest request expires (the DynamicBatcher idiom: keep
+        //    the processing batch full, never stall a request past the
+        //    deadline).
         let batch: Vec<PendingReq> = {
-            let mut q = inner.queue.lock().unwrap();
-            while q.pending.is_empty() {
-                if q.shutdown {
+            let mut guard = inner.queue.lock().unwrap();
+            while guard.total == 0 {
+                if guard.shutdown {
                     return;
                 }
-                q = inner.cv.wait(q).unwrap();
+                guard = inner.cv.wait(guard).unwrap();
             }
-            let (first_key, first_t) = {
-                let f = q.pending.front().unwrap();
-                (f.key, f.enqueued)
+            let q = &mut *guard;
+            let key = *q.order.front().expect("total > 0 implies a scheduled key");
+            let d = q.deficit.entry(key).or_insert(0);
+            *d = (*d + quantum).min(deficit_cap);
+            // DRR budgets only matter under contention: a sole tenant
+            // gets the full panel width regardless of quantum (capping
+            // it would trade GEMM efficiency for fairness nobody needs).
+            let budget = if q.order.len() <= 1 {
+                opts.max_panel
+            } else {
+                (*d).min(opts.max_panel).max(1)
             };
-            let deadline = first_t + opts.flush_deadline;
+            let deadline = q.queues[&key].front().expect("scheduled key has requests").enqueued
+                + opts.flush_deadline;
+            // Hold the panel open (re-acquiring the guard through the
+            // condvar) until the key has `budget` requests or the
+            // deadline passes — but never idle while some *other* key
+            // already has a full panel waiting (work conservation: a
+            // sub-panel hold is only worth it when the worker would
+            // otherwise sleep).
             loop {
-                let same = q.pending.iter().filter(|r| r.key == first_key).count();
-                if same >= opts.max_panel || q.shutdown {
+                let ready = guard.queues.get(&key).map_or(0, VecDeque::len);
+                if ready >= budget || guard.shutdown {
+                    break;
+                }
+                let other_full = guard
+                    .queues
+                    .iter()
+                    .any(|(k, v)| *k != key && v.len() >= opts.max_panel);
+                if other_full {
                     break;
                 }
                 let now = Instant::now();
                 if now >= deadline {
                     break;
                 }
-                let (qq, _timeout) = inner.cv.wait_timeout(q, deadline - now).unwrap();
-                q = qq;
-                if q.pending.is_empty() {
-                    // Spurious state change; restart admission.
-                    break;
+                let (g, _timeout) = inner.cv.wait_timeout(guard, deadline - now).unwrap();
+                guard = g;
+            }
+            let q = &mut *guard;
+            let queue = q.queues.get_mut(&key).expect("scheduled key has a queue");
+            // Take up to `budget` leading requests of one mode (mixed
+            // modes under one key split into consecutive panels). The
+            // front request is taken unconditionally so the batch is
+            // never empty and the scheduler always makes progress.
+            let first = queue.pop_front().expect("queue non-empty");
+            let mode = first.mode;
+            let mut batch = vec![first];
+            while batch.len() < budget {
+                match queue.front() {
+                    Some(r) if r.mode == mode => batch.push(queue.pop_front().unwrap()),
+                    _ => break,
                 }
             }
-            if q.pending.is_empty() {
-                continue;
+            q.total -= batch.len();
+            let d = q.deficit.get_mut(&key).expect("credited above");
+            *d = d.saturating_sub(batch.len());
+            if queue.is_empty() {
+                // Standard DRR: deficit resets when the queue drains.
+                q.queues.remove(&key);
+                q.deficit.remove(&key);
+                q.order.pop_front();
+            } else {
+                // Rotate: the key rejoins at the back with its residue.
+                q.order.pop_front();
+                q.order.push_back(key);
             }
-            let mut batch = Vec::new();
-            let mut rest = VecDeque::new();
-            while let Some(r) = q.pending.pop_front() {
-                if r.key == first_key && batch.len() < opts.max_panel {
-                    batch.push(r);
-                } else {
-                    rest.push_back(r);
-                }
-            }
-            q.pending = rest;
             batch
         };
         if batch.is_empty() {
             continue;
         }
-        run_batch(batch, inner, store, &mut cache, &exec);
+        run_batch(batch, inner, store, &mut caches, &exec);
     }
 }
 
@@ -350,11 +655,12 @@ fn run_batch(
     batch: Vec<PendingReq>,
     inner: &Inner,
     store: &FactorStore,
-    cache: &mut FactorCache,
+    caches: &mut WorkerCaches,
     exec: &NativeBatch,
 ) {
     let key = batch[0].key;
-    let factor = match resolve_factor(key, inner, store, cache) {
+    let mode = batch[0].mode;
+    let factor = match resolve_factor(key, inner, store, &mut caches.factors) {
         Ok(f) => f,
         Err(e) => {
             inner.counters.requests.fetch_add(batch.len() as u64, Ordering::Relaxed);
@@ -365,6 +671,36 @@ fn run_batch(
         }
     };
     let n = factor.n();
+    // PCG also needs the operator matrix under the key, and it must
+    // agree with the factor's order — a mismatch is a typed error, not
+    // a panic in the worker (which would wedge the whole service).
+    let operator = match mode {
+        ReqMode::Direct => None,
+        ReqMode::Pcg { .. } => {
+            let resolved = resolve_matrix(key, inner, store, &mut caches.matrices)
+                .and_then(|a| {
+                    if a.n() == n {
+                        Ok(a)
+                    } else {
+                        Err(ServeError::Store(format!(
+                            "operator under key {key:016x} has order {} but the factor has \
+                             order {n}",
+                            a.n()
+                        )))
+                    }
+                });
+            match resolved {
+                Ok(a) => Some(a),
+                Err(e) => {
+                    inner.counters.requests.fetch_add(batch.len() as u64, Ordering::Relaxed);
+                    for req in batch {
+                        let _ = req.tx.send(Err(e.clone()));
+                    }
+                    return;
+                }
+            }
+        }
+    };
     // Partition out malformed RHS vectors before building the panel.
     let mut valid = Vec::with_capacity(batch.len());
     for req in batch {
@@ -385,9 +721,51 @@ fn run_batch(
         panel.col_mut(j).copy_from_slice(&req.rhs);
     }
     let t0 = Instant::now();
-    let x = match factor.as_ref() {
-        StoredFactor::Chol(f) => chol_solve_multi_with(f, &panel, exec),
-        StoredFactor::Ldl(f) => ldl_solve_multi_with(f, &panel, exec),
+    // Per-column (iters, converged); direct solves report (0, true).
+    // The solve runs under a panic guard: a malformed *registered*
+    // factor (the registry, unlike the store, validates nothing) must
+    // error this batch, not kill the worker and wedge the service.
+    let solved = std::panic::catch_unwind(std::panic::AssertUnwindSafe(
+        || -> (Matrix, Vec<(usize, bool)>) {
+            match mode {
+                ReqMode::Direct => {
+                    let x = match factor.as_ref() {
+                        StoredFactor::Chol(f) => chol_solve_multi_with(f, &panel, exec),
+                        StoredFactor::Ldl(f) => ldl_solve_multi_with(f, &panel, exec),
+                    };
+                    (x, vec![(0, true); w])
+                }
+                ReqMode::Pcg { tol, max_iters } => {
+                    let a: &TlrMatrix = operator.as_ref().expect("resolved above");
+                    let op = TlrPanelOp { a, exec };
+                    let minv = |r: &Matrix| -> Matrix {
+                        match factor.as_ref() {
+                            StoredFactor::Chol(f) => chol_solve_multi_with(f, r, exec),
+                            StoredFactor::Ldl(f) => ldl_solve_multi_with(f, r, exec),
+                        }
+                    };
+                    let res = pcg_multi(&op, &minv, &panel, tol, max_iters);
+                    let info = (0..w).map(|j| (res.iters[j], res.converged[j])).collect();
+                    (res.x, info)
+                }
+            }
+        },
+    ));
+    let (x, col_info) = match solved {
+        Ok(v) => v,
+        Err(panic) => {
+            let what = panic
+                .downcast_ref::<&str>()
+                .map(|s| s.to_string())
+                .or_else(|| panic.downcast_ref::<String>().cloned())
+                .unwrap_or_else(|| "non-string panic".to_string());
+            let e = ServeError::Store(format!("solve panicked for key {key:016x}: {what}"));
+            inner.counters.requests.fetch_add(w as u64, Ordering::Relaxed);
+            for req in valid {
+                let _ = req.tx.send(Err(e.clone()));
+            }
+            return;
+        }
     };
     let solve_nanos = t0.elapsed().as_nanos() as u64;
     let c = &inner.counters;
@@ -397,12 +775,21 @@ fn run_batch(
     c.max_panel.fetch_max(w as u64, Ordering::Relaxed);
     c.solve_nanos.fetch_add(solve_nanos, Ordering::Relaxed);
     profile::add_serve_batch(w as u64, solve_nanos);
+    {
+        let mut log = inner.served.lock().unwrap();
+        if log.len() < SERVED_LOG_CAP {
+            log.push(ServedBatch { key, width: w, pcg: matches!(mode, ReqMode::Pcg { .. }) });
+        }
+    }
     let now = Instant::now();
     for (j, req) in valid.into_iter().enumerate() {
+        let (iters, converged) = col_info[j];
         let resp = SolveResponse {
             x: x.col(j).to_vec(),
             latency: now.duration_since(req.enqueued),
             panel_width: w,
+            iters,
+            converged,
         };
         let _ = req.tx.send(Ok(resp));
     }
@@ -428,7 +815,7 @@ mod tests {
                 stats: FactorStats { perm: vec![0], ..Default::default() },
             }))
         };
-        let mut c = FactorCache::new(2);
+        let mut c = LruCache::new(2);
         c.insert(1, mk(1));
         c.insert(2, mk(2));
         assert!(c.get(1).is_some()); // touch 1 → MRU
@@ -436,5 +823,13 @@ mod tests {
         assert!(c.get(2).is_none());
         assert!(c.get(1).is_some());
         assert!(c.get(3).is_some());
+    }
+
+    #[test]
+    fn drr_deficit_cap_bounds_burst() {
+        let opts = ServeOpts { max_panel: 8, quantum: 0, ..Default::default() };
+        assert_eq!(opts.effective_quantum(), 8);
+        let opts = ServeOpts { max_panel: 8, quantum: 3, ..Default::default() };
+        assert_eq!(opts.effective_quantum(), 3);
     }
 }

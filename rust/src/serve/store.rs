@@ -16,7 +16,13 @@
 //! All integers are little-endian. The fixed prefix is 40 bytes and the
 //! header is a whole number of `u64`s, so the payload starts 8-byte
 //! aligned — a reader may map the file and view the payload as `&[f64]`
-//! directly. Tile data is stored contiguously in lower-triangle packed
+//! directly, which is exactly what the `*_mapped` loaders and
+//! [`FactorStore::load_mapped`] do: validate checksum + header once,
+//! then hand out [`MappedSlice`] tile views with **no `f64` payload
+//! copy** (borrow-or-own storage, [`crate::linalg::storage`]). Dropping
+//! the last view unmaps the file, so cache eviction is an `munmap` and a
+//! fresh-process reload faults in only the pages a solve actually
+//! reads. Tile data is stored contiguously in lower-triangle packed
 //! order (`(i, j ≤ i)`, row by row): dense tiles as column-major
 //! `rows × cols`, low-rank tiles as `U` (`rows × k`) then `V`
 //! (`cols × k`). `f64` values round-trip bitwise
@@ -32,9 +38,12 @@
 
 use crate::factor::{CholFactor, FactorStats, LdlFactor};
 use crate::linalg::matrix::Matrix;
+use crate::linalg::storage::{Mapping, MappedSlice, TileStorage};
+use crate::serve::mmap::Mmap;
 use crate::tlr::matrix::TlrMatrix;
 use crate::tlr::tile::{LowRank, Tile};
 use std::path::{Path, PathBuf};
+use std::sync::Arc;
 
 const MAGIC: &[u8; 8] = b"H2OTLRSF";
 const VERSION: u32 = 1;
@@ -135,6 +144,10 @@ impl<'a> HeaderReader<'a> {
     fn usize(&mut self) -> Result<usize, StoreError> {
         Ok(self.u64()? as usize)
     }
+    /// `u64` values left to read.
+    fn remaining_u64s(&self) -> usize {
+        (self.buf.len() - self.pos) / 8
+    }
     fn done(&self) -> Result<(), StoreError> {
         if self.pos != self.buf.len() {
             return format_err("trailing header bytes");
@@ -193,6 +206,20 @@ fn read_tlr_header(
     if nb == 0 || nb > 1 << 24 {
         return format_err(format!("implausible tile count {nb}"));
     }
+    // A checksum only proves integrity, not sanity: before reserving
+    // anything sized by `nb`, check that the header is actually large
+    // enough to hold what `nb` implies (nb+1 offsets plus 4 u64s per
+    // lower-triangle tile), so a crafted count cannot drive a huge
+    // allocation from a tiny file.
+    let need = nb
+        .checked_mul(nb + 1)
+        .map(|v| v / 2)
+        .and_then(|t| t.checked_mul(4))
+        .and_then(|t| t.checked_add(nb + 1));
+    match need {
+        Some(n64) if n64 <= h.remaining_u64s() => {}
+        _ => return format_err(format!("header too short for declared tile count {nb}")),
+    }
     let mut offsets = Vec::with_capacity(nb + 1);
     for _ in 0..nb + 1 {
         offsets.push(h.usize()?);
@@ -224,27 +251,74 @@ fn read_tlr_header(
     Ok((offsets, tiles))
 }
 
-fn read_tlr_payload(
-    payload: &[f64],
-    pos: &mut usize,
+/// Overflow-guarded `a * b` for header-declared tile sizes: a malformed
+/// header must produce a typed error, never a wrapped allocation size.
+fn mul_guard(a: usize, b: usize) -> Result<usize, StoreError> {
+    a.checked_mul(b)
+        .ok_or_else(|| StoreError::Format("tile payload size overflows usize".into()))
+}
+
+/// Sequential allocator of tile payload chunks. One implementation
+/// copies out of a decoded payload vector ([`Taker::Owned`] — the
+/// classic `load`/`decode` path); the other hands out zero-copy
+/// [`MappedSlice`] views into a file mapping ([`Taker::Mapped`] — the
+/// `load_mapped` path). Both bounds-check every request against the
+/// checksummed payload length, so a lying header errors instead of
+/// panicking or over-allocating.
+enum Taker<'a> {
+    Owned { payload: &'a [f64], pos: usize },
+    Mapped { base: Arc<dyn Mapping>, start: usize, len: usize, pos: usize },
+}
+
+impl Taker<'_> {
+    fn remaining(&self) -> usize {
+        match self {
+            Taker::Owned { payload, pos } => payload.len() - *pos,
+            Taker::Mapped { len, pos, .. } => *len - *pos,
+        }
+    }
+
+    fn take(&mut self, count: usize) -> Result<TileStorage, StoreError> {
+        if count > self.remaining() {
+            return format_err("truncated payload");
+        }
+        match self {
+            Taker::Owned { payload, pos } => {
+                let v = payload[*pos..*pos + count].to_vec();
+                *pos += count;
+                Ok(TileStorage::Owned(v))
+            }
+            Taker::Mapped { base, start, pos, .. } => {
+                let s = MappedSlice::new(base.clone(), *start + *pos, count);
+                *pos += count;
+                Ok(TileStorage::Mapped(s))
+            }
+        }
+    }
+
+    /// Take `count` values by copy (for the small LDL diagonal, which is
+    /// stored as owned `Vec`s either way).
+    fn take_vec(&mut self, count: usize) -> Result<Vec<f64>, StoreError> {
+        Ok(match self.take(count)? {
+            TileStorage::Owned(v) => v,
+            m => m.as_slice().to_vec(),
+        })
+    }
+}
+
+fn read_tlr_tiles(
+    taker: &mut Taker<'_>,
     offsets: Vec<usize>,
     metas: &[TileMeta],
 ) -> Result<TlrMatrix, StoreError> {
-    let mut take = |count: usize| -> Result<Vec<f64>, StoreError> {
-        if *pos + count > payload.len() {
-            return format_err("truncated payload");
-        }
-        let v = payload[*pos..*pos + count].to_vec();
-        *pos += count;
-        Ok(v)
-    };
     let mut tiles = Vec::with_capacity(metas.len());
     for &(tag, rows, cols, rank) in metas {
         if tag == TAG_DENSE {
-            tiles.push(Tile::Dense(Matrix::from_vec(rows, cols, take(rows * cols)?)));
+            let st = taker.take(mul_guard(rows, cols)?)?;
+            tiles.push(Tile::Dense(Matrix::from_storage(rows, cols, st)));
         } else {
-            let u = Matrix::from_vec(rows, rank, take(rows * rank)?);
-            let v = Matrix::from_vec(cols, rank, take(cols * rank)?);
+            let u = Matrix::from_storage(rows, rank, taker.take(mul_guard(rows, rank)?)?);
+            let v = Matrix::from_storage(cols, rank, taker.take(mul_guard(cols, rank)?)?);
             tiles.push(Tile::LowRank(LowRank { u, v }));
         }
     }
@@ -271,7 +345,25 @@ fn frame(kind: u32, header: &[u8], payload: &[f64]) -> Vec<u8> {
     out
 }
 
-fn unframe(bytes: &[u8], want_kind: u32) -> Result<(&[u8], Vec<f64>), StoreError> {
+/// A validated frame over borrowed file bytes. By the time a `Frame`
+/// exists, the magic/version/kind have matched, every header-declared
+/// length has been bounds-checked (with overflow-checked arithmetic)
+/// against the *actual* byte length, and the FNV-1a checksum over
+/// header + payload has verified — so downstream decoders may trust the
+/// declared sizes without re-checking, and no allocation is ever sized
+/// from an unverified header field.
+struct Frame<'a> {
+    header: &'a [u8],
+    payload_bytes: &'a [u8],
+    /// Byte offset of the payload within the file. Always a multiple of
+    /// 8 (the 40-byte prefix plus a whole-u64 header), which is what
+    /// makes the zero-copy `&[f64]` view legal.
+    payload_offset: usize,
+    /// Payload length in `f64` values.
+    payload_len: usize,
+}
+
+fn unframe_ref(bytes: &[u8], want_kind: u32) -> Result<Frame<'_>, StoreError> {
     if bytes.len() < 40 {
         return format_err("file shorter than the fixed prefix");
     }
@@ -288,8 +380,17 @@ fn unframe(bytes: &[u8], want_kind: u32) -> Result<(&[u8], Vec<f64>), StoreError
     if kind != want_kind {
         return format_err(format!("kind mismatch: file has {kind}, expected {want_kind}"));
     }
-    let header_len = u64_at(16) as usize;
-    let payload_len = u64_at(24) as usize;
+    let header_len = match usize::try_from(u64_at(16)) {
+        Ok(v) => v,
+        Err(_) => return format_err("header length exceeds the address space"),
+    };
+    let payload_len = match usize::try_from(u64_at(24)) {
+        Ok(v) => v,
+        Err(_) => return format_err("payload length exceeds the address space"),
+    };
+    if header_len % 8 != 0 {
+        return format_err(format!("header length {header_len} is not a multiple of 8"));
+    }
     let checksum = u64_at(32);
     let expect = 40usize
         .checked_add(header_len)
@@ -305,11 +406,16 @@ fn unframe(bytes: &[u8], want_kind: u32) -> Result<(&[u8], Vec<f64>), StoreError
     if fnv1a_extend(fnv1a(header), payload_bytes) != checksum {
         return format_err("checksum mismatch (corrupted file)");
     }
-    let mut payload = Vec::with_capacity(payload_len);
-    for chunk in payload_bytes.chunks_exact(8) {
+    Ok(Frame { header, payload_bytes, payload_offset: 40 + header_len, payload_len })
+}
+
+fn unframe(bytes: &[u8], want_kind: u32) -> Result<(&[u8], Vec<f64>), StoreError> {
+    let fr = unframe_ref(bytes, want_kind)?;
+    let mut payload = Vec::with_capacity(fr.payload_len);
+    for chunk in fr.payload_bytes.chunks_exact(8) {
         payload.push(f64::from_le_bytes(chunk.try_into().unwrap()));
     }
-    Ok((header, payload))
+    Ok((fr.header, payload))
 }
 
 // ------------------------------------------------------- encode/decode
@@ -326,12 +432,15 @@ pub fn encode_tlr(a: &TlrMatrix) -> Vec<u8> {
 /// Deserialize a [`TlrMatrix`] written by [`encode_tlr`].
 pub fn decode_tlr(bytes: &[u8]) -> Result<TlrMatrix, StoreError> {
     let (header, payload) = unframe(bytes, KIND_TLR)?;
+    decode_tlr_parts(header, Taker::Owned { payload: &payload, pos: 0 })
+}
+
+fn decode_tlr_parts(header: &[u8], mut taker: Taker<'_>) -> Result<TlrMatrix, StoreError> {
     let mut h = HeaderReader::new(header);
     let (offsets, metas) = read_tlr_header(&mut h)?;
     h.done()?;
-    let mut pos = 0;
-    let a = read_tlr_payload(&payload, &mut pos, offsets, &metas)?;
-    if pos != payload.len() {
+    let a = read_tlr_tiles(&mut taker, offsets, &metas)?;
+    if taker.remaining() != 0 {
         return format_err("trailing payload values");
     }
     Ok(a)
@@ -356,21 +465,29 @@ pub fn encode_chol(f: &CholFactor) -> Vec<u8> {
 /// permutation.
 pub fn decode_chol(bytes: &[u8]) -> Result<CholFactor, StoreError> {
     let (header, payload) = unframe(bytes, KIND_CHOL)?;
+    decode_chol_parts(header, Taker::Owned { payload: &payload, pos: 0 })
+}
+
+fn decode_chol_parts(header: &[u8], mut taker: Taker<'_>) -> Result<CholFactor, StoreError> {
     let mut h = HeaderReader::new(header);
     let (offsets, metas) = read_tlr_header(&mut h)?;
     let nb = offsets.len() - 1;
     let mut perm = Vec::with_capacity(nb);
+    let mut seen = vec![false; nb];
     for _ in 0..nb {
         let p = h.usize()?;
         if p >= nb {
             return format_err(format!("permutation entry {p} out of range"));
         }
+        if seen[p] {
+            return format_err(format!("permutation entry {p} repeated (not a bijection)"));
+        }
+        seen[p] = true;
         perm.push(p);
     }
     h.done()?;
-    let mut pos = 0;
-    let l = read_tlr_payload(&payload, &mut pos, offsets, &metas)?;
-    if pos != payload.len() {
+    let l = read_tlr_tiles(&mut taker, offsets, &metas)?;
+    if taker.remaining() != 0 {
         return format_err("trailing payload values");
     }
     Ok(CholFactor { l, stats: FactorStats { perm, ..Default::default() } })
@@ -398,35 +515,50 @@ pub fn encode_ldl(f: &LdlFactor) -> Vec<u8> {
 /// Deserialize an [`LdlFactor`] written by [`encode_ldl`].
 pub fn decode_ldl(bytes: &[u8]) -> Result<LdlFactor, StoreError> {
     let (header, payload) = unframe(bytes, KIND_LDL)?;
+    decode_ldl_parts(header, Taker::Owned { payload: &payload, pos: 0 })
+}
+
+fn decode_ldl_parts(header: &[u8], mut taker: Taker<'_>) -> Result<LdlFactor, StoreError> {
     let mut h = HeaderReader::new(header);
     let (offsets, metas) = read_tlr_header(&mut h)?;
     h.done()?;
     let nb = offsets.len() - 1;
     let sizes: Vec<usize> = (0..nb).map(|i| offsets[i + 1] - offsets[i]).collect();
     let n = *offsets.last().unwrap();
-    let mut pos = 0;
-    let l = read_tlr_payload(&payload, &mut pos, offsets, &metas)?;
-    if pos + n != payload.len() {
+    let l = read_tlr_tiles(&mut taker, offsets, &metas)?;
+    if taker.remaining() != n {
         return format_err("LDL diagonal length disagrees with offsets");
     }
+    // The diagonal is O(N) — copied even on the mapped path (tile
+    // payloads are the zero-copy contract; `LdlFactor::d` is owned).
     let mut d = Vec::with_capacity(nb);
     for sz in sizes {
-        d.push(payload[pos..pos + sz].to_vec());
-        pos += sz;
+        d.push(taker.take_vec(sz)?);
     }
+    debug_assert_eq!(taker.remaining(), 0);
     Ok(LdlFactor { l, d, stats: FactorStats::default() })
 }
 
 // -------------------------------------------------------- file helpers
 
 /// Write `bytes` atomically-ish: to a sibling temp file, then rename.
+/// The temp name is unique per process + write so concurrent saves of
+/// the same key (two processes both missing on one factor) cannot
+/// clobber each other's in-flight temp file — last rename wins with a
+/// complete file either way.
 fn write_file(path: &Path, bytes: &[u8]) -> Result<(), StoreError> {
+    use std::sync::atomic::{AtomicU64, Ordering};
+    static WRITE_SEQ: AtomicU64 = AtomicU64::new(0);
     if let Some(dir) = path.parent() {
         std::fs::create_dir_all(dir)?;
     }
-    let tmp = path.with_extension("tmp");
+    let seq = WRITE_SEQ.fetch_add(1, Ordering::Relaxed);
+    let tmp = path.with_extension(format!("tmp.{}.{seq}", std::process::id()));
     std::fs::write(&tmp, bytes)?;
-    std::fs::rename(&tmp, path)?;
+    if let Err(e) = std::fs::rename(&tmp, path) {
+        let _ = std::fs::remove_file(&tmp);
+        return Err(e.into());
+    }
     Ok(())
 }
 
@@ -459,6 +591,97 @@ pub fn save_ldl(path: &Path, f: &LdlFactor) -> Result<(), StoreError> {
 pub fn load_ldl(path: &Path) -> Result<LdlFactor, StoreError> {
     decode_ldl(&std::fs::read(path)?)
 }
+
+// ------------------------------------------------------ mapped loading
+
+/// A value decoded zero-copy from a file mapping: the value's tile
+/// payloads are [`MappedSlice`] views into the mapping (which they keep
+/// alive — dropping the last tile unmaps the file), and `addr_range`
+/// reports where the mapping lives so callers (tests, diagnostics) can
+/// assert the zero-copy property.
+///
+/// On targets without zero-copy support (big-endian hosts — see
+/// [`crate::serve::mmap::SUPPORTS_ZERO_COPY`]), the loaders fall back to
+/// the owned decode path and report an empty `addr_range`.
+pub struct Mapped<T> {
+    pub value: T,
+    /// Address range of the backing mapping (`0..0` on the owned
+    /// fallback).
+    pub addr_range: std::ops::Range<usize>,
+    /// Size of the mapped file in bytes (0 on the owned fallback).
+    pub mapped_bytes: usize,
+}
+
+impl<T> Mapped<T> {
+    /// Does `p` point into the backing mapping?
+    pub fn contains_ptr(&self, p: *const f64) -> bool {
+        self.addr_range.contains(&(p as usize))
+    }
+}
+
+/// Map `path` read-only. Validation (checksum + header, the same checks
+/// as [`unframe_ref`]) runs once over the mapped bytes; the sequential
+/// checksum pass warms the page cache, and after it decoding hands out
+/// views only.
+fn map_file(path: &Path) -> Result<Arc<Mmap>, StoreError> {
+    let file = std::fs::File::open(path)?;
+    Ok(Arc::new(Mmap::map(&file)?))
+}
+
+fn mapped_taker(map: &Arc<Mmap>, fr: &Frame<'_>) -> Taker<'static> {
+    debug_assert_eq!(fr.payload_offset % 8, 0);
+    let base: Arc<dyn Mapping> = map.clone();
+    Taker::Mapped { base, start: fr.payload_offset / 8, len: fr.payload_len, pos: 0 }
+}
+
+macro_rules! mapped_loader {
+    ($name:ident, $kind:expr, $parts:ident, $owned:ident, $ty:ty, $doc:literal) => {
+        #[doc = $doc]
+        ///
+        /// Validates the checksum and header once against the mapped
+        /// bytes, then constructs tiles as zero-copy views — no `f64`
+        /// payload is copied (the `LdlFactor` diagonal, `O(N)`, is the
+        /// one owned exception).
+        pub fn $name(path: &Path) -> Result<Mapped<$ty>, StoreError> {
+            if cfg!(target_endian = "big") {
+                // The format is little-endian: a mapped view would
+                // misread on a big-endian host, so decode owned.
+                let value = $owned(path)?;
+                return Ok(Mapped { value, addr_range: 0..0, mapped_bytes: 0 });
+            }
+            let map = map_file(path)?;
+            let fr = unframe_ref(map.bytes(), $kind)?;
+            let taker = mapped_taker(&map, &fr);
+            let value = $parts(fr.header, taker)?;
+            Ok(Mapped { value, addr_range: map.addr_range(), mapped_bytes: map.len() })
+        }
+    };
+}
+
+mapped_loader!(
+    load_tlr_mapped,
+    KIND_TLR,
+    decode_tlr_parts,
+    load_tlr,
+    TlrMatrix,
+    "Load a [`TlrMatrix`] from `path` as zero-copy views into an `mmap` of the file."
+);
+mapped_loader!(
+    load_chol_mapped,
+    KIND_CHOL,
+    decode_chol_parts,
+    load_chol,
+    CholFactor,
+    "Load a [`CholFactor`] from `path` as zero-copy views into an `mmap` of the file."
+);
+mapped_loader!(
+    load_ldl_mapped,
+    KIND_LDL,
+    decode_ldl_parts,
+    load_ldl,
+    LdlFactor,
+    "Load an [`LdlFactor`] from `path` as zero-copy views into an `mmap` of the file."
+);
 
 // --------------------------------------------------------- FactorStore
 
@@ -516,9 +739,18 @@ impl FactorStore {
         self.key_dir(key).join("ldl.bin")
     }
 
+    fn tlr_path(&self, key: u64) -> PathBuf {
+        self.key_dir(key).join("tlr.bin")
+    }
+
     /// Does any factor exist under `key`?
     pub fn contains(&self, key: u64) -> bool {
         self.chol_path(key).exists() || self.ldl_path(key).exists()
+    }
+
+    /// Does a TLR operator matrix exist under `key`?
+    pub fn contains_matrix(&self, key: u64) -> bool {
+        self.tlr_path(key).exists()
     }
 
     /// Persist a Cholesky factor under `key`, with a human-readable
@@ -542,6 +774,34 @@ impl FactorStore {
         Ok(path)
     }
 
+    /// Persist the TLR operator matrix under `key` (alongside whatever
+    /// factor the key holds). The serve layer needs the operator to run
+    /// preconditioned CG requests: the factor is the preconditioner, the
+    /// matrix is `A`.
+    pub fn save_matrix(&self, key: u64, a: &TlrMatrix) -> Result<PathBuf, StoreError> {
+        let path = self.tlr_path(key);
+        save_tlr(&path, a)?;
+        Ok(path)
+    }
+
+    /// Load the TLR operator matrix under `key`, if present.
+    pub fn load_matrix(&self, key: u64) -> Result<Option<TlrMatrix>, StoreError> {
+        let p = self.tlr_path(key);
+        if p.exists() {
+            return Ok(Some(load_tlr(&p)?));
+        }
+        Ok(None)
+    }
+
+    /// [`FactorStore::load_matrix`] via the zero-copy mapped path.
+    pub fn load_matrix_mapped(&self, key: u64) -> Result<Option<Mapped<TlrMatrix>>, StoreError> {
+        let p = self.tlr_path(key);
+        if p.exists() {
+            return Ok(Some(load_tlr_mapped(&p)?));
+        }
+        Ok(None)
+    }
+
     /// Load whichever factor kind is stored under `key`; `Ok(None)` if
     /// the key has never been saved.
     pub fn load(&self, key: u64) -> Result<Option<StoredFactor>, StoreError> {
@@ -552,6 +812,33 @@ impl FactorStore {
         let lp = self.ldl_path(key);
         if lp.exists() {
             return Ok(Some(StoredFactor::Ldl(load_ldl(&lp)?)));
+        }
+        Ok(None)
+    }
+
+    /// Load whichever factor kind is stored under `key` via the
+    /// zero-copy mapped path: the checksum and header are validated
+    /// once, then every tile is a [`MappedSlice`] view into the `mmap` —
+    /// no `f64` payload copy. Dropping the returned factor (e.g. LRU
+    /// eviction in [`crate::serve::SolveService`]) unmaps the file.
+    pub fn load_mapped(&self, key: u64) -> Result<Option<Mapped<StoredFactor>>, StoreError> {
+        let cp = self.chol_path(key);
+        if cp.exists() {
+            let m = load_chol_mapped(&cp)?;
+            return Ok(Some(Mapped {
+                value: StoredFactor::Chol(m.value),
+                addr_range: m.addr_range,
+                mapped_bytes: m.mapped_bytes,
+            }));
+        }
+        let lp = self.ldl_path(key);
+        if lp.exists() {
+            let m = load_ldl_mapped(&lp)?;
+            return Ok(Some(Mapped {
+                value: StoredFactor::Ldl(m.value),
+                addr_range: m.addr_range,
+                mapped_bytes: m.mapped_bytes,
+            }));
         }
         Ok(None)
     }

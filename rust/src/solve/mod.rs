@@ -344,6 +344,23 @@ impl PanelOp for TlrOp<'_> {
     }
 }
 
+/// [`TlrOp`] bound to a caller-owned executor: the panel operator for
+/// long-lived contexts (the serve worker routes PCG matvecs through its
+/// one executor instead of constructing one per iteration).
+pub struct TlrPanelOp<'a> {
+    pub a: &'a TlrMatrix,
+    pub exec: &'a dyn BatchedGemm,
+}
+
+impl PanelOp for TlrPanelOp<'_> {
+    fn dim(&self) -> usize {
+        self.a.n()
+    }
+    fn apply_panel(&self, x: &Matrix) -> Matrix {
+        tlr_matvec_multi_with(self.a, x, self.exec)
+    }
+}
+
 /// The residual operator `x ↦ A x − Pᵀ L Lᵀ P x` (symmetric), used to
 /// estimate the factorization error `‖A − PᵀLLᵀP‖₂` by power iteration —
 /// the paper's §6 verification.

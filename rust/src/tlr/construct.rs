@@ -113,9 +113,10 @@ mod tests {
         // Paper Fig 11b: ARA detects ranks ~5% above the SVD optimum.
         let (cov, offsets) = covariance_setup(400, 100);
         let eps = 1e-6;
-        let t_svd = build_tlr(&cov, &offsets, &BuildOpts { eps, method: Compression::Svd, seed: 1 });
-        let t_ara =
-            build_tlr(&cov, &offsets, &BuildOpts { eps, method: Compression::Ara { bs: 8 }, seed: 1 });
+        let svd_opts = BuildOpts { eps, method: Compression::Svd, seed: 1 };
+        let t_svd = build_tlr(&cov, &offsets, &svd_opts);
+        let ara_opts = BuildOpts { eps, method: Compression::Ara { bs: 8 }, seed: 1 };
+        let t_ara = build_tlr(&cov, &offsets, &ara_opts);
         let svd_total: usize = t_svd.offdiag_ranks().iter().sum();
         let ara_total: usize = t_ara.offdiag_ranks().iter().sum();
         assert!(ara_total >= svd_total, "ARA cannot beat the SVD optimum");

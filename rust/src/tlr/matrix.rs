@@ -209,6 +209,15 @@ impl TlrMatrix {
         h
     }
 
+    /// True when every (non-empty) tile payload is a zero-copy view
+    /// into a mapping — i.e. the matrix came from
+    /// [`load_mapped`](crate::serve::store::FactorStore::load_mapped)
+    /// and nothing has promoted a tile to owned since. Rank-0 tiles
+    /// (empty payloads) are exempt.
+    pub fn is_fully_mapped(&self) -> bool {
+        self.tiles.iter().all(|t| t.rank() == 0 || t.is_mapped())
+    }
+
     /// Memory footprint report.
     pub fn memory(&self) -> MemoryReport {
         let mut dense = 0usize;

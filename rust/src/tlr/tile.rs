@@ -5,6 +5,12 @@ use crate::linalg::gemm::{gemm, matmul, matmul_tn, Trans};
 use crate::linalg::matrix::Matrix;
 use crate::linalg::svd;
 
+// Tile payloads are borrow-or-own: re-exported here because the tile is
+// where the storage choice becomes visible to the TLR layers (a tile
+// loaded by `FactorStore::load_mapped` is a view into the mapped factor
+// file; see the `linalg::storage` module docs for the contract).
+pub use crate::linalg::storage::TileStorage;
+
 /// Low-rank factors `A ≈ U Vᵀ`, `u: rows×k`, `v: cols×k`.
 #[derive(Debug, Clone)]
 pub struct LowRank {
@@ -57,6 +63,11 @@ impl LowRank {
     /// Number of f64 values stored.
     pub fn memory_f64(&self) -> usize {
         self.rank() * (self.rows() + self.cols())
+    }
+
+    /// Are both factors zero-copy views into a mapping?
+    pub fn is_mapped(&self) -> bool {
+        self.u.is_mapped() && self.v.is_mapped()
     }
 
     /// Compress a dense block to absolute 2-norm tolerance `tol` via SVD.
@@ -149,6 +160,14 @@ impl Tile {
         match self {
             Tile::Dense(m) => m,
             Tile::LowRank(_) => panic!("expected dense tile"),
+        }
+    }
+
+    /// Is the tile's payload a zero-copy view into a mapping?
+    pub fn is_mapped(&self) -> bool {
+        match self {
+            Tile::Dense(m) => m.is_mapped(),
+            Tile::LowRank(lr) => lr.is_mapped(),
         }
     }
 }

@@ -189,7 +189,8 @@ fn prop_waves_never_reorder_dependent_ops() {
         // in strictly increasing waves (re-derived here independently).
         let mut wave_of = vec![usize::MAX; plan.ops().len()];
         for (w, wave) in plan.waves().iter().enumerate() {
-            assert!(wave.windows(2).all(|p| p[0] < p[1]), "seed={seed}: wave {w} not in program order");
+            let ordered = wave.windows(2).all(|p| p[0] < p[1]);
+            assert!(ordered, "seed={seed}: wave {w} not in program order");
             for &op in wave {
                 wave_of[op] = w;
             }
@@ -317,7 +318,8 @@ fn prop_fused_chain_batch_matches_manual() {
                 expect.axpy(-1.0, &matmul(&term.ui, &matmul_tn(&term.vi, &t2)));
             }
             assert_close(&native[slots[t]], &expect, 1e-12, &format!("seed={seed} tile={t}"));
-            assert_close(&oracle[slots[t]], &expect, 1e-12, &format!("seed={seed} tile={t} oracle"));
+            let ctx = format!("seed={seed} tile={t} oracle");
+            assert_close(&oracle[slots[t]], &expect, 1e-12, &ctx);
         }
     }
 }

@@ -19,7 +19,8 @@ fn covariance_2d_factor_solve_roundtrip() {
     let pts = grid(n, 2);
     let c = kdtree_order(&pts, 64);
     let cov = ExpCovariance::paper_default(pts.permuted(&c.perm));
-    let tlr = build_tlr(&cov, &c.offsets, &BuildOpts { eps: 1e-8, method: Compression::Ara { bs: 8 }, seed: 1 });
+    let opts = BuildOpts { eps: 1e-8, method: Compression::Ara { bs: 8 }, seed: 1 };
+    let tlr = build_tlr(&cov, &c.offsets, &opts);
     let dense = cov.dense();
 
     let f = cholesky(tlr.clone(), &FactorOpts { eps: 1e-8, bs: 8, ..Default::default() }).unwrap();
@@ -43,7 +44,8 @@ fn covariance_3d_ball_with_pivoting() {
     let pts = random_ball(n, 3, 7);
     let c = kdtree_order(&pts, 64);
     let cov = ExpCovariance::paper_default(pts.permuted(&c.perm));
-    let tlr = build_tlr(&cov, &c.offsets, &BuildOpts { eps: 1e-7, method: Compression::Ara { bs: 8 }, seed: 4 });
+    let opts = BuildOpts { eps: 1e-7, method: Compression::Ara { bs: 8 }, seed: 4 };
+    let tlr = build_tlr(&cov, &c.offsets, &opts);
     let dense = cov.dense();
 
     let f = cholesky(
@@ -78,7 +80,8 @@ fn fracdiff_preconditioned_cg_converges() {
     let pts = grid(n, 3);
     let c = kdtree_order(&pts, 64);
     let fd = FracDiffusion::new(pts.permuted(&c.perm), 0.5, 1.0);
-    let tlr = build_tlr(&fd, &c.offsets, &BuildOpts { eps: 1e-4, method: Compression::Ara { bs: 8 }, seed: 8 });
+    let opts = BuildOpts { eps: 1e-4, method: Compression::Ara { bs: 8 }, seed: 8 };
+    let tlr = build_tlr(&fd, &c.offsets, &opts);
 
     let eps = 1e-4;
     let f = cholesky(
@@ -90,7 +93,8 @@ fn fracdiff_preconditioned_cg_converges() {
     let mut rng = Rng::new(9);
     let b: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
     let pre = pcg(&TlrOp(&tlr), &|r| chol_solve(&f, r), &b, 1e-8, 300);
-    assert!(pre.converged, "PCG stalled: {} iters, residual {}", pre.iters, pre.history.last().unwrap());
+    let resid = pre.history.last().unwrap();
+    assert!(pre.converged, "PCG stalled: {} iters, residual {resid}", pre.iters);
 
     let plain = pcg(&TlrOp(&tlr), &|r| r.to_vec(), &b, 1e-8, 300);
     assert!(
@@ -112,7 +116,8 @@ fn ldlt_solve_roundtrip() {
     let pts = grid(n, 2);
     let c = kdtree_order(&pts, 64);
     let cov = ExpCovariance::paper_default(pts.permuted(&c.perm));
-    let tlr = build_tlr(&cov, &c.offsets, &BuildOpts { eps: 1e-9, method: Compression::Svd, seed: 11 });
+    let opts = BuildOpts { eps: 1e-9, method: Compression::Svd, seed: 11 };
+    let tlr = build_tlr(&cov, &c.offsets, &opts);
     let dense = cov.dense();
     let f = ldlt(tlr, &FactorOpts { eps: 1e-9, bs: 8, ..Default::default() }).unwrap();
     let mut rng = Rng::new(12);
@@ -131,7 +136,8 @@ fn schur_compensation_enables_loose_epsilon() {
     let pts = grid(n, 3);
     let c = kdtree_order(&pts, 64);
     let fd = FracDiffusion::new(pts.permuted(&c.perm), 0.5, 1.0);
-    let tlr = build_tlr(&fd, &c.offsets, &BuildOpts { eps: 1e-2, method: Compression::Ara { bs: 8 }, seed: 13 });
+    let opts = BuildOpts { eps: 1e-2, method: Compression::Ara { bs: 8 }, seed: 13 };
+    let tlr = build_tlr(&fd, &c.offsets, &opts);
     let comp = cholesky(
         tlr.clone(),
         &FactorOpts { eps: 1e-2, bs: 8, schur_comp: true, ..Default::default() },

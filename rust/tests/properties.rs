@@ -224,7 +224,8 @@ fn prop_ara_rank_and_error_bounds() {
         opts.trim = false;
         let r = ara(&s, &opts, &mut arng);
         assert!(r.lr.rank() <= m.min(n), "rank cap seed={seed}");
-        assert!(r.lr.rank() <= true_k + bs, "rank={} true={true_k} bs={bs} seed={seed}", r.lr.rank());
+        let got = r.lr.rank();
+        assert!(got <= true_k + bs, "rank={got} true={true_k} bs={bs} seed={seed}");
         let err = r.lr.to_dense().sub(&a).norm_fro();
         assert!(err < 1e-6, "err={err} seed={seed}");
         if r.lr.rank() > 0 {
@@ -442,7 +443,9 @@ fn prop_cholesky_rejects_indefinite_at_any_block() {
             Err(h2opus_tlr::factor::FactorError::NotSpd { block, .. }) => {
                 assert!(block <= target, "failure after the poisoned block (seed={seed})");
             }
-            other => panic!("expected NotSpd, got {:?}", other.map(|_| ()).map_err(|e| e.to_string())),
+            other => {
+                panic!("expected NotSpd, got {:?}", other.map(|_| ()).map_err(|e| e.to_string()))
+            }
         }
     }
 }
