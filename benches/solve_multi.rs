@@ -15,8 +15,10 @@ use h2opus_tlr::factor::FactorOpts;
 use h2opus_tlr::linalg::rng::Rng;
 use h2opus_tlr::runtime::json::{to_string, Json};
 use h2opus_tlr::serve::store::{load_chol, load_chol_mapped, save_chol};
+use h2opus_tlr::serve::{FactorStore, ServeOpts, ShardMap, ShardedService, SolveService};
 use h2opus_tlr::solve::{chol_solve, chol_solve_multi_with, solve_flop_estimate};
 use std::collections::BTreeMap;
+use std::time::Duration;
 
 fn env_usize(key: &str, default: usize) -> usize {
     std::env::var(key).ok().and_then(|s| s.parse().ok()).unwrap_or(default)
@@ -105,10 +107,79 @@ fn main() {
     load.insert("mmap_load_solve_s".to_string(), Json::Num(t_mmap));
     load.insert("speedup".to_string(), Json::Num(t_owned / t_mmap));
 
+    // -- sharded vs single service (EXPERIMENTS.md §Sharded serving):
+    //    the same mixed-key request stream through one SolveService and
+    //    through a two-worker ShardedService over the same store. Keys
+    //    7 and 9 are pinned to different owners under an 8-shard
+    //    two-worker map (see serve::shard's unit tests), so the sharded
+    //    run exercises both workers. On a single box this measures the
+    //    routing overhead plus whatever parallelism two workers buy;
+    //    the cross-host win is capacity (per-worker LRU residency).
+    let sdir = std::env::temp_dir().join(format!("h2opus_bench_shard_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&sdir);
+    let store = FactorStore::open(&sdir).expect("bench shard store");
+    let (key_a, key_b) = (7u64, 9u64);
+    store.save_chol(key_a, &f, "bench key A").expect("save A");
+    store.save_chol(key_b, &f, "bench key B").expect("save B");
+    let requests = env_usize("H2OPUS_BENCH_REQUESTS", 256);
+    let opts = ServeOpts {
+        max_panel: 16,
+        flush_deadline: Duration::from_millis(2),
+        ..Default::default()
+    };
+    // Wait-inclusive wall time: submit the whole mixed-key stream, then
+    // drain every ticket.
+    fn timed_stream<F>(requests: usize, n: usize, key_a: u64, key_b: u64, submit: F) -> f64
+    where
+        F: Fn(u64, Vec<f64>) -> h2opus_tlr::serve::Ticket,
+    {
+        let mut rng = Rng::new(99);
+        let rhs: Vec<Vec<f64>> =
+            (0..requests).map(|_| (0..n).map(|_| rng.normal()).collect()).collect();
+        let t0 = std::time::Instant::now();
+        let tickets: Vec<_> = rhs
+            .into_iter()
+            .enumerate()
+            .map(|(i, b)| submit(if i % 2 == 0 { key_a } else { key_b }, b))
+            .collect();
+        let mut x0 = 0.0;
+        for t in tickets {
+            x0 += t.wait().expect("answer").x[0];
+        }
+        std::hint::black_box(x0);
+        t0.elapsed().as_secs_f64()
+    }
+    let single = SolveService::start(FactorStore::open(&sdir).unwrap(), opts.clone());
+    let t_single =
+        timed_stream(requests, n, key_a, key_b, |k, b| single.submit(k, b).expect("admit"));
+    let map = ShardMap::new(8, vec!["w0".to_string(), "w1".to_string()]);
+    let sharded = ShardedService::start_with_map(&FactorStore::open(&sdir).unwrap(), opts, map)
+        .expect("sharded service");
+    let t_sharded =
+        timed_stream(requests, n, key_a, key_b, |k, b| sharded.submit(k, b).expect("admit"));
+    drop(single);
+    drop(sharded);
+    let _ = std::fs::remove_dir_all(&sdir);
+    let single_rps = requests as f64 / t_single;
+    let sharded_rps = requests as f64 / t_sharded;
+    println!(
+        "sharded serving ({requests} requests, 2 keys): single {single_rps:.1} req/s, \
+         2-shard {sharded_rps:.1} req/s ({:.2}x)",
+        sharded_rps / single_rps
+    );
+    let mut shard_obj = BTreeMap::new();
+    shard_obj.insert("requests".to_string(), Json::Num(requests as f64));
+    shard_obj.insert("keys".to_string(), Json::Num(2.0));
+    shard_obj.insert("workers".to_string(), Json::Num(2.0));
+    shard_obj.insert("single_rps".to_string(), Json::Num(single_rps));
+    shard_obj.insert("sharded_rps".to_string(), Json::Num(sharded_rps));
+    shard_obj.insert("speedup".to_string(), Json::Num(sharded_rps / single_rps));
+
     let mut doc = BTreeMap::new();
     doc.insert("bench".to_string(), Json::Str("solve_multi".to_string()));
     doc.insert("status".to_string(), Json::Str("measured".to_string()));
     doc.insert("load".to_string(), Json::Obj(load));
+    doc.insert("sharded".to_string(), Json::Obj(shard_obj));
     doc.insert(
         "problem".to_string(),
         Json::Str(format!("cov2d N={n} m={m} eps=1e-6 seed=37")),

@@ -19,7 +19,9 @@ use h2opus_tlr::batch::NativeBatch;
 use h2opus_tlr::config::{FactorKind, RunConfig};
 use h2opus_tlr::factor::{cholesky, ldlt};
 use h2opus_tlr::linalg::rng::Rng;
-use h2opus_tlr::serve::{FactorStore, ServeError, ServeOpts, SolveService, StoredFactor};
+use h2opus_tlr::serve::{
+    FactorStore, ServeError, ServeOpts, ShardedService, SolveService, StoredFactor,
+};
 use h2opus_tlr::solve::{chol_solve_multi_with, ldl_solve_multi_with, solve_flop_estimate};
 use h2opus_tlr::Matrix;
 use std::time::{Duration, Instant};
@@ -37,6 +39,8 @@ SERVE OPTIONS:
     --deadline-ms <D>   service flush deadline in ms    (default 2)
     --backlog <B>       per-key admission limit         (default 1024)
     --no-mmap           load factors by owned decode instead of mmap
+    --shards <N>        sharded mode: N workers + routing demo (default 1)
+    --keys <K>          distinct factor keys in sharded mode (default 4)
 
 All problem/factorization options of `h2opus-tlr` apply (e.g.
 --problem cov2d --n 1024 --m 128 --eps 1e-6 --bs 8 --ldlt). See
@@ -51,6 +55,8 @@ struct ServeArgs {
     deadline_ms: u64,
     backlog: usize,
     no_mmap: bool,
+    shards: usize,
+    keys: usize,
 }
 
 impl Default for ServeArgs {
@@ -63,6 +69,8 @@ impl Default for ServeArgs {
             deadline_ms: 2,
             backlog: 1024,
             no_mmap: false,
+            shards: 1,
+            keys: 4,
         }
     }
 }
@@ -120,6 +128,14 @@ fn parse_args(args: &[String]) -> (ServeArgs, Vec<String>) {
                 sa.no_mmap = true;
                 i += 1;
             }
+            "--shards" => {
+                sa.shards = take_val(args, i).parse().unwrap_or_else(|_| fail("bad --shards"));
+                i += 2;
+            }
+            "--keys" => {
+                sa.keys = take_val(args, i).parse().unwrap_or_else(|_| fail("bad --keys"));
+                i += 2;
+            }
             _ => {
                 rest.push(args[i].clone());
                 i += 1;
@@ -128,6 +144,9 @@ fn parse_args(args: &[String]) -> (ServeArgs, Vec<String>) {
     }
     if sa.requests == 0 || sa.panel == 0 || sa.widths.is_empty() || sa.backlog == 0 {
         fail("--requests, --panel, --backlog and --widths must be positive");
+    }
+    if sa.shards == 0 || sa.keys == 0 {
+        fail("--shards and --keys must be positive");
     }
     (sa, rest)
 }
@@ -316,6 +335,124 @@ fn service_run(store_dir: &str, key: u64, n: usize, sa: &ServeArgs, seed: u64) {
     );
 }
 
+/// Sharded routing demo: `--shards N` workers over one store, a
+/// mixed-key request stream fanned out by `factor_key` ownership, and a
+/// live rebalance. The base key serves from disk; the other demo keys
+/// alias the same factor in memory (routing is what is on trial here,
+/// the solves are real either way).
+fn sharded_run(store_dir: &str, key: u64, factor: StoredFactor, n: usize, sa: &ServeArgs) {
+    let store = FactorStore::open(store_dir).unwrap_or_else(|e| {
+        eprintln!("store: {e}");
+        std::process::exit(1);
+    });
+    let n_shards = 64;
+    let service = ShardedService::start(
+        &store,
+        ServeOpts {
+            max_panel: sa.panel,
+            flush_deadline: Duration::from_millis(sa.deadline_ms),
+            cache_capacity: 4,
+            max_backlog: sa.backlog,
+            mmap: !sa.no_mmap,
+            ..Default::default()
+        },
+        sa.shards,
+        n_shards,
+    )
+    .unwrap_or_else(|e| {
+        eprintln!("sharded service: {e}");
+        std::process::exit(1);
+    });
+    let map = service.map();
+    print!("shard map  : {n_shards} shards over {} workers (", sa.shards);
+    for (i, w) in map.workers().iter().enumerate() {
+        let sep = if i == 0 { "" } else { " " };
+        print!("{sep}{w}:{}", map.shards_owned_by(w).len());
+    }
+    println!(")");
+    // Demo keys: the persisted factor plus in-memory aliases.
+    let keys: Vec<u64> = (0..sa.keys as u64)
+        .map(|i| key.wrapping_add(i.wrapping_mul(0x9E3779B97F4A7C15)))
+        .collect();
+    for &k in keys.iter().skip(1) {
+        service.register(k, factor.clone());
+    }
+    for &k in &keys {
+        println!("routing    : key {k:016x} -> shard {:>2} -> {}", map.shard_of(k), map.owner_of(k));
+    }
+    let mut rng = Rng::new(0x5AD5);
+    let t0 = Instant::now();
+    let reqs: Vec<(u64, Vec<f64>)> = (0..sa.requests)
+        .map(|r| (keys[r % keys.len()], (0..n).map(|_| rng.normal()).collect()))
+        .collect();
+    let tickets = service.submit_batch(reqs);
+    let mut served = 0usize;
+    for t in tickets {
+        match t.and_then(|t| t.wait()) {
+            Ok(_) => served += 1,
+            Err(ServeError::Overloaded { .. }) => {}
+            Err(e) => {
+                eprintln!("request failed: {e}");
+                std::process::exit(1);
+            }
+        }
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    println!(
+        "sharded run: {served}/{} requests over {} keys, {:.1} requests/s",
+        sa.requests,
+        keys.len(),
+        served as f64 / wall
+    );
+    for (worker, stats) in service.stats_per_shard() {
+        println!(
+            "  shard {worker:<4}: {:>5} requests, {:>4} panels, mean width {:.2}",
+            stats.requests,
+            stats.batches,
+            stats.mean_panel_width()
+        );
+    }
+    let total = service.stats();
+    println!(
+        "  aggregate : {} requests, {} panels, widest {}",
+        total.requests, total.batches, total.max_panel
+    );
+    let prof = h2opus_tlr::profile::shard_snapshot();
+    println!(
+        "  profile   : {} routed, imbalance {:.2} (max/mean over active workers)",
+        prof.total_routed(),
+        prof.imbalance()
+    );
+    // Live rebalance: grow the fleet by one worker, then shrink back.
+    // Only the remapped shards move; the departing worker drains first.
+    let grown = format!("w{}", sa.shards);
+    let moved = service.add_worker(grown.as_str()).unwrap_or_else(|e| {
+        eprintln!("rebalance: {e}");
+        std::process::exit(1);
+    });
+    let after: Vec<_> = keys.iter().map(|&k| service.map().owner_of(k).to_string()).collect();
+    println!(
+        "rebalance  : +{grown} moved {}/{n_shards} shards; demo keys now on {}",
+        moved.len(),
+        after.join(",")
+    );
+    let t2: Vec<_> = keys
+        .iter()
+        .map(|&k| service.submit(k, (0..n).map(|_| rng.normal()).collect()))
+        .collect();
+    for t in t2 {
+        let _ = t.and_then(|t| t.wait()).unwrap_or_else(|e| {
+            eprintln!("post-rebalance request failed: {e}");
+            std::process::exit(1);
+        });
+    }
+    let back = service.remove_worker(&grown).unwrap_or_else(|e| {
+        eprintln!("rebalance: {e}");
+        std::process::exit(1);
+    });
+    println!("rebalance  : -{grown} drained and returned {} shards", back.len());
+}
+
 fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
     let (sa, rest) = parse_args(&args);
@@ -335,7 +472,13 @@ fn main() {
     let factor = obtain_factor(&cfg, &store, key, !sa.no_mmap);
     let n = factor.n();
     width_sweep(&factor, &sa.widths, cfg.seed);
-    drop(factor); // the service re-loads from disk — persistence, proven
-    service_run(&sa.store, key, n, &sa, cfg.seed);
+    if sa.shards > 1 {
+        // Routing demo across workers; the factor solves via its store
+        // key on the owning shard (aliases register in memory).
+        sharded_run(&sa.store, key, factor, n, &sa);
+    } else {
+        drop(factor); // the service re-loads from disk — persistence, proven
+        service_run(&sa.store, key, n, &sa, cfg.seed);
+    }
     println!("serve done");
 }

@@ -387,6 +387,13 @@ impl RunConfig {
     /// (backend, artifact paths, batch capacity — scheduling never
     /// changes numerics, see the crate docs). Versioned so a future
     /// format change cannot silently collide with old stores.
+    ///
+    /// This key is also the **sharded-serving routing input**
+    /// ([`crate::serve::ShardMap::shard_of`]): every process in a fleet
+    /// must derive the same key from the same config, so the derivation
+    /// is pinned by `factor_key_is_stable_across_releases` below —
+    /// changing this format string migrates every stored factor AND
+    /// remaps every shard. Bump the `fk` version prefix if you must.
     pub fn factor_key(&self) -> u64 {
         let desc = format!(
             "fk1|{}|n={}|m={}|eps={:e}|bs={}|kind={:?}|pivot={:?}|schur={}|modchol={}|shift={:e}|seed={}|fs={:e}|fa={:e}|fc={:e}|cl={:e}",
@@ -519,6 +526,15 @@ mod tests {
         assert_ne!(base.factor_key(), diff_n.factor_key());
         let diff_kind = RunConfig { kind: FactorKind::Ldlt, ..base.clone() };
         assert_ne!(base.factor_key(), diff_kind.factor_key());
+    }
+
+    #[test]
+    fn factor_key_is_stable_across_releases() {
+        // Pinned against an independent FNV-1a implementation: stored
+        // factors and shard routes survive recompilation and stay
+        // identical across every process in a fleet. If this assertion
+        // fires, the key format changed — see the factor_key docs.
+        assert_eq!(RunConfig::default().factor_key(), 0x6d55f5cdf5d7e483);
     }
 
     #[test]

@@ -65,6 +65,20 @@ static SERVE_BATCHES: AtomicU64 = AtomicU64::new(0);
 static SERVE_NANOS: AtomicU64 = AtomicU64::new(0);
 static SERVE_REJECTED: AtomicU64 = AtomicU64::new(0);
 
+/// Per-worker routing slots for the sharded service. The first
+/// `SHARD_SLOTS - 1` workers are counted individually; any beyond that
+/// pool into the last slot (fleets that big should be reading their
+/// per-worker [`crate::serve::service::ServiceStats`] instead).
+pub const SHARD_SLOTS: usize = 32;
+
+// Shard-routing counters (crate::serve::shard::ShardedService reports
+// every routed request and every rebalance): requests per worker slot,
+// rebalance events, and total shards moved by them. The per-slot spread
+// is the routing-side companion of per-worker ServiceStats.
+static SHARD_ROUTED: [AtomicU64; SHARD_SLOTS] = [const { AtomicU64::new(0) }; SHARD_SLOTS];
+static SHARD_REBALANCES: AtomicU64 = AtomicU64::new(0);
+static SHARD_MOVED: AtomicU64 = AtomicU64::new(0);
+
 /// Reset all counters (call before a profiled run).
 pub fn reset() {
     for i in 0..N_PHASES {
@@ -78,6 +92,75 @@ pub fn reset() {
     SERVE_BATCHES.store(0, Ordering::Relaxed);
     SERVE_NANOS.store(0, Ordering::Relaxed);
     SERVE_REJECTED.store(0, Ordering::Relaxed);
+    for slot in &SHARD_ROUTED {
+        slot.store(0, Ordering::Relaxed);
+    }
+    SHARD_REBALANCES.store(0, Ordering::Relaxed);
+    SHARD_MOVED.store(0, Ordering::Relaxed);
+}
+
+/// Record one request routed to the worker at `worker_index` by the
+/// sharded service (indices past the slot table pool into the last
+/// slot).
+pub fn add_shard_routed(worker_index: usize) {
+    SHARD_ROUTED[worker_index.min(SHARD_SLOTS - 1)].fetch_add(1, Ordering::Relaxed);
+}
+
+/// Record one shard-map rebalance that moved `moved_shards` shards.
+pub fn add_shard_rebalance(moved_shards: u64) {
+    SHARD_REBALANCES.fetch_add(1, Ordering::Relaxed);
+    SHARD_MOVED.fetch_add(moved_shards, Ordering::Relaxed);
+}
+
+/// Snapshot of the shard-routing counters.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ShardReport {
+    /// Requests routed per worker slot (see [`SHARD_SLOTS`]).
+    pub routed: [u64; SHARD_SLOTS],
+    /// Rebalance events (worker added or removed).
+    pub rebalances: u64,
+    /// Total shards moved across all rebalances.
+    pub moved_shards: u64,
+}
+
+impl ShardReport {
+    /// Difference vs an earlier snapshot.
+    pub fn since(&self, earlier: &ShardReport) -> ShardReport {
+        let mut r = ShardReport::default();
+        for i in 0..SHARD_SLOTS {
+            r.routed[i] = self.routed[i] - earlier.routed[i];
+        }
+        r.rebalances = self.rebalances - earlier.rebalances;
+        r.moved_shards = self.moved_shards - earlier.moved_shards;
+        r
+    }
+
+    /// Total requests routed through sharded front-ends.
+    pub fn total_routed(&self) -> u64 {
+        self.routed.iter().sum()
+    }
+
+    /// Max-over-mean load of the slots that saw traffic — 1.0 is a
+    /// perfectly even spread; large values mean one worker is hot.
+    pub fn imbalance(&self) -> f64 {
+        let active: Vec<u64> = self.routed.iter().copied().filter(|&c| c > 0).collect();
+        if active.is_empty() {
+            return 0.0;
+        }
+        let max = *active.iter().max().unwrap() as f64;
+        let mean = active.iter().sum::<u64>() as f64 / active.len() as f64;
+        max / mean
+    }
+}
+
+pub fn shard_snapshot() -> ShardReport {
+    let mut r = ShardReport::default();
+    for i in 0..SHARD_SLOTS {
+        r.routed[i] = SHARD_ROUTED[i].load(Ordering::Relaxed);
+    }
+    r.rebalances = SHARD_REBALANCES.load(Ordering::Relaxed);
+    r.moved_shards = SHARD_MOVED.load(Ordering::Relaxed);
+    r
 }
 
 /// Record `count` submissions rejected by serve admission control.
@@ -327,6 +410,25 @@ mod tests {
         assert!(after.batches >= 2);
         assert!(after.nanos >= 1500);
         assert!(after.batching_efficiency() > 1.0);
+    }
+
+    #[test]
+    fn shard_counters_accumulate() {
+        let before = shard_snapshot();
+        add_shard_routed(0);
+        add_shard_routed(1);
+        add_shard_routed(1);
+        add_shard_routed(SHARD_SLOTS + 7); // pools into the last slot
+        add_shard_rebalance(12);
+        let after = shard_snapshot().since(&before);
+        // Other tests may route concurrently; assert lower bounds.
+        assert!(after.routed[0] >= 1);
+        assert!(after.routed[1] >= 2);
+        assert!(after.routed[SHARD_SLOTS - 1] >= 1);
+        assert!(after.total_routed() >= 4);
+        assert!(after.rebalances >= 1);
+        assert!(after.moved_shards >= 12);
+        assert!(after.imbalance() >= 1.0);
     }
 
     #[test]

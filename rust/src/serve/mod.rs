@@ -26,6 +26,24 @@
 //!   into panels under a flush deadline, executes each panel as one
 //!   blocked solve on a long-lived executor, and reports latency,
 //!   batching and fairness counters into [`crate::profile`].
+//! * **Sharding** — [`shard`]: a [`shard::ShardMap`] assigns every
+//!   factor key to one worker by rendezvous hashing over virtual
+//!   shards, and [`shard::ShardedService`] fronts one `SolveService`
+//!   per worker, routing each request to its key's owner.
+//!
+//! ## The shard-ownership contract
+//!
+//! Routing is a pure function of `RunConfig::factor_key()`: the key
+//! hashes to a virtual shard, the shard's rendezvous winner owns it,
+//! and two processes holding equal maps (same shard count and worker-id
+//! set — [`shard::ShardMap::encode`] is the fleet-shared form) route
+//! identically. A key lives on exactly one worker at a time, so that
+//! worker's LRU holds the mapping once and its DRR scheduler sees the
+//! key's full backlog — the fairness and admission bounds above hold
+//! per shard. Rebalancing (add/remove worker) remaps only the moved
+//! shards; a removed worker drains its queue before exiting, so
+//! in-flight tickets resolve on the old owner. The full contract is
+//! spelled out in the [`shard`] module docs.
 //!
 //! ## The borrow-or-own storage contract
 //!
@@ -84,9 +102,11 @@
 
 pub mod mmap;
 pub mod service;
+pub mod shard;
 pub mod store;
 
 pub use service::{
     ServeError, ServeOpts, ServedBatch, ServiceStats, SolveResponse, SolveService, Ticket,
 };
+pub use shard::{ShardError, ShardMap, ShardedService};
 pub use store::{FactorStore, Mapped, StoreError, StoredFactor};

@@ -199,6 +199,35 @@ impl ServiceStats {
             self.panel_cols as f64 / self.batches as f64
         }
     }
+
+    /// Combine two snapshots (sharded serving aggregates per-worker
+    /// stats this way: counters sum, the widest panel is the max).
+    pub fn merge(&self, other: &ServiceStats) -> ServiceStats {
+        ServiceStats {
+            requests: self.requests + other.requests,
+            batches: self.batches + other.batches,
+            panel_cols: self.panel_cols + other.panel_cols,
+            max_panel: self.max_panel.max(other.max_panel),
+            solve_nanos: self.solve_nanos + other.solve_nanos,
+            rejected: self.rejected + other.rejected,
+        }
+    }
+
+    /// Counter growth since an `earlier` snapshot of the same service
+    /// (the widest panel carries over unchanged — merging a maximum
+    /// twice is idempotent). The sharded front-end uses this to fold a
+    /// draining worker's counters into its aggregate in two steps
+    /// without double counting.
+    pub fn since(&self, earlier: &ServiceStats) -> ServiceStats {
+        ServiceStats {
+            requests: self.requests - earlier.requests,
+            batches: self.batches - earlier.batches,
+            panel_cols: self.panel_cols - earlier.panel_cols,
+            max_panel: self.max_panel,
+            solve_nanos: self.solve_nanos - earlier.solve_nanos,
+            rejected: self.rejected - earlier.rejected,
+        }
+    }
 }
 
 /// The kind of work a request asks for.
@@ -260,6 +289,10 @@ struct QueueState {
     deficit: HashMap<u64, usize>,
     /// Total queued requests across keys.
     total: usize,
+    /// Key of the batch the worker popped and is currently executing
+    /// (None while idle). Lets [`SolveService::busy_with`] see work
+    /// that has left the queue but not yet resolved its factor.
+    executing: Option<u64>,
     shutdown: bool,
 }
 
@@ -330,6 +363,13 @@ pub struct SolveService {
 impl SolveService {
     /// Start a service over `store` with the given batching options.
     pub fn start(store: FactorStore, opts: ServeOpts) -> SolveService {
+        Self::start_named(store, opts, "")
+    }
+
+    /// [`SolveService::start`] with a worker-thread name suffix — the
+    /// sharded front-end ([`crate::serve::shard::ShardedService`]) names
+    /// each shard's worker after its id so thread dumps attribute load.
+    pub fn start_named(store: FactorStore, opts: ServeOpts, name: &str) -> SolveService {
         assert!(opts.max_panel > 0, "max_panel must be positive");
         assert!(opts.max_backlog > 0, "max_backlog must be positive");
         let inner = Arc::new(Inner {
@@ -342,8 +382,13 @@ impl SolveService {
             served: Mutex::new(Vec::new()),
         });
         let worker_inner = inner.clone();
+        let thread_name = if name.is_empty() {
+            "h2opus-serve".to_string()
+        } else {
+            format!("h2opus-serve-{name}")
+        };
         let worker = std::thread::Builder::new()
-            .name("h2opus-serve".into())
+            .name(thread_name)
             .spawn(move || worker_loop(&worker_inner, &store))
             .expect("spawn serve worker");
         SolveService { inner, worker: Some(worker) }
@@ -353,14 +398,50 @@ impl SolveService {
     /// that key). Useful right after factoring, before or instead of
     /// persisting.
     pub fn register(&self, key: u64, f: StoredFactor) {
-        self.inner.registry.lock().unwrap().insert(key, Arc::new(f));
+        self.register_shared(key, Arc::new(f));
+    }
+
+    /// [`SolveService::register`] without a deep copy: the caller keeps
+    /// (or shares) the `Arc`. The sharded front-end registers this way
+    /// so a factor mirrored for rebalancing is stored once, not once
+    /// per worker it ever lived on.
+    pub fn register_shared(&self, key: u64, f: Arc<StoredFactor>) {
+        self.inner.registry.lock().unwrap().insert(key, f);
     }
 
     /// Register the TLR operator matrix under `key`, enabling
     /// [`SolveService::submit_pcg`] for keys whose operator is not in
     /// the store.
     pub fn register_matrix(&self, key: u64, a: TlrMatrix) {
-        self.inner.registry_mat.lock().unwrap().insert(key, Arc::new(a));
+        self.register_matrix_shared(key, Arc::new(a));
+    }
+
+    /// [`SolveService::register_matrix`] without a deep copy.
+    pub fn register_matrix_shared(&self, key: u64, a: Arc<TlrMatrix>) {
+        self.inner.registry_mat.lock().unwrap().insert(key, a);
+    }
+
+    /// Drop any in-memory registrations under `key` (factor and
+    /// operator). Store-backed resolution is unaffected; the worker's
+    /// LRU entry, if any, ages out on its own. The sharded front-end
+    /// calls this when a rebalance moves a key away from this worker
+    /// and [`SolveService::busy_with`] reports no in-flight work that
+    /// still needs the registration.
+    pub fn unregister(&self, key: u64) {
+        self.inner.registry.lock().unwrap().remove(&key);
+        self.inner.registry_mat.lock().unwrap().remove(&key);
+    }
+
+    /// Does this worker still hold work under `key` — queued requests,
+    /// or a popped batch whose factor resolution may not have happened
+    /// yet? While the answer is `true`, unregistering the key could
+    /// fail those requests; while `false` *and no new submissions for
+    /// the key can arrive* (the sharded front-end guarantees this by
+    /// re-routing under its own lock before asking), unregistering is
+    /// safe.
+    pub fn busy_with(&self, key: u64) -> bool {
+        let q = self.inner.queue.lock().unwrap();
+        q.executing == Some(key) || q.queues.get(&key).is_some_and(|v| !v.is_empty())
     }
 
     /// Submit a single-RHS direct solve against the factor under `key`.
@@ -435,8 +516,19 @@ impl SolveService {
     }
 }
 
-impl Drop for SolveService {
-    fn drop(&mut self) {
+impl SolveService {
+    /// Shut down explicitly: stop accepting, drain the queue (every
+    /// already-queued request is still answered), join the worker, and
+    /// return the final counters. Dropping the service does the same
+    /// minus the stats — the sharded front-end uses this form so a
+    /// removed worker's counts can fold into the fleet aggregate
+    /// instead of vanishing.
+    pub fn shutdown(mut self) -> ServiceStats {
+        self.shutdown_impl();
+        self.stats()
+    }
+
+    fn shutdown_impl(&mut self) {
         {
             let mut q = self.inner.queue.lock().unwrap();
             q.shutdown = true;
@@ -445,6 +537,12 @@ impl Drop for SolveService {
         if let Some(w) = self.worker.take() {
             let _ = w.join();
         }
+    }
+}
+
+impl Drop for SolveService {
+    fn drop(&mut self) {
+        self.shutdown_impl();
     }
 }
 
@@ -545,6 +643,7 @@ impl Drop for DrainOnExit<'_> {
         q.order.clear();
         q.deficit.clear();
         q.total = 0;
+        q.executing = None;
     }
 }
 
@@ -642,12 +741,20 @@ fn worker_loop(inner: &Inner, store: &FactorStore) {
                 q.order.pop_front();
                 q.order.push_back(key);
             }
+            // Visible to `busy_with` until the batch finishes: the
+            // requests have left the queue but still need the key's
+            // registration for factor resolution.
+            q.executing = Some(key);
             batch
         };
         if batch.is_empty() {
+            // Unreachable (the front request is popped unconditionally),
+            // but must not leak the executing marker if it ever fires.
+            inner.queue.lock().unwrap().executing = None;
             continue;
         }
         run_batch(batch, inner, store, &mut caches, &exec);
+        inner.queue.lock().unwrap().executing = None;
     }
 }
 
@@ -823,6 +930,36 @@ mod tests {
         assert!(c.get(2).is_none());
         assert!(c.get(1).is_some());
         assert!(c.get(3).is_some());
+    }
+
+    #[test]
+    fn busy_with_tracks_queued_and_executing_work() {
+        use crate::factor::{CholFactor, FactorStats};
+        use crate::tlr::tile::Tile;
+        let n = 6;
+        let l = TlrMatrix::from_tiles(vec![0, n], vec![Tile::Dense(Matrix::identity(n))]);
+        let f = CholFactor { l, stats: FactorStats { perm: vec![0], ..Default::default() } };
+        let dir = std::env::temp_dir().join(format!("h2opus_busy_{}", std::process::id()));
+        let service = SolveService::start(
+            FactorStore::open(dir.clone()).unwrap(),
+            ServeOpts { flush_deadline: Duration::from_millis(400), ..Default::default() },
+        );
+        assert!(!service.busy_with(9));
+        service.register(9, StoredFactor::Chol(f));
+        let t = service.submit(9, vec![1.0; n]).unwrap();
+        // The sub-panel hold keeps the request in flight for the full
+        // flush deadline, so this observation is deterministic.
+        assert!(service.busy_with(9), "queued request must count as busy");
+        assert!(!service.busy_with(10), "other keys are not busy");
+        let resp = t.wait().unwrap();
+        assert_eq!(resp.x, vec![1.0; n], "identity factor returns the rhs");
+        // The executing marker clears shortly after the response.
+        let t0 = Instant::now();
+        while service.busy_with(9) {
+            assert!(t0.elapsed() < Duration::from_secs(2), "busy_with must clear after drain");
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

@@ -1,0 +1,755 @@
+//! Sharded factor serving: a [`ShardMap`] that assigns factor keys to
+//! workers by rendezvous hashing over virtual shards, and a
+//! [`ShardedService`] front-end that owns one [`SolveService`] per
+//! worker and routes every request to the shard that owns its key.
+//!
+//! ## Why shards
+//!
+//! The serving regime is factor-once / solve-many: a fleet holds many
+//! factors (one per `RunConfig::factor_key()`), each potentially
+//! hundreds of MB of mapped tiles, and a single worker's LRU thrashes
+//! long before its CPU saturates. Partitioning *ownership* of keys
+//! across workers — the same move the H2/GOFMM serving literature makes
+//! for hierarchical factors — keeps every factor resident on exactly
+//! one worker, so cache capacity scales with the fleet while the
+//! per-key DRR fairness and admission bounds of
+//! [`crate::serve::service`] keep holding *within* each shard.
+//!
+//! ## The shard-ownership contract
+//!
+//! 1. **Routing is a pure function of the key.** `shard_of(key)` hashes
+//!    the key (FNV-1a over its little-endian bytes) into one of
+//!    `n_shards` virtual shards; the shard's owner is the worker with
+//!    the highest rendezvous score (an avalanche-finalized FNV-1a of
+//!    `"rdzv|" + shard + "|" + worker_id`). No state, no coordination:
+//!    two processes holding
+//!    equal maps (same `n_shards`, same worker-id set — insertion order
+//!    does not matter) route every key identically, which is what lets
+//!    a fleet share one serialized map ([`ShardMap::encode`]).
+//! 2. **A key is served by exactly one worker at a time.** All
+//!    requests, registrations and cache entries for a key live on its
+//!    owning shard's worker, so the worker's LRU holds each mapping
+//!    once and its DRR queue sees the key's whole backlog.
+//! 3. **Rebalancing moves only the remapped shards.** Rendezvous
+//!    hashing gives minimal disruption: adding a worker moves exactly
+//!    the shards the new worker now wins; removing one moves exactly
+//!    the shards it owned. Everything else keeps its owner, cache heat
+//!    and queue position.
+//! 4. **In-flight work drains on the old owner.** Removing a worker
+//!    drops its [`SolveService`], whose shutdown path serves every
+//!    already-queued request before the thread exits — tickets issued
+//!    before the rebalance resolve normally.
+//!
+//! ## Example
+//!
+//! ```no_run
+//! use h2opus_tlr::serve::{FactorStore, ServeOpts, ShardedService};
+//!
+//! # fn main() -> Result<(), Box<dyn std::error::Error>> {
+//! let store = FactorStore::open("target/factor-store")?;
+//! let svc = ShardedService::start(&store, ServeOpts::default(), 4, 64)?;
+//! let ticket = svc.submit(0x42, vec![1.0; 1024])?;
+//! let resp = ticket.wait()?;
+//! println!("answered by shard-owned worker, width {}", resp.panel_width);
+//! for (worker, stats) in svc.stats_per_shard() {
+//!     println!("{worker}: {} requests, {} panels", stats.requests, stats.batches);
+//! }
+//! # Ok(())
+//! # }
+//! ```
+
+use crate::profile;
+use crate::serve::service::{
+    ServeError, ServeOpts, ServedBatch, ServiceStats, SolveService, Ticket,
+};
+use crate::serve::store::{fnv1a, fnv1a_extend, FactorStore, StoreError, StoredFactor};
+use crate::tlr::matrix::TlrMatrix;
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex, RwLock};
+
+/// Upper bound on virtual shard counts. Far above any sensible fleet
+/// (shards only need to outnumber workers by enough for smooth
+/// rebalancing) and low enough that a malformed fleet-shared map can
+/// never drive an effectively unbounded owner-table computation.
+pub const MAX_SHARDS: usize = 1 << 20;
+
+/// Shard-map failure: malformed serialized map or an invalid fleet
+/// mutation.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ShardError {
+    /// [`ShardMap::decode`] could not parse the text, or a worker id is
+    /// malformed (empty / contains whitespace).
+    Parse(String),
+    /// The named worker is not in the map.
+    UnknownWorker(String),
+    /// The worker id is already in the map.
+    DuplicateWorker(String),
+    /// Refused to remove the last worker (keys would have no owner).
+    LastWorker,
+    /// A fleet mutation failed on the factor-store side (e.g. the store
+    /// root could not be reopened for a new worker).
+    Store(String),
+}
+
+impl std::fmt::Display for ShardError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ShardError::Parse(m) => write!(f, "shard map parse error: {m}"),
+            ShardError::UnknownWorker(w) => write!(f, "no worker '{w}' in the shard map"),
+            ShardError::DuplicateWorker(w) => write!(f, "worker '{w}' already in the shard map"),
+            ShardError::LastWorker => write!(f, "cannot remove the last worker"),
+            ShardError::Store(m) => write!(f, "shard store error: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for ShardError {}
+
+/// SplitMix64 finalizer. FNV-1a alone is too correlated across inputs
+/// that differ in a byte or two (worker ids like `w0`/`w1`): comparing
+/// raw FNV scores biases rendezvous ownership toward one worker by
+/// integer factors (observed 512-vs-128 on 1024 shards over 4 ids).
+/// The avalanche pass decorrelates the comparisons; the spread test
+/// below pins the fix.
+fn mix64(mut x: u64) -> u64 {
+    x ^= x >> 30;
+    x = x.wrapping_mul(0xbf58476d1ce4e5b9);
+    x ^= x >> 27;
+    x = x.wrapping_mul(0x94d049bb133111eb);
+    x ^= x >> 31;
+    x
+}
+
+/// Rendezvous score of `worker` for `shard`: FNV-1a over a domain tag,
+/// the shard index and the worker id, finalized by [`mix64`]. Stable
+/// across processes and releases (the underlying hash is pinned by
+/// `fnv_is_stable` in `store::tests`, the owner tables by the tests
+/// below).
+fn rendezvous_score(shard: u64, worker: &str) -> u64 {
+    let h = fnv1a(b"rdzv|");
+    let h = fnv1a_extend(h, &shard.to_le_bytes());
+    let h = fnv1a_extend(h, b"|");
+    mix64(fnv1a_extend(h, worker.as_bytes()))
+}
+
+/// `N` virtual shards mapped onto a set of worker ids by rendezvous
+/// hashing. The owner table is *derived* from `(n_shards, workers)`, so
+/// serializing those two (see [`ShardMap::encode`]) is enough for every
+/// process in a fleet to compute identical routing.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ShardMap {
+    n_shards: usize,
+    workers: Vec<String>,
+    /// shard → index into `workers`.
+    owners: Vec<usize>,
+}
+
+impl ShardMap {
+    /// Build a map of `n_shards` virtual shards over `workers`.
+    /// Panics on zero or over-[`MAX_SHARDS`] shard counts, an empty
+    /// fleet, duplicate ids, or ids containing whitespace (they would
+    /// break the serialized form).
+    pub fn new(n_shards: usize, workers: Vec<String>) -> ShardMap {
+        assert!(n_shards > 0, "n_shards must be positive");
+        assert!(n_shards <= MAX_SHARDS, "n_shards {n_shards} exceeds MAX_SHARDS {MAX_SHARDS}");
+        assert!(!workers.is_empty(), "a shard map needs at least one worker");
+        for (i, w) in workers.iter().enumerate() {
+            assert!(
+                !w.is_empty() && !w.chars().any(char::is_whitespace),
+                "worker id {w:?} must be non-empty and whitespace-free"
+            );
+            assert!(!workers[..i].contains(w), "duplicate worker id {w:?}");
+        }
+        let owners = Self::compute_owners(n_shards, &workers);
+        ShardMap { n_shards, workers, owners }
+    }
+
+    /// Owner index per shard: argmax of the rendezvous score, ties (for
+    /// all practical purposes unreachable with a 64-bit hash) broken
+    /// toward the lexicographically smallest id so the result is
+    /// independent of worker insertion order.
+    fn compute_owners(n_shards: usize, workers: &[String]) -> Vec<usize> {
+        (0..n_shards as u64)
+            .map(|s| {
+                workers
+                    .iter()
+                    .enumerate()
+                    .max_by_key(|(_, w)| (rendezvous_score(s, w), std::cmp::Reverse(w.as_str())))
+                    .map(|(i, _)| i)
+                    .expect("workers is non-empty")
+            })
+            .collect()
+    }
+
+    /// The virtual shard owning `key` — a pure function of `(key,
+    /// n_shards)`: same key, same shard, in every process.
+    pub fn shard_of(&self, key: u64) -> usize {
+        (fnv1a(&key.to_le_bytes()) % self.n_shards as u64) as usize
+    }
+
+    /// The worker id owning `key`.
+    pub fn owner_of(&self, key: u64) -> &str {
+        self.owner_of_shard(self.shard_of(key))
+    }
+
+    /// The worker id owning virtual shard `shard`.
+    pub fn owner_of_shard(&self, shard: usize) -> &str {
+        &self.workers[self.owners[shard]]
+    }
+
+    pub fn n_shards(&self) -> usize {
+        self.n_shards
+    }
+
+    pub fn workers(&self) -> &[String] {
+        &self.workers
+    }
+
+    /// Shards owned by `worker`, in shard order.
+    pub fn shards_owned_by(&self, worker: &str) -> Vec<usize> {
+        (0..self.n_shards).filter(|&s| self.owner_of_shard(s) == worker).collect()
+    }
+
+    /// Add a worker; returns the shards that moved (all of them to the
+    /// new worker — the rendezvous minimal-disruption property, pinned
+    /// by `rebalance_moves_only_remapped_shards` below).
+    pub fn add_worker(&mut self, id: impl Into<String>) -> Result<Vec<usize>, ShardError> {
+        let id = id.into();
+        if id.is_empty() || id.chars().any(char::is_whitespace) {
+            return Err(ShardError::Parse(format!("bad worker id {id:?}")));
+        }
+        if self.workers.contains(&id) {
+            return Err(ShardError::DuplicateWorker(id));
+        }
+        let mut next = self.workers.clone();
+        next.push(id);
+        Ok(self.transition(next))
+    }
+
+    /// Remove a worker; returns the shards that moved (exactly the ones
+    /// it owned). Refuses to empty the fleet.
+    pub fn remove_worker(&mut self, id: &str) -> Result<Vec<usize>, ShardError> {
+        if !self.workers.iter().any(|w| w == id) {
+            return Err(ShardError::UnknownWorker(id.to_string()));
+        }
+        if self.workers.len() == 1 {
+            return Err(ShardError::LastWorker);
+        }
+        let next: Vec<String> = self.workers.iter().filter(|w| *w != id).cloned().collect();
+        Ok(self.transition(next))
+    }
+
+    /// Swap in a new worker set, returning the shards whose owner *id*
+    /// changed.
+    fn transition(&mut self, workers: Vec<String>) -> Vec<usize> {
+        let owners = Self::compute_owners(self.n_shards, &workers);
+        let moved = (0..self.n_shards)
+            .filter(|&s| self.workers[self.owners[s]] != workers[owners[s]])
+            .collect();
+        self.workers = workers;
+        self.owners = owners;
+        moved
+    }
+
+    /// Serialize to the fleet-shared text form:
+    ///
+    /// ```text
+    /// shardmap v1
+    /// shards <N>
+    /// worker <id>      (one line per worker)
+    /// ```
+    pub fn encode(&self) -> String {
+        let mut out = format!("shardmap v1\nshards {}\n", self.n_shards);
+        for w in &self.workers {
+            out.push_str("worker ");
+            out.push_str(w);
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Parse [`ShardMap::encode`] output. The owner table is recomputed,
+    /// so two processes decoding the same text agree on every route.
+    pub fn decode(text: &str) -> Result<ShardMap, ShardError> {
+        let mut lines = text.lines().filter(|l| !l.trim().is_empty());
+        if lines.next().map(str::trim) != Some("shardmap v1") {
+            return Err(ShardError::Parse("missing 'shardmap v1' header".into()));
+        }
+        let shards_line = lines
+            .next()
+            .ok_or_else(|| ShardError::Parse("missing 'shards <N>' line".into()))?;
+        let n_shards: usize = shards_line
+            .trim()
+            .strip_prefix("shards ")
+            .and_then(|v| v.parse().ok())
+            .ok_or_else(|| ShardError::Parse(format!("bad shards line {shards_line:?}")))?;
+        if n_shards == 0 || n_shards > MAX_SHARDS {
+            // decode() is the untrusted fleet-shared input path: a
+            // crafted count must error, never drive an owner-table
+            // computation sized by attacker input.
+            return Err(ShardError::Parse(format!(
+                "shard count {n_shards} outside 1..={MAX_SHARDS}"
+            )));
+        }
+        let mut workers = Vec::new();
+        for line in lines {
+            let id = line
+                .trim()
+                .strip_prefix("worker ")
+                .ok_or_else(|| ShardError::Parse(format!("bad worker line {line:?}")))?
+                .to_string();
+            if id.is_empty() || id.chars().any(char::is_whitespace) {
+                return Err(ShardError::Parse(format!("bad worker id {id:?}")));
+            }
+            if workers.contains(&id) {
+                return Err(ShardError::DuplicateWorker(id));
+            }
+            workers.push(id);
+        }
+        if workers.is_empty() {
+            return Err(ShardError::Parse("a shard map needs at least one worker".into()));
+        }
+        Ok(ShardMap::new(n_shards, workers))
+    }
+}
+
+/// One shard worker: an id from the [`ShardMap`], the [`SolveService`]
+/// serving its shards, and a stable profile slot (assigned once at
+/// creation and never reused, so [`crate::profile::add_shard_routed`]
+/// counts stay attributable across rebalances that shift positional
+/// indices).
+struct Worker {
+    id: String,
+    slot: usize,
+    service: SolveService,
+}
+
+struct State {
+    map: ShardMap,
+    workers: Vec<Worker>,
+    /// Next profile slot to hand to a newly added worker.
+    next_slot: usize,
+    /// Mirror of in-memory registrations, for rebalance migration.
+    /// `Arc`-shared with every worker registry holding the value, so
+    /// mirroring and migration never deep-copy a factor.
+    registered: HashMap<u64, Arc<StoredFactor>>,
+    registered_mats: HashMap<u64, Arc<TlrMatrix>>,
+    /// Counters of workers removed from the fleet, folded into
+    /// [`ShardedService::stats`] so the aggregate stays monotone
+    /// across shrinks.
+    retired: ServiceStats,
+}
+
+impl State {
+    fn worker_index(&self, id: &str) -> usize {
+        self.workers.iter().position(|w| w.id == id).expect("map and workers agree")
+    }
+
+    fn route(&self, key: u64) -> usize {
+        self.worker_index(self.map.owner_of(key))
+    }
+}
+
+/// Multi-worker front-end: owns `N` [`SolveService`] workers over one
+/// shared [`FactorStore`] root and routes every request to the worker
+/// owning the key's shard (see the module docs for the ownership
+/// contract). Per-key DRR fairness, LRU caching and admission bounds
+/// are per-shard: each worker runs the unmodified single-service
+/// scheduler over exactly the keys it owns.
+pub struct ShardedService {
+    /// Routing state: read-locked on every submit (routing only reads
+    /// the map and worker table), write-locked by registration and
+    /// rebalancing — so submissions to different shards do not
+    /// serialize on the front-end.
+    state: RwLock<State>,
+    /// Keys whose old owner was still busy with them at rebalance
+    /// time: `(worker_id, key)` pairs released by [`Self::sweep`] once
+    /// the drain completes.
+    releases: Mutex<Vec<(String, u64)>>,
+    /// Fast-path flag for [`Self::sweep`]: submissions check this
+    /// relaxed atomic instead of bouncing the `releases` lock across
+    /// every submitter when (as almost always) nothing is pending.
+    releases_pending: AtomicBool,
+    opts: ServeOpts,
+    root: std::path::PathBuf,
+}
+
+impl ShardedService {
+    /// Start `n_workers` workers (ids `w0..`) over `n_shards` virtual
+    /// shards, each worker serving from its own handle on `store`'s
+    /// directory. Panics on a zero worker count (matching
+    /// [`ShardMap::new`]'s validation style).
+    pub fn start(
+        store: &FactorStore,
+        opts: ServeOpts,
+        n_workers: usize,
+        n_shards: usize,
+    ) -> Result<ShardedService, StoreError> {
+        assert!(n_workers > 0, "a sharded service needs at least one worker");
+        let ids = (0..n_workers).map(|i| format!("w{i}")).collect();
+        Self::start_with_map(store, opts, ShardMap::new(n_shards, ids))
+    }
+
+    /// Start with an explicit (possibly fleet-shared) [`ShardMap`].
+    pub fn start_with_map(
+        store: &FactorStore,
+        opts: ServeOpts,
+        map: ShardMap,
+    ) -> Result<ShardedService, StoreError> {
+        let root = store.root().to_path_buf();
+        let mut workers = Vec::with_capacity(map.workers().len());
+        for (slot, id) in map.workers().iter().enumerate() {
+            let service = SolveService::start_named(store.clone(), opts.clone(), id);
+            workers.push(Worker { id: id.clone(), slot, service });
+        }
+        let state = State {
+            next_slot: workers.len(),
+            map,
+            workers,
+            registered: HashMap::new(),
+            registered_mats: HashMap::new(),
+            retired: ServiceStats::default(),
+        };
+        Ok(ShardedService {
+            state: RwLock::new(state),
+            releases: Mutex::new(Vec::new()),
+            releases_pending: AtomicBool::new(false),
+            opts,
+            root,
+        })
+    }
+
+    /// A snapshot of the current shard map (serializable via
+    /// [`ShardMap::encode`] for the rest of the fleet).
+    pub fn map(&self) -> ShardMap {
+        self.state.read().unwrap().map.clone()
+    }
+
+    /// Submit a direct solve; routed to the worker owning `key`'s shard.
+    pub fn submit(&self, key: u64, rhs: Vec<f64>) -> Result<Ticket, ServeError> {
+        let state = self.state.read().unwrap();
+        self.sweep(&state);
+        let w = state.route(key);
+        profile::add_shard_routed(state.workers[w].slot);
+        state.workers[w].service.submit(key, rhs)
+    }
+
+    /// Submit a PCG solve; routed like [`ShardedService::submit`].
+    pub fn submit_pcg(
+        &self,
+        key: u64,
+        rhs: Vec<f64>,
+        tol: f64,
+        max_iters: usize,
+    ) -> Result<Ticket, ServeError> {
+        let state = self.state.read().unwrap();
+        self.sweep(&state);
+        let w = state.route(key);
+        profile::add_shard_routed(state.workers[w].slot);
+        state.workers[w].service.submit_pcg(key, rhs, tol, max_iters)
+    }
+
+    /// Fan a mixed-key batch out to the owning shards in one routing
+    /// pass (one lock acquisition, one route per request). Same-key
+    /// requests land on the same worker in submission order, so they
+    /// coalesce there exactly as they would on a single service.
+    pub fn submit_batch(&self, reqs: Vec<(u64, Vec<f64>)>) -> Vec<Result<Ticket, ServeError>> {
+        let state = self.state.read().unwrap();
+        self.sweep(&state);
+        reqs.into_iter()
+            .map(|(key, rhs)| {
+                let w = state.route(key);
+                profile::add_shard_routed(state.workers[w].slot);
+                state.workers[w].service.submit(key, rhs)
+            })
+            .collect()
+    }
+
+    /// Register an in-memory factor on the worker owning `key` (and in
+    /// the rebalance mirror, so the registration follows the key if its
+    /// shard moves). The factor is stored once and `Arc`-shared.
+    pub fn register(&self, key: u64, f: StoredFactor) {
+        let f = Arc::new(f);
+        let mut state = self.state.write().unwrap();
+        let w = state.route(key);
+        state.workers[w].service.register_shared(key, f.clone());
+        state.registered.insert(key, f);
+    }
+
+    /// Register the TLR operator for PCG requests under `key`.
+    pub fn register_matrix(&self, key: u64, a: TlrMatrix) {
+        let a = Arc::new(a);
+        let mut state = self.state.write().unwrap();
+        let w = state.route(key);
+        state.workers[w].service.register_matrix_shared(key, a.clone());
+        state.registered_mats.insert(key, a);
+    }
+
+    /// Per-worker counters of the live fleet, in worker order (removed
+    /// workers' final counters live only in the [`Self::stats`]
+    /// aggregate).
+    pub fn stats_per_shard(&self) -> Vec<(String, ServiceStats)> {
+        let state = self.state.read().unwrap();
+        state.workers.iter().map(|w| (w.id.clone(), w.service.stats())).collect()
+    }
+
+    /// Fleet-aggregated counters, monotone across rebalances: removed
+    /// workers fold their final counts into a retained baseline.
+    pub fn stats(&self) -> ServiceStats {
+        let state = self.state.read().unwrap();
+        state.workers.iter().fold(state.retired, |acc, w| acc.merge(&w.service.stats()))
+    }
+
+    /// Per-worker executed-panel logs (for fairness assertions: each
+    /// worker's log contains only keys its shards own).
+    pub fn served_log_per_worker(&self) -> Vec<(String, Vec<ServedBatch>)> {
+        let state = self.state.read().unwrap();
+        state.workers.iter().map(|w| (w.id.clone(), w.service.served_log())).collect()
+    }
+
+    /// Add a worker to the fleet. Only the shards the new worker wins
+    /// are remapped; in-memory registrations for keys on moved shards
+    /// are re-registered on the new owner. Returns the moved shards.
+    pub fn add_worker(&self, id: impl Into<String>) -> Result<Vec<usize>, ShardError> {
+        let id = id.into();
+        let mut state = self.state.write().unwrap();
+        // Every fallible step runs BEFORE the map mutation: a failure
+        // here must not leave a phantom worker in the map (routing to
+        // one would panic and poison the state lock).
+        if id.is_empty() || id.chars().any(char::is_whitespace) {
+            return Err(ShardError::Parse(format!("bad worker id {id:?}")));
+        }
+        if state.map.workers().contains(&id) {
+            return Err(ShardError::DuplicateWorker(id));
+        }
+        let store = FactorStore::open(&self.root)
+            .map_err(|e| ShardError::Store(format!("store reopen failed: {e}")))?;
+        let service = SolveService::start_named(store, self.opts.clone(), &id);
+        let moved = state.map.add_worker(id.clone())?;
+        let slot = state.next_slot;
+        state.next_slot += 1;
+        state.workers.push(Worker { id, slot, service });
+        self.migrate(&mut state, &moved);
+        profile::add_shard_rebalance(moved.len() as u64);
+        Ok(moved)
+    }
+
+    /// Remove a worker. Its shards remap to the surviving fleet, moved
+    /// registrations migrate, and the departing worker's
+    /// [`SolveService`] is dropped — which drains: every request queued
+    /// before the removal is served by the old owner before its thread
+    /// exits, so in-flight tickets resolve normally. Returns the moved
+    /// shards.
+    pub fn remove_worker(&self, id: &str) -> Result<Vec<usize>, ShardError> {
+        let mut state = self.state.write().unwrap();
+        let moved = state.map.remove_worker(id)?;
+        let idx = state.worker_index(id);
+        let departing = state.workers.remove(idx);
+        self.migrate(&mut state, &moved);
+        profile::add_shard_rebalance(moved.len() as u64);
+        // Fold a pre-drain snapshot into the baseline BEFORE releasing
+        // the lock: a concurrent stats() call during the drain must
+        // never see the departing worker's counts missing entirely
+        // (the aggregate is documented monotone).
+        let pre = departing.service.stats();
+        state.retired = state.retired.merge(&pre);
+        drop(state);
+        // Drain outside the routing lock: new submissions may proceed
+        // while the old owner finishes its queue. Then fold only the
+        // counter growth the drain itself produced.
+        let final_stats = departing.service.shutdown();
+        let delta = final_stats.since(&pre);
+        let mut state = self.state.write().unwrap();
+        state.retired = state.retired.merge(&delta);
+        Ok(moved)
+    }
+
+    /// Re-register mirrored in-memory values whose shard is in `moved`
+    /// onto their new owner, and release them from their old owners.
+    ///
+    /// Release is drain-aware: routing already points elsewhere (the
+    /// map mutated under the same write lock), so a non-owner worker
+    /// is unregistered as soon as it holds no in-flight work under the
+    /// key ([`SolveService::busy_with`] — queued requests or a popped
+    /// batch that has not resolved its factor yet). A worker still
+    /// busy at rebalance time keeps its registration until a later
+    /// [`Self::sweep`] (run on every submit) observes the drain.
+    fn migrate(&self, state: &mut State, moved: &[usize]) {
+        let mut keys: Vec<u64> = state
+            .registered
+            .keys()
+            .chain(state.registered_mats.keys())
+            .copied()
+            .filter(|&k| moved.contains(&state.map.shard_of(k)))
+            .collect();
+        // A key carrying both a factor and an operator appears in both
+        // mirrors; process it once.
+        keys.sort_unstable();
+        keys.dedup();
+        let mut releases = self.releases.lock().unwrap();
+        for key in keys {
+            let owner = state.map.owner_of(key).to_string();
+            let new = state.worker_index(&owner);
+            if let Some(f) = state.registered.get(&key) {
+                state.workers[new].service.register_shared(key, f.clone());
+            }
+            if let Some(a) = state.registered_mats.get(&key) {
+                state.workers[new].service.register_matrix_shared(key, a.clone());
+            }
+            for w in state.workers.iter().filter(|w| w.id != owner) {
+                if w.service.busy_with(key) {
+                    releases.push((w.id.clone(), key));
+                } else {
+                    w.service.unregister(key);
+                }
+            }
+        }
+        if !releases.is_empty() {
+            self.releases_pending.store(true, Ordering::Relaxed);
+        }
+    }
+
+    /// Release residual registrations recorded by [`Self::migrate`]
+    /// once their worker has drained the key. Runs on every submit
+    /// path; when (as almost always) nothing is pending, the cost is
+    /// one relaxed atomic load — the `releases` lock is only touched
+    /// while entries exist. The flag and list can only disagree
+    /// transiently: migrate runs under the state write lock and sweep
+    /// under a read lock, so they never interleave, and a missed
+    /// relaxed read just defers the release to the next submit.
+    fn sweep(&self, state: &State) {
+        if !self.releases_pending.load(Ordering::Relaxed) {
+            return;
+        }
+        let mut releases = self.releases.lock().unwrap();
+        if releases.is_empty() {
+            return;
+        }
+        releases.retain(|(wid, key)| {
+            // The key may have moved back since: the entry is obsolete
+            // and the registration is legitimate again.
+            if state.map.owner_of(*key) == wid {
+                return false;
+            }
+            match state.workers.iter().find(|w| w.id == *wid) {
+                // Worker left the fleet; its registries died with it.
+                None => false,
+                Some(w) if w.service.busy_with(*key) => true,
+                Some(w) => {
+                    w.service.unregister(*key);
+                    false
+                }
+            }
+        });
+        self.releases_pending.store(!releases.is_empty(), Ordering::Relaxed);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ids(v: &[&str]) -> Vec<String> {
+        v.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn routing_is_pure_and_pinned_across_processes() {
+        // shard_of is FNV-1a over the key's LE bytes mod n_shards; the
+        // values are pinned (computed independently) so any process —
+        // or any other implementation of the contract — agrees.
+        let map = ShardMap::new(64, ids(&["w0"]));
+        assert_eq!(map.shard_of(0xFACADE), 51);
+        assert_eq!(map.shard_of(7), 34);
+        assert_eq!(map.shard_of(9), 44);
+        for key in [0u64, 7, 9, 0xFACADE, u64::MAX] {
+            assert_eq!(map.shard_of(key), map.shard_of(key), "same key, same shard");
+        }
+    }
+
+    #[test]
+    fn owners_are_deterministic_and_order_independent() {
+        let a = ShardMap::new(8, ids(&["w0", "w1"]));
+        let b = ShardMap::new(8, ids(&["w1", "w0"]));
+        // Pinned owner table (computed independently of this code).
+        let expect = ["w1", "w1", "w0", "w0", "w1", "w0", "w1", "w0"];
+        for s in 0..8 {
+            assert_eq!(a.owner_of_shard(s), expect[s], "shard {s}");
+            assert_eq!(a.owner_of_shard(s), b.owner_of_shard(s), "insertion order");
+        }
+    }
+
+    #[test]
+    fn rebalance_moves_only_remapped_shards() {
+        let mut map = ShardMap::new(256, ids(&["w0", "w1", "w2"]));
+        let before: Vec<String> = (0..256).map(|s| map.owner_of_shard(s).to_string()).collect();
+        let moved = map.add_worker("w3").unwrap();
+        assert!(!moved.is_empty(), "a new worker must win some shards");
+        // Minimal disruption: every moved shard went TO the new worker,
+        // and every unmoved shard kept its owner.
+        for s in 0..256 {
+            if moved.contains(&s) {
+                assert_eq!(map.owner_of_shard(s), "w3", "shard {s}");
+            } else {
+                assert_eq!(map.owner_of_shard(s), before[s], "shard {s} must not move");
+            }
+        }
+        // Removal is the mirror image: only w3's shards move back.
+        let owned = map.shards_owned_by("w3");
+        let moved_back = map.remove_worker("w3").unwrap();
+        assert_eq!(owned, moved_back);
+        for s in 0..256 {
+            assert_eq!(map.owner_of_shard(s), before[s], "shard {s} after remove");
+        }
+    }
+
+    #[test]
+    fn rebalance_spread_is_roughly_fair() {
+        let map = ShardMap::new(1024, ids(&["a", "b", "c", "d"]));
+        for w in map.workers() {
+            let n = map.shards_owned_by(w).len();
+            assert!(
+                (128..=384).contains(&n),
+                "worker {w} owns {n}/1024 shards; rendezvous should spread evenly"
+            );
+        }
+    }
+
+    #[test]
+    fn encode_decode_roundtrip_preserves_routing() {
+        let map = ShardMap::new(32, ids(&["alpha", "beta", "gamma"]));
+        let text = map.encode();
+        assert!(text.starts_with("shardmap v1\nshards 32\n"), "{text}");
+        let back = ShardMap::decode(&text).unwrap();
+        assert_eq!(map, back);
+        for key in [1u64, 2, 3, 0xDEAD, 0xFACADE] {
+            assert_eq!(map.owner_of(key), back.owner_of(key));
+        }
+    }
+
+    #[test]
+    fn decode_rejects_malformed_maps() {
+        assert!(ShardMap::decode("").is_err());
+        assert!(ShardMap::decode("shardmap v2\nshards 4\nworker a\n").is_err());
+        assert!(ShardMap::decode("shardmap v1\nshards 0\nworker a\n").is_err());
+        assert!(ShardMap::decode("shardmap v1\nshards 4\n").is_err());
+        assert!(ShardMap::decode("shardmap v1\nshards 4\nworker a\nworker a\n").is_err());
+        assert!(ShardMap::decode("shardmap v1\nshards x\nworker a\n").is_err());
+        // A crafted shard count must error, not hang computing owners.
+        let huge = format!("shardmap v1\nshards {}\nworker a\n", u64::MAX);
+        assert!(ShardMap::decode(&huge).is_err());
+        let over = format!("shardmap v1\nshards {}\nworker a\n", MAX_SHARDS + 1);
+        assert!(ShardMap::decode(&over).is_err());
+    }
+
+    #[test]
+    fn fleet_mutations_are_validated() {
+        let mut map = ShardMap::new(8, ids(&["w0"]));
+        assert_eq!(map.add_worker("w0"), Err(ShardError::DuplicateWorker("w0".into())));
+        assert_eq!(map.remove_worker("nope"), Err(ShardError::UnknownWorker("nope".into())));
+        assert_eq!(map.remove_worker("w0"), Err(ShardError::LastWorker));
+        assert!(map.add_worker("bad id").is_err(), "whitespace ids break the encoded form");
+        assert!(map.add_worker("").is_err());
+    }
+}

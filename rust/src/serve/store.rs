@@ -685,7 +685,11 @@ mapped_loader!(
 
 // --------------------------------------------------------- FactorStore
 
-/// A factor loaded from a store: either factorization kind.
+/// A factor loaded from a store: either factorization kind. `Clone` is
+/// shallow-cheap for mapped factors (tile payloads are `Arc`-shared
+/// views) and a deep copy for owned ones; the sharded service clones
+/// registered factors when a rebalance moves their key.
+#[derive(Clone)]
 pub enum StoredFactor {
     Chol(CholFactor),
     Ldl(LdlFactor),
@@ -710,7 +714,10 @@ impl StoredFactor {
 /// ```
 ///
 /// One directory per key keeps eviction and inspection trivial (`rm -r`
-/// a key, `ls` the root).
+/// a key, `ls` the root). `Clone` re-uses the already-created root, so
+/// the sharded service can hand each worker its own handle without
+/// re-validating the directory.
+#[derive(Clone)]
 pub struct FactorStore {
     root: PathBuf,
 }

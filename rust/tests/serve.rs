@@ -19,7 +19,9 @@ use h2opus_tlr::linalg::rng::Rng;
 use h2opus_tlr::serve::store::{
     decode_chol, decode_ldl, decode_tlr, encode_chol, encode_ldl, encode_tlr,
 };
-use h2opus_tlr::serve::{FactorStore, ServeError, ServeOpts, SolveService, StoredFactor};
+use h2opus_tlr::serve::{
+    FactorStore, ServeError, ServeOpts, ShardMap, ShardedService, SolveService, StoredFactor,
+};
 use h2opus_tlr::solve::{
     chol_solve, chol_solve_multi, ldl_solve, ldl_solve_multi, pcg, pcg_multi, tlr_matvec,
     tlr_matvec_multi, tlr_trsm_lower, tlr_trsv_lower, TlrOp,
@@ -706,6 +708,165 @@ fn service_routes_pcg_requests_through_panel_preconditioner() {
     let _ = std::fs::remove_dir_all(&dir);
 }
 
+// --------------------------------------------------- sharded serving
+
+/// Two keys pinned to different owners under `ShardMap::new(8, [w0,
+/// w1])`: key 7 → shard 2 → w0, key 9 → shard 4 → w1 (the owner table
+/// itself is pinned in `serve::shard`'s unit tests).
+const SHARD_KEY_A: u64 = 7;
+const SHARD_KEY_B: u64 = 9;
+
+fn two_worker_map() -> ShardMap {
+    ShardMap::new(8, vec!["w0".to_string(), "w1".to_string()])
+}
+
+/// The acceptance property: a two-shard [`ShardedService`] answers a
+/// mixed-key request stream with solutions **bitwise identical** to a
+/// single [`SolveService`] over the same store, and each worker's DRR
+/// log contains only the keys its shards own, in full panels.
+///
+/// Identical answers need identical panel composition, so both runs
+/// use the deterministic-coalescing idiom of the fairness tests: one
+/// pilot request per key opens a long flush hold, and the remaining
+/// requests are submitted *interleaved* (A, B, A, B, …) so neither
+/// key's queue reaches a full panel while the other is partial — the
+/// work-conserving early flush can then never cut a panel short, and
+/// every panel is a full `max_panel` block taken in FIFO order per
+/// key, on the single service (DRR alternates keys) and on the
+/// sharded one (each worker sees only its own key) alike.
+#[test]
+fn two_shard_service_matches_single_service_bitwise() {
+    let n = 128;
+    let fa = small_factor(60);
+    let fb = small_factor(61);
+    let map = two_worker_map();
+    assert_ne!(
+        map.owner_of(SHARD_KEY_A),
+        map.owner_of(SHARD_KEY_B),
+        "demo keys must exercise two different shards"
+    );
+    let dir = temp_dir("sharded_vs_single");
+    let store = FactorStore::open(&dir).unwrap();
+    store.save_chol(SHARD_KEY_A, &fa, "key A").unwrap();
+    store.save_chol(SHARD_KEY_B, &fb, "key B").unwrap();
+    let opts = ServeOpts {
+        max_panel: 4,
+        flush_deadline: Duration::from_millis(2000),
+        ..Default::default()
+    };
+    let per_key = 8; // 2 full panels per key
+    let mut rng = Rng::new(62);
+    let rhss_a: Vec<Vec<f64>> =
+        (0..per_key).map(|_| (0..n).map(|_| rng.normal()).collect()).collect();
+    let rhss_b: Vec<Vec<f64>> =
+        (0..per_key).map(|_| (0..n).map(|_| rng.normal()).collect()).collect();
+    // Pilot per key, then the rest while the holds are open.
+    let run = |submit: &dyn Fn(u64, Vec<f64>) -> h2opus_tlr::serve::Ticket| {
+        let mut tickets = Vec::new();
+        tickets.push(submit(SHARD_KEY_A, rhss_a[0].clone()));
+        tickets.push(submit(SHARD_KEY_B, rhss_b[0].clone()));
+        std::thread::sleep(Duration::from_millis(50));
+        for (a, b) in rhss_a[1..].iter().zip(&rhss_b[1..]) {
+            tickets.push(submit(SHARD_KEY_A, a.clone()));
+            tickets.push(submit(SHARD_KEY_B, b.clone()));
+        }
+        tickets.into_iter().map(|t| t.wait().unwrap()).collect::<Vec<_>>()
+    };
+    let single = SolveService::start(FactorStore::open(&dir).unwrap(), opts.clone());
+    let single_resps = run(&|k, b| single.submit(k, b).unwrap());
+    let sharded =
+        ShardedService::start_with_map(&FactorStore::open(&dir).unwrap(), opts, map.clone())
+            .unwrap();
+    let sharded_resps = run(&|k, b| sharded.submit(k, b).unwrap());
+    for (i, (s, sh)) in single_resps.iter().zip(&sharded_resps).enumerate() {
+        assert_eq!(s.panel_width, 4, "request {i}: single service panel");
+        assert_eq!(sh.panel_width, 4, "request {i}: sharded service panel");
+        assert_eq!(s.x, sh.x, "request {i}: sharded solve must be bitwise identical");
+    }
+    // Per-shard DRR state is intact: each worker's fairness log holds
+    // only the keys its shards own, in full panels.
+    for (worker, log) in sharded.served_log_per_worker() {
+        assert_eq!(log.len(), 2, "{worker}: 8 requests at panel 4");
+        for b in &log {
+            assert_eq!(map.owner_of(b.key), worker, "{worker} served a foreign key");
+            assert_eq!(b.width, 4, "{worker}: full panels");
+        }
+    }
+    // Aggregated stats line up with the single service's totals.
+    let agg = sharded.stats();
+    let st = single.stats();
+    assert_eq!(agg.requests, st.requests);
+    assert_eq!(agg.panel_cols, st.panel_cols);
+    assert_eq!(agg.batches, st.batches);
+    assert_eq!(agg.max_panel, 4);
+    drop(single);
+    drop(sharded);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Mixed-key fan-out via `submit_batch`, and rebalancing: adding a
+/// worker remaps only the moved shards (registered keys follow), and
+/// removing a worker drains its queued tickets on the old owner before
+/// the thread exits.
+#[test]
+fn sharded_rebalance_migrates_keys_and_drains_in_flight() {
+    let n = 128;
+    let f = small_factor(63);
+    let dir = temp_dir("sharded_rebalance");
+    let store = FactorStore::open(&dir).unwrap();
+    let service = ShardedService::start_with_map(
+        &store,
+        ServeOpts {
+            max_panel: 4,
+            flush_deadline: Duration::from_millis(300),
+            ..Default::default()
+        },
+        two_worker_map(),
+    )
+    .unwrap();
+    // Registered (in-memory) factors under both pinned keys.
+    service.register(SHARD_KEY_A, StoredFactor::Chol(f.clone()));
+    service.register(SHARD_KEY_B, StoredFactor::Chol(f.clone()));
+    let mut rng = Rng::new(64);
+    let mut rhs = || -> Vec<f64> { (0..n).map(|_| rng.normal()).collect() };
+    let reqs: Vec<(u64, Vec<f64>)> = (0..6)
+        .map(|i| (if i % 2 == 0 { SHARD_KEY_A } else { SHARD_KEY_B }, rhs()))
+        .collect();
+    let inflight = service.submit_batch(reqs);
+    // Remove the worker that owns key A while its requests are queued
+    // (or already solving): the departing service drains first, so
+    // every ticket must resolve with a real answer, not Canceled.
+    let owner_a = service.map().owner_of(SHARD_KEY_A).to_string();
+    let moved = service.remove_worker(&owner_a).unwrap();
+    assert!(!moved.is_empty());
+    for t in inflight {
+        let resp = t.unwrap().wait().expect("in-flight ticket lost in rebalance");
+        assert_eq!(resp.x.len(), n);
+    }
+    // Key A now routes to the survivor, and its registration migrated.
+    let survivor = service.map().owner_of(SHARD_KEY_A).to_string();
+    assert_ne!(survivor, owner_a);
+    let resp = service.submit(SHARD_KEY_A, rhs()).unwrap().wait().unwrap();
+    assert_eq!(resp.x.len(), n);
+    // Growing the fleet again only moves the new worker's shards.
+    let before = service.map();
+    let moved = service.add_worker("w9").unwrap();
+    let after = service.map();
+    for s in 0..before.n_shards() {
+        if moved.contains(&s) {
+            assert_eq!(after.owner_of_shard(s), "w9");
+        } else {
+            assert_eq!(after.owner_of_shard(s), before.owner_of_shard(s));
+        }
+    }
+    // Requests on every key still answer after the second rebalance.
+    for key in [SHARD_KEY_A, SHARD_KEY_B] {
+        let resp = service.submit(key, rhs()).unwrap().wait().unwrap();
+        assert_eq!(resp.x.len(), n, "key {key:#x} after rebalance");
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
 // -------------------------------------------------------- CLI smoke
 
 #[test]
@@ -738,5 +899,32 @@ fn serve_cli_smoke_fresh_process_reload() {
     let second = run("second");
     assert!(second.contains("store      : cache hit"), "{second}");
     assert!(second.contains("serve done"), "{second}");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn serve_cli_smoke_sharded_mode() {
+    let dir = temp_dir("cli_sharded");
+    let store = dir.join("store");
+    let out = std::process::Command::new(env!("CARGO_BIN_EXE_serve"))
+        .args([
+            "--problem", "cov2d", "--n", "256", "--m", "64", "--eps", "1e-5", "--bs", "8",
+            "--requests", "32", "--widths", "1,4", "--panel", "4", "--deadline-ms", "20",
+            "--shards", "2", "--keys", "3", "--store", store.to_str().unwrap(),
+        ])
+        .output()
+        .expect("serve binary must run");
+    let text = format!(
+        "{}{}",
+        String::from_utf8_lossy(&out.stdout),
+        String::from_utf8_lossy(&out.stderr)
+    );
+    assert!(out.status.success(), "{text}");
+    assert!(text.contains("shard map"), "{text}");
+    assert!(text.contains("sharded run"), "{text}");
+    assert!(text.contains("shard w0"), "{text}");
+    assert!(text.contains("shard w1"), "{text}");
+    assert!(text.contains("rebalance"), "{text}");
+    assert!(text.contains("serve done"), "{text}");
     let _ = std::fs::remove_dir_all(&dir);
 }

@@ -1,0 +1,522 @@
+#!/usr/bin/env python3
+"""Static audit for the h2opus-tlr Rust tree (no toolchain in the authoring
+container, so this stands in for `cargo build` until CI runs).
+
+Checks, in increasing order of cleverness:
+
+ 1. delimiter balance — (), [], {} — over comment/string-stripped source;
+ 2. cargo-fmt line-length violations (>100 columns);
+ 3. lifetime token syntax (`'` must start a char literal, a lifetime
+    identifier, or `'static`);
+ 4. generic-parameter-list balance for `impl<...>` / `fn name<...>` /
+    `struct|enum|trait Name<...>` headers;
+ 5. trait-impl cross-check: every `impl Trait for Type` body may only
+    define methods the trait declares, with matching arity, and must
+    define every trait method that has no default body (traits defined
+    in this crate only);
+ 6. import cross-check: every leaf of a `use h2opus_tlr::...` tree in
+    tests/benches/examples must be defined (or re-exported) in the
+    named module;
+ 7. known clippy classes: `.len() == 0` / `!= 0` / `> 0`, comparisons
+    with bool literals.
+
+Exit status 0 = clean, 1 = findings. Run from the repo root:
+
+    python3 tools/static_audit.py
+"""
+
+import os
+import re
+import sys
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+MAX_WIDTH = 100
+
+findings = []
+
+
+def warn(path, line, msg):
+    findings.append(f"{os.path.relpath(path, ROOT)}:{line}: {msg}")
+
+
+# --------------------------------------------------------------- lexer
+
+
+def strip_code(text, path):
+    """Replace comments, strings and char literals with spaces (newlines
+    kept) so structural checks see only code. Handles nested block
+    comments, raw strings r#"..."#, byte strings, escapes, and the
+    char-literal vs lifetime ambiguity."""
+    out = []
+    i, n = 0, len(text)
+    line = 1
+
+    def put(c):
+        out.append(c)
+
+    def blank(c):
+        out.append("\n" if c == "\n" else " ")
+
+    while i < n:
+        c = text[i]
+        if c == "\n":
+            line += 1
+        # Line comment.
+        if c == "/" and i + 1 < n and text[i + 1] == "/":
+            while i < n and text[i] != "\n":
+                blank(text[i])
+                i += 1
+            continue
+        # Block comment (nested).
+        if c == "/" and i + 1 < n and text[i + 1] == "*":
+            depth = 0
+            while i < n:
+                if text[i] == "/" and i + 1 < n and text[i + 1] == "*":
+                    depth += 1
+                    blank(text[i])
+                    blank(text[i + 1])
+                    i += 2
+                    continue
+                if text[i] == "*" and i + 1 < n and text[i + 1] == "/":
+                    depth -= 1
+                    blank(text[i])
+                    blank(text[i + 1])
+                    i += 2
+                    if depth == 0:
+                        break
+                    continue
+                if text[i] == "\n":
+                    line += 1
+                blank(text[i])
+                i += 1
+            continue
+        # Raw string (and byte-raw): r"..."  r#"..."#  br#"..."#
+        m = re.match(r'b?r(#*)"', text[i:])
+        if m and (i == 0 or not (text[i - 1].isalnum() or text[i - 1] == "_")):
+            hashes = m.group(1)
+            close = '"' + hashes
+            j = i + len(m.group(0))
+            end = text.find(close, j)
+            if end == -1:
+                warn(path, line, "unterminated raw string")
+                end = n - len(close)
+            for k in range(i, end + len(close)):
+                if text[k] == "\n":
+                    line += 1
+                blank(text[k])
+            i = end + len(close)
+            continue
+        # Plain / byte string.
+        if c == '"' or (c == "b" and i + 1 < n and text[i + 1] == '"'):
+            if c == "b":
+                blank(c)
+                i += 1
+            blank(text[i])
+            i += 1
+            while i < n:
+                if text[i] == "\\":
+                    blank(text[i])
+                    if i + 1 < n:
+                        if text[i + 1] == "\n":
+                            line += 1
+                        blank(text[i + 1])
+                    i += 2
+                    continue
+                if text[i] == '"':
+                    blank(text[i])
+                    i += 1
+                    break
+                if text[i] == "\n":
+                    line += 1
+                blank(text[i])
+                i += 1
+            continue
+        # ' — char literal, byte char, or lifetime.
+        if c == "'" or (c == "b" and i + 1 < n and text[i + 1] == "'"):
+            if c == "b":
+                blank(c)
+                i += 1
+            start = i
+            # 'x' or '\x..' → char literal; otherwise a lifetime.
+            if i + 1 < n and text[i + 1] == "\\":
+                j = i + 2
+                while j < n and text[j] != "'":
+                    j += 1
+                for k in range(i, min(j + 1, n)):
+                    blank(text[k])
+                i = j + 1
+                continue
+            if i + 2 < n and text[i + 2] == "'" and text[i + 1] != "'":
+                blank(text[i])
+                blank(text[i + 1])
+                blank(text[i + 2])
+                i += 3
+                continue
+            # Lifetime: keep it (check 3 runs on stripped text).
+            put(text[i])
+            i += 1
+            if i >= n or not (text[i].isalpha() or text[i] == "_"):
+                warn(path, line, "stray `'` (not a char literal or lifetime)")
+                continue
+            while i < n and (text[i].isalnum() or text[i] == "_"):
+                put(text[i])
+                i += 1
+            _ = start
+            continue
+        put(c)
+        i += 1
+    return "".join(out)
+
+
+# ------------------------------------------------------------ checks 1-4
+
+
+def check_balance(path, stripped):
+    pairs = {")": "(", "]": "[", "}": "{"}
+    stack = []
+    line = 1
+    for ch in stripped:
+        if ch == "\n":
+            line += 1
+        elif ch in "([{":
+            stack.append((ch, line))
+        elif ch in ")]}":
+            if not stack or stack[-1][0] != pairs[ch]:
+                warn(path, line, f"unbalanced `{ch}`")
+                return
+            stack.pop()
+    if stack:
+        warn(path, stack[-1][1], f"unclosed `{stack[-1][0]}`")
+
+
+def check_line_lengths(path, text, stripped):
+    """Overlong lines, except where everything past the limit is string
+    content — rustfmt never splits string literals, so those lines do
+    not fail `cargo fmt --check`."""
+    slines = stripped.split("\n")
+    for ln, line in enumerate(text.split("\n"), 1):
+        if len(line) <= MAX_WIDTH:
+            continue
+        tail = slines[ln - 1][MAX_WIDTH:] if ln - 1 < len(slines) else ""
+        if not tail.strip(" );,#\""):
+            continue
+        warn(path, ln, f"line is {len(line)} cols (fmt max {MAX_WIDTH})")
+
+
+def check_generics(path, stripped):
+    """Angle-bracket balance of generic parameter lists that directly
+    follow `impl` / `fn name` / `struct|enum|trait Name`."""
+    for m in re.finditer(
+        r"\b(impl|fn\s+\w+|struct\s+\w+|enum\s+\w+|trait\s+\w+)\s*<", stripped
+    ):
+        j = m.end() - 1
+        depth = 0
+        ok = False
+        while j < len(stripped) and j < m.end() + 4000:
+            c = stripped[j]
+            if c == "<":
+                depth += 1
+            elif c == ">":
+                if stripped[j - 1] == "-":  # `->` inside e.g. Fn(...) -> T
+                    j += 1
+                    continue
+                depth -= 1
+                if depth == 0:
+                    ok = True
+                    break
+            elif c in ";{" and depth == 0:
+                break
+            j += 1
+        if not ok:
+            line = stripped.count("\n", 0, m.start()) + 1
+            warn(path, line, f"unbalanced generic list after `{m.group(1)}`")
+
+
+# ------------------------------------------------- trait-impl signatures
+
+
+def top_level_params(params):
+    """Count parameters in a comma-separated list, ignoring commas nested
+    in <>, (), []."""
+    depth = 0
+    count = 0
+    cur = ""
+    for c in params:
+        if c in "<([":
+            depth += 1
+        elif c in ">)]":
+            depth -= 1
+        elif c == "," and depth == 0:
+            if cur.strip():
+                count += 1
+            cur = ""
+            continue
+        cur += c
+    if cur.strip():
+        count += 1
+    return count
+
+
+def body_span(text, open_idx):
+    """Span of a {...} block starting at text[open_idx] == '{'."""
+    depth = 0
+    for j in range(open_idx, len(text)):
+        if text[j] == "{":
+            depth += 1
+        elif text[j] == "}":
+            depth -= 1
+            if depth == 0:
+                return text[open_idx + 1 : j], j
+    return text[open_idx + 1 :], len(text)
+
+
+FN_RE = re.compile(r"\bfn\s+(\w+)\s*(?:<[^>]*>)?\s*\(")
+
+
+def fn_sigs(body):
+    """name -> (arity, has_default_body) for fns declared at any depth of
+    `body` (nested fns are rare in this tree; good enough)."""
+    sigs = {}
+    for m in FN_RE.finditer(body):
+        # Find matching close paren.
+        depth = 0
+        j = m.end() - 1
+        while j < len(body):
+            if body[j] == "(":
+                depth += 1
+            elif body[j] == ")":
+                depth -= 1
+                if depth == 0:
+                    break
+            j += 1
+        params = body[m.end() : j]
+        arity = top_level_params(params)
+        # Default body? look ahead for `{` before `;`.
+        k = j
+        has_body = False
+        while k < len(body):
+            if body[k] == "{":
+                has_body = True
+                break
+            if body[k] == ";":
+                break
+            k += 1
+        if m.group(1) not in sigs:
+            sigs[m.group(1)] = (arity, has_body)
+    return sigs
+
+
+TRAIT_RE = re.compile(r"\btrait\s+(\w+)[^;{]*\{")
+IMPL_RE = re.compile(
+    r"\bimpl\s*(?:<[^>]*>)?\s*([A-Za-z_]\w*)\s*(?:<[^>]*>)?\s+for\s+"
+)
+
+
+def collect_traits(files):
+    traits = {}
+    for path, stripped in files.items():
+        for m in TRAIT_RE.finditer(stripped):
+            body, _ = body_span(stripped, m.end() - 1)
+            traits[m.group(1)] = (path, fn_sigs(body))
+    return traits
+
+
+def check_impls(files, traits):
+    # std/core traits whose shapes rustc checks for us.
+    external = {
+        "Default", "Drop", "Clone", "Display", "Debug", "Error", "From",
+        "Iterator", "PartialEq", "Eq", "Hash", "Ord", "PartialOrd", "Deref",
+        "DerefMut", "Index", "IndexMut", "Send", "Sync", "Copy", "Fn",
+        "FnMut", "FnOnce", "ExactSizeIterator", "IntoIterator", "AsRef",
+        "TryFrom", "FromIterator", "Add", "Sub", "Mul", "Neg", "Write",
+    }
+    for path, stripped in files.items():
+        for m in IMPL_RE.finditer(stripped):
+            name = m.group(1)
+            if name in external or name not in traits:
+                continue
+            tpath, tsigs = traits[name]
+            open_idx = stripped.find("{", m.end())
+            if open_idx == -1:
+                continue
+            body, _ = body_span(stripped, open_idx)
+            isigs = fn_sigs(body)
+            line = stripped.count("\n", 0, m.start()) + 1
+            for fname, (arity, _) in isigs.items():
+                if fname not in tsigs:
+                    warn(path, line, f"impl {name}: fn `{fname}` not in trait "
+                                     f"({os.path.relpath(tpath, ROOT)})")
+                elif tsigs[fname][0] != arity:
+                    warn(path, line, f"impl {name}: fn `{fname}` arity "
+                                     f"{arity} != trait's {tsigs[fname][0]}")
+            for fname, (_, has_default) in tsigs.items():
+                if not has_default and fname not in isigs:
+                    warn(path, line, f"impl {name}: missing trait fn `{fname}`")
+
+
+# ----------------------------------------------------- import cross-check
+
+
+def module_of(path):
+    rel = os.path.relpath(path, os.path.join(ROOT, "rust", "src"))
+    parts = rel[:-3].split(os.sep)  # strip .rs
+    if parts[-1] in ("mod", "lib"):
+        parts = parts[:-1]
+    return "::".join(parts)
+
+
+DEF_RE = re.compile(
+    r"\bpub(?:\s*\(crate\))?\s+(?:unsafe\s+)?"
+    r"(?:fn|struct|enum|trait|const|static|type|mod|union)\s+(\w+)"
+)
+REEXPORT_RE = re.compile(r"\bpub\s+use\s+([^;]+);")
+
+
+def use_leaves(tree):
+    """Flatten one `use` tree into its leaf names."""
+    tree = tree.strip()
+    m = re.match(r"^(.*?)\{(.*)\}$", tree, re.S)
+    leaves = []
+    if m:
+        prefix = m.group(1)
+        depth = 0
+        item = ""
+        for c in m.group(2) + ",":
+            if c == "{":
+                depth += 1
+            elif c == "}":
+                depth -= 1
+            if c == "," and depth == 0:
+                if item.strip():
+                    leaves.extend(use_leaves(prefix + item.strip()))
+                item = ""
+            else:
+                item += c
+        return leaves
+    if " as " in tree:
+        tree = tree.split(" as ")[0].strip()
+    leaves.append(tree)
+    return leaves
+
+
+def collect_pub_symbols(src_files):
+    """module path -> set of pub names (incl. re-exported leaf names)."""
+    syms = {}
+    for path, stripped in src_files.items():
+        mod = module_of(path)
+        names = syms.setdefault(mod, set())
+        for m in DEF_RE.finditer(stripped):
+            names.add(m.group(1))
+        for m in REEXPORT_RE.finditer(stripped):
+            for leaf in use_leaves(m.group(1)):
+                name = leaf.rstrip(":").split("::")[-1].strip()
+                if name and name != "*":
+                    names.add(name)
+        # Local macros that generate `pub fn $name`: credit the first
+        # ident argument of each invocation (e.g. `mapped_loader!`).
+        for mm in re.finditer(r"macro_rules!\s*(\w+)", stripped):
+            body, _ = body_span(stripped, stripped.find("{", mm.end()))
+            if not re.search(r"pub\s+fn\s+\$", body):
+                continue
+            for call in re.finditer(mm.group(1) + r"!\s*\(\s*(\w+)", stripped):
+                names.add(call.group(1))
+    # Modules themselves are importable from their parent.
+    for mod in list(syms):
+        if "::" in mod:
+            parent, leaf = mod.rsplit("::", 1)
+            syms.setdefault(parent, set()).add(leaf)
+        elif mod:
+            syms.setdefault("", set()).add(mod)
+    return syms
+
+
+USE_CRATE_RE = re.compile(r"\buse\s+h2opus_tlr::([^;]+);")
+
+
+def check_imports(all_files, syms):
+    star_ok = re.compile(r"\*$")
+    for path, stripped in all_files.items():
+        for m in USE_CRATE_RE.finditer(stripped):
+            for leaf in use_leaves(m.group(1)):
+                leaf = re.sub(r"\s+", "", leaf)
+                if star_ok.search(leaf):
+                    continue
+                parts = leaf.split("::")
+                name = parts[-1]
+                mod = "::".join(parts[:-1])
+                line = stripped.count("\n", 0, m.start()) + 1
+                if mod not in syms:
+                    # Could be a deep module path used as a name prefix.
+                    if "::".join(parts) in syms:
+                        continue
+                    warn(path, line, f"use h2opus_tlr::{leaf}: no module `{mod}`")
+                elif name not in syms[mod] and name != "self":
+                    warn(path, line,
+                         f"use h2opus_tlr::{leaf}: `{name}` not pub in `{mod}`")
+
+
+# --------------------------------------------------------- clippy classes
+
+
+CLIPPY_PATTERNS = [
+    (re.compile(r"\.len\(\)\s*==\s*0\b"), "use .is_empty() (clippy::len_zero)"),
+    (re.compile(r"\.len\(\)\s*!=\s*0\b"), "use !.is_empty() (clippy::len_zero)"),
+    (re.compile(r"\.len\(\)\s*>\s*0\b"), "use !.is_empty() (clippy::len_zero)"),
+    (re.compile(r"==\s*true\b"), "drop `== true` (clippy::bool_comparison)"),
+    (re.compile(r"==\s*false\b"), "use `!` (clippy::bool_comparison)"),
+]
+
+
+def check_clippy(path, stripped):
+    lines = stripped.split("\n")
+    for ln, line in enumerate(lines, 1):
+        for pat, msg in CLIPPY_PATTERNS:
+            if not pat.search(line):
+                continue
+            # clippy::len_zero skips `self.len() == 0` inside the
+            # `is_empty` definition itself.
+            if "self.len()" in line and any(
+                "fn is_empty" in lines[k]
+                for k in range(max(0, ln - 4), ln)
+            ):
+                continue
+            warn(path, ln, msg)
+
+
+# ---------------------------------------------------------------- driver
+
+
+def main():
+    rs_files = []
+    for base in ("rust", "benches", "examples"):
+        for dirpath, _, names in os.walk(os.path.join(ROOT, base)):
+            for name in sorted(names):
+                if name.endswith(".rs"):
+                    rs_files.append(os.path.join(dirpath, name))
+    texts = {p: open(p, encoding="utf-8").read() for p in rs_files}
+    stripped = {p: strip_code(t, p) for p, t in texts.items()}
+
+    for p in rs_files:
+        check_balance(p, stripped[p])
+        check_line_lengths(p, texts[p], stripped[p])
+        check_generics(p, stripped[p])
+        check_clippy(p, stripped[p])
+
+    src = {p: s for p, s in stripped.items()
+           if os.sep + os.path.join("rust", "src") + os.sep in p}
+    traits = collect_traits(src)
+    check_impls(stripped, traits)
+    syms = collect_pub_symbols(src)
+    check_imports(stripped, syms)
+
+    if findings:
+        print(f"{len(findings)} finding(s):")
+        for f in sorted(set(findings)):
+            print("  " + f)
+        return 1
+    print(f"audit clean: {len(rs_files)} files, {len(traits)} traits checked")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
