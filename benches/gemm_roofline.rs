@@ -10,11 +10,43 @@
 //! than the per-call loop on the skewed-rank workload. Record the
 //! numbers in EXPERIMENTS.md §Perf.
 //!
+//! A second table compares the microkernels themselves on a single
+//! tile-shaped GEMM: scalar vs the dispatched SIMD kernel vs the
+//! mixed-precision (f32-B) path (ISSUE 6 bar: SIMD ≥ 2× scalar at
+//! m=n=128; EXPERIMENTS.md §Kernel roofline). Set
+//! `H2OPUS_FORCE_SCALAR=1` to verify the fallback leg.
+//!
 //! Run: `cargo bench --bench gemm_roofline`
 
-use h2opus_tlr::experiments::roofline_loop_vs_batch;
+use h2opus_tlr::experiments::{kernel_roofline, roofline_loop_vs_batch};
 
 fn main() {
+    println!("== bench gemm_roofline (per-kernel roofline; scalar vs SIMD vs mixed) ==");
+    let rows = kernel_roofline(128, 128, &[8, 16, 32, 64], 20, 42);
+    let kernel = rows.first().map(|r| r.kernel_name).unwrap_or("scalar");
+    println!("dispatched kernel: {kernel}");
+    println!(
+        "  {:>5} {:>5} {:>5} {:>11} {:>11} {:>8} {:>11} {:>8}",
+        "m", "n", "k", "scalar", kernel, "speedup", "mixed", "speedup"
+    );
+    let mut worst_simd = f64::INFINITY;
+    for r in &rows {
+        let s_active = r.active / r.scalar;
+        let s_mixed = r.mixed / r.scalar;
+        worst_simd = worst_simd.min(s_active);
+        println!(
+            "  {:>5} {:>5} {:>5} {:>11.2} {:>11.2} {s_active:>7.2}x {:>11.2} {s_mixed:>7.2}x",
+            128, 128, r.k, r.scalar, r.active, r.mixed
+        );
+    }
+    println!("(GFLOP/s, best of 20; speedup vs the scalar microkernel)");
+    if kernel == "scalar" {
+        println!("(scalar dispatch — SIMD unavailable or H2OPUS_FORCE_SCALAR set; 2x bar not applicable)");
+    } else {
+        println!("worst-case {kernel}/scalar speedup over k: {worst_simd:.2}x (bar: >= 2x)");
+    }
+
+    println!();
     println!("== bench gemm_roofline (paper Fig 8b bracket; loop vs op-stream) ==");
     println!(
         "  {:>5} {:>9} {:>5} {:>7} {:>11} {:>11} {:>8} {:>11} {:>11} {:>8}",

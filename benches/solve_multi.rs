@@ -10,7 +10,7 @@
 
 use h2opus_tlr::batch::NativeBatch;
 use h2opus_tlr::config::Problem;
-use h2opus_tlr::experiments::{bench_time, instance, time_cholesky};
+use h2opus_tlr::experiments::{bench_time, instance, kernel_roofline, time_cholesky};
 use h2opus_tlr::factor::FactorOpts;
 use h2opus_tlr::linalg::rng::Rng;
 use h2opus_tlr::runtime::json::{to_string, Json};
@@ -175,8 +175,39 @@ fn main() {
     shard_obj.insert("sharded_rps".to_string(), Json::Num(sharded_rps));
     shard_obj.insert("speedup".to_string(), Json::Num(sharded_rps / single_rps));
 
+    // -- microkernel dispatch (EXPERIMENTS.md §Kernel roofline): one
+    //    tile-shaped GEMM through the scalar kernel, the dispatched SIMD
+    //    kernel, and the mixed f32-B path, so the solve numbers above
+    //    carry a record of which kernel produced them.
+    let krows = kernel_roofline(m, m, &[16, 64], 10, 41);
+    let kname = krows.first().map(|r| r.kernel_name).unwrap_or("scalar");
+    let mut kernel_obj = BTreeMap::new();
+    kernel_obj.insert("dispatched".to_string(), Json::Str(kname.to_string()));
+    let mut krow_json: Vec<Json> = Vec::new();
+    for r in &krows {
+        println!(
+            "kernel {kname} (m=n={m}, k={}): scalar {:.2} GFLOP/s, {kname} {:.2} ({:.2}x), \
+             mixed {:.2} ({:.2}x)",
+            r.k,
+            r.scalar,
+            r.active,
+            r.active / r.scalar,
+            r.mixed,
+            r.mixed / r.scalar
+        );
+        let mut row = BTreeMap::new();
+        row.insert("k".to_string(), Json::Num(r.k as f64));
+        row.insert("scalar_gflops".to_string(), Json::Num(r.scalar));
+        row.insert("simd_gflops".to_string(), Json::Num(r.active));
+        row.insert("mixed_gflops".to_string(), Json::Num(r.mixed));
+        row.insert("simd_speedup".to_string(), Json::Num(r.active / r.scalar));
+        krow_json.push(Json::Obj(row));
+    }
+    kernel_obj.insert("shapes".to_string(), Json::Arr(krow_json));
+
     let mut doc = BTreeMap::new();
     doc.insert("bench".to_string(), Json::Str("solve_multi".to_string()));
+    doc.insert("kernel".to_string(), Json::Obj(kernel_obj));
     doc.insert("status".to_string(), Json::Str("measured".to_string()));
     doc.insert("load".to_string(), Json::Obj(load));
     doc.insert("sharded".to_string(), Json::Obj(shard_obj));

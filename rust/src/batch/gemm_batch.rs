@@ -31,21 +31,64 @@
 //! descriptor that [`StreamBuilder::sample_chain`] lowers onto the
 //! stream.
 
-use crate::linalg::gemm::{gemm_flops, gemm_with, GemmWorkspace, Trans};
+use crate::linalg::gemm::{gemm_any, gemm_flops, GemmWorkspace, Src, Trans};
 use crate::linalg::matrix::Matrix;
+use crate::linalg::matrix32::MatrixF32;
 use crate::profile::{self, Phase, Timer};
 use crate::tlr::tile::Tile;
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
-use std::sync::Barrier;
+use std::sync::{Barrier, Mutex};
 
-/// An operand of a [`GemmOp`]: a caller-provided read-only input, or the
-/// current value of an output slot (the result of earlier ops).
+/// An operand of a [`GemmOp`]: a caller-provided read-only input (f64 or
+/// f32-stored), or the current value of an output slot (the result of
+/// earlier ops).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Arg {
     /// `inputs[i]` of the stream.
     In(usize),
+    /// `inputs32[i]` of the stream — an f32-stored operand (mixed
+    /// precision); executors widen it to f64 inside the GEMM kernels.
+    In32(usize),
     /// Output slot `i`.
     Out(usize),
+}
+
+/// A borrowed matrix operand of either storage precision — the
+/// vocabulary [`SampleChain`] and [`StreamBuilder::input_any`] use so
+/// mixed tiles flow through the same fused chains as f64 tiles.
+#[derive(Clone, Copy, Debug)]
+pub enum MatRef<'a> {
+    F64(&'a Matrix),
+    F32(&'a MatrixF32),
+}
+
+impl MatRef<'_> {
+    pub fn shape(&self) -> (usize, usize) {
+        match self {
+            MatRef::F64(m) => m.shape(),
+            MatRef::F32(m) => m.shape(),
+        }
+    }
+
+    pub fn rows(&self) -> usize {
+        self.shape().0
+    }
+
+    pub fn cols(&self) -> usize {
+        self.shape().1
+    }
+}
+
+impl<'a> From<&'a Matrix> for MatRef<'a> {
+    fn from(m: &'a Matrix) -> MatRef<'a> {
+        MatRef::F64(m)
+    }
+}
+
+impl<'a> From<&'a MatrixF32> for MatRef<'a> {
+    fn from(m: &'a MatrixF32) -> MatRef<'a> {
+        MatRef::F32(m)
+    }
 }
 
 /// One GEMM of the stream:
@@ -92,7 +135,7 @@ impl BatchOp {
             BatchOp::Gemm(g) => {
                 let f = |arg: Arg| match arg {
                     Arg::Out(s) => Some(s),
-                    Arg::In(_) => None,
+                    Arg::In(_) | Arg::In32(_) => None,
                 };
                 [f(g.a), f(g.b)]
             }
@@ -106,6 +149,7 @@ impl BatchOp {
 #[derive(Debug, Clone)]
 pub struct BatchPlan {
     in_shapes: Vec<(usize, usize)>,
+    in32_shapes: Vec<(usize, usize)>,
     out_shapes: Vec<(usize, usize)>,
     diag_lens: Vec<usize>,
     ops: Vec<BatchOp>,
@@ -192,10 +236,10 @@ impl BatchPlan {
 /// ([`crate::runtime::TermRef`]), so both backends speak one op
 /// vocabulary.
 pub struct SampleChain<'a> {
-    pub uk: &'a Matrix,
-    pub vk: &'a Matrix,
-    pub ui: &'a Matrix,
-    pub vi: &'a Matrix,
+    pub uk: MatRef<'a>,
+    pub vk: MatRef<'a>,
+    pub ui: MatRef<'a>,
+    pub vi: MatRef<'a>,
     pub d: Option<&'a [f64]>,
     pub omega: Arg,
 }
@@ -205,6 +249,7 @@ pub struct SampleChain<'a> {
 #[derive(Default)]
 pub struct StreamBuilder<'a> {
     inputs: Vec<&'a Matrix>,
+    inputs32: Vec<&'a MatrixF32>,
     diags: Vec<&'a [f64]>,
     out_shapes: Vec<(usize, usize)>,
     ops: Vec<BatchOp>,
@@ -221,6 +266,20 @@ impl<'a> StreamBuilder<'a> {
         Arg::In(self.inputs.len() - 1)
     }
 
+    /// Register a read-only f32-stored input operand (mixed precision).
+    pub fn input32(&mut self, m: &'a MatrixF32) -> Arg {
+        self.inputs32.push(m);
+        Arg::In32(self.inputs32.len() - 1)
+    }
+
+    /// Register an operand of either precision.
+    pub fn input_any(&mut self, m: MatRef<'a>) -> Arg {
+        match m {
+            MatRef::F64(m) => self.input(m),
+            MatRef::F32(m) => self.input32(m),
+        }
+    }
+
     /// Allocate a zero-initialized output slot of the given shape.
     /// Slots double as temporaries: later ops may read them via
     /// [`Arg::Out`].
@@ -232,6 +291,7 @@ impl<'a> StreamBuilder<'a> {
     fn shape(&self, arg: Arg) -> (usize, usize) {
         match arg {
             Arg::In(i) => self.inputs[i].shape(),
+            Arg::In32(i) => self.inputs32[i].shape(),
             Arg::Out(s) => self.out_shapes[s],
         }
     }
@@ -290,6 +350,24 @@ impl<'a> StreamBuilder<'a> {
                 self.gemm(Trans::Yes, Trans::No, 1.0, f, x, 1.0, tmp);
                 self.gemm(Trans::No, Trans::No, alpha, s, Arg::Out(tmp), 1.0, dst);
             }
+            Tile::LowRank32(lr) => {
+                if lr.rank() == 0 {
+                    return;
+                }
+                let (first, second) = if transpose { (&lr.u, &lr.v) } else { (&lr.v, &lr.u) };
+                let f = self.input32(first);
+                let s = self.input32(second);
+                // The f64 chain puts the factors on the A side; here the
+                // first product is transposed instead (tmp = xᵀ·first,
+                // bs×rank) so the f32 factor lands on the *B* side and
+                // the executor hits the f32-packed mixed microkernel.
+                // The second product has the f32 factor on the A side,
+                // widened at pack time. All accumulation stays f64.
+                let tmp = self.output(bs, lr.rank());
+                // tmp = xᵀ first ; dst += alpha * second * tmpᵀ
+                self.gemm(Trans::Yes, Trans::No, 1.0, x, f, 1.0, tmp);
+                self.gemm(Trans::No, Trans::Yes, alpha, s, Arg::Out(tmp), 1.0, dst);
+            }
         }
     }
 
@@ -303,10 +381,10 @@ impl<'a> StreamBuilder<'a> {
             return;
         }
         let (_, bs) = self.shape(ch.omega);
-        let uk = self.input(ch.uk);
-        let vk = self.input(ch.vk);
-        let ui = self.input(ch.ui);
-        let vi = self.input(ch.vi);
+        let uk = self.input_any(ch.uk);
+        let vk = self.input_any(ch.vk);
+        let ui = self.input_any(ch.ui);
+        let vi = self.input_any(ch.vi);
         let t1 = self.output(ch.uk.cols(), bs);
         self.gemm(Trans::Yes, Trans::No, 1.0, uk, ch.omega, 1.0, t1);
         let t2 = self.output(ch.vk.rows(), bs);
@@ -354,6 +432,7 @@ impl<'a> StreamBuilder<'a> {
                 let (m, n) = self.out_shapes[g.dst];
                 let (ar, ac) = match g.a {
                     Arg::In(x) => self.inputs[x].shape(),
+                    Arg::In32(x) => self.inputs32[x].shape(),
                     Arg::Out(x) => self.out_shapes[x],
                 };
                 let k = if g.ta == Trans::No { ac } else { ar };
@@ -362,6 +441,7 @@ impl<'a> StreamBuilder<'a> {
         }
         let plan = BatchPlan {
             in_shapes: self.inputs.iter().map(|m| m.shape()).collect(),
+            in32_shapes: self.inputs32.iter().map(|m| m.shape()).collect(),
             out_shapes: self.out_shapes,
             diag_lens: self.diags.iter().map(|d| d.len()).collect(),
             ops: self.ops,
@@ -372,7 +452,7 @@ impl<'a> StreamBuilder<'a> {
             plan.assert_valid();
             true
         });
-        GemmStream { plan, inputs: self.inputs, diags: self.diags }
+        GemmStream { plan, inputs: self.inputs, inputs32: self.inputs32, diags: self.diags }
     }
 }
 
@@ -381,6 +461,7 @@ impl<'a> StreamBuilder<'a> {
 pub struct GemmStream<'a> {
     plan: BatchPlan,
     inputs: Vec<&'a Matrix>,
+    inputs32: Vec<&'a MatrixF32>,
     diags: Vec<&'a [f64]>,
 }
 
@@ -396,7 +477,7 @@ impl GemmStream<'_> {
 
     /// Run the stream, returning the final value of every output slot.
     pub fn execute(&self, exec: &dyn BatchedGemm) -> Vec<Matrix> {
-        exec.execute(&self.plan, &self.inputs, &self.diags)
+        exec.execute(&self.plan, &self.inputs, &self.inputs32, &self.diags)
     }
 }
 
@@ -408,13 +489,23 @@ impl GemmStream<'_> {
 /// must be value-deterministic: the result may not depend on scheduling.
 pub trait BatchedGemm: Sync {
     fn name(&self) -> &'static str;
-    fn execute(&self, plan: &BatchPlan, inputs: &[&Matrix], diags: &[&[f64]]) -> Vec<Matrix>;
+    fn execute(
+        &self,
+        plan: &BatchPlan,
+        inputs: &[&Matrix],
+        inputs32: &[&MatrixF32],
+        diags: &[&[f64]],
+    ) -> Vec<Matrix>;
 }
 
-fn check_operands(plan: &BatchPlan, inputs: &[&Matrix], diags: &[&[f64]]) {
+fn check_operands(plan: &BatchPlan, inputs: &[&Matrix], inputs32: &[&MatrixF32], diags: &[&[f64]]) {
     assert_eq!(inputs.len(), plan.in_shapes.len(), "input count mismatch");
     for (i, m) in inputs.iter().enumerate() {
         assert_eq!(m.shape(), plan.in_shapes[i], "input {i} shape changed since planning");
+    }
+    assert_eq!(inputs32.len(), plan.in32_shapes.len(), "f32 input count mismatch");
+    for (i, m) in inputs32.iter().enumerate() {
+        assert_eq!(m.shape(), plan.in32_shapes[i], "f32 input {i} shape changed since planning");
     }
     assert_eq!(diags.len(), plan.diag_lens.len(), "diagonal count mismatch");
     for (i, d) in diags.iter().enumerate() {
@@ -441,6 +532,7 @@ unsafe fn run_op(
     op: &BatchOp,
     slots: &SlotTable,
     inputs: &[&Matrix],
+    inputs32: &[&MatrixF32],
     diags: &[&[f64]],
     ws: &mut GemmWorkspace,
 ) {
@@ -448,14 +540,16 @@ unsafe fn run_op(
         BatchOp::Gemm(g) => {
             let c = slots.slot(g.dst);
             let a = match g.a {
-                Arg::In(i) => inputs[i],
-                Arg::Out(s) => slots.get(s),
+                Arg::In(i) => Src::F64(inputs[i]),
+                Arg::In32(i) => Src::F32(inputs32[i]),
+                Arg::Out(s) => Src::F64(slots.get(s)),
             };
             let b = match g.b {
-                Arg::In(i) => inputs[i],
-                Arg::Out(s) => slots.get(s),
+                Arg::In(i) => Src::F64(inputs[i]),
+                Arg::In32(i) => Src::F32(inputs32[i]),
+                Arg::Out(s) => Src::F64(slots.get(s)),
             };
-            gemm_with(g.ta, g.tb, g.alpha, a, b, g.beta, c, ws);
+            gemm_any(g.ta, g.tb, g.alpha, a, b, g.beta, c, ws);
         }
         BatchOp::ScaleRows { dst, d } => {
             let c = slots.slot(*dst);
@@ -529,11 +623,27 @@ pub struct NativeBatch {
     waves: AtomicU64,
     ops: AtomicU64,
     flops: AtomicU64,
+    /// Packing arenas recycled across `execute()` calls on this
+    /// executor. Workers used to build a fresh [`GemmWorkspace`] per
+    /// plan, so an executor driving many small plans (the ARA
+    /// per-round streams) re-grew its panels from zero every call;
+    /// pooling keeps the arenas at their high-water size.
+    ws_pool: Mutex<Vec<GemmWorkspace>>,
 }
 
 impl NativeBatch {
     pub fn new() -> NativeBatch {
         NativeBatch::default()
+    }
+
+    fn take_ws(&self) -> GemmWorkspace {
+        self.ws_pool.lock().ok().and_then(|mut p| p.pop()).unwrap_or_default()
+    }
+
+    fn put_ws(&self, ws: GemmWorkspace) {
+        if let Ok(mut p) = self.ws_pool.lock() {
+            p.push(ws);
+        }
     }
 
     /// An executor that books per-op time and per-plan FLOPs into
@@ -571,15 +681,16 @@ impl NativeBatch {
         op: &BatchOp,
         slots: &SlotTable,
         inputs: &[&Matrix],
+        inputs32: &[&MatrixF32],
         diags: &[&[f64]],
         ws: &mut GemmWorkspace,
     ) {
         match self.phase {
             Some(p) => {
                 let _t = Timer::new(p);
-                run_op(op, slots, inputs, diags, ws);
+                run_op(op, slots, inputs, inputs32, diags, ws);
             }
-            None => run_op(op, slots, inputs, diags, ws),
+            None => run_op(op, slots, inputs, inputs32, diags, ws),
         }
     }
 }
@@ -589,8 +700,14 @@ impl BatchedGemm for NativeBatch {
         "native"
     }
 
-    fn execute(&self, plan: &BatchPlan, inputs: &[&Matrix], diags: &[&[f64]]) -> Vec<Matrix> {
-        check_operands(plan, inputs, diags);
+    fn execute(
+        &self,
+        plan: &BatchPlan,
+        inputs: &[&Matrix],
+        inputs32: &[&MatrixF32],
+        diags: &[&[f64]],
+    ) -> Vec<Matrix> {
+        check_operands(plan, inputs, inputs32, diags);
         self.bump(plan);
         let mut outs: Vec<Matrix> =
             plan.out_shapes.iter().map(|&(r, c)| Matrix::zeros(r, c)).collect();
@@ -601,12 +718,14 @@ impl BatchedGemm for NativeBatch {
         if nt <= 1 || plan.ops.len() < 4 {
             // Inline path: program order is a valid serial schedule.
             let slots = SlotTable::new(&mut outs);
-            let mut ws = GemmWorkspace::new();
+            let mut ws = self.take_ws();
             for op in &plan.ops {
                 // SAFETY: single thread; operands never alias dst
                 // (builder invariant).
-                unsafe { self.run_op_timed(op, &slots, inputs, diags, &mut ws) };
+                unsafe { self.run_op_timed(op, &slots, inputs, inputs32, diags, &mut ws) };
             }
+            drop(slots);
+            self.put_ws(ws);
             return outs;
         }
         let counters: Vec<AtomicUsize> = plan.waves.iter().map(|_| AtomicUsize::new(0)).collect();
@@ -615,7 +734,7 @@ impl BatchedGemm for NativeBatch {
         std::thread::scope(|scope| {
             for _ in 0..nt {
                 scope.spawn(|| {
-                    let mut ws = GemmWorkspace::new();
+                    let mut ws = self.take_ws();
                     for (wi, wave) in plan.waves.iter().enumerate() {
                         loop {
                             let t = counters[wi].fetch_add(1, Ordering::Relaxed);
@@ -627,10 +746,13 @@ impl BatchedGemm for NativeBatch {
                             // distinct slot and reads only slots no op
                             // of the wave writes (plan invariant), and
                             // the barrier orders the waves.
-                            unsafe { self.run_op_timed(op, &slots, inputs, diags, &mut ws) };
+                            unsafe {
+                                self.run_op_timed(op, &slots, inputs, inputs32, diags, &mut ws)
+                            };
                         }
                         barrier.wait();
                     }
+                    self.put_ws(ws);
                 });
             }
         });
@@ -665,21 +787,28 @@ impl BatchedGemm for RefBatch {
         "reference"
     }
 
-    fn execute(&self, plan: &BatchPlan, inputs: &[&Matrix], diags: &[&[f64]]) -> Vec<Matrix> {
-        check_operands(plan, inputs, diags);
+    fn execute(
+        &self,
+        plan: &BatchPlan,
+        inputs: &[&Matrix],
+        inputs32: &[&MatrixF32],
+        diags: &[&[f64]],
+    ) -> Vec<Matrix> {
+        check_operands(plan, inputs, inputs32, diags);
         let mut outs: Vec<Matrix> =
             plan.out_shapes.iter().map(|&(r, c)| Matrix::zeros(r, c)).collect();
         for op in &plan.ops {
             match op {
                 BatchOp::Gemm(g) => {
-                    let a = match g.a {
+                    // f32 operands widen exactly, so the oracle computes
+                    // the same numbers the mixed kernels must produce.
+                    let resolve = |arg: Arg, outs: &[Matrix]| match arg {
                         Arg::In(i) => inputs[i].clone(),
+                        Arg::In32(i) => inputs32[i].widen(),
                         Arg::Out(s) => outs[s].clone(),
                     };
-                    let b = match g.b {
-                        Arg::In(i) => inputs[i].clone(),
-                        Arg::Out(s) => outs[s].clone(),
-                    };
+                    let a = resolve(g.a, &outs);
+                    let b = resolve(g.b, &outs);
                     naive_gemm(g, &a, &b, &mut outs[g.dst]);
                 }
                 BatchOp::ScaleRows { dst, d } => {
@@ -793,7 +922,14 @@ mod tests {
             let omega = sb.input(&om);
             let y = sb.output(7, bs);
             sb.sample_chain(
-                &SampleChain { uk: &uk, vk: &vk, ui: &ui, vi: &vi, d: dopt, omega },
+                &SampleChain {
+                    uk: (&uk).into(),
+                    vk: (&vk).into(),
+                    ui: (&ui).into(),
+                    vi: (&vi).into(),
+                    d: dopt,
+                    omega,
+                },
                 -1.0,
                 y,
             );
@@ -838,6 +974,101 @@ mod tests {
         assert!(close(&outs[y1], &low.apply(&x5), 1e-13));
         assert!(close(&outs[y2], &low.apply_t(&x6), 1e-13));
         assert_eq!(outs[y3].norm_max(), 0.0);
+    }
+
+    #[test]
+    fn apply_tile_mixed_matches_widened_oracle() {
+        use crate::tlr::tile::LowRank32;
+        let mut rng = Rng::new(7);
+        let lr = LowRank { u: rng.normal_matrix(9, 3), v: rng.normal_matrix(6, 3) };
+        let lr32 = LowRank32::from_f64(&lr);
+        let wide = Tile::LowRank(lr32.to_f64());
+        let mixed = Tile::LowRank32(lr32.clone());
+        let zero32 = Tile::LowRank32(LowRank32::from_f64(&LowRank::zero(9, 6)));
+        let x6 = rng.normal_matrix(6, 4);
+        let x9 = rng.normal_matrix(9, 4);
+        let mut sb = StreamBuilder::new();
+        let (x6r, x9r) = (sb.input(&x6), sb.input(&x9));
+        let y0 = sb.output(9, 4);
+        sb.apply_tile(&mixed, x6r, 2.0, y0, false);
+        let y1 = sb.output(6, 4);
+        sb.apply_tile(&mixed, x9r, -1.0, y1, true);
+        let y2 = sb.output(9, 4);
+        sb.apply_tile(&zero32, x6r, 1.0, y2, false);
+        let stream = sb.finish();
+        stream.plan().assert_valid();
+        let native = stream.execute(&NativeBatch::new());
+        let oracle = stream.execute(&RefBatch);
+        // Native mixed kernels vs the serial widened oracle: exact up to
+        // f64 roundoff (widening f32 → f64 is exact).
+        for (n, o) in native.iter().zip(&oracle) {
+            assert!(close(n, o, 1e-13));
+        }
+        // And both match the widened-tile products.
+        let mut e0 = wide.apply(&x6);
+        e0.scale(2.0);
+        assert!(close(&native[y0], &e0, 1e-13));
+        let mut e1 = wide.apply_t(&x9);
+        e1.scale(-1.0);
+        assert!(close(&native[y1], &e1, 1e-13));
+        assert_eq!(native[y2].norm_max(), 0.0);
+    }
+
+    #[test]
+    fn sample_chain_mixed_matches_f64_chain() {
+        use crate::linalg::matrix32::MatrixF32;
+        let mut rng = Rng::new(8);
+        let uk = rng.normal_matrix(10, 3);
+        let vk = rng.normal_matrix(8, 3);
+        let ui = rng.normal_matrix(7, 5);
+        let vi = rng.normal_matrix(8, 5);
+        let om = rng.normal_matrix(10, 4);
+        let (uk32, vk32) = (MatrixF32::from_f64(&uk), MatrixF32::from_f64(&vk));
+        let (ui32, vi32) = (MatrixF32::from_f64(&ui), MatrixF32::from_f64(&vi));
+        // Mixed chain on the native executor...
+        let mut sb = StreamBuilder::new();
+        let omega = sb.input(&om);
+        let y = sb.output(7, 4);
+        sb.sample_chain(
+            &SampleChain {
+                uk: (&uk32).into(),
+                vk: (&vk32).into(),
+                ui: (&ui32).into(),
+                vi: (&vi32).into(),
+                d: None,
+                omega,
+            },
+            -1.0,
+            y,
+        );
+        let mixed = sb.finish();
+        mixed.plan().assert_valid();
+        let got = mixed.execute(&NativeBatch::new());
+        // ...must equal the f64 chain over the widened factors exactly
+        // (to roundoff): widening is exact and accumulation is f64.
+        let (ukw, vkw) = (uk32.widen(), vk32.widen());
+        let (uiw, viw) = (ui32.widen(), vi32.widen());
+        let mut expect = matmul(&uiw, &matmul_tn(&viw, &matmul(&vkw, &matmul_tn(&ukw, &om))));
+        expect.scale(-1.0);
+        assert!(close(&got[y], &expect, 1e-13));
+    }
+
+    #[test]
+    fn workspace_pool_recycles_across_plans() {
+        let exec = NativeBatch::new();
+        let mut rng = Rng::new(9);
+        let a = rng.normal_matrix(40, 30);
+        let b = rng.normal_matrix(30, 20);
+        for _ in 0..3 {
+            let mut sb = StreamBuilder::new();
+            let (ar, br) = (sb.input(&a), sb.input(&b));
+            let y = sb.output(40, 20);
+            sb.gemm(Trans::No, Trans::No, 1.0, ar, br, 1.0, y);
+            let outs = sb.finish().execute(&exec);
+            assert!(close(&outs[y], &matmul(&a, &b), 1e-13));
+        }
+        // The inline path returned its arena to the pool each time.
+        assert!(!exec.ws_pool.lock().unwrap().is_empty());
     }
 
     #[test]

@@ -47,8 +47,8 @@ pub mod gemm_batch;
 
 pub use buffer::ParallelBuffers;
 pub use gemm_batch::{
-    run_single, Arg, BatchOp, BatchPlan, BatchedGemm, ExecStats, GemmOp, GemmStream, NativeBatch,
-    RefBatch, SampleChain, StreamBuilder,
+    run_single, Arg, BatchOp, BatchPlan, BatchedGemm, ExecStats, GemmOp, GemmStream, MatRef,
+    NativeBatch, RefBatch, SampleChain, StreamBuilder,
 };
 
 use std::sync::atomic::{AtomicUsize, Ordering};

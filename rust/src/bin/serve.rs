@@ -16,9 +16,10 @@
 //! straight from disk.
 
 use h2opus_tlr::batch::NativeBatch;
-use h2opus_tlr::config::{FactorKind, RunConfig};
+use h2opus_tlr::config::{FactorKind, PrecisionPolicy, RunConfig};
 use h2opus_tlr::factor::{cholesky, ldlt};
 use h2opus_tlr::linalg::rng::Rng;
+use h2opus_tlr::tlr::demote_offdiag;
 use h2opus_tlr::serve::{
     FactorStore, ServeError, ServeOpts, ShardedService, SolveService, StoredFactor,
 };
@@ -174,7 +175,7 @@ fn obtain_factor(cfg: &RunConfig, store: &FactorStore, key: u64, use_mmap: bool)
     let build_secs = t0.elapsed().as_secs_f64();
     let opts = cfg.factor_opts();
     let t1 = Instant::now();
-    let stored = match cfg.kind {
+    let mut stored = match cfg.kind {
         FactorKind::Cholesky => match cholesky(tlr, &opts) {
             Ok(f) => StoredFactor::Chol(f),
             Err(e) => {
@@ -191,6 +192,23 @@ fn obtain_factor(cfg: &RunConfig, store: &FactorStore, key: u64, use_mmap: bool)
             }
         },
     };
+    // The factorization itself always runs in f64; --precision mixed
+    // demotes eligible off-diagonal tiles to f32 storage afterwards, so
+    // the saved factor (and every mmap-served solve against it) pays
+    // half the bytes where the rounding fits inside eps.
+    if cfg.precision == PrecisionPolicy::Mixed {
+        let l = match &mut stored {
+            StoredFactor::Chol(f) => &mut f.l,
+            StoredFactor::Ldl(f) => &mut f.l,
+        };
+        let st = demote_offdiag(l, cfg.eps);
+        println!(
+            "precision  : mixed — demoted {}/{} off-diagonal tiles to f32 ({} bytes saved)",
+            st.demoted,
+            st.demoted + st.kept,
+            st.bytes_saved
+        );
+    }
     let factor_secs = t1.elapsed().as_secs_f64();
     let path = match &stored {
         StoredFactor::Chol(f) => store.save_chol(key, f, &cfg.summary()),

@@ -74,6 +74,19 @@ pub enum BackendKind {
     Pjrt,
 }
 
+/// Tile storage precision for the *stored* factor. Factorization always
+/// runs in f64; `Mixed` demotes off-diagonal low-rank tiles to f32 after
+/// the fact, wherever [`crate::tlr::should_demote`] shows the rounding
+/// fits inside the compression budget ε.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum PrecisionPolicy {
+    /// Every tile stays f64 (the historical behaviour).
+    #[default]
+    F64,
+    /// Demote eligible off-diagonal tiles to f32 storage.
+    Mixed,
+}
+
 /// The full run description.
 #[derive(Debug, Clone)]
 pub struct RunConfig {
@@ -98,6 +111,8 @@ pub struct RunConfig {
     pub shift: f64,
     pub seed: u64,
     pub backend: BackendKind,
+    /// Stored-factor tile precision policy.
+    pub precision: PrecisionPolicy,
     /// Artifact directory for the PJRT backend.
     pub artifacts: std::path::PathBuf,
     /// Fractional order s and reaction α (fracdiff only).
@@ -125,6 +140,7 @@ impl Default for RunConfig {
             shift: 0.0,
             seed: 0x5EED,
             backend: BackendKind::Native,
+            precision: PrecisionPolicy::F64,
             artifacts: crate::runtime::default_artifacts_dir(),
             frac_s: 0.5,
             frac_alpha: 1.0,
@@ -338,6 +354,13 @@ impl RunConfig {
                     _ => return Err(ConfigError(format!("--backend: '{val}' (native | pjrt)"))),
                 }
             }
+            "precision" => {
+                self.precision = match val {
+                    "f64" | "double" => PrecisionPolicy::F64,
+                    "mixed" => PrecisionPolicy::Mixed,
+                    _ => return Err(ConfigError(format!("--precision: '{val}' (f64 | mixed)"))),
+                }
+            }
             other => return Err(ConfigError(format!("unknown option '--{other}'"))),
         }
         Ok(())
@@ -395,7 +418,7 @@ impl RunConfig {
     /// changing this format string migrates every stored factor AND
     /// remaps every shard. Bump the `fk` version prefix if you must.
     pub fn factor_key(&self) -> u64 {
-        let desc = format!(
+        let mut desc = format!(
             "fk1|{}|n={}|m={}|eps={:e}|bs={}|kind={:?}|pivot={:?}|schur={}|modchol={}|shift={:e}|seed={}|fs={:e}|fa={:e}|fc={:e}|cl={:e}",
             self.problem.name(),
             self.n,
@@ -413,6 +436,12 @@ impl RunConfig {
             self.frac_contrast,
             self.corr_len
         );
+        // Appended (rather than a new positional field) so every key
+        // minted before the precision policy existed — i.e. every f64
+        // factor already on disk — keeps its value.
+        if self.precision == PrecisionPolicy::Mixed {
+            desc.push_str("|prec=mixed");
+        }
         crate::serve::store::fnv1a(desc.as_bytes())
     }
 
@@ -526,6 +555,21 @@ mod tests {
         assert_ne!(base.factor_key(), diff_n.factor_key());
         let diff_kind = RunConfig { kind: FactorKind::Ldlt, ..base.clone() };
         assert_ne!(base.factor_key(), diff_kind.factor_key());
+        let diff_prec = RunConfig { precision: PrecisionPolicy::Mixed, ..base.clone() };
+        assert_ne!(
+            base.factor_key(),
+            diff_prec.factor_key(),
+            "mixed-precision factors hold different bytes and need their own key"
+        );
+    }
+
+    #[test]
+    fn precision_flag_parses() {
+        let c = RunConfig::from_args(&argv("--precision mixed")).unwrap();
+        assert_eq!(c.precision, PrecisionPolicy::Mixed);
+        let c = RunConfig::from_args(&argv("--precision f64")).unwrap();
+        assert_eq!(c.precision, PrecisionPolicy::F64);
+        assert!(RunConfig::from_args(&argv("--precision f16")).is_err());
     }
 
     #[test]

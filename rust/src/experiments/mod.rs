@@ -252,6 +252,73 @@ pub fn batched_gemm_roofline(
     (c.batch_ab, c.batch_atb)
 }
 
+/// Single-call GEMM throughput at one `(m, n, k)` shape for one inner
+/// rank `k`: the scalar microkernel, the dispatched SIMD kernel, and the
+/// mixed-precision (f32-packed B) path — the per-kernel roofline the
+/// SIMD dispatch is judged against (EXPERIMENTS.md §Kernel roofline).
+#[derive(Debug, Clone, Copy)]
+pub struct KernelRoofline {
+    pub k: usize,
+    /// GFLOP/s through the portable scalar microkernel.
+    pub scalar: f64,
+    /// GFLOP/s through [`crate::linalg::simd::active`] (name in
+    /// [`KernelRoofline::kernel_name`]).
+    pub active: f64,
+    /// GFLOP/s through the active kernel with the B panel packed f32.
+    pub mixed: f64,
+    /// Which kernel `active`/`mixed` ran on.
+    pub kernel_name: &'static str,
+}
+
+/// Measure [`KernelRoofline`] rows at `m×n` outputs over the inner
+/// dimensions `ks` — the factorization's hot shape is `m = n =` tile
+/// size with `k` the tile rank, so small-`k` rows dominate in practice.
+pub fn kernel_roofline(
+    m: usize,
+    n: usize,
+    ks: &[usize],
+    reps: usize,
+    seed: u64,
+) -> Vec<KernelRoofline> {
+    use crate::linalg::gemm::{gemm_core, gemm_flops, GemmWorkspace, Src, Trans};
+    use crate::linalg::matrix32::MatrixF32;
+    use crate::linalg::simd::{self, Kernel};
+    let mut rng = Rng::new(seed);
+    let active = simd::active();
+    let mut out = Vec::with_capacity(ks.len());
+    for &k in ks {
+        let a = rng.normal_matrix(m, k);
+        let b = rng.normal_matrix(k, n);
+        let b32 = MatrixF32::from_f64(&b);
+        let mut c = Matrix::zeros(m, n);
+        let mut ws = GemmWorkspace::new();
+        let gf = |secs: f64| gemm_flops(m, n, k) as f64 / secs / 1e9;
+        let (min_scalar, _) = bench_time(reps, || {
+            let (sa, sb) = (Src::F64(&a), Src::F64(&b));
+            gemm_core(Kernel::Scalar, Trans::No, Trans::No, 1.0, sa, sb, 0.0, &mut c, &mut ws);
+            std::hint::black_box(&c);
+        });
+        let (min_active, _) = bench_time(reps, || {
+            let (sa, sb) = (Src::F64(&a), Src::F64(&b));
+            gemm_core(active, Trans::No, Trans::No, 1.0, sa, sb, 0.0, &mut c, &mut ws);
+            std::hint::black_box(&c);
+        });
+        let (min_mixed, _) = bench_time(reps, || {
+            let (sa, sb) = (Src::F64(&a), Src::F32(&b32));
+            gemm_core(active, Trans::No, Trans::No, 1.0, sa, sb, 0.0, &mut c, &mut ws);
+            std::hint::black_box(&c);
+        });
+        out.push(KernelRoofline {
+            k,
+            scalar: gf(min_scalar),
+            active: gf(min_active),
+            mixed: gf(min_mixed),
+            kernel_name: active.name(),
+        });
+    }
+    out
+}
+
 /// Memory of a factor's tiles after an SVD recompression pass at `eps` —
 /// the paper's Fig 11b ARA-vs-SVD comparison (paper: ~5% rank overhead;
 /// ours lands at ~23% — see EXPERIMENTS.md Fig 11b for the analysis).
@@ -264,6 +331,10 @@ pub fn svd_recompressed_ranks(l: &TlrMatrix, eps: f64) -> (Vec<usize>, Vec<usize
         let (i, j) = coords[idx];
         match l.tile(i, j) {
             Tile::LowRank(lr) => (lr.rank(), lr.recompress(eps).rank()),
+            Tile::LowRank32(lr) => {
+                let wide = lr.to_f64();
+                (wide.rank(), wide.recompress(eps).rank())
+            }
             Tile::Dense(_) => unreachable!(),
         }
     });
@@ -331,6 +402,16 @@ mod tests {
     fn roofline_is_positive() {
         let (ab, atb) = batched_gemm_roofline(64, 8, 16, 8, 16, 4);
         assert!(ab > 0.0 && atb > 0.0);
+    }
+
+    #[test]
+    fn kernel_roofline_rows_are_positive() {
+        let rows = kernel_roofline(48, 48, &[4, 16], 2, 7);
+        assert_eq!(rows.len(), 2);
+        for r in &rows {
+            assert_eq!(rows[0].kernel_name, r.kernel_name);
+            assert!(r.scalar > 0.0 && r.active > 0.0 && r.mixed > 0.0, "{r:?}");
+        }
     }
 
     #[test]

@@ -231,6 +231,7 @@ fn transpose_tile(t: &Tile) -> Tile {
     match t {
         Tile::Dense(d) => Tile::Dense(d.transpose()),
         Tile::LowRank(lr) => Tile::LowRank(lr.transpose()),
+        Tile::LowRank32(lr) => Tile::LowRank32(lr.transpose()),
     }
 }
 
@@ -264,6 +265,8 @@ fn combine_tiles(
         for (t, c) in srcs {
             let lr = match t {
                 Tile::LowRank(lr) => lr.clone(),
+                // Mixed-stored input: widen (exact) and combine in f64.
+                Tile::LowRank32(lr) => lr.to_f64(),
                 // A dense source can only appear here if the input had
                 // dense off-diagonal tiles; handle it by compression.
                 Tile::Dense(d) => LowRank::compress_svd(d, eps, rows.min(cols)),

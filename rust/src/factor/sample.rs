@@ -107,7 +107,30 @@ impl Sampler for LeftSampler<'_> {
             match (first, second) {
                 (Tile::LowRank(f), Tile::LowRank(s)) => {
                     sb.sample_chain(
-                        &SampleChain { uk: &f.u, vk: &f.v, ui: &s.u, vi: &s.v, d, omega: om },
+                        &SampleChain {
+                            uk: (&f.u).into(),
+                            vk: (&f.v).into(),
+                            ui: (&s.u).into(),
+                            vi: (&s.v).into(),
+                            d,
+                            omega: om,
+                        },
+                        -alpha,
+                        dst,
+                    );
+                }
+                // Mixed-stored updates use the same fused chain; the f32
+                // factors widen inside the GEMM kernels (f64 sampling).
+                (Tile::LowRank32(f), Tile::LowRank32(s)) => {
+                    sb.sample_chain(
+                        &SampleChain {
+                            uk: (&f.u).into(),
+                            vk: (&f.v).into(),
+                            ui: (&s.u).into(),
+                            vi: (&s.v).into(),
+                            d,
+                            omega: om,
+                        },
                         -alpha,
                         dst,
                     );
@@ -166,6 +189,21 @@ pub fn dense_diag_update(
                 // D += W Wᵀ.
                 gemm(Trans::No, Trans::Yes, 1.0, w, w, 1.0, &mut d);
                 add_flops(Phase::DenseUpdate, 2 * (m * m * w.cols()) as u64);
+            }
+            // Factorization-time tiles are f64 (demotion happens
+            // post-factorization), but widen defensively if one appears.
+            Tile::LowRank32(lr32) => {
+                let lr = lr32.to_f64();
+                if lr.rank() == 0 {
+                    continue;
+                }
+                let mut v = lr.v.clone();
+                if let Some(db) = dblocks {
+                    scale_rows(&mut v, &db[j]);
+                }
+                let t = matmul_tn(&v, &lr.v);
+                let ut = matmul(&lr.u, &t);
+                gemm(Trans::No, Trans::Yes, 1.0, &ut, &lr.u, 1.0, &mut d);
             }
         }
     }

@@ -5,11 +5,22 @@
 //! batched engine in [`crate::batch`] dispatches every tile product here.
 //!
 //! The kernel is a classic three-level cache-blocked GEMM (GotoBLAS
-//! scheme): packed `MC×KC` panels of `A` and `KC×NC` panels of `B`, with an
-//! `MR×NR` register microkernel in the middle. Everything is `f64` and
-//! column-major.
+//! scheme): packed `MC×KC` panels of `A` and `KC×NC` panels of `B`, with
+//! an `MR×NR` register microkernel in the middle. The microkernel is
+//! selected once per process by [`crate::linalg::simd`] — scalar
+//! fallback, AVX2/FMA, AVX-512 or NEON — and the pack routines re-tune
+//! their panel heights to the active kernel's `(MR, NR)` blocking.
+//!
+//! Operands are f64 and column-major; either side may also be an f32
+//! [`MatrixF32`] (mixed-precision tile storage, paper §7). An f32 A is
+//! widened to f64 while packing (the DRAM read stays half-width); an f32
+//! B is packed *as f32* and widened inside the microkernel broadcast
+//! ([`gemm_mixed`]), so the packed panel's cache footprint is halved too.
+//! All accumulation is f64 in every case.
 
 use super::matrix::Matrix;
+use super::matrix32::MatrixF32;
+use super::simd::{self, Kernel};
 
 /// Transposition flag for [`gemm`] operands.
 #[derive(Clone, Copy, PartialEq, Eq, Debug)]
@@ -25,26 +36,49 @@ pub enum Trans {
 const MC: usize = 128;
 const KC: usize = 256;
 const NC: usize = 512;
+// Register blocking of the scalar fallback kernel; the SIMD kernels pick
+// their own via `Kernel::blocking` (only test code references these).
 const MR: usize = 16;
 const NR: usize = 4;
+
+/// One GEMM operand: full-precision f64, or an f32 matrix participating
+/// in a mixed-precision product with f64 accumulation.
+#[derive(Clone, Copy)]
+pub enum Src<'a> {
+    F64(&'a Matrix),
+    F32(&'a MatrixF32),
+}
+
+impl Src<'_> {
+    #[inline(always)]
+    pub fn shape(&self) -> (usize, usize) {
+        match self {
+            Src::F64(m) => m.shape(),
+            Src::F32(m) => m.shape(),
+        }
+    }
+}
 
 /// Reusable packing buffers for [`gemm_with`].
 ///
 /// A plain [`gemm`] call allocates (and zero-fills) fresh `MC×KC` /
 /// `KC×NC` panel copies; for the factorization's many small GEMMs that
 /// allocation used to dominate their runtime (EXPERIMENTS.md §Perf).
-/// The batched executor ([`crate::batch::NativeBatch`]) keeps one
-/// workspace per worker thread and reuses it across every op of a
-/// [`crate::batch::BatchPlan`].
+/// The batched executor ([`crate::batch::NativeBatch`]) keeps a pool of
+/// workspaces and reuses them across every op of every
+/// [`crate::batch::BatchPlan`] it executes.
 #[derive(Debug, Default)]
 pub struct GemmWorkspace {
     apack: Vec<f64>,
     bpack: Vec<f64>,
+    /// f32 B-panels for the mixed kernels: packed without widening so
+    /// the panel's cache/bandwidth footprint stays halved.
+    bpack32: Vec<f32>,
 }
 
 impl GemmWorkspace {
     pub fn new() -> GemmWorkspace {
-        GemmWorkspace { apack: Vec::new(), bpack: Vec::new() }
+        GemmWorkspace { apack: Vec::new(), bpack: Vec::new(), bpack32: Vec::new() }
     }
 }
 
@@ -68,13 +102,67 @@ pub fn gemm_with(
     c: &mut Matrix,
     ws: &mut GemmWorkspace,
 ) {
+    gemm_core(simd::active(), ta, tb, alpha, Src::F64(a), Src::F64(b), beta, c, ws);
+}
+
+/// Mixed-precision GEMM: f64 `A`, f32 `B` packed at half width, f64
+/// accumulation throughout (paper §7 — "sampling in the higher
+/// precision").
+#[allow(clippy::too_many_arguments)]
+pub fn gemm_mixed(
+    ta: Trans,
+    tb: Trans,
+    alpha: f64,
+    a: &Matrix,
+    b: &MatrixF32,
+    beta: f64,
+    c: &mut Matrix,
+    ws: &mut GemmWorkspace,
+) {
+    gemm_core(simd::active(), ta, tb, alpha, Src::F64(a), Src::F32(b), beta, c, ws);
+}
+
+/// GEMM over [`Src`] operands with the process-active kernel — the entry
+/// the batched executor uses for every op, f64 or mixed.
+#[allow(clippy::too_many_arguments)]
+pub fn gemm_any(
+    ta: Trans,
+    tb: Trans,
+    alpha: f64,
+    a: Src,
+    b: Src,
+    beta: f64,
+    c: &mut Matrix,
+    ws: &mut GemmWorkspace,
+) {
+    gemm_core(simd::active(), ta, tb, alpha, a, b, beta, c, ws);
+}
+
+/// The blocked GEMM driver with an explicit microkernel choice. Public
+/// so the property tests and the roofline bench can pin each available
+/// kernel against the scalar oracle; everything else goes through
+/// [`gemm_with`] / [`gemm_any`] and the cached [`simd::active`] kernel.
+#[allow(clippy::too_many_arguments)]
+pub fn gemm_core(
+    kernel: Kernel,
+    ta: Trans,
+    tb: Trans,
+    alpha: f64,
+    a: Src,
+    b: Src,
+    beta: f64,
+    c: &mut Matrix,
+    ws: &mut GemmWorkspace,
+) {
+    let (am, an) = a.shape();
+    let (bm, bn) = b.shape();
     let (m, ka) = match ta {
-        Trans::No => a.shape(),
-        Trans::Yes => (a.cols(), a.rows()),
+        Trans::No => (am, an),
+        Trans::Yes => (an, am),
     };
     let (kb, n) = match tb {
-        Trans::No => b.shape(),
-        Trans::Yes => (b.cols(), b.rows()),
+        Trans::No => (bm, bn),
+        Trans::Yes => (bn, bm),
     };
     assert_eq!(ka, kb, "gemm: inner dimension mismatch");
     assert_eq!(c.shape(), (m, n), "gemm: output shape mismatch");
@@ -91,20 +179,28 @@ pub fn gemm_with(
         return;
     }
 
+    let (mr_b, nr_b) = kernel.blocking();
+    let mixed = matches!(b, Src::F32(_));
+    crate::profile::add_kernel_call(kernel.index(), mixed);
+
     // Packing buffers (panel copies in the blocked layout), sized to the
     // actual blocks: the factorization's GEMMs are mostly small
     // (m ~ tile size, k ~ rank, n ~ bs), and allocating/zeroing the full
     // MC*KC / KC*NC panels per call used to dominate their runtime
     // (EXPERIMENTS.md §Perf).
-    let mc_max = MC.min(m).div_ceil(MR) * MR;
+    let mc_max = MC.min(m).div_ceil(mr_b) * mr_b;
     let kc_max = KC.min(k);
-    let nc_max = NC.min(n).div_ceil(NR) * NR;
+    let nc_max = NC.min(n).div_ceil(nr_b) * nr_b;
     // The pack routines overwrite every entry they cover (padding
     // included), so a larger leftover buffer never leaks stale values.
     if ws.apack.len() < mc_max * kc_max {
         ws.apack.resize(mc_max * kc_max, 0.0);
     }
-    if ws.bpack.len() < kc_max * nc_max {
+    if mixed {
+        if ws.bpack32.len() < kc_max * nc_max {
+            ws.bpack32.resize(kc_max * nc_max, 0.0);
+        }
+    } else if ws.bpack.len() < kc_max * nc_max {
         ws.bpack.resize(kc_max * nc_max, 0.0);
     }
 
@@ -112,24 +208,41 @@ pub fn gemm_with(
         let nc = NC.min(n - jc);
         for pc in (0..k).step_by(KC) {
             let kc = KC.min(k - pc);
-            pack_b(tb, b, pc, jc, kc, nc, &mut ws.bpack);
+            match b {
+                Src::F64(bm) => pack_b(tb, bm, pc, jc, kc, nc, nr_b, &mut ws.bpack),
+                Src::F32(bm) => pack_b32(tb, bm, pc, jc, kc, nc, nr_b, &mut ws.bpack32),
+            }
             for ic in (0..m).step_by(MC) {
                 let mc = MC.min(m - ic);
-                pack_a(ta, a, ic, pc, mc, kc, &mut ws.apack);
-                macro_block(alpha, &ws.apack, &ws.bpack, mc, nc, kc, c, ic, jc);
+                match a {
+                    Src::F64(am) => pack_a(ta, am, ic, pc, mc, kc, mr_b, &mut ws.apack),
+                    Src::F32(am) => pack_a32(ta, am, ic, pc, mc, kc, mr_b, &mut ws.apack),
+                }
+                macro_block(kernel, mixed, alpha, ws, mc, nc, kc, c, ic, jc, mr_b, nr_b);
             }
         }
     }
 }
 
 /// Pack an `mc×kc` block of `op(A)` starting at `(ic, pc)` into row-panels
-/// of height `MR`: panel p holds rows `[p*MR, p*MR+MR)` stored k-major.
-fn pack_a(ta: Trans, a: &Matrix, ic: usize, pc: usize, mc: usize, kc: usize, apack: &mut [f64]) {
+/// of height `mr_b` (the active kernel's MR): panel p holds rows
+/// `[p*mr_b, p*mr_b+mr_b)` stored k-major.
+#[allow(clippy::too_many_arguments)]
+fn pack_a(
+    ta: Trans,
+    a: &Matrix,
+    ic: usize,
+    pc: usize,
+    mc: usize,
+    kc: usize,
+    mr_b: usize,
+    apack: &mut [f64],
+) {
     let mut idx = 0;
-    for p in (0..mc).step_by(MR) {
-        let mr = MR.min(mc - p);
+    for p in (0..mc).step_by(mr_b) {
+        let mr = mr_b.min(mc - p);
         for kk in 0..kc {
-            for i in 0..MR {
+            for i in 0..mr_b {
                 apack[idx] = if i < mr {
                     match ta {
                         Trans::No => a[(ic + p + i, pc + kk)],
@@ -144,14 +257,57 @@ fn pack_a(ta: Trans, a: &Matrix, ic: usize, pc: usize, mc: usize, kc: usize, apa
     }
 }
 
-/// Pack a `kc×nc` block of `op(B)` starting at `(pc, jc)` into column-panels
-/// of width `NR`: panel q holds cols `[q*NR, q*NR+NR)` stored k-major.
-fn pack_b(tb: Trans, b: &Matrix, pc: usize, jc: usize, kc: usize, nc: usize, bpack: &mut [f64]) {
+/// [`pack_a`] from an f32 source: the panel is widened to f64 while
+/// packing, so the main-memory read of the operand stays half-width and
+/// the microkernel sees ordinary f64 A-panels.
+#[allow(clippy::too_many_arguments)]
+fn pack_a32(
+    ta: Trans,
+    a: &MatrixF32,
+    ic: usize,
+    pc: usize,
+    mc: usize,
+    kc: usize,
+    mr_b: usize,
+    apack: &mut [f64],
+) {
     let mut idx = 0;
-    for q in (0..nc).step_by(NR) {
-        let nr = NR.min(nc - q);
+    for p in (0..mc).step_by(mr_b) {
+        let mr = mr_b.min(mc - p);
         for kk in 0..kc {
-            for j in 0..NR {
+            for i in 0..mr_b {
+                apack[idx] = if i < mr {
+                    match ta {
+                        Trans::No => a.at(ic + p + i, pc + kk) as f64,
+                        Trans::Yes => a.at(pc + kk, ic + p + i) as f64,
+                    }
+                } else {
+                    0.0
+                };
+                idx += 1;
+            }
+        }
+    }
+}
+
+/// Pack a `kc×nc` block of `op(B)` starting at `(pc, jc)` into column-panels
+/// of width `nr_b`: panel q holds cols `[q*nr_b, q*nr_b+nr_b)` stored k-major.
+#[allow(clippy::too_many_arguments)]
+fn pack_b(
+    tb: Trans,
+    b: &Matrix,
+    pc: usize,
+    jc: usize,
+    kc: usize,
+    nc: usize,
+    nr_b: usize,
+    bpack: &mut [f64],
+) {
+    let mut idx = 0;
+    for q in (0..nc).step_by(nr_b) {
+        let nr = nr_b.min(nc - q);
+        for kk in 0..kc {
+            for j in 0..nr_b {
                 bpack[idx] = if j < nr {
                     match tb {
                         Trans::No => b[(pc + kk, jc + q + j)],
@@ -166,70 +322,84 @@ fn pack_b(tb: Trans, b: &Matrix, pc: usize, jc: usize, kc: usize, nc: usize, bpa
     }
 }
 
+/// [`pack_b`] from an f32 source, packed *as f32*: the mixed microkernel
+/// variants widen at the broadcast, so the packed panel keeps the f32
+/// cache footprint.
+#[allow(clippy::too_many_arguments)]
+fn pack_b32(
+    tb: Trans,
+    b: &MatrixF32,
+    pc: usize,
+    jc: usize,
+    kc: usize,
+    nc: usize,
+    nr_b: usize,
+    bpack32: &mut [f32],
+) {
+    let mut idx = 0;
+    for q in (0..nc).step_by(nr_b) {
+        let nr = nr_b.min(nc - q);
+        for kk in 0..kc {
+            for j in 0..nr_b {
+                bpack32[idx] = if j < nr {
+                    match tb {
+                        Trans::No => b.at(pc + kk, jc + q + j),
+                        Trans::Yes => b.at(jc + q + j, pc + kk),
+                    }
+                } else {
+                    0.0
+                };
+                idx += 1;
+            }
+        }
+    }
+}
+
 /// Multiply the packed `mc×kc` A-block with the packed `kc×nc` B-block,
-/// accumulating `alpha * A * B` into `C[ic.., jc..]`.
+/// accumulating `alpha * A * B` into `C[ic.., jc..]`, one microkernel
+/// dispatch per `mr_b×nr_b` register tile.
+#[allow(clippy::too_many_arguments)]
 fn macro_block(
+    kernel: Kernel,
+    mixed: bool,
     alpha: f64,
-    apack: &[f64],
-    bpack: &[f64],
+    ws: &mut GemmWorkspace,
     mc: usize,
     nc: usize,
     kc: usize,
     c: &mut Matrix,
     ic: usize,
     jc: usize,
+    mr_b: usize,
+    nr_b: usize,
 ) {
     let ldc = c.rows();
     let cdata = c.as_mut_slice();
-    for q in (0..nc).step_by(NR) {
-        let nr = NR.min(nc - q);
-        let bpanel = &bpack[q / NR * (kc * NR)..][..kc * NR];
-        for p in (0..mc).step_by(MR) {
-            let mr = MR.min(mc - p);
-            let apanel = &apack[p / MR * (kc * MR)..][..kc * MR];
-            microkernel(alpha, apanel, bpanel, kc, cdata, ldc, ic + p, jc + q, mr, nr);
-        }
-    }
-}
-
-/// `MR×NR` register-blocked microkernel: `acc += A_panel * B_panel`, then
-/// scaled-accumulate the live `mr×nr` corner into C.
-#[inline(always)]
-fn microkernel(
-    alpha: f64,
-    apanel: &[f64],
-    bpanel: &[f64],
-    kc: usize,
-    cdata: &mut [f64],
-    ldc: usize,
-    ci: usize,
-    cj: usize,
-    mr: usize,
-    nr: usize,
-) {
-    let mut acc = [[0.0f64; MR]; NR];
-    // chunks_exact gives the compiler compile-time-known slice lengths:
-    // no bounds checks, accumulators stay in vector registers across k.
-    // (A 2-step k-unroll was tried and halved throughput — the fused
-    // a·b0 + a'·b1 expression broke LLVM's vectorization; see
-    // EXPERIMENTS.md §Perf.)
-    for (a, b) in apanel[..kc * MR]
-        .chunks_exact(MR)
-        .zip(bpanel[..kc * NR].chunks_exact(NR))
-    {
-        for j in 0..NR {
-            let bj = b[j];
-            let accj = &mut acc[j];
-            for i in 0..MR {
-                accj[i] += a[i] * bj;
+    for q in (0..nc).step_by(nr_b) {
+        let nr = nr_b.min(nc - q);
+        let boff = q / nr_b * (kc * nr_b);
+        for p in (0..mc).step_by(mr_b) {
+            let mr = mr_b.min(mc - p);
+            let apanel = &ws.apack[p / mr_b * (kc * mr_b)..][..kc * mr_b];
+            if mixed {
+                let bpanel = &ws.bpack32[boff..][..kc * nr_b];
+                simd::run_mixed(
+                    kernel,
+                    alpha,
+                    apanel,
+                    bpanel,
+                    kc,
+                    cdata,
+                    ldc,
+                    ic + p,
+                    jc + q,
+                    mr,
+                    nr,
+                );
+            } else {
+                let bpanel = &ws.bpack[boff..][..kc * nr_b];
+                simd::run_f64(kernel, alpha, apanel, bpanel, kc, cdata, ldc, ic + p, jc + q, mr, nr);
             }
-        }
-    }
-    for j in 0..nr {
-        let ccol = &mut cdata[(cj + j) * ldc + ci..(cj + j) * ldc + ci + mr];
-        let accj = &acc[j];
-        for i in 0..mr {
-            ccol[i] += alpha * accj[i];
         }
     }
 }
@@ -385,5 +555,140 @@ mod tests {
         let r3 = matmul_nt(&c, &a.transpose());
         let r4 = matmul(&c, &a);
         assert!(r3.sub(&r4).norm_max() < 1e-12);
+    }
+
+    // ---- SIMD kernel / mixed-precision oracle property tests ----
+
+    /// Random `(m, n, k, ta, tb, alpha, beta)` cases, deliberately
+    /// including the edge tails `mr < MR` / `nr < NR` for every kernel's
+    /// blocking (m, n not multiples of 16/8/4) and the full-tile fast
+    /// path (multiples of all of them).
+    fn property_cases(rng: &mut Rng) -> Vec<(usize, usize, usize, Trans, Trans, f64, f64)> {
+        let dims = [1usize, 3, 4, 5, 7, 8, 15, 16, 17, 31, 32, 48, 130];
+        let ks = [1usize, 2, 8, 13, 64, 300];
+        let trs = [Trans::No, Trans::Yes];
+        let mut cases = Vec::new();
+        for _ in 0..40 {
+            let m = dims[(rng.normal().abs() * 997.0) as usize % dims.len()];
+            let n = dims[(rng.normal().abs() * 991.0) as usize % dims.len()];
+            let k = ks[(rng.normal().abs() * 983.0) as usize % ks.len()];
+            let ta = trs[(rng.normal().abs() * 7.0) as usize % 2];
+            let tb = trs[(rng.normal().abs() * 11.0) as usize % 2];
+            let alpha = rng.normal();
+            let beta = if rng.normal() > 0.0 { rng.normal() } else { 0.0 };
+            cases.push((m, n, k, ta, tb, alpha, beta));
+        }
+        // Pinned corners: single register tile, exact tile multiples,
+        // and one-off tails around every kernel's MR.
+        cases.push((16, 4, 8, Trans::No, Trans::No, 1.0, 1.0));
+        cases.push((8, 4, 8, Trans::No, Trans::No, 1.0, 0.0));
+        cases.push((7, 3, 5, Trans::Yes, Trans::Yes, -0.5, 2.0));
+        cases.push((9, 5, 2, Trans::No, Trans::Yes, 2.0, 1.0));
+        cases.push((17, 5, 33, Trans::Yes, Trans::No, 0.3, 0.9));
+        cases
+    }
+
+    #[test]
+    fn every_kernel_matches_scalar_oracle() {
+        let mut rng = Rng::new(2024);
+        let cases = property_cases(&mut rng);
+        for kernel in crate::linalg::simd::available() {
+            let mut ws = GemmWorkspace::new();
+            let mut ws_ref = GemmWorkspace::new();
+            for &(m, n, k, ta, tb, alpha, beta) in &cases {
+                let a = match ta {
+                    Trans::No => rng.normal_matrix(m, k),
+                    Trans::Yes => rng.normal_matrix(k, m),
+                };
+                let b = match tb {
+                    Trans::No => rng.normal_matrix(k, n),
+                    Trans::Yes => rng.normal_matrix(n, k),
+                };
+                let c0 = rng.normal_matrix(m, n);
+                let mut c = c0.clone();
+                let mut c_ref = c0.clone();
+                gemm_core(kernel, ta, tb, alpha, Src::F64(&a), Src::F64(&b), beta, &mut c, &mut ws);
+                gemm_core(
+                    Kernel::Scalar,
+                    ta,
+                    tb,
+                    alpha,
+                    Src::F64(&a),
+                    Src::F64(&b),
+                    beta,
+                    &mut c_ref,
+                    &mut ws_ref,
+                );
+                // Same products, same f64 accumulation order per entry:
+                // SIMD reorders the k-loop lanes, so allow roundoff.
+                let diff = c.sub(&c_ref).norm_max();
+                let tol = 1e-12 * (k as f64).max(1.0);
+                assert!(
+                    diff < tol,
+                    "kernel {:?}: m={m} n={n} k={k} ta={ta:?} tb={tb:?} diff={diff}",
+                    kernel
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn gemm_mixed_matches_widened_oracle_on_every_kernel() {
+        // An f32 B widened to f64 is exact, so the mixed kernel must
+        // reproduce the f64 product over the widened operand to
+        // roundoff — on every available kernel, tails included.
+        let mut rng = Rng::new(4048);
+        let cases = property_cases(&mut rng);
+        for kernel in crate::linalg::simd::available() {
+            let mut ws = GemmWorkspace::new();
+            for &(m, n, k, ta, tb, alpha, beta) in &cases {
+                let a = match ta {
+                    Trans::No => rng.normal_matrix(m, k),
+                    Trans::Yes => rng.normal_matrix(k, m),
+                };
+                let b64 = match tb {
+                    Trans::No => rng.normal_matrix(k, n),
+                    Trans::Yes => rng.normal_matrix(n, k),
+                };
+                let b32 = MatrixF32::from_f64(&b64);
+                let wide = b32.widen();
+                let c0 = rng.normal_matrix(m, n);
+                let mut c = c0.clone();
+                let mut c_ref = c0.clone();
+                gemm_core(kernel, ta, tb, alpha, Src::F64(&a), Src::F32(&b32), beta, &mut c, &mut ws);
+                gemm_core(
+                    Kernel::Scalar,
+                    ta,
+                    tb,
+                    alpha,
+                    Src::F64(&a),
+                    Src::F64(&wide),
+                    beta,
+                    &mut c_ref,
+                    &mut GemmWorkspace::new(),
+                );
+                let diff = c.sub(&c_ref).norm_max();
+                let tol = 1e-12 * (k as f64).max(1.0);
+                assert!(
+                    diff < tol,
+                    "mixed kernel {:?}: m={m} n={n} k={k} diff={diff}",
+                    kernel
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn f32_a_side_widens_at_pack() {
+        let mut rng = Rng::new(555);
+        let a64 = rng.normal_matrix(19, 7);
+        let a32 = MatrixF32::from_f64(&a64);
+        let b = rng.normal_matrix(7, 6);
+        let mut c = Matrix::zeros(19, 6);
+        let mut c_ref = Matrix::zeros(19, 6);
+        let mut ws = GemmWorkspace::new();
+        gemm_any(Trans::No, Trans::No, 1.0, Src::F32(&a32), Src::F64(&b), 0.0, &mut c, &mut ws);
+        gemm(Trans::No, Trans::No, 1.0, &a32.widen(), &b, 0.0, &mut c_ref);
+        assert!(c.sub(&c_ref).norm_max() < 1e-12);
     }
 }

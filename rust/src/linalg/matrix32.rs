@@ -1,0 +1,154 @@
+//! Column-major dense `f32` matrix — the reduced-precision storage twin
+//! of [`Matrix`], used by the mixed-precision tile format (paper §7:
+//! off-diagonal low-rank factors stored in f32 while all arithmetic
+//! stays f64).
+//!
+//! `MatrixF32` is storage, not arithmetic: the GEMM layer widens its
+//! entries to f64 at pack time (A side) or at the microkernel broadcast
+//! (B side, [`crate::linalg::gemm::gemm_mixed`]), so the only f32
+//! operations anywhere are the loads. Like [`Matrix`], the payload is
+//! borrow-or-own ([`Storage32`]): owned for matrices built in-process,
+//! or a zero-copy view into an mmapped factor file.
+
+use crate::linalg::matrix::Matrix;
+use crate::linalg::storage::{MappedSlice32, Storage32};
+use std::fmt;
+
+/// Dense column-major `f32` matrix.
+#[derive(Clone)]
+pub struct MatrixF32 {
+    rows: usize,
+    cols: usize,
+    /// `data[i + j * rows]` is entry `(i, j)`.
+    data: Storage32,
+}
+
+impl MatrixF32 {
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        MatrixF32 { rows, cols, data: Storage32::Owned(vec![0.0; rows * cols]) }
+    }
+
+    /// Build from a column-major data vector.
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> Self {
+        assert_eq!(data.len(), rows * cols, "data length must be rows*cols");
+        MatrixF32 { rows, cols, data: Storage32::Owned(data) }
+    }
+
+    /// Build over an existing storage (owned or mapped). The zero-copy
+    /// constructor the store's mapped decoder uses.
+    pub fn from_storage(rows: usize, cols: usize, data: Storage32) -> Self {
+        assert_eq!(data.len(), rows * cols, "storage length must be rows*cols");
+        MatrixF32 { rows, cols, data }
+    }
+
+    /// Build as a zero-copy view into a mapping.
+    pub fn from_mapped(rows: usize, cols: usize, view: MappedSlice32) -> Self {
+        Self::from_storage(rows, cols, Storage32::Mapped(view))
+    }
+
+    /// Demote an f64 matrix (round-to-nearest per entry).
+    pub fn from_f64(m: &Matrix) -> Self {
+        let data = m.as_slice().iter().map(|&x| x as f32).collect();
+        MatrixF32 { rows: m.rows(), cols: m.cols(), data: Storage32::Owned(data) }
+    }
+
+    /// Widen back to f64 (exact: every f32 is representable in f64).
+    pub fn widen(&self) -> Matrix {
+        Matrix::from_vec(
+            self.rows,
+            self.cols,
+            self.data.as_slice().iter().map(|&x| x as f64).collect(),
+        )
+    }
+
+    #[inline(always)]
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    #[inline(always)]
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    #[inline(always)]
+    pub fn shape(&self) -> (usize, usize) {
+        (self.rows, self.cols)
+    }
+
+    #[inline(always)]
+    pub fn as_slice(&self) -> &[f32] {
+        self.data.as_slice()
+    }
+
+    /// Entry `(i, j)` — the accessor the pack routines widen through.
+    #[inline(always)]
+    pub fn at(&self, i: usize, j: usize) -> f32 {
+        debug_assert!(i < self.rows && j < self.cols);
+        self.data.as_slice()[i + j * self.rows]
+    }
+
+    /// Column `j` as a contiguous slice.
+    #[inline(always)]
+    pub fn col(&self, j: usize) -> &[f32] {
+        &self.data.as_slice()[j * self.rows..(j + 1) * self.rows]
+    }
+
+    /// Is the payload a zero-copy view into a mapping?
+    pub fn is_mapped(&self) -> bool {
+        self.data.is_mapped()
+    }
+
+    /// Storage footprint in bytes.
+    pub fn bytes(&self) -> usize {
+        4 * self.data.len()
+    }
+}
+
+impl PartialEq for MatrixF32 {
+    /// Value equality (bitwise on the payload) — a mapped matrix equals
+    /// its owned twin.
+    fn eq(&self, other: &MatrixF32) -> bool {
+        self.rows == other.rows
+            && self.cols == other.cols
+            && self.data.as_slice() == other.data.as_slice()
+    }
+}
+
+impl fmt::Debug for MatrixF32 {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let tag = if self.is_mapped() { " (mapped)" } else { "" };
+        write!(f, "MatrixF32 {}x{}{}", self.rows, self.cols, tag)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::rng::Rng;
+
+    #[test]
+    fn from_f64_widen_roundtrip_is_f32_exact() {
+        let mut rng = Rng::new(1);
+        let m = rng.normal_matrix(7, 5);
+        let m32 = MatrixF32::from_f64(&m);
+        assert_eq!(m32.shape(), (7, 5));
+        let back = m32.widen();
+        let d = back.sub(&m).norm_max();
+        assert!(d > 0.0, "demotion must lose precision on random data");
+        assert!(d < 1e-6 * m.norm_max(), "rounding too large: {d}");
+        // Widening the demoted matrix again is bitwise stable.
+        assert_eq!(MatrixF32::from_f64(&back), m32);
+    }
+
+    #[test]
+    fn indexing_is_column_major() {
+        let m = MatrixF32::from_vec(2, 3, vec![1., 2., 3., 4., 5., 6.]);
+        assert_eq!(m.at(0, 0), 1.0);
+        assert_eq!(m.at(1, 0), 2.0);
+        assert_eq!(m.at(0, 1), 3.0);
+        assert_eq!(m.col(2), &[5.0, 6.0]);
+        assert_eq!(m.bytes(), 24);
+        assert!(!m.is_mapped());
+    }
+}

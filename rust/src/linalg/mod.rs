@@ -6,14 +6,18 @@ pub mod chol;
 pub mod gemm;
 pub mod ldl;
 pub mod matrix;
+pub mod matrix32;
 pub mod norms;
 pub mod qr;
 pub mod rng;
+pub mod simd;
 pub mod storage;
 pub mod svd;
 
 pub use blas::{Side, Uplo};
 pub use gemm::Trans;
 pub use matrix::Matrix;
+pub use matrix32::MatrixF32;
 pub use rng::Rng;
-pub use storage::{Mapping, MappedSlice, TileStorage};
+pub use simd::Kernel;
+pub use storage::{Mapping, MappedSlice, MappedSlice32, Storage32, TileStorage};

@@ -1,0 +1,653 @@
+//! Runtime-dispatched GEMM microkernels (paper §4: TLR factorization is
+//! "limited by the performance of batched GEMM").
+//!
+//! The blocked [`gemm`](crate::linalg::gemm) packs A into `MR`-tall row
+//! panels and B into `NR`-wide column panels, then calls one microkernel
+//! per `MR×NR` register tile. This module owns those microkernels:
+//!
+//! * a portable scalar kernel (16×4) that doubles as the correctness
+//!   oracle for the property tests,
+//! * an AVX2/FMA kernel (8×4, eight `ymm` accumulators) on x86_64,
+//! * an AVX-512 kernel (16×4, eight `zmm` accumulators) behind the
+//!   non-default `avx512` cargo feature (its f64 intrinsics are stable
+//!   only from rustc 1.89),
+//! * a NEON kernel (8×4, sixteen `v`-register accumulators) on aarch64.
+//!
+//! Each kernel has an f64 variant and a *mixed* variant whose B panel is
+//! packed f32 and widened at the broadcast, with all accumulation in f64
+//! (paper §7: reduced-precision tile storage, full-precision sampling).
+//!
+//! Selection happens once per process: [`active`] probes the CPU with
+//! `is_x86_feature_detected!` / `is_aarch64_feature_detected!` and caches
+//! the winner in a `OnceLock`. Setting `H2OPUS_FORCE_SCALAR=1` pins the
+//! scalar fallback (the CI forced-fallback leg). The `#[target_feature]`
+//! kernels are `unsafe` and reached only through the [`run_f64`] /
+//! [`run_mixed`] dispatch below — `tools/static_audit.py` enforces that
+//! invariant.
+
+use std::sync::OnceLock;
+
+/// A microkernel implementation selected at runtime.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum Kernel {
+    /// Portable scalar fallback and correctness oracle.
+    Scalar,
+    /// AVX2 + FMA, x86_64.
+    Avx2,
+    /// AVX-512F, x86_64, `avx512` cargo feature (rustc ≥ 1.89).
+    Avx512,
+    /// NEON, aarch64.
+    Neon,
+}
+
+impl Kernel {
+    pub fn name(self) -> &'static str {
+        match self {
+            Kernel::Scalar => "scalar",
+            Kernel::Avx2 => "avx2",
+            Kernel::Avx512 => "avx512",
+            Kernel::Neon => "neon",
+        }
+    }
+
+    /// Stable index into the profile counters
+    /// ([`crate::profile::KERNEL_NAMES`]).
+    pub fn index(self) -> usize {
+        match self {
+            Kernel::Scalar => 0,
+            Kernel::Avx2 => 1,
+            Kernel::Avx512 => 2,
+            Kernel::Neon => 3,
+        }
+    }
+
+    /// `(MR, NR)` register blocking: the packed-panel heights this
+    /// kernel expects from `pack_a` / `pack_b`.
+    pub fn blocking(self) -> (usize, usize) {
+        match self {
+            Kernel::Scalar => (16, 4),
+            Kernel::Avx2 => (8, 4),
+            Kernel::Avx512 => (16, 4),
+            Kernel::Neon => (8, 4),
+        }
+    }
+}
+
+/// Kernels runnable on this machine, in ascending preference order
+/// (scalar is always present and first). Used by the oracle property
+/// tests and the roofline bench to exercise every implementation.
+pub fn available() -> Vec<Kernel> {
+    let mut v = vec![Kernel::Scalar];
+    #[cfg(target_arch = "x86_64")]
+    {
+        if is_x86_feature_detected!("avx2") && is_x86_feature_detected!("fma") {
+            v.push(Kernel::Avx2);
+        }
+        #[cfg(feature = "avx512")]
+        if is_x86_feature_detected!("avx512f") {
+            v.push(Kernel::Avx512);
+        }
+    }
+    #[cfg(target_arch = "aarch64")]
+    {
+        if std::arch::is_aarch64_feature_detected!("neon") {
+            v.push(Kernel::Neon);
+        }
+    }
+    v
+}
+
+fn forced_scalar() -> bool {
+    std::env::var_os("H2OPUS_FORCE_SCALAR").is_some_and(|v| v != "0")
+}
+
+fn detect() -> Kernel {
+    if forced_scalar() {
+        return Kernel::Scalar;
+    }
+    *available().last().expect("scalar kernel is always available")
+}
+
+/// The process-wide active kernel: detected once, cached forever.
+pub fn active() -> Kernel {
+    static ACTIVE: OnceLock<Kernel> = OnceLock::new();
+    *ACTIVE.get_or_init(detect)
+}
+
+/// Dispatch one `mr × nr` f64 microkernel call: `C[ci.., cj..] +=
+/// alpha · Apanel · Bpanel` over `kc` rank-1 updates. `apanel` is
+/// `kc × MR` (k-major, zero-padded to the kernel's MR), `bpanel` is
+/// `kc × NR`; `mr ≤ MR`, `nr ≤ NR` select the live corner.
+#[allow(clippy::too_many_arguments)]
+#[inline]
+pub fn run_f64(
+    kernel: Kernel,
+    alpha: f64,
+    apanel: &[f64],
+    bpanel: &[f64],
+    kc: usize,
+    cdata: &mut [f64],
+    ldc: usize,
+    ci: usize,
+    cj: usize,
+    mr: usize,
+    nr: usize,
+) {
+    match kernel {
+        Kernel::Scalar => scalar::mk_f64(alpha, apanel, bpanel, kc, cdata, ldc, ci, cj, mr, nr),
+        // SAFETY (all arms below): non-scalar `Kernel` values are only
+        // produced by `available()`/`active()`, which verified the CPU
+        // feature at runtime.
+        #[cfg(target_arch = "x86_64")]
+        Kernel::Avx2 => unsafe {
+            x86::mk_avx2_f64(alpha, apanel, bpanel, kc, cdata, ldc, ci, cj, mr, nr)
+        },
+        #[cfg(all(target_arch = "x86_64", feature = "avx512"))]
+        Kernel::Avx512 => unsafe {
+            x86::mk_avx512_f64(alpha, apanel, bpanel, kc, cdata, ldc, ci, cj, mr, nr)
+        },
+        #[cfg(target_arch = "aarch64")]
+        Kernel::Neon => unsafe {
+            neon::mk_neon_f64(alpha, apanel, bpanel, kc, cdata, ldc, ci, cj, mr, nr)
+        },
+        _ => unreachable!("kernel {kernel:?} is not available on this architecture"),
+    }
+}
+
+/// Mixed-precision dispatch: identical contract to [`run_f64`] but the
+/// B panel is packed f32; every kernel widens at the broadcast and
+/// accumulates in f64.
+#[allow(clippy::too_many_arguments)]
+#[inline]
+pub fn run_mixed(
+    kernel: Kernel,
+    alpha: f64,
+    apanel: &[f64],
+    bpanel: &[f32],
+    kc: usize,
+    cdata: &mut [f64],
+    ldc: usize,
+    ci: usize,
+    cj: usize,
+    mr: usize,
+    nr: usize,
+) {
+    match kernel {
+        Kernel::Scalar => scalar::mk_mixed(alpha, apanel, bpanel, kc, cdata, ldc, ci, cj, mr, nr),
+        // SAFETY: see `run_f64`.
+        #[cfg(target_arch = "x86_64")]
+        Kernel::Avx2 => unsafe {
+            x86::mk_avx2_mixed(alpha, apanel, bpanel, kc, cdata, ldc, ci, cj, mr, nr)
+        },
+        #[cfg(all(target_arch = "x86_64", feature = "avx512"))]
+        Kernel::Avx512 => unsafe {
+            x86::mk_avx512_mixed(alpha, apanel, bpanel, kc, cdata, ldc, ci, cj, mr, nr)
+        },
+        #[cfg(target_arch = "aarch64")]
+        Kernel::Neon => unsafe {
+            neon::mk_neon_mixed(alpha, apanel, bpanel, kc, cdata, ldc, ci, cj, mr, nr)
+        },
+        _ => unreachable!("kernel {kernel:?} is not available on this architecture"),
+    }
+}
+
+/// Scalar 16×4 microkernel — the portable fallback and the oracle every
+/// SIMD kernel is property-tested against.
+///
+/// The k-loop accumulates into a `[[f64; 16]; 4]` register block through
+/// `chunks_exact` iterators whose lengths are compile-time constants, so
+/// LLVM unrolls and autovectorizes it. (A manual 2-step k-unroll was
+/// tried and halved throughput — the fused `a·b0 + a'·b1` expression
+/// broke that autovectorization; the hand-written SIMD kernels in the
+/// sibling modules are the supported fast path now. See EXPERIMENTS.md
+/// §Kernel roofline.)
+mod scalar {
+    const MR: usize = 16;
+    const NR: usize = 4;
+
+    #[allow(clippy::too_many_arguments)]
+    #[inline(always)]
+    pub fn mk_f64(
+        alpha: f64,
+        apanel: &[f64],
+        bpanel: &[f64],
+        kc: usize,
+        cdata: &mut [f64],
+        ldc: usize,
+        ci: usize,
+        cj: usize,
+        mr: usize,
+        nr: usize,
+    ) {
+        let mut acc = [[0.0f64; MR]; NR];
+        for (a, b) in apanel[..kc * MR].chunks_exact(MR).zip(bpanel[..kc * NR].chunks_exact(NR)) {
+            for (accj, &bj) in acc.iter_mut().zip(b) {
+                for (accij, &ai) in accj.iter_mut().zip(a) {
+                    *accij += ai * bj;
+                }
+            }
+        }
+        for (j, accj) in acc.iter().enumerate().take(nr) {
+            let ccol = &mut cdata[(cj + j) * ldc + ci..][..mr];
+            for (cv, &av) in ccol.iter_mut().zip(accj) {
+                *cv += alpha * av;
+            }
+        }
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    #[inline(always)]
+    pub fn mk_mixed(
+        alpha: f64,
+        apanel: &[f64],
+        bpanel: &[f32],
+        kc: usize,
+        cdata: &mut [f64],
+        ldc: usize,
+        ci: usize,
+        cj: usize,
+        mr: usize,
+        nr: usize,
+    ) {
+        let mut acc = [[0.0f64; MR]; NR];
+        for (a, b) in apanel[..kc * MR].chunks_exact(MR).zip(bpanel[..kc * NR].chunks_exact(NR)) {
+            for (accj, &bj) in acc.iter_mut().zip(b) {
+                let bj = bj as f64;
+                for (accij, &ai) in accj.iter_mut().zip(a) {
+                    *accij += ai * bj;
+                }
+            }
+        }
+        for (j, accj) in acc.iter().enumerate().take(nr) {
+            let ccol = &mut cdata[(cj + j) * ldc + ci..][..mr];
+            for (cv, &av) in ccol.iter_mut().zip(accj) {
+                *cv += alpha * av;
+            }
+        }
+    }
+}
+
+/// x86_64 kernels. AVX2/FMA uses an 8×4 tile: two `ymm` per column × 4
+/// columns = 8 accumulators, leaving registers for the two A loads and
+/// the B broadcast. AVX-512 doubles the tile height to 16 with `zmm`.
+#[cfg(target_arch = "x86_64")]
+mod x86 {
+    use core::arch::x86_64::*;
+
+    /// # Safety
+    /// Requires AVX2 and FMA at runtime; `apanel`/`bpanel` must hold at
+    /// least `kc*8` / `kc*4` values and the `mr × nr` block at
+    /// `(ci, cj)` must lie inside `cdata` (column stride `ldc`).
+    #[allow(clippy::too_many_arguments)]
+    #[target_feature(enable = "avx2,fma")]
+    pub unsafe fn mk_avx2_f64(
+        alpha: f64,
+        apanel: &[f64],
+        bpanel: &[f64],
+        kc: usize,
+        cdata: &mut [f64],
+        ldc: usize,
+        ci: usize,
+        cj: usize,
+        mr: usize,
+        nr: usize,
+    ) {
+        debug_assert!(apanel.len() >= kc * 8 && bpanel.len() >= kc * 4);
+        let mut acc = [[_mm256_setzero_pd(); 2]; 4];
+        let mut ap = apanel.as_ptr();
+        let mut bp = bpanel.as_ptr();
+        for _ in 0..kc {
+            let a0 = _mm256_loadu_pd(ap);
+            let a1 = _mm256_loadu_pd(ap.add(4));
+            for (j, accj) in acc.iter_mut().enumerate() {
+                let bj = _mm256_set1_pd(*bp.add(j));
+                accj[0] = _mm256_fmadd_pd(a0, bj, accj[0]);
+                accj[1] = _mm256_fmadd_pd(a1, bj, accj[1]);
+            }
+            ap = ap.add(8);
+            bp = bp.add(4);
+        }
+        if mr == 8 && nr == 4 {
+            let va = _mm256_set1_pd(alpha);
+            for (j, accj) in acc.iter().enumerate() {
+                let cp = cdata.as_mut_ptr().add((cj + j) * ldc + ci);
+                _mm256_storeu_pd(cp, _mm256_fmadd_pd(va, accj[0], _mm256_loadu_pd(cp)));
+                _mm256_storeu_pd(
+                    cp.add(4),
+                    _mm256_fmadd_pd(va, accj[1], _mm256_loadu_pd(cp.add(4))),
+                );
+            }
+        } else {
+            let mut buf = [0.0f64; 8];
+            for (j, accj) in acc.iter().enumerate().take(nr) {
+                _mm256_storeu_pd(buf.as_mut_ptr(), accj[0]);
+                _mm256_storeu_pd(buf.as_mut_ptr().add(4), accj[1]);
+                let ccol = &mut cdata[(cj + j) * ldc + ci..][..mr];
+                for (cv, &av) in ccol.iter_mut().zip(buf.iter()) {
+                    *cv += alpha * av;
+                }
+            }
+        }
+    }
+
+    /// # Safety
+    /// Same contract as [`mk_avx2_f64`]; `bpanel` is f32.
+    #[allow(clippy::too_many_arguments)]
+    #[target_feature(enable = "avx2,fma")]
+    pub unsafe fn mk_avx2_mixed(
+        alpha: f64,
+        apanel: &[f64],
+        bpanel: &[f32],
+        kc: usize,
+        cdata: &mut [f64],
+        ldc: usize,
+        ci: usize,
+        cj: usize,
+        mr: usize,
+        nr: usize,
+    ) {
+        debug_assert!(apanel.len() >= kc * 8 && bpanel.len() >= kc * 4);
+        let mut acc = [[_mm256_setzero_pd(); 2]; 4];
+        let mut ap = apanel.as_ptr();
+        let mut bp = bpanel.as_ptr();
+        for _ in 0..kc {
+            let a0 = _mm256_loadu_pd(ap);
+            let a1 = _mm256_loadu_pd(ap.add(4));
+            for (j, accj) in acc.iter_mut().enumerate() {
+                // Widen the f32 B entry at the broadcast; accumulation
+                // stays entirely f64.
+                let bj = _mm256_set1_pd(*bp.add(j) as f64);
+                accj[0] = _mm256_fmadd_pd(a0, bj, accj[0]);
+                accj[1] = _mm256_fmadd_pd(a1, bj, accj[1]);
+            }
+            ap = ap.add(8);
+            bp = bp.add(4);
+        }
+        if mr == 8 && nr == 4 {
+            let va = _mm256_set1_pd(alpha);
+            for (j, accj) in acc.iter().enumerate() {
+                let cp = cdata.as_mut_ptr().add((cj + j) * ldc + ci);
+                _mm256_storeu_pd(cp, _mm256_fmadd_pd(va, accj[0], _mm256_loadu_pd(cp)));
+                _mm256_storeu_pd(
+                    cp.add(4),
+                    _mm256_fmadd_pd(va, accj[1], _mm256_loadu_pd(cp.add(4))),
+                );
+            }
+        } else {
+            let mut buf = [0.0f64; 8];
+            for (j, accj) in acc.iter().enumerate().take(nr) {
+                _mm256_storeu_pd(buf.as_mut_ptr(), accj[0]);
+                _mm256_storeu_pd(buf.as_mut_ptr().add(4), accj[1]);
+                let ccol = &mut cdata[(cj + j) * ldc + ci..][..mr];
+                for (cv, &av) in ccol.iter_mut().zip(buf.iter()) {
+                    *cv += alpha * av;
+                }
+            }
+        }
+    }
+
+    /// # Safety
+    /// Requires AVX-512F at runtime; panel/C bounds as in
+    /// [`mk_avx2_f64`] with MR = 16.
+    #[cfg(feature = "avx512")]
+    #[allow(clippy::too_many_arguments)]
+    #[target_feature(enable = "avx512f")]
+    pub unsafe fn mk_avx512_f64(
+        alpha: f64,
+        apanel: &[f64],
+        bpanel: &[f64],
+        kc: usize,
+        cdata: &mut [f64],
+        ldc: usize,
+        ci: usize,
+        cj: usize,
+        mr: usize,
+        nr: usize,
+    ) {
+        debug_assert!(apanel.len() >= kc * 16 && bpanel.len() >= kc * 4);
+        let mut acc = [[_mm512_setzero_pd(); 2]; 4];
+        let mut ap = apanel.as_ptr();
+        let mut bp = bpanel.as_ptr();
+        for _ in 0..kc {
+            let a0 = _mm512_loadu_pd(ap);
+            let a1 = _mm512_loadu_pd(ap.add(8));
+            for (j, accj) in acc.iter_mut().enumerate() {
+                let bj = _mm512_set1_pd(*bp.add(j));
+                accj[0] = _mm512_fmadd_pd(a0, bj, accj[0]);
+                accj[1] = _mm512_fmadd_pd(a1, bj, accj[1]);
+            }
+            ap = ap.add(16);
+            bp = bp.add(4);
+        }
+        if mr == 16 && nr == 4 {
+            let va = _mm512_set1_pd(alpha);
+            for (j, accj) in acc.iter().enumerate() {
+                let cp = cdata.as_mut_ptr().add((cj + j) * ldc + ci);
+                _mm512_storeu_pd(cp, _mm512_fmadd_pd(va, accj[0], _mm512_loadu_pd(cp)));
+                _mm512_storeu_pd(
+                    cp.add(8),
+                    _mm512_fmadd_pd(va, accj[1], _mm512_loadu_pd(cp.add(8))),
+                );
+            }
+        } else {
+            let mut buf = [0.0f64; 16];
+            for (j, accj) in acc.iter().enumerate().take(nr) {
+                _mm512_storeu_pd(buf.as_mut_ptr(), accj[0]);
+                _mm512_storeu_pd(buf.as_mut_ptr().add(8), accj[1]);
+                let ccol = &mut cdata[(cj + j) * ldc + ci..][..mr];
+                for (cv, &av) in ccol.iter_mut().zip(buf.iter()) {
+                    *cv += alpha * av;
+                }
+            }
+        }
+    }
+
+    /// # Safety
+    /// Same contract as [`mk_avx512_f64`]; `bpanel` is f32.
+    #[cfg(feature = "avx512")]
+    #[allow(clippy::too_many_arguments)]
+    #[target_feature(enable = "avx512f")]
+    pub unsafe fn mk_avx512_mixed(
+        alpha: f64,
+        apanel: &[f64],
+        bpanel: &[f32],
+        kc: usize,
+        cdata: &mut [f64],
+        ldc: usize,
+        ci: usize,
+        cj: usize,
+        mr: usize,
+        nr: usize,
+    ) {
+        debug_assert!(apanel.len() >= kc * 16 && bpanel.len() >= kc * 4);
+        let mut acc = [[_mm512_setzero_pd(); 2]; 4];
+        let mut ap = apanel.as_ptr();
+        let mut bp = bpanel.as_ptr();
+        for _ in 0..kc {
+            let a0 = _mm512_loadu_pd(ap);
+            let a1 = _mm512_loadu_pd(ap.add(8));
+            for (j, accj) in acc.iter_mut().enumerate() {
+                let bj = _mm512_set1_pd(*bp.add(j) as f64);
+                accj[0] = _mm512_fmadd_pd(a0, bj, accj[0]);
+                accj[1] = _mm512_fmadd_pd(a1, bj, accj[1]);
+            }
+            ap = ap.add(16);
+            bp = bp.add(4);
+        }
+        if mr == 16 && nr == 4 {
+            let va = _mm512_set1_pd(alpha);
+            for (j, accj) in acc.iter().enumerate() {
+                let cp = cdata.as_mut_ptr().add((cj + j) * ldc + ci);
+                _mm512_storeu_pd(cp, _mm512_fmadd_pd(va, accj[0], _mm512_loadu_pd(cp)));
+                _mm512_storeu_pd(
+                    cp.add(8),
+                    _mm512_fmadd_pd(va, accj[1], _mm512_loadu_pd(cp.add(8))),
+                );
+            }
+        } else {
+            let mut buf = [0.0f64; 16];
+            for (j, accj) in acc.iter().enumerate().take(nr) {
+                _mm512_storeu_pd(buf.as_mut_ptr(), accj[0]);
+                _mm512_storeu_pd(buf.as_mut_ptr().add(8), accj[1]);
+                let ccol = &mut cdata[(cj + j) * ldc + ci..][..mr];
+                for (cv, &av) in ccol.iter_mut().zip(buf.iter()) {
+                    *cv += alpha * av;
+                }
+            }
+        }
+    }
+}
+
+/// aarch64 NEON kernels: 8×4 tile, four 2-lane `float64x2_t` per column
+/// × 4 columns = 16 accumulators out of the 32 `v` registers.
+#[cfg(target_arch = "aarch64")]
+mod neon {
+    use core::arch::aarch64::*;
+
+    /// # Safety
+    /// Requires NEON at runtime (always true on aarch64, still verified
+    /// by the dispatcher); panel/C bounds as in the AVX2 kernel.
+    #[allow(clippy::too_many_arguments)]
+    #[target_feature(enable = "neon")]
+    pub unsafe fn mk_neon_f64(
+        alpha: f64,
+        apanel: &[f64],
+        bpanel: &[f64],
+        kc: usize,
+        cdata: &mut [f64],
+        ldc: usize,
+        ci: usize,
+        cj: usize,
+        mr: usize,
+        nr: usize,
+    ) {
+        debug_assert!(apanel.len() >= kc * 8 && bpanel.len() >= kc * 4);
+        let mut acc = [[vdupq_n_f64(0.0); 4]; 4];
+        let mut ap = apanel.as_ptr();
+        let mut bp = bpanel.as_ptr();
+        for _ in 0..kc {
+            let a = [
+                vld1q_f64(ap),
+                vld1q_f64(ap.add(2)),
+                vld1q_f64(ap.add(4)),
+                vld1q_f64(ap.add(6)),
+            ];
+            for (j, accj) in acc.iter_mut().enumerate() {
+                let bj = vdupq_n_f64(*bp.add(j));
+                for (acch, &ah) in accj.iter_mut().zip(a.iter()) {
+                    *acch = vfmaq_f64(*acch, ah, bj);
+                }
+            }
+            ap = ap.add(8);
+            bp = bp.add(4);
+        }
+        let va = vdupq_n_f64(alpha);
+        if mr == 8 && nr == 4 {
+            for (j, accj) in acc.iter().enumerate() {
+                let cp = cdata.as_mut_ptr().add((cj + j) * ldc + ci);
+                for (h, &acch) in accj.iter().enumerate() {
+                    let cv = vld1q_f64(cp.add(2 * h));
+                    vst1q_f64(cp.add(2 * h), vfmaq_f64(cv, acch, va));
+                }
+            }
+        } else {
+            let mut buf = [0.0f64; 8];
+            for (j, accj) in acc.iter().enumerate().take(nr) {
+                for (h, &acch) in accj.iter().enumerate() {
+                    vst1q_f64(buf.as_mut_ptr().add(2 * h), acch);
+                }
+                let ccol = &mut cdata[(cj + j) * ldc + ci..][..mr];
+                for (cv, &av) in ccol.iter_mut().zip(buf.iter()) {
+                    *cv += alpha * av;
+                }
+            }
+        }
+    }
+
+    /// # Safety
+    /// Same contract as [`mk_neon_f64`]; `bpanel` is f32.
+    #[allow(clippy::too_many_arguments)]
+    #[target_feature(enable = "neon")]
+    pub unsafe fn mk_neon_mixed(
+        alpha: f64,
+        apanel: &[f64],
+        bpanel: &[f32],
+        kc: usize,
+        cdata: &mut [f64],
+        ldc: usize,
+        ci: usize,
+        cj: usize,
+        mr: usize,
+        nr: usize,
+    ) {
+        debug_assert!(apanel.len() >= kc * 8 && bpanel.len() >= kc * 4);
+        let mut acc = [[vdupq_n_f64(0.0); 4]; 4];
+        let mut ap = apanel.as_ptr();
+        let mut bp = bpanel.as_ptr();
+        for _ in 0..kc {
+            let a = [
+                vld1q_f64(ap),
+                vld1q_f64(ap.add(2)),
+                vld1q_f64(ap.add(4)),
+                vld1q_f64(ap.add(6)),
+            ];
+            for (j, accj) in acc.iter_mut().enumerate() {
+                let bj = vdupq_n_f64(*bp.add(j) as f64);
+                for (acch, &ah) in accj.iter_mut().zip(a.iter()) {
+                    *acch = vfmaq_f64(*acch, ah, bj);
+                }
+            }
+            ap = ap.add(8);
+            bp = bp.add(4);
+        }
+        let va = vdupq_n_f64(alpha);
+        if mr == 8 && nr == 4 {
+            for (j, accj) in acc.iter().enumerate() {
+                let cp = cdata.as_mut_ptr().add((cj + j) * ldc + ci);
+                for (h, &acch) in accj.iter().enumerate() {
+                    let cv = vld1q_f64(cp.add(2 * h));
+                    vst1q_f64(cp.add(2 * h), vfmaq_f64(cv, acch, va));
+                }
+            }
+        } else {
+            let mut buf = [0.0f64; 8];
+            for (j, accj) in acc.iter().enumerate().take(nr) {
+                for (h, &acch) in accj.iter().enumerate() {
+                    vst1q_f64(buf.as_mut_ptr().add(2 * h), acch);
+                }
+                let ccol = &mut cdata[(cj + j) * ldc + ci..][..mr];
+                for (cv, &av) in ccol.iter_mut().zip(buf.iter()) {
+                    *cv += alpha * av;
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scalar_always_available_and_first() {
+        let ks = available();
+        assert_eq!(ks[0], Kernel::Scalar);
+        assert!(!ks.is_empty());
+    }
+
+    #[test]
+    fn active_is_available() {
+        assert!(available().contains(&active()));
+    }
+
+    #[test]
+    fn blocking_sane() {
+        for k in available() {
+            let (mr, nr) = k.blocking();
+            assert!(mr == 8 || mr == 16);
+            assert_eq!(nr, 4);
+            assert!(k.index() < 4);
+            assert!(!k.name().is_empty());
+        }
+    }
+}

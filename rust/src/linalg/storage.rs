@@ -37,6 +37,16 @@ pub trait Mapping: Send + Sync {
     /// the store format is little-endian and the mapped path is gated to
     /// little-endian hosts).
     fn as_f64(&self) -> &[f64];
+
+    /// The same region as raw bytes — the view the f32 tile payloads
+    /// ([`MappedSlice32`]) are carved from. Default reinterprets the
+    /// `f64` view, so existing implementors need no change.
+    fn as_bytes(&self) -> &[u8] {
+        let s = self.as_f64();
+        // SAFETY: any f64 slice is a valid, aligned byte slice of
+        // 8×len bytes with the same lifetime.
+        unsafe { std::slice::from_raw_parts(s.as_ptr() as *const u8, std::mem::size_of_val(s)) }
+    }
 }
 
 /// A sub-range view into a shared [`Mapping`]: `as_f64()[off..off+len]`
@@ -80,6 +90,117 @@ impl MappedSlice {
 impl std::fmt::Debug for MappedSlice {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         write!(f, "MappedSlice {{ off: {}, len: {} }}", self.off, self.len)
+    }
+}
+
+/// A sub-range view into a shared [`Mapping`] reinterpreted as `f32`
+/// values: `as_bytes()[4*off..4*(off+len)]` (offsets and lengths in
+/// `f32` units). The f32 twin of [`MappedSlice`], used by the
+/// mixed-precision tile payloads — a mapping's base is 8-byte aligned,
+/// so every 4-byte offset into it is valid f32 alignment.
+#[derive(Clone)]
+pub struct MappedSlice32 {
+    base: Arc<dyn Mapping>,
+    off: usize,
+    len: usize,
+}
+
+impl MappedSlice32 {
+    /// View `len` f32 values starting `off` f32-slots into the mapping.
+    /// Panics if out of range — callers (the store decoder) bounds-check
+    /// against the validated header before constructing views.
+    pub fn new(base: Arc<dyn Mapping>, off: usize, len: usize) -> MappedSlice32 {
+        let total = base.as_bytes().len() / 4;
+        assert!(
+            off <= total && len <= total - off,
+            "mapped f32 slice {off}+{len} out of range (mapping holds {total} f32s)"
+        );
+        MappedSlice32 { base, off, len }
+    }
+
+    #[inline]
+    pub fn as_slice(&self) -> &[f32] {
+        let bytes = &self.base.as_bytes()[4 * self.off..4 * (self.off + self.len)];
+        debug_assert_eq!(bytes.as_ptr() as usize % 4, 0, "mapping base must be 4-aligned");
+        // SAFETY: the range is in bounds (checked in `new` against the
+        // same mapping), 4-aligned (8-aligned base + 4-byte offset), and
+        // every bit pattern is a valid f32.
+        unsafe { std::slice::from_raw_parts(bytes.as_ptr() as *const f32, self.len) }
+    }
+
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+}
+
+impl std::fmt::Debug for MappedSlice32 {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "MappedSlice32 {{ off: {}, len: {} }}", self.off, self.len)
+    }
+}
+
+/// Borrow-or-own `f32` payload storage — the backing of
+/// [`MatrixF32`](crate::linalg::matrix32::MatrixF32), mirroring
+/// [`TileStorage`] (same contract: reads never copy, writes promote).
+#[derive(Debug, Clone)]
+pub enum Storage32 {
+    Owned(Vec<f32>),
+    Mapped(MappedSlice32),
+}
+
+impl Storage32 {
+    #[inline]
+    pub fn as_slice(&self) -> &[f32] {
+        match self {
+            Storage32::Owned(v) => v,
+            Storage32::Mapped(m) => m.as_slice(),
+        }
+    }
+
+    #[inline]
+    pub fn len(&self) -> usize {
+        match self {
+            Storage32::Owned(v) => v.len(),
+            Storage32::Mapped(m) => m.len(),
+        }
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    #[inline]
+    pub fn is_mapped(&self) -> bool {
+        matches!(self, Storage32::Mapped(_))
+    }
+
+    pub fn make_mut(&mut self) -> &mut Vec<f32> {
+        if let Storage32::Mapped(m) = self {
+            *self = Storage32::Owned(m.as_slice().to_vec());
+        }
+        match self {
+            Storage32::Owned(v) => v,
+            Storage32::Mapped(_) => unreachable!("promoted above"),
+        }
+    }
+}
+
+impl PartialEq for Storage32 {
+    fn eq(&self, other: &Self) -> bool {
+        self.as_slice() == other.as_slice()
+    }
+}
+
+impl From<Vec<f32>> for Storage32 {
+    fn from(v: Vec<f32>) -> Storage32 {
+        Storage32::Owned(v)
     }
 }
 
@@ -197,5 +318,52 @@ mod tests {
     #[should_panic(expected = "out of range")]
     fn out_of_range_view_rejected() {
         let _ = MappedSlice::new(mapping(), 10, 8);
+    }
+
+    #[test]
+    fn as_bytes_default_views_same_memory() {
+        let base = mapping();
+        let bytes = base.as_bytes();
+        assert_eq!(bytes.len(), 16 * 8);
+        assert_eq!(bytes.as_ptr() as usize, base.as_f64().as_ptr() as usize);
+        // First f64 is 0.0: all-zero bytes.
+        assert!(bytes[..8].iter().all(|&b| b == 0));
+    }
+
+    // f32 pair packing inside an f64 word is little-endian on disk and
+    // the mapped path is LE-gated, so these layout tests are too.
+    #[cfg(target_endian = "little")]
+    #[test]
+    fn mapped_f32_view_reads_packed_words() {
+        // Pack two f32 values into one f64 word the way the store does
+        // (little-endian pairs) and read them back through the view.
+        let a = 1.5f32.to_bits() as u64;
+        let b = (-2.25f32).to_bits() as u64;
+        let word = f64::from_bits(a | (b << 32));
+        let base: Arc<dyn Mapping> = Arc::new(VecMapping(vec![0.0, word]));
+        let v = MappedSlice32::new(base, 2, 2);
+        assert_eq!(v.len(), 2);
+        assert_eq!(v.as_slice(), &[1.5f32, -2.25f32]);
+    }
+
+    #[cfg(target_endian = "little")]
+    #[test]
+    fn storage32_promotes_on_write() {
+        let a = 3.0f32.to_bits() as u64;
+        let word = f64::from_bits(a | ((4.0f32.to_bits() as u64) << 32));
+        let base: Arc<dyn Mapping> = Arc::new(VecMapping(vec![word]));
+        let mut s = Storage32::Mapped(MappedSlice32::new(base, 0, 2));
+        assert!(s.is_mapped());
+        assert_eq!(s.as_slice(), &[3.0f32, 4.0f32]);
+        s.make_mut()[1] = 9.0;
+        assert!(!s.is_mapped());
+        assert_eq!(s.as_slice(), &[3.0f32, 9.0f32]);
+        assert_eq!(s, Storage32::Owned(vec![3.0, 9.0]));
+    }
+
+    #[test]
+    #[should_panic(expected = "out of range")]
+    fn out_of_range_f32_view_rejected() {
+        let _ = MappedSlice32::new(mapping(), 30, 4);
     }
 }

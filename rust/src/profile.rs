@@ -56,6 +56,21 @@ static BATCH_WAVES: AtomicU64 = AtomicU64::new(0);
 static BATCH_OPS: AtomicU64 = AtomicU64::new(0);
 static BATCH_FLOPS: AtomicU64 = AtomicU64::new(0);
 
+/// Microkernel slots for the dispatch counters, indexed by
+/// [`crate::linalg::simd::Kernel::index`].
+pub const N_KERNELS: usize = 4;
+
+/// Kernel names in slot order (matches `Kernel::index`).
+pub const KERNEL_NAMES: [&str; N_KERNELS] = ["scalar", "avx2", "avx512", "neon"];
+
+// Kernel-dispatch counters (crate::linalg::gemm::gemm_core records every
+// blocked-GEMM call): calls per microkernel, split f64 vs mixed (f32 B
+// panel), plus the bytes the mixed-precision tile storage saved versus
+// all-f64 (crate::tlr::mixed::demote_offdiag reports demotions).
+static KERNEL_F64_CALLS: [AtomicU64; N_KERNELS] = [const { AtomicU64::new(0) }; N_KERNELS];
+static KERNEL_MIXED_CALLS: [AtomicU64; N_KERNELS] = [const { AtomicU64::new(0) }; N_KERNELS];
+static F32_BYTES_SAVED: AtomicU64 = AtomicU64::new(0);
+
 // Serve-layer counters (crate::serve::SolveService reports every panel
 // it executes): answered requests, executed blocked solves, and time
 // spent inside them. `requests / batches` is the realized batching
@@ -97,6 +112,82 @@ pub fn reset() {
     }
     SHARD_REBALANCES.store(0, Ordering::Relaxed);
     SHARD_MOVED.store(0, Ordering::Relaxed);
+    for i in 0..N_KERNELS {
+        KERNEL_F64_CALLS[i].store(0, Ordering::Relaxed);
+        KERNEL_MIXED_CALLS[i].store(0, Ordering::Relaxed);
+    }
+    F32_BYTES_SAVED.store(0, Ordering::Relaxed);
+}
+
+/// Record one blocked-GEMM call dispatched to kernel slot
+/// `kernel_index` (`mixed` = the B panel was packed f32).
+#[inline]
+pub fn add_kernel_call(kernel_index: usize, mixed: bool) {
+    let slot = kernel_index.min(N_KERNELS - 1);
+    if mixed {
+        KERNEL_MIXED_CALLS[slot].fetch_add(1, Ordering::Relaxed);
+    } else {
+        KERNEL_F64_CALLS[slot].fetch_add(1, Ordering::Relaxed);
+    }
+}
+
+/// Record `bytes` saved by storing tiles f32 instead of f64.
+pub fn add_f32_saved(bytes: u64) {
+    F32_BYTES_SAVED.fetch_add(bytes, Ordering::Relaxed);
+}
+
+/// Snapshot of the kernel-dispatch counters.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct KernelReport {
+    /// f64 blocked-GEMM calls per kernel slot (see [`KERNEL_NAMES`]).
+    pub f64_calls: [u64; N_KERNELS],
+    /// Mixed-precision (f32-B-panel) calls per kernel slot.
+    pub mixed_calls: [u64; N_KERNELS],
+    /// Bytes saved by f32 tile storage vs all-f64.
+    pub f32_bytes_saved: u64,
+}
+
+impl KernelReport {
+    /// Difference vs an earlier snapshot.
+    pub fn since(&self, earlier: &KernelReport) -> KernelReport {
+        let mut r = KernelReport::default();
+        for i in 0..N_KERNELS {
+            r.f64_calls[i] = self.f64_calls[i] - earlier.f64_calls[i];
+            r.mixed_calls[i] = self.mixed_calls[i] - earlier.mixed_calls[i];
+        }
+        r.f32_bytes_saved = self.f32_bytes_saved - earlier.f32_bytes_saved;
+        r
+    }
+
+    /// Total GEMM calls across kernels and precisions.
+    pub fn total_calls(&self) -> u64 {
+        self.f64_calls.iter().sum::<u64>() + self.mixed_calls.iter().sum::<u64>()
+    }
+
+    /// One line per kernel slot that saw traffic.
+    pub fn table(&self) -> String {
+        let mut out = String::new();
+        for i in 0..N_KERNELS {
+            if self.f64_calls[i] == 0 && self.mixed_calls[i] == 0 {
+                continue;
+            }
+            out.push_str(&format!(
+                "  {:<8} {:>12} f64 calls {:>12} mixed calls\n",
+                KERNEL_NAMES[i], self.f64_calls[i], self.mixed_calls[i]
+            ));
+        }
+        out
+    }
+}
+
+pub fn kernel_snapshot() -> KernelReport {
+    let mut r = KernelReport::default();
+    for i in 0..N_KERNELS {
+        r.f64_calls[i] = KERNEL_F64_CALLS[i].load(Ordering::Relaxed);
+        r.mixed_calls[i] = KERNEL_MIXED_CALLS[i].load(Ordering::Relaxed);
+    }
+    r.f32_bytes_saved = F32_BYTES_SAVED.load(Ordering::Relaxed);
+    r
 }
 
 /// Record one request routed to the worker at `worker_index` by the
@@ -429,6 +520,25 @@ mod tests {
         assert!(after.rebalances >= 1);
         assert!(after.moved_shards >= 12);
         assert!(after.imbalance() >= 1.0);
+    }
+
+    #[test]
+    fn kernel_counters_accumulate() {
+        let before = kernel_snapshot();
+        add_kernel_call(0, false);
+        add_kernel_call(0, true);
+        add_kernel_call(1, true);
+        add_kernel_call(N_KERNELS + 3, false); // pools into the last slot
+        add_f32_saved(4096);
+        let after = kernel_snapshot().since(&before);
+        // Other tests may run GEMMs concurrently; assert lower bounds.
+        assert!(after.f64_calls[0] >= 1);
+        assert!(after.mixed_calls[0] >= 1);
+        assert!(after.mixed_calls[1] >= 1);
+        assert!(after.f64_calls[N_KERNELS - 1] >= 1);
+        assert!(after.total_calls() >= 4);
+        assert!(after.f32_bytes_saved >= 4096);
+        assert!(after.table().contains("scalar"));
     }
 
     #[test]

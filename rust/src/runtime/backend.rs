@@ -137,10 +137,10 @@ impl<'a> PjrtLeftSampler<'a> {
                     let (first, second) = if transpose { (lij, lkj) } else { (lkj, lij) };
                     sb.sample_chain(
                         &SampleChain {
-                            uk: &first.u,
-                            vk: &first.v,
-                            ui: &second.u,
-                            vi: &second.v,
+                            uk: (&first.u).into(),
+                            vk: (&first.v).into(),
+                            ui: (&second.u).into(),
+                            vi: (&second.v).into(),
                             d: self.dblocks.map(|d| d[j].as_slice()),
                             omega: om,
                         },

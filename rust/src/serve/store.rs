@@ -29,6 +29,13 @@
 //! (`to_le_bytes`/`from_le_bytes`), which the property tests in
 //! `rust/tests/serve.rs` assert.
 //!
+//! **Version 2** appends a per-tile precision word to each tile's
+//! metadata (see [`PREC_F64`]/[`PREC_F32`]): f32 low-rank tiles store
+//! their factors packed two f32s per payload word, each factor padded
+//! to a whole word, so the mapped loader can hand out aligned `&[f32]`
+//! views just as zero-copy as the f64 ones. v1 files (no precision
+//! word) still load, decoding every tile as f64.
+//!
 //! Three kinds share the layout:
 //!
 //! * kind 0 — a symmetric [`TlrMatrix`];
@@ -38,15 +45,22 @@
 
 use crate::factor::{CholFactor, FactorStats, LdlFactor};
 use crate::linalg::matrix::Matrix;
-use crate::linalg::storage::{Mapping, MappedSlice, TileStorage};
+use crate::linalg::matrix32::MatrixF32;
+use crate::linalg::storage::{Mapping, MappedSlice, MappedSlice32, Storage32, TileStorage};
 use crate::serve::mmap::Mmap;
 use crate::tlr::matrix::TlrMatrix;
-use crate::tlr::tile::{LowRank, Tile};
+use crate::tlr::tile::{LowRank, LowRank32, Tile};
 use std::path::{Path, PathBuf};
 use std::sync::Arc;
 
 const MAGIC: &[u8; 8] = b"H2OTLRSF";
-const VERSION: u32 = 1;
+/// Current format version. v2 added a per-tile precision word to the
+/// tile metadata (mixed-precision factors): v1 tile meta is 4 `u64`s
+/// `(tag, rows, cols, rank)`, v2 is 5 with a trailing `prec`. Decoders
+/// still read v1 files (all tiles f64).
+const VERSION: u32 = 2;
+/// Oldest version the decoders accept.
+const MIN_VERSION: u32 = 1;
 
 const KIND_TLR: u32 = 0;
 const KIND_CHOL: u32 = 1;
@@ -54,6 +68,14 @@ const KIND_LDL: u32 = 2;
 
 const TAG_DENSE: u64 = 0;
 const TAG_LOWRANK: u64 = 1;
+
+/// Tile stored as f64 payload values.
+const PREC_F64: u64 = 0;
+/// Low-rank tile stored as f32 factors, packed two per `f64` payload
+/// word (little-endian: the first f32 of a pair occupies the low 32
+/// bits). `U` and `V` are each padded to a whole word, so a mapped
+/// reader can view either factor as an aligned `&[f32]` directly.
+const PREC_F32: u64 = 1;
 
 /// Serialization / store failure.
 #[derive(Debug)]
@@ -170,15 +192,37 @@ fn tlr_header(h: &mut HeaderWriter, a: &TlrMatrix) {
                     h.usize(m.rows());
                     h.usize(m.cols());
                     h.u64(0);
+                    h.u64(PREC_F64);
                 }
                 Tile::LowRank(lr) => {
                     h.u64(TAG_LOWRANK);
                     h.usize(lr.rows());
                     h.usize(lr.cols());
                     h.usize(lr.rank());
+                    h.u64(PREC_F64);
+                }
+                Tile::LowRank32(lr) => {
+                    h.u64(TAG_LOWRANK);
+                    h.usize(lr.rows());
+                    h.usize(lr.cols());
+                    h.usize(lr.rank());
+                    h.u64(PREC_F32);
                 }
             }
         }
+    }
+}
+
+/// Pack f32 values two per `f64` payload word (low 32 bits first, so
+/// the little-endian byte stream is the f32s in order), padding the
+/// last word with zero bits when `vals` has odd length. The packing is
+/// pure bit transport — `from_bits`/`to_bits` round-trip exactly, no
+/// arithmetic ever touches the synthesized f64.
+fn pack_f32_words(payload: &mut Vec<f64>, vals: &[f32]) {
+    for pair in vals.chunks(2) {
+        let lo = pair[0].to_bits() as u64;
+        let hi = if pair.len() == 2 { pair[1].to_bits() as u64 } else { 0 };
+        payload.push(f64::from_bits(lo | (hi << 32)));
     }
 }
 
@@ -191,30 +235,38 @@ fn tlr_payload(payload: &mut Vec<f64>, a: &TlrMatrix) {
                     payload.extend_from_slice(lr.u.as_slice());
                     payload.extend_from_slice(lr.v.as_slice());
                 }
+                Tile::LowRank32(lr) => {
+                    pack_f32_words(payload, lr.u.as_slice());
+                    pack_f32_words(payload, lr.v.as_slice());
+                }
             }
         }
     }
 }
 
-/// Per-tile metadata from the header: `(tag, rows, cols, rank)`.
-type TileMeta = (u64, usize, usize, usize);
+/// Per-tile metadata from the header: `(tag, rows, cols, rank, prec)`.
+/// v1 files have no precision word; it reads as [`PREC_F64`].
+type TileMeta = (u64, usize, usize, usize, u64);
 
 fn read_tlr_header(
     h: &mut HeaderReader<'_>,
+    version: u32,
 ) -> Result<(Vec<usize>, Vec<TileMeta>), StoreError> {
+    // v1 tile meta is 4 u64s; v2 appended the precision word.
+    let meta_words: usize = if version >= 2 { 5 } else { 4 };
     let nb = h.usize()?;
     if nb == 0 || nb > 1 << 24 {
         return format_err(format!("implausible tile count {nb}"));
     }
     // A checksum only proves integrity, not sanity: before reserving
     // anything sized by `nb`, check that the header is actually large
-    // enough to hold what `nb` implies (nb+1 offsets plus 4 u64s per
-    // lower-triangle tile), so a crafted count cannot drive a huge
-    // allocation from a tiny file.
+    // enough to hold what `nb` implies (nb+1 offsets plus `meta_words`
+    // u64s per lower-triangle tile), so a crafted count cannot drive a
+    // huge allocation from a tiny file.
     let need = nb
         .checked_mul(nb + 1)
         .map(|v| v / 2)
-        .and_then(|t| t.checked_mul(4))
+        .and_then(|t| t.checked_mul(meta_words))
         .and_then(|t| t.checked_add(nb + 1));
     match need {
         Some(n64) if n64 <= h.remaining_u64s() => {}
@@ -234,6 +286,7 @@ fn read_tlr_header(
             let rows = h.usize()?;
             let cols = h.usize()?;
             let rank = h.usize()?;
+            let prec = if version >= 2 { h.u64()? } else { PREC_F64 };
             if rows != offsets[i + 1] - offsets[i] || cols != offsets[j + 1] - offsets[j] {
                 return format_err(format!("tile ({i},{j}) shape disagrees with offsets"));
             }
@@ -245,7 +298,17 @@ fn read_tlr_header(
                 TAG_LOWRANK if i != j && rank <= rows.min(cols) => {}
                 _ => return format_err(format!("tile ({i},{j}): bad tag/rank ({tag}/{rank})")),
             }
-            tiles.push((tag, rows, cols, rank));
+            match prec {
+                PREC_F64 => {}
+                // f32 storage is defined for low-rank factors only.
+                PREC_F32 if tag == TAG_LOWRANK => {}
+                _ => {
+                    return format_err(format!(
+                        "tile ({i},{j}): invalid precision tag {prec} for tag {tag}"
+                    ))
+                }
+            }
+            tiles.push((tag, rows, cols, rank, prec));
         }
     }
     Ok((offsets, tiles))
@@ -296,6 +359,37 @@ impl Taker<'_> {
         }
     }
 
+    /// Take `count` f32 values stored packed two per payload word (the
+    /// [`PREC_F32`] encoding: each factor word-padded, low half first).
+    /// The owned path re-splits the words; the mapped path hands out a
+    /// zero-copy [`MappedSlice32`] at the equivalent f32 offset
+    /// (`2 ×` the word index — the payload is 8-byte aligned, so any
+    /// word boundary is also a valid f32 boundary).
+    fn take32(&mut self, count: usize) -> Result<Storage32, StoreError> {
+        let words = count.div_ceil(2);
+        if words > self.remaining() {
+            return format_err("truncated payload");
+        }
+        match self {
+            Taker::Owned { payload, pos } => {
+                let mut v = Vec::with_capacity(words * 2);
+                for &w in &payload[*pos..*pos + words] {
+                    let bits = w.to_bits();
+                    v.push(f32::from_bits(bits as u32));
+                    v.push(f32::from_bits((bits >> 32) as u32));
+                }
+                v.truncate(count);
+                *pos += words;
+                Ok(Storage32::Owned(v))
+            }
+            Taker::Mapped { base, start, pos, .. } => {
+                let s = MappedSlice32::new(base.clone(), 2 * (*start + *pos), count);
+                *pos += words;
+                Ok(Storage32::Mapped(s))
+            }
+        }
+    }
+
     /// Take `count` values by copy (for the small LDL diagonal, which is
     /// stored as owned `Vec`s either way).
     fn take_vec(&mut self, count: usize) -> Result<Vec<f64>, StoreError> {
@@ -312,10 +406,14 @@ fn read_tlr_tiles(
     metas: &[TileMeta],
 ) -> Result<TlrMatrix, StoreError> {
     let mut tiles = Vec::with_capacity(metas.len());
-    for &(tag, rows, cols, rank) in metas {
+    for &(tag, rows, cols, rank, prec) in metas {
         if tag == TAG_DENSE {
             let st = taker.take(mul_guard(rows, cols)?)?;
             tiles.push(Tile::Dense(Matrix::from_storage(rows, cols, st)));
+        } else if prec == PREC_F32 {
+            let u = MatrixF32::from_storage(rows, rank, taker.take32(mul_guard(rows, rank)?)?);
+            let v = MatrixF32::from_storage(cols, rank, taker.take32(mul_guard(cols, rank)?)?);
+            tiles.push(Tile::LowRank32(LowRank32 { u, v }));
         } else {
             let u = Matrix::from_storage(rows, rank, taker.take(mul_guard(rows, rank)?)?);
             let v = Matrix::from_storage(cols, rank, taker.take(mul_guard(cols, rank)?)?);
@@ -328,6 +426,13 @@ fn read_tlr_tiles(
 // -------------------------------------------------------- file framing
 
 fn frame(kind: u32, header: &[u8], payload: &[f64]) -> Vec<u8> {
+    frame_with_version(VERSION, kind, header, payload)
+}
+
+/// [`frame`] with an explicit version stamp. Writers always emit
+/// [`VERSION`]; the tests use this to fabricate older-version files and
+/// prove the decoders still read them.
+fn frame_with_version(version: u32, kind: u32, header: &[u8], payload: &[f64]) -> Vec<u8> {
     let mut payload_bytes = Vec::with_capacity(payload.len() * 8);
     for &v in payload {
         payload_bytes.extend_from_slice(&v.to_le_bytes());
@@ -335,7 +440,7 @@ fn frame(kind: u32, header: &[u8], payload: &[f64]) -> Vec<u8> {
     let checksum = fnv1a_extend(fnv1a(header), &payload_bytes);
     let mut out = Vec::with_capacity(40 + header.len() + payload_bytes.len());
     out.extend_from_slice(MAGIC);
-    out.extend_from_slice(&VERSION.to_le_bytes());
+    out.extend_from_slice(&version.to_le_bytes());
     out.extend_from_slice(&kind.to_le_bytes());
     out.extend_from_slice(&(header.len() as u64).to_le_bytes());
     out.extend_from_slice(&(payload.len() as u64).to_le_bytes());
@@ -353,6 +458,10 @@ fn frame(kind: u32, header: &[u8], payload: &[f64]) -> Vec<u8> {
 /// declared sizes without re-checking, and no allocation is ever sized
 /// from an unverified header field.
 struct Frame<'a> {
+    /// Format version the file was written with (within
+    /// `MIN_VERSION..=VERSION`) — decoders branch on it for the tile
+    /// metadata width.
+    version: u32,
     header: &'a [u8],
     payload_bytes: &'a [u8],
     /// Byte offset of the payload within the file. Always a multiple of
@@ -373,8 +482,10 @@ fn unframe_ref(bytes: &[u8], want_kind: u32) -> Result<Frame<'_>, StoreError> {
     let u32_at = |at: usize| u32::from_le_bytes(bytes[at..at + 4].try_into().unwrap());
     let u64_at = |at: usize| u64::from_le_bytes(bytes[at..at + 8].try_into().unwrap());
     let version = u32_at(8);
-    if version != VERSION {
-        return format_err(format!("unsupported version {version} (expected {VERSION})"));
+    if !(MIN_VERSION..=VERSION).contains(&version) {
+        return format_err(format!(
+            "unsupported version {version} (expected {MIN_VERSION}..={VERSION})"
+        ));
     }
     let kind = u32_at(12);
     if kind != want_kind {
@@ -406,16 +517,16 @@ fn unframe_ref(bytes: &[u8], want_kind: u32) -> Result<Frame<'_>, StoreError> {
     if fnv1a_extend(fnv1a(header), payload_bytes) != checksum {
         return format_err("checksum mismatch (corrupted file)");
     }
-    Ok(Frame { header, payload_bytes, payload_offset: 40 + header_len, payload_len })
+    Ok(Frame { version, header, payload_bytes, payload_offset: 40 + header_len, payload_len })
 }
 
-fn unframe(bytes: &[u8], want_kind: u32) -> Result<(&[u8], Vec<f64>), StoreError> {
+fn unframe(bytes: &[u8], want_kind: u32) -> Result<(u32, &[u8], Vec<f64>), StoreError> {
     let fr = unframe_ref(bytes, want_kind)?;
     let mut payload = Vec::with_capacity(fr.payload_len);
     for chunk in fr.payload_bytes.chunks_exact(8) {
         payload.push(f64::from_le_bytes(chunk.try_into().unwrap()));
     }
-    Ok((fr.header, payload))
+    Ok((fr.version, fr.header, payload))
 }
 
 // ------------------------------------------------------- encode/decode
@@ -431,13 +542,17 @@ pub fn encode_tlr(a: &TlrMatrix) -> Vec<u8> {
 
 /// Deserialize a [`TlrMatrix`] written by [`encode_tlr`].
 pub fn decode_tlr(bytes: &[u8]) -> Result<TlrMatrix, StoreError> {
-    let (header, payload) = unframe(bytes, KIND_TLR)?;
-    decode_tlr_parts(header, Taker::Owned { payload: &payload, pos: 0 })
+    let (version, header, payload) = unframe(bytes, KIND_TLR)?;
+    decode_tlr_parts(version, header, Taker::Owned { payload: &payload, pos: 0 })
 }
 
-fn decode_tlr_parts(header: &[u8], mut taker: Taker<'_>) -> Result<TlrMatrix, StoreError> {
+fn decode_tlr_parts(
+    version: u32,
+    header: &[u8],
+    mut taker: Taker<'_>,
+) -> Result<TlrMatrix, StoreError> {
     let mut h = HeaderReader::new(header);
-    let (offsets, metas) = read_tlr_header(&mut h)?;
+    let (offsets, metas) = read_tlr_header(&mut h, version)?;
     h.done()?;
     let a = read_tlr_tiles(&mut taker, offsets, &metas)?;
     if taker.remaining() != 0 {
@@ -464,13 +579,17 @@ pub fn encode_chol(f: &CholFactor) -> Vec<u8> {
 /// factor carries default (empty) run statistics with the stored
 /// permutation.
 pub fn decode_chol(bytes: &[u8]) -> Result<CholFactor, StoreError> {
-    let (header, payload) = unframe(bytes, KIND_CHOL)?;
-    decode_chol_parts(header, Taker::Owned { payload: &payload, pos: 0 })
+    let (version, header, payload) = unframe(bytes, KIND_CHOL)?;
+    decode_chol_parts(version, header, Taker::Owned { payload: &payload, pos: 0 })
 }
 
-fn decode_chol_parts(header: &[u8], mut taker: Taker<'_>) -> Result<CholFactor, StoreError> {
+fn decode_chol_parts(
+    version: u32,
+    header: &[u8],
+    mut taker: Taker<'_>,
+) -> Result<CholFactor, StoreError> {
     let mut h = HeaderReader::new(header);
-    let (offsets, metas) = read_tlr_header(&mut h)?;
+    let (offsets, metas) = read_tlr_header(&mut h, version)?;
     let nb = offsets.len() - 1;
     let mut perm = Vec::with_capacity(nb);
     let mut seen = vec![false; nb];
@@ -514,13 +633,17 @@ pub fn encode_ldl(f: &LdlFactor) -> Vec<u8> {
 
 /// Deserialize an [`LdlFactor`] written by [`encode_ldl`].
 pub fn decode_ldl(bytes: &[u8]) -> Result<LdlFactor, StoreError> {
-    let (header, payload) = unframe(bytes, KIND_LDL)?;
-    decode_ldl_parts(header, Taker::Owned { payload: &payload, pos: 0 })
+    let (version, header, payload) = unframe(bytes, KIND_LDL)?;
+    decode_ldl_parts(version, header, Taker::Owned { payload: &payload, pos: 0 })
 }
 
-fn decode_ldl_parts(header: &[u8], mut taker: Taker<'_>) -> Result<LdlFactor, StoreError> {
+fn decode_ldl_parts(
+    version: u32,
+    header: &[u8],
+    mut taker: Taker<'_>,
+) -> Result<LdlFactor, StoreError> {
     let mut h = HeaderReader::new(header);
-    let (offsets, metas) = read_tlr_header(&mut h)?;
+    let (offsets, metas) = read_tlr_header(&mut h, version)?;
     h.done()?;
     let nb = offsets.len() - 1;
     let sizes: Vec<usize> = (0..nb).map(|i| offsets[i + 1] - offsets[i]).collect();
@@ -652,7 +775,7 @@ macro_rules! mapped_loader {
             let map = map_file(path)?;
             let fr = unframe_ref(map.bytes(), $kind)?;
             let taker = mapped_taker(&map, &fr);
-            let value = $parts(fr.header, taker)?;
+            let value = $parts(fr.version, fr.header, taker)?;
             Ok(Mapped { value, addr_range: map.addr_range(), mapped_bytes: map.len() })
         }
     };
@@ -906,10 +1029,62 @@ mod tests {
                         assert_eq!(x.u, y.u, "tile ({i},{j}) U");
                         assert_eq!(x.v, y.v, "tile ({i},{j}) V");
                     }
+                    (Tile::LowRank32(x), Tile::LowRank32(y)) => {
+                        assert_eq!(x.u.as_slice(), y.u.as_slice(), "tile ({i},{j}) U32");
+                        assert_eq!(x.v.as_slice(), y.v.as_slice(), "tile ({i},{j}) V32");
+                    }
                     _ => panic!("tile ({i},{j}) kind changed in round trip"),
                 }
             }
         }
+    }
+
+    /// `random_tlr` with the given strictly-lower tiles demoted to f32
+    /// storage.
+    fn random_mixed_tlr(
+        sizes: &[usize],
+        rank: usize,
+        seed: u64,
+        demote: &[(usize, usize)],
+    ) -> TlrMatrix {
+        let mut a = random_tlr(sizes, rank, seed);
+        for &(i, j) in demote {
+            let lr32 = LowRank32::from_f64(a.tile(i, j).as_lowrank());
+            a.set_tile(i, j, Tile::LowRank32(lr32));
+        }
+        a
+    }
+
+    /// Encode `a` in the v1 layout (4-word tile metadata, f64 tiles
+    /// only) so the compat test exercises a byte-identical old file.
+    fn encode_tlr_v1(a: &TlrMatrix) -> Vec<u8> {
+        let mut h = HeaderWriter::default();
+        h.usize(a.nb());
+        for &off in a.offsets() {
+            h.usize(off);
+        }
+        for i in 0..a.nb() {
+            for j in 0..=i {
+                match a.tile(i, j) {
+                    Tile::Dense(m) => {
+                        h.u64(TAG_DENSE);
+                        h.usize(m.rows());
+                        h.usize(m.cols());
+                        h.u64(0);
+                    }
+                    Tile::LowRank(lr) => {
+                        h.u64(TAG_LOWRANK);
+                        h.usize(lr.rows());
+                        h.usize(lr.cols());
+                        h.usize(lr.rank());
+                    }
+                    Tile::LowRank32(_) => panic!("v1 cannot store f32 tiles"),
+                }
+            }
+        }
+        let mut payload = Vec::new();
+        tlr_payload(&mut payload, a);
+        frame_with_version(1, KIND_TLR, &h.buf, &payload)
     }
 
     #[test]
@@ -962,5 +1137,109 @@ mod tests {
         // Pin the hash so stored keys stay valid across releases.
         assert_eq!(fnv1a(b""), 0xcbf29ce484222325);
         assert_eq!(fnv1a(b"a"), 0xaf63dc4c8601ec8c);
+    }
+
+    #[test]
+    fn v1_file_still_loads() {
+        // Files written before the precision word existed must keep
+        // decoding, with every tile read as f64.
+        let a = random_tlr(&[5, 7, 4], 2, 21);
+        let bytes = encode_tlr_v1(&a);
+        assert_eq!(u32::from_le_bytes(bytes[8..12].try_into().unwrap()), 1);
+        let back = decode_tlr(&bytes).unwrap();
+        assert_tiles_bitwise(&a, &back);
+    }
+
+    #[test]
+    fn mixed_tile_roundtrip_bitwise() {
+        // Odd factor lengths (5·3 and 3·3 f32s) exercise the half-word
+        // padding at the end of each packed factor.
+        let a = random_mixed_tlr(&[5, 3, 4], 3, 22, &[(1, 0)]);
+        let back = decode_tlr(&encode_tlr(&a)).unwrap();
+        assert_tiles_bitwise(&a, &back);
+
+        // Mixed matrices round-trip inside factors too.
+        let f = CholFactor {
+            l: random_mixed_tlr(&[4, 4], 2, 23, &[(1, 0)]),
+            stats: FactorStats { perm: vec![1, 0], ..Default::default() },
+        };
+        let fb = decode_chol(&encode_chol(&f)).unwrap();
+        assert_tiles_bitwise(&f.l, &fb.l);
+        assert_eq!(fb.stats.perm, vec![1, 0]);
+    }
+
+    #[test]
+    fn mixed_tile_mapped_roundtrip() {
+        let a = random_mixed_tlr(&[5, 3, 4], 3, 24, &[(1, 0), (2, 1)]);
+        let dir = std::env::temp_dir();
+        let path = dir.join(format!("h2otlr_store_mixed_{}.bin", std::process::id()));
+        save_tlr(&path, &a).unwrap();
+        let m = load_tlr_mapped(&path).unwrap();
+        assert_tiles_bitwise(&a, &m.value);
+        if cfg!(target_endian = "little") {
+            // f32 tiles must be zero-copy views, same as f64 ones.
+            assert!(m.value.tile(1, 0).is_mapped(), "f32 tile not mapped");
+            assert!(m.value.tile(2, 0).is_mapped(), "f64 tile not mapped");
+        }
+        drop(m);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn invalid_precision_tag_errors() {
+        // A v2 file whose precision word is neither PREC_F64 nor
+        // PREC_F32 must fail with a typed Format error — never panic —
+        // on both the owned and the mapped loader.
+        let a = random_tlr(&[4, 4], 2, 25);
+        let mut h = HeaderWriter::default();
+        h.usize(2);
+        for &off in a.offsets() {
+            h.usize(off);
+        }
+        let rank = a.tile(1, 0).as_lowrank().rank();
+        for (tag, rk, prec) in
+            [(TAG_DENSE, 0, PREC_F64), (TAG_LOWRANK, rank as u64, 7), (TAG_DENSE, 0, PREC_F64)]
+        {
+            h.u64(tag);
+            h.usize(4);
+            h.usize(4);
+            h.u64(rk);
+            h.u64(prec);
+        }
+        let mut payload = Vec::new();
+        tlr_payload(&mut payload, &a);
+        let bytes = frame_with_version(VERSION, KIND_TLR, &h.buf, &payload);
+        match decode_tlr(&bytes) {
+            Err(StoreError::Format(m)) => assert!(m.contains("precision"), "{m}"),
+            other => panic!("expected precision-tag error, got {other:?}"),
+        }
+        let dir = std::env::temp_dir();
+        let path = dir.join(format!("h2otlr_store_badprec_{}.bin", std::process::id()));
+        std::fs::write(&path, &bytes).unwrap();
+        match load_tlr_mapped(&path) {
+            Err(StoreError::Format(m)) => assert!(m.contains("precision"), "{m}"),
+            other => {
+                panic!("expected precision-tag error, got {:?}", other.map(|_| ()))
+            }
+        }
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn packed_f32_words_preserve_bits() {
+        // The pack/unpack pair is pure bit transport, including NaN
+        // payloads and negative zero.
+        let vals =
+            [1.5f32, -0.0, f32::NAN, f32::INFINITY, f32::MIN_POSITIVE, -3.25e-30, 7.0];
+        let mut words = Vec::new();
+        pack_f32_words(&mut words, &vals);
+        assert_eq!(words.len(), 4);
+        let mut taker = Taker::Owned { payload: &words, pos: 0 };
+        let st = taker.take32(vals.len()).unwrap();
+        let back = st.as_slice();
+        for (x, y) in vals.iter().zip(back) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
+        assert_eq!(taker.remaining(), 0);
     }
 }

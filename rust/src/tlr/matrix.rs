@@ -123,11 +123,7 @@ impl TlrMatrix {
         // Tile (b, a) maps to its own transpose; low-rank transpose is a
         // factor swap.
         let iba = self.tri(b, a);
-        if let Tile::LowRank(lr) = &mut self.tiles[iba] {
-            std::mem::swap(&mut lr.u, &mut lr.v);
-        } else {
-            panic!("off-diagonal tile (b, a) must be low-rank");
-        }
+        transpose_offdiag_in_place(&mut self.tiles[iba]);
         // Columns j < a: swap rows a and b of block column j.
         for j in 0..a {
             let (x, y) = (self.tri(a, j), self.tri(b, j));
@@ -143,11 +139,7 @@ impl TlrMatrix {
             let (x, y) = (self.tri(k, a), self.tri(b, k));
             self.tiles.swap(x, y);
             for idx in [x, y] {
-                if let Tile::LowRank(lr) = &mut self.tiles[idx] {
-                    std::mem::swap(&mut lr.u, &mut lr.v);
-                } else {
-                    panic!("off-diagonal tiles must be low-rank");
-                }
+                transpose_offdiag_in_place(&mut self.tiles[idx]);
             }
         }
     }
@@ -227,12 +219,24 @@ impl TlrMatrix {
                 let t = self.tile(i, j);
                 match t {
                     Tile::Dense(_) => dense += t.memory_f64(),
-                    Tile::LowRank(_) => lowrank += t.memory_f64(),
+                    // LowRank32 tiles report f64-equivalent words (two
+                    // f32 per word), so the unit stays consistent.
+                    Tile::LowRank(_) | Tile::LowRank32(_) => lowrank += t.memory_f64(),
                 }
             }
         }
         let n = self.n();
         MemoryReport { dense_f64: dense, lowrank_f64: 2 * lowrank, full_dense_f64: n * n }
+    }
+}
+
+/// Transpose an off-diagonal low-rank tile in place by swapping its
+/// factors (either precision). Pointer swaps only — no data copied.
+fn transpose_offdiag_in_place(t: &mut Tile) {
+    match t {
+        Tile::LowRank(lr) => std::mem::swap(&mut lr.u, &mut lr.v),
+        Tile::LowRank32(lr) => std::mem::swap(&mut lr.u, &mut lr.v),
+        Tile::Dense(_) => panic!("off-diagonal tiles must be low-rank"),
     }
 }
 

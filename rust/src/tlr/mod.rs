@@ -8,5 +8,5 @@ pub mod tile;
 
 pub use construct::{build_tlr, BuildOpts, Compression};
 pub use matrix::{MemoryReport, TlrMatrix};
-pub use mixed::MixedTlr;
-pub use tile::{LowRank, Tile};
+pub use mixed::{demote_offdiag, should_demote, DemotionStats, MixedTlr};
+pub use tile::{LowRank, LowRank32, Tile};

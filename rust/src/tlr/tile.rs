@@ -1,8 +1,9 @@
 //! A single tile of a TLR matrix: dense (diagonal tiles) or an adaptive
 //! rank low-rank factorization `U Vᵀ` (off-diagonal tiles).
 
-use crate::linalg::gemm::{gemm, matmul, matmul_tn, Trans};
+use crate::linalg::gemm::{gemm, gemm_any, matmul, matmul_tn, GemmWorkspace, Src, Trans};
 use crate::linalg::matrix::Matrix;
+use crate::linalg::matrix32::MatrixF32;
 use crate::linalg::svd;
 
 // Tile payloads are borrow-or-own: re-exported here because the tile is
@@ -89,11 +90,127 @@ impl LowRank {
     }
 }
 
+/// Low-rank factors stored in f32 (paper §7 mixed precision): halves
+/// the storage of an off-diagonal tile while every application still
+/// accumulates in f64 — the mixed GEMM kernels widen the f32 entries at
+/// pack time (A side) or at the microkernel broadcast (B side), so the
+/// only perturbation is the one-time round-to-nearest of the factors
+/// (≈ ‖tile‖·2⁻²⁴). Demotion policy lives in [`crate::tlr::mixed`].
+#[derive(Debug, Clone)]
+pub struct LowRank32 {
+    pub u: MatrixF32,
+    pub v: MatrixF32,
+}
+
+impl LowRank32 {
+    /// Demote an f64 low-rank pair (round-to-nearest per entry).
+    pub fn from_f64(lr: &LowRank) -> Self {
+        LowRank32 { u: MatrixF32::from_f64(&lr.u), v: MatrixF32::from_f64(&lr.v) }
+    }
+
+    pub fn rank(&self) -> usize {
+        self.u.cols()
+    }
+
+    pub fn rows(&self) -> usize {
+        self.u.rows()
+    }
+
+    pub fn cols(&self) -> usize {
+        self.v.rows()
+    }
+
+    /// Widen back to f64 factors (exact).
+    pub fn to_f64(&self) -> LowRank {
+        LowRank { u: self.u.widen(), v: self.v.widen() }
+    }
+
+    /// Materialize `U Vᵀ` in f64.
+    pub fn to_dense(&self) -> Matrix {
+        self.to_f64().to_dense()
+    }
+
+    /// The transpose tile `V Uᵀ` (cheap: swaps the factors).
+    pub fn transpose(&self) -> LowRank32 {
+        LowRank32 { u: self.v.clone(), v: self.u.clone() }
+    }
+
+    /// `Y = (U Vᵀ) X` with f64 accumulation: the f32 factors enter the
+    /// GEMM on the A side, widened at pack time.
+    pub fn apply(&self, x: &Matrix) -> Matrix {
+        let mut ws = GemmWorkspace::new();
+        let mut t = Matrix::zeros(self.rank(), x.cols());
+        gemm_any(Trans::Yes, Trans::No, 1.0, Src::F32(&self.v), Src::F64(x), 0.0, &mut t, &mut ws);
+        let mut y = Matrix::zeros(self.rows(), x.cols());
+        gemm_any(Trans::No, Trans::No, 1.0, Src::F32(&self.u), Src::F64(&t), 0.0, &mut y, &mut ws);
+        y
+    }
+
+    /// `Y = (U Vᵀ)ᵀ X = V (Uᵀ X)` with f64 accumulation.
+    pub fn apply_t(&self, x: &Matrix) -> Matrix {
+        let mut ws = GemmWorkspace::new();
+        let mut t = Matrix::zeros(self.rank(), x.cols());
+        gemm_any(Trans::Yes, Trans::No, 1.0, Src::F32(&self.u), Src::F64(x), 0.0, &mut t, &mut ws);
+        let mut y = Matrix::zeros(self.cols(), x.cols());
+        gemm_any(Trans::No, Trans::No, 1.0, Src::F32(&self.v), Src::F64(&t), 0.0, &mut y, &mut ws);
+        y
+    }
+
+    /// `y += U (Vᵀ x)` over raw slices, f64 accumulation throughout.
+    pub fn apply_add(&self, x: &[f64], y: &mut [f64]) {
+        debug_assert_eq!(x.len(), self.cols());
+        debug_assert_eq!(y.len(), self.rows());
+        let mut t = vec![0.0f64; self.rank()];
+        for (q, tq) in t.iter_mut().enumerate() {
+            *tq = self.v.col(q).iter().zip(x).map(|(&vv, &xv)| vv as f64 * xv).sum();
+        }
+        for (q, &tq) in t.iter().enumerate() {
+            for (yi, &uv) in y.iter_mut().zip(self.u.col(q)) {
+                *yi += uv as f64 * tq;
+            }
+        }
+    }
+
+    /// `y += V (Uᵀ x)` (transpose application over raw slices).
+    pub fn apply_t_add(&self, x: &[f64], y: &mut [f64]) {
+        debug_assert_eq!(x.len(), self.rows());
+        debug_assert_eq!(y.len(), self.cols());
+        let mut t = vec![0.0f64; self.rank()];
+        for (q, tq) in t.iter_mut().enumerate() {
+            *tq = self.u.col(q).iter().zip(x).map(|(&uv, &xv)| uv as f64 * xv).sum();
+        }
+        for (q, &tq) in t.iter().enumerate() {
+            for (yi, &vv) in y.iter_mut().zip(self.v.col(q)) {
+                *yi += vv as f64 * tq;
+            }
+        }
+    }
+
+    /// Storage in bytes.
+    pub fn bytes(&self) -> usize {
+        self.u.bytes() + self.v.bytes()
+    }
+
+    /// Storage expressed in f64-equivalent words (two f32 per word),
+    /// so [`crate::tlr::matrix::MemoryReport`] stays in one unit.
+    pub fn memory_f64(&self) -> usize {
+        (self.rank() * (self.rows() + self.cols())).div_ceil(2)
+    }
+
+    /// Are both factors zero-copy views into a mapping?
+    pub fn is_mapped(&self) -> bool {
+        self.u.is_mapped() && self.v.is_mapped()
+    }
+}
+
 /// A TLR tile.
 #[derive(Debug, Clone)]
 pub enum Tile {
     Dense(Matrix),
     LowRank(LowRank),
+    /// Mixed-precision off-diagonal tile: f32-stored low-rank factors,
+    /// f64 arithmetic (see [`LowRank32`]).
+    LowRank32(LowRank32),
 }
 
 impl Tile {
@@ -101,6 +218,7 @@ impl Tile {
         match self {
             Tile::Dense(m) => m.rows(),
             Tile::LowRank(lr) => lr.rows(),
+            Tile::LowRank32(lr) => lr.rows(),
         }
     }
 
@@ -108,6 +226,7 @@ impl Tile {
         match self {
             Tile::Dense(m) => m.cols(),
             Tile::LowRank(lr) => lr.cols(),
+            Tile::LowRank32(lr) => lr.cols(),
         }
     }
 
@@ -116,6 +235,7 @@ impl Tile {
         match self {
             Tile::Dense(m) => m.rows().min(m.cols()),
             Tile::LowRank(lr) => lr.rank(),
+            Tile::LowRank32(lr) => lr.rank(),
         }
     }
 
@@ -123,6 +243,7 @@ impl Tile {
         match self {
             Tile::Dense(m) => m.clone(),
             Tile::LowRank(lr) => lr.to_dense(),
+            Tile::LowRank32(lr) => lr.to_dense(),
         }
     }
 
@@ -131,6 +252,7 @@ impl Tile {
         match self {
             Tile::Dense(m) => matmul(m, x),
             Tile::LowRank(lr) => lr.apply(x),
+            Tile::LowRank32(lr) => lr.apply(x),
         }
     }
 
@@ -139,6 +261,7 @@ impl Tile {
         match self {
             Tile::Dense(m) => matmul_tn(m, x),
             Tile::LowRank(lr) => lr.apply_t(x),
+            Tile::LowRank32(lr) => lr.apply_t(x),
         }
     }
 
@@ -146,20 +269,28 @@ impl Tile {
         match self {
             Tile::Dense(m) => m.rows() * m.cols(),
             Tile::LowRank(lr) => lr.memory_f64(),
+            Tile::LowRank32(lr) => lr.memory_f64(),
         }
     }
 
     pub fn as_lowrank(&self) -> &LowRank {
         match self {
             Tile::LowRank(lr) => lr,
-            Tile::Dense(_) => panic!("expected low-rank tile"),
+            _ => panic!("expected low-rank tile"),
+        }
+    }
+
+    pub fn as_lowrank32(&self) -> &LowRank32 {
+        match self {
+            Tile::LowRank32(lr) => lr,
+            _ => panic!("expected f32 low-rank tile"),
         }
     }
 
     pub fn as_dense(&self) -> &Matrix {
         match self {
             Tile::Dense(m) => m,
-            Tile::LowRank(_) => panic!("expected dense tile"),
+            _ => panic!("expected dense tile"),
         }
     }
 
@@ -168,6 +299,7 @@ impl Tile {
         match self {
             Tile::Dense(m) => m.is_mapped(),
             Tile::LowRank(lr) => lr.is_mapped(),
+            Tile::LowRank32(lr) => lr.is_mapped(),
         }
     }
 }
@@ -228,6 +360,38 @@ mod tests {
         assert_eq!(lr.memory_f64(), 2 * 16);
         let t = Tile::Dense(Matrix::zeros(8, 8));
         assert_eq!(t.memory_f64(), 64);
+    }
+
+    #[test]
+    fn lowrank32_applies_match_widened_dense() {
+        let (_, lr) = random_lowrank_dense(24, 17, 5, 7);
+        let lr32 = LowRank32::from_f64(&lr);
+        assert_eq!((lr32.rows(), lr32.cols(), lr32.rank()), (24, 17, 5));
+        // The widened factors are the exact operands of every mixed
+        // kernel, so applications must match the dense product of the
+        // *widened* tile to f64 roundoff (not merely f32 accuracy).
+        let d = lr32.to_dense();
+        let mut rng = Rng::new(8);
+        let x = rng.normal_matrix(17, 3);
+        assert!(lr32.apply(&x).sub(&matmul(&d, &x)).norm_max() < 1e-12);
+        let xt = rng.normal_matrix(24, 3);
+        assert!(lr32.apply_t(&xt).sub(&matmul_tn(&d, &xt)).norm_max() < 1e-12);
+        // Slice forms agree with the matrix forms.
+        let xv: Vec<f64> = x.col(0).to_vec();
+        let mut y = vec![0.0; 24];
+        lr32.apply_add(&xv, &mut y);
+        let ym = lr32.apply(&Matrix::from_vec(17, 1, xv));
+        for (a, b) in y.iter().zip(ym.as_slice()) {
+            assert!((a - b).abs() < 1e-12);
+        }
+        // Transpose swaps factors; f64-word accounting rounds up.
+        let t = lr32.transpose();
+        assert!(t.to_dense().sub(&d.transpose()).norm_max() < 1e-13);
+        assert_eq!(lr32.bytes(), 4 * 5 * (24 + 17));
+        assert_eq!(lr32.memory_f64(), (5 * (24 + 17)).div_ceil(2));
+        let tile = Tile::LowRank32(lr32);
+        assert_eq!(tile.rank(), 5);
+        assert!(!tile.is_mapped());
     }
 
     #[test]

@@ -286,10 +286,10 @@ fn prop_fused_chain_batch_matches_manual() {
             for term in terms {
                 sb.sample_chain(
                     &SampleChain {
-                        uk: &term.uk,
-                        vk: &term.vk,
-                        ui: &term.ui,
-                        vi: &term.vi,
+                        uk: (&term.uk).into(),
+                        vk: (&term.vk).into(),
+                        ui: (&term.ui).into(),
+                        vi: (&term.vi).into(),
                         d: term.d.as_deref(),
                         omega: om,
                     },

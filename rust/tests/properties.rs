@@ -467,3 +467,112 @@ fn prop_zero_matrix_factors_to_zero_ranks() {
     let f = cholesky(tlr, &FactorOpts { eps: 1e-10, bs: 4, ..Default::default() }).unwrap();
     assert!(f.l.offdiag_ranks().iter().all(|&r| r == 0));
 }
+
+// ------------------------------------------------------ mixed precision
+
+fn assert_close(a: &Matrix, b: &Matrix, tol: f64, what: &str) {
+    let scale = a.norm_max().max(b.norm_max()).max(1.0);
+    let err = a.sub(b).norm_max();
+    assert!(err <= tol * scale, "{what}: |diff| {err:.3e} > {tol:.0e} * {scale:.3e}");
+}
+
+#[test]
+fn prop_mixed_tiles_native_matches_ref_batch() {
+    use h2opus_tlr::batch::{NativeBatch, RefBatch, StreamBuilder};
+    use h2opus_tlr::tlr::tile::{LowRank, LowRank32, Tile};
+    for seed in 0..8u64 {
+        let mut rng = Rng::new(4000 + seed);
+        let (m, n, bs) = (
+            dims(&mut rng, 4, 40),
+            dims(&mut rng, 4, 40),
+            dims(&mut rng, 1, 12),
+        );
+        let r = dims(&mut rng, 1, 6);
+        let lr = LowRank { u: rng.normal_matrix(m, r), v: rng.normal_matrix(n, r) };
+        let t32 = Tile::LowRank32(LowRank32::from_f64(&lr));
+        let t64 = Tile::LowRank(lr);
+        let x = rng.normal_matrix(n, bs);
+        let xt = rng.normal_matrix(m, bs);
+        let mut sb = StreamBuilder::new();
+        let xin = sb.input(&x);
+        let xtin = sb.input(&xt);
+        let d0 = sb.output(m, bs);
+        let d1 = sb.output(n, bs);
+        let d2 = sb.output(m, bs);
+        sb.apply_tile(&t32, xin, 1.0, d0, false);
+        sb.apply_tile(&t32, xtin, -0.5, d1, true);
+        sb.apply_tile(&t64, xin, 1.0, d2, false);
+        let stream = sb.finish();
+        stream.plan().assert_valid();
+        let native = stream.execute(&NativeBatch::new());
+        let oracle = stream.execute(&RefBatch);
+        for slot in [d0, d1, d2] {
+            assert_close(
+                &native[slot],
+                &oracle[slot],
+                1e-13,
+                &format!("seed={seed} slot={slot}"),
+            );
+        }
+        // The mixed tile is an exact widening of its f32 factors, so the
+        // forward apply must also match the f64 tile built from them.
+        let widened = match &t32 {
+            Tile::LowRank32(l) => Tile::LowRank(l.to_f64()),
+            _ => unreachable!(),
+        };
+        let mut sb2 = StreamBuilder::new();
+        let xin2 = sb2.input(&x);
+        let dw = sb2.output(m, bs);
+        sb2.apply_tile(&widened, xin2, 1.0, dw, false);
+        let wide = sb2.finish().execute(&NativeBatch::new());
+        assert_close(&native[d0], &wide[dw], 1e-13, &format!("seed={seed} widened"));
+    }
+}
+
+#[test]
+fn mixed_factor_pcg_iteration_parity_and_bytes() {
+    use h2opus_tlr::apps::covariance::ExpCovariance;
+    use h2opus_tlr::apps::geometry::random_ball;
+    use h2opus_tlr::apps::kdtree::kdtree_order;
+    use h2opus_tlr::solve::{chol_solve, pcg, TlrOp};
+    use h2opus_tlr::tlr::construct::{build_tlr, BuildOpts, Compression};
+    use h2opus_tlr::tlr::demote_offdiag;
+    let eps = 1e-6;
+    let pts = random_ball(300, 3, 77);
+    let c = kdtree_order(&pts, 48);
+    let cov = ExpCovariance::paper_default(pts.permuted(&c.perm));
+    let tlr = build_tlr(
+        &cov,
+        &c.offsets,
+        &BuildOpts { eps, method: Compression::Ara { bs: 8 }, seed: 77 },
+    );
+    let a_op = tlr.clone();
+    let f64_factor =
+        cholesky(tlr, &FactorOpts { eps, bs: 8, shift: eps, ..Default::default() }).unwrap();
+    // Demote the clone: the acceptance bar is >= 1.4x lower off-diagonal
+    // bytes at the factorization tolerance...
+    let mut mixed = f64_factor.clone();
+    let before = mixed.l.memory();
+    let stats = demote_offdiag(&mut mixed.l, eps);
+    let after = mixed.l.memory();
+    assert!(stats.demoted > 0, "no tiles were eligible for f32 storage");
+    let ratio = before.lowrank_f64 as f64 / after.lowrank_f64 as f64;
+    assert!(
+        ratio >= 1.4,
+        "off-diagonal factor bytes shrank only {ratio:.2}x (demoted {} / kept {})",
+        stats.demoted,
+        stats.kept
+    );
+    // ...with an identical PCG iteration count against the same operator.
+    let n = a_op.n();
+    let mut rng = Rng::new(78);
+    let b: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+    let r64 = pcg(&TlrOp(&a_op), &|r| chol_solve(&f64_factor, r), &b, eps, 200);
+    let rmx = pcg(&TlrOp(&a_op), &|r| chol_solve(&mixed, r), &b, eps, 200);
+    assert!(r64.converged, "f64-preconditioned pcg stalled at {} iters", r64.iters);
+    assert!(rmx.converged, "mixed-preconditioned pcg stalled at {} iters", rmx.iters);
+    assert_eq!(
+        r64.iters, rmx.iters,
+        "f32 tile storage moved the preconditioned iteration count"
+    );
+}

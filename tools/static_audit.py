@@ -18,7 +18,12 @@ Checks, in increasing order of cleverness:
     tests/benches/examples must be defined (or re-exported) in the
     named module;
  7. known clippy classes: `.len() == 0` / `!= 0` / `> 0`, comparisons
-    with bool literals.
+    with bool literals;
+ 8. SIMD hygiene: every `#[target_feature]` fn is `unsafe`, sits inside
+    a `#[cfg(target_arch = ...)]`-gated module (or carries the cfg
+    itself), AVX-512 variants carry `#[cfg(feature = "avx512")]`, and
+    the fn is only referenced from the file that defines it — all
+    callers must go through the runtime dispatch table in simd.rs.
 
 Exit status 0 = clean, 1 = findings. Run from the repo root:
 
@@ -455,6 +460,58 @@ def check_imports(all_files, syms):
                          f"use h2opus_tlr::{leaf}: `{name}` not pub in `{mod}`")
 
 
+# ----------------------------------------------------------- simd hygiene
+
+
+TF_ATTR_RE = re.compile(r'#\[target_feature\(enable\s*=\s*"([^"]+)"\)\]')
+ARCH_MOD_RE = re.compile(r"#\[cfg\([^\]]*target_arch[^\]]*\)\]\s*(?:pub\s+)?mod\s+\w+\s*\{")
+
+
+def check_simd_hygiene(all_files):
+    """`#[target_feature]` fns must be unsafe, arch-gated, feature-gated
+    for AVX-512, and reached only via the dispatch table that guards
+    them with a runtime CPU check (i.e. never called from another
+    file)."""
+    tf_fns = {}  # fn name -> defining path
+    for path, stripped in all_files.items():
+        if "target_feature" not in stripped:
+            continue
+        arch_spans = []
+        for m in ARCH_MOD_RE.finditer(stripped):
+            open_idx = stripped.find("{", m.start())
+            _, close = body_span(stripped, open_idx)
+            arch_spans.append((m.start(), close))
+        for m in TF_ATTR_RE.finditer(stripped):
+            line = stripped.count("\n", 0, m.start()) + 1
+            fm = re.search(r"\bfn\s+(\w+)", stripped[m.end():])
+            if fm is None:
+                warn(path, line, "#[target_feature] not followed by a fn")
+                continue
+            name = fm.group(1)
+            head = stripped[m.end() : m.end() + fm.end()]
+            tf_fns.setdefault(name, path)
+            if not re.search(r"\bunsafe\s+fn\b", head):
+                warn(path, line, f"#[target_feature] fn `{name}` must be `unsafe`")
+            gated = any(s <= m.start() < e for s, e in arch_spans)
+            nearby = stripped[max(0, m.start() - 400) : m.start()]
+            if not gated and "target_arch" not in nearby:
+                warn(path, line,
+                     f"#[target_feature] fn `{name}` not cfg-gated to an arch")
+            if "avx512" in m.group(1) and 'feature = "avx512"' not in nearby:
+                warn(path, line,
+                     f"AVX-512 fn `{name}` missing #[cfg(feature = \"avx512\")]")
+    for path, stripped in all_files.items():
+        for name, home in tf_fns.items():
+            if path == home:
+                continue
+            cm = re.search(r"\b" + name + r"\s*\(", stripped)
+            if cm:
+                line = stripped.count("\n", 0, cm.start()) + 1
+                warn(path, line,
+                     f"`{name}` is #[target_feature]; call it only through the "
+                     f"dispatch table in {os.path.relpath(home, ROOT)}")
+
+
 # --------------------------------------------------------- clippy classes
 
 
@@ -508,6 +565,7 @@ def main():
     check_impls(stripped, traits)
     syms = collect_pub_symbols(src)
     check_imports(stripped, syms)
+    check_simd_hygiene(stripped)
 
     if findings:
         print(f"{len(findings)} finding(s):")
