@@ -13,6 +13,7 @@ use h2opus_tlr::config::Problem;
 use h2opus_tlr::experiments::{bench_time, instance, kernel_roofline, time_cholesky};
 use h2opus_tlr::factor::FactorOpts;
 use h2opus_tlr::linalg::rng::Rng;
+use h2opus_tlr::obs;
 use h2opus_tlr::runtime::json::{to_string, Json};
 use h2opus_tlr::serve::store::{load_chol, load_chol_mapped, save_chol};
 use h2opus_tlr::serve::{FactorStore, ServeOpts, ShardMap, ShardedService, SolveService};
@@ -175,6 +176,24 @@ fn main() {
     shard_obj.insert("sharded_rps".to_string(), Json::Num(sharded_rps));
     shard_obj.insert("speedup".to_string(), Json::Num(sharded_rps / single_rps));
 
+    // -- request latency distribution (obs histograms, fed by the two
+    //    service streams above): wait = submit -> panel pickup, exec =
+    //    blocked solve. NaN percentiles (empty histogram) become null.
+    let pct_or_null = |s: &obs::HistSnapshot, q: f64| {
+        let v = s.percentile(q);
+        if v.is_nan() { Json::Null } else { Json::Num(v) }
+    };
+    let mut latency = BTreeMap::new();
+    for (name, id) in
+        [("wait", obs::HistId::RequestWait), ("exec", obs::HistId::PanelExec)]
+    {
+        let s = obs::histogram(id).snapshot();
+        latency.insert(format!("{name}_count"), Json::Num(s.bucket_total() as f64));
+        for (tag, q) in [("p50", 0.5), ("p95", 0.95), ("p99", 0.99)] {
+            latency.insert(format!("{name}_{tag}_ns"), pct_or_null(&s, q));
+        }
+    }
+
     // -- microkernel dispatch (EXPERIMENTS.md §Kernel roofline): one
     //    tile-shaped GEMM through the scalar kernel, the dispatched SIMD
     //    kernel, and the mixed f32-B path, so the solve numbers above
@@ -211,6 +230,7 @@ fn main() {
     doc.insert("status".to_string(), Json::Str("measured".to_string()));
     doc.insert("load".to_string(), Json::Obj(load));
     doc.insert("sharded".to_string(), Json::Obj(shard_obj));
+    doc.insert("latency".to_string(), Json::Obj(latency));
     doc.insert(
         "problem".to_string(),
         Json::Str(format!("cov2d N={n} m={m} eps=1e-6 seed=37")),

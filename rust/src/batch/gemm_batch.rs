@@ -34,10 +34,12 @@
 use crate::linalg::gemm::{gemm_any, gemm_flops, GemmWorkspace, Src, Trans};
 use crate::linalg::matrix::Matrix;
 use crate::linalg::matrix32::MatrixF32;
+use crate::obs::{self, HistId};
 use crate::profile::{self, Phase, Timer};
 use crate::tlr::tile::Tile;
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Barrier, Mutex};
+use std::time::Instant;
 
 /// An operand of a [`GemmOp`]: a caller-provided read-only input (f64 or
 /// f32-stored), or the current value of an output slot (the result of
@@ -716,7 +718,9 @@ impl BatchedGemm for NativeBatch {
         }
         let nt = super::num_threads().min(plan.max_wave_width());
         if nt <= 1 || plan.ops.len() < 4 {
-            // Inline path: program order is a valid serial schedule.
+            // Inline path: program order is a valid serial schedule. The
+            // whole plan is a single "wave" as far as latency goes.
+            let t0 = Instant::now();
             let slots = SlotTable::new(&mut outs);
             let mut ws = self.take_ws();
             for op in &plan.ops {
@@ -726,6 +730,7 @@ impl BatchedGemm for NativeBatch {
             }
             drop(slots);
             self.put_ws(ws);
+            obs::record_elapsed(HistId::WaveExec, t0);
             return outs;
         }
         let counters: Vec<AtomicUsize> = plan.waves.iter().map(|_| AtomicUsize::new(0)).collect();
@@ -735,6 +740,7 @@ impl BatchedGemm for NativeBatch {
             for _ in 0..nt {
                 scope.spawn(|| {
                     let mut ws = self.take_ws();
+                    let mut t0 = Instant::now();
                     for (wi, wave) in plan.waves.iter().enumerate() {
                         loop {
                             let t = counters[wi].fetch_add(1, Ordering::Relaxed);
@@ -750,7 +756,13 @@ impl BatchedGemm for NativeBatch {
                                 self.run_op_timed(op, &slots, inputs, inputs32, diags, &mut ws)
                             };
                         }
-                        barrier.wait();
+                        // The leader's elapsed time spans the whole wave
+                        // (the barrier makes it wait for every straggler),
+                        // so exactly one sample lands per wave.
+                        if barrier.wait().is_leader() {
+                            obs::record_elapsed(HistId::WaveExec, t0);
+                        }
+                        t0 = Instant::now();
                     }
                     self.put_ws(ws);
                 });

@@ -20,7 +20,11 @@ use h2opus_tlr::solve::{chol_solve, pcg, tlr_matvec, tlr_trsv_lower, TlrOp};
 const HELP: &str = "\
 report — regenerate the paper's tables and figures (H2OPUS-TLR §6)
 
-USAGE: report <experiment> [--scale small|large]
+USAGE: report <experiment> [--scale small|large] [--metrics-dump <P>]
+
+OPTIONS:
+  --scale small|large   problem sizes (default small)
+  --metrics-dump <P>    write the versioned obs JSON snapshot to P on exit
 
 EXPERIMENTS:
   fig1        TLR structure + rank distribution (3D ball)
@@ -82,11 +86,20 @@ fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
     let mut exp = String::new();
     let mut scale = "small".to_string();
+    let mut metrics_dump: Option<String> = None;
     let mut i = 0;
     while i < args.len() {
         match args[i].as_str() {
             "--scale" => {
                 scale = args.get(i + 1).cloned().unwrap_or_default();
+                i += 2;
+            }
+            "--metrics-dump" => {
+                metrics_dump = args.get(i + 1).cloned();
+                if metrics_dump.is_none() {
+                    eprintln!("--metrics-dump needs a value\n\n{HELP}");
+                    std::process::exit(2);
+                }
                 i += 2;
             }
             "--help" | "-h" => {
@@ -153,6 +166,13 @@ fn main() {
             eprintln!("unknown experiment '{other}'\n\n{HELP}");
             std::process::exit(2);
         }
+    }
+    if let Some(path) = &metrics_dump {
+        if let Err(e) = std::fs::write(path, h2opus_tlr::obs::json_snapshot()) {
+            eprintln!("metrics-dump: failed to write {path}: {e}");
+            std::process::exit(1);
+        }
+        eprintln!("[metrics: wrote obs snapshot to {path}]");
     }
     eprintln!("[report done in {:.1}s]", t0.elapsed().as_secs_f64());
 }

@@ -19,6 +19,7 @@ use h2opus_tlr::batch::NativeBatch;
 use h2opus_tlr::config::{FactorKind, PrecisionPolicy, RunConfig};
 use h2opus_tlr::factor::{cholesky, ldlt};
 use h2opus_tlr::linalg::rng::Rng;
+use h2opus_tlr::obs;
 use h2opus_tlr::tlr::demote_offdiag;
 use h2opus_tlr::serve::{
     FactorStore, ServeError, ServeOpts, ShardedService, SolveService, StoredFactor,
@@ -42,6 +43,8 @@ SERVE OPTIONS:
     --no-mmap           load factors by owned decode instead of mmap
     --shards <N>        sharded mode: N workers + routing demo (default 1)
     --keys <K>          distinct factor keys in sharded mode (default 4)
+    --metrics-dump <P>  write the versioned obs JSON snapshot to P
+    --trace-dump <P>    write the flight-recorder events to P (JSON lines)
 
 All problem/factorization options of `h2opus-tlr` apply (e.g.
 --problem cov2d --n 1024 --m 128 --eps 1e-6 --bs 8 --ldlt). See
@@ -58,6 +61,8 @@ struct ServeArgs {
     no_mmap: bool,
     shards: usize,
     keys: usize,
+    metrics_dump: Option<String>,
+    trace_dump: Option<String>,
 }
 
 impl Default for ServeArgs {
@@ -72,6 +77,8 @@ impl Default for ServeArgs {
             no_mmap: false,
             shards: 1,
             keys: 4,
+            metrics_dump: None,
+            trace_dump: None,
         }
     }
 }
@@ -135,6 +142,14 @@ fn parse_args(args: &[String]) -> (ServeArgs, Vec<String>) {
             }
             "--keys" => {
                 sa.keys = take_val(args, i).parse().unwrap_or_else(|_| fail("bad --keys"));
+                i += 2;
+            }
+            "--metrics-dump" => {
+                sa.metrics_dump = Some(take_val(args, i).clone());
+                i += 2;
+            }
+            "--trace-dump" => {
+                sa.trace_dump = Some(take_val(args, i).clone());
                 i += 2;
             }
             _ => {
@@ -346,11 +361,53 @@ fn service_run(store_dir: &str, key: u64, n: usize, sa: &ServeArgs, seed: u64) {
     );
     let prof = h2opus_tlr::profile::serve_snapshot();
     println!(
-        "  profile    : {} serve requests, {} panels, efficiency {:.2} cols/solve",
+        "  profile    : {} serve requests, {} panels, efficiency {} cols/solve",
         prof.requests,
         prof.batches,
-        prof.batching_efficiency()
+        obs::fmt_ratio(prof.batching_efficiency())
     );
+    if let Some(kh) = service.key_hists(key) {
+        println!(
+            "  stats      : key {key:016x} wait {} exec {}",
+            pct_line(&kh.wait),
+            pct_line(&kh.exec)
+        );
+    }
+}
+
+/// `p50/p95/p99` of a nanosecond histogram, rendered in ms.
+fn pct_line(s: &obs::HistSnapshot) -> String {
+    let ms = |q: f64| {
+        let v = s.percentile(q);
+        if v.is_nan() {
+            "-".to_string()
+        } else {
+            format!("{:.3}", v / 1e6)
+        }
+    };
+    format!("p50 {} / p95 {} / p99 {} ms", ms(0.5), ms(0.95), ms(0.99))
+}
+
+/// Write the obs exports requested on the command line. Called after
+/// each stage so the dump reflects everything recorded so far; the last
+/// write (end of `main`) is the complete picture.
+fn dump_obs(sa: &ServeArgs) {
+    if let Some(path) = &sa.metrics_dump {
+        let doc = obs::json_snapshot();
+        if let Err(e) = std::fs::write(path, doc) {
+            eprintln!("metrics-dump: failed to write {path}: {e}");
+            std::process::exit(1);
+        }
+        println!("metrics    : wrote obs snapshot to {path}");
+    }
+    if let Some(path) = &sa.trace_dump {
+        let lines = obs::recorder().dump_json_lines();
+        if let Err(e) = std::fs::write(path, lines) {
+            eprintln!("trace-dump: failed to write {path}: {e}");
+            std::process::exit(1);
+        }
+        println!("trace      : wrote flight-recorder events to {path}");
+    }
 }
 
 /// Sharded routing demo: `--shards N` workers over one store, a
@@ -441,6 +498,12 @@ fn sharded_run(store_dir: &str, key: u64, factor: StoredFactor, n: usize, sa: &S
         prof.total_routed(),
         prof.imbalance()
     );
+    for k in service.observed_keys() {
+        if let Some(kh) = service.key_hists(k) {
+            let (w, e) = (pct_line(&kh.wait), pct_line(&kh.exec));
+            println!("  stats     : key {k:016x} wait {w} exec {e}");
+        }
+    }
     // Live rebalance: grow the fleet by one worker, then shrink back.
     // Only the remapped shards move; the departing worker drains first.
     let grown = format!("w{}", sa.shards);
@@ -490,6 +553,7 @@ fn main() {
     let factor = obtain_factor(&cfg, &store, key, !sa.no_mmap);
     let n = factor.n();
     width_sweep(&factor, &sa.widths, cfg.seed);
+    dump_obs(&sa);
     if sa.shards > 1 {
         // Routing demo across workers; the factor solves via its store
         // key on the owning shard (aliases register in memory).
@@ -498,5 +562,6 @@ fn main() {
         drop(factor); // the service re-loads from disk — persistence, proven
         service_run(&sa.store, key, n, &sa, cfg.seed);
     }
+    dump_obs(&sa);
     println!("serve done");
 }

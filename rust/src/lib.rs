@@ -67,6 +67,7 @@ pub mod config;
 pub mod experiments;
 pub mod factor;
 pub mod linalg;
+pub mod obs;
 pub mod profile;
 pub mod runtime;
 pub mod serve;

@@ -1,0 +1,359 @@
+//! Machine-readable exporters over every counter and histogram in the
+//! process: a Prometheus-style text exposition ([`prometheus`]) and a
+//! versioned JSON snapshot ([`json_snapshot`]).
+//!
+//! Metric names are stable API — see the metric-name contract in
+//! `serve/mod.rs`.  Both exporters render from the same [`Snapshot`],
+//! so a scrape and a dump taken at the same time agree field-for-field.
+
+use std::collections::BTreeMap;
+
+use crate::obs::hist::{self, HistSnapshot, N_BUCKETS, N_HISTS};
+use crate::profile::{self, BatchExecReport, KernelReport, Report, ServeReport, ShardReport};
+use crate::runtime::json::Json;
+
+/// Schema version of the JSON snapshot. Bump when fields change shape;
+/// `tools/check_metrics.py` validates against this.
+pub const SNAPSHOT_VERSION: u64 = 1;
+
+/// One coherent copy of every process-wide counter and histogram.
+#[derive(Clone, Copy, Default)]
+pub struct Snapshot {
+    pub phases: Report,
+    pub kernels: KernelReport,
+    pub batch: BatchExecReport,
+    pub serve: ServeReport,
+    pub shards: ShardReport,
+    /// Shard-error counts in `ShardErrorClass` order.
+    pub shard_errors: [u64; crate::obs::N_SHARD_ERROR_CLASSES],
+    /// Global histograms in `HistId` order (names in `HIST_NAMES`).
+    pub hists: [HistSnapshot; N_HISTS],
+}
+
+/// Snapshot everything at once.
+pub fn snapshot() -> Snapshot {
+    Snapshot {
+        phases: profile::snapshot(),
+        kernels: profile::kernel_snapshot(),
+        batch: profile::batch_exec_snapshot(),
+        serve: profile::serve_snapshot(),
+        shards: profile::shard_snapshot(),
+        shard_errors: crate::obs::shard_error_counts(),
+        hists: hist::snapshot_all(),
+    }
+}
+
+impl Snapshot {
+    /// Per-field saturating delta vs an earlier snapshot.
+    pub fn since(&self, earlier: &Snapshot) -> Snapshot {
+        let mut hists = [HistSnapshot::default(); N_HISTS];
+        for (o, (now, was)) in hists
+            .iter_mut()
+            .zip(self.hists.iter().zip(earlier.hists.iter()))
+        {
+            *o = now.since(was);
+        }
+        let mut shard_errors = [0u64; crate::obs::N_SHARD_ERROR_CLASSES];
+        for (o, (now, was)) in shard_errors
+            .iter_mut()
+            .zip(self.shard_errors.iter().zip(earlier.shard_errors.iter()))
+        {
+            *o = now.saturating_sub(*was);
+        }
+        Snapshot {
+            phases: self.phases.since(&earlier.phases),
+            kernels: self.kernels.since(&earlier.kernels),
+            batch: self.batch.since(&earlier.batch),
+            serve: self.serve.since(&earlier.serve),
+            shards: self.shards.since(&earlier.shards),
+            shard_errors,
+            hists,
+        }
+    }
+}
+
+/// Render a ratio that may be `NaN` ("absent"): `-` when NaN, two
+/// decimals otherwise.  Used by the `serve`/`report` bins' tables.
+pub fn fmt_ratio(x: f64) -> String {
+    if x.is_nan() {
+        "-".to_string()
+    } else {
+        format!("{x:.2}")
+    }
+}
+
+fn json_num_or_null(x: f64) -> Json {
+    if x.is_nan() {
+        Json::Null
+    } else {
+        Json::Num(x)
+    }
+}
+
+fn hist_json(h: &HistSnapshot) -> Json {
+    let mut o = BTreeMap::new();
+    o.insert("count".to_string(), Json::Num(h.bucket_total() as f64));
+    o.insert("sum".to_string(), Json::Num(h.sum as f64));
+    o.insert("mean".to_string(), json_num_or_null(h.mean()));
+    o.insert("p50".to_string(), json_num_or_null(h.percentile(0.50)));
+    o.insert("p95".to_string(), json_num_or_null(h.percentile(0.95)));
+    o.insert("p99".to_string(), json_num_or_null(h.percentile(0.99)));
+    // Sparse bucket list: [lower_bound, count] for nonempty buckets.
+    let mut buckets = Vec::new();
+    for (i, &c) in h.buckets.iter().enumerate() {
+        if c > 0 {
+            buckets.push(Json::Arr(vec![
+                Json::Num(hist::bucket_lower(i) as f64),
+                Json::Num(c as f64),
+            ]));
+        }
+    }
+    o.insert("buckets".to_string(), Json::Arr(buckets));
+    Json::Obj(o)
+}
+
+/// Build the versioned JSON document for a snapshot.
+pub fn json_from(s: &Snapshot) -> Json {
+    let mut doc = BTreeMap::new();
+    doc.insert("version".to_string(), Json::Num(SNAPSHOT_VERSION as f64));
+    doc.insert("schema".to_string(), Json::Str("h2opus-obs".to_string()));
+
+    let mut phases = BTreeMap::new();
+    for i in 0..profile::N_PHASES {
+        let mut p = BTreeMap::new();
+        p.insert("nanos".to_string(), Json::Num(s.phases.nanos[i] as f64));
+        p.insert("flops".to_string(), Json::Num(s.phases.flops[i] as f64));
+        phases.insert(profile::PHASE_NAMES[i].to_string(), Json::Obj(p));
+    }
+    doc.insert("phases".to_string(), Json::Obj(phases));
+
+    let mut kernels = BTreeMap::new();
+    for i in 0..profile::N_KERNELS {
+        let mut k = BTreeMap::new();
+        k.insert("f64_calls".to_string(), Json::Num(s.kernels.f64_calls[i] as f64));
+        k.insert("mixed_calls".to_string(), Json::Num(s.kernels.mixed_calls[i] as f64));
+        kernels.insert(profile::KERNEL_NAMES[i].to_string(), Json::Obj(k));
+    }
+    let mut kern = BTreeMap::new();
+    kern.insert("calls".to_string(), Json::Obj(kernels));
+    kern.insert(
+        "f32_bytes_saved".to_string(),
+        Json::Num(s.kernels.f32_bytes_saved as f64),
+    );
+    doc.insert("kernels".to_string(), Json::Obj(kern));
+
+    let mut batch = BTreeMap::new();
+    batch.insert("waves".to_string(), Json::Num(s.batch.waves as f64));
+    batch.insert("ops".to_string(), Json::Num(s.batch.ops as f64));
+    batch.insert("flops".to_string(), Json::Num(s.batch.flops as f64));
+    batch.insert(
+        "mean_wave_width".to_string(),
+        json_num_or_null(s.batch.mean_wave_width()),
+    );
+    doc.insert("batch".to_string(), Json::Obj(batch));
+
+    let mut serve = BTreeMap::new();
+    serve.insert("requests".to_string(), Json::Num(s.serve.requests as f64));
+    serve.insert("batches".to_string(), Json::Num(s.serve.batches as f64));
+    serve.insert("nanos".to_string(), Json::Num(s.serve.nanos as f64));
+    serve.insert("rejected".to_string(), Json::Num(s.serve.rejected as f64));
+    serve.insert(
+        "batching_efficiency".to_string(),
+        json_num_or_null(s.serve.batching_efficiency()),
+    );
+    doc.insert("serve".to_string(), Json::Obj(serve));
+
+    let mut shards = BTreeMap::new();
+    let routed: Vec<Json> = s.shards.routed.iter().map(|&c| Json::Num(c as f64)).collect();
+    shards.insert("routed".to_string(), Json::Arr(routed));
+    shards.insert("rebalances".to_string(), Json::Num(s.shards.rebalances as f64));
+    shards.insert("moved_shards".to_string(), Json::Num(s.shards.moved_shards as f64));
+    shards.insert("imbalance".to_string(), json_num_or_null(s.shards.imbalance()));
+    let mut errs = BTreeMap::new();
+    for (i, &c) in s.shard_errors.iter().enumerate() {
+        errs.insert(crate::obs::SHARD_ERROR_NAMES[i].to_string(), Json::Num(c as f64));
+    }
+    shards.insert("errors".to_string(), Json::Obj(errs));
+    doc.insert("shards".to_string(), Json::Obj(shards));
+
+    let mut hists = BTreeMap::new();
+    for (i, h) in s.hists.iter().enumerate() {
+        hists.insert(hist::HIST_NAMES[i].to_string(), hist_json(h));
+    }
+    doc.insert("histograms".to_string(), Json::Obj(hists));
+
+    Json::Obj(doc)
+}
+
+/// Versioned JSON snapshot of the current process counters, as a
+/// string ready to write to disk (`serve --metrics-dump PATH`).
+pub fn json_snapshot() -> String {
+    crate::runtime::json::to_string(&json_from(&snapshot()))
+}
+
+fn prom_line(out: &mut String, name: &str, labels: &[(&str, &str)], value: f64) {
+    out.push_str("h2opus_");
+    out.push_str(name);
+    if !labels.is_empty() {
+        out.push('{');
+        for (i, (k, v)) in labels.iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            out.push_str(k);
+            out.push_str("=\"");
+            out.push_str(v);
+            out.push('"');
+        }
+        out.push('}');
+    }
+    out.push(' ');
+    if value.fract() == 0.0 && value.abs() < 9e15 {
+        out.push_str(&format!("{}", value as i64));
+    } else {
+        out.push_str(&format!("{value}"));
+    }
+    out.push('\n');
+}
+
+fn prom_type(out: &mut String, name: &str, ty: &str) {
+    out.push_str("# TYPE h2opus_");
+    out.push_str(name);
+    out.push(' ');
+    out.push_str(ty);
+    out.push('\n');
+}
+
+fn prom_hist(out: &mut String, name: &str, h: &HistSnapshot) {
+    prom_type(out, name, "histogram");
+    let mut cum = 0u64;
+    let mut last_nonzero = 0;
+    for (i, &c) in h.buckets.iter().enumerate() {
+        if c > 0 {
+            last_nonzero = i;
+        }
+    }
+    let bucket_name = format!("{name}_bucket");
+    for (i, &c) in h.buckets.iter().enumerate().take(last_nonzero + 1) {
+        cum += c;
+        // `le` is the exclusive upper edge of bucket i.
+        let le = if i + 1 < N_BUCKETS {
+            format!("{}", hist::bucket_lower(i + 1))
+        } else {
+            "+Inf".to_string()
+        };
+        prom_line(out, &bucket_name, &[("le", &le)], cum as f64);
+    }
+    if last_nonzero + 1 < N_BUCKETS {
+        prom_line(out, &bucket_name, &[("le", "+Inf")], h.bucket_total() as f64);
+    }
+    prom_line(out, &format!("{name}_sum"), &[], h.sum as f64);
+    prom_line(out, &format!("{name}_count"), &[], h.bucket_total() as f64);
+}
+
+/// Render a snapshot in the Prometheus text exposition format. Every
+/// metric is prefixed `h2opus_`; names are stable API (contract in
+/// `serve/mod.rs`).
+pub fn prometheus_from(s: &Snapshot) -> String {
+    let mut out = String::new();
+
+    prom_type(&mut out, "phase_nanos_total", "counter");
+    for i in 0..profile::N_PHASES {
+        let labels = [("phase", profile::PHASE_NAMES[i])];
+        prom_line(&mut out, "phase_nanos_total", &labels, s.phases.nanos[i] as f64);
+    }
+    prom_type(&mut out, "phase_flops_total", "counter");
+    for i in 0..profile::N_PHASES {
+        let labels = [("phase", profile::PHASE_NAMES[i])];
+        prom_line(&mut out, "phase_flops_total", &labels, s.phases.flops[i] as f64);
+    }
+
+    prom_type(&mut out, "kernel_calls_total", "counter");
+    for i in 0..profile::N_KERNELS {
+        let k = profile::KERNEL_NAMES[i];
+        let f64_labels = [("kernel", k), ("precision", "f64")];
+        prom_line(&mut out, "kernel_calls_total", &f64_labels, s.kernels.f64_calls[i] as f64);
+        let mixed_labels = [("kernel", k), ("precision", "mixed")];
+        prom_line(&mut out, "kernel_calls_total", &mixed_labels, s.kernels.mixed_calls[i] as f64);
+    }
+    prom_type(&mut out, "f32_bytes_saved_total", "counter");
+    prom_line(&mut out, "f32_bytes_saved_total", &[], s.kernels.f32_bytes_saved as f64);
+
+    prom_type(&mut out, "batch_waves_total", "counter");
+    prom_line(&mut out, "batch_waves_total", &[], s.batch.waves as f64);
+    prom_type(&mut out, "batch_ops_total", "counter");
+    prom_line(&mut out, "batch_ops_total", &[], s.batch.ops as f64);
+    prom_type(&mut out, "batch_flops_total", "counter");
+    prom_line(&mut out, "batch_flops_total", &[], s.batch.flops as f64);
+
+    prom_type(&mut out, "serve_requests_total", "counter");
+    prom_line(&mut out, "serve_requests_total", &[], s.serve.requests as f64);
+    prom_type(&mut out, "serve_batches_total", "counter");
+    prom_line(&mut out, "serve_batches_total", &[], s.serve.batches as f64);
+    prom_type(&mut out, "serve_nanos_total", "counter");
+    prom_line(&mut out, "serve_nanos_total", &[], s.serve.nanos as f64);
+    prom_type(&mut out, "serve_rejected_total", "counter");
+    prom_line(&mut out, "serve_rejected_total", &[], s.serve.rejected as f64);
+
+    prom_type(&mut out, "shard_routed_total", "counter");
+    for (i, &c) in s.shards.routed.iter().enumerate() {
+        if c > 0 {
+            let slot = format!("{i}");
+            prom_line(&mut out, "shard_routed_total", &[("slot", &slot)], c as f64);
+        }
+    }
+    prom_type(&mut out, "shard_rebalances_total", "counter");
+    prom_line(&mut out, "shard_rebalances_total", &[], s.shards.rebalances as f64);
+    prom_type(&mut out, "shard_moved_total", "counter");
+    prom_line(&mut out, "shard_moved_total", &[], s.shards.moved_shards as f64);
+    prom_type(&mut out, "shard_errors_total", "counter");
+    for (i, &c) in s.shard_errors.iter().enumerate() {
+        let labels = [("class", crate::obs::SHARD_ERROR_NAMES[i])];
+        prom_line(&mut out, "shard_errors_total", &labels, c as f64);
+    }
+
+    for (i, h) in s.hists.iter().enumerate() {
+        prom_hist(&mut out, hist::HIST_NAMES[i], h);
+    }
+    out
+}
+
+/// Prometheus text exposition of the current process counters.
+pub fn prometheus() -> String {
+    prometheus_from(&snapshot())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fmt_ratio_renders_nan_as_dash() {
+        assert_eq!(fmt_ratio(f64::NAN), "-");
+        assert_eq!(fmt_ratio(3.25), "3.25");
+    }
+
+    #[test]
+    fn json_snapshot_is_parseable_and_versioned() {
+        let text = json_snapshot();
+        let doc = crate::runtime::json::parse(&text).expect("valid json");
+        match &doc {
+            Json::Obj(o) => {
+                assert_eq!(o.get("version"), Some(&Json::Num(1.0)));
+                for key in ["phases", "kernels", "batch", "serve", "shards", "histograms"] {
+                    assert!(o.contains_key(key), "missing {key}");
+                }
+            }
+            _ => panic!("snapshot is not an object"),
+        }
+    }
+
+    #[test]
+    fn prometheus_emits_histograms_with_inf_bucket() {
+        crate::obs::hist::histogram(crate::obs::hist::HistId::RequestWait).record(1234);
+        let text = prometheus();
+        assert!(text.contains("# TYPE h2opus_request_wait_ns histogram"));
+        assert!(text.contains("h2opus_request_wait_ns_bucket{le=\"+Inf\"}"));
+        assert!(text.contains("h2opus_request_wait_ns_count"));
+    }
+}

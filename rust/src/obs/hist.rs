@@ -1,0 +1,388 @@
+//! Lock-free log-bucketed latency histograms.
+//!
+//! A [`Histogram`] is a fixed array of 64 relaxed atomic counters whose
+//! bucket boundaries grow by a factor of √2 per bucket (two buckets per
+//! octave).  Recording is one atomic increment plus two atomic adds and
+//! never takes a lock, so histograms can sit directly on the serve hot
+//! path.  The √2 ratio bounds the relative error of any percentile
+//! estimate by one bucket width: a reported quantile is within a factor
+//! of √2 ≈ 1.414 of the exact sample quantile (see EXPERIMENTS.md
+//! §Observability for the derivation).
+//!
+//! Bucket layout (values are u64 nanoseconds or iteration counts):
+//!
+//! * bucket 0 holds the value 0, bucket 1 holds the value 1;
+//! * bucket `2k`   covers `[2^k, 2^k·√2)`  for `k ≥ 1`;
+//! * bucket `2k+1` covers `[2^k·√2, 2^(k+1))`;
+//! * bucket 63 absorbs everything from `2^31·√2` ns (≈ 3.04 s) up.
+//!
+//! √2 is approximated by the integer ratio 181/128 (≈ 1.41406, off by
+//! 2.5e-4), so indexing is a `leading_zeros`, one shift-multiply, and a
+//! compare — no floating point on the record path.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Number of buckets in every histogram.
+pub const N_BUCKETS: usize = 64;
+
+/// Index of the bucket a value lands in. Monotone in `v`.
+#[inline]
+pub fn bucket_index(v: u64) -> usize {
+    if v < 2 {
+        return v as usize; // 0 -> bucket 0, 1 -> bucket 1
+    }
+    let k = 63 - v.leading_zeros() as usize; // floor(log2 v) >= 1
+    // 2^k * sqrt(2), rounded up so that v == 2^k stays in bucket 2k.
+    let half = ((1u64 << k).wrapping_mul(181).wrapping_add(127)) >> 7;
+    let idx = 2 * k + usize::from(v >= half);
+    idx.min(N_BUCKETS - 1)
+}
+
+/// Inclusive lower bound of bucket `i` (the smallest value that maps to
+/// it). `bucket_lower(i+1)` is the exclusive upper bound of bucket `i`.
+pub fn bucket_lower(i: usize) -> u64 {
+    match i {
+        0 => 0,
+        1 => 1,
+        _ if i % 2 == 0 => 1u64 << (i / 2),
+        _ => ((1u64 << (i / 2)).wrapping_mul(181).wrapping_add(127)) >> 7,
+    }
+}
+
+/// A lock-free histogram with √2 log-spaced buckets.
+///
+/// All operations use relaxed atomics: totals are exact once writers
+/// quiesce, and concurrent snapshots are per-field monotone (each
+/// counter only grows), which is all `since`/`percentile` need.
+pub struct Histogram {
+    buckets: [AtomicU64; N_BUCKETS],
+    count: AtomicU64,
+    sum: AtomicU64,
+}
+
+impl Histogram {
+    /// A new empty histogram; `const` so it can back a `static`.
+    pub const fn new() -> Self {
+        Histogram {
+            buckets: [const { AtomicU64::new(0) }; N_BUCKETS],
+            count: AtomicU64::new(0),
+            sum: AtomicU64::new(0),
+        }
+    }
+
+    /// Record one sample (nanoseconds, iterations, bytes, ...).
+    #[inline]
+    pub fn record(&self, v: u64) {
+        self.buckets[bucket_index(v)].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum.fetch_add(v, Ordering::Relaxed);
+    }
+
+    /// Copy the current counters out. Safe to call while writers are
+    /// active; each field is individually monotone.
+    pub fn snapshot(&self) -> HistSnapshot {
+        let mut buckets = [0u64; N_BUCKETS];
+        for (out, b) in buckets.iter_mut().zip(self.buckets.iter()) {
+            *out = b.load(Ordering::Relaxed);
+        }
+        HistSnapshot {
+            buckets,
+            count: self.count.load(Ordering::Relaxed),
+            sum: self.sum.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Zero every counter (tests / explicit `obs` resets only; not for
+    /// use while the histogram is being written).
+    pub fn reset(&self) {
+        for b in &self.buckets {
+            b.store(0, Ordering::Relaxed);
+        }
+        self.count.store(0, Ordering::Relaxed);
+        self.sum.store(0, Ordering::Relaxed);
+    }
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Histogram::new()
+    }
+}
+
+/// A plain (non-atomic) copy of a histogram's counters.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct HistSnapshot {
+    pub buckets: [u64; N_BUCKETS],
+    pub count: u64,
+    pub sum: u64,
+}
+
+impl Default for HistSnapshot {
+    fn default() -> Self {
+        HistSnapshot { buckets: [0; N_BUCKETS], count: 0, sum: 0 }
+    }
+}
+
+impl HistSnapshot {
+    /// Total samples according to the bucket array itself.  Under
+    /// concurrent recording this is the internally consistent total to
+    /// rank percentiles against (the `count` field may be mid-update).
+    pub fn bucket_total(&self) -> u64 {
+        self.buckets.iter().sum()
+    }
+
+    /// Pointwise sum of two snapshots: identical to having recorded
+    /// both underlying streams into one histogram.
+    pub fn merge(&self, other: &HistSnapshot) -> HistSnapshot {
+        let mut out = *self;
+        for (o, b) in out.buckets.iter_mut().zip(other.buckets.iter()) {
+            *o += b;
+        }
+        out.count += other.count;
+        out.sum += other.sum;
+        out
+    }
+
+    /// Pointwise delta since an earlier snapshot of the same histogram.
+    /// Saturating: a `reset()` between the two snapshots yields zeros,
+    /// never an underflow panic.
+    pub fn since(&self, earlier: &HistSnapshot) -> HistSnapshot {
+        let mut out = HistSnapshot::default();
+        for (o, (now, was)) in out
+            .buckets
+            .iter_mut()
+            .zip(self.buckets.iter().zip(earlier.buckets.iter()))
+        {
+            *o = now.saturating_sub(*was);
+        }
+        out.count = self.count.saturating_sub(earlier.count);
+        out.sum = self.sum.saturating_sub(earlier.sum);
+        out
+    }
+
+    /// Quantile estimate for `q` in `[0, 1]`: the midpoint of the
+    /// bucket containing the `ceil(q·total)`-th sample.  `NaN` when the
+    /// histogram is empty.  Error is bounded by one bucket: the true
+    /// sample quantile lies in the same bucket, so the estimate is
+    /// within a factor of √2 of it.
+    pub fn percentile(&self, q: f64) -> f64 {
+        let total = self.bucket_total();
+        if total == 0 {
+            return f64::NAN;
+        }
+        let q = q.clamp(0.0, 1.0);
+        // rank in 1..=total of the sample we want
+        let rank = ((q * total as f64).ceil() as u64).clamp(1, total);
+        let mut seen = 0u64;
+        for (i, &c) in self.buckets.iter().enumerate() {
+            seen += c;
+            if seen >= rank {
+                let lo = bucket_lower(i);
+                let hi = if i + 1 < N_BUCKETS {
+                    bucket_lower(i + 1)
+                } else {
+                    // open-ended overflow bucket: report 1.5x its base
+                    lo.saturating_mul(3) / 2
+                };
+                return (lo as f64 + hi as f64) / 2.0;
+            }
+        }
+        f64::NAN // unreachable: seen == total >= rank by the loop end
+    }
+
+    /// Mean of all recorded samples; `NaN` when empty.
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            f64::NAN
+        } else {
+            self.sum as f64 / self.count as f64
+        }
+    }
+}
+
+/// Which global histogram to record into; see [`histogram`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum HistId {
+    /// Request wait: submit → start of panel execution (ns).
+    RequestWait = 0,
+    /// Panel execution: batched solve wall time per request (ns).
+    PanelExec = 1,
+    /// `FactorStore::load` (owned, fully deserialized) wall time (ns).
+    FactorLoadOwned = 2,
+    /// `FactorStore::load_mapped` (zero-copy mmap) wall time (ns).
+    FactorLoadMapped = 3,
+    /// PCG iterations-to-converge per converged column (count).
+    PcgIters = 4,
+    /// Per-wave wall time inside `NativeBatch::execute` (ns).
+    WaveExec = 5,
+}
+
+/// Number of global histograms.
+pub const N_HISTS: usize = 6;
+
+/// Stable exporter names, indexed by `HistId as usize`.  These are
+/// public API: see the metric-name contract in `serve/mod.rs`.
+pub const HIST_NAMES: [&str; N_HISTS] = [
+    "request_wait_ns",
+    "panel_exec_ns",
+    "factor_load_owned_ns",
+    "factor_load_mapped_ns",
+    "pcg_iters",
+    "wave_exec_ns",
+];
+
+static HISTS: [Histogram; N_HISTS] = [const { Histogram::new() }; N_HISTS];
+
+/// The process-wide histogram for `id`.
+pub fn histogram(id: HistId) -> &'static Histogram {
+    &HISTS[id as usize]
+}
+
+/// Snapshot all global histograms at once, in `HistId` order.
+pub fn snapshot_all() -> [HistSnapshot; N_HISTS] {
+    let mut out = [HistSnapshot::default(); N_HISTS];
+    for (o, h) in out.iter_mut().zip(HISTS.iter()) {
+        *o = h.snapshot();
+    }
+    out
+}
+
+/// Zero all global histograms (tests and bin start-of-run resets).
+pub fn reset_all() {
+    for h in &HISTS {
+        h.reset();
+    }
+}
+
+/// Per-key wait/exec histogram pair kept by the serve layer for each
+/// factor key that has executed at least one panel.
+#[derive(Default)]
+pub struct KeyHists {
+    /// Submit → execution-start wait per request for this key.
+    pub wait: Histogram,
+    /// Batched-solve wall time attributed to each request of this key.
+    pub exec: Histogram,
+}
+
+/// Plain snapshot of a [`KeyHists`]; mergeable across shards.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct KeyHistSnapshot {
+    pub wait: HistSnapshot,
+    pub exec: HistSnapshot,
+}
+
+impl KeyHistSnapshot {
+    pub fn merge(&self, other: &KeyHistSnapshot) -> KeyHistSnapshot {
+        KeyHistSnapshot {
+            wait: self.wait.merge(&other.wait),
+            exec: self.exec.merge(&other.exec),
+        }
+    }
+}
+
+impl KeyHists {
+    pub fn snapshot(&self) -> KeyHistSnapshot {
+        KeyHistSnapshot { wait: self.wait.snapshot(), exec: self.exec.snapshot() }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bucket_index_matches_bounds() {
+        // Every bucket's lower bound must map into that bucket, and the
+        // value just below it into the previous bucket.
+        for i in 1..N_BUCKETS {
+            let lo = bucket_lower(i);
+            assert_eq!(bucket_index(lo), i, "lower bound of bucket {i}");
+            if lo > 0 && i >= 2 {
+                assert_eq!(bucket_index(lo - 1), i - 1, "below bucket {i}");
+            }
+        }
+        assert_eq!(bucket_index(0), 0);
+        assert_eq!(bucket_index(u64::MAX), N_BUCKETS - 1);
+    }
+
+    #[test]
+    fn bounds_strictly_increase() {
+        for i in 1..N_BUCKETS {
+            assert!(
+                bucket_lower(i) > bucket_lower(i - 1),
+                "bounds not strictly increasing at {i}"
+            );
+        }
+    }
+
+    #[test]
+    fn percentile_of_empty_is_nan() {
+        let h = Histogram::new();
+        assert!(h.snapshot().percentile(0.5).is_nan());
+        assert!(h.snapshot().mean().is_nan());
+    }
+
+    #[test]
+    fn percentile_within_one_bucket_of_exact() {
+        // Deterministic but irregular stream.
+        let h = Histogram::new();
+        let mut vals: Vec<u64> = Vec::new();
+        let mut x = 88172645463325252u64;
+        for _ in 0..4000 {
+            // xorshift64
+            x ^= x << 13;
+            x ^= x >> 7;
+            x ^= x << 17;
+            let v = x % 2_000_000; // 0 .. 2ms in ns
+            vals.push(v);
+            h.record(v);
+        }
+        vals.sort_unstable();
+        let snap = h.snapshot();
+        for q in [0.1, 0.5, 0.9, 0.95, 0.99] {
+            let rank = ((q * vals.len() as f64).ceil() as usize).clamp(1, vals.len());
+            let exact = vals[rank - 1];
+            let est = snap.percentile(q);
+            // The estimate must land in the same bucket as the exact
+            // quantile: within one bucket's relative error.
+            assert_eq!(
+                bucket_index(est as u64),
+                bucket_index(exact),
+                "q={q}: est {est} vs exact {exact}"
+            );
+        }
+    }
+
+    #[test]
+    fn merge_equals_recording_both_streams() {
+        let a = Histogram::new();
+        let b = Histogram::new();
+        let both = Histogram::new();
+        for i in 0..500u64 {
+            let v = i * i % 10_000;
+            a.record(v);
+            both.record(v);
+        }
+        for i in 0..300u64 {
+            let v = i * 7919 % 100_000;
+            b.record(v);
+            both.record(v);
+        }
+        let merged = a.snapshot().merge(&b.snapshot());
+        assert_eq!(merged, both.snapshot());
+    }
+
+    #[test]
+    fn since_saturates_across_reset() {
+        let h = Histogram::new();
+        h.record(100);
+        h.record(200);
+        let earlier = h.snapshot();
+        h.reset(); // a reset between snapshots must not underflow
+        h.record(5);
+        let later = h.snapshot();
+        let d = later.since(&earlier);
+        assert_eq!(d.count, 0); // 1 - 2 saturates
+        assert!(d.bucket_total() <= 1);
+    }
+}

@@ -1,0 +1,86 @@
+//! Structured observability: latency histograms, a request-lifecycle
+//! flight recorder, and machine-readable exporters.
+//!
+//! This module is the one-stop surface the serve fleet scrapes:
+//!
+//! * [`hist`] — lock-free √2 log-bucketed [`Histogram`]s with
+//!   `record`/`percentile`/`merge`/`since`, plus the process-wide set
+//!   ([`HistId`]): request wait, panel execution, factor load
+//!   (owned vs mapped), PCG iterations-to-converge, per-wave batch
+//!   execution.
+//! * [`trace`] — the bounded lock-free [`FlightRecorder`] ring of
+//!   [`Event`]s (`Submitted` → `Enqueued` → `Coalesced` → `Executed` →
+//!   `Responded`, plus rejections, rebalances, evictions), dumpable as
+//!   JSON lines for post-hoc timeline reconstruction.
+//! * [`export`] — [`prometheus()`] text exposition and the versioned
+//!   [`json_snapshot()`], both covering the legacy [`profile`]
+//!   counters *and* the histograms.
+//!
+//! [`profile`] (phase timers, kernel-dispatch, batch-executor, serve
+//! and shard counters) is re-exported here so callers can treat `obs`
+//! as the single instrumentation namespace; metric names emitted by
+//! the exporters are stable API (contract in `serve/mod.rs`).
+
+pub mod export;
+pub mod hist;
+pub mod trace;
+
+pub use crate::profile;
+pub use crate::profile::{BatchExecReport, KernelReport, Report, ServeReport, ShardReport};
+pub use export::{
+    fmt_ratio, json_from, json_snapshot, prometheus, prometheus_from, snapshot, Snapshot,
+    SNAPSHOT_VERSION,
+};
+pub use hist::{
+    bucket_index, bucket_lower, histogram, reset_all as reset_histograms, snapshot_all, HistId,
+    HistSnapshot, Histogram, KeyHistSnapshot, KeyHists, HIST_NAMES, N_BUCKETS, N_HISTS,
+};
+pub use trace::{
+    next_panel_id, next_request_id, record_event, recorder, Event, EventKind, FlightRecorder,
+    RejectReason, RING_CAPACITY,
+};
+
+/// Record a duration histogram sample from a start instant.
+#[inline]
+pub fn record_elapsed(id: HistId, start: std::time::Instant) {
+    histogram(id).record(start.elapsed().as_nanos() as u64);
+}
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Classes of `crate::serve::shard::ShardError` for the fleet-mutation
+/// error counters. The mapping in `serve/shard.rs::shard_error_class`
+/// is exhaustive by construction (checked by `tools/static_audit.py`),
+/// so no shard error path is observability-silent.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ShardErrorClass {
+    Parse = 0,
+    UnknownWorker = 1,
+    DuplicateWorker = 2,
+    LastWorker = 3,
+    Store = 4,
+}
+
+/// Number of shard-error classes.
+pub const N_SHARD_ERROR_CLASSES: usize = 5;
+
+/// Stable exporter names, indexed by `ShardErrorClass as usize`.
+pub const SHARD_ERROR_NAMES: [&str; N_SHARD_ERROR_CLASSES] =
+    ["parse", "unknown_worker", "duplicate_worker", "last_worker", "store"];
+
+static SHARD_ERRORS: [AtomicU64; N_SHARD_ERROR_CLASSES] =
+    [const { AtomicU64::new(0) }; N_SHARD_ERROR_CLASSES];
+
+/// Count one shard-map/fleet-mutation error of the given class.
+pub fn note_shard_error(class: ShardErrorClass) {
+    SHARD_ERRORS[class as usize].fetch_add(1, Ordering::Relaxed);
+}
+
+/// Snapshot the shard-error counters, in `ShardErrorClass` order.
+pub fn shard_error_counts() -> [u64; N_SHARD_ERROR_CLASSES] {
+    let mut out = [0; N_SHARD_ERROR_CLASSES];
+    for (o, c) in out.iter_mut().zip(SHARD_ERRORS.iter()) {
+        *o = c.load(Ordering::Relaxed);
+    }
+    out
+}

@@ -1,0 +1,427 @@
+//! Request-lifecycle flight recorder: a bounded, lock-free ring buffer
+//! of structured events.
+//!
+//! Every serve-layer request carries a process-unique id (from
+//! [`next_request_id`]) and leaves a trail of [`Event`]s — `Submitted`,
+//! `Enqueued{key}`, `Coalesced{panel,width}`, `Executed{waves,ns}`,
+//! `Responded` / `Rejected{reason}` — tagged with a global monotone
+//! sequence number, so a dump reconstructs the full timeline of any
+//! request that is still inside the ring.  Shard rebalances and LRU
+//! evictions land in the same stream (`RebalanceStarted/Finished`,
+//! `Evicted{bytes}`) so cross-request causes of latency are visible in
+//! the same ordering.
+//!
+//! The ring is a fixed array of seqlock slots.  Writers claim a slot
+//! with one `fetch_add` on the head counter, mark the slot's version
+//! odd, store the payload words, then publish an even version derived
+//! from the sequence number.  Readers copy a slot and re-check the
+//! version, discarding torn reads.  Nothing ever blocks: when the ring
+//! is full the oldest events are overwritten.  (With two writers
+//! exactly one full lap apart a torn slot can survive with an even
+//! version; decoding validates the tag and drops such slots, trading
+//! at most one lost diagnostic event for a lock-free write path.)
+//!
+//! Dumps are JSON lines (one event per line, ascending `seq`) via the
+//! in-tree `runtime::json` — see EXPERIMENTS.md §Observability for the
+//! schema table and a worked timeline reconstruction.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::OnceLock;
+
+use crate::runtime::json::Json;
+use std::collections::BTreeMap;
+
+/// Capacity of the global ring (power of two).
+pub const RING_CAPACITY: usize = 4096;
+
+/// Why a request was rejected (mirrors `ServeError`; the mapping in
+/// `serve/service.rs::reject_reason` is exhaustive by construction and
+/// checked by `tools/static_audit.py`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RejectReason {
+    UnknownFactor = 0,
+    UnknownMatrix = 1,
+    Store = 2,
+    BadRhs = 3,
+    Overloaded = 4,
+    Canceled = 5,
+}
+
+impl RejectReason {
+    pub fn name(self) -> &'static str {
+        match self {
+            RejectReason::UnknownFactor => "unknown_factor",
+            RejectReason::UnknownMatrix => "unknown_matrix",
+            RejectReason::Store => "store",
+            RejectReason::BadRhs => "bad_rhs",
+            RejectReason::Overloaded => "overloaded",
+            RejectReason::Canceled => "canceled",
+        }
+    }
+
+    fn from_tag(t: u32) -> Option<RejectReason> {
+        Some(match t {
+            0 => RejectReason::UnknownFactor,
+            1 => RejectReason::UnknownMatrix,
+            2 => RejectReason::Store,
+            3 => RejectReason::BadRhs,
+            4 => RejectReason::Overloaded,
+            5 => RejectReason::Canceled,
+            _ => return None,
+        })
+    }
+}
+
+/// One lifecycle event.  `aux`/payload meanings per variant are fixed
+/// by the JSON schema in EXPERIMENTS.md §Observability.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum EventKind {
+    /// Request accepted by `submit`; id assigned.
+    Submitted,
+    /// Request appended to the per-key DRR queue.
+    Enqueued { key: u64 },
+    /// Request coalesced into execution panel `panel` of width `width`.
+    Coalesced { panel: u64, width: u32 },
+    /// Panel executed on behalf of this request.
+    Executed { waves: u32, ns: u64 },
+    /// Response delivered to the ticket.
+    Responded,
+    /// Request refused; no response will follow beyond the error.
+    Rejected { reason: RejectReason },
+    /// Shard-map rebalance began (req = 0: not tied to a request).
+    RebalanceStarted,
+    /// Rebalance finished after moving `moved` shards.
+    RebalanceFinished { moved: u32 },
+    /// LRU evicted a cached factor/operator of `bytes` bytes.
+    Evicted { bytes: u64 },
+}
+
+const TAG_SUBMITTED: u32 = 1;
+const TAG_ENQUEUED: u32 = 2;
+const TAG_COALESCED: u32 = 3;
+const TAG_EXECUTED: u32 = 4;
+const TAG_RESPONDED: u32 = 5;
+const TAG_REJECTED: u32 = 6;
+const TAG_REBALANCE_STARTED: u32 = 7;
+const TAG_REBALANCE_FINISHED: u32 = 8;
+const TAG_EVICTED: u32 = 9;
+
+impl EventKind {
+    /// Stable event name used in the JSON-lines dump.
+    pub fn name(&self) -> &'static str {
+        match self {
+            EventKind::Submitted => "submitted",
+            EventKind::Enqueued { .. } => "enqueued",
+            EventKind::Coalesced { .. } => "coalesced",
+            EventKind::Executed { .. } => "executed",
+            EventKind::Responded => "responded",
+            EventKind::Rejected { .. } => "rejected",
+            EventKind::RebalanceStarted => "rebalance_started",
+            EventKind::RebalanceFinished { .. } => "rebalance_finished",
+            EventKind::Evicted { .. } => "evicted",
+        }
+    }
+
+    /// Pack into (tag | aux << 32, payload).
+    fn pack(&self) -> (u64, u64) {
+        let (tag, aux, payload) = match *self {
+            EventKind::Submitted => (TAG_SUBMITTED, 0, 0),
+            EventKind::Enqueued { key } => (TAG_ENQUEUED, 0, key),
+            EventKind::Coalesced { panel, width } => (TAG_COALESCED, width, panel),
+            EventKind::Executed { waves, ns } => (TAG_EXECUTED, waves, ns),
+            EventKind::Responded => (TAG_RESPONDED, 0, 0),
+            EventKind::Rejected { reason } => (TAG_REJECTED, reason as u32, 0),
+            EventKind::RebalanceStarted => (TAG_REBALANCE_STARTED, 0, 0),
+            EventKind::RebalanceFinished { moved } => (TAG_REBALANCE_FINISHED, moved, 0),
+            EventKind::Evicted { bytes } => (TAG_EVICTED, 0, bytes),
+        };
+        ((tag as u64) | ((aux as u64) << 32), payload)
+    }
+
+    fn unpack(tagword: u64, payload: u64) -> Option<EventKind> {
+        let tag = tagword as u32;
+        let aux = (tagword >> 32) as u32;
+        Some(match tag {
+            TAG_SUBMITTED => EventKind::Submitted,
+            TAG_ENQUEUED => EventKind::Enqueued { key: payload },
+            TAG_COALESCED => EventKind::Coalesced { panel: payload, width: aux },
+            TAG_EXECUTED => EventKind::Executed { waves: aux, ns: payload },
+            TAG_RESPONDED => EventKind::Responded,
+            TAG_REJECTED => EventKind::Rejected { reason: RejectReason::from_tag(aux)? },
+            TAG_REBALANCE_STARTED => EventKind::RebalanceStarted,
+            TAG_REBALANCE_FINISHED => EventKind::RebalanceFinished { moved: aux },
+            TAG_EVICTED => EventKind::Evicted { bytes: payload },
+            _ => return None,
+        })
+    }
+}
+
+/// One recorded event: global sequence number, request id (0 for
+/// events not tied to a request), and the kind.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Event {
+    pub seq: u64,
+    pub req: u64,
+    pub kind: EventKind,
+}
+
+impl Event {
+    /// JSON object for one dump line. u64 fields that can exceed 2^53
+    /// (`key`, `bytes`, `panel`) are hex strings; the rest are numbers.
+    pub fn to_json(&self) -> Json {
+        let mut o = BTreeMap::new();
+        o.insert("seq".to_string(), Json::Num(self.seq as f64));
+        o.insert("req".to_string(), Json::Num(self.req as f64));
+        o.insert("event".to_string(), Json::Str(self.kind.name().to_string()));
+        match self.kind {
+            EventKind::Enqueued { key } => {
+                o.insert("key".to_string(), Json::Str(format!("{key:016x}")));
+            }
+            EventKind::Coalesced { panel, width } => {
+                o.insert("panel".to_string(), Json::Str(format!("{panel:x}")));
+                o.insert("width".to_string(), Json::Num(width as f64));
+            }
+            EventKind::Executed { waves, ns } => {
+                o.insert("waves".to_string(), Json::Num(waves as f64));
+                o.insert("ns".to_string(), Json::Num(ns as f64));
+            }
+            EventKind::Rejected { reason } => {
+                o.insert("reason".to_string(), Json::Str(reason.name().to_string()));
+            }
+            EventKind::RebalanceFinished { moved } => {
+                o.insert("moved".to_string(), Json::Num(moved as f64));
+            }
+            EventKind::Evicted { bytes } => {
+                o.insert("bytes".to_string(), Json::Str(format!("{bytes:x}")));
+            }
+            _ => {}
+        }
+        Json::Obj(o)
+    }
+
+    /// Inverse of [`Event::to_json`]; `None` on any shape mismatch.
+    pub fn from_json(v: &Json) -> Option<Event> {
+        let o = match v {
+            Json::Obj(o) => o,
+            _ => return None,
+        };
+        let num = |k: &str| -> Option<u64> {
+            match o.get(k) {
+                Some(Json::Num(n)) if *n >= 0.0 => Some(*n as u64),
+                _ => None,
+            }
+        };
+        let hex = |k: &str| -> Option<u64> {
+            match o.get(k) {
+                Some(Json::Str(s)) => u64::from_str_radix(s, 16).ok(),
+                _ => None,
+            }
+        };
+        let name = match o.get("event") {
+            Some(Json::Str(s)) => s.as_str(),
+            _ => return None,
+        };
+        let kind = match name {
+            "submitted" => EventKind::Submitted,
+            "enqueued" => EventKind::Enqueued { key: hex("key")? },
+            "coalesced" => EventKind::Coalesced {
+                panel: hex("panel")?,
+                width: num("width")? as u32,
+            },
+            "executed" => EventKind::Executed {
+                waves: num("waves")? as u32,
+                ns: num("ns")?,
+            },
+            "responded" => EventKind::Responded,
+            "rejected" => {
+                let r = match o.get("reason") {
+                    Some(Json::Str(s)) => s.as_str(),
+                    _ => return None,
+                };
+                let reason = [
+                    RejectReason::UnknownFactor,
+                    RejectReason::UnknownMatrix,
+                    RejectReason::Store,
+                    RejectReason::BadRhs,
+                    RejectReason::Overloaded,
+                    RejectReason::Canceled,
+                ]
+                .into_iter()
+                .find(|x| x.name() == r)?;
+                EventKind::Rejected { reason }
+            }
+            "rebalance_started" => EventKind::RebalanceStarted,
+            "rebalance_finished" => EventKind::RebalanceFinished {
+                moved: num("moved")? as u32,
+            },
+            "evicted" => EventKind::Evicted { bytes: hex("bytes")? },
+            _ => return None,
+        };
+        Some(Event { seq: num("seq")?, req: num("req")?, kind })
+    }
+}
+
+struct Slot {
+    /// 0 = never written; odd = write in progress; even = 2·seq + 2.
+    version: AtomicU64,
+    /// [req, tagword, payload]
+    words: [AtomicU64; 3],
+}
+
+/// Bounded lock-free ring of [`Event`]s. See the module docs for the
+/// seqlock protocol.
+pub struct FlightRecorder {
+    head: AtomicU64,
+    slots: Box<[Slot]>,
+}
+
+impl FlightRecorder {
+    /// A recorder holding the most recent `capacity` events
+    /// (rounded up to a power of two, min 2).
+    pub fn with_capacity(capacity: usize) -> FlightRecorder {
+        let cap = capacity.next_power_of_two().max(2);
+        let slots = (0..cap)
+            .map(|_| Slot {
+                version: AtomicU64::new(0),
+                words: [const { AtomicU64::new(0) }; 3],
+            })
+            .collect();
+        FlightRecorder { head: AtomicU64::new(0), slots }
+    }
+
+    /// Number of slots.
+    pub fn capacity(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// Total events ever recorded (not the current ring occupancy).
+    pub fn recorded(&self) -> u64 {
+        self.head.load(Ordering::Relaxed)
+    }
+
+    /// Record one event; returns its sequence number. Lock-free and
+    /// wait-free apart from the single `fetch_add`.
+    pub fn record(&self, req: u64, kind: EventKind) -> u64 {
+        let seq = self.head.fetch_add(1, Ordering::Relaxed);
+        let slot = &self.slots[(seq as usize) & (self.slots.len() - 1)];
+        let (tagword, payload) = kind.pack();
+        slot.version.store(2 * seq + 1, Ordering::Release);
+        slot.words[0].store(req, Ordering::Relaxed);
+        slot.words[1].store(tagword, Ordering::Relaxed);
+        slot.words[2].store(payload, Ordering::Relaxed);
+        slot.version.store(2 * seq + 2, Ordering::Release);
+        seq
+    }
+
+    /// Copy out every readable event, ascending by sequence number.
+    /// Slots being overwritten concurrently are skipped.
+    pub fn events(&self) -> Vec<Event> {
+        let mut out = Vec::with_capacity(self.slots.len());
+        for slot in self.slots.iter() {
+            let v1 = slot.version.load(Ordering::Acquire);
+            if v1 == 0 || v1 % 2 == 1 {
+                continue; // empty or mid-write
+            }
+            let req = slot.words[0].load(Ordering::Relaxed);
+            let tagword = slot.words[1].load(Ordering::Relaxed);
+            let payload = slot.words[2].load(Ordering::Relaxed);
+            let v2 = slot.version.load(Ordering::Acquire);
+            if v1 != v2 {
+                continue; // torn read
+            }
+            let seq = (v1 - 2) / 2;
+            if let Some(kind) = EventKind::unpack(tagword, payload) {
+                out.push(Event { seq, req, kind });
+            }
+        }
+        out.sort_by_key(|e| e.seq);
+        out
+    }
+
+    /// JSON-lines dump: one `Event::to_json` object per line, ascending
+    /// `seq`. Round-trips through `runtime::json::parse` +
+    /// [`Event::from_json`].
+    pub fn dump_json_lines(&self) -> String {
+        let mut s = String::new();
+        for e in self.events() {
+            s.push_str(&crate::runtime::json::to_string(&e.to_json()));
+            s.push('\n');
+        }
+        s
+    }
+
+    /// Drop all events (tests only; racing writers may repopulate).
+    pub fn clear(&self) {
+        for slot in self.slots.iter() {
+            slot.version.store(0, Ordering::Release);
+        }
+    }
+}
+
+static RECORDER: OnceLock<FlightRecorder> = OnceLock::new();
+
+/// The process-wide flight recorder ([`RING_CAPACITY`] slots).
+pub fn recorder() -> &'static FlightRecorder {
+    RECORDER.get_or_init(|| FlightRecorder::with_capacity(RING_CAPACITY))
+}
+
+/// Record into the global recorder; returns the sequence number.
+pub fn record_event(req: u64, kind: EventKind) -> u64 {
+    recorder().record(req, kind)
+}
+
+static NEXT_REQUEST: AtomicU64 = AtomicU64::new(1);
+static NEXT_PANEL: AtomicU64 = AtomicU64::new(1);
+
+/// A process-unique, nonzero request id.
+pub fn next_request_id() -> u64 {
+    NEXT_REQUEST.fetch_add(1, Ordering::Relaxed)
+}
+
+/// A process-unique, nonzero panel (coalesced batch) id.
+pub fn next_panel_id() -> u64 {
+    NEXT_PANEL.fetch_add(1, Ordering::Relaxed)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ring_drops_oldest_and_respects_capacity() {
+        let r = FlightRecorder::with_capacity(64);
+        for i in 0..1000u64 {
+            r.record(i, EventKind::Submitted);
+        }
+        let ev = r.events();
+        assert!(ev.len() <= 64, "ring exceeded capacity: {}", ev.len());
+        // the surviving events are the most recent ones
+        assert!(ev.iter().all(|e| e.seq >= 1000 - 64));
+        // and sequence numbers are strictly increasing
+        assert!(ev.windows(2).all(|w| w[0].seq < w[1].seq));
+    }
+
+    #[test]
+    fn events_round_trip_through_json_lines() {
+        let r = FlightRecorder::with_capacity(16);
+        let req = 42;
+        r.record(req, EventKind::Submitted);
+        r.record(req, EventKind::Enqueued { key: 0xdead_beef_cafe_f00d });
+        r.record(req, EventKind::Coalesced { panel: 7, width: 3 });
+        r.record(req, EventKind::Executed { waves: 5, ns: 123_456 });
+        r.record(req, EventKind::Responded);
+        r.record(9, EventKind::Rejected { reason: RejectReason::Overloaded });
+        r.record(0, EventKind::RebalanceStarted);
+        r.record(0, EventKind::RebalanceFinished { moved: 11 });
+        r.record(0, EventKind::Evicted { bytes: 1 << 40 });
+        let dump = r.dump_json_lines();
+        let parsed: Vec<Event> = dump
+            .lines()
+            .map(|l| {
+                let v = crate::runtime::json::parse(l).expect("parse line");
+                Event::from_json(&v).expect("decode event")
+            })
+            .collect();
+        assert_eq!(parsed, r.events());
+    }
+}

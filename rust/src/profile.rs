@@ -148,14 +148,15 @@ pub struct KernelReport {
 }
 
 impl KernelReport {
-    /// Difference vs an earlier snapshot.
+    /// Difference vs an earlier snapshot.  Saturating: a `reset()`
+    /// between the two snapshots yields zeros, never an underflow.
     pub fn since(&self, earlier: &KernelReport) -> KernelReport {
         let mut r = KernelReport::default();
         for i in 0..N_KERNELS {
-            r.f64_calls[i] = self.f64_calls[i] - earlier.f64_calls[i];
-            r.mixed_calls[i] = self.mixed_calls[i] - earlier.mixed_calls[i];
+            r.f64_calls[i] = self.f64_calls[i].saturating_sub(earlier.f64_calls[i]);
+            r.mixed_calls[i] = self.mixed_calls[i].saturating_sub(earlier.mixed_calls[i]);
         }
-        r.f32_bytes_saved = self.f32_bytes_saved - earlier.f32_bytes_saved;
+        r.f32_bytes_saved = self.f32_bytes_saved.saturating_sub(earlier.f32_bytes_saved);
         r
     }
 
@@ -215,14 +216,15 @@ pub struct ShardReport {
 }
 
 impl ShardReport {
-    /// Difference vs an earlier snapshot.
+    /// Difference vs an earlier snapshot.  Saturating: a `reset()`
+    /// between the two snapshots yields zeros, never an underflow.
     pub fn since(&self, earlier: &ShardReport) -> ShardReport {
         let mut r = ShardReport::default();
         for i in 0..SHARD_SLOTS {
-            r.routed[i] = self.routed[i] - earlier.routed[i];
+            r.routed[i] = self.routed[i].saturating_sub(earlier.routed[i]);
         }
-        r.rebalances = self.rebalances - earlier.rebalances;
-        r.moved_shards = self.moved_shards - earlier.moved_shards;
+        r.rebalances = self.rebalances.saturating_sub(earlier.rebalances);
+        r.moved_shards = self.moved_shards.saturating_sub(earlier.moved_shards);
         r
     }
 
@@ -279,21 +281,24 @@ pub struct ServeReport {
 }
 
 impl ServeReport {
-    /// Difference vs an earlier snapshot.
+    /// Difference vs an earlier snapshot.  Saturating: a `reset()`
+    /// between the two snapshots yields zeros, never an underflow.
     pub fn since(&self, earlier: &ServeReport) -> ServeReport {
         ServeReport {
-            requests: self.requests - earlier.requests,
-            batches: self.batches - earlier.batches,
-            nanos: self.nanos - earlier.nanos,
-            rejected: self.rejected - earlier.rejected,
+            requests: self.requests.saturating_sub(earlier.requests),
+            batches: self.batches.saturating_sub(earlier.batches),
+            nanos: self.nanos.saturating_sub(earlier.nanos),
+            rejected: self.rejected.saturating_sub(earlier.rejected),
         }
     }
 
     /// Mean requests per blocked solve — how well coalescing worked
     /// (1.0 means the service degenerated to single-RHS solves).
+    /// `NaN` when no batch has executed: "absent", not "worse than
+    /// single-RHS" — renderers print `-` (see `obs::fmt_ratio`).
     pub fn batching_efficiency(&self) -> f64 {
         if self.batches == 0 {
-            0.0
+            f64::NAN
         } else {
             self.requests as f64 / self.batches as f64
         }
@@ -325,19 +330,22 @@ pub struct BatchExecReport {
 }
 
 impl BatchExecReport {
-    /// Difference vs an earlier snapshot.
+    /// Difference vs an earlier snapshot.  Saturating: a `reset()`
+    /// between the two snapshots yields zeros, never an underflow.
     pub fn since(&self, earlier: &BatchExecReport) -> BatchExecReport {
         BatchExecReport {
-            waves: self.waves - earlier.waves,
-            ops: self.ops - earlier.ops,
-            flops: self.flops - earlier.flops,
+            waves: self.waves.saturating_sub(earlier.waves),
+            ops: self.ops.saturating_sub(earlier.ops),
+            flops: self.flops.saturating_sub(earlier.flops),
         }
     }
 
     /// Mean ops per wave — how full the execution batches actually ran.
+    /// `NaN` when no wave has executed — renderers print `-` (see
+    /// `obs::fmt_ratio`).
     pub fn mean_wave_width(&self) -> f64 {
         if self.waves == 0 {
-            0.0
+            f64::NAN
         } else {
             self.ops as f64 / self.waves as f64
         }
@@ -406,12 +414,13 @@ pub fn snapshot() -> Report {
 }
 
 impl Report {
-    /// Difference vs an earlier snapshot.
+    /// Difference vs an earlier snapshot.  Saturating: a `reset()`
+    /// between the two snapshots yields zeros, never an underflow.
     pub fn since(&self, earlier: &Report) -> Report {
         let mut r = Report::default();
         for i in 0..N_PHASES {
-            r.nanos[i] = self.nanos[i] - earlier.nanos[i];
-            r.flops[i] = self.flops[i] - earlier.flops[i];
+            r.nanos[i] = self.nanos[i].saturating_sub(earlier.nanos[i]);
+            r.flops[i] = self.flops[i].saturating_sub(earlier.flops[i]);
         }
         r
     }
@@ -551,6 +560,64 @@ mod tests {
         assert!(after.ops >= 10);
         assert!(after.flops >= 1000);
         assert!(after.mean_wave_width() > 0.0);
+    }
+
+    #[test]
+    fn since_saturates_when_reset_lands_between_snapshots() {
+        // A reset() between two snapshots makes the "later" snapshot
+        // smaller than the "earlier" one. Every since() must saturate
+        // to zero instead of panicking (debug) or wrapping (release).
+        // Counters are modeled directly so this test cannot race the
+        // other tests running against the global atomics.
+        let mut earlier_p = Report::default();
+        earlier_p.nanos[0] = 1_000;
+        earlier_p.flops[1] = 99;
+        let after_reset_p = Report::default();
+        let d = after_reset_p.since(&earlier_p);
+        assert_eq!(d.nanos[0], 0);
+        assert_eq!(d.flops[1], 0);
+
+        let mut earlier_k = KernelReport::default();
+        earlier_k.f64_calls[0] = 7;
+        earlier_k.mixed_calls[1] = 3;
+        earlier_k.f32_bytes_saved = 4096;
+        let dk = KernelReport::default().since(&earlier_k);
+        assert_eq!(dk.total_calls(), 0);
+        assert_eq!(dk.f32_bytes_saved, 0);
+
+        let mut earlier_s = ShardReport::default();
+        earlier_s.routed[0] = 5;
+        earlier_s.rebalances = 2;
+        earlier_s.moved_shards = 12;
+        let ds = ShardReport::default().since(&earlier_s);
+        assert_eq!(ds.total_routed(), 0);
+        assert_eq!(ds.rebalances, 0);
+        assert_eq!(ds.moved_shards, 0);
+
+        let earlier_v = ServeReport { requests: 20, batches: 2, nanos: 1500, rejected: 1 };
+        let dv = ServeReport::default().since(&earlier_v);
+        assert_eq!((dv.requests, dv.batches, dv.nanos, dv.rejected), (0, 0, 0, 0));
+
+        let earlier_b = BatchExecReport { waves: 2, ops: 10, flops: 1000 };
+        let db = BatchExecReport::default().since(&earlier_b);
+        assert_eq!((db.waves, db.ops, db.flops), (0, 0, 0));
+        // (The live-global equivalent — snapshot, reset(), snapshot,
+        // since() — is exercised in rust/tests/obs.rs, which owns its
+        // own process; calling reset() here would race the concurrent
+        // lower-bound tests above.)
+    }
+
+    #[test]
+    fn empty_ratio_metrics_are_nan_not_zero() {
+        // Empty reports must read "absent" (NaN → rendered as `-`),
+        // never 0.0, which a dashboard reads as "worse than 1 RHS per
+        // solve" / "zero-width waves".
+        assert!(ServeReport::default().batching_efficiency().is_nan());
+        assert!(BatchExecReport::default().mean_wave_width().is_nan());
+        let sv = ServeReport { requests: 8, batches: 2, nanos: 1, rejected: 0 };
+        assert!((sv.batching_efficiency() - 4.0).abs() < 1e-12);
+        let bx = BatchExecReport { waves: 2, ops: 10, flops: 0 };
+        assert!((bx.mean_wave_width() - 5.0).abs() < 1e-12);
     }
 
     #[test]

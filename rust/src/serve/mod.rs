@@ -99,6 +99,41 @@
 //! The `serve` binary (`rust/src/bin/serve.rs`) wires the layers into a
 //! factor-then-serve loop over a synthetic request stream and prints
 //! the throughput/latency table recorded in EXPERIMENTS.md §Multi-RHS.
+//!
+//! ## The metric-name contract
+//!
+//! Everything the serve layers record flows out through [`crate::obs`],
+//! and the names below are **stable API** — dashboards and the
+//! `tools/check_metrics.py` validator key on them, so renaming any of
+//! them is a breaking change (bump [`crate::obs::SNAPSHOT_VERSION`] and
+//! say so in CHANGES.md):
+//!
+//! * **Prometheus** ([`crate::obs::prometheus`]): every metric is
+//!   prefixed `h2opus_`. Counters: `h2opus_phase_nanos_total{phase=}`,
+//!   `h2opus_phase_flops_total{phase=}`,
+//!   `h2opus_kernel_calls_total{kernel=,precision=}`,
+//!   `h2opus_f32_bytes_saved_total`, `h2opus_batch_waves_total`,
+//!   `h2opus_batch_ops_total`, `h2opus_batch_flops_total`,
+//!   `h2opus_serve_requests_total`, `h2opus_serve_batches_total`,
+//!   `h2opus_serve_nanos_total`, `h2opus_serve_rejected_total`,
+//!   `h2opus_shard_routed_total{slot=}`,
+//!   `h2opus_shard_rebalances_total`, `h2opus_shard_moved_total`,
+//!   `h2opus_shard_errors_total{class=}` with classes from
+//!   [`crate::obs::SHARD_ERROR_NAMES`]. Histograms (cumulative
+//!   `_bucket{le=}` + `_sum` + `_count`): one per
+//!   [`crate::obs::HIST_NAMES`] entry — `request_wait_ns`,
+//!   `panel_exec_ns`, `factor_load_owned_ns`, `factor_load_mapped_ns`,
+//!   `pcg_iters`, `wave_exec_ns`, each under the `h2opus_` prefix.
+//! * **JSON** ([`crate::obs::json_snapshot`]): top-level keys
+//!   `version` (== [`crate::obs::SNAPSHOT_VERSION`]), `schema`
+//!   (`"h2opus-obs"`), `phases`, `kernels`, `batch`, `serve`, `shards`,
+//!   `histograms`; histogram entries carry `count`, `sum`, `mean`,
+//!   `p50`/`p95`/`p99` (null when empty) and sparse
+//!   `buckets: [[lower, count], ...]`.
+//! * **Flight-recorder events** ([`crate::obs::EventKind::name`]):
+//!   `submitted`, `enqueued`, `coalesced`, `executed`, `responded`,
+//!   `rejected` (reasons from [`crate::obs::RejectReason::name`]),
+//!   `rebalance_started`, `rebalance_finished`, `evicted`.
 
 pub mod mmap;
 pub mod service;

@@ -51,6 +51,7 @@
 
 use crate::batch::NativeBatch;
 use crate::linalg::matrix::Matrix;
+use crate::obs::{self, EventKind, HistId, KeyHistSnapshot, KeyHists, RejectReason};
 use crate::profile;
 use crate::serve::store::{FactorStore, StoreError, StoredFactor};
 use crate::solve::{chol_solve_multi_with, ldl_solve_multi_with, pcg_multi, TlrPanelOp};
@@ -260,6 +261,8 @@ impl PartialEq for ReqMode {
 }
 
 struct PendingReq {
+    /// Flight-recorder request id (see [`crate::obs::next_request_id`]).
+    req_id: u64,
     key: u64,
     mode: ReqMode,
     rhs: Vec<f64>,
@@ -322,15 +325,42 @@ struct Inner {
     /// Executed-panel log (bounded), for fairness assertions and
     /// diagnostics.
     served: Mutex<Vec<ServedBatch>>,
+    /// Per-key wait/exec latency histograms, created lazily when a
+    /// key's first panel executes. The lock guards only the map; the
+    /// histograms themselves record lock-free through the `Arc`.
+    key_hists: Mutex<HashMap<u64, Arc<KeyHists>>>,
+}
+
+/// Exhaustive `ServeError` → flight-recorder reason mapping. Every
+/// error-reply site goes through [`reject`], so no serve error path is
+/// silent; `tools/static_audit.py` verifies this match names every
+/// `ServeError` variant.
+fn reject_reason(e: &ServeError) -> RejectReason {
+    match e {
+        ServeError::UnknownFactor(_) => RejectReason::UnknownFactor,
+        ServeError::UnknownMatrix(_) => RejectReason::UnknownMatrix,
+        ServeError::Store(_) => RejectReason::Store,
+        ServeError::BadRhs { .. } => RejectReason::BadRhs,
+        ServeError::Overloaded { .. } => RejectReason::Overloaded,
+        ServeError::Canceled => RejectReason::Canceled,
+    }
+}
+
+/// Record the `Rejected` lifecycle event and deliver the error.
+fn reject(req_id: u64, tx: &Sender<Result<SolveResponse, ServeError>>, e: ServeError) {
+    obs::record_event(req_id, EventKind::Rejected { reason: reject_reason(&e) });
+    let _ = tx.send(Err(e));
 }
 
 /// Tiny LRU keyed by factor key (worker-thread local; capacities are
 /// single digits, so a vector beats a linked structure). When the
 /// entries are mmap-backed factors, eviction drops the last `Arc` and
-/// therefore unmaps the file.
+/// therefore unmaps the file. Every eviction is recorded as an
+/// `Evicted{bytes}` flight-recorder event (the `bytes` estimate is
+/// supplied at insert time).
 struct LruCache<T> {
     cap: usize,
-    entries: Vec<(u64, Arc<T>)>,
+    entries: Vec<(u64, Arc<T>, u64)>,
 }
 
 impl<T> LruCache<T> {
@@ -339,17 +369,20 @@ impl<T> LruCache<T> {
     }
 
     fn get(&mut self, key: u64) -> Option<Arc<T>> {
-        let pos = self.entries.iter().position(|(k, _)| *k == key)?;
+        let pos = self.entries.iter().position(|(k, _, _)| *k == key)?;
         let entry = self.entries.remove(pos);
         let f = entry.1.clone();
         self.entries.insert(0, entry);
         Some(f)
     }
 
-    fn insert(&mut self, key: u64, f: Arc<T>) {
-        self.entries.retain(|(k, _)| *k != key);
-        self.entries.insert(0, (key, f));
-        self.entries.truncate(self.cap);
+    fn insert(&mut self, key: u64, f: Arc<T>, bytes: u64) {
+        self.entries.retain(|(k, _, _)| *k != key);
+        self.entries.insert(0, (key, f, bytes));
+        while self.entries.len() > self.cap {
+            let (_, _, evicted_bytes) = self.entries.pop().expect("len > cap > 0");
+            obs::record_event(0, EventKind::Evicted { bytes: evicted_bytes });
+        }
     }
 }
 
@@ -380,6 +413,7 @@ impl SolveService {
             registry_mat: Mutex::new(HashMap::new()),
             counters: Counters::default(),
             served: Mutex::new(Vec::new()),
+            key_hists: Mutex::new(HashMap::new()),
         });
         let worker_inner = inner.clone();
         let thread_name = if name.is_empty() {
@@ -468,28 +502,42 @@ impl SolveService {
 
     fn submit_mode(&self, key: u64, rhs: Vec<f64>, mode: ReqMode) -> Result<Ticket, ServeError> {
         let (tx, rx) = channel();
+        let req_id = obs::next_request_id();
+        obs::record_event(req_id, EventKind::Submitted);
         {
             let mut guard = self.inner.queue.lock().unwrap();
             let q = &mut *guard;
             if q.shutdown {
-                return Err(ServeError::Canceled);
+                let e = ServeError::Canceled;
+                obs::record_event(req_id, EventKind::Rejected { reason: reject_reason(&e) });
+                return Err(e);
             }
             let queue = q.queues.entry(key).or_default();
             if queue.len() >= self.inner.opts.max_backlog {
                 self.inner.counters.rejected.fetch_add(1, Ordering::Relaxed);
                 profile::add_serve_rejected(1);
-                return Err(ServeError::Overloaded {
+                let e = ServeError::Overloaded {
                     key,
                     backlog: queue.len(),
                     limit: self.inner.opts.max_backlog,
-                });
+                };
+                obs::record_event(req_id, EventKind::Rejected { reason: reject_reason(&e) });
+                return Err(e);
             }
             let was_empty = queue.is_empty();
-            queue.push_back(PendingReq { key, mode, rhs, enqueued: Instant::now(), tx });
+            queue.push_back(PendingReq {
+                req_id,
+                key,
+                mode,
+                rhs,
+                enqueued: Instant::now(),
+                tx,
+            });
             if was_empty {
                 q.order.push_back(key);
             }
             q.total += 1;
+            obs::record_event(req_id, EventKind::Enqueued { key });
         }
         self.inner.cv.notify_all();
         Ok(Ticket(rx))
@@ -513,6 +561,21 @@ impl SolveService {
     /// fairness test asserts the DRR interleaving bound on this.
     pub fn served_log(&self) -> Vec<ServedBatch> {
         self.inner.served.lock().unwrap().clone()
+    }
+
+    /// Per-key request-wait and execution latency histograms (p50/p95/
+    /// p99 via [`crate::obs::HistSnapshot::percentile`]). `None` until
+    /// the key's first panel executes.
+    pub fn key_hists(&self, key: u64) -> Option<KeyHistSnapshot> {
+        let m = self.inner.key_hists.lock().unwrap();
+        m.get(&key).map(|kh| kh.snapshot())
+    }
+
+    /// Keys that have per-key latency histograms (executed ≥ 1 panel).
+    pub fn observed_keys(&self) -> Vec<u64> {
+        let mut keys: Vec<u64> = self.inner.key_hists.lock().unwrap().keys().copied().collect();
+        keys.sort_unstable();
+        keys
     }
 }
 
@@ -560,6 +623,7 @@ fn resolve_cached<T>(
     registry: &Mutex<HashMap<u64, Arc<T>>>,
     cache: &mut LruCache<T>,
     load: impl FnOnce() -> Result<Option<T>, StoreError>,
+    size_bytes: impl FnOnce(&T) -> u64,
     missing: impl FnOnce(u64) -> ServeError,
 ) -> Result<Arc<T>, ServeError> {
     // Registry hits are NOT inserted into the LRU: the registry is
@@ -575,8 +639,9 @@ fn resolve_cached<T>(
     }
     match load() {
         Ok(Some(v)) => {
+            let bytes = size_bytes(&v);
             let v = Arc::new(v);
-            cache.insert(key, v.clone());
+            cache.insert(key, v.clone(), bytes);
             Ok(v)
         }
         Ok(None) => Err(missing(key)),
@@ -603,6 +668,7 @@ fn resolve_factor(
                 store.load(key)
             }
         },
+        StoredFactor::approx_bytes,
         ServeError::UnknownFactor,
     )
 }
@@ -625,6 +691,7 @@ fn resolve_matrix(
                 store.load_matrix(key)
             }
         },
+        |a| (a.memory().total_f64() * 8) as u64,
         ServeError::UnknownMatrix,
     )
 }
@@ -639,7 +706,15 @@ impl Drop for DrainOnExit<'_> {
     fn drop(&mut self) {
         let mut q = self.0.queue.lock().unwrap_or_else(|p| p.into_inner());
         q.shutdown = true;
-        q.queues.clear();
+        // Dropping a pending sender makes its `Ticket::wait` return
+        // `Canceled`; leave the matching `Rejected` event in the trace
+        // so shutdown-canceled requests have a terminal state too.
+        for (_key, queue) in q.queues.drain() {
+            for req in queue {
+                let reason = RejectReason::Canceled;
+                obs::record_event(req.req_id, EventKind::Rejected { reason });
+            }
+        }
         q.order.clear();
         q.deficit.clear();
         q.total = 0;
@@ -767,12 +842,27 @@ fn run_batch(
 ) {
     let key = batch[0].key;
     let mode = batch[0].mode;
+    // Lifecycle: this batch is one coalesced panel. Record the panel
+    // membership and the queue wait of every member now — execution
+    // (or rejection) starts here.
+    let panel_id = obs::next_panel_id();
+    let width = batch.len() as u32;
+    let kh = {
+        let mut m = inner.key_hists.lock().unwrap();
+        m.entry(key).or_default().clone()
+    };
+    for req in &batch {
+        obs::record_event(req.req_id, EventKind::Coalesced { panel: panel_id, width });
+        let wait_ns = req.enqueued.elapsed().as_nanos() as u64;
+        obs::histogram(HistId::RequestWait).record(wait_ns);
+        kh.wait.record(wait_ns);
+    }
     let factor = match resolve_factor(key, inner, store, &mut caches.factors) {
         Ok(f) => f,
         Err(e) => {
             inner.counters.requests.fetch_add(batch.len() as u64, Ordering::Relaxed);
             for req in batch {
-                let _ = req.tx.send(Err(e.clone()));
+                reject(req.req_id, &req.tx, e.clone());
             }
             return;
         }
@@ -801,7 +891,7 @@ fn run_batch(
                 Err(e) => {
                     inner.counters.requests.fetch_add(batch.len() as u64, Ordering::Relaxed);
                     for req in batch {
-                        let _ = req.tx.send(Err(e.clone()));
+                        reject(req.req_id, &req.tx, e.clone());
                     }
                     return;
                 }
@@ -816,7 +906,7 @@ fn run_batch(
         } else {
             inner.counters.requests.fetch_add(1, Ordering::Relaxed);
             let got = req.rhs.len();
-            let _ = req.tx.send(Err(ServeError::BadRhs { expected: n, got }));
+            reject(req.req_id, &req.tx, ServeError::BadRhs { expected: n, got });
         }
     }
     if valid.is_empty() {
@@ -827,6 +917,7 @@ fn run_batch(
     for (j, req) in valid.iter().enumerate() {
         panel.col_mut(j).copy_from_slice(&req.rhs);
     }
+    let waves_before = exec.stats().waves;
     let t0 = Instant::now();
     // Per-column (iters, converged); direct solves report (0, true).
     // The solve runs under a panic guard: a malformed *registered*
@@ -869,12 +960,13 @@ fn run_batch(
             let e = ServeError::Store(format!("solve panicked for key {key:016x}: {what}"));
             inner.counters.requests.fetch_add(w as u64, Ordering::Relaxed);
             for req in valid {
-                let _ = req.tx.send(Err(e.clone()));
+                reject(req.req_id, &req.tx, e.clone());
             }
             return;
         }
     };
     let solve_nanos = t0.elapsed().as_nanos() as u64;
+    let solve_waves = exec.stats().waves.saturating_sub(waves_before) as u32;
     let c = &inner.counters;
     c.requests.fetch_add(w as u64, Ordering::Relaxed);
     c.batches.fetch_add(1, Ordering::Relaxed);
@@ -891,6 +983,12 @@ fn run_batch(
     let now = Instant::now();
     for (j, req) in valid.into_iter().enumerate() {
         let (iters, converged) = col_info[j];
+        obs::histogram(HistId::PanelExec).record(solve_nanos);
+        kh.exec.record(solve_nanos);
+        obs::record_event(
+            req.req_id,
+            EventKind::Executed { waves: solve_waves, ns: solve_nanos },
+        );
         let resp = SolveResponse {
             x: x.col(j).to_vec(),
             latency: now.duration_since(req.enqueued),
@@ -899,6 +997,7 @@ fn run_batch(
             converged,
         };
         let _ = req.tx.send(Ok(resp));
+        obs::record_event(req.req_id, EventKind::Responded);
     }
 }
 
@@ -923,10 +1022,10 @@ mod tests {
             }))
         };
         let mut c = LruCache::new(2);
-        c.insert(1, mk(1));
-        c.insert(2, mk(2));
+        c.insert(1, mk(1), 64);
+        c.insert(2, mk(2), 64);
         assert!(c.get(1).is_some()); // touch 1 → MRU
-        c.insert(3, mk(3)); // evicts 2
+        c.insert(3, mk(3), 64); // evicts 2 (and records Evicted{64})
         assert!(c.get(2).is_none());
         assert!(c.get(1).is_some());
         assert!(c.get(3).is_some());

@@ -58,6 +58,7 @@
 //! # }
 //! ```
 
+use crate::obs::{self, EventKind, KeyHistSnapshot, ShardErrorClass};
 use crate::profile;
 use crate::serve::service::{
     ServeError, ServeOpts, ServedBatch, ServiceStats, SolveService, Ticket,
@@ -105,6 +106,36 @@ impl std::fmt::Display for ShardError {
 }
 
 impl std::error::Error for ShardError {}
+
+/// Exhaustive `ShardError` → observability-class mapping. Every
+/// fallible fleet-mutation surface taps its errors through
+/// [`note_shard_error`], so no shard error path is silent;
+/// `tools/static_audit.py` verifies this match names every
+/// `ShardError` variant.
+fn shard_error_class(e: &ShardError) -> ShardErrorClass {
+    match e {
+        ShardError::Parse(_) => ShardErrorClass::Parse,
+        ShardError::UnknownWorker(_) => ShardErrorClass::UnknownWorker,
+        ShardError::DuplicateWorker(_) => ShardErrorClass::DuplicateWorker,
+        ShardError::LastWorker => ShardErrorClass::LastWorker,
+        ShardError::Store(_) => ShardErrorClass::Store,
+    }
+}
+
+/// Count a shard error in the `obs` error counters (exported as
+/// `h2opus_shard_errors_total{class=...}`).
+fn note_shard_error(e: &ShardError) {
+    obs::note_shard_error(shard_error_class(e));
+}
+
+/// Tap a fallible fleet-mutation result: count the error, pass the
+/// value through unchanged.
+fn tap_shard_result<T>(r: Result<T, ShardError>) -> Result<T, ShardError> {
+    if let Err(e) = &r {
+        note_shard_error(e);
+    }
+    r
+}
 
 /// SplitMix64 finalizer. FNV-1a alone is too correlated across inputs
 /// that differ in a byte or two (worker ids like `w0`/`w1`): comparing
@@ -271,7 +302,13 @@ impl ShardMap {
 
     /// Parse [`ShardMap::encode`] output. The owner table is recomputed,
     /// so two processes decoding the same text agree on every route.
+    /// Decode failures (this is the untrusted fleet-shared input path)
+    /// are counted in the `obs` shard-error counters.
     pub fn decode(text: &str) -> Result<ShardMap, ShardError> {
+        tap_shard_result(Self::decode_inner(text))
+    }
+
+    fn decode_inner(text: &str) -> Result<ShardMap, ShardError> {
         let mut lines = text.lines().filter(|l| !l.trim().is_empty());
         if lines.next().map(str::trim) != Some("shardmap v1") {
             return Err(ShardError::Parse("missing 'shardmap v1' header".into()));
@@ -508,11 +545,49 @@ impl ShardedService {
         state.workers.iter().map(|w| (w.id.clone(), w.service.served_log())).collect()
     }
 
+    /// Per-key request-wait/execution latency histograms, merged across
+    /// the live fleet (a key that moved during a rebalance has history
+    /// on more than one worker; histogram merge is exact, so the fleet
+    /// view equals one service having served every panel). `None` until
+    /// the key's first panel executes anywhere.
+    pub fn key_hists(&self, key: u64) -> Option<KeyHistSnapshot> {
+        let state = self.state.read().unwrap();
+        let mut acc: Option<KeyHistSnapshot> = None;
+        for w in &state.workers {
+            if let Some(kh) = w.service.key_hists(key) {
+                acc = Some(match acc {
+                    Some(a) => a.merge(&kh),
+                    None => kh,
+                });
+            }
+        }
+        acc
+    }
+
+    /// Keys with per-key latency histograms anywhere in the live fleet.
+    pub fn observed_keys(&self) -> Vec<u64> {
+        let state = self.state.read().unwrap();
+        let mut keys: Vec<u64> =
+            state.workers.iter().flat_map(|w| w.service.observed_keys()).collect();
+        keys.sort_unstable();
+        keys.dedup();
+        keys
+    }
+
     /// Add a worker to the fleet. Only the shards the new worker wins
     /// are remapped; in-memory registrations for keys on moved shards
     /// are re-registered on the new owner. Returns the moved shards.
+    /// Brackets the mutation with `RebalanceStarted`/`Finished` flight
+    /// events; failures land in the `obs` shard-error counters.
     pub fn add_worker(&self, id: impl Into<String>) -> Result<Vec<usize>, ShardError> {
-        let id = id.into();
+        obs::record_event(0, EventKind::RebalanceStarted);
+        let r = tap_shard_result(self.add_worker_inner(id.into()));
+        let moved = r.as_ref().map_or(0, |m| m.len() as u32);
+        obs::record_event(0, EventKind::RebalanceFinished { moved });
+        r
+    }
+
+    fn add_worker_inner(&self, id: String) -> Result<Vec<usize>, ShardError> {
         let mut state = self.state.write().unwrap();
         // Every fallible step runs BEFORE the map mutation: a failure
         // here must not leave a phantom worker in the map (routing to
@@ -540,8 +615,17 @@ impl ShardedService {
     /// [`SolveService`] is dropped — which drains: every request queued
     /// before the removal is served by the old owner before its thread
     /// exits, so in-flight tickets resolve normally. Returns the moved
-    /// shards.
+    /// shards. Bracketed by `RebalanceStarted`/`Finished` flight
+    /// events; failures land in the `obs` shard-error counters.
     pub fn remove_worker(&self, id: &str) -> Result<Vec<usize>, ShardError> {
+        obs::record_event(0, EventKind::RebalanceStarted);
+        let r = tap_shard_result(self.remove_worker_inner(id));
+        let moved = r.as_ref().map_or(0, |m| m.len() as u32);
+        obs::record_event(0, EventKind::RebalanceFinished { moved });
+        r
+    }
+
+    fn remove_worker_inner(&self, id: &str) -> Result<Vec<usize>, ShardError> {
         let mut state = self.state.write().unwrap();
         let moved = state.map.remove_worker(id)?;
         let idx = state.worker_index(id);

@@ -826,6 +826,18 @@ impl StoredFactor {
             StoredFactor::Ldl(f) => f.l.n(),
         }
     }
+
+    /// Approximate resident bytes of the factor's tile payloads
+    /// (diagonal blocks plus one triangle of low-rank tiles, as
+    /// [`crate::tlr::matrix::MemoryReport::factor_f64`] counts them).
+    /// The serve LRU reports this in `Evicted{bytes}` events.
+    pub fn approx_bytes(&self) -> u64 {
+        let mem = match self {
+            StoredFactor::Chol(f) => f.l.memory(),
+            StoredFactor::Ldl(f) => f.l.memory(),
+        };
+        (mem.factor_f64() * 8) as u64
+    }
 }
 
 /// Directory of persisted factors keyed by a problem-config hash
@@ -933,15 +945,21 @@ impl FactorStore {
     }
 
     /// Load whichever factor kind is stored under `key`; `Ok(None)` if
-    /// the key has never been saved.
+    /// the key has never been saved. Load wall time lands in the
+    /// `factor_load_owned_ns` histogram (hits only — misses are free).
     pub fn load(&self, key: u64) -> Result<Option<StoredFactor>, StoreError> {
+        let t0 = std::time::Instant::now();
         let cp = self.chol_path(key);
         if cp.exists() {
-            return Ok(Some(StoredFactor::Chol(load_chol(&cp)?)));
+            let f = StoredFactor::Chol(load_chol(&cp)?);
+            crate::obs::record_elapsed(crate::obs::HistId::FactorLoadOwned, t0);
+            return Ok(Some(f));
         }
         let lp = self.ldl_path(key);
         if lp.exists() {
-            return Ok(Some(StoredFactor::Ldl(load_ldl(&lp)?)));
+            let f = StoredFactor::Ldl(load_ldl(&lp)?);
+            crate::obs::record_elapsed(crate::obs::HistId::FactorLoadOwned, t0);
+            return Ok(Some(f));
         }
         Ok(None)
     }
@@ -951,10 +969,15 @@ impl FactorStore {
     /// once, then every tile is a [`MappedSlice`] view into the `mmap` —
     /// no `f64` payload copy. Dropping the returned factor (e.g. LRU
     /// eviction in [`crate::serve::SolveService`]) unmaps the file.
+    /// Load wall time (validation + mapping, no payload copy) lands in
+    /// the `factor_load_mapped_ns` histogram — compare against
+    /// `factor_load_owned_ns` to see what zero-copy buys.
     pub fn load_mapped(&self, key: u64) -> Result<Option<Mapped<StoredFactor>>, StoreError> {
+        let t0 = std::time::Instant::now();
         let cp = self.chol_path(key);
         if cp.exists() {
             let m = load_chol_mapped(&cp)?;
+            crate::obs::record_elapsed(crate::obs::HistId::FactorLoadMapped, t0);
             return Ok(Some(Mapped {
                 value: StoredFactor::Chol(m.value),
                 addr_range: m.addr_range,
@@ -964,6 +987,7 @@ impl FactorStore {
         let lp = self.ldl_path(key);
         if lp.exists() {
             let m = load_ldl_mapped(&lp)?;
+            crate::obs::record_elapsed(crate::obs::HistId::FactorLoadMapped, t0);
             return Ok(Some(Mapped {
                 value: StoredFactor::Ldl(m.value),
                 addr_range: m.addr_range,

@@ -187,6 +187,15 @@ pub fn pcg_multi(
             }
         }
     }
+    // Iterations-to-converge distribution: one histogram sample per
+    // converged column (non-converged columns would bias the tail with
+    // the arbitrary max_iters cap, so they are skipped).
+    let pcg_hist = crate::obs::histogram(crate::obs::HistId::PcgIters);
+    for j in 0..r {
+        if converged[j] {
+            pcg_hist.record(iters[j] as u64);
+        }
+    }
     MultiCgResult { x, iters, history, converged }
 }
 

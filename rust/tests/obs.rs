@@ -1,0 +1,388 @@
+//! Integration tests for the `obs/` observability layer, in its own
+//! process so the global-state tests (histogram resets, the flight
+//! recorder ring) cannot race the lower-bound assertions of the other
+//! test binaries:
+//!
+//! * histogram percentiles track exact sample quantiles to within one
+//!   √2 bucket, merges equal unions, and `since` never underflows even
+//!   with a reset or concurrent writers in between;
+//! * the flight recorder survives a 10k-event multi-threaded flood
+//!   without exceeding its capacity, and its JSON-lines dump
+//!   round-trips;
+//! * a two-tenant [`SolveService`] run reports per-key p50/p95/p99
+//!   request-wait and execution latencies from the histograms;
+//! * [`obs::prometheus`] output parses line by line against the text
+//!   exposition grammar;
+//! * a sharded run's flight-recorder dump reconstructs a full request
+//!   timeline: Submitted → Enqueued → Coalesced → Executed → Responded
+//!   with strictly increasing sequence numbers.
+
+use h2opus_tlr::apps::covariance::ExpCovariance;
+use h2opus_tlr::apps::geometry::grid;
+use h2opus_tlr::apps::kdtree::kdtree_order;
+use h2opus_tlr::factor::{cholesky, CholFactor, FactorOpts};
+use h2opus_tlr::linalg::rng::Rng;
+use h2opus_tlr::obs::{self, EventKind, FlightRecorder, HistId, Histogram};
+use h2opus_tlr::serve::{
+    FactorStore, ServeOpts, ShardMap, ShardedService, SolveService, StoredFactor,
+};
+use h2opus_tlr::tlr::construct::{build_tlr, BuildOpts, Compression};
+use std::path::PathBuf;
+use std::time::Duration;
+
+fn temp_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir()
+        .join(format!("h2opus_obs_test_{}_{tag}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+/// One small Cholesky factor (the serve tests' recipe).
+fn small_factor(seed: u64) -> CholFactor {
+    let pts = grid(128, 2);
+    let c = kdtree_order(&pts, 32);
+    let cov = ExpCovariance::paper_default(pts.permuted(&c.perm));
+    let tlr = build_tlr(
+        &cov,
+        &c.offsets,
+        &BuildOpts { eps: 1e-6, method: Compression::Svd, seed },
+    );
+    cholesky(tlr, &FactorOpts { eps: 1e-6, bs: 8, ..Default::default() }).unwrap()
+}
+
+// ------------------------------------------------- histogram properties
+
+#[test]
+fn percentiles_track_exact_quantiles_across_seeds() {
+    for seed in 0..6u64 {
+        let mut rng = Rng::new(0x0B5E + seed);
+        let h = Histogram::new();
+        let mut vals: Vec<u64> = Vec::new();
+        for i in 0..1500usize {
+            // Mixed regimes: small counts, mid-range ns, heavy tail.
+            let v = match i % 3 {
+                0 => rng.below(64) as u64,
+                1 => 1_000 + rng.below(1_000_000) as u64,
+                _ => (1u64 << (10 + rng.below(20) as u64)) + rng.below(512) as u64,
+            };
+            vals.push(v);
+            h.record(v);
+        }
+        vals.sort_unstable();
+        let snap = h.snapshot();
+        let mut prev = 0.0f64;
+        for q in [0.05, 0.25, 0.5, 0.9, 0.95, 0.99] {
+            let rank = ((q * vals.len() as f64).ceil() as usize).clamp(1, vals.len());
+            let exact = vals[rank - 1];
+            let est = snap.percentile(q);
+            assert_eq!(
+                obs::bucket_index(est as u64),
+                obs::bucket_index(exact),
+                "seed={seed} q={q}: est {est} vs exact {exact}"
+            );
+            assert!(est >= prev, "seed={seed} q={q}: percentiles not monotone");
+            prev = est;
+        }
+    }
+}
+
+#[test]
+fn merge_matches_union_across_seeds() {
+    for seed in 0..4u64 {
+        let mut rng = Rng::new(0x3E46E + seed);
+        let (a, b, both) = (Histogram::new(), Histogram::new(), Histogram::new());
+        for _ in 0..800 {
+            let v = rng.below(1 << 22) as u64;
+            if rng.below(2) == 0 {
+                a.record(v);
+            } else {
+                b.record(v);
+            }
+            both.record(v);
+        }
+        assert_eq!(a.snapshot().merge(&b.snapshot()), both.snapshot(), "seed={seed}");
+    }
+}
+
+#[test]
+fn since_never_underflows_under_concurrent_recording() {
+    let h = Histogram::new();
+    std::thread::scope(|scope| {
+        for t in 0..4u64 {
+            let h = &h;
+            scope.spawn(move || {
+                let mut rng = Rng::new(0xC0 + t);
+                for _ in 0..20_000 {
+                    h.record(rng.below(1 << 20) as u64);
+                }
+            });
+        }
+        // Interleaved snapshot pairs while writers are hot: deltas must
+        // be non-negative (saturating) and counts monotone.
+        for _ in 0..200 {
+            let s1 = h.snapshot();
+            let s2 = h.snapshot();
+            let d = s2.since(&s1);
+            assert!(s2.count >= s1.count);
+            assert!(d.bucket_total() <= s2.bucket_total());
+        }
+    });
+    // Writers quiesced: totals are exact.
+    let fin = h.snapshot();
+    assert_eq!(fin.count, 80_000);
+    assert_eq!(fin.bucket_total(), 80_000);
+}
+
+#[test]
+fn global_since_survives_interleaved_resets() {
+    // The live-global counterpart of profile.rs's struct-level
+    // regression test: a reset between two snapshots must yield a
+    // saturated (all-small) delta, never an underflow panic. Loose
+    // bounds only — other tests in this binary record concurrently.
+    obs::histogram(HistId::PcgIters).record(3);
+    let before = obs::snapshot();
+    h2opus_tlr::profile::reset();
+    obs::reset_histograms();
+    obs::histogram(HistId::PcgIters).record(1);
+    let after = obs::snapshot();
+    let d = after.since(&before);
+    let i = HistId::PcgIters as usize;
+    assert!(d.hists[i].bucket_total() <= after.hists[i].bucket_total());
+    assert!(d.serve.requests <= after.serve.requests);
+}
+
+// ------------------------------------------------ flight recorder ring
+
+#[test]
+fn recorder_flood_respects_capacity_and_never_blocks() {
+    let r = FlightRecorder::with_capacity(1024);
+    std::thread::scope(|scope| {
+        for t in 0..4u64 {
+            let r = &r;
+            scope.spawn(move || {
+                for i in 0..2500u64 {
+                    r.record(t * 10_000 + i, EventKind::Executed { waves: 1, ns: i });
+                }
+            });
+        }
+    });
+    assert_eq!(r.recorded(), 10_000);
+    let ev = r.events();
+    assert!(ev.len() <= r.capacity(), "ring exceeded capacity: {}", ev.len());
+    assert!(!ev.is_empty());
+    assert!(ev.windows(2).all(|w| w[0].seq < w[1].seq), "seqs not strictly increasing");
+}
+
+#[test]
+fn dump_json_lines_round_trips_through_files() {
+    let r = FlightRecorder::with_capacity(32);
+    r.record(5, EventKind::Submitted);
+    r.record(5, EventKind::Enqueued { key: 0xFFFF_FFFF_FFFF_FFFF });
+    r.record(5, EventKind::Coalesced { panel: 3, width: 2 });
+    r.record(5, EventKind::Executed { waves: 4, ns: 987 });
+    r.record(5, EventKind::Responded);
+    let dir = temp_dir("trace_dump");
+    let path = dir.join("trace.jsonl");
+    std::fs::write(&path, r.dump_json_lines()).unwrap();
+    let text = std::fs::read_to_string(&path).unwrap();
+    let parsed: Vec<_> = text
+        .lines()
+        .map(|l| {
+            let v = h2opus_tlr::runtime::json::parse(l).expect("line parses");
+            obs::Event::from_json(&v).expect("event decodes")
+        })
+        .collect();
+    assert_eq!(parsed, r.events());
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+// ------------------------------------- per-key latency, two-tenant run
+
+#[test]
+fn two_tenant_service_reports_per_key_percentiles() {
+    let n = 128;
+    let f = small_factor(0x0B5);
+    let dir = temp_dir("two_tenant");
+    let service = SolveService::start(
+        FactorStore::open(&dir).unwrap(),
+        ServeOpts {
+            max_panel: 8,
+            flush_deadline: Duration::from_millis(3),
+            ..Default::default()
+        },
+    );
+    let (ka, kb) = (0xA11CEu64, 0xB0Bu64);
+    service.register(ka, StoredFactor::Chol(f.clone()));
+    service.register(kb, StoredFactor::Chol(f));
+    let mut rng = Rng::new(0x7E);
+    let per_key = 24usize;
+    let tickets: Vec<_> = (0..per_key * 2)
+        .map(|i| {
+            let key = if i % 2 == 0 { ka } else { kb };
+            let rhs: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+            service.submit(key, rhs).unwrap()
+        })
+        .collect();
+    for t in tickets {
+        assert_eq!(t.wait().unwrap().x.len(), n);
+    }
+    let observed = service.observed_keys();
+    assert!(observed.contains(&ka) && observed.contains(&kb), "keys {observed:?}");
+    for key in [ka, kb] {
+        let kh = service.key_hists(key).expect("key has histograms");
+        // Every admitted request of this key recorded one wait and one
+        // exec sample.
+        assert_eq!(kh.wait.bucket_total(), per_key as u64, "key {key:x} wait count");
+        assert_eq!(kh.exec.bucket_total(), per_key as u64, "key {key:x} exec count");
+        for s in [&kh.wait, &kh.exec] {
+            let (p50, p95, p99) = (s.percentile(0.5), s.percentile(0.95), s.percentile(0.99));
+            assert!(!p50.is_nan() && !p95.is_nan() && !p99.is_nan(), "key {key:x}");
+            assert!(p95 >= p50 && p99 >= p95, "key {key:x}: {p50} {p95} {p99}");
+        }
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+// --------------------------------------------------- exporter grammar
+
+/// Validate one metric-sample line: `name[{k="v",...}] value`.
+fn check_sample_line(line: &str) {
+    let name_ok = |s: &str| {
+        !s.is_empty()
+            && s.chars().next().unwrap().is_ascii_alphabetic()
+            && s.chars().all(|c| c.is_ascii_alphanumeric() || c == '_')
+    };
+    let (head, value) = line.rsplit_once(' ').unwrap_or_else(|| panic!("no value: {line}"));
+    assert!(value.parse::<f64>().is_ok(), "bad value in: {line}");
+    let name = if let Some((name, rest)) = head.split_once('{') {
+        let labels = rest.strip_suffix('}').unwrap_or_else(|| panic!("unclosed {{: {line}"));
+        for pair in labels.split(',') {
+            let (k, v) = pair.split_once('=').unwrap_or_else(|| panic!("bad label: {line}"));
+            assert!(name_ok(k), "bad label name in: {line}");
+            assert!(
+                v.len() >= 2 && v.starts_with('"') && v.ends_with('"'),
+                "unquoted label value in: {line}"
+            );
+        }
+        name
+    } else {
+        head
+    };
+    assert!(name_ok(name), "bad metric name in: {line}");
+    assert!(name.starts_with("h2opus_"), "unprefixed metric: {line}");
+}
+
+#[test]
+fn prometheus_output_parses_line_by_line() {
+    // Make sure at least one histogram and the serve counters have data.
+    obs::histogram(HistId::RequestWait).record(1_000);
+    obs::histogram(HistId::RequestWait).record(5_000_000);
+    obs::histogram(HistId::WaveExec).record(123);
+    let text = obs::prometheus();
+    assert!(!text.is_empty());
+    let mut samples = 0usize;
+    for line in text.lines() {
+        if let Some(rest) = line.strip_prefix("# TYPE ") {
+            let mut it = rest.split(' ');
+            let (name, ty) = (it.next().unwrap_or(""), it.next().unwrap_or(""));
+            assert!(it.next().is_none(), "extra tokens in TYPE line: {line}");
+            assert!(name.starts_with("h2opus_"), "unprefixed TYPE: {line}");
+            assert!(
+                ty == "counter" || ty == "gauge" || ty == "histogram",
+                "unknown type in: {line}"
+            );
+        } else {
+            check_sample_line(line);
+            samples += 1;
+        }
+    }
+    assert!(samples > 20, "suspiciously few samples: {samples}");
+    // The recorded histogram must expose its cumulative +Inf bucket.
+    assert!(text.contains("h2opus_request_wait_ns_bucket{le=\"+Inf\"}"));
+}
+
+#[test]
+fn json_snapshot_validates_against_schema() {
+    obs::histogram(HistId::PanelExec).record(42_000);
+    let text = obs::json_snapshot();
+    let doc = h2opus_tlr::runtime::json::parse(&text).expect("snapshot parses");
+    let obj = match &doc {
+        h2opus_tlr::runtime::json::Json::Obj(o) => o,
+        _ => panic!("snapshot is not an object"),
+    };
+    for key in ["version", "schema", "phases", "kernels", "batch", "serve", "shards",
+        "histograms"]
+    {
+        assert!(obj.contains_key(key), "missing top-level key {key}");
+    }
+}
+
+// ------------------------------------------ sharded request timelines
+
+#[test]
+fn sharded_run_reconstructs_full_request_timelines() {
+    let f = small_factor(0x5AD);
+    let n = 128;
+    let dir = temp_dir("sharded_timeline");
+    let store = FactorStore::open(&dir).unwrap();
+    let (key_a, key_b) = (7u64, 9u64);
+    store.save_chol(key_a, &f, "obs timeline A").unwrap();
+    store.save_chol(key_b, &f, "obs timeline B").unwrap();
+    let map = ShardMap::new(8, vec!["w0".to_string(), "w1".to_string()]);
+    let service = ShardedService::start_with_map(
+        &FactorStore::open(&dir).unwrap(),
+        ServeOpts {
+            max_panel: 8,
+            flush_deadline: Duration::from_millis(3),
+            ..Default::default()
+        },
+        map,
+    )
+    .unwrap();
+    let mut rng = Rng::new(0x71E);
+    let tickets: Vec<_> = (0..24usize)
+        .map(|i| {
+            let key = if i % 2 == 0 { key_a } else { key_b };
+            let rhs: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+            service.submit(key, rhs).unwrap()
+        })
+        .collect();
+    for t in tickets {
+        t.wait().unwrap();
+    }
+    // Reconstruct timelines from the global ring: group by request id.
+    let events = obs::recorder().events();
+    assert!(events.len() <= obs::RING_CAPACITY);
+    let mut by_req: std::collections::BTreeMap<u64, Vec<&obs::Event>> =
+        std::collections::BTreeMap::new();
+    for e in &events {
+        if e.req != 0 {
+            by_req.entry(e.req).or_default().push(e);
+        }
+    }
+    let want = ["submitted", "enqueued", "coalesced", "executed", "responded"];
+    let full = by_req.values().filter(|tl| {
+        let mut next = 0;
+        for e in tl.iter() {
+            if next < want.len() && e.kind.name() == want[next] {
+                next += 1;
+            }
+        }
+        // events() sorts by seq, so per-request order is seq order; a
+        // full timeline also has strictly increasing seqs by that sort.
+        next == want.len() && tl.windows(2).all(|w| w[0].seq < w[1].seq)
+    });
+    assert!(
+        full.count() >= 1,
+        "no request left a complete timeline among {} traced requests",
+        by_req.len()
+    );
+    // Per-key fleet-merged latency is visible through the front end.
+    for key in [key_a, key_b] {
+        let kh = service.key_hists(key).expect("fleet key histograms");
+        assert!(kh.wait.bucket_total() >= 12, "key {key}: {}", kh.wait.bucket_total());
+        assert!(!kh.exec.percentile(0.95).is_nan());
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}

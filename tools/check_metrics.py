@@ -1,0 +1,198 @@
+#!/usr/bin/env python3
+"""Schema validator for the obs JSON snapshot (`serve --metrics-dump`,
+`report --metrics-dump`, `obs::json_snapshot()`).
+
+Validates, against schema version 1 (the metric-name contract in
+rust/src/serve/mod.rs):
+
+ * top-level shape: `version == 1`, `schema == "h2opus-obs"`, and the
+   required sections `phases`, `kernels`, `batch`, `serve`, `shards`,
+   `histograms`;
+ * every histogram in `histograms`: required fields, bucket lower
+   bounds strictly increasing, bucket counts summing to `count`,
+   percentiles null exactly when empty and ordered p50 <= p95 <= p99
+   when present;
+ * counters are non-negative numbers; nullable ratios
+   (`batching_efficiency`, `mean_wave_width`, `imbalance`) are numbers
+   or null, never NaN strings.
+
+Exit status 0 = valid, 1 = findings, 2 = unreadable input.
+
+    python3 tools/check_metrics.py target/ci-metrics.json
+"""
+
+import json
+import sys
+
+EXPECTED_HISTS = [
+    "request_wait_ns",
+    "panel_exec_ns",
+    "factor_load_owned_ns",
+    "factor_load_mapped_ns",
+    "pcg_iters",
+    "wave_exec_ns",
+]
+
+SHARD_ERROR_CLASSES = [
+    "parse", "unknown_worker", "duplicate_worker", "last_worker", "store",
+]
+
+findings = []
+
+
+def fail(msg):
+    findings.append(msg)
+
+
+def is_count(v):
+    return isinstance(v, (int, float)) and not isinstance(v, bool) and v >= 0
+
+
+def check_ratio(obj, section, key):
+    v = obj.get(key, "missing")
+    if v is None:
+        return
+    if not isinstance(v, (int, float)) or isinstance(v, bool):
+        fail(f"{section}.{key}: expected number or null, got {v!r}")
+
+
+def check_hist(name, h):
+    where = f"histograms.{name}"
+    if not isinstance(h, dict):
+        fail(f"{where}: not an object")
+        return
+    for key in ("count", "sum", "mean", "p50", "p95", "p99", "buckets"):
+        if key not in h:
+            fail(f"{where}: missing field {key}")
+            return
+    if not is_count(h["count"]) or not is_count(h["sum"]):
+        fail(f"{where}: count/sum must be non-negative numbers")
+        return
+    buckets = h["buckets"]
+    if not isinstance(buckets, list):
+        fail(f"{where}: buckets is not a list")
+        return
+    total = 0
+    prev_lower = -1
+    for i, b in enumerate(buckets):
+        if (not isinstance(b, list) or len(b) != 2
+                or not is_count(b[0]) or not is_count(b[1]) or b[1] == 0):
+            fail(f"{where}: bucket {i} is not a [lower, count>0] pair")
+            return
+        if b[0] <= prev_lower:
+            fail(f"{where}: bucket lower bounds not strictly increasing "
+                 f"at index {i}")
+            return
+        prev_lower = b[0]
+        total += b[1]
+    if total != h["count"]:
+        fail(f"{where}: bucket counts sum to {total} but count is "
+             f"{h['count']}")
+    empty = h["count"] == 0
+    pcts = [h["p50"], h["p95"], h["p99"]]
+    if empty:
+        for tag, p in zip(("p50", "p95", "p99"), pcts):
+            if p is not None:
+                fail(f"{where}: empty histogram must have null {tag}")
+        if h["mean"] is not None:
+            fail(f"{where}: empty histogram must have null mean")
+    else:
+        for tag, p in zip(("p50", "p95", "p99"), pcts):
+            if not is_count(p):
+                fail(f"{where}: {tag} must be a number when count > 0")
+                return
+        if not (pcts[0] <= pcts[1] <= pcts[2]):
+            fail(f"{where}: percentiles not ordered: {pcts}")
+
+
+def check(doc):
+    if not isinstance(doc, dict):
+        fail("top level is not an object")
+        return
+    if doc.get("version") != 1:
+        fail(f"version: expected 1, got {doc.get('version')!r}")
+    if doc.get("schema") != "h2opus-obs":
+        fail(f"schema: expected 'h2opus-obs', got {doc.get('schema')!r}")
+    for section in ("phases", "kernels", "batch", "serve", "shards",
+                    "histograms"):
+        if not isinstance(doc.get(section), dict):
+            fail(f"missing or non-object section: {section}")
+    if findings:
+        return
+
+    for name, p in doc["phases"].items():
+        if not (isinstance(p, dict) and is_count(p.get("nanos"))
+                and is_count(p.get("flops"))):
+            fail(f"phases.{name}: expected {{nanos, flops}} counters")
+
+    kern = doc["kernels"]
+    if not isinstance(kern.get("calls"), dict):
+        fail("kernels.calls: missing")
+    else:
+        for name, k in kern["calls"].items():
+            if not (isinstance(k, dict) and is_count(k.get("f64_calls"))
+                    and is_count(k.get("mixed_calls"))):
+                fail(f"kernels.calls.{name}: expected f64/mixed call counts")
+    if not is_count(kern.get("f32_bytes_saved")):
+        fail("kernels.f32_bytes_saved: expected a non-negative number")
+
+    batch = doc["batch"]
+    for key in ("waves", "ops", "flops"):
+        if not is_count(batch.get(key)):
+            fail(f"batch.{key}: expected a non-negative number")
+    check_ratio(batch, "batch", "mean_wave_width")
+
+    serve = doc["serve"]
+    for key in ("requests", "batches", "nanos", "rejected"):
+        if not is_count(serve.get(key)):
+            fail(f"serve.{key}: expected a non-negative number")
+    check_ratio(serve, "serve", "batching_efficiency")
+
+    shards = doc["shards"]
+    routed = shards.get("routed")
+    if not (isinstance(routed, list) and all(is_count(c) for c in routed)):
+        fail("shards.routed: expected a list of counters")
+    for key in ("rebalances", "moved_shards"):
+        if not is_count(shards.get(key)):
+            fail(f"shards.{key}: expected a non-negative number")
+    check_ratio(shards, "shards", "imbalance")
+    errors = shards.get("errors")
+    if not isinstance(errors, dict):
+        fail("shards.errors: missing")
+    else:
+        for cls in SHARD_ERROR_CLASSES:
+            if not is_count(errors.get(cls)):
+                fail(f"shards.errors.{cls}: expected a non-negative number")
+
+    hists = doc["histograms"]
+    for name in EXPECTED_HISTS:
+        if name not in hists:
+            fail(f"histograms: missing {name}")
+    for name, h in hists.items():
+        check_hist(name, h)
+
+
+def main(argv):
+    if len(argv) != 2:
+        print(__doc__.strip().splitlines()[0])
+        print(f"usage: {argv[0]} SNAPSHOT.json")
+        return 2
+    try:
+        with open(argv[1], encoding="utf-8") as fh:
+            doc = json.load(fh)
+    except (OSError, ValueError) as e:
+        print(f"{argv[1]}: cannot read/parse: {e}")
+        return 2
+    check(doc)
+    if findings:
+        print(f"{argv[1]}: {len(findings)} finding(s):")
+        for f in findings:
+            print("  " + f)
+        return 1
+    n_hists = len(doc.get("histograms", {}))
+    print(f"{argv[1]}: valid h2opus-obs snapshot v1 ({n_hists} histograms)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv))

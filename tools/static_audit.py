@@ -23,7 +23,11 @@ Checks, in increasing order of cleverness:
     a `#[cfg(target_arch = ...)]`-gated module (or carries the cfg
     itself), AVX-512 variants carry `#[cfg(feature = "avx512")]`, and
     the fn is only referenced from the file that defines it — all
-    callers must go through the runtime dispatch table in simd.rs.
+    callers must go through the runtime dispatch table in simd.rs;
+ 9. error observability: every variant of `serve/`'s error enums
+    (`ServeError`, `ShardError`) is matched inside its dedicated
+    obs-mapping fn (`reject_reason`, `shard_error_class`), so no error
+    path can be added without a counter or flight-recorder event.
 
 Exit status 0 = clean, 1 = findings. Run from the repo root:
 
@@ -512,6 +516,76 @@ def check_simd_hygiene(all_files):
                      f"dispatch table in {os.path.relpath(home, ROOT)}")
 
 
+# ------------------------------------------- serve error observability
+
+
+# (enum, mapping fn): the fn must match every variant of the enum, so
+# that each error constructed in serve/ lands in a counter or a
+# flight-recorder event (obs::RejectReason / obs::ShardErrorClass).
+ERROR_MAPPINGS = [
+    ("ServeError", "reject_reason"),
+    ("ShardError", "shard_error_class"),
+]
+
+
+def enum_variants(stripped, enum_name):
+    """Variant names of `enum enum_name` in stripped source, or None."""
+    m = re.search(r"\benum\s+" + enum_name + r"\b[^{;]*\{", stripped)
+    if not m:
+        return None
+    body, _ = body_span(stripped, m.end() - 1)
+    variants = []
+    depth = 0
+    item = ""
+    for c in body + ",":
+        if c in "{([":
+            depth += 1
+        elif c in "})]":
+            depth -= 1
+        if c == "," and depth == 0:
+            vm = re.match(r"\s*(?:#\[[^\]]*\]\s*)*([A-Za-z_]\w*)", item)
+            if vm:
+                variants.append(vm.group(1))
+            item = ""
+        else:
+            item += c
+    return variants
+
+
+def check_error_observability(src):
+    serve_files = {p: s for p, s in src.items()
+                   if os.sep + "serve" + os.sep in p}
+    for enum_name, fn_name in ERROR_MAPPINGS:
+        variants = enum_path = None
+        fn_body = fn_path = None
+        fn_line = 1
+        for path, stripped in serve_files.items():
+            if variants is None:
+                v = enum_variants(stripped, enum_name)
+                if v is not None:
+                    variants, enum_path = v, path
+            if fn_body is None:
+                fm = re.search(r"\bfn\s+" + fn_name + r"\s*\(", stripped)
+                if fm:
+                    open_idx = stripped.find("{", fm.end())
+                    if open_idx != -1:
+                        fn_body, _ = body_span(stripped, open_idx)
+                        fn_path = path
+                        fn_line = stripped.count("\n", 0, fm.start()) + 1
+        if variants is None:
+            continue  # enum gone: nothing to map
+        if fn_body is None:
+            warn(enum_path, 1,
+                 f"enum {enum_name} has no `fn {fn_name}` mapping its "
+                 f"variants to obs counters/events")
+            continue
+        for v in variants:
+            if not re.search(enum_name + r"\s*::\s*" + v + r"\b", fn_body):
+                warn(fn_path, fn_line,
+                     f"{fn_name}: {enum_name}::{v} is not mapped to a "
+                     f"counter or flight-recorder event")
+
+
 # --------------------------------------------------------- clippy classes
 
 
@@ -566,6 +640,7 @@ def main():
     syms = collect_pub_symbols(src)
     check_imports(stripped, syms)
     check_simd_hygiene(stripped)
+    check_error_observability(src)
 
     if findings:
         print(f"{len(findings)} finding(s):")
