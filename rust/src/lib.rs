@@ -72,6 +72,7 @@ pub mod profile;
 pub mod runtime;
 pub mod serve;
 pub mod solve;
+pub mod testing;
 pub mod tlr;
 
 pub use linalg::matrix::Matrix;

@@ -270,6 +270,58 @@ impl From<Vec<f64>> for TileStorage {
     }
 }
 
+// ------------------------------------------------- kani proof harnesses
+
+/// Bounded model-checking harnesses (`cargo kani`, tier 2 of
+/// docs/verification.md), compiled only under `cfg(kani)`.
+#[cfg(kani)]
+mod kani_proofs {
+    use super::*;
+
+    struct VecMapping(Vec<f64>);
+
+    impl Mapping for VecMapping {
+        fn as_f64(&self) -> &[f64] {
+            &self.0
+        }
+    }
+
+    /// Copy-on-write promotion never aliases: for any in-bounds view of
+    /// any small mapping, `make_mut` yields an owned buffer that (a)
+    /// holds exactly the viewed values, (b) lives at a different
+    /// address than the mapping, and (c) leaves the mapped source
+    /// bit-identical — so no write through the promoted buffer can
+    /// ever reach the shared mapping.
+    #[kani::proof]
+    #[kani::unwind(6)]
+    fn make_mut_promotion_never_aliases_the_mapping() {
+        const TOTAL: usize = 4;
+        let mut vals = [0.0f64; TOTAL];
+        for v in vals.iter_mut() {
+            *v = f64::from_bits(kani::any());
+        }
+        let base: Arc<dyn Mapping> = Arc::new(VecMapping(vals.to_vec()));
+        let off: usize = kani::any();
+        let len: usize = kani::any();
+        kani::assume(off <= TOTAL && len <= TOTAL - off && len >= 1);
+        let mut st = TileStorage::Mapped(MappedSlice::new(base.clone(), off, len));
+        let src_ptr = base.as_f64().as_ptr() as usize;
+        let owned = st.make_mut();
+        assert!(owned.len() == len);
+        let owned_ptr = owned.as_ptr() as usize;
+        // Disjoint address ranges: the owned buffer cannot overlap the
+        // TOTAL-f64 mapping.
+        assert!(
+            owned_ptr >= src_ptr + TOTAL * 8 || owned_ptr + len * 8 <= src_ptr
+        );
+        // Values copied bit-exactly, source untouched.
+        for i in 0..len {
+            assert!(owned[i].to_bits() == base.as_f64()[off + i].to_bits());
+        }
+        assert!(!st.is_mapped());
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

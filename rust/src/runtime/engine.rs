@@ -90,6 +90,9 @@ pub struct PjrtEngine {
     stats: Mutex<EngineStats>,
 }
 
+// SAFETY (both impls): the opaque C pointers live inside `Inner`, and
+// every access to `Inner` is serialized behind the `Mutex` above; the
+// PJRT CPU client is itself documented thread-safe. See the type docs.
 unsafe impl Send for PjrtEngine {}
 unsafe impl Sync for PjrtEngine {}
 

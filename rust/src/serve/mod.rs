@@ -71,6 +71,11 @@
 //!    constructed; truncated or bit-flipped files produce a typed
 //!    [`StoreError`], never a panic or a wild allocation.
 //!
+//! How these contracts are *checked* — property tests with shrinking
+//! over arbitrary corruptions and arrival orders, `cargo kani` proof
+//! harnesses for the frame/shard/storage kernels, and the unsafe-
+//! hygiene static audit — is documented in `docs/verification.md`.
+//!
 //! ## Example
 //!
 //! Serve direct solves and PCG requests from a persisted factor:

@@ -730,6 +730,48 @@ impl ShardedService {
     }
 }
 
+// ------------------------------------------------- kani proof harnesses
+
+/// Bounded model-checking harnesses (`cargo kani`, tier 2 of
+/// docs/verification.md), compiled only under `cfg(kani)`. The input
+/// length bound keeps the declarable shard count small enough to
+/// unwind; the parse grammar itself is length-independent.
+#[cfg(kani)]
+mod kani_proofs {
+    use super::*;
+
+    /// `ShardMap::decode` is total over arbitrary bytes: any input
+    /// either fails UTF-8 validation, returns a typed `ShardError`, or
+    /// yields a map whose shard count is within `1..=MAX_SHARDS` and
+    /// whose owner table is total (every shard owned by a listed
+    /// worker) — never a panic, never an out-of-bounds owner index.
+    #[kani::proof]
+    #[kani::unwind(101)]
+    fn decode_errors_or_yields_total_owner_table() {
+        // 32 bytes fit "shardmap v1\nshards NN\nworker a", so decode
+        // can succeed with up to 99 shards — large enough to exercise
+        // the owner-table computation, small enough to unwind.
+        const MAX_LEN: usize = 32;
+        let len: usize = kani::any();
+        kani::assume(len <= MAX_LEN);
+        let mut bytes = [0u8; MAX_LEN];
+        for b in bytes.iter_mut() {
+            *b = kani::any();
+        }
+        let Ok(text) = std::str::from_utf8(&bytes[..len]) else {
+            return;
+        };
+        if let Ok(map) = ShardMap::decode(text) {
+            assert!(map.n_shards() >= 1 && map.n_shards() <= MAX_SHARDS);
+            assert!(!map.workers().is_empty());
+            let shard: usize = kani::any();
+            kani::assume(shard < map.n_shards());
+            let owner = map.owner_of_shard(shard);
+            assert!(map.workers().iter().any(|w| w == owner));
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -155,12 +155,16 @@ impl<'a> HeaderReader<'a> {
         HeaderReader { buf, pos: 0 }
     }
     fn u64(&mut self) -> Result<u64, StoreError> {
-        if self.pos + 8 > self.buf.len() {
-            return format_err("truncated header");
-        }
+        // `pos` is internally maintained (≤ len by construction), but
+        // the bound is still computed checked so no future caller can
+        // turn a large position into a wrapped comparison.
+        let end = match self.pos.checked_add(8) {
+            Some(e) if e <= self.buf.len() => e,
+            _ => return format_err("truncated header"),
+        };
         let mut b = [0u8; 8];
-        b.copy_from_slice(&self.buf[self.pos..self.pos + 8]);
-        self.pos += 8;
+        b.copy_from_slice(&self.buf[self.pos..end]);
+        self.pos = end;
         Ok(u64::from_le_bytes(b))
     }
     fn usize(&mut self) -> Result<usize, StoreError> {
@@ -168,7 +172,7 @@ impl<'a> HeaderReader<'a> {
     }
     /// `u64` values left to read.
     fn remaining_u64s(&self) -> usize {
-        (self.buf.len() - self.pos) / 8
+        self.buf.len().saturating_sub(self.pos) / 8
     }
     fn done(&self) -> Result<(), StoreError> {
         if self.pos != self.buf.len() {
@@ -321,6 +325,13 @@ fn mul_guard(a: usize, b: usize) -> Result<usize, StoreError> {
         .ok_or_else(|| StoreError::Format("tile payload size overflows usize".into()))
 }
 
+/// Overflow-guarded `a + b` for payload offset arithmetic — same
+/// contract as [`mul_guard`]: untrusted sizes error, never wrap.
+fn add_guard(a: usize, b: usize) -> Result<usize, StoreError> {
+    a.checked_add(b)
+        .ok_or_else(|| StoreError::Format("payload offset overflows usize".into()))
+}
+
 /// Sequential allocator of tile payload chunks. One implementation
 /// copies out of a decoded payload vector ([`Taker::Owned`] — the
 /// classic `load`/`decode` path); the other hands out zero-copy
@@ -335,9 +346,12 @@ enum Taker<'a> {
 
 impl Taker<'_> {
     fn remaining(&self) -> usize {
+        // `pos` never exceeds the length by construction; saturate
+        // anyway so the bound degrades to "nothing left" rather than a
+        // wrapped huge count if that invariant is ever broken.
         match self {
-            Taker::Owned { payload, pos } => payload.len() - *pos,
-            Taker::Mapped { len, pos, .. } => *len - *pos,
+            Taker::Owned { payload, pos } => payload.len().saturating_sub(*pos),
+            Taker::Mapped { len, pos, .. } => len.saturating_sub(*pos),
         }
     }
 
@@ -347,12 +361,14 @@ impl Taker<'_> {
         }
         match self {
             Taker::Owned { payload, pos } => {
-                let v = payload[*pos..*pos + count].to_vec();
-                *pos += count;
+                let end = add_guard(*pos, count)?;
+                let v = payload[*pos..end].to_vec();
+                *pos = end;
                 Ok(TileStorage::Owned(v))
             }
             Taker::Mapped { base, start, pos, .. } => {
-                let s = MappedSlice::new(base.clone(), *start + *pos, count);
+                let off = add_guard(*start, *pos)?;
+                let s = MappedSlice::new(base.clone(), off, count);
                 *pos += count;
                 Ok(TileStorage::Mapped(s))
             }
@@ -372,18 +388,20 @@ impl Taker<'_> {
         }
         match self {
             Taker::Owned { payload, pos } => {
-                let mut v = Vec::with_capacity(words * 2);
-                for &w in &payload[*pos..*pos + words] {
+                let end = add_guard(*pos, words)?;
+                let mut v = Vec::with_capacity(mul_guard(words, 2)?);
+                for &w in &payload[*pos..end] {
                     let bits = w.to_bits();
                     v.push(f32::from_bits(bits as u32));
                     v.push(f32::from_bits((bits >> 32) as u32));
                 }
                 v.truncate(count);
-                *pos += words;
+                *pos = end;
                 Ok(Storage32::Owned(v))
             }
             Taker::Mapped { base, start, pos, .. } => {
-                let s = MappedSlice32::new(base.clone(), 2 * (*start + *pos), count);
+                let off = mul_guard(2, add_guard(*start, *pos)?)?;
+                let s = MappedSlice32::new(base.clone(), off, count);
                 *pos += words;
                 Ok(Storage32::Mapped(s))
             }
@@ -1010,6 +1028,67 @@ impl FactorStore {
         }
         out.sort_unstable();
         Ok(out)
+    }
+}
+
+// ------------------------------------------------- kani proof harnesses
+
+/// Bounded model-checking harnesses (`cargo kani`, tier 2 of
+/// docs/verification.md). Compiled only under `cfg(kani)` so tier-1
+/// builds and tests never see them; Kani itself checks every slice
+/// index, add and multiply on the exercised paths for out-of-bounds
+/// and overflow in addition to the explicit assertions here.
+#[cfg(kani)]
+mod kani_proofs {
+    use super::*;
+
+    /// Frame header validation is total: for ANY byte string (up to 64
+    /// bytes — enough to cover the whole prefix grammar plus spill),
+    /// `unframe_ref` returns `Ok` or a typed error, never reads out of
+    /// bounds and never overflows, and an `Ok` frame's declared
+    /// regions exactly tile the input.
+    #[kani::proof]
+    #[kani::unwind(66)]
+    fn frame_validation_never_oob_or_overflows() {
+        const MAX_LEN: usize = 64;
+        let len: usize = kani::any();
+        kani::assume(len <= MAX_LEN);
+        let mut bytes = [0u8; MAX_LEN];
+        for b in bytes.iter_mut() {
+            *b = kani::any();
+        }
+        let want_kind: u32 = kani::any();
+        kani::assume(want_kind <= KIND_LDL);
+        if let Ok(fr) = unframe_ref(&bytes[..len], want_kind) {
+            assert!(fr.payload_offset % 8 == 0);
+            assert!(fr.payload_offset == 40 + fr.header.len());
+            assert!(40 + fr.header.len() + fr.payload_bytes.len() == len);
+            assert!(fr.payload_bytes.len() == fr.payload_len * 8);
+            assert!((MIN_VERSION..=VERSION).contains(&fr.version));
+        }
+    }
+
+    /// TLR header decoding is total over arbitrary header words: every
+    /// `nb`-derived size is overflow-checked before any allocation, so
+    /// the reader errors (or succeeds within bounds) on ANY input.
+    #[kani::proof]
+    #[kani::unwind(70)]
+    fn tlr_header_read_is_total_on_arbitrary_words() {
+        const MAX_BYTES: usize = 64;
+        let len: usize = kani::any();
+        kani::assume(len <= MAX_BYTES);
+        let mut buf = [0u8; MAX_BYTES];
+        for b in buf.iter_mut() {
+            *b = kani::any();
+        }
+        let version: u32 = kani::any();
+        kani::assume((MIN_VERSION..=VERSION).contains(&version));
+        let mut h = HeaderReader::new(&buf[..len]);
+        if let Ok((offsets, tiles)) = read_tlr_header(&mut h, version) {
+            let nb = offsets.len() - 1;
+            assert!(offsets[0] == 0);
+            assert!(tiles.len() == nb * (nb + 1) / 2);
+        }
     }
 }
 

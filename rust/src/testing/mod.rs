@@ -1,0 +1,28 @@
+//! In-tree property-based testing support (the crate is dependency-free
+//! by design, so this stands in for the `proptest` crate).
+//!
+//! Three pieces, mirroring the shape of the real thing closely enough
+//! that the test suites read like ordinary proptest suites:
+//!
+//! * [`proptest::Strategy`] — a generator of random values with
+//!   *shrinking*: when a property fails, the runner walks
+//!   [`proptest::Strategy::shrink`] candidates greedily toward a
+//!   minimal failing value before reporting.
+//! * [`proptest::run_prop`] — the runner. It first replays every seed
+//!   pinned in the suite's committed regression file (see
+//!   `rust/tests/proptest-regressions/`), then sweeps fresh cases from
+//!   a deterministic base seed. Failures print the seed and the line to
+//!   add to the regression file, so every bug ever found stays in the
+//!   suite forever.
+//! * [`strategies`] — reusable combinators (integer ranges, vectors,
+//!   pairs) that the test binaries compose with their own domain
+//!   strategies (frame corruptions, shard-map mutation sequences,
+//!   mixed-precision batch plans).
+//!
+//! Determinism: all randomness flows from [`crate::linalg::rng::Rng`]
+//! seeded by a fixed base (overridable with `H2OPUS_PROPTEST_SEED`);
+//! case count defaults to 48 per property (`H2OPUS_PROPTEST_CASES`).
+//! CI's `verify` job runs an extended sweep; see docs/verification.md.
+
+pub mod proptest;
+pub mod strategies;

@@ -1,0 +1,277 @@
+//! The property-test runner: strategies, shrinking, and pinned
+//! regression seeds.
+//!
+//! A property is a function `Fn(&Value) -> Result<(), String>`; `Err`
+//! is a counterexample. The runner generates values from a
+//! [`Strategy`], and on failure repeatedly replaces the failing value
+//! with the first *still-failing* candidate from
+//! [`Strategy::shrink`] until no candidate fails (greedy descent,
+//! step-bounded). The panic message carries the originating seed and
+//! the exact line to append to the suite's regression file, which the
+//! runner replays before any fresh generation — a found bug can never
+//! silently regress.
+
+use crate::linalg::rng::Rng;
+
+/// A generator of random test values with optional shrinking.
+pub trait Strategy {
+    /// The generated value type.
+    type Value: Clone + std::fmt::Debug;
+
+    /// Produce one value from the RNG stream.
+    fn generate(&self, rng: &mut Rng) -> Self::Value;
+
+    /// Candidate simplifications of `value`, "smaller" first. The
+    /// default (no candidates) disables shrinking for this strategy.
+    fn shrink(&self, value: &Self::Value) -> Vec<Self::Value> {
+        let _ = value;
+        Vec::new()
+    }
+}
+
+/// Runner knobs. [`Config::default`] reads `H2OPUS_PROPTEST_CASES`
+/// (fresh cases per property, default 48) so CI's `verify` job can run
+/// an extended sweep without code changes.
+#[derive(Clone, Copy, Debug)]
+pub struct Config {
+    /// Fresh generated cases per property (pinned regression seeds
+    /// always replay in addition).
+    pub cases: usize,
+    /// Upper bound on property evaluations spent shrinking a failure.
+    pub max_shrink_steps: usize,
+}
+
+impl Default for Config {
+    fn default() -> Config {
+        let cases = std::env::var("H2OPUS_PROPTEST_CASES")
+            .ok()
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(48);
+        Config { cases, max_shrink_steps: 2000 }
+    }
+}
+
+fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+fn parse_seed(s: &str) -> Option<u64> {
+    match s.strip_prefix("0x") {
+        Some(hex) => u64::from_str_radix(hex, 16).ok(),
+        None => s.parse().ok(),
+    }
+}
+
+/// Base seed for fresh generation: fixed for reproducible CI, override
+/// with `H2OPUS_PROPTEST_SEED` (decimal or 0x-hex) to explore.
+fn base_seed() -> u64 {
+    std::env::var("H2OPUS_PROPTEST_SEED")
+        .ok()
+        .and_then(|v| parse_seed(v.trim()))
+        .unwrap_or(0x4832_4f50_5553_2d38) // ASCII "H2OPUS-8"
+}
+
+/// Seeds pinned for `case` in a regression file (the file's full text;
+/// suites pass `include_str!("proptest-regressions/<suite>.txt")`).
+/// Format: one `<case-name> <seed>` pair per line, `#` comments.
+pub fn regression_seeds(case: &str, regressions: &str) -> Vec<u64> {
+    let mut out = Vec::new();
+    for raw in regressions.lines() {
+        let line = raw.split('#').next().unwrap_or("").trim();
+        if line.is_empty() {
+            continue;
+        }
+        let mut it = line.split_whitespace();
+        let (Some(name), Some(seed)) = (it.next(), it.next()) else {
+            continue;
+        };
+        if name != case {
+            continue;
+        }
+        match parse_seed(seed) {
+            Some(v) => out.push(v),
+            None => panic!("regression file: bad seed `{seed}` for case `{case}`"),
+        }
+    }
+    out
+}
+
+/// Run `prop` against values of `strategy`: replay pinned regression
+/// seeds, then sweep [`Config::default`] fresh cases. Panics (with the
+/// shrunk counterexample and the regression line to pin) on failure.
+pub fn run_prop<S: Strategy>(
+    case: &str,
+    regressions: &str,
+    strategy: &S,
+    prop: impl Fn(&S::Value) -> Result<(), String>,
+) {
+    run_prop_with(Config::default(), case, regressions, strategy, prop)
+}
+
+/// [`run_prop`] with explicit knobs (expensive properties pass a small
+/// `cases` so wall-clock stays bounded).
+pub fn run_prop_with<S: Strategy>(
+    cfg: Config,
+    case: &str,
+    regressions: &str,
+    strategy: &S,
+    prop: impl Fn(&S::Value) -> Result<(), String>,
+) {
+    for seed in regression_seeds(case, regressions) {
+        run_one(cfg, case, strategy, &prop, seed, true);
+    }
+    let base = base_seed() ^ fnv1a(case.as_bytes());
+    for i in 0..cfg.cases {
+        run_one(cfg, case, strategy, &prop, base.wrapping_add(i as u64), false);
+    }
+}
+
+fn run_one<S: Strategy>(
+    cfg: Config,
+    case: &str,
+    strategy: &S,
+    prop: &impl Fn(&S::Value) -> Result<(), String>,
+    seed: u64,
+    pinned: bool,
+) {
+    let mut rng = Rng::new(seed);
+    let value = strategy.generate(&mut rng);
+    let Err(first_err) = prop(&value) else {
+        return;
+    };
+    // Greedy shrink: move to the first still-failing candidate, repeat
+    // until every candidate passes or the step budget runs out.
+    let mut cur = value;
+    let mut cur_err = first_err;
+    let mut steps = 0usize;
+    'descend: while steps < cfg.max_shrink_steps {
+        for cand in strategy.shrink(&cur) {
+            steps += 1;
+            if let Err(e) = prop(&cand) {
+                cur = cand;
+                cur_err = e;
+                continue 'descend;
+            }
+            if steps >= cfg.max_shrink_steps {
+                break;
+            }
+        }
+        break;
+    }
+    let origin = if pinned { "pinned regression" } else { "generated" };
+    panic!(
+        "proptest case `{case}` failed ({origin} seed 0x{seed:016x}, \
+         {steps} shrink steps)\nminimal failing value: {cur:?}\nerror: \
+         {cur_err}\npin it: add `{case} 0x{seed:016x}` to this suite's \
+         file under rust/tests/proptest-regressions/"
+    );
+}
+
+/// Evaluate `f`, mapping a panic into `Err` — for "errors, never
+/// panics" properties, so the runner can shrink panicking inputs like
+/// any other counterexample. (The default panic hook still prints each
+/// caught panic; that noise only appears once a property is failing.)
+pub fn no_panic<T>(what: &str, f: impl FnOnce() -> T) -> Result<(), String> {
+    match std::panic::catch_unwind(std::panic::AssertUnwindSafe(f)) {
+        Ok(_) => Ok(()),
+        Err(payload) => {
+            let msg = payload
+                .downcast_ref::<&str>()
+                .map(|s| s.to_string())
+                .or_else(|| payload.downcast_ref::<String>().cloned())
+                .unwrap_or_else(|| "non-string panic payload".to_string());
+            Err(format!("{what} panicked: {msg}"))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    struct SmallU64;
+    impl Strategy for SmallU64 {
+        type Value = u64;
+        fn generate(&self, rng: &mut Rng) -> u64 {
+            rng.next_u64() % 1000
+        }
+        fn shrink(&self, v: &u64) -> Vec<u64> {
+            if *v == 0 {
+                Vec::new()
+            } else {
+                vec![0, *v / 2, *v - 1]
+            }
+        }
+    }
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        // The property is `Fn` (not `FnMut`), so count via a Cell.
+        let count = std::cell::Cell::new(0usize);
+        run_prop_with(
+            Config { cases: 17, max_shrink_steps: 10 },
+            "always_true",
+            "",
+            &SmallU64,
+            |_| {
+                count.set(count.get() + 1);
+                Ok(())
+            },
+        );
+        assert_eq!(count.get(), 17);
+    }
+
+    #[test]
+    fn failure_shrinks_to_minimal_counterexample() {
+        let err = std::panic::catch_unwind(|| {
+            run_prop_with(
+                Config { cases: 50, max_shrink_steps: 500 },
+                "ge_100_fails",
+                "",
+                &SmallU64,
+                |v| if *v >= 100 { Err(format!("{v} >= 100")) } else { Ok(()) },
+            );
+        })
+        .expect_err("property must fail");
+        let msg = err.downcast_ref::<String>().expect("string panic");
+        // Greedy descent lands exactly on the boundary value.
+        assert!(
+            msg.contains("minimal failing value: 100"),
+            "not shrunk to 100: {msg}"
+        );
+        assert!(msg.contains("pin it:"), "no pin instructions: {msg}");
+    }
+
+    #[test]
+    fn regression_seeds_replay_before_fresh_cases() {
+        let seen = std::cell::RefCell::new(Vec::new());
+        run_prop_with(
+            Config { cases: 0, max_shrink_steps: 10 },
+            "pinned",
+            "# comment\npinned 0x2a\nother 7\npinned 9\n",
+            &SmallU64,
+            |v| {
+                seen.borrow_mut().push(*v);
+                Ok(())
+            },
+        );
+        // Two pinned seeds for `pinned`, zero fresh cases.
+        assert_eq!(seen.borrow().len(), 2);
+        let a = SmallU64.generate(&mut Rng::new(0x2a));
+        let b = SmallU64.generate(&mut Rng::new(9));
+        assert_eq!(*seen.borrow(), vec![a, b]);
+    }
+
+    #[test]
+    fn no_panic_catches_and_describes() {
+        assert!(no_panic("ok", || 3).is_ok());
+        let e = no_panic("boom", || panic!("blew up")).unwrap_err();
+        assert!(e.contains("boom panicked"), "{e}");
+        assert!(e.contains("blew up"), "{e}");
+    }
+}

@@ -1,0 +1,184 @@
+//! Reusable [`Strategy`](super::proptest::Strategy) combinators.
+//!
+//! Domain strategies (store-frame corruptions, shard-map mutation
+//! sequences, mixed-precision batch plans) live next to the test
+//! binaries that use them; this module holds only the generic shapes
+//! they compose: integer ranges shrinking toward their lower bound,
+//! vectors shrinking by element removal then element shrinking, and
+//! pairs shrinking one side at a time.
+
+use super::proptest::Strategy;
+use crate::linalg::rng::Rng;
+
+/// Uniform `u64` in `[lo, hi]` (inclusive); shrinks toward `lo`.
+#[derive(Clone, Copy, Debug)]
+pub struct U64Range {
+    pub lo: u64,
+    pub hi: u64,
+}
+
+impl Strategy for U64Range {
+    type Value = u64;
+
+    fn generate(&self, rng: &mut Rng) -> u64 {
+        assert!(self.lo <= self.hi);
+        let span = self.hi - self.lo;
+        if span == u64::MAX {
+            rng.next_u64()
+        } else {
+            self.lo + rng.next_u64() % (span + 1)
+        }
+    }
+
+    fn shrink(&self, v: &u64) -> Vec<u64> {
+        let mut out = Vec::new();
+        if *v > self.lo {
+            out.push(self.lo);
+            let mid = self.lo + (*v - self.lo) / 2;
+            if mid != self.lo && mid != *v {
+                out.push(mid);
+            }
+            out.push(*v - 1);
+        }
+        out
+    }
+}
+
+/// Uniform `usize` in `[lo, hi]` (inclusive); shrinks toward `lo`.
+#[derive(Clone, Copy, Debug)]
+pub struct UsizeRange {
+    pub lo: usize,
+    pub hi: usize,
+}
+
+impl Strategy for UsizeRange {
+    type Value = usize;
+
+    fn generate(&self, rng: &mut Rng) -> usize {
+        assert!(self.lo <= self.hi);
+        self.lo + rng.below(self.hi - self.lo + 1)
+    }
+
+    fn shrink(&self, v: &usize) -> Vec<usize> {
+        let mut out = Vec::new();
+        if *v > self.lo {
+            out.push(self.lo);
+            let mid = self.lo + (*v - self.lo) / 2;
+            if mid != self.lo && mid != *v {
+                out.push(mid);
+            }
+            out.push(*v - 1);
+        }
+        out
+    }
+}
+
+/// `min_len..=max_len` values of an element strategy. Shrinks by
+/// halving, dropping single elements, then shrinking elements in
+/// place (bounded so the runner's step budget is spent on progress).
+#[derive(Clone, Copy, Debug)]
+pub struct VecOf<S> {
+    pub elem: S,
+    pub min_len: usize,
+    pub max_len: usize,
+}
+
+impl<S: Strategy> Strategy for VecOf<S> {
+    type Value = Vec<S::Value>;
+
+    fn generate(&self, rng: &mut Rng) -> Vec<S::Value> {
+        assert!(self.min_len <= self.max_len);
+        let len = self.min_len + rng.below(self.max_len - self.min_len + 1);
+        (0..len).map(|_| self.elem.generate(rng)).collect()
+    }
+
+    fn shrink(&self, v: &Self::Value) -> Vec<Self::Value> {
+        let mut out: Vec<Self::Value> = Vec::new();
+        let n = v.len();
+        if n > self.min_len {
+            if n / 2 >= self.min_len {
+                out.push(v[..n / 2].to_vec());
+                out.push(v[n - n / 2..].to_vec());
+            }
+            for i in 0..n {
+                let mut c = v.clone();
+                c.remove(i);
+                out.push(c);
+            }
+        }
+        for i in 0..n.min(16) {
+            for cand in self.elem.shrink(&v[i]) {
+                let mut c = v.clone();
+                c[i] = cand;
+                out.push(c);
+            }
+        }
+        out
+    }
+}
+
+/// A pair of independent strategies; shrinks one side at a time.
+#[derive(Clone, Copy, Debug)]
+pub struct PairOf<A, B>(pub A, pub B);
+
+impl<A: Strategy, B: Strategy> Strategy for PairOf<A, B> {
+    type Value = (A::Value, B::Value);
+
+    fn generate(&self, rng: &mut Rng) -> Self::Value {
+        (self.0.generate(rng), self.1.generate(rng))
+    }
+
+    fn shrink(&self, v: &Self::Value) -> Vec<Self::Value> {
+        let mut out = Vec::new();
+        for a in self.0.shrink(&v.0) {
+            out.push((a, v.1.clone()));
+        }
+        for b in self.1.shrink(&v.1) {
+            out.push((v.0.clone(), b));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ranges_stay_in_bounds_and_shrink_down() {
+        let mut rng = Rng::new(1);
+        let s = U64Range { lo: 10, hi: 20 };
+        for _ in 0..200 {
+            let v = s.generate(&mut rng);
+            assert!((10..=20).contains(&v));
+            for c in s.shrink(&v) {
+                assert!(c < v && c >= 10, "shrink {c} of {v}");
+            }
+        }
+        let full = U64Range { lo: 0, hi: u64::MAX };
+        let _ = full.generate(&mut rng); // span+1 overflow path
+        assert!(s.shrink(&10).is_empty());
+    }
+
+    #[test]
+    fn vec_of_respects_len_and_shrinks_toward_min() {
+        let mut rng = Rng::new(2);
+        let s = VecOf { elem: UsizeRange { lo: 0, hi: 9 }, min_len: 2, max_len: 6 };
+        for _ in 0..100 {
+            let v = s.generate(&mut rng);
+            assert!((2..=6).contains(&v.len()));
+            for c in s.shrink(&v) {
+                assert!(c.len() >= 2, "shrunk below min_len: {c:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn pair_shrinks_one_side_at_a_time() {
+        let s = PairOf(U64Range { lo: 0, hi: 9 }, U64Range { lo: 0, hi: 9 });
+        for (a, b) in s.shrink(&(3, 4)) {
+            assert!((a, b) != (3, 4));
+            assert!(a == 3 || b == 4, "both sides moved: ({a},{b})");
+        }
+    }
+}

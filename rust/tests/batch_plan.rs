@@ -1,12 +1,14 @@
 //! Property tests for the non-uniform batched-GEMM op-stream
-//! (`batch::gemm_batch`), in the seed-sweep style of
-//! `rust/tests/properties.rs` (the vendored crate set has no proptest;
-//! every assertion carries its seed for reproduction).
+//! (`batch::gemm_batch`). The oracle property runs on the in-tree
+//! proptest runner ([`h2opus_tlr::testing`]): plan specs shrink toward
+//! smaller f64-only plans, and failing seeds pin into
+//! `proptest-regressions/batch_plan.txt`.
 //!
 //! Properties:
-//! * any randomly generated `BatchPlan` executed by the parallel
-//!   `NativeBatch` matches the serial naive-oracle `RefBatch` to 1e-13
-//!   (relative);
+//! * any randomly generated `BatchPlan` — including mixed-precision
+//!   plans with f32-stored operands — executed by the parallel
+//!   `NativeBatch` matches the serial naive-oracle `RefBatch` (which
+//!   widens f32 exactly) to 1e-13 (relative);
 //! * wave grouping never reorders dependent ops (RAW/WAR/WAW pairs land
 //!   in strictly increasing waves, ops within a wave keep program
 //!   order);
@@ -15,15 +17,21 @@
 
 use h2opus_tlr::batch::{Arg, BatchOp, NativeBatch, RefBatch, SampleChain, StreamBuilder};
 use h2opus_tlr::linalg::gemm::{matmul, matmul_tn, Trans};
+use h2opus_tlr::linalg::matrix32::MatrixF32;
 use h2opus_tlr::linalg::rng::Rng;
+use h2opus_tlr::testing::proptest::{no_panic, run_prop, Strategy};
 use h2opus_tlr::Matrix;
+
+/// Pinned counterexample seeds, replayed before any fresh generation.
+const REGRESSIONS: &str = include_str!("proptest-regressions/batch_plan.txt");
 
 const SEEDS: std::ops::Range<u64> = 0..24;
 
-/// Symbolic operand: a fresh input of the given shape, or an existing
-/// output slot (creates a dependency edge).
+/// Symbolic operand: a fresh input of the given shape (f64- or
+/// f32-stored), or an existing output slot (creates a dependency edge).
 enum Operand {
     NewInput(usize, usize),
+    NewInput32(usize, usize),
     Existing(usize),
 }
 
@@ -45,9 +53,15 @@ enum StepDesc {
 
 /// Generate a random valid stream description: random shapes, random
 /// transposes, slot reuse for accumulation chains, operand reuse for
-/// read-after-write chains, occasional row scalings.
-fn random_description(rng: &mut Rng) -> (Vec<(usize, usize)>, Vec<StepDesc>) {
-    let n_ops = 1 + rng.below(36);
+/// read-after-write chains, occasional row scalings. With `mixed`,
+/// roughly a third of fresh operands are f32-stored, exercising the
+/// widening mixed-precision kernel paths.
+fn random_description_with(
+    rng: &mut Rng,
+    mixed: bool,
+    max_ops: usize,
+) -> (Vec<(usize, usize)>, Vec<StepDesc>) {
+    let n_ops = 1 + rng.below(max_ops);
     let mut out_shapes: Vec<(usize, usize)> = Vec::new();
     let mut steps: Vec<StepDesc> = Vec::new();
     let dim = |rng: &mut Rng| 1 + rng.below(12);
@@ -85,7 +99,11 @@ fn random_description(rng: &mut Rng) -> (Vec<(usize, usize)>, Vec<StepDesc>) {
                     return Operand::Existing(candidates[rng.below(candidates.len())]);
                 }
             }
-            Operand::NewInput(shape.0, shape.1)
+            if mixed && rng.uniform() < 0.35 {
+                Operand::NewInput32(shape.0, shape.1)
+            } else {
+                Operand::NewInput(shape.0, shape.1)
+            }
         };
         let a = pick(rng, a_shape, &out_shapes);
         let b = pick(rng, b_shape, &out_shapes);
@@ -100,49 +118,60 @@ fn random_description(rng: &mut Rng) -> (Vec<(usize, usize)>, Vec<StepDesc>) {
     (out_shapes, steps)
 }
 
-/// Materialize the description: allocate input matrices, build the
-/// stream, and return it alongside its backing storage.
-fn build_inputs(rng: &mut Rng, steps: &[StepDesc]) -> Vec<Matrix> {
+fn random_description(rng: &mut Rng) -> (Vec<(usize, usize)>, Vec<StepDesc>) {
+    random_description_with(rng, false, 36)
+}
+
+/// Materialize the description: allocate input matrices (f64 and
+/// f32-stored in description order), build the stream, and return it
+/// alongside its backing storage.
+fn build_inputs(rng: &mut Rng, steps: &[StepDesc]) -> (Vec<Matrix>, Vec<MatrixF32>) {
     let mut inputs = Vec::new();
+    let mut inputs32 = Vec::new();
     for step in steps {
         if let StepDesc::Gemm(g) = step {
             for op in [&g.a, &g.b] {
-                if let Operand::NewInput(r, c) = op {
-                    inputs.push(rng.normal_matrix(*r, *c));
+                match op {
+                    Operand::NewInput(r, c) => inputs.push(rng.normal_matrix(*r, *c)),
+                    Operand::NewInput32(r, c) => {
+                        inputs32.push(MatrixF32::from_f64(&rng.normal_matrix(*r, *c)))
+                    }
+                    Operand::Existing(_) => {}
                 }
             }
         }
     }
-    inputs
+    (inputs, inputs32)
 }
 
 fn build_stream<'a>(
     out_shapes: &[(usize, usize)],
     steps: &'a [StepDesc],
     inputs: &'a [Matrix],
+    inputs32: &'a [MatrixF32],
 ) -> h2opus_tlr::batch::GemmStream<'a> {
     let mut sb = StreamBuilder::new();
     let slots: Vec<usize> = out_shapes.iter().map(|&(r, c)| sb.output(r, c)).collect();
     let mut next_input = 0;
+    let mut next_input32 = 0;
     for step in steps {
         match step {
             StepDesc::Gemm(g) => {
-                let a = match &g.a {
+                let mut resolve = |op: &Operand| match op {
                     Operand::NewInput(..) => {
                         let arg = sb.input(&inputs[next_input]);
                         next_input += 1;
                         arg
                     }
-                    Operand::Existing(s) => Arg::Out(slots[*s]),
-                };
-                let b = match &g.b {
-                    Operand::NewInput(..) => {
-                        let arg = sb.input(&inputs[next_input]);
-                        next_input += 1;
+                    Operand::NewInput32(..) => {
+                        let arg = sb.input32(&inputs32[next_input32]);
+                        next_input32 += 1;
                         arg
                     }
                     Operand::Existing(s) => Arg::Out(slots[*s]),
                 };
+                let a = resolve(&g.a);
+                let b = resolve(&g.b);
                 sb.gemm(g.ta, g.tb, g.alpha, a, b, g.beta, slots[g.dst]);
             }
             StepDesc::Scale { dst, d } => sb.scale_rows(slots[*dst], d),
@@ -158,21 +187,58 @@ fn assert_close(a: &Matrix, b: &Matrix, tol: f64, ctx: &str) {
     assert!(diff <= tol * scale, "{ctx}: diff {diff} > {tol} * {scale}");
 }
 
+/// A whole plan scenario for the proptest runner: the plan is rebuilt
+/// from `seed` inside the property. Shrinks toward smaller, f64-only
+/// plans (a smaller `max_ops` regenerates a smaller plan from the
+/// same seed — not a sub-plan, but usually still failing when the bug
+/// is generic).
+#[derive(Clone, Debug)]
+struct PlanSpec {
+    seed: u64,
+    mixed: bool,
+    max_ops: usize,
+}
+
+struct PlanSpecStrategy;
+impl Strategy for PlanSpecStrategy {
+    type Value = PlanSpec;
+    fn generate(&self, rng: &mut Rng) -> PlanSpec {
+        PlanSpec { seed: rng.next_u64(), mixed: rng.uniform() < 0.6, max_ops: 36 }
+    }
+    fn shrink(&self, v: &PlanSpec) -> Vec<PlanSpec> {
+        let mut out = Vec::new();
+        if v.mixed {
+            out.push(PlanSpec { mixed: false, ..v.clone() });
+        }
+        if v.max_ops > 1 {
+            out.push(PlanSpec { max_ops: v.max_ops / 2, ..v.clone() });
+            out.push(PlanSpec { max_ops: 1, ..v.clone() });
+        }
+        out
+    }
+}
+
+/// The tier-1 oracle property: any plan — mixed-precision included —
+/// executes identically (to f64 roundoff) on the parallel native
+/// executor and the serial widening oracle.
 #[test]
 fn prop_native_matches_oracle_on_random_plans() {
-    for seed in SEEDS {
-        let mut rng = Rng::new(0xBA7C4 + seed);
-        let (out_shapes, steps) = random_description(&mut rng);
-        let inputs = build_inputs(&mut rng, &steps);
-        let stream = build_stream(&out_shapes, &steps, &inputs);
-        stream.plan().assert_valid();
+    run_prop("native_vs_oracle", REGRESSIONS, &PlanSpecStrategy, |spec| {
+        let mut rng = Rng::new(spec.seed);
+        let (out_shapes, steps) = random_description_with(&mut rng, spec.mixed, spec.max_ops);
+        let (inputs, inputs32) = build_inputs(&mut rng, &steps);
+        let stream = build_stream(&out_shapes, &steps, &inputs, &inputs32);
+        no_panic("plan validity", || stream.plan().assert_valid())?;
         let native = stream.execute(&NativeBatch::new());
         let oracle = stream.execute(&RefBatch);
-        assert_eq!(native.len(), oracle.len(), "seed={seed}");
-        for (s, (nv, ov)) in native.iter().zip(&oracle).enumerate() {
-            assert_close(nv, ov, 1e-13, &format!("seed={seed} slot={s}"));
+        if native.len() != oracle.len() {
+            return Err(format!("slot counts differ: {} vs {}", native.len(), oracle.len()));
         }
-    }
+        for (s, (nv, ov)) in native.iter().zip(&oracle).enumerate() {
+            no_panic("native/oracle compare", || assert_close(nv, ov, 1e-13, &format!("slot={s}")))?;
+        }
+        Ok(())
+    });
 }
 
 #[test]
@@ -180,8 +246,8 @@ fn prop_waves_never_reorder_dependent_ops() {
     for seed in SEEDS {
         let mut rng = Rng::new(0x3A7E5 + seed);
         let (out_shapes, steps) = random_description(&mut rng);
-        let inputs = build_inputs(&mut rng, &steps);
-        let stream = build_stream(&out_shapes, &steps, &inputs);
+        let (inputs, inputs32) = build_inputs(&mut rng, &steps);
+        let stream = build_stream(&out_shapes, &steps, &inputs, &inputs32);
         let plan = stream.plan();
         // The plan's own invariant check re-derives RAW/WAR/WAW edges.
         plan.assert_valid();

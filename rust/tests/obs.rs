@@ -8,7 +8,9 @@
 //!   with a reset or concurrent writers in between;
 //! * the flight recorder survives a 10k-event multi-threaded flood
 //!   without exceeding its capacity, and its JSON-lines dump
-//!   round-trips;
+//!   round-trips — property-tested over arbitrary event sequences
+//!   (hex-framed u64 fields above 2^53 included) and arbitrary
+//!   flood shapes on the in-tree proptest runner;
 //! * a two-tenant [`SolveService`] run reports per-key p50/p95/p99
 //!   request-wait and execution latencies from the histograms;
 //! * [`obs::prometheus`] output parses line by line against the text
@@ -22,13 +24,17 @@ use h2opus_tlr::apps::geometry::grid;
 use h2opus_tlr::apps::kdtree::kdtree_order;
 use h2opus_tlr::factor::{cholesky, CholFactor, FactorOpts};
 use h2opus_tlr::linalg::rng::Rng;
-use h2opus_tlr::obs::{self, EventKind, FlightRecorder, HistId, Histogram};
+use h2opus_tlr::obs::{self, EventKind, FlightRecorder, HistId, Histogram, RejectReason};
 use h2opus_tlr::serve::{
     FactorStore, ServeOpts, ShardMap, ShardedService, SolveService, StoredFactor,
 };
+use h2opus_tlr::testing::proptest::{no_panic, run_prop, run_prop_with, Config, Strategy};
 use h2opus_tlr::tlr::construct::{build_tlr, BuildOpts, Compression};
 use std::path::PathBuf;
 use std::time::Duration;
+
+/// Pinned counterexample seeds, replayed before any fresh generation.
+const REGRESSIONS: &str = include_str!("proptest-regressions/obs.txt");
 
 fn temp_dir(tag: &str) -> PathBuf {
     let dir = std::env::temp_dir()
@@ -195,6 +201,187 @@ fn dump_json_lines_round_trips_through_files() {
         .collect();
     assert_eq!(parsed, r.events());
     let _ = std::fs::remove_dir_all(&dir);
+}
+
+// ------------------------------------------- trace round-trip property
+
+/// Arbitrary event sequences. Hex-framed u64 fields (`key`, `panel`,
+/// `bytes`) take any value including above 2^53; `ns` stays under 2^53
+/// per the schema (it is a JSON number — EXPERIMENTS.md
+/// §Observability), and the u32 fields take any u32.
+struct EventSeqStrategy;
+impl Strategy for EventSeqStrategy {
+    type Value = Vec<(u64, EventKind)>;
+
+    fn generate(&self, rng: &mut Rng) -> Self::Value {
+        let reasons = [
+            RejectReason::UnknownFactor,
+            RejectReason::UnknownMatrix,
+            RejectReason::Store,
+            RejectReason::BadRhs,
+            RejectReason::Overloaded,
+            RejectReason::Canceled,
+        ];
+        (0..1 + rng.below(24))
+            .map(|_| {
+                // Bias toward extreme values: ~half the arbitrary u64
+                // fields are u64::MAX - small, the rest uniform.
+                let mut big = |rng: &mut Rng| {
+                    if rng.below(2) == 0 {
+                        u64::MAX - rng.below(16) as u64
+                    } else {
+                        rng.next_u64()
+                    }
+                };
+                let kind = match rng.below(9) {
+                    0 => EventKind::Submitted,
+                    1 => EventKind::Enqueued { key: big(rng) },
+                    2 => EventKind::Coalesced {
+                        panel: big(rng),
+                        width: rng.next_u64() as u32,
+                    },
+                    3 => EventKind::Executed {
+                        waves: rng.next_u64() as u32,
+                        ns: rng.next_u64() % (1 << 53),
+                    },
+                    4 => EventKind::Responded,
+                    5 => EventKind::Rejected { reason: reasons[rng.below(reasons.len())] },
+                    6 => EventKind::RebalanceStarted,
+                    7 => EventKind::RebalanceFinished { moved: rng.next_u64() as u32 },
+                    _ => EventKind::Evicted { bytes: big(rng) },
+                };
+                (rng.next_u64() % (1 << 53), kind)
+            })
+            .collect()
+    }
+
+    fn shrink(&self, v: &Self::Value) -> Vec<Self::Value> {
+        let mut out = Vec::new();
+        if v.len() > 1 {
+            out.push(v[..v.len() / 2].to_vec());
+            for i in 0..v.len() {
+                let mut c = v.clone();
+                c.remove(i);
+                out.push(c);
+            }
+        }
+        // Zero the request id of each event in turn (isolates whether
+        // the failure depends on the id or the kind).
+        for i in 0..v.len().min(8) {
+            if v[i].0 != 0 {
+                let mut c = v.clone();
+                c[i].0 = 0;
+                out.push(c);
+            }
+        }
+        out
+    }
+}
+
+/// Any event sequence dumps to JSON lines and parses back identically
+/// — including u64::MAX keys/panels/byte counts, which cross the dump
+/// as hex strings precisely because f64 JSON numbers lose integers
+/// above 2^53.
+#[test]
+fn prop_trace_json_lines_round_trip_arbitrary_events() {
+    run_prop("trace_roundtrip", REGRESSIONS, &EventSeqStrategy, |events| {
+        let cap = events.len().next_power_of_two().max(2);
+        let r = FlightRecorder::with_capacity(cap);
+        for (req, kind) in events {
+            r.record(*req, *kind);
+        }
+        let recorded = r.events();
+        if recorded.len() != events.len() {
+            return Err(format!(
+                "{} events recorded, {} read back",
+                events.len(),
+                recorded.len()
+            ));
+        }
+        let dump = r.dump_json_lines();
+        let mut parsed = Vec::new();
+        for (i, line) in dump.lines().enumerate() {
+            let v = h2opus_tlr::runtime::json::parse(line)
+                .map_err(|e| format!("line {i} does not parse: {e:?}"))?;
+            parsed.push(
+                obs::Event::from_json(&v).ok_or_else(|| format!("line {i} does not decode"))?,
+            );
+        }
+        if parsed != recorded {
+            return Err("parsed events differ from recorded events".into());
+        }
+        Ok(())
+    });
+}
+
+/// The seqlock reader never panics — and never yields a torn or
+/// invalid event — while writer threads flood a deliberately tiny
+/// ring, forcing constant wrap-around mid-read.
+#[test]
+fn prop_torn_slot_reader_survives_concurrent_flood() {
+    #[derive(Clone, Debug)]
+    struct Flood {
+        cap: usize,
+        writers: usize,
+        per_writer: usize,
+        reads: usize,
+    }
+    struct FloodStrategy;
+    impl Strategy for FloodStrategy {
+        type Value = Flood;
+        fn generate(&self, rng: &mut Rng) -> Flood {
+            Flood {
+                cap: 1 << rng.below(5),           // 1..16 slots: wraps constantly
+                writers: 2 + rng.below(3),        // 2..=4 threads
+                per_writer: 200 + rng.below(800), // enough to overlap reads
+                reads: 20 + rng.below(40),
+            }
+        }
+        fn shrink(&self, v: &Flood) -> Vec<Flood> {
+            let mut out = Vec::new();
+            if v.writers > 2 {
+                out.push(Flood { writers: v.writers - 1, ..v.clone() });
+            }
+            if v.per_writer > 200 {
+                out.push(Flood { per_writer: v.per_writer / 2, ..v.clone() });
+            }
+            if v.reads > 20 {
+                out.push(Flood { reads: v.reads / 2, ..v.clone() });
+            }
+            out
+        }
+    }
+    // Thread churn per case keeps the sweep small; the flood itself is
+    // already highly randomized by the scheduler.
+    let cfg = Config { cases: 12, max_shrink_steps: 60 };
+    run_prop_with(cfg, "trace_torn_flood", REGRESSIONS, &FloodStrategy, |fl| {
+        let r = FlightRecorder::with_capacity(fl.cap);
+        no_panic("concurrent events() under flood", || {
+            std::thread::scope(|scope| {
+                for t in 0..fl.writers as u64 {
+                    let r = &r;
+                    let per = fl.per_writer as u64;
+                    scope.spawn(move || {
+                        for i in 0..per {
+                            r.record(t * 1_000_000 + i, EventKind::Executed { waves: 1, ns: i });
+                        }
+                    });
+                }
+                // Read concurrently with the flood: every snapshot must
+                // be valid (bounded, strictly ordered) even when every
+                // slot is being rewritten under the reader.
+                for _ in 0..fl.reads {
+                    let ev = r.events();
+                    assert!(ev.len() <= r.capacity(), "ring exceeded capacity");
+                    assert!(
+                        ev.windows(2).all(|w| w[0].seq < w[1].seq),
+                        "seqs not strictly increasing"
+                    );
+                    let _ = r.dump_json_lines();
+                }
+            });
+        })
+    });
 }
 
 // ------------------------------------- per-key latency, two-tenant run

@@ -1,11 +1,18 @@
-//! Integration tests for the `serve/` subsystem, in the seed-sweep
-//! property style of `rust/tests/batch_plan.rs` (no proptest in the
-//! vendored crate set; every assertion carries its seed):
+//! Integration tests for the `serve/` subsystem. Properties run on the
+//! in-tree proptest runner ([`h2opus_tlr::testing`]): strategies
+//! generate whole scenarios (frames + corruptions, shard-map mutation
+//! sequences, DRR arrival orders), failures shrink to a minimal
+//! counterexample, and the seed printed on failure can be pinned in
+//! `proptest-regressions/serve.txt` so it replays forever:
 //!
-//! * serialization round trips are **bitwise**: random TLR matrices and
-//!   real Cholesky/LDLᵀ factors survive save → load with every tile
-//!   payload exactly equal;
-//! * corruption (bit flips, truncation) is detected by the checksum;
+//! * serialization round trips are **bitwise**: random TLR matrices
+//!   (f64 and packed-f32 tiles) and real Cholesky/LDLᵀ factors survive
+//!   save → load with every tile payload exactly equal;
+//! * arbitrary corruption (bit flips, truncation, scribbles) makes both
+//!   the owned decoder and the mapped loader error — never panic;
+//! * shard maps survive arbitrary add/remove sequences with a total
+//!   owner table and minimal disruption, and decode arbitrary text
+//!   without panicking;
 //! * blocked multi-RHS solves match column-wise single solves to 1e-13;
 //! * the [`SolveService`] coalesces ≥16 single-RHS requests into one
 //!   blocked solve, loading the factor from a store written on disk —
@@ -26,11 +33,15 @@ use h2opus_tlr::solve::{
     chol_solve, chol_solve_multi, ldl_solve, ldl_solve_multi, pcg, pcg_multi, tlr_matvec,
     tlr_matvec_multi, tlr_trsm_lower, tlr_trsv_lower, TlrOp,
 };
+use h2opus_tlr::testing::proptest::{no_panic, run_prop, run_prop_with, Config, Strategy};
 use h2opus_tlr::tlr::construct::{build_tlr, BuildOpts, Compression};
-use h2opus_tlr::tlr::tile::{LowRank, Tile};
+use h2opus_tlr::tlr::tile::{LowRank, LowRank32, Tile};
 use h2opus_tlr::{Matrix, TlrMatrix};
 use std::path::PathBuf;
 use std::time::Duration;
+
+/// Pinned counterexample seeds, replayed before any fresh generation.
+const REGRESSIONS: &str = include_str!("proptest-regressions/serve.txt");
 
 fn temp_dir(tag: &str) -> PathBuf {
     let dir = std::env::temp_dir()
@@ -40,8 +51,11 @@ fn temp_dir(tag: &str) -> PathBuf {
     dir
 }
 
-/// Random symmetric TLR matrix with per-tile random ranks.
-fn random_tlr(rng: &mut Rng, nb: usize) -> TlrMatrix {
+/// Random symmetric TLR matrix with per-tile random ranks. With
+/// `mixed`, roughly half the off-diagonal tiles are stored as packed
+/// f32 ([`Tile::LowRank32`]) so the store's v2 per-tile precision
+/// words are exercised.
+fn random_tlr_with(rng: &mut Rng, nb: usize, mixed: bool) -> TlrMatrix {
     let sizes: Vec<usize> = (0..nb).map(|_| 3 + rng.below(10)).collect();
     let mut offsets = vec![0usize];
     for &s in &sizes {
@@ -56,14 +70,23 @@ fn random_tlr(rng: &mut Rng, nb: usize) -> TlrMatrix {
                 tiles.push(Tile::Dense(d));
             } else {
                 let k = rng.below(1 + sizes[i].min(sizes[j]));
-                tiles.push(Tile::LowRank(LowRank {
+                let lr = LowRank {
                     u: rng.normal_matrix(sizes[i], k),
                     v: rng.normal_matrix(sizes[j], k),
-                }));
+                };
+                if mixed && rng.uniform() < 0.5 {
+                    tiles.push(Tile::LowRank32(LowRank32::from_f64(&lr)));
+                } else {
+                    tiles.push(Tile::LowRank(lr));
+                }
             }
         }
     }
     TlrMatrix::from_tiles(offsets, tiles)
+}
+
+fn random_tlr(rng: &mut Rng, nb: usize) -> TlrMatrix {
+    random_tlr_with(rng, nb, false)
 }
 
 /// Small 2D covariance TLR matrix (the factor tests' recipe).
@@ -86,6 +109,10 @@ fn assert_tiles_bitwise(a: &TlrMatrix, b: &TlrMatrix, ctx: &str) {
                     assert_eq!(x.u, y.u, "{ctx}: tile ({i},{j}) U");
                     assert_eq!(x.v, y.v, "{ctx}: tile ({i},{j}) V");
                 }
+                (Tile::LowRank32(x), Tile::LowRank32(y)) => {
+                    assert_eq!(x.u, y.u, "{ctx}: tile ({i},{j}) U32");
+                    assert_eq!(x.v, y.v, "{ctx}: tile ({i},{j}) V32");
+                }
                 _ => panic!("{ctx}: tile ({i},{j}) kind changed"),
             }
         }
@@ -103,34 +130,154 @@ fn assert_cols_close(panel: &Matrix, j: usize, single: &[f64], tol: f64, ctx: &s
     assert!(err <= tol * scale, "{ctx}: col {j} err {err} > {tol} * {scale}");
 }
 
+// ----------------------------------------------- proptest strategies
+
+/// One mutation of a byte frame. Offsets are raw `u64`s reduced modulo
+/// the frame length at application time (frame lengths vary per case),
+/// shrinking toward offset 0 / single-bit / single-byte mutations.
+#[derive(Clone, Debug)]
+enum CorruptOp {
+    /// Cut the frame to `at % (len + 1)` bytes.
+    Truncate { at: u64 },
+    /// XOR bit `bit` of byte `at % len`.
+    FlipBit { at: u64, bit: u8 },
+    /// Overwrite up to 16 bytes starting at `at % len`.
+    Scribble { at: u64, bytes: Vec<u8> },
+}
+
+fn apply_corruption(frame: &[u8], op: &CorruptOp) -> Vec<u8> {
+    match op {
+        CorruptOp::Truncate { at } => frame[..*at as usize % (frame.len() + 1)].to_vec(),
+        CorruptOp::FlipBit { at, bit } => {
+            let mut c = frame.to_vec();
+            let i = *at as usize % c.len();
+            c[i] ^= 1 << (bit % 8);
+            c
+        }
+        CorruptOp::Scribble { at, bytes } => {
+            let mut c = frame.to_vec();
+            let i = *at as usize % c.len();
+            for (k, &b) in bytes.iter().enumerate().take(c.len() - i) {
+                c[i + k] = b;
+            }
+            c
+        }
+    }
+}
+
+fn shrink_corrupt_op(op: &CorruptOp) -> Vec<CorruptOp> {
+    let mut out = Vec::new();
+    match op {
+        CorruptOp::Truncate { at } if *at > 0 => {
+            out.push(CorruptOp::Truncate { at: 0 });
+            out.push(CorruptOp::Truncate { at: at / 2 });
+        }
+        CorruptOp::Truncate { .. } => {}
+        CorruptOp::FlipBit { at, bit } => {
+            if *at > 0 {
+                out.push(CorruptOp::FlipBit { at: 0, bit: *bit });
+                out.push(CorruptOp::FlipBit { at: at / 2, bit: *bit });
+            }
+            if *bit > 0 {
+                out.push(CorruptOp::FlipBit { at: *at, bit: 0 });
+            }
+        }
+        CorruptOp::Scribble { at, bytes } => {
+            if bytes.len() > 1 {
+                out.push(CorruptOp::Scribble { at: *at, bytes: bytes[..1].to_vec() });
+                out.push(CorruptOp::Scribble {
+                    at: *at,
+                    bytes: bytes[..bytes.len() / 2].to_vec(),
+                });
+            }
+            if *at > 0 {
+                out.push(CorruptOp::Scribble { at: at / 2, bytes: bytes.clone() });
+            }
+        }
+    }
+    out
+}
+
+fn gen_corrupt_op(rng: &mut Rng) -> CorruptOp {
+    match rng.below(3) {
+        0 => CorruptOp::Truncate { at: rng.next_u64() },
+        1 => CorruptOp::FlipBit { at: rng.next_u64(), bit: rng.below(8) as u8 },
+        _ => CorruptOp::Scribble {
+            at: rng.next_u64(),
+            bytes: (0..1 + rng.below(16)).map(|_| rng.below(256) as u8).collect(),
+        },
+    }
+}
+
+/// A whole round-trip scenario: the matrix is reconstructed from
+/// `seed`/`nb`/`mixed` inside the property, so the value stays small
+/// enough to print and shrink.
+#[derive(Clone, Debug)]
+struct TlrSpec {
+    seed: u64,
+    nb: usize,
+    mixed: bool,
+}
+
+struct TlrSpecStrategy;
+impl Strategy for TlrSpecStrategy {
+    type Value = TlrSpec;
+    fn generate(&self, rng: &mut Rng) -> TlrSpec {
+        TlrSpec { seed: rng.next_u64(), nb: 1 + rng.below(6), mixed: rng.uniform() < 0.5 }
+    }
+    fn shrink(&self, v: &TlrSpec) -> Vec<TlrSpec> {
+        let mut out = Vec::new();
+        if v.nb > 1 {
+            out.push(TlrSpec { nb: 1, ..v.clone() });
+            out.push(TlrSpec { nb: v.nb - 1, ..v.clone() });
+        }
+        if v.mixed {
+            out.push(TlrSpec { mixed: false, ..v.clone() });
+        }
+        out
+    }
+}
+
+/// A frame plus one corruption of it.
+#[derive(Clone, Debug)]
+struct FrameCorruption {
+    frame: TlrSpec,
+    op: CorruptOp,
+}
+
+struct FrameCorruptionStrategy;
+impl Strategy for FrameCorruptionStrategy {
+    type Value = FrameCorruption;
+    fn generate(&self, rng: &mut Rng) -> FrameCorruption {
+        let frame =
+            TlrSpec { seed: rng.next_u64(), nb: 1 + rng.below(4), mixed: rng.uniform() < 0.5 };
+        FrameCorruption { frame, op: gen_corrupt_op(rng) }
+    }
+    fn shrink(&self, v: &FrameCorruption) -> Vec<FrameCorruption> {
+        let mut out: Vec<FrameCorruption> = TlrSpecStrategy
+            .shrink(&v.frame)
+            .into_iter()
+            .map(|frame| FrameCorruption { frame, op: v.op.clone() })
+            .collect();
+        out.extend(
+            shrink_corrupt_op(&v.op)
+                .into_iter()
+                .map(|op| FrameCorruption { frame: v.frame.clone(), op }),
+        );
+        out
+    }
+}
+
 // ------------------------------------------------ serialization props
 
 #[test]
 fn prop_tlr_roundtrip_bitwise() {
-    for seed in 0..12u64 {
-        let mut rng = Rng::new(0x57E0 + seed);
-        let nb = 1 + rng.below(6);
-        let a = random_tlr(&mut rng, nb);
-        let back = decode_tlr(&encode_tlr(&a)).unwrap();
-        assert_tiles_bitwise(&a, &back, &format!("seed={seed}"));
-    }
-}
-
-#[test]
-fn prop_tlr_corruption_detected() {
-    for seed in 0..12u64 {
-        let mut rng = Rng::new(0xC0DE + seed);
-        let nb = 2 + rng.below(4);
-        let a = random_tlr(&mut rng, nb);
-        let bytes = encode_tlr(&a);
-        // Flip one bit somewhere past the fixed prefix.
-        let mut corrupt = bytes.clone();
-        let at = 40 + rng.below(corrupt.len() - 40);
-        corrupt[at] ^= 1 << rng.below(8);
-        assert!(decode_tlr(&corrupt).is_err(), "seed={seed}: flipped byte {at} undetected");
-        // Truncations are rejected too.
-        assert!(decode_tlr(&bytes[..bytes.len() - 1]).is_err(), "seed={seed}");
-    }
+    run_prop("tlr_roundtrip", REGRESSIONS, &TlrSpecStrategy, |s| {
+        let mut rng = Rng::new(s.seed);
+        let a = random_tlr_with(&mut rng, s.nb, s.mixed);
+        let back = decode_tlr(&encode_tlr(&a)).map_err(|e| format!("decode failed: {e:?}"))?;
+        no_panic("bitwise tile compare", || assert_tiles_bitwise(&a, &back, "roundtrip"))
+    });
 }
 
 #[test]
@@ -433,34 +580,60 @@ fn mapped_ldl_load_is_zero_copy_and_solves_bitwise_identical() {
 
 // --------------------------------------------- store corruption props
 
+/// Arbitrary corruption of arbitrary frames (f64 and packed-f32
+/// tiles): the owned decoder and the mapped loader both return a typed
+/// error — never panic, never accept a mutated frame.
 #[test]
 fn prop_store_corruption_never_panics_owned_or_mapped() {
     use h2opus_tlr::serve::store::load_tlr_mapped;
     let dir = temp_dir("corrupt_prop");
-    for seed in 0..4u64 {
-        let mut rng = Rng::new(0xBAD0 + seed);
-        let nb = 2 + rng.below(3);
-        let a = random_tlr(&mut rng, nb);
+    let path = dir.join("c.bin");
+    run_prop("store_corruption", REGRESSIONS, &FrameCorruptionStrategy, |c| {
+        let mut rng = Rng::new(c.frame.seed);
+        let a = random_tlr_with(&mut rng, c.frame.nb, c.frame.mixed);
         let bytes = encode_tlr(&a);
-        let path = dir.join(format!("c{seed}.bin"));
-        // Truncate at every 8-byte boundary: both the owned decoder and
-        // the mapped loader must return an error — never panic.
-        for cut in (0..bytes.len()).step_by(8) {
-            assert!(decode_tlr(&bytes[..cut]).is_err(), "seed={seed} cut={cut}");
-            std::fs::write(&path, &bytes[..cut]).unwrap();
-            assert!(load_tlr_mapped(&path).is_err(), "seed={seed} mapped cut={cut}");
+        let corrupt = apply_corruption(&bytes, &c.op);
+        if corrupt == bytes {
+            return Ok(()); // e.g. a scribble that rewrote identical bytes
         }
-        // Single bit flips at every byte (prefix, lengths, header,
-        // payload, checksum): all must be detected as errors.
-        for at in 0..bytes.len() {
-            let mut corrupt = bytes.clone();
-            corrupt[at] ^= 1 << rng.below(8);
-            assert!(decode_tlr(&corrupt).is_err(), "seed={seed} flip at byte {at}");
-            // The mapped loader round-trips through the disk; sample it.
-            if at % 7 == 0 {
-                std::fs::write(&path, &corrupt).unwrap();
-                assert!(load_tlr_mapped(&path).is_err(), "seed={seed} mapped flip at {at}");
-            }
+        no_panic("decode_tlr on corrupt frame", || decode_tlr(&corrupt))?;
+        if decode_tlr(&corrupt).is_ok() {
+            return Err("owned decoder accepted a corrupted frame".into());
+        }
+        std::fs::write(&path, &corrupt).map_err(|e| format!("write: {e}"))?;
+        no_panic("load_tlr_mapped on corrupt frame", || load_tlr_mapped(&path))?;
+        if load_tlr_mapped(&path).is_ok() {
+            return Err("mapped loader accepted a corrupted frame".into());
+        }
+        Ok(())
+    });
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Deterministic exhaustive companion to the random property: one
+/// small mixed-precision frame, every 8-byte truncation and every
+/// byte flipped once, through both loaders.
+#[test]
+fn store_corruption_exhaustive_on_small_frame() {
+    use h2opus_tlr::serve::store::load_tlr_mapped;
+    let dir = temp_dir("corrupt_exhaustive");
+    let path = dir.join("c.bin");
+    let mut rng = Rng::new(0xBAD0);
+    let a = random_tlr_with(&mut rng, 3, true);
+    let bytes = encode_tlr(&a);
+    for cut in (0..bytes.len()).step_by(8) {
+        assert!(decode_tlr(&bytes[..cut]).is_err(), "cut={cut}");
+        std::fs::write(&path, &bytes[..cut]).unwrap();
+        assert!(load_tlr_mapped(&path).is_err(), "mapped cut={cut}");
+    }
+    for at in 0..bytes.len() {
+        let mut corrupt = bytes.clone();
+        corrupt[at] ^= 1 << rng.below(8);
+        assert!(decode_tlr(&corrupt).is_err(), "flip at byte {at}");
+        // The mapped loader round-trips through the disk; sample it.
+        if at % 7 == 0 {
+            std::fs::write(&path, &corrupt).unwrap();
+            assert!(load_tlr_mapped(&path).is_err(), "mapped flip at {at}");
         }
     }
     let _ = std::fs::remove_dir_all(&dir);
@@ -518,68 +691,152 @@ fn admission_control_rejects_over_backlog_with_typed_error() {
     let _ = std::fs::remove_dir_all(&dir);
 }
 
+/// An arbitrary interleaving of minority (`true`) and hog (`false`)
+/// submissions staged behind the pilot hold. Counts are constrained so
+/// the schedule stays in the deterministic-DRR regime: ≥ 9 minority
+/// requests force ≥ 2 minority panels at quantum 8, and neither
+/// backlog reaches the 64-column panel that would allow an early
+/// flush. Shrinks by dropping submissions (hogs first).
+#[derive(Clone, Debug)]
+struct DrrArrivals {
+    order: Vec<bool>,
+}
+
+impl DrrArrivals {
+    fn minority(&self) -> usize {
+        self.order.iter().filter(|&&m| m).count()
+    }
+    fn hog(&self) -> usize {
+        self.order.len() - self.minority()
+    }
+}
+
+struct DrrArrivalsStrategy;
+impl Strategy for DrrArrivalsStrategy {
+    type Value = DrrArrivals;
+    fn generate(&self, rng: &mut Rng) -> DrrArrivals {
+        let m = 9 + rng.below(8); // 9..=16 minority requests
+        let h = 17 + rng.below(24); // 17..=40 hog requests
+        let mut order: Vec<bool> = (0..m + h).map(|i| i < m).collect();
+        // Fisher–Yates: an arbitrary arrival interleaving.
+        for i in (1..order.len()).rev() {
+            order.swap(i, rng.below(i + 1));
+        }
+        DrrArrivals { order }
+    }
+    fn shrink(&self, v: &DrrArrivals) -> Vec<DrrArrivals> {
+        let mut out = Vec::new();
+        let mut drop_one = |keep_minority: bool| {
+            if let Some(i) = v.order.iter().position(|&m| m != keep_minority) {
+                let mut order = v.order.clone();
+                order.remove(i);
+                out.push(DrrArrivals { order });
+            }
+        };
+        if v.hog() > 0 {
+            drop_one(true); // remove the first hog submission
+        }
+        if v.minority() > 9 {
+            drop_one(false); // remove the first minority submission
+        }
+        // Canonical order: all minority first (the original test's shape).
+        let mut sorted = v.order.clone();
+        sorted.sort_unstable_by_key(|&m| !m);
+        if sorted != v.order {
+            out.push(DrrArrivals { order: sorted });
+        }
+        out
+    }
+}
+
+/// The DRR quantum bound holds for **any** arrival order: between any
+/// two consecutive minority panels, the hog is served at most one
+/// quantum (8 columns). Arrival order within a key only permutes that
+/// key's FIFO; the cross-key interleave must never buy the hog a
+/// second round while the minority has work queued.
 #[test]
 fn drr_quantum_bounds_hog_columns_between_minority_panels() {
     let n = 128;
     let f = small_factor(92);
     let dir = temp_dir("drr_quantum");
     let (kc, kh, km) = (0xCC0u64, 0xB06u64, 0x111u64);
-    // quantum (8) < max_panel (64): the staged backlogs below (16 and
-    // 40) never reach a full panel, so the work-conserving early flush
-    // cannot trigger while requests stage behind the pilot hold, and
-    // the post-pilot schedule is fully deterministic DRR.
-    let service = SolveService::start(
-        FactorStore::open(&dir).unwrap(),
-        ServeOpts {
-            max_panel: 64,
-            quantum: 8,
-            flush_deadline: Duration::from_millis(500),
-            max_backlog: 100_000,
-            ..Default::default()
-        },
-    );
-    service.register(kc, StoredFactor::Chol(f.clone()));
-    service.register(kh, StoredFactor::Chol(f.clone()));
-    service.register(km, StoredFactor::Chol(f));
-    let mut rng = Rng::new(93);
-    let mut rhs = || -> Vec<f64> { (0..n).map(|_| rng.normal()).collect() };
-    // Pilot request: the worker schedules key C and holds its sub-panel
-    // batch open for the 500 ms deadline, during which both tenants
-    // queue up (minority first, then the hog).
-    let tc = service.submit(kc, rhs()).unwrap();
-    std::thread::sleep(Duration::from_millis(50));
-    let tm: Vec<_> = (0..16).map(|_| service.submit(km, rhs()).unwrap()).collect();
-    let th: Vec<_> = (0..40).map(|_| service.submit(kh, rhs()).unwrap()).collect();
-    let _ = tc.wait().unwrap();
-    for t in tm {
-        let _ = t.wait().unwrap();
-    }
-    // DRR bound: between any two consecutive minority panels the hog
-    // gets at most one quantum (8 columns) — the rotation never gives
-    // the hog two rounds while the minority has work queued.
-    let log = service.served_log();
-    assert_eq!(log[0].key, kc, "pilot panel first");
-    let min_panels: Vec<usize> = log
-        .iter()
-        .enumerate()
-        .filter(|(_, b)| b.key == km)
-        .map(|(i, _)| i)
-        .collect();
-    assert!(min_panels.len() >= 2, "16 minority requests at quantum 8 need >= 2 panels");
-    for pair in min_panels.windows(2) {
-        let hog_cols: usize = log[pair[0] + 1..pair[1]]
-            .iter()
-            .filter(|b| b.key == kh)
-            .map(|b| b.width)
-            .sum();
-        assert!(
-            hog_cols <= 8,
-            "hog served {hog_cols} columns between consecutive minority panels; quantum is 8"
+    // Service churn per case is real wall-clock (a 500 ms pilot hold
+    // each), so the sweep runs few fresh cases; pinned seeds and the
+    // fixed base seed keep it deterministic.
+    // Shrinking re-runs the service per candidate, so the step budget
+    // is tight too (a failure still shrinks, just less exhaustively).
+    let cfg = Config { cases: 4, max_shrink_steps: 40 };
+    run_prop_with(cfg, "drr_arrivals", REGRESSIONS, &DrrArrivalsStrategy, |arrivals| {
+        // quantum (8) < max_panel (64): the staged backlogs (≤ 16 and
+        // ≤ 40) never reach a full panel, so the work-conserving early
+        // flush cannot trigger while requests stage behind the pilot
+        // hold, and the post-pilot schedule is fully deterministic DRR.
+        let service = SolveService::start(
+            FactorStore::open(&dir).unwrap(),
+            ServeOpts {
+                max_panel: 64,
+                quantum: 8,
+                flush_deadline: Duration::from_millis(500),
+                max_backlog: 100_000,
+                ..Default::default()
+            },
         );
-    }
-    for t in th {
-        let _ = t.wait().unwrap();
-    }
+        service.register(kc, StoredFactor::Chol(f.clone()));
+        service.register(kh, StoredFactor::Chol(f.clone()));
+        service.register(km, StoredFactor::Chol(f.clone()));
+        let mut rng = Rng::new(93);
+        let mut rhs = || -> Vec<f64> { (0..n).map(|_| rng.normal()).collect() };
+        // Pilot request: the worker schedules key C and holds its
+        // sub-panel batch open for the 500 ms deadline, during which
+        // both tenants queue up in the generated arrival order.
+        let tc = service.submit(kc, rhs()).map_err(|e| format!("pilot: {e:?}"))?;
+        std::thread::sleep(Duration::from_millis(50));
+        let tickets: Vec<_> = arrivals
+            .order
+            .iter()
+            .map(|&minority| {
+                let key = if minority { km } else { kh };
+                service.submit(key, rhs()).map_err(|e| format!("submit: {e:?}"))
+            })
+            .collect::<Result<_, _>>()?;
+        tc.wait().map_err(|e| format!("pilot wait: {e:?}"))?;
+        for t in tickets {
+            t.wait().map_err(|e| format!("wait: {e:?}"))?;
+        }
+        // DRR bound: between any two consecutive minority panels the
+        // hog gets at most one quantum (8 columns) — the rotation never
+        // gives the hog two rounds while the minority has work queued.
+        let log = service.served_log();
+        if log.first().map(|b| b.key) != Some(kc) {
+            return Err("pilot panel must be served first".into());
+        }
+        let min_panels: Vec<usize> = log
+            .iter()
+            .enumerate()
+            .filter(|(_, b)| b.key == km)
+            .map(|(i, _)| i)
+            .collect();
+        if min_panels.len() < 2 {
+            return Err(format!(
+                "{} minority requests at quantum 8 need >= 2 panels",
+                arrivals.minority()
+            ));
+        }
+        for pair in min_panels.windows(2) {
+            let hog_cols: usize = log[pair[0] + 1..pair[1]]
+                .iter()
+                .filter(|b| b.key == kh)
+                .map(|b| b.width)
+                .sum();
+            if hog_cols > 8 {
+                return Err(format!(
+                    "hog served {hog_cols} columns between consecutive minority \
+                     panels; quantum is 8"
+                ));
+            }
+        }
+        Ok(())
+    });
     let _ = std::fs::remove_dir_all(&dir);
 }
 
@@ -865,6 +1122,218 @@ fn sharded_rebalance_migrates_keys_and_drains_in_flight() {
         assert_eq!(resp.x.len(), n, "key {key:#x} after rebalance");
     }
     let _ = std::fs::remove_dir_all(&dir);
+}
+
+// ------------------------------------------------ shard map properties
+
+/// A shard map plus one corruption of its text encoding.
+#[derive(Clone, Debug)]
+struct MapCorruption {
+    n_shards: usize,
+    n_workers: usize,
+    op: CorruptOp,
+}
+
+struct MapCorruptionStrategy;
+impl Strategy for MapCorruptionStrategy {
+    type Value = MapCorruption;
+    fn generate(&self, rng: &mut Rng) -> MapCorruption {
+        MapCorruption {
+            n_shards: 1 + rng.below(64),
+            n_workers: 1 + rng.below(4),
+            op: gen_corrupt_op(rng),
+        }
+    }
+    fn shrink(&self, v: &MapCorruption) -> Vec<MapCorruption> {
+        let mut out = Vec::new();
+        if v.n_shards > 1 {
+            out.push(MapCorruption { n_shards: 1, ..v.clone() });
+            out.push(MapCorruption { n_shards: v.n_shards / 2, ..v.clone() });
+        }
+        if v.n_workers > 1 {
+            out.push(MapCorruption { n_workers: v.n_workers - 1, ..v.clone() });
+        }
+        out.extend(
+            shrink_corrupt_op(&v.op).into_iter().map(|op| MapCorruption { op, ..v.clone() }),
+        );
+        out
+    }
+}
+
+/// Decoding arbitrarily mutated shard-map text never panics, and
+/// whenever it succeeds the owner table is total: every shard within
+/// `1..=MAX_SHARDS` resolves to a listed worker.
+#[test]
+fn prop_shardmap_decode_errors_or_yields_total_owner_table() {
+    use h2opus_tlr::serve::shard::MAX_SHARDS;
+    run_prop("shardmap_decode", REGRESSIONS, &MapCorruptionStrategy, |c| {
+        let workers: Vec<String> = (0..c.n_workers).map(|i| format!("w{i}")).collect();
+        let text = ShardMap::new(c.n_shards, workers).encode();
+        let corrupt = String::from_utf8_lossy(&apply_corruption(text.as_bytes(), &c.op))
+            .into_owned();
+        no_panic("ShardMap::decode on corrupt text", || match ShardMap::decode(&corrupt) {
+            Err(_) => {}
+            Ok(m) => {
+                assert!(m.n_shards() >= 1 && m.n_shards() <= MAX_SHARDS);
+                assert!(!m.workers().is_empty());
+                for s in 0..m.n_shards() {
+                    let o = m.owner_of_shard(s);
+                    assert!(
+                        m.workers().iter().any(|w| w == o),
+                        "shard {s} owned by unlisted worker {o:?}"
+                    );
+                }
+            }
+        })
+    });
+}
+
+/// One step of a shard-map mutation sequence: add a worker from a
+/// small name pool, or remove the worker at an index into the current
+/// roster (reduced modulo its length).
+#[derive(Clone, Debug)]
+enum MapOp {
+    Add(u8),
+    Remove(u8),
+}
+
+#[derive(Clone, Debug)]
+struct MapMutationSeq {
+    n_shards: usize,
+    init_workers: usize,
+    ops: Vec<MapOp>,
+}
+
+struct MapMutationSeqStrategy;
+impl Strategy for MapMutationSeqStrategy {
+    type Value = MapMutationSeq;
+    fn generate(&self, rng: &mut Rng) -> MapMutationSeq {
+        let ops = (0..rng.below(9))
+            .map(|_| {
+                if rng.uniform() < 0.6 {
+                    MapOp::Add(rng.below(6) as u8)
+                } else {
+                    MapOp::Remove(rng.below(8) as u8)
+                }
+            })
+            .collect();
+        MapMutationSeq { n_shards: 1 + rng.below(64), init_workers: 1 + rng.below(4), ops }
+    }
+    fn shrink(&self, v: &MapMutationSeq) -> Vec<MapMutationSeq> {
+        let mut out = Vec::new();
+        for i in 0..v.ops.len() {
+            let mut ops = v.ops.clone();
+            ops.remove(i);
+            out.push(MapMutationSeq { ops, ..v.clone() });
+        }
+        if v.n_shards > 1 {
+            out.push(MapMutationSeq { n_shards: v.n_shards / 2, ..v.clone() });
+        }
+        if v.init_workers > 1 {
+            out.push(MapMutationSeq { init_workers: v.init_workers - 1, ..v.clone() });
+        }
+        out
+    }
+}
+
+/// Arbitrary add/remove sequences keep the invariants the sharded
+/// service relies on: the owner table stays total after every step,
+/// rendezvous hashing moves only the shards it must (minimal
+/// disruption: on add, every moved shard goes to the new worker and
+/// nothing else changes; on remove, only the departed worker's shards
+/// move), failed mutations leave the map untouched, and the text
+/// encoding round-trips the exact map at every step.
+#[test]
+fn prop_shardmap_mutation_sequences_stay_total_and_minimal() {
+    run_prop("shardmap_mutate", REGRESSIONS, &MapMutationSeqStrategy, |seq| {
+        let workers: Vec<String> = (0..seq.init_workers).map(|i| format!("w{i}")).collect();
+        let mut map = ShardMap::new(seq.n_shards, workers);
+        for (step, op) in seq.ops.iter().enumerate() {
+            let before = map.clone();
+            match op {
+                MapOp::Add(tag) => {
+                    let name = format!("a{tag}");
+                    match map.add_worker(name.clone()) {
+                        Err(_) => {
+                            // Duplicate id: must be a clean no-op.
+                            if map != before {
+                                return Err(format!("step {step}: failed add mutated map"));
+                            }
+                        }
+                        Ok(moved) => {
+                            for s in 0..map.n_shards() {
+                                let (now, was) =
+                                    (map.owner_of_shard(s), before.owner_of_shard(s));
+                                if moved.contains(&s) {
+                                    if now != name {
+                                        return Err(format!(
+                                            "step {step}: moved shard {s} went to {now}, \
+                                             not the new worker"
+                                        ));
+                                    }
+                                } else if now != was {
+                                    return Err(format!(
+                                        "step {step}: unmoved shard {s} changed owner \
+                                         {was} -> {now}"
+                                    ));
+                                }
+                            }
+                        }
+                    }
+                }
+                MapOp::Remove(idx) => {
+                    let roster = before.workers().to_vec();
+                    let name = roster[*idx as usize % roster.len()].clone();
+                    match map.remove_worker(&name) {
+                        Err(_) => {
+                            // Only removing the last worker may fail.
+                            if roster.len() != 1 || map != before {
+                                return Err(format!(
+                                    "step {step}: remove({name}) failed with {} workers",
+                                    roster.len()
+                                ));
+                            }
+                        }
+                        Ok(moved) => {
+                            if map.workers().iter().any(|w| *w == name) {
+                                return Err(format!("step {step}: {name} still listed"));
+                            }
+                            for s in 0..map.n_shards() {
+                                let (now, was) =
+                                    (map.owner_of_shard(s), before.owner_of_shard(s));
+                                if was == name {
+                                    if !moved.contains(&s) {
+                                        return Err(format!(
+                                            "step {step}: shard {s} of removed worker \
+                                             not reported moved"
+                                        ));
+                                    }
+                                } else if now != was {
+                                    return Err(format!(
+                                        "step {step}: shard {s} moved off a surviving \
+                                         worker {was} -> {now}"
+                                    ));
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+            // Totality and encode/decode round-trip after every step.
+            for s in 0..map.n_shards() {
+                let o = map.owner_of_shard(s).to_string();
+                if !map.workers().iter().any(|w| *w == o) {
+                    return Err(format!("step {step}: shard {s} owner {o} unlisted"));
+                }
+            }
+            let rt = ShardMap::decode(&map.encode())
+                .map_err(|e| format!("step {step}: re-decode failed: {e:?}"))?;
+            if rt != map {
+                return Err(format!("step {step}: encode/decode round-trip differs"));
+            }
+        }
+        Ok(())
+    });
 }
 
 // -------------------------------------------------------- CLI smoke

@@ -1,0 +1,103 @@
+//! Dispatch-pin verification (tier 1 of `docs/verification.md`).
+//!
+//! The SIMD microkernels are `unsafe` `#[target_feature]` functions
+//! that are sound only after `simd::active()` has confirmed the CPU
+//! feature (or pinned the scalar fallback). `active()` caches its
+//! answer in a `OnceLock`, so the `H2OPUS_FORCE_SCALAR` pin cannot be
+//! toggled inside one process — the test re-executes **itself** as a
+//! child process with the pin set and verifies, via the kernel
+//! dispatch counters, that no vector kernel slot sees a single call on
+//! either the f64 or the mixed-precision path.
+
+use h2opus_tlr::batch::{NativeBatch, RefBatch, StreamBuilder};
+use h2opus_tlr::linalg::simd::{active, Kernel};
+use h2opus_tlr::linalg::{MatrixF32, Rng, Trans};
+use h2opus_tlr::profile::{self, KernelReport, KERNEL_NAMES};
+use h2opus_tlr::Matrix;
+
+/// Role marker: set (by the parent test) when this process is the
+/// re-executed child that must observe the scalar pin.
+const ROLE_ENV: &str = "H2OPUS_VERIFY_ROLE";
+
+/// Drive a small op-stream with both a mixed-precision (f32 B operand)
+/// GEMM and a plain-f64 GEMM through the native executor, returning the
+/// kernel-counter delta plus the native and oracle outputs.
+fn run_mixed_plan() -> (KernelReport, Vec<Matrix>, Vec<Matrix>) {
+    let mut rng = Rng::new(0xD15);
+    let a = rng.normal_matrix(48, 32);
+    let b32 = MatrixF32::from_f64(&rng.normal_matrix(32, 24));
+    let c = rng.normal_matrix(48, 24);
+    let e = rng.normal_matrix(24, 24);
+    let mut sb = StreamBuilder::new();
+    let ar = sb.input(&a);
+    let br = sb.input32(&b32);
+    let cr = sb.input(&c);
+    let er = sb.input(&e);
+    let d0 = sb.output(48, 24);
+    sb.gemm(Trans::No, Trans::No, 1.0, ar, br, 0.0, d0); // mixed kernel path
+    let d1 = sb.output(48, 24);
+    sb.gemm(Trans::No, Trans::No, -0.5, cr, er, 0.0, d1); // f64 kernel path
+    let stream = sb.finish();
+    stream.plan().assert_valid();
+    let before = profile::kernel_snapshot();
+    let native = stream.execute(&NativeBatch::new());
+    let delta = profile::kernel_snapshot().since(&before);
+    let oracle = stream.execute(&RefBatch);
+    (delta, native, oracle)
+}
+
+/// Child half: only meaningful when the parent re-executed us with
+/// `H2OPUS_FORCE_SCALAR=1`. Asserts the pin is consulted before any
+/// `#[target_feature]` kernel can run — every call (f64 and mixed)
+/// lands in the scalar slot — and that the scalar mixed path matches
+/// the widening oracle.
+#[test]
+fn child_scalar_dispatch_pin() {
+    if std::env::var_os(ROLE_ENV).is_none() {
+        return; // direct run: the parent test below drives this
+    }
+    assert_eq!(active(), Kernel::Scalar, "H2OPUS_FORCE_SCALAR must pin dispatch to scalar");
+    let (delta, native, oracle) = run_mixed_plan();
+    let scalar = Kernel::Scalar.index();
+    assert!(delta.mixed_calls[scalar] > 0, "mixed path must have run: {delta:?}");
+    assert!(delta.f64_calls[scalar] > 0, "f64 path must have run: {delta:?}");
+    for (k, name) in KERNEL_NAMES.iter().enumerate() {
+        if k == scalar {
+            continue;
+        }
+        assert_eq!(
+            delta.f64_calls[k] + delta.mixed_calls[k],
+            0,
+            "kernel slot `{name}` was reached despite the scalar pin"
+        );
+    }
+    for (n, o) in native.iter().zip(&oracle) {
+        let scale = n.norm_max().max(o.norm_max()).max(1.0);
+        assert!(n.sub(o).norm_max() <= 1e-13 * scale, "scalar mixed result off the oracle");
+    }
+    println!("CHILD_SCALAR_PIN_OK");
+}
+
+/// Parent half: re-execute this test binary with the scalar pin set
+/// and require the child assertions to pass. `active()`'s `OnceLock`
+/// caching is exactly why this needs a fresh process.
+#[test]
+fn force_scalar_pin_is_consulted_before_target_feature_kernels() {
+    if std::env::var_os(ROLE_ENV).is_some() {
+        return; // we *are* the child; don't recurse
+    }
+    let exe = std::env::current_exe().expect("test binary path");
+    let out = std::process::Command::new(exe)
+        .args(["child_scalar_dispatch_pin", "--exact", "--nocapture"])
+        .env(ROLE_ENV, "child")
+        .env("H2OPUS_FORCE_SCALAR", "1")
+        .output()
+        .expect("child test process must spawn");
+    let text = format!(
+        "{}{}",
+        String::from_utf8_lossy(&out.stdout),
+        String::from_utf8_lossy(&out.stderr)
+    );
+    assert!(out.status.success(), "child run failed:\n{text}");
+    assert!(text.contains("CHILD_SCALAR_PIN_OK"), "child skipped the pin check:\n{text}");
+}

@@ -27,13 +27,24 @@ Checks, in increasing order of cleverness:
  9. error observability: every variant of `serve/`'s error enums
     (`ServeError`, `ShardError`) is matched inside its dedicated
     obs-mapping fn (`reject_reason`, `shard_error_class`), so no error
-    path can be added without a counter or flight-recorder event.
+    path can be added without a counter or flight-recorder event;
+10. unsafe hygiene: every `unsafe fn` / `unsafe {}` block / `unsafe
+    impl` carries a `// SAFETY:` comment (an `unsafe fn` may use a
+    `/// # Safety` doc section instead) within 40 lines, bounded by the
+    enclosing fn header for blocks; every `#[kani::proof]` harness sits
+    inside a `#[cfg(kani)]`-gated module (tier-1 rustc never compiles
+    it); fns returning raw pointers are `pub(crate)` or narrower; and
+    the full site inventory matches the committed
+    `tools/unsafe_inventory.json` — regenerate with
+    `python3 tools/static_audit.py --write-inventory` so every new
+    unsafe site shows up as a reviewable diff.
 
 Exit status 0 = clean, 1 = findings. Run from the repo root:
 
     python3 tools/static_audit.py
 """
 
+import json
 import os
 import re
 import sys
@@ -586,6 +597,196 @@ def check_error_observability(src):
                      f"counter or flight-recorder event")
 
 
+# --------------------------------------------------------- unsafe hygiene
+
+
+SAFETY_SCAN_LINES = 40
+INVENTORY_PATH = os.path.join(ROOT, "tools", "unsafe_inventory.json")
+
+KANI_MOD_RE = re.compile(
+    r"#\[cfg\(kani\)\]\s*(?:pub(?:\s*\(crate\))?\s+)?mod\s+\w+\s*\{"
+)
+KANI_PROOF_RE = re.compile(r"#\[kani::proof\]")
+# `// SAFETY: ...` (incl. the doc flavors) or a `/// # Safety` section.
+SAFETY_LINE_RE = re.compile(r"//.*(?:\bSAFETY\b|#\s*Safety\b)")
+FN_HEADER_LINE_RE = re.compile(r"\bfn\s+\w+")
+
+
+def safety_text(line):
+    """First line of the SAFETY comment, without the comment markers."""
+    idx = line.find("//")
+    return line[idx:].lstrip("/!").strip()
+
+
+def find_safety(orig_lines, stripped_lines, ln, kind):
+    """Nearest SAFETY comment covering the unsafe site at 1-based line
+    `ln`, scanning at most SAFETY_SCAN_LINES upward. For `unsafe {}`
+    blocks the scan stops at the enclosing fn header — a comment above
+    the header documents the fn, not this block."""
+    lo = max(1, ln - SAFETY_SCAN_LINES)
+    for k in range(ln, lo - 1, -1):
+        if SAFETY_LINE_RE.search(orig_lines[k - 1]):
+            return safety_text(orig_lines[k - 1])
+        if (
+            kind == "unsafe block"
+            and k != ln
+            and k - 1 < len(stripped_lines)
+            and FN_HEADER_LINE_RE.search(stripped_lines[k - 1])
+        ):
+            break
+    return None
+
+
+def classify_unsafe_sites(path, stripped):
+    """(line, kind, item) for every `unsafe` token in stripped source.
+    Comments and strings are already blanked, so each hit is code."""
+    sites = []
+    fn_positions = [
+        (m.start(), m.group(1)) for m in re.finditer(r"\bfn\s+(\w+)", stripped)
+    ]
+    for m in re.finditer(r"\bunsafe\b", stripped):
+        j = m.end()
+        while j < len(stripped) and stripped[j].isspace():
+            j += 1
+        rest = stripped[j : j + 400]
+        line = stripped.count("\n", 0, m.start()) + 1
+        if rest.startswith("fn"):
+            fm = re.match(r"fn\s+(\w+)", rest)
+            sites.append((line, "unsafe fn", fm.group(1) if fm else "?"))
+        elif rest.startswith("impl"):
+            end = len(rest)
+            for stop in "{;":
+                k = rest.find(stop)
+                if k != -1:
+                    end = min(end, k)
+            sites.append((line, "unsafe impl", " ".join(rest[:end].split())))
+        elif rest.startswith("trait"):
+            tm = re.match(r"trait\s+(\w+)", rest)
+            sites.append((line, "unsafe trait", tm.group(1) if tm else "?"))
+        elif rest.startswith("extern"):
+            sites.append((line, "unsafe extern", "extern block"))
+        elif rest.startswith("{"):
+            encl = "<file scope>"
+            for pos, name in fn_positions:
+                if pos < m.start():
+                    encl = name
+                else:
+                    break
+            sites.append((line, "unsafe block", f"in fn {encl}"))
+        else:
+            warn(path, line, "check 10: unclassifiable `unsafe` token")
+    return sites
+
+
+def fn_return_clause(stripped, i):
+    """Text between a fn's parameter list and its body/terminator,
+    starting the scan at `i` (just past the fn name): the return type
+    plus any where clause. None when no parameter list is found."""
+    n = len(stripped)
+    while i < n and stripped[i].isspace():
+        i += 1
+    if i < n and stripped[i] == "<":  # generic parameter list
+        depth = 0
+        while i < n:
+            if stripped[i] == "<":
+                depth += 1
+            elif stripped[i] == ">" and stripped[i - 1] != "-":
+                depth -= 1
+                if depth == 0:
+                    i += 1
+                    break
+            i += 1
+    while i < n and stripped[i] != "(":
+        if stripped[i] in "{;":
+            return None
+        i += 1
+    depth = 0
+    while i < n:
+        if stripped[i] == "(":
+            depth += 1
+        elif stripped[i] == ")":
+            depth -= 1
+            if depth == 0:
+                i += 1
+                break
+        i += 1
+    j = i
+    bracket = 0
+    while j < n:
+        c = stripped[j]
+        if c == "[":
+            bracket += 1
+        elif c == "]":
+            bracket -= 1
+        elif c == "{" or (c == ";" and bracket == 0):
+            break
+        j += 1
+    return stripped[i:j]
+
+
+def check_unsafe_hygiene(texts, stripped_files):
+    """Check 10: SAFETY coverage, kani gating, raw-pointer visibility.
+    Returns the site inventory for the committed-JSON diff."""
+    entries = []
+    for path in sorted(stripped_files):
+        s = stripped_files[path]
+        if "unsafe" not in s and "kani" not in s:
+            continue
+        orig_lines = texts[path].split("\n")
+        stripped_lines = s.split("\n")
+        rel = os.path.relpath(path, ROOT).replace(os.sep, "/")
+        for line, kind, item in classify_unsafe_sites(path, s):
+            safety = find_safety(orig_lines, stripped_lines, line, kind)
+            if safety is None:
+                warn(path, line,
+                     f"check 10: {kind} ({item}) has no `// SAFETY:` comment "
+                     f"within {SAFETY_SCAN_LINES} lines")
+                safety = ""
+            entries.append(
+                {"file": rel, "kind": kind, "item": item, "safety": safety}
+            )
+        kani_spans = []
+        for m in KANI_MOD_RE.finditer(s):
+            open_idx = s.find("{", m.start())
+            if open_idx != -1:
+                _, close = body_span(s, open_idx)
+                kani_spans.append((m.start(), close))
+        for m in KANI_PROOF_RE.finditer(s):
+            line = s.count("\n", 0, m.start()) + 1
+            if not any(a <= m.start() < b for a, b in kani_spans):
+                warn(path, line,
+                     "check 10: #[kani::proof] outside a #[cfg(kani)] mod — "
+                     "tier-1 rustc would reject it")
+        for m in re.finditer(r"\bpub\s+(?:unsafe\s+)?fn\s+(\w+)", s):
+            ret = fn_return_clause(s, m.end())
+            if ret and re.search(r"\*\s*(?:mut|const)\b", ret):
+                line = s.count("\n", 0, m.start()) + 1
+                warn(path, line,
+                     f"check 10: `pub fn {m.group(1)}` returns a raw pointer; "
+                     f"narrow it to pub(crate) or less")
+    entries.sort(key=lambda e: (e["file"], e["kind"], e["item"], e["safety"]))
+    return entries
+
+
+def check_inventory(entries, write):
+    blob = json.dumps(entries, indent=1, sort_keys=True) + "\n"
+    if write:
+        with open(INVENTORY_PATH, "w", encoding="utf-8") as f:
+            f.write(blob)
+        print(f"wrote {len(entries)} unsafe-site entries to "
+              f"{os.path.relpath(INVENTORY_PATH, ROOT)}")
+        return
+    try:
+        with open(INVENTORY_PATH, encoding="utf-8") as f:
+            committed = json.load(f)
+    except (OSError, ValueError):
+        committed = None
+    if committed != entries:
+        warn(INVENTORY_PATH, 1,
+             "check 10: unsafe inventory is stale — run `python3 "
+             "tools/static_audit.py --write-inventory` and commit the diff")
+
+
 # --------------------------------------------------------- clippy classes
 
 
@@ -641,6 +842,8 @@ def main():
     check_imports(stripped, syms)
     check_simd_hygiene(stripped)
     check_error_observability(src)
+    entries = check_unsafe_hygiene(texts, stripped)
+    check_inventory(entries, "--write-inventory" in sys.argv[1:])
 
     if findings:
         print(f"{len(findings)} finding(s):")
