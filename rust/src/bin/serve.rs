@@ -20,9 +20,10 @@ use h2opus_tlr::config::{FactorKind, PrecisionPolicy, RunConfig};
 use h2opus_tlr::factor::{cholesky, ldlt};
 use h2opus_tlr::linalg::rng::Rng;
 use h2opus_tlr::obs;
-use h2opus_tlr::tlr::demote_offdiag;
+use h2opus_tlr::tlr::{chol_rank_k_update, demote_offdiag, ldl_rank_k_update, UpdateStats};
 use h2opus_tlr::serve::{
-    FactorStore, ServeError, ServeOpts, ShardedService, SolveService, StoredFactor,
+    FactorId, FactorStore, ServeError, ServeOpts, ShardedService, SolveService, StoredFactor,
+    Ticket,
 };
 use h2opus_tlr::solve::{chol_solve_multi_with, ldl_solve_multi_with, solve_flop_estimate};
 use h2opus_tlr::Matrix;
@@ -45,6 +46,9 @@ SERVE OPTIONS:
     --keys <K>          distinct factor keys in sharded mode (default 4)
     --metrics-dump <P>  write the versioned obs JSON snapshot to P
     --trace-dump <P>    write the flight-recorder events to P (JSON lines)
+    --swap-demo         generation-lifecycle demo: rank-k update, hot
+                        swap under a live stream, GC of the idle
+                        generation (works with --shards N)
 
 All problem/factorization options of `h2opus-tlr` apply (e.g.
 --problem cov2d --n 1024 --m 128 --eps 1e-6 --bs 8 --ldlt). See
@@ -63,6 +67,7 @@ struct ServeArgs {
     keys: usize,
     metrics_dump: Option<String>,
     trace_dump: Option<String>,
+    swap_demo: bool,
 }
 
 impl Default for ServeArgs {
@@ -79,6 +84,7 @@ impl Default for ServeArgs {
             keys: 4,
             metrics_dump: None,
             trace_dump: None,
+            swap_demo: false,
         }
     }
 }
@@ -151,6 +157,10 @@ fn parse_args(args: &[String]) -> (ServeArgs, Vec<String>) {
             "--trace-dump" => {
                 sa.trace_dump = Some(take_val(args, i).clone());
                 i += 2;
+            }
+            "--swap-demo" => {
+                sa.swap_demo = true;
+                i += 1;
             }
             _ => {
                 rest.push(args[i].clone());
@@ -534,6 +544,192 @@ fn sharded_run(store_dir: &str, key: u64, factor: StoredFactor, n: usize, sa: &S
     println!("rebalance  : -{grown} drained and returned {} shards", back.len());
 }
 
+/// Either service front-end, unified over the lifecycle surface the
+/// swap demo exercises (`submit`/`swap`/`collect_idle`/
+/// `current_generation` have identical signatures on both).
+enum Svc {
+    Single(SolveService),
+    Sharded(ShardedService),
+}
+
+impl Svc {
+    fn submit(&self, key: u64, rhs: Vec<f64>) -> Result<Ticket, ServeError> {
+        match self {
+            Svc::Single(s) => s.submit(key, rhs),
+            Svc::Sharded(s) => s.submit(key, rhs),
+        }
+    }
+
+    fn swap(&self, key: u64, f: StoredFactor) -> FactorId {
+        match self {
+            Svc::Single(s) => s.swap(key, f),
+            Svc::Sharded(s) => s.swap(key, f),
+        }
+    }
+
+    fn collect_idle(&self, key: u64) -> Vec<FactorId> {
+        match self {
+            Svc::Single(s) => s.collect_idle(key),
+            Svc::Sharded(s) => s.collect_idle(key),
+        }
+    }
+
+    fn current_generation(&self, key: u64) -> u32 {
+        match self {
+            Svc::Single(s) => s.current_generation(key),
+            Svc::Sharded(s) => s.current_generation(key),
+        }
+    }
+}
+
+/// Apply a synthetic rank-`k` perturbation `A + W Wᵀ` to the factor
+/// in place (tile-local, no refactorization). `k` is `--update-rank`
+/// when set, else 2; `W` is small relative to the operator so the
+/// updated factor stays well-conditioned.
+fn rank_k_updated(factor: &mut StoredFactor, n: usize, cfg: &RunConfig) -> UpdateStats {
+    let p = if cfg.update_rank > 0 { cfg.update_rank } else { 2 };
+    let mut wrng = Rng::new(cfg.seed ^ 0x5A9);
+    let mut w = wrng.normal_matrix(n, p);
+    w.scale(0.05);
+    let opts = cfg.factor_opts();
+    let res = match factor {
+        StoredFactor::Chol(f) => chol_rank_k_update(&mut f.l, &w, &opts),
+        StoredFactor::Ldl(f) => ldl_rank_k_update(&mut f.l, &mut f.d, &w, &opts),
+    };
+    res.unwrap_or_else(|e| {
+        eprintln!("swap demo: rank-{p} update failed: {e}");
+        std::process::exit(1);
+    })
+}
+
+/// `--swap-demo`: the generation lifecycle end-to-end under live load.
+/// Gen-0 tickets go in flight, the factor takes a rank-k update (no
+/// refactorization), the new generation is persisted and hot-swapped
+/// in, a post-swap stream runs on it, and the idle old generation is
+/// collected. Every step is verified (exit 1 on violation) so this
+/// doubles as the CI smoke test; works identically with `--shards N`.
+fn swap_demo(
+    store_dir: &str,
+    key: u64,
+    mut factor: StoredFactor,
+    n: usize,
+    sa: &ServeArgs,
+    cfg: &RunConfig,
+) {
+    let store = FactorStore::open(store_dir).unwrap_or_else(|e| {
+        eprintln!("store: {e}");
+        std::process::exit(1);
+    });
+    let opts = ServeOpts {
+        max_panel: sa.panel,
+        flush_deadline: Duration::from_millis(sa.deadline_ms),
+        cache_capacity: 4,
+        max_backlog: sa.backlog,
+        mmap: !sa.no_mmap,
+        ..Default::default()
+    };
+    let service = if sa.shards > 1 {
+        let svc = ShardedService::start(&store, opts, sa.shards, 64).unwrap_or_else(|e| {
+            eprintln!("sharded service: {e}");
+            std::process::exit(1);
+        });
+        Svc::Sharded(svc)
+    } else {
+        Svc::Single(SolveService::start(store, opts))
+    };
+    let mut rng = Rng::new(cfg.seed ^ 0xDEA1);
+    // Same Overloaded backpressure loop as `service_run`: the demo must
+    // lose zero tickets, so retries replace aborts.
+    let submit_stream = |rng: &mut Rng| -> Vec<Ticket> {
+        (0..sa.requests)
+            .map(|_| {
+                let mut rhs: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+                loop {
+                    match service.submit(key, std::mem::take(&mut rhs)) {
+                        Ok(t) => break t,
+                        Err(ServeError::Overloaded { .. }) => {
+                            std::thread::sleep(Duration::from_micros(200));
+                            rhs = (0..n).map(|_| rng.normal()).collect();
+                        }
+                        Err(e) => {
+                            eprintln!("swap demo: request rejected: {e}");
+                            std::process::exit(1);
+                        }
+                    }
+                }
+            })
+            .collect()
+    };
+    println!("swap demo  : generation {} serving before swap", service.current_generation(key));
+    let pre = submit_stream(&mut rng);
+    // Rank-k refactor-free update while the gen-0 stream is in flight.
+    let st = rank_k_updated(&mut factor, n, cfg);
+    println!(
+        "swap demo  : rank-k update touched {} tiles ({} skipped), {} batched-ARA flops",
+        st.tiles_touched, st.tiles_skipped, st.batch.gemm_flops
+    );
+    // Persist the new generation *before* swapping it in (crash-safe
+    // order: a frame on disk with no live readers is harmless, a live
+    // generation with no frame is not), then swap and check the ids
+    // agree.
+    let next = FactorId { key, generation: service.current_generation(key) + 1 };
+    let save_store = FactorStore::open(store_dir).unwrap_or_else(|e| {
+        eprintln!("store: {e}");
+        std::process::exit(1);
+    });
+    let path = save_store.save_stored(next, &factor, &cfg.summary()).unwrap_or_else(|e| {
+        eprintln!("store: failed to save {next}: {e}");
+        std::process::exit(1);
+    });
+    println!("swap demo  : saved {next} to {}", path.display());
+    let id = service.swap(key, factor);
+    if id != next {
+        eprintln!("swap demo: swapped id {id} does not match saved frame {next}");
+        std::process::exit(1);
+    }
+    println!("swap demo  : hot-swapped to generation {}", id.generation);
+    let post = submit_stream(&mut rng);
+    // Every pre-swap ticket must have been answered by the generation
+    // it was admitted on, every post-swap ticket by the new one.
+    let (mut pre_ok, mut post_ok) = (0usize, 0usize);
+    for t in pre {
+        let r = t.wait().unwrap_or_else(|e| {
+            eprintln!("swap demo: pre-swap request failed: {e}");
+            std::process::exit(1);
+        });
+        if r.generation != 0 {
+            eprintln!("swap demo: pre-swap ticket answered by generation {}", r.generation);
+            std::process::exit(1);
+        }
+        pre_ok += 1;
+    }
+    for t in post {
+        let r = t.wait().unwrap_or_else(|e| {
+            eprintln!("swap demo: post-swap request failed: {e}");
+            std::process::exit(1);
+        });
+        if r.generation != id.generation {
+            eprintln!("swap demo: post-swap ticket answered by generation {}", r.generation);
+            std::process::exit(1);
+        }
+        post_ok += 1;
+    }
+    println!(
+        "swap demo  : {pre_ok} pre-swap on generation 0, {post_ok} post-swap on generation {}",
+        id.generation
+    );
+    // With both streams drained nothing pins generation 0 any more, so
+    // GC must reap it (registry entry + LRU slot — an eager munmap).
+    let collected = service.collect_idle(key);
+    if collected.is_empty() {
+        eprintln!("swap demo: superseded generation was not collected");
+        std::process::exit(1);
+    }
+    let names: Vec<String> = collected.iter().map(|c| c.to_string()).collect();
+    println!("swap demo  : collected idle generation(s) {}", names.join(","));
+    println!("swap demo  : generation {} now current", service.current_generation(key));
+}
+
 fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
     let (sa, rest) = parse_args(&args);
@@ -552,6 +748,12 @@ fn main() {
     });
     let factor = obtain_factor(&cfg, &store, key, !sa.no_mmap);
     let n = factor.n();
+    if sa.swap_demo {
+        swap_demo(&sa.store, key, factor, n, &sa, &cfg);
+        dump_obs(&sa);
+        println!("serve done");
+        return;
+    }
     width_sweep(&factor, &sa.widths, cfg.seed);
     dump_obs(&sa);
     if sa.shards > 1 {

@@ -122,6 +122,11 @@ pub struct RunConfig {
     pub frac_contrast: f64,
     /// Covariance correlation length override (0 = paper default).
     pub corr_len: f64,
+    /// Rank k of the live `A + WWᵀ` update demonstrated by
+    /// `serve --swap-demo` (0 = demo default). Lifecycle-only: the
+    /// update produces a new *generation* under the same key, so this
+    /// must never enter [`RunConfig::factor_key`].
+    pub update_rank: usize,
 }
 
 impl Default for RunConfig {
@@ -146,6 +151,7 @@ impl Default for RunConfig {
             frac_alpha: 1.0,
             frac_contrast: 0.0,
             corr_len: 0.0,
+            update_rank: 0,
         }
     }
 }
@@ -326,6 +332,7 @@ impl RunConfig {
             "frac-alpha" => self.frac_alpha = num(val)?,
             "frac-contrast" => self.frac_contrast = num(val)?,
             "corr-len" => self.corr_len = num(val)?,
+            "update-rank" => self.update_rank = num(val)? as usize,
             "artifacts" => self.artifacts = val.into(),
             "factor" => {
                 self.kind = match val {
@@ -561,6 +568,18 @@ mod tests {
             diff_prec.factor_key(),
             "mixed-precision factors hold different bytes and need their own key"
         );
+        let same_update = RunConfig { update_rank: 8, ..base.clone() };
+        assert_eq!(
+            base.factor_key(),
+            same_update.factor_key(),
+            "update-rank changes the *generation*, never the key — a swap must not reroute"
+        );
+    }
+
+    #[test]
+    fn update_rank_flag_parses() {
+        let c = RunConfig::from_args(&argv("--update-rank 8")).unwrap();
+        assert_eq!(c.update_rank, 8);
     }
 
     #[test]

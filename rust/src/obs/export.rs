@@ -26,6 +26,12 @@ pub struct Snapshot {
     pub shards: ShardReport,
     /// Shard-error counts in `ShardErrorClass` order.
     pub shard_errors: [u64; crate::obs::N_SHARD_ERROR_CLASSES],
+    /// Rank-k-update error counts in `UpdateErrorClass` order.
+    pub update_errors: [u64; crate::obs::N_UPDATE_ERROR_CLASSES],
+    /// The `factor_generation` gauge: `(key, generation)` per occupied
+    /// slot, `(0, 0)` elsewhere (see
+    /// [`crate::obs::factor_generation_entries`]).
+    pub factor_generations: [(u64, u64); crate::obs::N_GENERATION_SLOTS],
     /// Global histograms in `HistId` order (names in `HIST_NAMES`).
     pub hists: [HistSnapshot; N_HISTS],
 }
@@ -39,6 +45,8 @@ pub fn snapshot() -> Snapshot {
         serve: profile::serve_snapshot(),
         shards: profile::shard_snapshot(),
         shard_errors: crate::obs::shard_error_counts(),
+        update_errors: crate::obs::update_error_counts(),
+        factor_generations: crate::obs::factor_generation_entries(),
         hists: hist::snapshot_all(),
     }
 }
@@ -60,6 +68,13 @@ impl Snapshot {
         {
             *o = now.saturating_sub(*was);
         }
+        let mut update_errors = [0u64; crate::obs::N_UPDATE_ERROR_CLASSES];
+        for (o, (now, was)) in update_errors
+            .iter_mut()
+            .zip(self.update_errors.iter().zip(earlier.update_errors.iter()))
+        {
+            *o = now.saturating_sub(*was);
+        }
         Snapshot {
             phases: self.phases.since(&earlier.phases),
             kernels: self.kernels.since(&earlier.kernels),
@@ -67,6 +82,9 @@ impl Snapshot {
             serve: self.serve.since(&earlier.serve),
             shards: self.shards.since(&earlier.shards),
             shard_errors,
+            update_errors,
+            // A gauge, not a counter: the current value is the delta.
+            factor_generations: self.factor_generations,
             hists,
         }
     }
@@ -175,6 +193,20 @@ pub fn json_from(s: &Snapshot) -> Json {
     }
     shards.insert("errors".to_string(), Json::Obj(errs));
     doc.insert("shards".to_string(), Json::Obj(shards));
+
+    let mut uerrs = BTreeMap::new();
+    for (i, &c) in s.update_errors.iter().enumerate() {
+        uerrs.insert(crate::obs::UPDATE_ERROR_NAMES[i].to_string(), Json::Num(c as f64));
+    }
+    doc.insert("update_errors".to_string(), Json::Obj(uerrs));
+
+    let mut gens = BTreeMap::new();
+    for &(key, generation) in s.factor_generations.iter() {
+        if key != 0 || generation != 0 {
+            gens.insert(format!("{key:016x}"), Json::Num(generation as f64));
+        }
+    }
+    doc.insert("factor_generations".to_string(), Json::Obj(gens));
 
     let mut hists = BTreeMap::new();
     for (i, h) in s.hists.iter().enumerate() {
@@ -312,6 +344,20 @@ pub fn prometheus_from(s: &Snapshot) -> String {
         prom_line(&mut out, "shard_errors_total", &labels, c as f64);
     }
 
+    prom_type(&mut out, "update_errors_total", "counter");
+    for (i, &c) in s.update_errors.iter().enumerate() {
+        let labels = [("class", crate::obs::UPDATE_ERROR_NAMES[i])];
+        prom_line(&mut out, "update_errors_total", &labels, c as f64);
+    }
+
+    prom_type(&mut out, "factor_generation", "gauge");
+    for &(key, generation) in s.factor_generations.iter() {
+        if key != 0 || generation != 0 {
+            let k = format!("{key:016x}");
+            prom_line(&mut out, "factor_generation", &[("key", &k)], generation as f64);
+        }
+    }
+
     for (i, h) in s.hists.iter().enumerate() {
         prom_hist(&mut out, hist::HIST_NAMES[i], h);
     }
@@ -340,12 +386,38 @@ mod tests {
         match &doc {
             Json::Obj(o) => {
                 assert_eq!(o.get("version"), Some(&Json::Num(1.0)));
-                for key in ["phases", "kernels", "batch", "serve", "shards", "histograms"] {
+                let sections = [
+                    "phases", "kernels", "batch", "serve", "shards", "histograms",
+                    "factor_generations", "update_errors",
+                ];
+                for key in sections {
                     assert!(o.contains_key(key), "missing {key}");
                 }
             }
             _ => panic!("snapshot is not an object"),
         }
+    }
+
+    #[test]
+    fn factor_generation_gauge_appears_in_both_exporters() {
+        crate::obs::note_factor_generation(0xABCD, 3);
+        let s = snapshot();
+        let prom = prometheus_from(&s);
+        assert!(prom.contains("# TYPE h2opus_factor_generation gauge"));
+        assert!(prom.contains("h2opus_factor_generation{key=\"000000000000abcd\"} 3"));
+        let doc = json_from(&s);
+        match &doc {
+            Json::Obj(o) => match o.get("factor_generations") {
+                Some(Json::Obj(g)) => {
+                    assert_eq!(g.get("000000000000abcd"), Some(&Json::Num(3.0)));
+                }
+                other => panic!("factor_generations not an object: {other:?}"),
+            },
+            _ => panic!("snapshot is not an object"),
+        }
+        // A gauge passes through `since` unchanged.
+        let delta = s.since(&Snapshot::default());
+        assert_eq!(delta.factor_generations, s.factor_generations);
     }
 
     #[test]

@@ -84,3 +84,85 @@ pub fn shard_error_counts() -> [u64; N_SHARD_ERROR_CLASSES] {
     }
     out
 }
+
+/// Classes of `crate::tlr::update::UpdateError` for the rank-k-update
+/// error counters; the mapping in `tlr/update.rs::update_error_class`
+/// is exhaustive by construction (checked by `tools/static_audit.py`),
+/// so no live-update error path is observability-silent.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum UpdateErrorClass {
+    BadShape = 0,
+    IndefiniteDiagonal = 1,
+}
+
+/// Number of update-error classes.
+pub const N_UPDATE_ERROR_CLASSES: usize = 2;
+
+/// Stable exporter names, indexed by `UpdateErrorClass as usize`.
+pub const UPDATE_ERROR_NAMES: [&str; N_UPDATE_ERROR_CLASSES] =
+    ["bad_shape", "indefinite_diagonal"];
+
+static UPDATE_ERRORS: [AtomicU64; N_UPDATE_ERROR_CLASSES] =
+    [const { AtomicU64::new(0) }; N_UPDATE_ERROR_CLASSES];
+
+/// Count one rank-k-update error of the given class.
+pub fn note_update_error(class: UpdateErrorClass) {
+    UPDATE_ERRORS[class as usize].fetch_add(1, Ordering::Relaxed);
+}
+
+/// Snapshot the update-error counters, in `UpdateErrorClass` order.
+pub fn update_error_counts() -> [u64; N_UPDATE_ERROR_CLASSES] {
+    let mut out = [0; N_UPDATE_ERROR_CLASSES];
+    for (o, c) in out.iter_mut().zip(UPDATE_ERRORS.iter()) {
+        *o = c.load(Ordering::Relaxed);
+    }
+    out
+}
+
+/// Slots in the `factor_generation` gauge table. A fixed-size
+/// linear-probe table keeps [`Snapshot`] `Copy` (same reasoning as the
+/// shard-error counters above); a serve process tracks far fewer live
+/// keys than this — overflowing keys are silently untracked, never an
+/// error.
+pub const N_GENERATION_SLOTS: usize = 32;
+
+/// `(key, generation+1)` pairs; generation word 0 = empty slot. The +1
+/// bias lets key 0 at generation 0 be distinguishable from an empty
+/// slot without a separate occupancy word.
+static FACTOR_GENERATIONS: [(AtomicU64, AtomicU64); N_GENERATION_SLOTS] =
+    [const { (AtomicU64::new(0), AtomicU64::new(0)) }; N_GENERATION_SLOTS];
+
+/// Record that `key` currently serves `generation` (the
+/// `h2opus_factor_generation` gauge). Called on registration and on
+/// every hot-swap; monotone per key in practice but the gauge just
+/// stores the latest value.
+pub fn note_factor_generation(key: u64, generation: u32) {
+    let start = (key as usize) % N_GENERATION_SLOTS;
+    for i in 0..N_GENERATION_SLOTS {
+        let (k, g) = &FACTOR_GENERATIONS[(start + i) % N_GENERATION_SLOTS];
+        if k.load(Ordering::Relaxed) == 0 && g.load(Ordering::Relaxed) == 0 {
+            // Claim the empty slot; a racing claimer of the same key is
+            // caught by the re-load below, of a different key by probing
+            // on.
+            let _ = k.compare_exchange(0, key, Ordering::Relaxed, Ordering::Relaxed);
+        }
+        if k.load(Ordering::Relaxed) == key {
+            g.store(generation as u64 + 1, Ordering::Relaxed);
+            return;
+        }
+    }
+}
+
+/// Snapshot the factor-generation gauge: `(key, generation)` for every
+/// occupied slot, `(0, 0)` elsewhere (an empty slot is encoded by the
+/// biased generation word 0; see [`note_factor_generation`]).
+pub fn factor_generation_entries() -> [(u64, u64); N_GENERATION_SLOTS] {
+    let mut out = [(0, 0); N_GENERATION_SLOTS];
+    for (o, (k, g)) in out.iter_mut().zip(FACTOR_GENERATIONS.iter()) {
+        let gen = g.load(Ordering::Relaxed);
+        if gen > 0 {
+            *o = (k.load(Ordering::Relaxed), gen - 1);
+        }
+    }
+    out
+}

@@ -45,6 +45,7 @@ pub enum RejectReason {
     BadRhs = 3,
     Overloaded = 4,
     Canceled = 5,
+    StaleGeneration = 6,
 }
 
 impl RejectReason {
@@ -56,6 +57,7 @@ impl RejectReason {
             RejectReason::BadRhs => "bad_rhs",
             RejectReason::Overloaded => "overloaded",
             RejectReason::Canceled => "canceled",
+            RejectReason::StaleGeneration => "stale_generation",
         }
     }
 
@@ -67,6 +69,7 @@ impl RejectReason {
             3 => RejectReason::BadRhs,
             4 => RejectReason::Overloaded,
             5 => RejectReason::Canceled,
+            6 => RejectReason::StaleGeneration,
             _ => return None,
         })
     }
@@ -94,6 +97,13 @@ pub enum EventKind {
     RebalanceFinished { moved: u32 },
     /// LRU evicted a cached factor/operator of `bytes` bytes.
     Evicted { bytes: u64 },
+    /// `key` hot-swapped to `generation`: new submissions route to it,
+    /// in-flight tickets finish on the generation they were admitted
+    /// under.
+    GenerationSwapped { key: u64, generation: u32 },
+    /// A superseded generation of `key` went idle and was collected
+    /// (dropped from the registry/LRU; eviction is an munmap).
+    GenerationCollected { key: u64, generation: u32 },
 }
 
 const TAG_SUBMITTED: u32 = 1;
@@ -105,6 +115,8 @@ const TAG_REJECTED: u32 = 6;
 const TAG_REBALANCE_STARTED: u32 = 7;
 const TAG_REBALANCE_FINISHED: u32 = 8;
 const TAG_EVICTED: u32 = 9;
+const TAG_GENERATION_SWAPPED: u32 = 10;
+const TAG_GENERATION_COLLECTED: u32 = 11;
 
 impl EventKind {
     /// Stable event name used in the JSON-lines dump.
@@ -119,6 +131,8 @@ impl EventKind {
             EventKind::RebalanceStarted => "rebalance_started",
             EventKind::RebalanceFinished { .. } => "rebalance_finished",
             EventKind::Evicted { .. } => "evicted",
+            EventKind::GenerationSwapped { .. } => "generation_swapped",
+            EventKind::GenerationCollected { .. } => "generation_collected",
         }
     }
 
@@ -134,6 +148,12 @@ impl EventKind {
             EventKind::RebalanceStarted => (TAG_REBALANCE_STARTED, 0, 0),
             EventKind::RebalanceFinished { moved } => (TAG_REBALANCE_FINISHED, moved, 0),
             EventKind::Evicted { bytes } => (TAG_EVICTED, 0, bytes),
+            EventKind::GenerationSwapped { key, generation } => {
+                (TAG_GENERATION_SWAPPED, generation, key)
+            }
+            EventKind::GenerationCollected { key, generation } => {
+                (TAG_GENERATION_COLLECTED, generation, key)
+            }
         };
         ((tag as u64) | ((aux as u64) << 32), payload)
     }
@@ -151,6 +171,12 @@ impl EventKind {
             TAG_REBALANCE_STARTED => EventKind::RebalanceStarted,
             TAG_REBALANCE_FINISHED => EventKind::RebalanceFinished { moved: aux },
             TAG_EVICTED => EventKind::Evicted { bytes: payload },
+            TAG_GENERATION_SWAPPED => {
+                EventKind::GenerationSwapped { key: payload, generation: aux }
+            }
+            TAG_GENERATION_COLLECTED => {
+                EventKind::GenerationCollected { key: payload, generation: aux }
+            }
             _ => return None,
         })
     }
@@ -193,6 +219,11 @@ impl Event {
             }
             EventKind::Evicted { bytes } => {
                 o.insert("bytes".to_string(), Json::Str(format!("{bytes:x}")));
+            }
+            EventKind::GenerationSwapped { key, generation }
+            | EventKind::GenerationCollected { key, generation } => {
+                o.insert("key".to_string(), Json::Str(format!("{key:016x}")));
+                o.insert("generation".to_string(), Json::Num(generation as f64));
             }
             _ => {}
         }
@@ -245,6 +276,7 @@ impl Event {
                     RejectReason::BadRhs,
                     RejectReason::Overloaded,
                     RejectReason::Canceled,
+                    RejectReason::StaleGeneration,
                 ]
                 .into_iter()
                 .find(|x| x.name() == r)?;
@@ -255,6 +287,14 @@ impl Event {
                 moved: num("moved")? as u32,
             },
             "evicted" => EventKind::Evicted { bytes: hex("bytes")? },
+            "generation_swapped" => EventKind::GenerationSwapped {
+                key: hex("key")?,
+                generation: num("generation")? as u32,
+            },
+            "generation_collected" => EventKind::GenerationCollected {
+                key: hex("key")?,
+                generation: num("generation")? as u32,
+            },
             _ => return None,
         };
         Some(Event { seq: num("seq")?, req: num("req")?, kind })
@@ -414,6 +454,9 @@ mod tests {
         r.record(0, EventKind::RebalanceStarted);
         r.record(0, EventKind::RebalanceFinished { moved: 11 });
         r.record(0, EventKind::Evicted { bytes: 1 << 40 });
+        r.record(7, EventKind::Rejected { reason: RejectReason::StaleGeneration });
+        r.record(0, EventKind::GenerationSwapped { key: 0xfeed_f00d_dead_beef, generation: 3 });
+        r.record(0, EventKind::GenerationCollected { key: 0xfeed_f00d_dead_beef, generation: 2 });
         let dump = r.dump_json_lines();
         let parsed: Vec<Event> = dump
             .lines()

@@ -71,6 +71,46 @@
 //!    constructed; truncated or bit-flipped files produce a typed
 //!    [`StoreError`], never a panic or a wild allocation.
 //!
+//! ## The factor-lifecycle contract (generations, hot swap, GC)
+//!
+//! A factor's identity is a [`store::FactorId`] — the base routing key
+//! plus a monotone `generation` counter. The rules every layer holds:
+//!
+//! 1. **Generations never enter routing.** `shard_of`/`owner_of` and
+//!    `RunConfig::factor_key()` see only the base key; swapping a new
+//!    generation in never moves a key between workers.
+//! 2. **Admission pins the generation.** A ticket is stamped with the
+//!    key's current generation under the queue lock at submit time, and
+//!    executes against exactly that generation — a swap that lands
+//!    mid-flight never changes what an admitted ticket computes, so
+//!    pre-swap responses are bitwise-identical to the old generation's
+//!    solves (asserted in `rust/tests/lifecycle.rs`).
+//! 3. **Swap is atomic with registration.**
+//!    [`service::SolveService::swap`] registers the new generation's
+//!    factor *before* the generation bump becomes visible to admission
+//!    (both under the queue lock), so a ticket admitted on the new
+//!    generation can never miss it. Tickets already queued drain on the
+//!    old generation; new submissions route to the newest.
+//! 4. **GC only reaps idle generations.**
+//!    [`service::SolveService::collect_idle`] refuses to collect while
+//!    any queued or executing ticket still pins a superseded
+//!    generation; once idle, collection drops the registry entry and
+//!    the factor-LRU slot (an eager `munmap` for mapped factors) and
+//!    records a `generation_collected` event per reaped id.
+//! 5. **On-disk frames are generation-addressed.** Store frame v3
+//!    carries the generation; v1/v2 frames load as generation 0, and
+//!    [`store::FactorStore::latest`]/[`store::FactorStore::gc_superseded`]
+//!    resolve and prune by the same ordering the service uses.
+//!
+//! ## The metric-name contract (lifecycle additions)
+//!
+//! Frozen names introduced by the lifecycle layer: the
+//! `h2opus_factor_generation{key=}` gauge, the
+//! `h2opus_update_errors_total{class=}` counter (classes from
+//! [`crate::obs::UPDATE_ERROR_NAMES`]), JSON keys `factor_generations`
+//! and `update_errors`, flight-recorder events `generation_swapped` and
+//! `generation_collected`, and reject reason `stale_generation`.
+//!
 //! How these contracts are *checked* — property tests with shrinking
 //! over arbitrary corruptions and arrival orders, `cargo kani` proof
 //! harnesses for the frame/shard/storage kernels, and the unsafe-
@@ -149,4 +189,4 @@ pub use service::{
     ServeError, ServeOpts, ServedBatch, ServiceStats, SolveResponse, SolveService, Ticket,
 };
 pub use shard::{ShardError, ShardMap, ShardedService};
-pub use store::{FactorStore, Mapped, StoreError, StoredFactor};
+pub use store::{FactorId, FactorStore, Mapped, StoreError, StoredFactor};

@@ -37,6 +37,18 @@
 //! `munmap`, and a fresh-process reload touches only the pages the
 //! solves actually read.
 //!
+//! ## Generations (hot swap)
+//!
+//! Every submission is pinned, under the queue lock, to the key's
+//! *current generation* (see [`FactorId`]); the registry and the
+//! worker LRU are keyed by the full id, so a [`SolveService::swap`]
+//! routes new submissions to the fresh factor while already-admitted
+//! tickets keep resolving — and bitwise-match — the generation they
+//! were admitted under. Superseded generations are dropped by
+//! [`SolveService::collect_idle`] once nothing in flight pins them.
+//! The full lifecycle contract (swap/drain/GC semantics, frozen metric
+//! names) lives in the `serve` module docs.
+//!
 //! ## Request kinds
 //!
 //! Besides direct factor solves ([`SolveService::submit`]), the service
@@ -53,7 +65,7 @@ use crate::batch::NativeBatch;
 use crate::linalg::matrix::Matrix;
 use crate::obs::{self, EventKind, HistId, KeyHistSnapshot, KeyHists, RejectReason};
 use crate::profile;
-use crate::serve::store::{FactorStore, StoreError, StoredFactor};
+use crate::serve::store::{FactorId, FactorStore, StoreError, StoredFactor};
 use crate::solve::{chol_solve_multi_with, ldl_solve_multi_with, pcg_multi, TlrPanelOp};
 use crate::tlr::matrix::TlrMatrix;
 use std::collections::{HashMap, VecDeque};
@@ -120,6 +132,9 @@ pub struct SolveResponse {
     /// Converged flag (always `true` for direct factor solves; for PCG,
     /// whether the column reached the requested tolerance).
     pub converged: bool,
+    /// The factor generation this request was pinned to at admission
+    /// (and therefore solved against).
+    pub generation: u32,
 }
 
 /// A request-level failure.
@@ -137,6 +152,9 @@ pub enum ServeError {
     /// Admission control: the key's queue is at `max_backlog`; the
     /// request was rejected, not queued.
     Overloaded { key: u64, backlog: usize, limit: usize },
+    /// The generation this request was pinned to at admission is no
+    /// longer resolvable (collected before the request executed).
+    StaleGeneration { key: u64, generation: u32 },
     /// The service shut down before answering.
     Canceled,
 }
@@ -155,6 +173,10 @@ impl std::fmt::Display for ServeError {
             ServeError::Overloaded { key, backlog, limit } => write!(
                 f,
                 "key {key:016x} backlog {backlog} at admission limit {limit}; request rejected"
+            ),
+            ServeError::StaleGeneration { key, generation } => write!(
+                f,
+                "key {key:016x} generation {generation} was collected before the request ran"
             ),
             ServeError::Canceled => write!(f, "service shut down before answering"),
         }
@@ -264,6 +286,9 @@ struct PendingReq {
     /// Flight-recorder request id (see [`crate::obs::next_request_id`]).
     req_id: u64,
     key: u64,
+    /// Generation pinned at admission; the request resolves and is
+    /// answered by exactly this generation's factor.
+    generation: u32,
     mode: ReqMode,
     rhs: Vec<f64>,
     enqueued: Instant,
@@ -292,10 +317,16 @@ struct QueueState {
     deficit: HashMap<u64, usize>,
     /// Total queued requests across keys.
     total: usize,
-    /// Key of the batch the worker popped and is currently executing
-    /// (None while idle). Lets [`SolveService::busy_with`] see work
-    /// that has left the queue but not yet resolved its factor.
-    executing: Option<u64>,
+    /// `(key, generation)` of the batch the worker popped and is
+    /// currently executing (None while idle). Lets
+    /// [`SolveService::busy_with`] see work that has left the queue but
+    /// not yet resolved its factor, and [`SolveService::collect_idle`]
+    /// see which generation it still pins.
+    executing: Option<(u64, u32)>,
+    /// Current generation per key (absent = 0). Written by
+    /// [`SolveService::swap`] under this lock so admission pinning is
+    /// atomic with queueing.
+    generations: HashMap<u64, u32>,
     shutdown: bool,
 }
 
@@ -317,10 +348,17 @@ struct Inner {
     queue: Mutex<QueueState>,
     cv: Condvar,
     /// Factors registered in-process (e.g. freshly computed by the
-    /// caller), checked before the on-disk store.
-    registry: Mutex<HashMap<u64, Arc<StoredFactor>>>,
+    /// caller), checked before the on-disk store. Keyed by the full
+    /// [`FactorId`] so superseded generations stay resolvable until
+    /// [`SolveService::collect_idle`] drops them.
+    registry: Mutex<HashMap<FactorId, Arc<StoredFactor>>>,
     /// Operator matrices registered in-process (for PCG requests).
     registry_mat: Mutex<HashMap<u64, Arc<TlrMatrix>>>,
+    /// The worker's factor LRU. Shared (rather than worker-local like
+    /// the matrix cache) so [`SolveService::collect_idle`] can drop a
+    /// superseded generation's mapping eagerly instead of waiting for
+    /// it to age out.
+    factor_cache: Mutex<LruCache<FactorId, StoredFactor>>,
     counters: Counters,
     /// Executed-panel log (bounded), for fairness assertions and
     /// diagnostics.
@@ -342,6 +380,7 @@ fn reject_reason(e: &ServeError) -> RejectReason {
         ServeError::Store(_) => RejectReason::Store,
         ServeError::BadRhs { .. } => RejectReason::BadRhs,
         ServeError::Overloaded { .. } => RejectReason::Overloaded,
+        ServeError::StaleGeneration { .. } => RejectReason::StaleGeneration,
         ServeError::Canceled => RejectReason::Canceled,
     }
 }
@@ -352,23 +391,23 @@ fn reject(req_id: u64, tx: &Sender<Result<SolveResponse, ServeError>>, e: ServeE
     let _ = tx.send(Err(e));
 }
 
-/// Tiny LRU keyed by factor key (worker-thread local; capacities are
-/// single digits, so a vector beats a linked structure). When the
+/// Tiny LRU keyed by factor id or key (worker-thread local; capacities
+/// are single digits, so a vector beats a linked structure). When the
 /// entries are mmap-backed factors, eviction drops the last `Arc` and
 /// therefore unmaps the file. Every eviction is recorded as an
 /// `Evicted{bytes}` flight-recorder event (the `bytes` estimate is
 /// supplied at insert time).
-struct LruCache<T> {
+struct LruCache<K, T> {
     cap: usize,
-    entries: Vec<(u64, Arc<T>, u64)>,
+    entries: Vec<(K, Arc<T>, u64)>,
 }
 
-impl<T> LruCache<T> {
+impl<K: Copy + PartialEq, T> LruCache<K, T> {
     fn new(cap: usize) -> Self {
         LruCache { cap: cap.max(1), entries: Vec::new() }
     }
 
-    fn get(&mut self, key: u64) -> Option<Arc<T>> {
+    fn get(&mut self, key: K) -> Option<Arc<T>> {
         let pos = self.entries.iter().position(|(k, _, _)| *k == key)?;
         let entry = self.entries.remove(pos);
         let f = entry.1.clone();
@@ -376,13 +415,22 @@ impl<T> LruCache<T> {
         Some(f)
     }
 
-    fn insert(&mut self, key: u64, f: Arc<T>, bytes: u64) {
+    fn insert(&mut self, key: K, f: Arc<T>, bytes: u64) {
         self.entries.retain(|(k, _, _)| *k != key);
         self.entries.insert(0, (key, f, bytes));
         while self.entries.len() > self.cap {
             let (_, _, evicted_bytes) = self.entries.pop().expect("len > cap > 0");
             obs::record_event(0, EventKind::Evicted { bytes: evicted_bytes });
         }
+    }
+
+    /// Drop every entry whose key matches; returns how many were
+    /// dropped. Used by generation collection (the dropped `Arc`s
+    /// unmap once the last solve referencing them finishes).
+    fn drop_matching(&mut self, mut pred: impl FnMut(&K) -> bool) -> usize {
+        let before = self.entries.len();
+        self.entries.retain(|(k, _, _)| !pred(k));
+        before - self.entries.len()
     }
 }
 
@@ -405,12 +453,14 @@ impl SolveService {
     pub fn start_named(store: FactorStore, opts: ServeOpts, name: &str) -> SolveService {
         assert!(opts.max_panel > 0, "max_panel must be positive");
         assert!(opts.max_backlog > 0, "max_backlog must be positive");
+        let factor_cache = Mutex::new(LruCache::new(opts.cache_capacity));
         let inner = Arc::new(Inner {
             opts,
             queue: Mutex::new(QueueState::default()),
             cv: Condvar::new(),
             registry: Mutex::new(HashMap::new()),
             registry_mat: Mutex::new(HashMap::new()),
+            factor_cache,
             counters: Counters::default(),
             served: Mutex::new(Vec::new()),
             key_hists: Mutex::new(HashMap::new()),
@@ -428,9 +478,9 @@ impl SolveService {
         SolveService { inner, worker: Some(worker) }
     }
 
-    /// Register an in-memory factor under `key` (bypasses the store for
-    /// that key). Useful right after factoring, before or instead of
-    /// persisting.
+    /// Register an in-memory factor under `key` at generation 0
+    /// (bypasses the store for that key). Useful right after factoring,
+    /// before or instead of persisting.
     pub fn register(&self, key: u64, f: StoredFactor) {
         self.register_shared(key, Arc::new(f));
     }
@@ -440,7 +490,101 @@ impl SolveService {
     /// so a factor mirrored for rebalancing is stored once, not once
     /// per worker it ever lived on.
     pub fn register_shared(&self, key: u64, f: Arc<StoredFactor>) {
-        self.inner.registry.lock().unwrap().insert(key, f);
+        self.register_id_shared(FactorId::base(key), f);
+    }
+
+    /// Register a factor at an explicit generation. The key's current
+    /// generation only moves *forward*: registering an old generation
+    /// (a rebalance migrating a mirror, say) never re-routes new
+    /// submissions backwards.
+    pub fn register_id_shared(&self, id: FactorId, f: Arc<StoredFactor>) {
+        let mut q = self.inner.queue.lock().unwrap();
+        self.inner.registry.lock().unwrap().insert(id, f);
+        let g = q.generations.entry(id.key).or_insert(0);
+        *g = (*g).max(id.generation);
+        let current = *g;
+        drop(q);
+        obs::note_factor_generation(id.key, current);
+    }
+
+    /// Hot-swap: register `f` as the next generation of `key` and make
+    /// it the admission target. Already-queued and executing tickets
+    /// keep the generation they were pinned to; only new submissions
+    /// see the returned [`FactorId`]. Records a `GenerationSwapped`
+    /// event and updates the `factor_generation` gauge.
+    pub fn swap(&self, key: u64, f: StoredFactor) -> FactorId {
+        self.swap_shared(key, Arc::new(f))
+    }
+
+    /// [`SolveService::swap`] without a deep copy.
+    pub fn swap_shared(&self, key: u64, f: Arc<StoredFactor>) -> FactorId {
+        let id = {
+            let mut q = self.inner.queue.lock().unwrap();
+            let g = q.generations.entry(key).or_insert(0);
+            let id = FactorId { key, generation: *g + 1 };
+            // Registered before the bump becomes visible to admission
+            // (queue lock still held), so a ticket pinned to the new
+            // generation can never miss the registry.
+            self.inner.registry.lock().unwrap().insert(id, f);
+            *g = id.generation;
+            id
+        };
+        obs::record_event(0, EventKind::GenerationSwapped { key, generation: id.generation });
+        obs::note_factor_generation(key, id.generation);
+        id
+    }
+
+    /// The generation new submissions for `key` are currently pinned
+    /// to (0 for keys never registered or swapped here).
+    pub fn current_generation(&self, key: u64) -> u32 {
+        self.inner.queue.lock().unwrap().generations.get(&key).copied().unwrap_or(0)
+    }
+
+    /// Garbage-collect superseded generations of `key` that nothing in
+    /// flight pins any more: drop their registry entries and factor-LRU
+    /// mappings. A no-op (returns empty) while a queued or executing
+    /// request still pins an older generation — call again once the
+    /// service drains. Each dropped generation records a
+    /// `GenerationCollected` event.
+    pub fn collect_idle(&self, key: u64) -> Vec<FactorId> {
+        let q = self.inner.queue.lock().unwrap();
+        let current = q.generations.get(&key).copied().unwrap_or(0);
+        let pins_old = q.executing.is_some_and(|(k, g)| k == key && g < current)
+            || q.queues
+                .get(&key)
+                .is_some_and(|v| v.iter().any(|r| r.generation < current));
+        if pins_old {
+            return Vec::new();
+        }
+        let mut removed: Vec<FactorId> = {
+            let mut reg = self.inner.registry.lock().unwrap();
+            let stale: Vec<FactorId> = reg
+                .keys()
+                .copied()
+                .filter(|id| id.key == key && id.generation < current)
+                .collect();
+            for id in &stale {
+                reg.remove(id);
+            }
+            stale
+        };
+        {
+            let mut cache = self.inner.factor_cache.lock().unwrap();
+            cache.drop_matching(|id| {
+                let stale = id.key == key && id.generation < current;
+                if stale && !removed.contains(id) {
+                    removed.push(*id);
+                }
+                stale
+            });
+        }
+        drop(q);
+        removed.sort_unstable();
+        for id in &removed {
+            let kind = EventKind::GenerationCollected { key, generation: id.generation };
+            obs::record_event(0, kind);
+        }
+        removed
     }
 
     /// Register the TLR operator matrix under `key`, enabling
@@ -455,15 +599,29 @@ impl SolveService {
         self.inner.registry_mat.lock().unwrap().insert(key, a);
     }
 
-    /// Drop any in-memory registrations under `key` (factor and
-    /// operator). Store-backed resolution is unaffected; the worker's
-    /// LRU entry, if any, ages out on its own. The sharded front-end
-    /// calls this when a rebalance moves a key away from this worker
-    /// and [`SolveService::busy_with`] reports no in-flight work that
-    /// still needs the registration.
+    /// Drop any in-memory registrations under `key` — every generation
+    /// of the factor, and the operator. Store-backed resolution is
+    /// unaffected; the worker's LRU entry, if any, ages out on its own.
+    /// The sharded front-end calls this when a rebalance moves a key
+    /// away from this worker and [`SolveService::busy_with`] reports no
+    /// in-flight work that still needs the registration.
     pub fn unregister(&self, key: u64) {
-        self.inner.registry.lock().unwrap().remove(&key);
+        self.inner.registry.lock().unwrap().retain(|id, _| id.key != key);
         self.inner.registry_mat.lock().unwrap().remove(&key);
+    }
+
+    /// The in-process registered generations of `key`, ascending. The
+    /// sharded front-end migrates a key by re-registering exactly these
+    /// ids on the destination worker.
+    pub fn registered_ids(&self, key: u64) -> Vec<(FactorId, Arc<StoredFactor>)> {
+        let reg = self.inner.registry.lock().unwrap();
+        let mut ids: Vec<(FactorId, Arc<StoredFactor>)> = reg
+            .iter()
+            .filter(|(id, _)| id.key == key)
+            .map(|(id, f)| (*id, f.clone()))
+            .collect();
+        ids.sort_unstable_by_key(|(id, _)| *id);
+        ids
     }
 
     /// Does this worker still hold work under `key` — queued requests,
@@ -475,7 +633,8 @@ impl SolveService {
     /// safe.
     pub fn busy_with(&self, key: u64) -> bool {
         let q = self.inner.queue.lock().unwrap();
-        q.executing == Some(key) || q.queues.get(&key).is_some_and(|v| !v.is_empty())
+        q.executing.is_some_and(|(k, _)| k == key)
+            || q.queues.get(&key).is_some_and(|v| !v.is_empty())
     }
 
     /// Submit a single-RHS direct solve against the factor under `key`.
@@ -512,6 +671,7 @@ impl SolveService {
                 obs::record_event(req_id, EventKind::Rejected { reason: reject_reason(&e) });
                 return Err(e);
             }
+            let generation = q.generations.get(&key).copied().unwrap_or(0);
             let queue = q.queues.entry(key).or_default();
             if queue.len() >= self.inner.opts.max_backlog {
                 self.inner.counters.rejected.fetch_add(1, Ordering::Relaxed);
@@ -528,6 +688,7 @@ impl SolveService {
             queue.push_back(PendingReq {
                 req_id,
                 key,
+                generation,
                 mode,
                 rhs,
                 enqueued: Instant::now(),
@@ -609,22 +770,16 @@ impl Drop for SolveService {
     }
 }
 
-/// Worker-local caches: factors and operator matrices.
-struct WorkerCaches {
-    factors: LruCache<StoredFactor>,
-    matrices: LruCache<TlrMatrix>,
-}
-
 /// Shared resolution path: registry → LRU cache → disk store. The
 /// registry is consulted first so a re-registered value takes effect
 /// immediately instead of being shadowed by a stale LRU entry.
-fn resolve_cached<T>(
-    key: u64,
-    registry: &Mutex<HashMap<u64, Arc<T>>>,
-    cache: &mut LruCache<T>,
+fn resolve_cached<K: Copy + PartialEq + Eq + std::hash::Hash, T>(
+    key: K,
+    registry: &Mutex<HashMap<K, Arc<T>>>,
+    cache: &mut LruCache<K, T>,
     load: impl FnOnce() -> Result<Option<T>, StoreError>,
     size_bytes: impl FnOnce(&T) -> u64,
-    missing: impl FnOnce(u64) -> ServeError,
+    missing: impl FnOnce(K) -> ServeError,
 ) -> Result<Arc<T>, ServeError> {
     // Registry hits are NOT inserted into the LRU: the registry is
     // consulted first on every resolution, so an LRU entry for a
@@ -650,26 +805,46 @@ fn resolve_cached<T>(
     }
 }
 
-/// Resolve the factor for `key` (mapped store load by default).
+/// Resolve the factor for the pinned `id` (mapped store load by
+/// default). Generation 0 is the back-compat path: if no exact base
+/// frame exists on disk, it falls through to the *newest* on-disk
+/// generation (flat-key resolution for stores written by external
+/// processes); a pinned generation > 0 resolves exactly or fails as
+/// [`ServeError::StaleGeneration`] — it was pinned because a swap
+/// happened here, so "missing" means "collected".
 fn resolve_factor(
-    key: u64,
+    id: FactorId,
     inner: &Inner,
     store: &FactorStore,
-    cache: &mut LruCache<StoredFactor>,
 ) -> Result<Arc<StoredFactor>, ServeError> {
+    let cache = &mut *inner.factor_cache.lock().unwrap();
     resolve_cached(
-        key,
+        id,
         &inner.registry,
         cache,
         || {
-            if inner.opts.mmap {
-                store.load_mapped(key).map(|o| o.map(|m| m.value))
+            let exact = if inner.opts.mmap {
+                store.load_mapped_id(id)?.map(|m| m.value)
             } else {
-                store.load(key)
+                store.load_id(id)?
+            };
+            if exact.is_some() || id.generation > 0 {
+                return Ok(exact);
+            }
+            if inner.opts.mmap {
+                store.load_mapped(id.key).map(|o| o.map(|m| m.value))
+            } else {
+                store.load(id.key)
             }
         },
         StoredFactor::approx_bytes,
-        ServeError::UnknownFactor,
+        |id| {
+            if id.generation > 0 {
+                ServeError::StaleGeneration { key: id.key, generation: id.generation }
+            } else {
+                ServeError::UnknownFactor(id.key)
+            }
+        },
     )
 }
 
@@ -678,7 +853,7 @@ fn resolve_matrix(
     key: u64,
     inner: &Inner,
     store: &FactorStore,
-    cache: &mut LruCache<TlrMatrix>,
+    cache: &mut LruCache<u64, TlrMatrix>,
 ) -> Result<Arc<TlrMatrix>, ServeError> {
     resolve_cached(
         key,
@@ -725,10 +900,9 @@ impl Drop for DrainOnExit<'_> {
 fn worker_loop(inner: &Inner, store: &FactorStore) {
     let _drain = DrainOnExit(inner);
     let opts = &inner.opts;
-    let mut caches = WorkerCaches {
-        factors: LruCache::new(opts.cache_capacity),
-        matrices: LruCache::new(opts.cache_capacity),
-    };
+    // Operator matrices stay worker-local; the factor LRU lives in
+    // `Inner` so `collect_idle` can purge superseded generations.
+    let mut matrices: LruCache<u64, TlrMatrix> = LruCache::new(opts.cache_capacity);
     // One long-lived executor for every blocked solve this worker runs
     // (see the `solve` module docs on executor threading).
     let exec = NativeBatch::new();
@@ -790,16 +964,20 @@ fn worker_loop(inner: &Inner, store: &FactorStore) {
             }
             let q = &mut *guard;
             let queue = q.queues.get_mut(&key).expect("scheduled key has a queue");
-            // Take up to `budget` leading requests of one mode (mixed
-            // modes under one key split into consecutive panels). The
-            // front request is taken unconditionally so the batch is
-            // never empty and the scheduler always makes progress.
+            // Take up to `budget` leading requests of one mode AND one
+            // pinned generation (mixed modes — or a queue straddling a
+            // swap — split into consecutive panels). The front request
+            // is taken unconditionally so the batch is never empty and
+            // the scheduler always makes progress.
             let first = queue.pop_front().expect("queue non-empty");
             let mode = first.mode;
+            let generation = first.generation;
             let mut batch = vec![first];
             while batch.len() < budget {
                 match queue.front() {
-                    Some(r) if r.mode == mode => batch.push(queue.pop_front().unwrap()),
+                    Some(r) if r.mode == mode && r.generation == generation => {
+                        batch.push(queue.pop_front().unwrap());
+                    }
                     _ => break,
                 }
             }
@@ -816,10 +994,10 @@ fn worker_loop(inner: &Inner, store: &FactorStore) {
                 q.order.pop_front();
                 q.order.push_back(key);
             }
-            // Visible to `busy_with` until the batch finishes: the
-            // requests have left the queue but still need the key's
-            // registration for factor resolution.
-            q.executing = Some(key);
+            // Visible to `busy_with`/`collect_idle` until the batch
+            // finishes: the requests have left the queue but still need
+            // the pinned generation's registration for resolution.
+            q.executing = Some((key, generation));
             batch
         };
         if batch.is_empty() {
@@ -828,7 +1006,7 @@ fn worker_loop(inner: &Inner, store: &FactorStore) {
             inner.queue.lock().unwrap().executing = None;
             continue;
         }
-        run_batch(batch, inner, store, &mut caches, &exec);
+        run_batch(batch, inner, store, &mut matrices, &exec);
         inner.queue.lock().unwrap().executing = None;
     }
 }
@@ -837,11 +1015,14 @@ fn run_batch(
     batch: Vec<PendingReq>,
     inner: &Inner,
     store: &FactorStore,
-    caches: &mut WorkerCaches,
+    matrices: &mut LruCache<u64, TlrMatrix>,
     exec: &NativeBatch,
 ) {
     let key = batch[0].key;
     let mode = batch[0].mode;
+    // All batch members share a pinned generation (the pop predicate
+    // enforces it); resolution targets exactly that generation.
+    let id = FactorId { key, generation: batch[0].generation };
     // Lifecycle: this batch is one coalesced panel. Record the panel
     // membership and the queue wait of every member now — execution
     // (or rejection) starts here.
@@ -857,7 +1038,7 @@ fn run_batch(
         obs::histogram(HistId::RequestWait).record(wait_ns);
         kh.wait.record(wait_ns);
     }
-    let factor = match resolve_factor(key, inner, store, &mut caches.factors) {
+    let factor = match resolve_factor(id, inner, store) {
         Ok(f) => f,
         Err(e) => {
             inner.counters.requests.fetch_add(batch.len() as u64, Ordering::Relaxed);
@@ -874,7 +1055,7 @@ fn run_batch(
     let operator = match mode {
         ReqMode::Direct => None,
         ReqMode::Pcg { .. } => {
-            let resolved = resolve_matrix(key, inner, store, &mut caches.matrices)
+            let resolved = resolve_matrix(key, inner, store, matrices)
                 .and_then(|a| {
                     if a.n() == n {
                         Ok(a)
@@ -995,6 +1176,7 @@ fn run_batch(
             panel_width: w,
             iters,
             converged,
+            generation: id.generation,
         };
         let _ = req.tx.send(Ok(resp));
         obs::record_event(req.req_id, EventKind::Responded);
@@ -1058,6 +1240,42 @@ mod tests {
             assert!(t0.elapsed() < Duration::from_secs(2), "busy_with must clear after drain");
             std::thread::sleep(Duration::from_millis(1));
         }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn swap_pins_generations_and_collect_drops_idle() {
+        use crate::factor::{CholFactor, FactorStats};
+        use crate::tlr::tile::Tile;
+        let n = 4;
+        // L = s·I factors A = s²·I, so a solve returns b / s².
+        let mk = |s: f64| {
+            let d = Matrix::from_fn(n, n, |i, j| if i == j { s } else { 0.0 });
+            let l = TlrMatrix::from_tiles(vec![0, n], vec![Tile::Dense(d)]);
+            StoredFactor::Chol(CholFactor {
+                l,
+                stats: FactorStats { perm: vec![0], ..Default::default() },
+            })
+        };
+        let dir = std::env::temp_dir().join(format!("h2opus_swapunit_{}", std::process::id()));
+        let service =
+            SolveService::start(FactorStore::open(dir.clone()).unwrap(), ServeOpts::default());
+        service.register(5, mk(1.0));
+        let t0 = service.submit(5, vec![1.0; n]).unwrap();
+        let id = service.swap(5, mk(2.0));
+        assert_eq!(id, FactorId { key: 5, generation: 1 });
+        assert_eq!(service.current_generation(5), 1);
+        let t1 = service.submit(5, vec![1.0; n]).unwrap();
+        let r0 = t0.wait().unwrap();
+        let r1 = t1.wait().unwrap();
+        assert_eq!((r0.generation, r0.x), (0, vec![1.0; n]), "pre-swap ticket solves gen 0");
+        assert_eq!((r1.generation, r1.x), (1, vec![0.25; n]), "post-swap ticket solves gen 1");
+        // Drained: generation 0 is idle and collectable, exactly once.
+        assert_eq!(service.collect_idle(5), vec![FactorId::base(5)]);
+        assert!(service.collect_idle(5).is_empty(), "collection is idempotent");
+        // The current generation keeps serving after collection.
+        let r2 = service.submit(5, vec![4.0; n]).unwrap().wait().unwrap();
+        assert_eq!((r2.generation, r2.x), (1, vec![1.0; n]));
         let _ = std::fs::remove_dir_all(&dir);
     }
 

@@ -39,6 +39,12 @@
 //!    drops its [`SolveService`], whose shutdown path serves every
 //!    already-queued request before the thread exits — tickets issued
 //!    before the rebalance resolve normally.
+//! 5. **Generations never enter routing.** `shard_of`/`owner_of` hash
+//!    the *base* key, so a hot-swap ([`ShardedService::swap`]) changes
+//!    which generation the owner admits — never which worker owns the
+//!    key. Rebalance migration re-registers every still-live
+//!    generation at its recorded [`FactorId`], so tickets pinned
+//!    across a swap survive a rebalance too.
 //!
 //! ## Example
 //!
@@ -63,7 +69,7 @@ use crate::profile;
 use crate::serve::service::{
     ServeError, ServeOpts, ServedBatch, ServiceStats, SolveService, Ticket,
 };
-use crate::serve::store::{fnv1a, fnv1a_extend, FactorStore, StoreError, StoredFactor};
+use crate::serve::store::{fnv1a, fnv1a_extend, FactorId, FactorStore, StoreError, StoredFactor};
 use crate::tlr::matrix::TlrMatrix;
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicBool, Ordering};
@@ -368,9 +374,12 @@ struct State {
     /// Next profile slot to hand to a newly added worker.
     next_slot: usize,
     /// Mirror of in-memory registrations, for rebalance migration.
-    /// `Arc`-shared with every worker registry holding the value, so
-    /// mirroring and migration never deep-copy a factor.
-    registered: HashMap<u64, Arc<StoredFactor>>,
+    /// Keyed by the full [`FactorId`] — a key mid-swap mirrors every
+    /// still-live generation, and migration re-registers each at its
+    /// recorded generation so routing *and* pinning survive a
+    /// rebalance. `Arc`-shared with every worker registry holding the
+    /// value, so mirroring and migration never deep-copy a factor.
+    registered: HashMap<FactorId, Arc<StoredFactor>>,
     registered_mats: HashMap<u64, Arc<TlrMatrix>>,
     /// Counters of workers removed from the fleet, folded into
     /// [`ShardedService::stats`] so the aggregate stays monotone
@@ -511,7 +520,58 @@ impl ShardedService {
         let mut state = self.state.write().unwrap();
         let w = state.route(key);
         state.workers[w].service.register_shared(key, f.clone());
-        state.registered.insert(key, f);
+        state.registered.insert(FactorId::base(key), f);
+    }
+
+    /// Hot-swap `key` to a new generation on its owning worker (see
+    /// [`SolveService::swap`]). Routing is untouched — the shard owner
+    /// is a function of the *base* key, so a swap never migrates
+    /// shards; only the admission target inside the owner changes.
+    /// Returns the new [`FactorId`].
+    pub fn swap(&self, key: u64, f: StoredFactor) -> FactorId {
+        let f = Arc::new(f);
+        let mut state = self.state.write().unwrap();
+        let w = state.route(key);
+        let id = state.workers[w].service.swap_shared(key, f.clone());
+        state.registered.insert(id, f);
+        id
+    }
+
+    /// Collect idle superseded generations of `key` on its owning
+    /// worker (see [`SolveService::collect_idle`]); collected ids also
+    /// leave the rebalance mirror so they can never be resurrected by
+    /// a later migration.
+    pub fn collect_idle(&self, key: u64) -> Vec<FactorId> {
+        let mut state = self.state.write().unwrap();
+        let w = state.route(key);
+        let collected = state.workers[w].service.collect_idle(key);
+        for id in &collected {
+            state.registered.remove(id);
+        }
+        collected
+    }
+
+    /// The generation new submissions for `key` are routed to, asked
+    /// of its owning worker.
+    pub fn current_generation(&self, key: u64) -> u32 {
+        let state = self.state.read().unwrap();
+        let w = state.route(key);
+        state.workers[w].service.current_generation(key)
+    }
+
+    /// Current generation per mirrored key, ascending by key — the
+    /// fleet-level view of the `factor_generation` gauge.
+    pub fn factor_generations(&self) -> Vec<(u64, u32)> {
+        let state = self.state.read().unwrap();
+        let mut out: Vec<(u64, u32)> = Vec::new();
+        for id in state.registered.keys() {
+            match out.iter_mut().find(|(k, _)| *k == id.key) {
+                Some((_, g)) => *g = (*g).max(id.generation),
+                None => out.push((id.key, id.generation)),
+            }
+        }
+        out.sort_unstable();
+        out
     }
 
     /// Register the TLR operator for PCG requests under `key`.
@@ -663,20 +723,26 @@ impl ShardedService {
         let mut keys: Vec<u64> = state
             .registered
             .keys()
-            .chain(state.registered_mats.keys())
-            .copied()
+            .map(|id| id.key)
+            .chain(state.registered_mats.keys().copied())
             .filter(|&k| moved.contains(&state.map.shard_of(k)))
             .collect();
         // A key carrying both a factor and an operator appears in both
-        // mirrors; process it once.
+        // mirrors (and once per live generation); process it once.
         keys.sort_unstable();
         keys.dedup();
         let mut releases = self.releases.lock().unwrap();
         for key in keys {
             let owner = state.map.owner_of(key).to_string();
             let new = state.worker_index(&owner);
-            if let Some(f) = state.registered.get(&key) {
-                state.workers[new].service.register_shared(key, f.clone());
+            // Re-register every live generation at its recorded id,
+            // ascending, so the destination ends pinned to the newest.
+            let mut ids: Vec<FactorId> =
+                state.registered.keys().copied().filter(|id| id.key == key).collect();
+            ids.sort_unstable();
+            for id in ids {
+                let f = state.registered[&id].clone();
+                state.workers[new].service.register_id_shared(id, f);
             }
             if let Some(a) = state.registered_mats.get(&key) {
                 state.workers[new].service.register_matrix_shared(key, a.clone());

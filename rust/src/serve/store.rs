@@ -36,6 +36,13 @@
 //! views just as zero-copy as the f64 ones. v1 files (no precision
 //! word) still load, decoding every tile as f64.
 //!
+//! **Version 3** prepends the factor *generation* (a `u64`, see
+//! [`FactorId`]) as the first header word of every kind, so a frame is
+//! self-describing about which generation of its key it holds. v1/v2
+//! frames (no generation word) still load and report generation 0 —
+//! the live-lifecycle layers treat an ungenerated file as the base
+//! generation of its key.
+//!
 //! Three kinds share the layout:
 //!
 //! * kind 0 — a symmetric [`TlrMatrix`];
@@ -56,9 +63,11 @@ use std::sync::Arc;
 const MAGIC: &[u8; 8] = b"H2OTLRSF";
 /// Current format version. v2 added a per-tile precision word to the
 /// tile metadata (mixed-precision factors): v1 tile meta is 4 `u64`s
-/// `(tag, rows, cols, rank)`, v2 is 5 with a trailing `prec`. Decoders
-/// still read v1 files (all tiles f64).
-const VERSION: u32 = 2;
+/// `(tag, rows, cols, rank)`, v2 is 5 with a trailing `prec`. v3
+/// prepends the factor generation as the first header word. Decoders
+/// still read v1/v2 files (all tiles f64 for v1; generation 0 for
+/// both).
+const VERSION: u32 = 3;
 /// Oldest version the decoders accept.
 const MIN_VERSION: u32 = 1;
 
@@ -105,6 +114,51 @@ impl From<std::io::Error> for StoreError {
 
 fn format_err<T>(msg: impl Into<String>) -> Result<T, StoreError> {
     Err(StoreError::Format(msg.into()))
+}
+
+// ------------------------------------------------------------ identity
+
+/// Versioned factor identity: the problem-config hash
+/// (`RunConfig::factor_key`) plus a monotonically increasing
+/// *generation*. The key names the problem; the generation names one
+/// factorization of it. Rank-k updates ([`crate::tlr::update`]) and
+/// refactorizations produce new generations of the same key, so the
+/// serve layers can hot-swap a fresh factor under live traffic while
+/// in-flight tickets finish on the generation they were admitted under.
+///
+/// Ordering is `(key, generation)` lexicographic, so for a fixed key
+/// the maximum `FactorId` is the newest generation (what
+/// [`FactorStore::latest`] returns).
+///
+/// The generation never participates in shard routing or in
+/// `factor_key()` itself — routing stays a pure function of the base
+/// key, so a swap never migrates a key between shards.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct FactorId {
+    /// Problem-config hash (`RunConfig::factor_key`).
+    pub key: u64,
+    /// Generation counter, starting at 0 (the base generation — what
+    /// every pre-v3 store file holds).
+    pub generation: u32,
+}
+
+impl FactorId {
+    /// Generation 0 of `key` — the identity every ungenerated (v1/v2)
+    /// store file and every legacy flat-key call site resolves to.
+    pub fn base(key: u64) -> FactorId {
+        FactorId { key, generation: 0 }
+    }
+
+    /// The next generation of the same key.
+    pub fn next(self) -> FactorId {
+        FactorId { key: self.key, generation: self.generation + 1 }
+    }
+}
+
+impl std::fmt::Display for FactorId {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{:016x}@g{}", self.key, self.generation)
+    }
 }
 
 // ------------------------------------------------------------- hashing
@@ -180,6 +234,16 @@ impl<'a> HeaderReader<'a> {
         }
         Ok(())
     }
+}
+
+/// Read the leading generation header word (v3+); v1/v2 frames have
+/// none and report generation 0.
+fn read_generation_word(h: &mut HeaderReader<'_>, version: u32) -> Result<u32, StoreError> {
+    if version < 3 {
+        return Ok(0);
+    }
+    let g = h.u64()?;
+    u32::try_from(g).map_err(|_| StoreError::Format(format!("implausible generation {g}")))
 }
 
 fn tlr_header(h: &mut HeaderWriter, a: &TlrMatrix) {
@@ -547,11 +611,32 @@ fn unframe(bytes: &[u8], want_kind: u32) -> Result<(u32, &[u8], Vec<f64>), Store
     Ok((fr.version, fr.header, payload))
 }
 
+/// Read the generation stamped into a frame of any kind, after full
+/// validation (magic, lengths, checksum). v1/v2 frames report 0.
+pub fn decode_generation(bytes: &[u8]) -> Result<u32, StoreError> {
+    if bytes.len() < 16 {
+        return format_err("file shorter than the fixed prefix");
+    }
+    let kind = u32::from_le_bytes(bytes[12..16].try_into().unwrap());
+    if kind > KIND_LDL {
+        return format_err(format!("unknown kind {kind}"));
+    }
+    let fr = unframe_ref(bytes, kind)?;
+    let mut h = HeaderReader::new(fr.header);
+    read_generation_word(&mut h, fr.version)
+}
+
 // ------------------------------------------------------- encode/decode
 
-/// Serialize a symmetric [`TlrMatrix`] (kind 0).
+/// Serialize a symmetric [`TlrMatrix`] (kind 0) at generation 0.
 pub fn encode_tlr(a: &TlrMatrix) -> Vec<u8> {
+    encode_tlr_gen(a, 0)
+}
+
+/// [`encode_tlr`] stamped with an explicit generation.
+pub fn encode_tlr_gen(a: &TlrMatrix, generation: u32) -> Vec<u8> {
     let mut h = HeaderWriter::default();
+    h.u64(generation as u64);
     tlr_header(&mut h, a);
     let mut payload = Vec::new();
     tlr_payload(&mut payload, a);
@@ -570,6 +655,7 @@ fn decode_tlr_parts(
     mut taker: Taker<'_>,
 ) -> Result<TlrMatrix, StoreError> {
     let mut h = HeaderReader::new(header);
+    let _generation = read_generation_word(&mut h, version)?;
     let (offsets, metas) = read_tlr_header(&mut h, version)?;
     h.done()?;
     let a = read_tlr_tiles(&mut taker, offsets, &metas)?;
@@ -579,10 +665,17 @@ fn decode_tlr_parts(
     Ok(a)
 }
 
-/// Serialize a [`CholFactor`] (kind 1): the TLR `L` plus the tile
-/// permutation. Run statistics are ephemeral and not stored.
+/// Serialize a [`CholFactor`] (kind 1) at generation 0: the TLR `L`
+/// plus the tile permutation. Run statistics are ephemeral and not
+/// stored.
 pub fn encode_chol(f: &CholFactor) -> Vec<u8> {
+    encode_chol_gen(f, 0)
+}
+
+/// [`encode_chol`] stamped with an explicit generation.
+pub fn encode_chol_gen(f: &CholFactor, generation: u32) -> Vec<u8> {
     let mut h = HeaderWriter::default();
+    h.u64(generation as u64);
     tlr_header(&mut h, &f.l);
     assert_eq!(f.stats.perm.len(), f.l.nb(), "factor permutation must cover every tile");
     for &p in &f.stats.perm {
@@ -607,6 +700,7 @@ fn decode_chol_parts(
     mut taker: Taker<'_>,
 ) -> Result<CholFactor, StoreError> {
     let mut h = HeaderReader::new(header);
+    let _generation = read_generation_word(&mut h, version)?;
     let (offsets, metas) = read_tlr_header(&mut h, version)?;
     let nb = offsets.len() - 1;
     let mut perm = Vec::with_capacity(nb);
@@ -630,11 +724,17 @@ fn decode_chol_parts(
     Ok(CholFactor { l, stats: FactorStats { perm, ..Default::default() } })
 }
 
-/// Serialize an [`LdlFactor`] (kind 2): the TLR `L` with the flat
-/// diagonal `D` appended to the payload (its block lengths are the tile
-/// sizes, so no extra header is needed).
+/// Serialize an [`LdlFactor`] (kind 2) at generation 0: the TLR `L`
+/// with the flat diagonal `D` appended to the payload (its block
+/// lengths are the tile sizes, so no extra header is needed).
 pub fn encode_ldl(f: &LdlFactor) -> Vec<u8> {
+    encode_ldl_gen(f, 0)
+}
+
+/// [`encode_ldl`] stamped with an explicit generation.
+pub fn encode_ldl_gen(f: &LdlFactor, generation: u32) -> Vec<u8> {
     let mut h = HeaderWriter::default();
+    h.u64(generation as u64);
     tlr_header(&mut h, &f.l);
     let mut payload = Vec::new();
     tlr_payload(&mut payload, &f.l);
@@ -661,6 +761,7 @@ fn decode_ldl_parts(
     mut taker: Taker<'_>,
 ) -> Result<LdlFactor, StoreError> {
     let mut h = HeaderReader::new(header);
+    let _generation = read_generation_word(&mut h, version)?;
     let (offsets, metas) = read_tlr_header(&mut h, version)?;
     h.done()?;
     let nb = offsets.len() - 1;
@@ -859,12 +960,21 @@ impl StoredFactor {
 }
 
 /// Directory of persisted factors keyed by a problem-config hash
-/// (`RunConfig::factor_key`). Layout:
+/// (`RunConfig::factor_key`) plus a generation counter ([`FactorId`]).
+/// Layout:
 ///
 /// ```text
-/// <root>/<key as 016x hex>/chol.bin   (or ldl.bin)
-/// <root>/<key as 016x hex>/meta.txt   (human-readable description)
+/// <root>/<key as 016x hex>/chol.bin      (or ldl.bin — generation 0)
+/// <root>/<key as 016x hex>/chol.g7.bin   (or ldl.g7.bin — generation 7)
+/// <root>/<key as 016x hex>/meta.txt      (human-readable description)
 /// ```
+///
+/// Generation 0 keeps the unsuffixed name, so every store written
+/// before generations existed is readable as-is (its sole factor *is*
+/// generation 0) and every flat-key call site keeps resolving. The
+/// flat-key loaders ([`FactorStore::load`], [`FactorStore::load_mapped`],
+/// [`FactorStore::contains`]) resolve to the **newest** generation via
+/// [`FactorStore::latest`]; the `_id` variants pin an exact generation.
 ///
 /// One directory per key keeps eviction and inspection trivial (`rm -r`
 /// a key, `ls` the root). `Clone` re-uses the already-created root, so
@@ -873,6 +983,24 @@ impl StoredFactor {
 #[derive(Clone)]
 pub struct FactorStore {
     root: PathBuf,
+}
+
+/// Parse a factor file name into (is_chol, generation):
+/// `chol.bin` → `(true, 0)`, `ldl.g12.bin` → `(false, 12)`. Anything
+/// else (meta.txt, tlr.bin, in-flight temp files) is `None`.
+fn parse_factor_name(name: &str) -> Option<(bool, u32)> {
+    let (is_chol, rest) = if let Some(r) = name.strip_prefix("chol") {
+        (true, r)
+    } else if let Some(r) = name.strip_prefix("ldl") {
+        (false, r)
+    } else {
+        return None;
+    };
+    if rest == ".bin" {
+        return Some((is_chol, 0));
+    }
+    let g = rest.strip_prefix(".g")?.strip_suffix(".bin")?;
+    g.parse::<u32>().ok().map(|g| (is_chol, g))
 }
 
 impl FactorStore {
@@ -891,21 +1019,87 @@ impl FactorStore {
         self.root.join(format!("{key:016x}"))
     }
 
-    fn chol_path(&self, key: u64) -> PathBuf {
-        self.key_dir(key).join("chol.bin")
+    /// `chol.bin` for generation 0, `chol.g<n>.bin` above it.
+    fn chol_path_id(&self, id: FactorId) -> PathBuf {
+        self.key_dir(id.key).join(match id.generation {
+            0 => "chol.bin".to_string(),
+            g => format!("chol.g{g}.bin"),
+        })
     }
 
-    fn ldl_path(&self, key: u64) -> PathBuf {
-        self.key_dir(key).join("ldl.bin")
+    fn ldl_path_id(&self, id: FactorId) -> PathBuf {
+        self.key_dir(id.key).join(match id.generation {
+            0 => "ldl.bin".to_string(),
+            g => format!("ldl.g{g}.bin"),
+        })
     }
 
     fn tlr_path(&self, key: u64) -> PathBuf {
         self.key_dir(key).join("tlr.bin")
     }
 
-    /// Does any factor exist under `key`?
+    /// Every generation stored under `key`, ascending. Missing key
+    /// directory reads as "no generations", not an error.
+    pub fn generations(&self, key: u64) -> Result<Vec<FactorId>, StoreError> {
+        let dir = self.key_dir(key);
+        let entries = match std::fs::read_dir(&dir) {
+            Ok(e) => e,
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(Vec::new()),
+            Err(e) => return Err(e.into()),
+        };
+        let mut gens = Vec::new();
+        for entry in entries {
+            let entry = entry?;
+            if let Some(name) = entry.file_name().to_str() {
+                if let Some((_, g)) = parse_factor_name(name) {
+                    gens.push(g);
+                }
+            }
+        }
+        gens.sort_unstable();
+        gens.dedup();
+        Ok(gens.into_iter().map(|generation| FactorId { key, generation }).collect())
+    }
+
+    /// The newest generation stored under `key`, if any. This is what
+    /// every flat-key loader resolves through, so a process that never
+    /// heard of generations transparently serves the freshest factor.
+    pub fn latest(&self, key: u64) -> Result<Option<FactorId>, StoreError> {
+        Ok(self.generations(key)?.pop())
+    }
+
+    /// Remove every generation of `key` older than `keep` (both factor
+    /// kinds; the TLR operator matrix is per-key, not per-generation,
+    /// and is left alone). Returns the collected ids.
+    pub fn gc_superseded(&self, key: u64, keep: u32) -> Result<Vec<FactorId>, StoreError> {
+        let mut removed = Vec::new();
+        for id in self.generations(key)? {
+            if id.generation >= keep {
+                continue;
+            }
+            let mut hit = false;
+            for p in [self.chol_path_id(id), self.ldl_path_id(id)] {
+                match std::fs::remove_file(&p) {
+                    Ok(()) => hit = true,
+                    Err(e) if e.kind() == std::io::ErrorKind::NotFound => {}
+                    Err(e) => return Err(e.into()),
+                }
+            }
+            if hit {
+                removed.push(id);
+            }
+        }
+        Ok(removed)
+    }
+
+    /// Does any factor exist under `key` (any generation)?
     pub fn contains(&self, key: u64) -> bool {
-        self.chol_path(key).exists() || self.ldl_path(key).exists()
+        self.latest(key).ok().flatten().is_some()
+    }
+
+    /// Does the exact generation `id` exist?
+    pub fn contains_id(&self, id: FactorId) -> bool {
+        self.chol_path_id(id).exists() || self.ldl_path_id(id).exists()
     }
 
     /// Does a TLR operator matrix exist under `key`?
@@ -913,24 +1107,52 @@ impl FactorStore {
         self.tlr_path(key).exists()
     }
 
-    /// Persist a Cholesky factor under `key`, with a human-readable
-    /// description alongside. A key holds exactly one factor: saving
-    /// replaces a previously stored factor of the other kind.
+    /// Persist a Cholesky factor as generation 0 of `key`, with a
+    /// human-readable description alongside. A generation holds exactly
+    /// one factor: saving replaces a previously stored factor of the
+    /// other kind at the same generation (other generations untouched).
     pub fn save_chol(&self, key: u64, f: &CholFactor, desc: &str) -> Result<PathBuf, StoreError> {
-        let path = self.chol_path(key);
-        save_chol(&path, f)?;
-        let _ = std::fs::remove_file(self.ldl_path(key));
+        let id = FactorId::base(key);
+        let path = self.chol_path_id(id);
+        write_file(&path, &encode_chol_gen(f, id.generation))?;
+        let _ = std::fs::remove_file(self.ldl_path_id(id));
         let _ = std::fs::write(self.key_dir(key).join("meta.txt"), desc);
         Ok(path)
     }
 
-    /// Persist an LDLᵀ factor under `key` (replacing a Cholesky factor
-    /// previously stored there, if any — a key holds one factor).
+    /// Persist an LDLᵀ factor as generation 0 of `key` (replacing a
+    /// Cholesky factor previously stored at that generation, if any).
     pub fn save_ldl(&self, key: u64, f: &LdlFactor, desc: &str) -> Result<PathBuf, StoreError> {
-        let path = self.ldl_path(key);
-        save_ldl(&path, f)?;
-        let _ = std::fs::remove_file(self.chol_path(key));
+        let id = FactorId::base(key);
+        let path = self.ldl_path_id(id);
+        write_file(&path, &encode_ldl_gen(f, id.generation))?;
+        let _ = std::fs::remove_file(self.chol_path_id(id));
         let _ = std::fs::write(self.key_dir(key).join("meta.txt"), desc);
+        Ok(path)
+    }
+
+    /// Persist either factor kind at the exact generation `id`, stamping
+    /// the generation into the frame header. A generation holds one
+    /// factor: the same-generation file of the other kind is removed;
+    /// every other generation of the key is untouched (GC is explicit,
+    /// via [`FactorStore::gc_superseded`]).
+    pub fn save_stored(
+        &self,
+        id: FactorId,
+        f: &StoredFactor,
+        desc: &str,
+    ) -> Result<PathBuf, StoreError> {
+        let (path, other, bytes) = match f {
+            StoredFactor::Chol(c) => {
+                (self.chol_path_id(id), self.ldl_path_id(id), encode_chol_gen(c, id.generation))
+            }
+            StoredFactor::Ldl(l) => {
+                (self.ldl_path_id(id), self.chol_path_id(id), encode_ldl_gen(l, id.generation))
+            }
+        };
+        write_file(&path, &bytes)?;
+        let _ = std::fs::remove_file(other);
+        let _ = std::fs::write(self.key_dir(id.key).join("meta.txt"), desc);
         Ok(path)
     }
 
@@ -962,18 +1184,27 @@ impl FactorStore {
         Ok(None)
     }
 
-    /// Load whichever factor kind is stored under `key`; `Ok(None)` if
+    /// Load the **newest** generation stored under `key`; `Ok(None)` if
     /// the key has never been saved. Load wall time lands in the
     /// `factor_load_owned_ns` histogram (hits only — misses are free).
     pub fn load(&self, key: u64) -> Result<Option<StoredFactor>, StoreError> {
+        match self.latest(key)? {
+            Some(id) => self.load_id(id),
+            None => Ok(None),
+        }
+    }
+
+    /// Load the exact generation `id`; `Ok(None)` if that generation
+    /// was never saved (or was already collected).
+    pub fn load_id(&self, id: FactorId) -> Result<Option<StoredFactor>, StoreError> {
         let t0 = std::time::Instant::now();
-        let cp = self.chol_path(key);
+        let cp = self.chol_path_id(id);
         if cp.exists() {
             let f = StoredFactor::Chol(load_chol(&cp)?);
             crate::obs::record_elapsed(crate::obs::HistId::FactorLoadOwned, t0);
             return Ok(Some(f));
         }
-        let lp = self.ldl_path(key);
+        let lp = self.ldl_path_id(id);
         if lp.exists() {
             let f = StoredFactor::Ldl(load_ldl(&lp)?);
             crate::obs::record_elapsed(crate::obs::HistId::FactorLoadOwned, t0);
@@ -982,7 +1213,7 @@ impl FactorStore {
         Ok(None)
     }
 
-    /// Load whichever factor kind is stored under `key` via the
+    /// Load the **newest** generation stored under `key` via the
     /// zero-copy mapped path: the checksum and header are validated
     /// once, then every tile is a [`MappedSlice`] view into the `mmap` —
     /// no `f64` payload copy. Dropping the returned factor (e.g. LRU
@@ -991,8 +1222,16 @@ impl FactorStore {
     /// the `factor_load_mapped_ns` histogram — compare against
     /// `factor_load_owned_ns` to see what zero-copy buys.
     pub fn load_mapped(&self, key: u64) -> Result<Option<Mapped<StoredFactor>>, StoreError> {
+        match self.latest(key)? {
+            Some(id) => self.load_mapped_id(id),
+            None => Ok(None),
+        }
+    }
+
+    /// [`FactorStore::load_id`] via the zero-copy mapped path.
+    pub fn load_mapped_id(&self, id: FactorId) -> Result<Option<Mapped<StoredFactor>>, StoreError> {
         let t0 = std::time::Instant::now();
-        let cp = self.chol_path(key);
+        let cp = self.chol_path_id(id);
         if cp.exists() {
             let m = load_chol_mapped(&cp)?;
             crate::obs::record_elapsed(crate::obs::HistId::FactorLoadMapped, t0);
@@ -1002,7 +1241,7 @@ impl FactorStore {
                 mapped_bytes: m.mapped_bytes,
             }));
         }
-        let lp = self.ldl_path(key);
+        let lp = self.ldl_path_id(id);
         if lp.exists() {
             let m = load_ldl_mapped(&lp)?;
             crate::obs::record_elapsed(crate::obs::HistId::FactorLoadMapped, t0);
@@ -1295,6 +1534,7 @@ mod tests {
         // on both the owned and the mapped loader.
         let a = random_tlr(&[4, 4], 2, 25);
         let mut h = HeaderWriter::default();
+        h.u64(0); // v3 generation word
         h.usize(2);
         for &off in a.offsets() {
             h.usize(off);
@@ -1326,6 +1566,99 @@ mod tests {
             }
         }
         let _ = std::fs::remove_file(&path);
+    }
+
+    /// Encode a Cholesky factor in the v2 layout (no generation word)
+    /// so the compat test exercises a byte-identical pre-lifecycle file.
+    fn encode_chol_v2(f: &CholFactor) -> Vec<u8> {
+        let mut h = HeaderWriter::default();
+        tlr_header(&mut h, &f.l);
+        for &p in &f.stats.perm {
+            h.usize(p);
+        }
+        let mut payload = Vec::new();
+        tlr_payload(&mut payload, &f.l);
+        frame_with_version(2, KIND_CHOL, &h.buf, &payload)
+    }
+
+    #[test]
+    fn v2_frame_loads_as_generation_zero() {
+        let f = CholFactor {
+            l: random_tlr(&[4, 4], 2, 40),
+            stats: FactorStats { perm: vec![0, 1], ..Default::default() },
+        };
+        let bytes = encode_chol_v2(&f);
+        assert_eq!(u32::from_le_bytes(bytes[8..12].try_into().unwrap()), 2);
+        assert_eq!(decode_generation(&bytes).unwrap(), 0);
+        let back = decode_chol(&bytes).unwrap();
+        assert_tiles_bitwise(&f.l, &back.l);
+
+        // And on disk: a pre-generation store file resolves as the
+        // latest (and only) generation of its key.
+        let dir = std::env::temp_dir().join(format!("h2otlr_store_v2_{}", std::process::id()));
+        let store = FactorStore::open(&dir).unwrap();
+        let key = 0xBEEF;
+        std::fs::create_dir_all(dir.join(format!("{key:016x}"))).unwrap();
+        std::fs::write(dir.join(format!("{key:016x}")).join("chol.bin"), &bytes).unwrap();
+        assert_eq!(store.latest(key).unwrap(), Some(FactorId::base(key)));
+        assert!(store.load(key).unwrap().is_some());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn generation_roundtrip_latest_and_gc() {
+        let dir = std::env::temp_dir().join(format!("h2otlr_store_gen_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let store = FactorStore::open(&dir).unwrap();
+        let key = 0xFACADE;
+        assert_eq!(store.latest(key).unwrap(), None);
+
+        let f0 = CholFactor {
+            l: random_tlr(&[4, 4], 2, 41),
+            stats: FactorStats { perm: vec![0, 1], ..Default::default() },
+        };
+        store.save_chol(key, &f0, "gen0").unwrap();
+        assert_eq!(store.latest(key).unwrap(), Some(FactorId::base(key)));
+
+        // A later generation is stamped into its frame and wins latest().
+        let id1 = FactorId { key, generation: 1 };
+        let f1 = CholFactor {
+            l: random_tlr(&[4, 4], 2, 42),
+            stats: FactorStats { perm: vec![0, 1], ..Default::default() },
+        };
+        let p1 = store.save_stored(id1, &StoredFactor::Chol(f1.clone()), "gen1").unwrap();
+        assert_eq!(decode_generation(&std::fs::read(&p1).unwrap()).unwrap(), 1);
+        assert_eq!(store.latest(key).unwrap(), Some(id1));
+        assert_eq!(
+            store.generations(key).unwrap(),
+            vec![FactorId::base(key), id1]
+        );
+
+        // Flat-key load resolves the newest; pinned loads see their own.
+        match store.load(key).unwrap().unwrap() {
+            StoredFactor::Chol(c) => assert_tiles_bitwise(&c.l, &f1.l),
+            _ => panic!("expected chol"),
+        }
+        match store.load_id(FactorId::base(key)).unwrap().unwrap() {
+            StoredFactor::Chol(c) => assert_tiles_bitwise(&c.l, &f0.l),
+            _ => panic!("expected chol"),
+        }
+
+        // GC removes superseded generations only.
+        let removed = store.gc_superseded(key, 1).unwrap();
+        assert_eq!(removed, vec![FactorId::base(key)]);
+        assert!(store.load_id(FactorId::base(key)).unwrap().is_none());
+        assert_eq!(store.latest(key).unwrap(), Some(id1));
+        assert!(store.load_mapped_id(id1).unwrap().is_some());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn factor_id_display_and_order() {
+        let a = FactorId { key: 0xAB, generation: 0 };
+        assert_eq!(a.to_string(), "00000000000000ab@g0");
+        assert!(a < a.next());
+        assert_eq!(a.next().generation, 1);
     }
 
     #[test]

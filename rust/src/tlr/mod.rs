@@ -1,12 +1,17 @@
 //! Tile Low Rank matrix format: tile storage, symmetric TLR matrices,
-//! construction from implicit generators, and memory/rank accounting.
+//! construction from implicit generators, memory/rank accounting, and
+//! rank-k incremental updates of stored factors.
 
 pub mod construct;
 pub mod matrix;
 pub mod mixed;
 pub mod tile;
+pub mod update;
 
 pub use construct::{build_tlr, BuildOpts, Compression};
 pub use matrix::{MemoryReport, TlrMatrix};
 pub use mixed::{demote_offdiag, should_demote, DemotionStats, MixedTlr};
 pub use tile::{LowRank, LowRank32, Tile};
+pub use update::{
+    chol_rank_k_update, ldl_rank_k_update, update_error_class, UpdateError, UpdateStats,
+};

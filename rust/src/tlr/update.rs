@@ -1,0 +1,499 @@
+//! Rank-k incremental update of a stored TLR factor: given the Cholesky
+//! (or LDLᵀ) factor of `A`, produce the factor of `A + WWᵀ` without a
+//! full refactorization.
+//!
+//! The driver is the blocked Gill–Golub–Murray–Saunders scheme, walked
+//! left-to-right over block columns with a per-block-row carry `W_i`
+//! (initially the block rows of `W`):
+//!
+//! 1. Diagonal step `j`: the QR of the zero-augmented square
+//!    `[L_jjᵀ; W_jᵀ | 0]` yields a *full* `(m+p)²` orthogonal `Q` (the
+//!    zero columns contribute identity reflectors, see
+//!    [`crate::linalg::qr::householder_qr`]) with
+//!    `[L_jj | W_j]·Q = [L'_jj | 0]` after the usual sign fix.
+//! 2. Every tile below applies the same rotation:
+//!    `[L'(i,j) | W'_i] = [L(i,j) | W_i]·Q`. For a low-rank tile
+//!    `L(i,j) = u·vᵀ` this is *tile-local* algebra on the factors —
+//!    `L'(i,j) = [u | W_i]·[Qaᵀv | Qcᵀ]ᵀ` (rank grows by at most `p`)
+//!    and the new carry is the dense `p`-column
+//!    `W'_i = u·(vᵀQb) + W_i·Qd`.
+//! 3. The widened tiles of the column are re-compressed back to ε
+//!    through the same [`batched_ara`] pipeline the factorization uses,
+//!    sampling the low-rank pair directly — far cheaper than the
+//!    left-looking sample chains of a refactorization, which is where
+//!    the flops advantage reported in [`UpdateStats::batch`] comes from.
+//!
+//! A block column whose carry is exactly zero is skipped whole: an
+//! update supported on late block rows never touches the early columns
+//! ([`UpdateStats::cols_skipped`]).
+//!
+//! The LDLᵀ variant scales the factor into Cholesky form column-wise
+//! (`L·diag(√d_j)`), runs the same update, and unscales; it therefore
+//! requires every stored `d` entry to be positive
+//! ([`UpdateError::IndefiniteDiagonal`]).
+//!
+//! `W` must be expressed in the factor's row order: for a pivoted
+//! factor, permute with [`crate::factor::CholFactor::scalar_perm`]
+//! first.
+
+use crate::ara::sampler::{LowRankSampler, Sampler};
+use crate::ara::{batched_ara, AraOpts};
+use crate::batch::BatchStats;
+use crate::factor::FactorOpts;
+use crate::linalg::blas::{scale_cols, scale_rows};
+use crate::linalg::gemm::{gemm, gemm_flops, matmul, matmul_tn};
+use crate::linalg::qr::householder_qr;
+use crate::linalg::{Matrix, Trans};
+use crate::tlr::matrix::TlrMatrix;
+use crate::tlr::tile::{LowRank, Tile};
+
+/// Rank-k update failure.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum UpdateError {
+    /// `W` (or the block diagonal `d`) does not conform to the factor.
+    BadShape { expected: usize, got: usize },
+    /// An LDLᵀ block carries a non-positive diagonal entry: the scaling
+    /// to Cholesky form (and with it the QR-based update) is undefined.
+    IndefiniteDiagonal { block: usize },
+}
+
+impl std::fmt::Display for UpdateError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            UpdateError::BadShape { expected, got } => {
+                write!(f, "update operand does not conform: expected {expected}, got {got}")
+            }
+            UpdateError::IndefiniteDiagonal { block } => {
+                write!(f, "LDL^T block {block} has a non-positive diagonal entry")
+            }
+        }
+    }
+}
+
+impl std::error::Error for UpdateError {}
+
+/// Map an [`UpdateError`] to its `obs` counter class, exhaustively by
+/// construction (`tools/static_audit.py` check 9): no update failure is
+/// observability-silent.
+pub fn update_error_class(e: &UpdateError) -> crate::obs::UpdateErrorClass {
+    match e {
+        UpdateError::BadShape { .. } => crate::obs::UpdateErrorClass::BadShape,
+        UpdateError::IndefiniteDiagonal { .. } => crate::obs::UpdateErrorClass::IndefiniteDiagonal,
+    }
+}
+
+/// Count the error in the `obs` counters on the way out.
+fn fail(e: UpdateError) -> UpdateError {
+    crate::obs::note_update_error(update_error_class(&e));
+    e
+}
+
+/// What a rank-k update did, and what it cost.
+#[derive(Debug, Default)]
+pub struct UpdateStats {
+    /// Batched-ARA scheduler/executor stats of the re-compression
+    /// passes; `batch.gemm_flops` is directly comparable with
+    /// `FactorStats::batch.gemm_flops` of a refactorization.
+    pub batch: BatchStats,
+    /// Tiles rewritten (diagonal and off-diagonal).
+    pub tiles_touched: usize,
+    /// Tiles left untouched because their whole column was skipped.
+    pub tiles_skipped: usize,
+    /// Block columns skipped because the carry was exactly zero.
+    pub cols_skipped: usize,
+    /// Flops of the dense (non-batched) side: carry QRs and the
+    /// tile-local rotations.
+    pub dense_flops: u64,
+    /// Wall time of the whole update.
+    pub seconds: f64,
+}
+
+/// Update the TLR Cholesky factor `l` of `A` in place into the factor
+/// of `A + WWᵀ` (`w` is `n×p`, `p` small). Tile-local work plus one
+/// batched-ARA re-compression per touched column; see the module docs
+/// for the algorithm and skipping rules.
+pub fn chol_rank_k_update(
+    l: &mut TlrMatrix,
+    w: &Matrix,
+    opts: &FactorOpts,
+) -> Result<UpdateStats, UpdateError> {
+    let t0 = std::time::Instant::now();
+    if w.rows() != l.n() {
+        return Err(fail(UpdateError::BadShape { expected: l.n(), got: w.rows() }));
+    }
+    let p = w.cols();
+    let mut stats = UpdateStats::default();
+    let nb = l.nb();
+    if p == 0 {
+        return Ok(stats);
+    }
+    let mut carry: Vec<Matrix> =
+        (0..nb).map(|i| w.submatrix(l.tile_start(i), 0, l.tile_size(i), p)).collect();
+
+    for j in 0..nb {
+        if carry[j].norm_fro() == 0.0 {
+            stats.cols_skipped += 1;
+            stats.tiles_skipped += nb - j;
+            continue;
+        }
+        stats.tiles_touched += nb - j;
+        let m = l.tile_size(j);
+
+        // Diagonal: annihilate the carry against L_jj. QR of the
+        // zero-augmented square gives the full orthogonal basis.
+        let mut maug = Matrix::zeros(m + p, m + p);
+        maug.set_submatrix(0, 0, &l.tile(j, j).as_dense().transpose());
+        maug.set_submatrix(m, 0, &carry[j].transpose());
+        let (mut q, r) = householder_qr(&maug);
+        stats.dense_flops += 2 * ((m + p) * (m + p) * m) as u64;
+
+        // Sign fix: L'_jj = R₁ᵀ·D with D = diag(sign R₁_cc); the same D
+        // flips the first m columns of Q to compensate.
+        let signs: Vec<f64> = (0..m).map(|c| if r[(c, c)] < 0.0 { -1.0 } else { 1.0 }).collect();
+        let mut ljj = Matrix::zeros(m, m);
+        for c in 0..m {
+            for rr in 0..=c {
+                ljj[(c, rr)] = signs[rr] * r[(rr, c)];
+            }
+        }
+        for (c, &s) in signs.iter().enumerate() {
+            if s < 0.0 {
+                for rr in 0..m + p {
+                    q[(rr, c)] = -q[(rr, c)];
+                }
+            }
+        }
+        let qa = q.submatrix(0, 0, m, m);
+        let qb = q.submatrix(0, m, m, p);
+        let qc = q.submatrix(m, 0, p, m);
+        let qd = q.submatrix(m, m, p, p);
+        l.set_tile(j, j, Tile::Dense(ljj));
+
+        // Below the diagonal: [L'(i,j) | W'_i] = [L(i,j) | W_i]·Q.
+        let mut dense_updates: Vec<(usize, Matrix)> = Vec::new();
+        let mut widened: Vec<LowRank> = Vec::new();
+        let mut rows_touched: Vec<usize> = Vec::new();
+        let mut priorities: Vec<usize> = Vec::new();
+        for i in j + 1..nb {
+            let mi = l.tile_size(i);
+            match l.tile(i, j) {
+                Tile::Dense(d) => {
+                    let mut dn = matmul(d, &qa);
+                    gemm(Trans::No, Trans::No, 1.0, &carry[i], &qc, 1.0, &mut dn);
+                    let mut cn = matmul(d, &qb);
+                    gemm(Trans::No, Trans::No, 1.0, &carry[i], &qd, 1.0, &mut cn);
+                    stats.dense_flops += gemm_flops(mi, m, m)
+                        + gemm_flops(mi, m, p)
+                        + gemm_flops(mi, p, m)
+                        + gemm_flops(mi, p, p);
+                    dense_updates.push((i, dn));
+                    carry[i] = cn;
+                }
+                t => {
+                    let owned32;
+                    let lr: &LowRank = match t {
+                        Tile::LowRank(lr) => lr,
+                        Tile::LowRank32(lr32) => {
+                            owned32 = lr32.to_f64();
+                            &owned32
+                        }
+                        Tile::Dense(_) => unreachable!(),
+                    };
+                    let r0 = lr.rank();
+                    // v' = [Qaᵀv | Qcᵀ], u' = [u | W_i]: rank r0 + p.
+                    let mut vp = matmul_tn(&qa, &lr.v);
+                    vp.append_cols(&qc.transpose());
+                    let mut up = lr.u.clone();
+                    up.append_cols(&carry[i]);
+                    // W'_i = u·(vᵀQb) + W_i·Qd.
+                    let s = matmul_tn(&lr.v, &qb);
+                    let mut cn = matmul(&lr.u, &s);
+                    gemm(Trans::No, Trans::No, 1.0, &carry[i], &qd, 1.0, &mut cn);
+                    stats.dense_flops += gemm_flops(m, r0, m)
+                        + gemm_flops(r0, p, m)
+                        + gemm_flops(mi, p, r0)
+                        + gemm_flops(mi, p, p);
+                    carry[i] = cn;
+                    widened.push(LowRank { u: up, v: vp });
+                    rows_touched.push(i);
+                    priorities.push(r0);
+                }
+            }
+        }
+        for (i, d) in dense_updates {
+            l.set_tile(i, j, Tile::Dense(d));
+        }
+
+        // Re-compress the widened tiles of this column back to ε with
+        // the factorization's batched-ARA pipeline, sampling the
+        // low-rank pair directly. Priorities: pre-update ranks (the
+        // paper's sortRanks heuristic).
+        if !widened.is_empty() {
+            let samplers: Vec<LowRankSampler> = widened.iter().map(LowRankSampler).collect();
+            let ops: Vec<&dyn Sampler> = samplers.iter().map(|s| s as &dyn Sampler).collect();
+            let ara_opts = AraOpts {
+                bs: opts.bs,
+                eps: opts.eps,
+                consecutive: opts.consecutive,
+                max_rank: usize::MAX,
+                trim: true,
+            };
+            let seed = opts.seed ^ ((j as u64) << 24) ^ 0x9e37_79b9_7f4a_7c15;
+            let out = batched_ara(&ops, &priorities, opts.batch_capacity, &ara_opts, seed);
+            add_batch(&mut stats.batch, &out.stats);
+            for (idx, lr) in out.tiles.into_iter().enumerate() {
+                l.set_tile(rows_touched[idx], j, Tile::LowRank(lr));
+            }
+        }
+    }
+    stats.seconds = t0.elapsed().as_secs_f64();
+    Ok(stats)
+}
+
+/// [`chol_rank_k_update`] for a stored LDLᵀ factor (`l` unit-lower with
+/// per-block diagonals `d`): scale into Cholesky form column by column,
+/// update, unscale, and refresh `d` from the updated diagonal tiles.
+pub fn ldl_rank_k_update(
+    l: &mut TlrMatrix,
+    d: &mut [Vec<f64>],
+    w: &Matrix,
+    opts: &FactorOpts,
+) -> Result<UpdateStats, UpdateError> {
+    let nb = l.nb();
+    if w.rows() != l.n() {
+        return Err(fail(UpdateError::BadShape { expected: l.n(), got: w.rows() }));
+    }
+    if d.len() != nb {
+        return Err(fail(UpdateError::BadShape { expected: nb, got: d.len() }));
+    }
+    for (b, db) in d.iter().enumerate() {
+        if db.len() != l.tile_size(b) {
+            return Err(fail(UpdateError::BadShape {
+                expected: l.tile_size(b),
+                got: db.len(),
+            }));
+        }
+        if db.iter().any(|&x| x <= 0.0) {
+            return Err(fail(UpdateError::IndefiniteDiagonal { block: b }));
+        }
+    }
+
+    // L_chol(·,j) = L(·,j)·diag(√d_j).
+    let sqrt_d: Vec<Vec<f64>> =
+        d.iter().map(|db| db.iter().map(|x| x.sqrt()).collect()).collect();
+    for j in 0..nb {
+        match l.tile_mut(j, j) {
+            Tile::Dense(t) => scale_cols(t, &sqrt_d[j]),
+            _ => panic!("diagonal tile must be dense"),
+        }
+        for i in j + 1..nb {
+            scale_tile_cols(l, i, j, &sqrt_d[j]);
+        }
+    }
+
+    let stats = chol_rank_k_update(l, w, opts)?;
+
+    // Back to LDLᵀ: d'_j = diag(L'_jj)², unit-scale columns by 1/√d'_j.
+    // A + WWᵀ ≻ 0 whenever the stored factor was genuine, so the
+    // updated diagonal is strictly positive.
+    for j in 0..nb {
+        let inv: Vec<f64> = match l.tile_mut(j, j) {
+            Tile::Dense(t) => {
+                let diag: Vec<f64> = (0..t.rows()).map(|c| t[(c, c)]).collect();
+                d[j] = diag.iter().map(|x| x * x).collect();
+                let inv: Vec<f64> = diag.iter().map(|x| 1.0 / x).collect();
+                scale_cols(t, &inv);
+                inv
+            }
+            _ => unreachable!(),
+        };
+        for i in j + 1..nb {
+            scale_tile_cols(l, i, j, &inv);
+        }
+    }
+    Ok(stats)
+}
+
+/// Scale the column space of tile `(i, j)` by `diag(s)` (`s` of length
+/// `tile_size(j)`); `LowRank32` tiles are widened to f64 on touch.
+fn scale_tile_cols(l: &mut TlrMatrix, i: usize, j: usize, s: &[f64]) {
+    if let Tile::LowRank32(lr32) = l.tile(i, j) {
+        let lr = lr32.to_f64();
+        l.set_tile(i, j, Tile::LowRank(lr));
+    }
+    match l.tile_mut(i, j) {
+        Tile::Dense(t) => scale_cols(t, s),
+        Tile::LowRank(lr) => scale_rows(&mut lr.v, s),
+        Tile::LowRank32(_) => unreachable!(),
+    }
+}
+
+/// Accumulate batched-ARA stats (same folding as the factorization's
+/// per-panel aggregation in `factor/mod.rs`).
+fn add_batch(dst: &mut BatchStats, src: &BatchStats) {
+    dst.rounds += src.rounds;
+    dst.occupancy_sum += src.occupancy_sum;
+    dst.max_in_flight = dst.max_in_flight.max(src.max_in_flight);
+    dst.gemm_waves += src.gemm_waves;
+    dst.gemm_ops += src.gemm_ops;
+    dst.gemm_flops += src.gemm_flops;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::factor::tests::tlr_covariance;
+    use crate::factor::{cholesky, ldlt};
+    use crate::linalg::gemm::matmul_nt;
+
+    /// Deterministic update supported on the lower half of the rows, so
+    /// the early block columns are provably skippable.
+    fn test_w(n: usize, p: usize) -> Matrix {
+        Matrix::from_fn(n, p, |i, j| {
+            if i < n / 2 {
+                0.0
+            } else {
+                0.2 * (((i * 131 + j * 17) % 97) as f64 / 97.0 - 0.5)
+            }
+        })
+    }
+
+    /// Exact `A + WWᵀ` on the TLR representation: dense diagonals get
+    /// the dense product, low-rank tiles get `[u|W_i]·[v|W_j]ᵀ`.
+    fn add_wwt(a: &mut TlrMatrix, w: &Matrix) {
+        let nb = a.nb();
+        let blocks: Vec<Matrix> = (0..nb)
+            .map(|i| w.submatrix(a.tile_start(i), 0, a.tile_size(i), w.cols()))
+            .collect();
+        for j in 0..nb {
+            for i in j..nb {
+                if i == j {
+                    match a.tile_mut(j, j) {
+                        Tile::Dense(t) => {
+                            gemm(Trans::No, Trans::Yes, 1.0, &blocks[j], &blocks[j], 1.0, t)
+                        }
+                        _ => unreachable!(),
+                    }
+                } else {
+                    match a.tile_mut(i, j) {
+                        Tile::LowRank(lr) => {
+                            lr.u.append_cols(&blocks[i]);
+                            lr.v.append_cols(&blocks[j]);
+                        }
+                        _ => unreachable!(),
+                    }
+                }
+            }
+        }
+    }
+
+    fn resid(l: &TlrMatrix, a: &Matrix) -> f64 {
+        let ld = l.to_dense_lower();
+        matmul_nt(&ld, &ld).sub(a).norm_fro() / a.norm_fro()
+    }
+
+    #[test]
+    fn chol_update_matches_refactor_with_fewer_batched_flops() {
+        let eps = 1e-6;
+        let (a, adense) = tlr_covariance(256, 32, 2, eps, 7);
+        let n = a.n();
+        let w = test_w(n, 3);
+        let opts = FactorOpts { eps, bs: 8, ..Default::default() };
+
+        let f = cholesky(a.clone(), &opts).unwrap();
+        let mut aw = a.clone();
+        add_wwt(&mut aw, &w);
+        let refactor = cholesky(aw, &opts).unwrap();
+
+        let mut l = f.l;
+        let st = chol_rank_k_update(&mut l, &w, &opts).unwrap();
+
+        let mut ap = adense.clone();
+        gemm(Trans::No, Trans::Yes, 1.0, &w, &w, 1.0, &mut ap);
+        let err_up = resid(&l, &ap);
+        let err_ref = resid(&refactor.l, &ap);
+        assert!(err_up < 10.0 * err_ref.max(1e-6), "err_up={err_up} err_ref={err_ref}");
+
+        // Update supported on the lower half: early columns untouched.
+        assert!(st.cols_skipped > 0, "{st:?}");
+        assert!(st.tiles_skipped > 0, "{st:?}");
+        // The incremental path re-compresses through batched ARA but
+        // must be measurably cheaper than refactorizing from scratch.
+        assert!(st.batch.gemm_flops > 0, "{st:?}");
+        assert!(
+            st.batch.gemm_flops < refactor.stats.batch.gemm_flops,
+            "update={} refactor={}",
+            st.batch.gemm_flops,
+            refactor.stats.batch.gemm_flops
+        );
+    }
+
+    #[test]
+    fn ldl_update_matches_refactor() {
+        let eps = 1e-6;
+        let (a, adense) = tlr_covariance(256, 32, 2, eps, 9);
+        let n = a.n();
+        let w = test_w(n, 2);
+        let opts = FactorOpts { eps, bs: 8, ..Default::default() };
+        let f = ldlt(a, &opts).unwrap();
+        let mut l = f.l;
+        let mut d = f.d;
+        let st = ldl_rank_k_update(&mut l, &mut d, &w, &opts).unwrap();
+        assert!(st.tiles_touched > 0);
+        assert!(d.iter().flatten().all(|&x| x > 0.0));
+
+        let mut ap = adense.clone();
+        gemm(Trans::No, Trans::Yes, 1.0, &w, &w, 1.0, &mut ap);
+        let ld = l.to_dense_lower();
+        // Unit diagonal preserved by the unscaling.
+        for c in 0..ld.rows() {
+            assert!((ld[(c, c)] - 1.0).abs() < 1e-12, "diag {c} = {}", ld[(c, c)]);
+        }
+        let dflat: Vec<f64> = d.iter().flatten().copied().collect();
+        let mut lds = ld.clone();
+        scale_cols(&mut lds, &dflat);
+        let err = matmul_nt(&lds, &ld).sub(&ap).norm_fro() / ap.norm_fro();
+        assert!(err < 1e-4, "err={err}");
+    }
+
+    #[test]
+    fn zero_update_is_exact_identity() {
+        let eps = 1e-5;
+        let (a, _) = tlr_covariance(64, 16, 2, eps, 5);
+        let opts = FactorOpts { eps, bs: 8, ..Default::default() };
+        let f = cholesky(a, &opts).unwrap();
+        let before = f.l.to_dense_lower();
+        let mut l = f.l;
+        let st = chol_rank_k_update(&mut l, &Matrix::zeros(64, 2), &opts).unwrap();
+        assert_eq!(st.cols_skipped, 4);
+        assert_eq!(st.tiles_touched, 0);
+        assert_eq!(st.batch.gemm_flops, 0);
+        assert_eq!(before.sub(&l.to_dense_lower()).norm_fro(), 0.0);
+        // p == 0 short-circuits before any block work.
+        let st0 = chol_rank_k_update(&mut l, &Matrix::zeros(64, 0), &opts).unwrap();
+        assert_eq!(st0.tiles_touched + st0.cols_skipped, 0);
+    }
+
+    #[test]
+    fn bad_shape_and_indefinite_diagonal_are_rejected() {
+        let eps = 1e-5;
+        let (a, _) = tlr_covariance(64, 16, 2, eps, 3);
+        let opts = FactorOpts { eps, bs: 8, ..Default::default() };
+        let f = cholesky(a.clone(), &opts).unwrap();
+        let mut l = f.l;
+        let e = chol_rank_k_update(&mut l, &Matrix::zeros(63, 1), &opts).unwrap_err();
+        assert_eq!(e, UpdateError::BadShape { expected: 64, got: 63 });
+        assert_eq!(update_error_class(&e), crate::obs::UpdateErrorClass::BadShape);
+
+        let lf = ldlt(a, &opts).unwrap();
+        let mut l2 = lf.l;
+        let mut d = lf.d;
+        d[1][0] = -d[1][0];
+        let e = ldl_rank_k_update(&mut l2, &mut d, &Matrix::zeros(64, 1), &opts).unwrap_err();
+        assert_eq!(e, UpdateError::IndefiniteDiagonal { block: 1 });
+        assert_eq!(
+            update_error_class(&e),
+            crate::obs::UpdateErrorClass::IndefiniteDiagonal
+        );
+    }
+}

@@ -1,0 +1,369 @@
+//! Integration tests for the factor lifecycle: generation-versioned
+//! identity, hot swap under live load, and idle-generation GC — the
+//! contract spelled out in `serve/mod.rs` §The factor-lifecycle
+//! contract:
+//!
+//! * a ticket executes against exactly the generation it was admitted
+//!   on, and width-1 replays of the same RHS against the same
+//!   generation are **bitwise identical** — a swap landing mid-stream
+//!   never perturbs pre-swap answers;
+//! * zero tickets are lost across a swap: every submission resolves
+//!   `Ok` with its pinned generation's solution;
+//! * [`SolveService::collect_idle`] refuses to reap while queued work
+//!   still pins a superseded generation, then reaps exactly the stale
+//!   ids once the service drains;
+//! * the sharded front-end routes on the base key only — swapping a
+//!   new generation in never moves the key between workers;
+//! * arbitrary submit/swap/collect interleaves (proptest, shrinking to
+//!   a minimal op sequence) keep all of the above total.
+
+use h2opus_tlr::apps::covariance::ExpCovariance;
+use h2opus_tlr::apps::geometry::grid;
+use h2opus_tlr::apps::kdtree::kdtree_order;
+use h2opus_tlr::factor::{cholesky, CholFactor, FactorOpts};
+use h2opus_tlr::linalg::rng::Rng;
+use h2opus_tlr::serve::{
+    FactorId, FactorStore, ServeOpts, ShardedService, SolveService, StoredFactor,
+};
+use h2opus_tlr::solve::chol_solve;
+use h2opus_tlr::testing::proptest::{run_prop_with, Config, Strategy};
+use h2opus_tlr::tlr::chol_rank_k_update;
+use h2opus_tlr::tlr::construct::{build_tlr, BuildOpts, Compression};
+use h2opus_tlr::TlrMatrix;
+use std::path::PathBuf;
+use std::time::Duration;
+
+/// Pinned counterexample seeds, replayed before any fresh generation.
+const REGRESSIONS: &str = include_str!("proptest-regressions/lifecycle.txt");
+
+fn temp_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir()
+        .join(format!("h2opus_lifecycle_test_{}_{tag}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+/// Small 2D covariance TLR matrix (the factor tests' recipe).
+fn tlr_cov(n: usize, m: usize, eps: f64, seed: u64) -> TlrMatrix {
+    let pts = grid(n, 2);
+    let c = kdtree_order(&pts, m);
+    let cov = ExpCovariance::paper_default(pts.permuted(&c.perm));
+    build_tlr(&cov, &c.offsets, &BuildOpts { eps, method: Compression::Svd, seed })
+}
+
+/// Gen-0 factor plus a rank-2-updated successor of it (the gen-1
+/// candidate a live refresh would hot-swap in).
+fn factor_pair(n: usize, m: usize, eps: f64, seed: u64) -> (CholFactor, CholFactor) {
+    let f0 = cholesky(tlr_cov(n, m, eps, seed), &FactorOpts { eps, bs: 8, ..Default::default() })
+        .unwrap();
+    let mut f1 = f0.clone();
+    let mut rng = Rng::new(seed ^ 0x5A9);
+    let mut w = rng.normal_matrix(n, 2);
+    w.scale(0.05);
+    chol_rank_k_update(&mut f1.l, &w, &FactorOpts { eps, bs: 8, ..Default::default() }).unwrap();
+    (f0, f1)
+}
+
+fn assert_bitwise(a: &[f64], b: &[f64], ctx: &str) {
+    assert_eq!(a.len(), b.len(), "{ctx}: length");
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        assert!(x.to_bits() == y.to_bits(), "{ctx}: x[{i}] {x:e} != {y:e} (bitwise)");
+    }
+}
+
+fn assert_close(x: &[f64], x_ref: &[f64], tol: f64, ctx: &str) {
+    let scale = x_ref.iter().fold(0.0f64, |a, &v| a.max(v.abs())).max(1.0);
+    let err = x.iter().zip(x_ref).map(|(a, b)| (a - b).abs()).fold(0.0, f64::max);
+    assert!(err <= tol * scale, "{ctx}: err {err} > {tol} * {scale}");
+}
+
+/// The acceptance test: a swap lands while gen-0 tickets are in
+/// flight. No ticket is lost, every response carries the generation it
+/// was admitted on, width-1 replays against gen 0 are bitwise
+/// identical across the swap, and the superseded generation is reaped
+/// exactly once the stream drains.
+#[test]
+fn hot_swap_under_load_pins_generations_and_collects_idle() {
+    let (n, m) = (192, 48);
+    let (f0, f1) = factor_pair(n, m, 1e-9, 41);
+    let dir = temp_dir("swap_load");
+    let key = 0x11FEu64;
+    FactorStore::open(&dir).unwrap().save_chol(key, &f0, "gen 0").unwrap();
+    // max_panel 1: every request is its own width-1 blocked solve, so a
+    // replay of the same RHS against the same generation is bitwise
+    // deterministic (no panel-composition nondeterminism).
+    let service = SolveService::start(
+        FactorStore::open(&dir).unwrap(),
+        ServeOpts {
+            max_panel: 1,
+            flush_deadline: Duration::from_millis(2),
+            cache_capacity: 2,
+            ..Default::default()
+        },
+    );
+    assert_eq!(service.current_generation(key), 0);
+    let mut rng = Rng::new(43);
+    let rhss: Vec<Vec<f64>> = (0..6).map(|_| (0..n).map(|_| rng.normal()).collect()).collect();
+    // Round A: all six RHS served at generation 0.
+    let round_a: Vec<Vec<f64>> = rhss
+        .iter()
+        .map(|b| {
+            let r = service.submit(key, b.clone()).unwrap().wait().unwrap();
+            assert_eq!(r.generation, 0, "round A must serve gen 0");
+            r.x
+        })
+        .collect();
+    for (i, x) in round_a.iter().enumerate() {
+        assert_close(x, &chol_solve(&f0, &rhss[i]), 1e-12, &format!("round A rhs {i}"));
+    }
+    // Live round: three gen-0 replays go in flight, the swap lands,
+    // three more submissions follow on the new generation.
+    let pre: Vec<_> = rhss[..3].iter().map(|b| service.submit(key, b.clone()).unwrap()).collect();
+    let id = service.swap(key, StoredFactor::Chol(f1.clone()));
+    assert_eq!(id, FactorId { key, generation: 1 });
+    assert_eq!(service.current_generation(key), 1);
+    let post: Vec<_> = rhss[3..].iter().map(|b| service.submit(key, b.clone()).unwrap()).collect();
+    for (i, t) in pre.into_iter().enumerate() {
+        let r = t.wait().unwrap_or_else(|e| panic!("pre-swap ticket {i} lost: {e}"));
+        assert_eq!(r.generation, 0, "pre-swap ticket {i} must stay pinned to gen 0");
+        // Same RHS, same generation, width-1 panel: bitwise replay.
+        assert_bitwise(&r.x, &round_a[i], &format!("pre-swap replay {i}"));
+    }
+    for (i, t) in post.into_iter().enumerate() {
+        let r = t.wait().unwrap_or_else(|e| panic!("post-swap ticket {i} lost: {e}"));
+        assert_eq!(r.generation, 1, "post-swap ticket {i} must serve gen 1");
+        let x_ref = chol_solve(&f1, &rhss[3 + i]);
+        assert_close(&r.x, &x_ref, 1e-12, &format!("post-swap rhs {i}"));
+        // The update genuinely changed the operator: gen-1 answers
+        // differ from gen-0 answers for the same RHS.
+        assert!(
+            r.x.iter().zip(&round_a[3 + i]).any(|(a, b)| a != b),
+            "post-swap rhs {i}: gen 1 answer identical to gen 0"
+        );
+    }
+    // Drained: GC must reap exactly the superseded generation (the
+    // disk-resolved gen 0 in the factor LRU), and serving continues.
+    let collected = service.collect_idle(key);
+    assert!(
+        collected.contains(&FactorId::base(key)),
+        "gen 0 not collected: {collected:?}"
+    );
+    assert!(collected.iter().all(|c| c.key == key && c.generation < 1), "{collected:?}");
+    let r = service.submit(key, rhss[0].clone()).unwrap().wait().unwrap();
+    assert_eq!(r.generation, 1, "post-GC serving must stay on gen 1");
+    assert!(service.collect_idle(key).is_empty(), "second collect must be a no-op");
+    drop(service);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// GC refuses while queued tickets still pin the old generation, then
+/// reaps once the queue drains.
+#[test]
+fn collect_idle_refuses_while_old_generation_pinned() {
+    let (n, m) = (128, 32);
+    let (f0, f1) = factor_pair(n, m, 1e-8, 47);
+    let dir = temp_dir("gc_pin");
+    let key = 0x6Cu64;
+    FactorStore::open(&dir).unwrap().save_chol(key, &f0, "gen 0").unwrap();
+    // Wide panel + long deadline: the gen-0 submissions sit queued long
+    // enough for the swap and the premature collect to land first.
+    let service = SolveService::start(
+        FactorStore::open(&dir).unwrap(),
+        ServeOpts {
+            max_panel: 8,
+            flush_deadline: Duration::from_millis(300),
+            ..Default::default()
+        },
+    );
+    let mut rng = Rng::new(48);
+    let tickets: Vec<_> = (0..3)
+        .map(|_| service.submit(key, (0..n).map(|_| rng.normal()).collect()).unwrap())
+        .collect();
+    let id = service.swap(key, StoredFactor::Chol(f1));
+    assert_eq!(id.generation, 1);
+    assert!(
+        service.collect_idle(key).is_empty(),
+        "collect_idle must refuse while queued tickets pin gen 0"
+    );
+    for t in tickets {
+        assert_eq!(t.wait().unwrap().generation, 0);
+    }
+    let collected = service.collect_idle(key);
+    assert!(!collected.is_empty(), "drained gen 0 must be collectable");
+    assert!(collected.iter().all(|c| c.generation < 1), "{collected:?}");
+    drop(service);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Sharded front-end: generations never enter routing — the key's
+/// owner is identical before and after a swap — and the owning worker
+/// enforces the same pinning + GC contract.
+#[test]
+fn sharded_swap_keeps_owner_and_pins_generations() {
+    let (n, m) = (128, 32);
+    let (f0, f1) = factor_pair(n, m, 1e-8, 53);
+    let dir = temp_dir("shard_swap");
+    let key = 0x5AFEu64;
+    let store = FactorStore::open(&dir).unwrap();
+    store.save_chol(key, &f0, "gen 0").unwrap();
+    let service = ShardedService::start(
+        &store,
+        ServeOpts {
+            max_panel: 4,
+            flush_deadline: Duration::from_millis(2),
+            ..Default::default()
+        },
+        2,
+        16,
+    )
+    .unwrap();
+    let owner_before = service.map().owner_of(key).to_string();
+    let mut rng = Rng::new(54);
+    let mk = |rng: &mut Rng| -> Vec<f64> { (0..n).map(|_| rng.normal()).collect() };
+    let pre: Vec<_> = (0..2).map(|_| service.submit(key, mk(&mut rng)).unwrap()).collect();
+    let id = service.swap(key, StoredFactor::Chol(f1));
+    assert_eq!(id, FactorId { key, generation: 1 });
+    assert_eq!(service.current_generation(key), 1);
+    assert_eq!(
+        service.map().owner_of(key),
+        owner_before,
+        "swap must not move the key between workers"
+    );
+    let post: Vec<_> = (0..2).map(|_| service.submit(key, mk(&mut rng)).unwrap()).collect();
+    for t in pre {
+        assert_eq!(t.wait().unwrap().generation, 0);
+    }
+    for t in post {
+        assert_eq!(t.wait().unwrap().generation, 1);
+    }
+    let collected = service.collect_idle(key);
+    assert!(!collected.is_empty(), "superseded generation not collected on the owner");
+    assert!(collected.iter().all(|c| c.key == key && c.generation < 1), "{collected:?}");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+// ----------------------------------------------- proptest interleaves
+
+/// One step of a lifecycle interleave.
+#[derive(Clone, Debug)]
+enum LifeOp {
+    /// Submit one RHS derived from the seed byte.
+    Submit(u8),
+    /// Hot-swap the next generation in.
+    Swap,
+    /// Attempt idle-generation GC.
+    Collect,
+}
+
+/// A whole interleave, shrinking by dropping ops (a failing sequence
+/// shrinks toward the minimal submit/swap/collect pattern).
+#[derive(Clone, Debug)]
+struct LifeSeq {
+    ops: Vec<LifeOp>,
+}
+
+struct LifeSeqStrategy;
+
+impl Strategy for LifeSeqStrategy {
+    type Value = LifeSeq;
+
+    fn generate(&self, rng: &mut Rng) -> LifeSeq {
+        let len = 1 + rng.below(10);
+        let ops = (0..len)
+            .map(|_| match rng.below(4) {
+                0 => LifeOp::Swap,
+                1 => LifeOp::Collect,
+                _ => LifeOp::Submit(rng.below(256) as u8),
+            })
+            .collect();
+        LifeSeq { ops }
+    }
+
+    fn shrink(&self, value: &LifeSeq) -> Vec<LifeSeq> {
+        let mut out = Vec::new();
+        if value.ops.len() > 1 {
+            out.push(LifeSeq { ops: value.ops[..value.ops.len() / 2].to_vec() });
+            for i in 0..value.ops.len() {
+                let mut ops = value.ops.clone();
+                ops.remove(i);
+                out.push(LifeSeq { ops });
+            }
+        }
+        out
+    }
+}
+
+/// Arbitrary submit/swap/collect interleaves stay total: every ticket
+/// resolves `Ok` on the generation it was admitted on, its solution
+/// matches that generation's factor, and GC only ever returns
+/// superseded ids. Generation g serves `variants[g % 2]`, so the model
+/// knows the right answer at any depth of swapping.
+#[test]
+fn prop_lifecycle_interleaves_are_total_and_generation_pinned() {
+    let (n, m) = (96, 24);
+    let (f0, f1) = factor_pair(n, m, 1e-8, 59);
+    let variants = [f0.clone(), f1.clone()];
+    let dir = temp_dir("prop_life");
+    let key = 0x91Eu64;
+    FactorStore::open(&dir).unwrap().save_chol(key, &f0, "gen 0").unwrap();
+    let cfg = Config { cases: 12, max_shrink_steps: 120 };
+    run_prop_with(cfg, "lifecycle_interleaves", REGRESSIONS, &LifeSeqStrategy, |seq| {
+        let service = SolveService::start(
+            FactorStore::open(&dir).unwrap(),
+            ServeOpts {
+                max_panel: 4,
+                flush_deadline: Duration::from_millis(2),
+                cache_capacity: 2,
+                ..Default::default()
+            },
+        );
+        let mut expected_gen = 0u32;
+        let mut in_flight = Vec::new();
+        for (step, op) in seq.ops.iter().enumerate() {
+            match op {
+                LifeOp::Submit(seed) => {
+                    let mut rng = Rng::new(*seed as u64 + 1);
+                    let rhs: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+                    let t = service
+                        .submit(key, rhs.clone())
+                        .map_err(|e| format!("step {step}: submit rejected: {e}"))?;
+                    in_flight.push((step, expected_gen, rhs, t));
+                }
+                LifeOp::Swap => {
+                    let next = variants[(expected_gen as usize + 1) % 2].clone();
+                    let id = service.swap(key, StoredFactor::Chol(next));
+                    expected_gen += 1;
+                    if id != (FactorId { key, generation: expected_gen }) {
+                        return Err(format!("step {step}: swap returned {id}"));
+                    }
+                }
+                LifeOp::Collect => {
+                    for c in service.collect_idle(key) {
+                        if c.key != key || c.generation >= expected_gen {
+                            return Err(format!("step {step}: GC reaped live id {c}"));
+                        }
+                    }
+                }
+            }
+        }
+        for (step, gen, rhs, t) in in_flight {
+            let r = t.wait().map_err(|e| format!("ticket from step {step} lost: {e}"))?;
+            if r.generation != gen {
+                return Err(format!(
+                    "ticket from step {step}: admitted on gen {gen}, served by {}",
+                    r.generation
+                ));
+            }
+            let x_ref = chol_solve(&variants[gen as usize % 2], &rhs);
+            let scale = x_ref.iter().fold(0.0f64, |a, &v| a.max(v.abs())).max(1.0);
+            let err =
+                r.x.iter().zip(&x_ref).map(|(a, b)| (a - b).abs()).fold(0.0, f64::max);
+            if err > 1e-10 * scale {
+                return Err(format!("ticket from step {step}: err {err} vs gen {gen}"));
+            }
+        }
+        Ok(())
+    });
+    let _ = std::fs::remove_dir_all(&dir);
+}

@@ -7,7 +7,10 @@ rust/src/serve/mod.rs):
 
  * top-level shape: `version == 1`, `schema == "h2opus-obs"`, and the
    required sections `phases`, `kernels`, `batch`, `serve`, `shards`,
-   `histograms`;
+   `histograms`, `factor_generations`, `update_errors`;
+ * lifecycle sections: `update_errors` carries every update-error
+   class as a non-negative counter; `factor_generations` maps
+   16-hex-digit keys to non-negative generation gauges;
  * every histogram in `histograms`: required fields, bucket lower
    bounds strictly increasing, bucket counts summing to `count`,
    percentiles null exactly when empty and ordered p50 <= p95 <= p99
@@ -36,6 +39,8 @@ EXPECTED_HISTS = [
 SHARD_ERROR_CLASSES = [
     "parse", "unknown_worker", "duplicate_worker", "last_worker", "store",
 ]
+
+UPDATE_ERROR_CLASSES = ["bad_shape", "indefinite_diagonal"]
 
 findings = []
 
@@ -114,7 +119,7 @@ def check(doc):
     if doc.get("schema") != "h2opus-obs":
         fail(f"schema: expected 'h2opus-obs', got {doc.get('schema')!r}")
     for section in ("phases", "kernels", "batch", "serve", "shards",
-                    "histograms"):
+                    "histograms", "factor_generations", "update_errors"):
         if not isinstance(doc.get(section), dict):
             fail(f"missing or non-object section: {section}")
     if findings:
@@ -163,6 +168,23 @@ def check(doc):
         for cls in SHARD_ERROR_CLASSES:
             if not is_count(errors.get(cls)):
                 fail(f"shards.errors.{cls}: expected a non-negative number")
+
+    uerrs = doc["update_errors"]
+    for cls in UPDATE_ERROR_CLASSES:
+        if not is_count(uerrs.get(cls)):
+            fail(f"update_errors.{cls}: expected a non-negative number")
+    for cls in uerrs:
+        if cls not in UPDATE_ERROR_CLASSES:
+            fail(f"update_errors.{cls}: unknown class")
+
+    gens = doc["factor_generations"]
+    for key, gen in gens.items():
+        if not (isinstance(key, str) and len(key) == 16
+                and all(c in "0123456789abcdef" for c in key)):
+            fail(f"factor_generations: key {key!r} is not 16 hex digits")
+        elif not is_count(gen):
+            fail(f"factor_generations.{key}: expected a non-negative "
+                 f"generation")
 
     hists = doc["histograms"]
     for name in EXPECTED_HISTS:

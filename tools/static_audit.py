@@ -530,12 +530,16 @@ def check_simd_hygiene(all_files):
 # ------------------------------------------- serve error observability
 
 
-# (enum, mapping fn): the fn must match every variant of the enum, so
-# that each error constructed in serve/ lands in a counter or a
-# flight-recorder event (obs::RejectReason / obs::ShardErrorClass).
+# (subdir, enum, mapping fn): the fn must match every variant of the
+# enum, so that each error constructed in the subsystem lands in a
+# counter or a flight-recorder event (obs::RejectReason /
+# obs::ShardErrorClass / obs::UpdateErrorClass). The subdir scopes the
+# scan so an unrelated enum of the same name elsewhere never shadows
+# the one under audit.
 ERROR_MAPPINGS = [
-    ("ServeError", "reject_reason"),
-    ("ShardError", "shard_error_class"),
+    ("serve", "ServeError", "reject_reason"),
+    ("serve", "ShardError", "shard_error_class"),
+    ("tlr", "UpdateError", "update_error_class"),
 ]
 
 
@@ -564,13 +568,13 @@ def enum_variants(stripped, enum_name):
 
 
 def check_error_observability(src):
-    serve_files = {p: s for p, s in src.items()
-                   if os.sep + "serve" + os.sep in p}
-    for enum_name, fn_name in ERROR_MAPPINGS:
+    for subdir, enum_name, fn_name in ERROR_MAPPINGS:
+        sub_files = {p: s for p, s in src.items()
+                     if os.sep + subdir + os.sep in p}
         variants = enum_path = None
         fn_body = fn_path = None
         fn_line = 1
-        for path, stripped in serve_files.items():
+        for path, stripped in sub_files.items():
             if variants is None:
                 v = enum_variants(stripped, enum_name)
                 if v is not None:
