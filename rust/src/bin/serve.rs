@@ -26,6 +26,7 @@ use h2opus_tlr::serve::{
     Ticket,
 };
 use h2opus_tlr::solve::{chol_solve_multi_with, ldl_solve_multi_with, solve_flop_estimate};
+use h2opus_tlr::testing::faults::{self, FaultKind, FaultPlan, FaultSite, Trigger};
 use h2opus_tlr::Matrix;
 use std::time::{Duration, Instant};
 
@@ -49,6 +50,16 @@ SERVE OPTIONS:
     --swap-demo         generation-lifecycle demo: rank-k update, hot
                         swap under a live stream, GC of the idle
                         generation (works with --shards N)
+    --chaos             resilience demo: seeded fault injection (store
+                        I/O, frame checksums, worker panics, delays)
+                        under load; verifies quarantine, that no ticket
+                        is lost, and clean recovery (CI chaos smoke)
+
+RESILIENCE OPTIONS (RunConfig, execution-only — never change the key):
+    --request-deadline-ms <D>  per-request serve deadline (0 = off)
+    --retry-attempts <K>       store-I/O retries per load  (default 2)
+    --degraded-serving         admit on the previous generation when
+                               the queue is full, flagged degraded
 
 All problem/factorization options of `h2opus-tlr` apply (e.g.
 --problem cov2d --n 1024 --m 128 --eps 1e-6 --bs 8 --ldlt). See
@@ -68,6 +79,12 @@ struct ServeArgs {
     metrics_dump: Option<String>,
     trace_dump: Option<String>,
     swap_demo: bool,
+    chaos: bool,
+    // Filled from RunConfig after the problem flags parse (the knobs
+    // are execution-only RunConfig fields so JSON configs cover them).
+    request_deadline: Option<Duration>,
+    retry_attempts: u32,
+    degraded_serving: bool,
 }
 
 impl Default for ServeArgs {
@@ -85,6 +102,29 @@ impl Default for ServeArgs {
             metrics_dump: None,
             trace_dump: None,
             swap_demo: false,
+            chaos: false,
+            request_deadline: None,
+            retry_attempts: 2,
+            degraded_serving: false,
+        }
+    }
+}
+
+impl ServeArgs {
+    /// The [`ServeOpts`] every service in this binary runs with — the
+    /// plain run, sharded routing, swap demo and chaos demo all share
+    /// one shape so the resilience knobs apply uniformly.
+    fn serve_opts(&self) -> ServeOpts {
+        ServeOpts {
+            max_panel: self.panel,
+            flush_deadline: Duration::from_millis(self.deadline_ms),
+            cache_capacity: 4,
+            max_backlog: self.backlog,
+            mmap: !self.no_mmap,
+            request_deadline: self.request_deadline,
+            retry_attempts: self.retry_attempts,
+            degraded_serving: self.degraded_serving,
+            ..Default::default()
         }
     }
 }
@@ -160,6 +200,10 @@ fn parse_args(args: &[String]) -> (ServeArgs, Vec<String>) {
             }
             "--swap-demo" => {
                 sa.swap_demo = true;
+                i += 1;
+            }
+            "--chaos" => {
+                sa.chaos = true;
                 i += 1;
             }
             _ => {
@@ -301,17 +345,7 @@ fn service_run(store_dir: &str, key: u64, n: usize, sa: &ServeArgs, seed: u64) {
         eprintln!("store: {e}");
         std::process::exit(1);
     });
-    let service = SolveService::start(
-        store,
-        ServeOpts {
-            max_panel: sa.panel,
-            flush_deadline: Duration::from_millis(sa.deadline_ms),
-            cache_capacity: 4,
-            max_backlog: sa.backlog,
-            mmap: !sa.no_mmap,
-            ..Default::default()
-        },
-    );
+    let service = SolveService::start(store, sa.serve_opts());
     let mut rng = Rng::new(seed ^ 0x5E4E);
     let t0 = Instant::now();
     let tickets: Vec<_> = (0..sa.requests)
@@ -431,23 +465,11 @@ fn sharded_run(store_dir: &str, key: u64, factor: StoredFactor, n: usize, sa: &S
         std::process::exit(1);
     });
     let n_shards = 64;
-    let service = ShardedService::start(
-        &store,
-        ServeOpts {
-            max_panel: sa.panel,
-            flush_deadline: Duration::from_millis(sa.deadline_ms),
-            cache_capacity: 4,
-            max_backlog: sa.backlog,
-            mmap: !sa.no_mmap,
-            ..Default::default()
-        },
-        sa.shards,
-        n_shards,
-    )
-    .unwrap_or_else(|e| {
-        eprintln!("sharded service: {e}");
-        std::process::exit(1);
-    });
+    let service = ShardedService::start(&store, sa.serve_opts(), sa.shards, n_shards)
+        .unwrap_or_else(|e| {
+            eprintln!("sharded service: {e}");
+            std::process::exit(1);
+        });
     let map = service.map();
     print!("shard map  : {n_shards} shards over {} workers (", sa.shards);
     for (i, w) in map.workers().iter().enumerate() {
@@ -620,14 +642,7 @@ fn swap_demo(
         eprintln!("store: {e}");
         std::process::exit(1);
     });
-    let opts = ServeOpts {
-        max_panel: sa.panel,
-        flush_deadline: Duration::from_millis(sa.deadline_ms),
-        cache_capacity: 4,
-        max_backlog: sa.backlog,
-        mmap: !sa.no_mmap,
-        ..Default::default()
-    };
+    let opts = sa.serve_opts();
     let service = if sa.shards > 1 {
         let svc = ShardedService::start(&store, opts, sa.shards, 64).unwrap_or_else(|e| {
             eprintln!("sharded service: {e}");
@@ -730,9 +745,175 @@ fn swap_demo(
     println!("swap demo  : generation {} now current", service.current_generation(key));
 }
 
+/// `--chaos`: self-verifying resilience demo. A seeded fault plan is
+/// installed over the injection sites and a request storm is driven
+/// through the sharded service; the run proves the resilience contract
+/// (serve module docs §resilience-contract) in three drills:
+///
+/// 1. **quarantine** — a sacrificial frame loaded under a forced
+///    checksum fault must come back as a typed `CorruptFactor` and the
+///    frame file must move aside as `*.quarantine`;
+/// 2. **storm** — under seeded random store-I/O errors, worker panics
+///    and execution delays, every submitted ticket must still resolve
+///    (a solve or a typed error — conservation, no ticket lost);
+/// 3. **recovery** — after `faults::clear()` the same workers must
+///    serve a clean stream flawlessly.
+///
+/// Exit 1 on any violation, so this doubles as the CI chaos smoke.
+fn chaos_demo(
+    store_dir: &str,
+    key: u64,
+    factor: StoredFactor,
+    n: usize,
+    sa: &ServeArgs,
+    cfg: &RunConfig,
+) {
+    let store = FactorStore::open(store_dir).unwrap_or_else(|e| {
+        eprintln!("store: {e}");
+        std::process::exit(1);
+    });
+    // The demo always runs the full resilient surface: a deadline wide
+    // enough that only real stalls expire, plus degraded admission.
+    let mut opts = sa.serve_opts();
+    if opts.request_deadline.is_none() {
+        opts.request_deadline = Some(Duration::from_millis(500));
+    }
+    opts.degraded_serving = true;
+    let service = ShardedService::start(&store, opts, sa.shards, 64).unwrap_or_else(|e| {
+        eprintln!("sharded service: {e}");
+        std::process::exit(1);
+    });
+    let mut rng = Rng::new(cfg.seed ^ 0xC4A0);
+
+    // Drill 1 — corrupt-frame quarantine, on a sacrificial copy so the
+    // real factor's frame stays intact for the storm.
+    let bad_key = key ^ 0xBADC0DE;
+    let bad_id = FactorId { key: bad_key, generation: 0 };
+    store.save_stored(bad_id, &factor, "chaos sacrificial frame").unwrap_or_else(|e| {
+        eprintln!("chaos: failed to save sacrificial frame: {e}");
+        std::process::exit(1);
+    });
+    faults::install(FaultPlan::seeded(cfg.seed).with(
+        FaultSite::FrameChecksum,
+        FaultKind::Corrupt,
+        Trigger::Rate(1000),
+    ));
+    let rhs: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+    let verdict = service.submit(bad_key, rhs).and_then(|t| t.wait());
+    faults::clear();
+    match verdict {
+        Err(ServeError::CorruptFactor { .. }) => {}
+        Err(e) => {
+            eprintln!("chaos: expected CorruptFactor for the corrupted frame, got: {e}");
+            std::process::exit(1);
+        }
+        Ok(_) => {
+            eprintln!("chaos: the corrupted frame served successfully");
+            std::process::exit(1);
+        }
+    }
+    let key_dir = std::path::Path::new(store_dir).join(format!("{bad_key:016x}"));
+    let quarantined = std::fs::read_dir(&key_dir)
+        .ok()
+        .into_iter()
+        .flatten()
+        .flatten()
+        .any(|ent| ent.file_name().to_string_lossy().ends_with(".quarantine"));
+    if !quarantined {
+        eprintln!("chaos: no *.quarantine file under {}", key_dir.display());
+        std::process::exit(1);
+    }
+    println!("chaos      : quarantine — corrupt frame isolated, typed CorruptFactor");
+
+    // Drill 2 — the storm. Seeded rates; the hard invariant under
+    // randomized faults is conservation of tickets.
+    faults::install(
+        FaultPlan::seeded(cfg.seed)
+            .with(FaultSite::StoreRead, FaultKind::IoError, Trigger::Rate(100))
+            .with(FaultSite::PanelExec, FaultKind::Panic, Trigger::Rate(80))
+            .with(FaultSite::ExecDelay, FaultKind::Delay { ms: 3 }, Trigger::Rate(120)),
+    );
+    let mut tickets: Vec<Ticket> = Vec::with_capacity(sa.requests);
+    let mut rejected = 0usize;
+    for _ in 0..sa.requests {
+        let mut rhs: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        let mut spins = 0u32;
+        loop {
+            match service.submit(key, std::mem::take(&mut rhs)) {
+                Ok(t) => {
+                    tickets.push(t);
+                    break;
+                }
+                Err(ServeError::Overloaded { .. }) if spins < 5000 => {
+                    spins += 1;
+                    std::thread::sleep(Duration::from_micros(200));
+                    rhs = (0..n).map(|_| rng.normal()).collect();
+                }
+                Err(_) => {
+                    rejected += 1;
+                    break;
+                }
+            }
+        }
+    }
+    let (mut ok, mut panicked, mut expired, mut corrupt, mut store_err) = (0, 0, 0, 0, 0);
+    for t in tickets {
+        match t.wait() {
+            Ok(_) => ok += 1,
+            Err(ServeError::WorkerPanicked { .. }) => panicked += 1,
+            Err(ServeError::DeadlineExceeded { .. }) => expired += 1,
+            Err(ServeError::CorruptFactor { .. }) => corrupt += 1,
+            Err(_) => store_err += 1,
+        }
+    }
+    let inj = faults::injected_counts();
+    faults::clear();
+    let total_injected: u64 = inj.iter().sum();
+    if total_injected == 0 {
+        eprintln!("chaos: the storm injected nothing — the fault plan never fired");
+        std::process::exit(1);
+    }
+    let mut parts = Vec::new();
+    for (i, &c) in inj.iter().enumerate() {
+        if c > 0 {
+            parts.push(format!("{}:{c}", faults::FAULT_SITE_NAMES[i]));
+        }
+    }
+    println!("chaos      : storm — {total_injected} faults injected ({})", parts.join(" "));
+    println!(
+        "chaos      : outcome — {ok} ok, {panicked} panicked, {expired} expired, \
+         {corrupt} corrupt, {store_err} store-err, {rejected} rejected"
+    );
+    let resolved = ok + panicked + expired + corrupt + store_err + rejected;
+    if resolved != sa.requests {
+        eprintln!("chaos: {resolved}/{} tickets resolved — a ticket was lost", sa.requests);
+        std::process::exit(1);
+    }
+    if ok == 0 {
+        eprintln!("chaos: nothing was served under the storm");
+        std::process::exit(1);
+    }
+
+    // Drill 3 — recovery. Same workers, same caches, no plan: a clean
+    // stream must serve flawlessly.
+    let probes = 8usize;
+    let mut clean = 0usize;
+    for _ in 0..probes {
+        let rhs: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        if service.submit(key, rhs).and_then(|t| t.wait()).is_ok() {
+            clean += 1;
+        }
+    }
+    if clean != probes {
+        eprintln!("chaos: only {clean}/{probes} clean requests served after faults::clear()");
+        std::process::exit(1);
+    }
+    println!("chaos      : recovery — {clean}/{probes} clean after faults::clear()");
+}
+
 fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
-    let (sa, rest) = parse_args(&args);
+    let (mut sa, rest) = parse_args(&args);
     let cfg = match RunConfig::from_args(&rest) {
         Ok(c) => c,
         Err(e) => {
@@ -740,6 +921,10 @@ fn main() {
             std::process::exit(2);
         }
     };
+    sa.request_deadline =
+        (cfg.request_deadline_ms > 0).then(|| Duration::from_millis(cfg.request_deadline_ms));
+    sa.retry_attempts = cfg.retry_attempts as u32;
+    sa.degraded_serving = cfg.degraded_serving;
     println!("problem    : {}", cfg.summary());
     let key = cfg.factor_key();
     let store = FactorStore::open(&sa.store).unwrap_or_else(|e| {
@@ -750,6 +935,12 @@ fn main() {
     let n = factor.n();
     if sa.swap_demo {
         swap_demo(&sa.store, key, factor, n, &sa, &cfg);
+        dump_obs(&sa);
+        println!("serve done");
+        return;
+    }
+    if sa.chaos {
+        chaos_demo(&sa.store, key, factor, n, &sa, &cfg);
         dump_obs(&sa);
         println!("serve done");
         return;

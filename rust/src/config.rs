@@ -127,6 +127,17 @@ pub struct RunConfig {
     /// update produces a new *generation* under the same key, so this
     /// must never enter [`RunConfig::factor_key`].
     pub update_rank: usize,
+    /// Per-request serve deadline in milliseconds (0 = no deadline).
+    /// Execution-only: deadlines shape scheduling, never numerics, so
+    /// this must never enter [`RunConfig::factor_key`].
+    pub request_deadline_ms: u64,
+    /// Bounded retries for transient store I/O during serve loads.
+    /// Execution-only — must never enter [`RunConfig::factor_key`].
+    pub retry_attempts: usize,
+    /// Allow the serve queue, when full, to admit requests on the
+    /// previous factor generation (flagged `degraded`) before
+    /// rejecting. Execution-only — never enters the factor key.
+    pub degraded_serving: bool,
 }
 
 impl Default for RunConfig {
@@ -152,6 +163,9 @@ impl Default for RunConfig {
             frac_contrast: 0.0,
             corr_len: 0.0,
             update_rank: 0,
+            request_deadline_ms: 0,
+            retry_attempts: 2,
+            degraded_serving: false,
         }
     }
 }
@@ -302,6 +316,11 @@ impl RunConfig {
                     i += 1;
                     continue;
                 }
+                "degraded-serving" => {
+                    cfg.degraded_serving = true;
+                    i += 1;
+                    continue;
+                }
                 _ => {}
             }
             let val = args
@@ -333,6 +352,8 @@ impl RunConfig {
             "frac-contrast" => self.frac_contrast = num(val)?,
             "corr-len" => self.corr_len = num(val)?,
             "update-rank" => self.update_rank = num(val)? as usize,
+            "request-deadline-ms" => self.request_deadline_ms = num(val)? as u64,
+            "retry-attempts" => self.retry_attempts = num(val)? as usize,
             "artifacts" => self.artifacts = val.into(),
             "factor" => {
                 self.kind = match val {
@@ -385,6 +406,7 @@ impl RunConfig {
                     "schur-comp" => self.schur_comp = true,
                     "mod-chol" => self.mod_chol = true,
                     "ldlt" => self.kind = FactorKind::Ldlt,
+                    "degraded-serving" => self.degraded_serving = true,
                     _ => return Err(ConfigError(format!("'{k}' is not a boolean option"))),
                 },
                 Json::Bool(false) => {}
@@ -574,12 +596,38 @@ mod tests {
             same_update.factor_key(),
             "update-rank changes the *generation*, never the key — a swap must not reroute"
         );
+        let same_resilience = RunConfig {
+            request_deadline_ms: 250,
+            retry_attempts: 5,
+            degraded_serving: true,
+            ..base.clone()
+        };
+        assert_eq!(
+            base.factor_key(),
+            same_resilience.factor_key(),
+            "resilience knobs shape serving, never numerics — keys must not move"
+        );
     }
 
     #[test]
     fn update_rank_flag_parses() {
         let c = RunConfig::from_args(&argv("--update-rank 8")).unwrap();
         assert_eq!(c.update_rank, 8);
+    }
+
+    #[test]
+    fn resilience_flags_parse() {
+        let c = RunConfig::from_args(&argv(
+            "--request-deadline-ms 250 --retry-attempts 4 --degraded-serving",
+        ))
+        .unwrap();
+        assert_eq!(c.request_deadline_ms, 250);
+        assert_eq!(c.retry_attempts, 4);
+        assert!(c.degraded_serving);
+        let d = RunConfig::default();
+        assert_eq!(d.request_deadline_ms, 0, "deadlines default off");
+        assert_eq!(d.retry_attempts, 2);
+        assert!(!d.degraded_serving);
     }
 
     #[test]

@@ -28,6 +28,8 @@ pub struct Snapshot {
     pub shard_errors: [u64; crate::obs::N_SHARD_ERROR_CLASSES],
     /// Rank-k-update error counts in `UpdateErrorClass` order.
     pub update_errors: [u64; crate::obs::N_UPDATE_ERROR_CLASSES],
+    /// Resilience-event counts in `ResilienceClass` order.
+    pub resilience: [u64; crate::obs::N_RESILIENCE_CLASSES],
     /// The `factor_generation` gauge: `(key, generation)` per occupied
     /// slot, `(0, 0)` elsewhere (see
     /// [`crate::obs::factor_generation_entries`]).
@@ -46,6 +48,7 @@ pub fn snapshot() -> Snapshot {
         shards: profile::shard_snapshot(),
         shard_errors: crate::obs::shard_error_counts(),
         update_errors: crate::obs::update_error_counts(),
+        resilience: crate::obs::resilience_counts(),
         factor_generations: crate::obs::factor_generation_entries(),
         hists: hist::snapshot_all(),
     }
@@ -75,6 +78,13 @@ impl Snapshot {
         {
             *o = now.saturating_sub(*was);
         }
+        let mut resilience = [0u64; crate::obs::N_RESILIENCE_CLASSES];
+        for (o, (now, was)) in resilience
+            .iter_mut()
+            .zip(self.resilience.iter().zip(earlier.resilience.iter()))
+        {
+            *o = now.saturating_sub(*was);
+        }
         Snapshot {
             phases: self.phases.since(&earlier.phases),
             kernels: self.kernels.since(&earlier.kernels),
@@ -83,6 +93,7 @@ impl Snapshot {
             shards: self.shards.since(&earlier.shards),
             shard_errors,
             update_errors,
+            resilience,
             // A gauge, not a counter: the current value is the delta.
             factor_generations: self.factor_generations,
             hists,
@@ -199,6 +210,12 @@ pub fn json_from(s: &Snapshot) -> Json {
         uerrs.insert(crate::obs::UPDATE_ERROR_NAMES[i].to_string(), Json::Num(c as f64));
     }
     doc.insert("update_errors".to_string(), Json::Obj(uerrs));
+
+    let mut res = BTreeMap::new();
+    for (i, &c) in s.resilience.iter().enumerate() {
+        res.insert(crate::obs::RESILIENCE_NAMES[i].to_string(), Json::Num(c as f64));
+    }
+    doc.insert("resilience".to_string(), Json::Obj(res));
 
     let mut gens = BTreeMap::new();
     for &(key, generation) in s.factor_generations.iter() {
@@ -350,6 +367,12 @@ pub fn prometheus_from(s: &Snapshot) -> String {
         prom_line(&mut out, "update_errors_total", &labels, c as f64);
     }
 
+    prom_type(&mut out, "resilience_total", "counter");
+    for (i, &c) in s.resilience.iter().enumerate() {
+        let labels = [("class", crate::obs::RESILIENCE_NAMES[i])];
+        prom_line(&mut out, "resilience_total", &labels, c as f64);
+    }
+
     prom_type(&mut out, "factor_generation", "gauge");
     for &(key, generation) in s.factor_generations.iter() {
         if key != 0 || generation != 0 {
@@ -388,7 +411,7 @@ mod tests {
                 assert_eq!(o.get("version"), Some(&Json::Num(1.0)));
                 let sections = [
                     "phases", "kernels", "batch", "serve", "shards", "histograms",
-                    "factor_generations", "update_errors",
+                    "factor_generations", "update_errors", "resilience",
                 ];
                 for key in sections {
                     assert!(o.contains_key(key), "missing {key}");
@@ -418,6 +441,33 @@ mod tests {
         // A gauge passes through `since` unchanged.
         let delta = s.since(&Snapshot::default());
         assert_eq!(delta.factor_generations, s.factor_generations);
+    }
+
+    #[test]
+    fn resilience_counters_appear_in_both_exporters() {
+        crate::obs::note_resilience(crate::obs::ResilienceClass::RetryAttempt);
+        let s = snapshot();
+        assert!(s.resilience[crate::obs::ResilienceClass::RetryAttempt as usize] >= 1);
+        let prom = prometheus_from(&s);
+        assert!(prom.contains("# TYPE h2opus_resilience_total counter"));
+        for name in crate::obs::RESILIENCE_NAMES {
+            assert!(
+                prom.contains(&format!("h2opus_resilience_total{{class=\"{name}\"}}")),
+                "missing resilience class {name} in prometheus output"
+            );
+        }
+        let doc = json_from(&s);
+        match &doc {
+            Json::Obj(o) => match o.get("resilience") {
+                Some(Json::Obj(r)) => {
+                    for name in crate::obs::RESILIENCE_NAMES {
+                        assert!(r.contains_key(name), "missing resilience.{name} in json");
+                    }
+                }
+                other => panic!("resilience not an object: {other:?}"),
+            },
+            _ => panic!("snapshot is not an object"),
+        }
     }
 
     #[test]

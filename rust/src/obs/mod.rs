@@ -119,6 +119,61 @@ pub fn update_error_counts() -> [u64; N_UPDATE_ERROR_CLASSES] {
     out
 }
 
+/// Classes of resilience events for the fault-tolerant serving path
+/// (retry, deadline, panic isolation, degradation, quarantine, and the
+/// fault injector itself). The mapping in
+/// `testing/faults.rs::fault_kind_class` is exhaustive by construction
+/// (checked by `tools/static_audit.py`), so no injected-fault path is
+/// observability-silent.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ResilienceClass {
+    /// A transient store I/O failure was retried.
+    RetryAttempt = 0,
+    /// The retry budget ran out; the error surfaced to the caller.
+    RetryExhausted = 1,
+    /// A queued request exceeded its deadline and was expired.
+    DeadlineExpired = 2,
+    /// A panel solve panicked and was isolated to its own tickets.
+    WorkerPanic = 3,
+    /// A request was answered degraded (previous generation).
+    Degraded = 4,
+    /// A corrupt frame file was quarantined (`*.quarantine` rename).
+    Quarantined = 5,
+    /// The fault injector fired at an enabled site (test/chaos only).
+    FaultInjected = 6,
+}
+
+/// Number of resilience classes.
+pub const N_RESILIENCE_CLASSES: usize = 7;
+
+/// Stable exporter names, indexed by `ResilienceClass as usize`.
+pub const RESILIENCE_NAMES: [&str; N_RESILIENCE_CLASSES] = [
+    "retry_attempt",
+    "retry_exhausted",
+    "deadline_expired",
+    "worker_panic",
+    "degraded",
+    "quarantined",
+    "fault_injected",
+];
+
+static RESILIENCE: [AtomicU64; N_RESILIENCE_CLASSES] =
+    [const { AtomicU64::new(0) }; N_RESILIENCE_CLASSES];
+
+/// Count one resilience event of the given class.
+pub fn note_resilience(class: ResilienceClass) {
+    RESILIENCE[class as usize].fetch_add(1, Ordering::Relaxed);
+}
+
+/// Snapshot the resilience counters, in `ResilienceClass` order.
+pub fn resilience_counts() -> [u64; N_RESILIENCE_CLASSES] {
+    let mut out = [0; N_RESILIENCE_CLASSES];
+    for (o, c) in out.iter_mut().zip(RESILIENCE.iter()) {
+        *o = c.load(Ordering::Relaxed);
+    }
+    out
+}
+
 /// Slots in the `factor_generation` gauge table. A fixed-size
 /// linear-probe table keeps [`Snapshot`] `Copy` (same reasoning as the
 /// shard-error counters above); a serve process tracks far fewer live

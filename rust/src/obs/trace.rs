@@ -46,6 +46,9 @@ pub enum RejectReason {
     Overloaded = 4,
     Canceled = 5,
     StaleGeneration = 6,
+    DeadlineExceeded = 7,
+    WorkerPanicked = 8,
+    CorruptFactor = 9,
 }
 
 impl RejectReason {
@@ -58,6 +61,9 @@ impl RejectReason {
             RejectReason::Overloaded => "overloaded",
             RejectReason::Canceled => "canceled",
             RejectReason::StaleGeneration => "stale_generation",
+            RejectReason::DeadlineExceeded => "deadline_exceeded",
+            RejectReason::WorkerPanicked => "worker_panicked",
+            RejectReason::CorruptFactor => "corrupt_factor",
         }
     }
 
@@ -70,6 +76,9 @@ impl RejectReason {
             4 => RejectReason::Overloaded,
             5 => RejectReason::Canceled,
             6 => RejectReason::StaleGeneration,
+            7 => RejectReason::DeadlineExceeded,
+            8 => RejectReason::WorkerPanicked,
+            9 => RejectReason::CorruptFactor,
             _ => return None,
         })
     }
@@ -104,6 +113,23 @@ pub enum EventKind {
     /// A superseded generation of `key` went idle and was collected
     /// (dropped from the registry/LRU; eviction is an munmap).
     GenerationCollected { key: u64, generation: u32 },
+    /// A transient store I/O failure under `key` was retried
+    /// (`attempt` = 1-based retry number).
+    Retried { key: u64, attempt: u32 },
+    /// This request waited `ns` in the queue, past its deadline, and
+    /// was expired with `ServeError::DeadlineExceeded`.
+    DeadlineExpired { ns: u64 },
+    /// A panel solve for `key` panicked; the panic was isolated to the
+    /// panel's `tickets` tickets and the worker kept serving.
+    PanicIsolated { key: u64, tickets: u32 },
+    /// This request was answered degraded, from the previous
+    /// `generation` of `key`, instead of being rejected `Overloaded`.
+    Degraded { key: u64, generation: u32 },
+    /// A corrupt frame file under `key` was renamed to `*.quarantine`.
+    Quarantined { key: u64 },
+    /// The fault injector fired at site index `site`, operation `op`
+    /// (req = 0: not tied to a request).
+    FaultInjected { site: u32, op: u64 },
 }
 
 const TAG_SUBMITTED: u32 = 1;
@@ -117,6 +143,12 @@ const TAG_REBALANCE_FINISHED: u32 = 8;
 const TAG_EVICTED: u32 = 9;
 const TAG_GENERATION_SWAPPED: u32 = 10;
 const TAG_GENERATION_COLLECTED: u32 = 11;
+const TAG_RETRIED: u32 = 12;
+const TAG_DEADLINE_EXPIRED: u32 = 13;
+const TAG_PANIC_ISOLATED: u32 = 14;
+const TAG_DEGRADED: u32 = 15;
+const TAG_QUARANTINED: u32 = 16;
+const TAG_FAULT_INJECTED: u32 = 17;
 
 impl EventKind {
     /// Stable event name used in the JSON-lines dump.
@@ -133,6 +165,12 @@ impl EventKind {
             EventKind::Evicted { .. } => "evicted",
             EventKind::GenerationSwapped { .. } => "generation_swapped",
             EventKind::GenerationCollected { .. } => "generation_collected",
+            EventKind::Retried { .. } => "retried",
+            EventKind::DeadlineExpired { .. } => "deadline_expired",
+            EventKind::PanicIsolated { .. } => "panic_isolated",
+            EventKind::Degraded { .. } => "degraded",
+            EventKind::Quarantined { .. } => "quarantined",
+            EventKind::FaultInjected { .. } => "fault_injected",
         }
     }
 
@@ -154,6 +192,12 @@ impl EventKind {
             EventKind::GenerationCollected { key, generation } => {
                 (TAG_GENERATION_COLLECTED, generation, key)
             }
+            EventKind::Retried { key, attempt } => (TAG_RETRIED, attempt, key),
+            EventKind::DeadlineExpired { ns } => (TAG_DEADLINE_EXPIRED, 0, ns),
+            EventKind::PanicIsolated { key, tickets } => (TAG_PANIC_ISOLATED, tickets, key),
+            EventKind::Degraded { key, generation } => (TAG_DEGRADED, generation, key),
+            EventKind::Quarantined { key } => (TAG_QUARANTINED, 0, key),
+            EventKind::FaultInjected { site, op } => (TAG_FAULT_INJECTED, site, op),
         };
         ((tag as u64) | ((aux as u64) << 32), payload)
     }
@@ -177,6 +221,12 @@ impl EventKind {
             TAG_GENERATION_COLLECTED => {
                 EventKind::GenerationCollected { key: payload, generation: aux }
             }
+            TAG_RETRIED => EventKind::Retried { key: payload, attempt: aux },
+            TAG_DEADLINE_EXPIRED => EventKind::DeadlineExpired { ns: payload },
+            TAG_PANIC_ISOLATED => EventKind::PanicIsolated { key: payload, tickets: aux },
+            TAG_DEGRADED => EventKind::Degraded { key: payload, generation: aux },
+            TAG_QUARANTINED => EventKind::Quarantined { key: payload },
+            TAG_FAULT_INJECTED => EventKind::FaultInjected { site: aux, op: payload },
             _ => return None,
         })
     }
@@ -221,9 +271,28 @@ impl Event {
                 o.insert("bytes".to_string(), Json::Str(format!("{bytes:x}")));
             }
             EventKind::GenerationSwapped { key, generation }
-            | EventKind::GenerationCollected { key, generation } => {
+            | EventKind::GenerationCollected { key, generation }
+            | EventKind::Degraded { key, generation } => {
                 o.insert("key".to_string(), Json::Str(format!("{key:016x}")));
                 o.insert("generation".to_string(), Json::Num(generation as f64));
+            }
+            EventKind::Retried { key, attempt } => {
+                o.insert("key".to_string(), Json::Str(format!("{key:016x}")));
+                o.insert("attempt".to_string(), Json::Num(attempt as f64));
+            }
+            EventKind::DeadlineExpired { ns } => {
+                o.insert("ns".to_string(), Json::Num(ns as f64));
+            }
+            EventKind::PanicIsolated { key, tickets } => {
+                o.insert("key".to_string(), Json::Str(format!("{key:016x}")));
+                o.insert("tickets".to_string(), Json::Num(tickets as f64));
+            }
+            EventKind::Quarantined { key } => {
+                o.insert("key".to_string(), Json::Str(format!("{key:016x}")));
+            }
+            EventKind::FaultInjected { site, op } => {
+                o.insert("site".to_string(), Json::Num(site as f64));
+                o.insert("op".to_string(), Json::Num(op as f64));
             }
             _ => {}
         }
@@ -277,6 +346,9 @@ impl Event {
                     RejectReason::Overloaded,
                     RejectReason::Canceled,
                     RejectReason::StaleGeneration,
+                    RejectReason::DeadlineExceeded,
+                    RejectReason::WorkerPanicked,
+                    RejectReason::CorruptFactor,
                 ]
                 .into_iter()
                 .find(|x| x.name() == r)?;
@@ -294,6 +366,24 @@ impl Event {
             "generation_collected" => EventKind::GenerationCollected {
                 key: hex("key")?,
                 generation: num("generation")? as u32,
+            },
+            "retried" => EventKind::Retried {
+                key: hex("key")?,
+                attempt: num("attempt")? as u32,
+            },
+            "deadline_expired" => EventKind::DeadlineExpired { ns: num("ns")? },
+            "panic_isolated" => EventKind::PanicIsolated {
+                key: hex("key")?,
+                tickets: num("tickets")? as u32,
+            },
+            "degraded" => EventKind::Degraded {
+                key: hex("key")?,
+                generation: num("generation")? as u32,
+            },
+            "quarantined" => EventKind::Quarantined { key: hex("key")? },
+            "fault_injected" => EventKind::FaultInjected {
+                site: num("site")? as u32,
+                op: num("op")?,
             },
             _ => return None,
         };
@@ -457,6 +547,15 @@ mod tests {
         r.record(7, EventKind::Rejected { reason: RejectReason::StaleGeneration });
         r.record(0, EventKind::GenerationSwapped { key: 0xfeed_f00d_dead_beef, generation: 3 });
         r.record(0, EventKind::GenerationCollected { key: 0xfeed_f00d_dead_beef, generation: 2 });
+        r.record(13, EventKind::Retried { key: 0xfeed_f00d_dead_beef, attempt: 2 });
+        r.record(14, EventKind::DeadlineExpired { ns: 5_000_000 });
+        r.record(0, EventKind::PanicIsolated { key: 0xfeed_f00d_dead_beef, tickets: 4 });
+        r.record(15, EventKind::Degraded { key: 0xfeed_f00d_dead_beef, generation: 1 });
+        r.record(0, EventKind::Quarantined { key: 0xfeed_f00d_dead_beef });
+        r.record(0, EventKind::FaultInjected { site: 2, op: 9 });
+        r.record(16, EventKind::Rejected { reason: RejectReason::DeadlineExceeded });
+        r.record(17, EventKind::Rejected { reason: RejectReason::WorkerPanicked });
+        r.record(18, EventKind::Rejected { reason: RejectReason::CorruptFactor });
         let dump = r.dump_json_lines();
         let parsed: Vec<Event> = dump
             .lines()

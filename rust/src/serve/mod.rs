@@ -102,6 +102,48 @@
 //!    [`store::FactorStore::latest`]/[`store::FactorStore::gc_superseded`]
 //!    resolve and prune by the same ordering the service uses.
 //!
+//! ## The resilience contract
+//!
+//! The serve stack assumes the world fails — disks return transient
+//! errors, frames rot, panels panic, queues back up — and promises one
+//! thing above all: **a submitted ticket always resolves**, either with
+//! a [`SolveResponse`] or with a *typed* [`ServeError`]. The rules,
+//! exercised end-to-end by the deterministic fault injector
+//! ([`crate::testing::faults`]) in `rust/tests/chaos.rs` and by
+//! `serve --chaos` (details in `docs/resilience.md`):
+//!
+//! 1. **Transient I/O is retried, bounded.** Store loads retry up to
+//!    [`ServeOpts::retry_attempts`] times with linear backoff
+//!    ([`ServeOpts::retry_backoff`]); saves retry internally the same
+//!    way. Exhaustion surfaces as [`ServeError::Store`] — never a
+//!    panic, never an unbounded loop.
+//! 2. **Corruption is never retried.** A checksum or truncation
+//!    failure quarantines the frame file (atomic rename to
+//!    `*.quarantine`, invisible to every subsequent load) and surfaces
+//!    as [`ServeError::CorruptFactor`]; retrying bad bytes cannot help
+//!    and quarantine preserves them for forensics.
+//! 3. **Deadlines expire whole tickets, typed.** With
+//!    [`ServeOpts::request_deadline`] set, requests overdue at a
+//!    scheduling point fail with [`ServeError::DeadlineExceeded`]
+//!    (FIFO queues make the overdue set a prefix — the sweep is cheap)
+//!    rather than occupying panel slots the caller stopped waiting on.
+//! 4. **Panics are isolated to the panel.** Panel execution runs under
+//!    `catch_unwind`; a panicking solve fails that panel's tickets with
+//!    [`ServeError::WorkerPanicked`] and the worker keeps serving — one
+//!    poisoned request cannot take down a shard.
+//! 5. **Overload degrades before it rejects.** With
+//!    [`ServeOpts::degraded_serving`], a full queue admits requests on
+//!    the *previous* factor generation (response flagged
+//!    [`SolveResponse::degraded`]) when one is still registered, and
+//!    only then rejects [`ServeError::Overloaded`].
+//! 6. **Every failure path is observable.** Each rule above counts into
+//!    [`crate::obs::ResilienceClass`] and records a flight-recorder
+//!    event — resilience you cannot see is resilience you cannot trust.
+//!
+//! [`shard::ShardedService`] forwards this surface unchanged: workers
+//! share one [`ServeOpts`], and typed errors cross the routing layer
+//! as-is.
+//!
 //! ## The metric-name contract (lifecycle additions)
 //!
 //! Frozen names introduced by the lifecycle layer: the
@@ -110,6 +152,14 @@
 //! [`crate::obs::UPDATE_ERROR_NAMES`]), JSON keys `factor_generations`
 //! and `update_errors`, flight-recorder events `generation_swapped` and
 //! `generation_collected`, and reject reason `stale_generation`.
+//!
+//! Resilience additions, equally frozen: the
+//! `h2opus_resilience_total{class=}` counter (classes from
+//! [`crate::obs::RESILIENCE_NAMES`]), JSON key `resilience`,
+//! flight-recorder events `retried`, `deadline_expired`,
+//! `panic_isolated`, `degraded`, `quarantined`, `fault_injected`, and
+//! reject reasons `deadline_exceeded`, `worker_panicked`,
+//! `corrupt_factor`.
 //!
 //! How these contracts are *checked* — property tests with shrinking
 //! over arbitrary corruptions and arrival orders, `cargo kani` proof

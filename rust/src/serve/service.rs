@@ -63,9 +63,12 @@
 
 use crate::batch::NativeBatch;
 use crate::linalg::matrix::Matrix;
-use crate::obs::{self, EventKind, HistId, KeyHistSnapshot, KeyHists, RejectReason};
+use crate::obs::{
+    self, EventKind, HistId, KeyHistSnapshot, KeyHists, RejectReason, ResilienceClass,
+};
 use crate::profile;
 use crate::serve::store::{FactorId, FactorStore, StoreError, StoredFactor};
+use crate::testing::faults::{self, FaultKind, FaultSite};
 use crate::solve::{chol_solve_multi_with, ldl_solve_multi_with, pcg_multi, TlrPanelOp};
 use crate::tlr::matrix::TlrMatrix;
 use std::collections::{HashMap, VecDeque};
@@ -93,6 +96,24 @@ pub struct ServeOpts {
     /// Load store factors via the zero-copy `mmap` path
     /// ([`FactorStore::load_mapped`]). Disable to force owned decoding.
     pub mmap: bool,
+    /// Per-request deadline: a queued request older than this is
+    /// expired with [`ServeError::DeadlineExceeded`] at the worker's
+    /// next scheduling point instead of being solved late. `None`
+    /// (the default) disables expiry.
+    pub request_deadline: Option<Duration>,
+    /// Transient store-I/O retry budget: a factor load that fails with
+    /// an I/O error is retried up to this many times (with
+    /// `retry_backoff` linear backoff) before the error surfaces.
+    /// Checksum/format failures are never retried — they quarantine.
+    pub retry_attempts: u32,
+    /// Base backoff between store-load retries (attempt `k` sleeps
+    /// `k * retry_backoff`).
+    pub retry_backoff: Duration,
+    /// Graceful degradation: when a key's backlog is at the admission
+    /// limit, admit the request pinned to the *previous* registered
+    /// generation (marked [`SolveResponse::degraded`]) instead of
+    /// rejecting, as long as the backlog is below twice the limit.
+    pub degraded_serving: bool,
 }
 
 impl Default for ServeOpts {
@@ -104,6 +125,10 @@ impl Default for ServeOpts {
             quantum: 0,
             max_backlog: 1024,
             mmap: true,
+            request_deadline: None,
+            retry_attempts: 2,
+            retry_backoff: Duration::from_millis(1),
+            degraded_serving: false,
         }
     }
 }
@@ -135,6 +160,11 @@ pub struct SolveResponse {
     /// The factor generation this request was pinned to at admission
     /// (and therefore solved against).
     pub generation: u32,
+    /// This answer was served degraded: admission was at the backlog
+    /// limit and the request was pinned to the *previous* factor
+    /// generation instead of being rejected (see
+    /// [`ServeOpts::degraded_serving`]).
+    pub degraded: bool,
 }
 
 /// A request-level failure.
@@ -157,6 +187,15 @@ pub enum ServeError {
     StaleGeneration { key: u64, generation: u32 },
     /// The service shut down before answering.
     Canceled,
+    /// The request waited past [`ServeOpts::request_deadline`] and was
+    /// expired from the queue instead of being solved late.
+    DeadlineExceeded { key: u64, waited: Duration },
+    /// The panel solve for this request panicked; the panic was
+    /// isolated to the panel's tickets and the worker kept serving.
+    WorkerPanicked { key: u64, what: String },
+    /// The stored frame failed checksum/format validation and was
+    /// quarantined (renamed `*.quarantine`); the load is not retried.
+    CorruptFactor { key: u64, detail: String },
 }
 
 impl std::fmt::Display for ServeError {
@@ -179,6 +218,16 @@ impl std::fmt::Display for ServeError {
                 "key {key:016x} generation {generation} was collected before the request ran"
             ),
             ServeError::Canceled => write!(f, "service shut down before answering"),
+            ServeError::DeadlineExceeded { key, waited } => write!(
+                f,
+                "key {key:016x} request expired after waiting {waited:?} (deadline exceeded)"
+            ),
+            ServeError::WorkerPanicked { key, what } => {
+                write!(f, "panel solve for key {key:016x} panicked (isolated): {what}")
+            }
+            ServeError::CorruptFactor { key, detail } => {
+                write!(f, "factor under key {key:016x} is corrupt and was quarantined: {detail}")
+            }
         }
     }
 }
@@ -292,6 +341,9 @@ struct PendingReq {
     mode: ReqMode,
     rhs: Vec<f64>,
     enqueued: Instant,
+    /// Admitted via the degradation ladder: pinned to the previous
+    /// generation because the backlog was at the admission limit.
+    degraded: bool,
     tx: Sender<Result<SolveResponse, ServeError>>,
 }
 
@@ -382,6 +434,9 @@ fn reject_reason(e: &ServeError) -> RejectReason {
         ServeError::Overloaded { .. } => RejectReason::Overloaded,
         ServeError::StaleGeneration { .. } => RejectReason::StaleGeneration,
         ServeError::Canceled => RejectReason::Canceled,
+        ServeError::DeadlineExceeded { .. } => RejectReason::DeadlineExceeded,
+        ServeError::WorkerPanicked { .. } => RejectReason::WorkerPanicked,
+        ServeError::CorruptFactor { .. } => RejectReason::CorruptFactor,
     }
 }
 
@@ -671,18 +726,40 @@ impl SolveService {
                 obs::record_event(req_id, EventKind::Rejected { reason: reject_reason(&e) });
                 return Err(e);
             }
-            let generation = q.generations.get(&key).copied().unwrap_or(0);
+            let mut generation = q.generations.get(&key).copied().unwrap_or(0);
+            let mut degraded = false;
             let queue = q.queues.entry(key).or_default();
             if queue.len() >= self.inner.opts.max_backlog {
-                self.inner.counters.rejected.fetch_add(1, Ordering::Relaxed);
-                profile::add_serve_rejected(1);
-                let e = ServeError::Overloaded {
-                    key,
-                    backlog: queue.len(),
-                    limit: self.inner.opts.max_backlog,
-                };
-                obs::record_event(req_id, EventKind::Rejected { reason: reject_reason(&e) });
-                return Err(e);
+                // Degradation ladder: before rejecting, shed load onto
+                // the previous registered generation if the caller
+                // opted in. The degraded lane is itself bounded (2× the
+                // admission limit) so overload still backpressures.
+                let prev = generation.wrapping_sub(1);
+                let degrade_ok = self.inner.opts.degraded_serving
+                    && generation > 0
+                    && queue.len() < self.inner.opts.max_backlog * 2
+                    && self
+                        .inner
+                        .registry
+                        .lock()
+                        .unwrap()
+                        .contains_key(&FactorId { key, generation: prev });
+                if degrade_ok {
+                    generation = prev;
+                    degraded = true;
+                    obs::note_resilience(ResilienceClass::Degraded);
+                    obs::record_event(req_id, EventKind::Degraded { key, generation: prev });
+                } else {
+                    self.inner.counters.rejected.fetch_add(1, Ordering::Relaxed);
+                    profile::add_serve_rejected(1);
+                    let e = ServeError::Overloaded {
+                        key,
+                        backlog: queue.len(),
+                        limit: self.inner.opts.max_backlog,
+                    };
+                    obs::record_event(req_id, EventKind::Rejected { reason: reject_reason(&e) });
+                    return Err(e);
+                }
             }
             let was_empty = queue.is_empty();
             queue.push_back(PendingReq {
@@ -692,6 +769,7 @@ impl SolveService {
                 mode,
                 rhs,
                 enqueued: Instant::now(),
+                degraded,
                 tx,
             });
             if was_empty {
@@ -770,6 +848,82 @@ impl Drop for SolveService {
     }
 }
 
+/// Expire every queued request older than `deadline`: answer it with
+/// [`ServeError::DeadlineExceeded`] and drop it from its queue instead
+/// of solving it late. Requests are FIFO per key, so the overdue ones
+/// are a prefix of each queue. Runs at worker scheduling points with
+/// the queue lock held (senders never block, so replying under the
+/// lock is fine).
+fn expire_overdue(q: &mut QueueState, deadline: Duration, counters: &Counters) {
+    if q.total == 0 {
+        return;
+    }
+    let QueueState { queues, order, deficit, total, .. } = q;
+    let mut emptied = false;
+    for (key, queue) in queues.iter_mut() {
+        while queue.front().is_some_and(|r| r.enqueued.elapsed() >= deadline) {
+            let req = queue.pop_front().expect("front checked above");
+            *total -= 1;
+            counters.requests.fetch_add(1, Ordering::Relaxed);
+            let waited = req.enqueued.elapsed();
+            obs::note_resilience(ResilienceClass::DeadlineExpired);
+            let ns = waited.as_nanos() as u64;
+            obs::record_event(req.req_id, EventKind::DeadlineExpired { ns });
+            reject(req.req_id, &req.tx, ServeError::DeadlineExceeded { key: *key, waited });
+        }
+        emptied |= queue.is_empty();
+    }
+    if emptied {
+        order.retain(|k| queues.get(k).is_some_and(|v| !v.is_empty()));
+        deficit.retain(|k, _| queues.get(k).is_some_and(|v| !v.is_empty()));
+        queues.retain(|_, v| !v.is_empty());
+    }
+}
+
+/// Run a store load under the transient-I/O retry policy: `Io` errors
+/// retry up to [`ServeOpts::retry_attempts`] times with linear backoff
+/// (attempt `k` sleeps `k * retry_backoff`), each retry counted and
+/// traced. Checksum/format failures never retry: `quarantine` moves
+/// the offending frame aside (atomic rename to `*.quarantine`,
+/// returning the destination on success) and the load fails with the
+/// typed [`ServeError::CorruptFactor`].
+fn load_with_retry<T>(
+    opts: &ServeOpts,
+    key: u64,
+    mut attempt_load: impl FnMut() -> Result<Option<T>, StoreError>,
+    quarantine: impl FnOnce() -> Option<String>,
+) -> Result<Option<T>, ServeError> {
+    let mut attempt = 0u32;
+    loop {
+        match attempt_load() {
+            Ok(v) => return Ok(v),
+            Err(StoreError::Io(e)) => {
+                if attempt >= opts.retry_attempts {
+                    obs::note_resilience(ResilienceClass::RetryExhausted);
+                    return Err(ServeError::Store(format!(
+                        "load for key {key:016x} failed after {attempt} retries: {e}"
+                    )));
+                }
+                attempt += 1;
+                obs::note_resilience(ResilienceClass::RetryAttempt);
+                obs::record_event(0, EventKind::Retried { key, attempt });
+                std::thread::sleep(opts.retry_backoff * attempt);
+            }
+            Err(StoreError::Format(m)) => {
+                let detail = match quarantine() {
+                    Some(path) => {
+                        obs::note_resilience(ResilienceClass::Quarantined);
+                        obs::record_event(0, EventKind::Quarantined { key });
+                        format!("{m}; frame quarantined at {path}")
+                    }
+                    None => m,
+                };
+                return Err(ServeError::CorruptFactor { key, detail });
+            }
+        }
+    }
+}
+
 /// Shared resolution path: registry → LRU cache → disk store. The
 /// registry is consulted first so a re-registered value takes effect
 /// immediately instead of being shadowed by a stale LRU entry.
@@ -777,7 +931,7 @@ fn resolve_cached<K: Copy + PartialEq + Eq + std::hash::Hash, T>(
     key: K,
     registry: &Mutex<HashMap<K, Arc<T>>>,
     cache: &mut LruCache<K, T>,
-    load: impl FnOnce() -> Result<Option<T>, StoreError>,
+    load: impl FnOnce() -> Result<Option<T>, ServeError>,
     size_bytes: impl FnOnce(&T) -> u64,
     missing: impl FnOnce(K) -> ServeError,
 ) -> Result<Arc<T>, ServeError> {
@@ -800,8 +954,7 @@ fn resolve_cached<K: Copy + PartialEq + Eq + std::hash::Hash, T>(
             Ok(v)
         }
         Ok(None) => Err(missing(key)),
-        Err(StoreError::Io(e)) => Err(ServeError::Store(e.to_string())),
-        Err(StoreError::Format(m)) => Err(ServeError::Store(m)),
+        Err(e) => Err(e),
     }
 }
 
@@ -823,19 +976,33 @@ fn resolve_factor(
         &inner.registry,
         cache,
         || {
-            let exact = if inner.opts.mmap {
-                store.load_mapped_id(id)?.map(|m| m.value)
-            } else {
-                store.load_id(id)?
-            };
+            let exact = load_with_retry(
+                &inner.opts,
+                id.key,
+                || {
+                    if inner.opts.mmap {
+                        store.load_mapped_id(id).map(|o| o.map(|m| m.value))
+                    } else {
+                        store.load_id(id)
+                    }
+                },
+                || store.quarantine_id(id),
+            )?;
             if exact.is_some() || id.generation > 0 {
                 return Ok(exact);
             }
-            if inner.opts.mmap {
-                store.load_mapped(id.key).map(|o| o.map(|m| m.value))
-            } else {
-                store.load(id.key)
-            }
+            load_with_retry(
+                &inner.opts,
+                id.key,
+                || {
+                    if inner.opts.mmap {
+                        store.load_mapped(id.key).map(|o| o.map(|m| m.value))
+                    } else {
+                        store.load(id.key)
+                    }
+                },
+                || store.quarantine_latest(id.key),
+            )
         },
         StoredFactor::approx_bytes,
         |id| {
@@ -860,11 +1027,18 @@ fn resolve_matrix(
         &inner.registry_mat,
         cache,
         || {
-            if inner.opts.mmap {
-                store.load_matrix_mapped(key).map(|o| o.map(|m| m.value))
-            } else {
-                store.load_matrix(key)
-            }
+            load_with_retry(
+                &inner.opts,
+                key,
+                || {
+                    if inner.opts.mmap {
+                        store.load_matrix_mapped(key).map(|o| o.map(|m| m.value))
+                    } else {
+                        store.load_matrix(key)
+                    }
+                },
+                || store.quarantine_matrix(key),
+            )
         },
         |a| (a.memory().total_f64() * 8) as u64,
         ServeError::UnknownMatrix,
@@ -917,7 +1091,17 @@ fn worker_loop(inner: &Inner, store: &FactorStore) {
         //    deadline).
         let batch: Vec<PendingReq> = {
             let mut guard = inner.queue.lock().unwrap();
-            while guard.total == 0 {
+            loop {
+                // Deadline sweep: every scheduling point first expires
+                // requests that waited past the per-request deadline,
+                // so an overdue request is never solved late (and never
+                // wastes a panel slot).
+                if let Some(dl) = opts.request_deadline {
+                    expire_overdue(&mut guard, dl, &inner.counters);
+                }
+                if guard.total > 0 {
+                    break;
+                }
                 if guard.shutdown {
                     return;
                 }
@@ -944,7 +1128,14 @@ fn worker_loop(inner: &Inner, store: &FactorStore) {
             // sub-panel hold is only worth it when the worker would
             // otherwise sleep).
             loop {
-                let ready = guard.queues.get(&key).map_or(0, VecDeque::len);
+                // Requests (including the scheduled key's own) can
+                // expire while the panel is held open.
+                if let Some(dl) = opts.request_deadline {
+                    expire_overdue(&mut guard, dl, &inner.counters);
+                }
+                let Some(ready) = guard.queues.get(&key).map(VecDeque::len) else {
+                    break;
+                };
                 if ready >= budget || guard.shutdown {
                     break;
                 }
@@ -963,7 +1154,12 @@ fn worker_loop(inner: &Inner, store: &FactorStore) {
                 guard = g;
             }
             let q = &mut *guard;
-            let queue = q.queues.get_mut(&key).expect("scheduled key has a queue");
+            // The deadline sweep may have expired the scheduled key's
+            // whole queue while the panel was held open; reschedule.
+            let Some(queue) = q.queues.get_mut(&key) else {
+                drop(guard);
+                continue;
+            };
             // Take up to `budget` leading requests of one mode AND one
             // pinned generation (mixed modes — or a queue straddling a
             // swap — split into consecutive panels). The front request
@@ -1106,6 +1302,16 @@ fn run_batch(
     // error this batch, not kill the worker and wedge the service.
     let solved = std::panic::catch_unwind(std::panic::AssertUnwindSafe(
         || -> (Matrix, Vec<(usize, bool)>) {
+            // Chaos hooks: artificial execution latency (drives the
+            // deadline path deterministically) and injected panel
+            // panics (drives the isolation path). Both are single
+            // relaxed loads when no fault plan is installed.
+            if let Some(FaultKind::Delay { ms }) = faults::check(FaultSite::ExecDelay) {
+                std::thread::sleep(Duration::from_millis(ms as u64));
+            }
+            if faults::check(FaultSite::PanelExec).is_some() {
+                panic!("injected fault: panel exec (key {key:016x})");
+            }
             match mode {
                 ReqMode::Direct => {
                     let x = match factor.as_ref() {
@@ -1138,7 +1344,12 @@ fn run_batch(
                 .map(|s| s.to_string())
                 .or_else(|| panic.downcast_ref::<String>().cloned())
                 .unwrap_or_else(|| "non-string panic".to_string());
-            let e = ServeError::Store(format!("solve panicked for key {key:016x}: {what}"));
+            // Isolation: the panic poisons exactly this panel's tickets
+            // (typed, counted, traced); the worker thread survives and
+            // the caller's `executing` cleanup runs normally.
+            obs::note_resilience(ResilienceClass::WorkerPanic);
+            obs::record_event(0, EventKind::PanicIsolated { key, tickets: w as u32 });
+            let e = ServeError::WorkerPanicked { key, what };
             inner.counters.requests.fetch_add(w as u64, Ordering::Relaxed);
             for req in valid {
                 reject(req.req_id, &req.tx, e.clone());
@@ -1177,6 +1388,7 @@ fn run_batch(
             iters,
             converged,
             generation: id.generation,
+            degraded: req.degraded,
         };
         let _ = req.tx.send(Ok(resp));
         obs::record_event(req.req_id, EventKind::Responded);

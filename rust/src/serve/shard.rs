@@ -403,6 +403,14 @@ impl State {
 /// contract). Per-key DRR fairness, LRU caching and admission bounds
 /// are per-shard: each worker runs the unmodified single-service
 /// scheduler over exactly the keys it owns.
+///
+/// The resilience contract (serve module docs §resilience-contract) is
+/// forwarded unchanged: every worker runs the shared [`ServeOpts`], so
+/// per-request deadlines, store-load retries, checksum quarantine,
+/// panic isolation and degraded admission behave per-shard exactly as
+/// on a single service — a panel panic poisons one shard's panel, a
+/// deadline sweep runs on the owning worker's scheduler, and the typed
+/// [`ServeError`] surface crosses the routing layer untouched.
 pub struct ShardedService {
     /// Routing state: read-locked on every submit (routing only reads
     /// the map and worker table), write-locked by registration and
@@ -557,6 +565,14 @@ impl ShardedService {
         let state = self.state.read().unwrap();
         let w = state.route(key);
         state.workers[w].service.current_generation(key)
+    }
+
+    /// Sweep leftover `*.tmp.*` write strays for `key` out of the
+    /// shared store root (see [`FactorStore::sweep_tmp`]). Store
+    /// maintenance is front-end scoped, not per-worker: every worker
+    /// serves from the same root, so one sweep covers the fleet.
+    pub fn sweep_store_tmp(&self, key: u64) -> Result<usize, StoreError> {
+        FactorStore::open(self.root.clone())?.sweep_tmp(key)
     }
 
     /// Current generation per mirrored key, ascending by key — the

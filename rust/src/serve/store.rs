@@ -55,10 +55,31 @@ use crate::linalg::matrix::Matrix;
 use crate::linalg::matrix32::MatrixF32;
 use crate::linalg::storage::{Mapping, MappedSlice, MappedSlice32, Storage32, TileStorage};
 use crate::serve::mmap::Mmap;
+use crate::testing::faults::{self, FaultKind, FaultSite};
 use crate::tlr::matrix::TlrMatrix;
 use crate::tlr::tile::{LowRank, LowRank32, Tile};
 use std::path::{Path, PathBuf};
 use std::sync::Arc;
+
+/// Consult the chaos injector at a store I/O site: a `Delay` fault
+/// sleeps in place, `Corrupt` surfaces as a checksum-class `Format`
+/// error, and any other kind surfaces as a transient `Io` error (the
+/// retryable class). A no-op unless a fault plan is installed.
+fn fault_io(site: FaultSite, what: &str) -> Result<(), StoreError> {
+    match faults::check(site) {
+        None => Ok(()),
+        Some(FaultKind::Delay { ms }) => {
+            std::thread::sleep(std::time::Duration::from_millis(ms as u64));
+            Ok(())
+        }
+        Some(FaultKind::Corrupt) => {
+            Err(StoreError::Format(format!("checksum mismatch (injected corruption at {what})")))
+        }
+        Some(_) => {
+            Err(StoreError::Io(std::io::Error::other(format!("injected io fault at {what}"))))
+        }
+    }
+}
 
 const MAGIC: &[u8; 8] = b"H2OTLRSF";
 /// Current format version. v2 added a per-tile precision word to the
@@ -596,6 +617,11 @@ fn unframe_ref(bytes: &[u8], want_kind: u32) -> Result<Frame<'_>, StoreError> {
     }
     let header = &bytes[40..40 + header_len];
     let payload_bytes = &bytes[40 + header_len..];
+    // Chaos hook: an injected frame-corruption fault fails validation
+    // exactly the way a flipped payload byte would.
+    if faults::check(FaultSite::FrameChecksum).is_some() {
+        return format_err("checksum mismatch (injected frame corruption)");
+    }
     if fnv1a_extend(fnv1a(header), payload_bytes) != checksum {
         return format_err("checksum mismatch (corrupted file)");
     }
@@ -783,25 +809,83 @@ fn decode_ldl_parts(
 
 // -------------------------------------------------------- file helpers
 
-/// Write `bytes` atomically-ish: to a sibling temp file, then rename.
+/// Transient-I/O retries a [`write_file`] save gets before the error
+/// surfaces (mirrors the load-side `ServeOpts::retry_attempts` default;
+/// saves have no per-service options to thread a knob through).
+const WRITE_RETRIES: u32 = 2;
+
+/// Write `bytes` atomically and durably: to a sibling temp file which
+/// is fsynced *before* the rename (so the rename can never publish a
+/// name whose bytes are not yet on disk), then a best-effort fsync of
+/// the parent directory so the rename itself survives a crash.
 /// The temp name is unique per process + write so concurrent saves of
 /// the same key (two processes both missing on one factor) cannot
 /// clobber each other's in-flight temp file — last rename wins with a
-/// complete file either way.
+/// complete file either way. A writer that dies mid-save leaves only a
+/// `*.tmp.*` stray, which every load ignores (see [`parse_factor_name`])
+/// and [`FactorStore::sweep_tmp`] reclaims.
+///
+/// Transient `Io` failures are retried up to [`WRITE_RETRIES`] times
+/// with linear backoff, counted in the resilience counters like the
+/// load-side retries.
 fn write_file(path: &Path, bytes: &[u8]) -> Result<(), StoreError> {
+    let mut attempt = 0u32;
+    loop {
+        match write_file_once(path, bytes) {
+            Ok(()) => return Ok(()),
+            Err(StoreError::Io(e)) => {
+                if attempt >= WRITE_RETRIES {
+                    crate::obs::note_resilience(crate::obs::ResilienceClass::RetryExhausted);
+                    return Err(StoreError::Io(e));
+                }
+                attempt += 1;
+                crate::obs::note_resilience(crate::obs::ResilienceClass::RetryAttempt);
+                crate::obs::record_event(0, crate::obs::EventKind::Retried { key: 0, attempt });
+                std::thread::sleep(std::time::Duration::from_millis(attempt as u64));
+            }
+            Err(e) => return Err(e),
+        }
+    }
+}
+
+fn write_file_once(path: &Path, bytes: &[u8]) -> Result<(), StoreError> {
+    use std::io::Write;
     use std::sync::atomic::{AtomicU64, Ordering};
     static WRITE_SEQ: AtomicU64 = AtomicU64::new(0);
     if let Some(dir) = path.parent() {
         std::fs::create_dir_all(dir)?;
     }
+    fault_io(FaultSite::StoreWrite, "store write")?;
     let seq = WRITE_SEQ.fetch_add(1, Ordering::Relaxed);
     let tmp = path.with_extension(format!("tmp.{}.{seq}", std::process::id()));
-    std::fs::write(&tmp, bytes)?;
+    {
+        let mut f = std::fs::File::create(&tmp)?;
+        if let Err(e) = f.write_all(bytes).and_then(|()| f.sync_all()) {
+            drop(f);
+            let _ = std::fs::remove_file(&tmp);
+            return Err(e.into());
+        }
+    }
     if let Err(e) = std::fs::rename(&tmp, path) {
         let _ = std::fs::remove_file(&tmp);
         return Err(e.into());
     }
+    // Durability of the rename is best-effort: not every filesystem
+    // lets a directory be opened and fsynced, and the data itself is
+    // already safe behind the temp-file fsync above.
+    if let Some(dir) = path.parent() {
+        if let Ok(d) = std::fs::File::open(dir) {
+            let _ = d.sync_all();
+        }
+    }
     Ok(())
+}
+
+/// `std::fs::read` behind the `StoreRead` chaos injection point — every
+/// owned (non-mapped) frame read funnels through here.
+fn read_file(path: &Path) -> Result<Vec<u8>, StoreError> {
+    fault_io(FaultSite::StoreRead, "store read")?;
+    Ok(std::fs::read(path)?)
 }
 
 /// Save a [`TlrMatrix`] to `path`.
@@ -811,7 +895,7 @@ pub fn save_tlr(path: &Path, a: &TlrMatrix) -> Result<(), StoreError> {
 
 /// Load a [`TlrMatrix`] from `path`.
 pub fn load_tlr(path: &Path) -> Result<TlrMatrix, StoreError> {
-    decode_tlr(&std::fs::read(path)?)
+    decode_tlr(&read_file(path)?)
 }
 
 /// Save a [`CholFactor`] to `path`.
@@ -821,7 +905,7 @@ pub fn save_chol(path: &Path, f: &CholFactor) -> Result<(), StoreError> {
 
 /// Load a [`CholFactor`] from `path`.
 pub fn load_chol(path: &Path) -> Result<CholFactor, StoreError> {
-    decode_chol(&std::fs::read(path)?)
+    decode_chol(&read_file(path)?)
 }
 
 /// Save an [`LdlFactor`] to `path`.
@@ -831,7 +915,7 @@ pub fn save_ldl(path: &Path, f: &LdlFactor) -> Result<(), StoreError> {
 
 /// Load an [`LdlFactor`] from `path`.
 pub fn load_ldl(path: &Path) -> Result<LdlFactor, StoreError> {
-    decode_ldl(&std::fs::read(path)?)
+    decode_ldl(&read_file(path)?)
 }
 
 // ------------------------------------------------------ mapped loading
@@ -866,8 +950,32 @@ impl<T> Mapped<T> {
 /// checksum pass warms the page cache, and after it decoding hands out
 /// views only.
 fn map_file(path: &Path) -> Result<Arc<Mmap>, StoreError> {
+    fault_io(FaultSite::StoreRead, "store map")?;
     let file = std::fs::File::open(path)?;
     Ok(Arc::new(Mmap::map(&file)?))
+}
+
+/// Guard against post-validation truncation: after the frame has been
+/// validated over the mapped bytes, re-check that the file on disk is
+/// still as long as the mapping. A frame truncated in place between
+/// open and decode would otherwise validate against stale mapped pages
+/// and then SIGBUS (or read zeros) when a solve first touches the
+/// missing tail. An injected `MapTruncation` fault reports the on-disk
+/// length as 0 to drive this path deterministically.
+fn check_mapped_len(path: &Path, map: &Mmap) -> Result<(), StoreError> {
+    let disk_len = if faults::check(FaultSite::MapTruncation).is_some() {
+        0
+    } else {
+        std::fs::metadata(path)?.len()
+    };
+    if disk_len != map.len() as u64 {
+        return format_err(format!(
+            "file {} truncated after validation: {disk_len} bytes on disk, {} mapped",
+            path.display(),
+            map.len()
+        ));
+    }
+    Ok(())
 }
 
 fn mapped_taker(map: &Arc<Mmap>, fr: &Frame<'_>) -> Taker<'static> {
@@ -893,6 +1001,7 @@ macro_rules! mapped_loader {
             }
             let map = map_file(path)?;
             let fr = unframe_ref(map.bytes(), $kind)?;
+            check_mapped_len(path, &map)?;
             let taker = mapped_taker(&map, &fr);
             let value = $parts(fr.version, fr.header, taker)?;
             Ok(Mapped { value, addr_range: map.addr_range(), mapped_bytes: map.len() })
@@ -1252,6 +1361,73 @@ impl FactorStore {
             }));
         }
         Ok(None)
+    }
+
+    /// Move the frame file(s) of the exact generation `id` aside as
+    /// `<name>.quarantine` (an atomic rename), so a corrupt frame can
+    /// never be re-loaded — or re-resolved as `latest` — while staying
+    /// on disk for forensics. Quarantined names are invisible to
+    /// [`FactorStore::generations`] just like temp files. Best-effort:
+    /// returns the quarantine destination when a rename happened,
+    /// `None` when nothing was there to move.
+    pub fn quarantine_id(&self, id: FactorId) -> Option<String> {
+        let mut hit = None;
+        for p in [self.chol_path_id(id), self.ldl_path_id(id)] {
+            if !p.exists() {
+                continue;
+            }
+            let mut dst = p.clone().into_os_string();
+            dst.push(".quarantine");
+            let dst = PathBuf::from(dst);
+            if std::fs::rename(&p, &dst).is_ok() {
+                hit = Some(dst.display().to_string());
+            }
+        }
+        hit
+    }
+
+    /// Quarantine the newest on-disk generation of `key` — the frame a
+    /// flat-key load would have resolved.
+    pub fn quarantine_latest(&self, key: u64) -> Option<String> {
+        let id = self.latest(key).ok().flatten()?;
+        self.quarantine_id(id)
+    }
+
+    /// Quarantine the TLR operator matrix frame under `key`.
+    pub fn quarantine_matrix(&self, key: u64) -> Option<String> {
+        let p = self.tlr_path(key);
+        if !p.exists() {
+            return None;
+        }
+        let mut dst = p.clone().into_os_string();
+        dst.push(".quarantine");
+        let dst = PathBuf::from(dst);
+        std::fs::rename(&p, &dst).ok().map(|()| dst.display().to_string())
+    }
+
+    /// Remove leftover in-flight temp files (`*.tmp.*`) under `key` —
+    /// the residue of a writer that died between its temp write and the
+    /// rename. Loads never see them (the name parser ignores anything
+    /// that is not `{chol,ldl}[.g<n>].bin`); this reclaims the bytes.
+    /// Returns how many strays were removed. A missing key directory
+    /// reads as "nothing to sweep".
+    pub fn sweep_tmp(&self, key: u64) -> Result<usize, StoreError> {
+        let dir = self.key_dir(key);
+        let entries = match std::fs::read_dir(&dir) {
+            Ok(e) => e,
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(0),
+            Err(e) => return Err(e.into()),
+        };
+        let mut swept = 0;
+        for entry in entries {
+            let entry = entry?;
+            if let Some(name) = entry.file_name().to_str() {
+                if name.contains(".tmp.") && std::fs::remove_file(entry.path()).is_ok() {
+                    swept += 1;
+                }
+            }
+        }
+        Ok(swept)
     }
 
     /// All keys present in the store.
@@ -1650,6 +1826,56 @@ mod tests {
         assert!(store.load_id(FactorId::base(key)).unwrap().is_none());
         assert_eq!(store.latest(key).unwrap(), Some(id1));
         assert!(store.load_mapped_id(id1).unwrap().is_some());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn stale_tmp_files_are_ignored_and_swept() {
+        // A writer that dies between temp write and rename leaves a
+        // `*.tmp.*` stray: loads must not see it, and sweep_tmp must
+        // reclaim it without touching the real frames.
+        let dir = std::env::temp_dir().join(format!("h2otlr_store_tmp_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let store = FactorStore::open(&dir).unwrap();
+        let key = 0xD1ED;
+        let f = CholFactor {
+            l: random_tlr(&[4, 4], 2, 50),
+            stats: FactorStats { perm: vec![0, 1], ..Default::default() },
+        };
+        store.save_chol(key, &f, "real").unwrap();
+        let kd = dir.join(format!("{key:016x}"));
+        std::fs::write(kd.join("chol.tmp.999.7"), b"partial garbage").unwrap();
+        std::fs::write(kd.join("ldl.g3.tmp.12.0"), b"more garbage").unwrap();
+        assert_eq!(store.generations(key).unwrap(), vec![FactorId::base(key)]);
+        assert!(store.load(key).unwrap().is_some(), "strays must not shadow the frame");
+        assert_eq!(store.sweep_tmp(key).unwrap(), 2);
+        assert_eq!(store.sweep_tmp(key).unwrap(), 0, "sweep is idempotent");
+        assert!(store.load(key).unwrap().is_some(), "sweep must keep real frames");
+        assert_eq!(store.sweep_tmp(0xFEFE).unwrap(), 0, "missing key dir sweeps clean");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn quarantine_hides_the_frame_but_keeps_the_bytes() {
+        let dir = std::env::temp_dir().join(format!("h2otlr_store_quar_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let store = FactorStore::open(&dir).unwrap();
+        let key = 0xC0FFEE;
+        let f = CholFactor {
+            l: random_tlr(&[4, 4], 2, 51),
+            stats: FactorStats { perm: vec![0, 1], ..Default::default() },
+        };
+        store.save_chol(key, &f, "soon corrupt").unwrap();
+        let where_to = store.quarantine_id(FactorId::base(key)).expect("frame existed");
+        assert!(where_to.ends_with(".quarantine"), "{where_to}");
+        assert!(std::path::Path::new(&where_to).exists(), "bytes kept for forensics");
+        // The quarantined frame is gone from every resolution surface.
+        assert_eq!(store.generations(key).unwrap(), vec![]);
+        assert!(store.load(key).unwrap().is_none());
+        assert!(store.load_id(FactorId::base(key)).unwrap().is_none());
+        // Re-quarantining finds nothing.
+        assert!(store.quarantine_id(FactorId::base(key)).is_none());
+        assert!(store.quarantine_latest(key).is_none());
         let _ = std::fs::remove_dir_all(&dir);
     }
 

@@ -1,0 +1,421 @@
+//! Deterministic fault injection for chaos testing the serve stack.
+//!
+//! Every fallible surface of the serve layer taps a *site-tagged*
+//! injection point ([`check`]) before doing the real work: store reads
+//! and writes, frame checksum validation, mapped-file length checks,
+//! panel execution, and the execution latency path. With no plan
+//! installed (the production state) each tap is one relaxed atomic
+//! load and an immediate `None` — no locks, no counters, no branches
+//! beyond the flag test — so the hooks are effectively free outside
+//! chaos runs.
+//!
+//! A chaos run installs a [`FaultPlan`]: per-site rules that fire
+//! either at explicit operation indices ([`Trigger::At`]) or at a
+//! seeded pseudo-random rate ([`Trigger::Rate`]). Operation indices
+//! count [`check`] calls per site while a plan is installed, so the
+//! *set of faulted operations* is a pure function of `(plan, seed)`:
+//! replaying the same plan faults the same op indices every time.
+//! (Under multi-threaded load the assignment of requests to op
+//! indices can vary with scheduling; determinism is per-site op-index,
+//! which is what the chaos suite's replay assertions key on.)
+//!
+//! Every fired fault is counted
+//! ([`crate::obs::ResilienceClass::FaultInjected`]) and traced
+//! ([`crate::obs::EventKind::FaultInjected`]), so a chaos run's
+//! metrics dump shows exactly how much adversity was injected next to
+//! the retry/deadline/panic/degraded counters showing how it was
+//! absorbed. Plans can also come from the environment
+//! (`H2OPUS_FAULTS`, see [`plan_from_spec`]) so a chaos schedule
+//! replays exactly from a CI log line.
+
+use crate::obs::{self, EventKind, ResilienceClass};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Mutex;
+
+/// Where a fault can be injected. Discriminants are stable: they name
+/// sites in trace events and in the `H2OPUS_FAULTS` spec.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultSite {
+    /// Store file read (owned load or mmap open).
+    StoreRead = 0,
+    /// Store file write (save path, before the atomic rename).
+    StoreWrite = 1,
+    /// Frame checksum validation (fires as a corrupted-frame error).
+    FrameChecksum = 2,
+    /// Mapped-length re-check (fires as post-validation truncation).
+    MapTruncation = 3,
+    /// Panel execution (fires as a worker panic inside the solve).
+    PanelExec = 4,
+    /// Panel execution latency (fires as an artificial delay).
+    ExecDelay = 5,
+}
+
+/// Number of fault sites.
+pub const N_FAULT_SITES: usize = 6;
+
+/// Stable site names, indexed by `FaultSite as usize`; used by the
+/// `H2OPUS_FAULTS` spec and the chaos demo's summary table.
+pub const FAULT_SITE_NAMES: [&str; N_FAULT_SITES] = [
+    "store_read",
+    "store_write",
+    "frame_checksum",
+    "map_truncation",
+    "panel_exec",
+    "exec_delay",
+];
+
+impl FaultSite {
+    pub fn name(self) -> &'static str {
+        FAULT_SITE_NAMES[self as usize]
+    }
+
+    pub fn from_name(s: &str) -> Option<FaultSite> {
+        Some(match s {
+            "store_read" => FaultSite::StoreRead,
+            "store_write" => FaultSite::StoreWrite,
+            "frame_checksum" => FaultSite::FrameChecksum,
+            "map_truncation" => FaultSite::MapTruncation,
+            "panel_exec" => FaultSite::PanelExec,
+            "exec_delay" => FaultSite::ExecDelay,
+            _ => return None,
+        })
+    }
+
+    fn from_index(i: usize) -> FaultSite {
+        match i {
+            0 => FaultSite::StoreRead,
+            1 => FaultSite::StoreWrite,
+            2 => FaultSite::FrameChecksum,
+            3 => FaultSite::MapTruncation,
+            4 => FaultSite::PanelExec,
+            _ => FaultSite::ExecDelay,
+        }
+    }
+}
+
+/// What an injection point does when its rule fires.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultKind {
+    /// Surface a transient `std::io::Error` (retryable).
+    IoError,
+    /// Corrupt the frame: surface a checksum-mismatch format error
+    /// (never retried; quarantines the frame file).
+    Corrupt,
+    /// Report the on-disk file shorter than its validated frame.
+    Truncate,
+    /// Panic inside the panel solve (isolated by `catch_unwind`).
+    Panic,
+    /// Sleep `ms` milliseconds before executing (drives deadline
+    /// expiry without wall-clock flakiness in tests).
+    Delay { ms: u32 },
+}
+
+/// Exhaustive `FaultKind` → resilience-class mapping: the counter the
+/// serve stack is expected to increment while *absorbing* a fault of
+/// this kind. The chaos suite asserts these counters moved; no fault
+/// kind can be added without declaring its observable recovery path
+/// (`tools/static_audit.py` verifies this match names every variant).
+pub fn fault_kind_class(k: &FaultKind) -> ResilienceClass {
+    match k {
+        FaultKind::IoError => ResilienceClass::RetryAttempt,
+        FaultKind::Corrupt => ResilienceClass::Quarantined,
+        FaultKind::Truncate => ResilienceClass::Quarantined,
+        FaultKind::Panic => ResilienceClass::WorkerPanic,
+        FaultKind::Delay { .. } => ResilienceClass::DeadlineExpired,
+    }
+}
+
+/// When a site's rule fires.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum Trigger {
+    /// Fire at exactly these 0-based operation indices of the site.
+    At(Vec<u64>),
+    /// Fire at roughly `permille`/1000 of operations, decided by a
+    /// pure hash of `(seed, site, op)` — same seed, same faulted set.
+    Rate(u16),
+}
+
+/// One injection rule: at `site`, when `trigger` says so, act as
+/// `kind`. The first matching rule per site wins.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct SiteRule {
+    pub site: FaultSite,
+    pub kind: FaultKind,
+    pub trigger: Trigger,
+}
+
+/// A complete seeded fault schedule.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct FaultPlan {
+    /// Seed for [`Trigger::Rate`] decisions.
+    pub seed: u64,
+    pub rules: Vec<SiteRule>,
+}
+
+impl FaultPlan {
+    /// A plan with no rules (useful as a builder base).
+    pub fn seeded(seed: u64) -> FaultPlan {
+        FaultPlan { seed, rules: Vec::new() }
+    }
+
+    /// Append a rule; builder-style.
+    pub fn with(mut self, site: FaultSite, kind: FaultKind, trigger: Trigger) -> FaultPlan {
+        self.rules.push(SiteRule { site, kind, trigger });
+        self
+    }
+}
+
+/// Fast-path flag: `false` means no plan is installed and [`check`]
+/// returns immediately.
+static ENABLED: AtomicBool = AtomicBool::new(false);
+
+static PLAN: Mutex<Option<FaultPlan>> = Mutex::new(None);
+
+/// Per-site operation counters (how many times [`check`] consulted the
+/// plan at each site since it was installed).
+static OPS: [AtomicU64; N_FAULT_SITES] = [const { AtomicU64::new(0) }; N_FAULT_SITES];
+
+/// Per-site injected-fault counters.
+static INJECTED: [AtomicU64; N_FAULT_SITES] = [const { AtomicU64::new(0) }; N_FAULT_SITES];
+
+/// SplitMix64 finalizer (same avalanche as the shard rendezvous mix).
+fn mix64(mut x: u64) -> u64 {
+    x ^= x >> 30;
+    x = x.wrapping_mul(0xbf58476d1ce4e5b9);
+    x ^= x >> 27;
+    x = x.wrapping_mul(0x94d049bb133111eb);
+    x ^= x >> 31;
+    x
+}
+
+/// Install `plan` and arm every tapped site. Operation and injected
+/// counters reset so op indices are relative to this install.
+pub fn install(plan: FaultPlan) {
+    let mut guard = PLAN.lock().unwrap();
+    for c in OPS.iter().chain(INJECTED.iter()) {
+        c.store(0, Ordering::Relaxed);
+    }
+    *guard = Some(plan);
+    ENABLED.store(true, Ordering::Release);
+}
+
+/// Disarm all sites and drop the plan. Counters keep their final
+/// values so a chaos run can assert on them after clearing.
+pub fn clear() {
+    ENABLED.store(false, Ordering::Release);
+    *PLAN.lock().unwrap() = None;
+}
+
+/// Is a plan currently installed?
+pub fn active() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// The injection point. Returns the fault to act out, or `None` (the
+/// overwhelmingly common case). With no plan installed this is a
+/// single relaxed load.
+#[inline]
+pub fn check(site: FaultSite) -> Option<FaultKind> {
+    if !ENABLED.load(Ordering::Relaxed) {
+        return None;
+    }
+    check_armed(site)
+}
+
+#[cold]
+fn check_armed(site: FaultSite) -> Option<FaultKind> {
+    let op = OPS[site as usize].fetch_add(1, Ordering::Relaxed);
+    let guard = PLAN.lock().unwrap();
+    let plan = guard.as_ref()?;
+    let rule = plan.rules.iter().find(|r| {
+        r.site == site
+            && match &r.trigger {
+                Trigger::At(ops) => ops.contains(&op),
+                Trigger::Rate(permille) => {
+                    let h = mix64(plan.seed ^ ((site as u64 + 1) << 56) ^ op);
+                    h % 1000 < *permille as u64
+                }
+            }
+    })?;
+    let kind = rule.kind;
+    drop(guard);
+    INJECTED[site as usize].fetch_add(1, Ordering::Relaxed);
+    obs::note_resilience(ResilienceClass::FaultInjected);
+    obs::record_event(0, EventKind::FaultInjected { site: site as u32, op });
+    Some(kind)
+}
+
+/// Per-site operation counts since the last [`install`].
+pub fn op_counts() -> [u64; N_FAULT_SITES] {
+    let mut out = [0; N_FAULT_SITES];
+    for (o, c) in out.iter_mut().zip(OPS.iter()) {
+        *o = c.load(Ordering::Relaxed);
+    }
+    out
+}
+
+/// Per-site injected-fault counts since the last [`install`].
+pub fn injected_counts() -> [u64; N_FAULT_SITES] {
+    let mut out = [0; N_FAULT_SITES];
+    for (o, c) in out.iter_mut().zip(INJECTED.iter()) {
+        *o = c.load(Ordering::Relaxed);
+    }
+    out
+}
+
+/// Parse a fault-plan spec, the `H2OPUS_FAULTS` format:
+///
+/// ```text
+/// seed=42;store_read@3,7=io;frame_checksum%50=corrupt;exec_delay%100=delay:20
+/// ```
+///
+/// Semicolon-separated clauses: an optional `seed=N`, then rules of
+/// the form `<site>@i,j,...=<kind>` (explicit op indices) or
+/// `<site>%permille=<kind>` (seeded rate). Kinds: `io`, `corrupt`,
+/// `truncate`, `panic`, `delay:<ms>`.
+pub fn plan_from_spec(spec: &str) -> Result<FaultPlan, String> {
+    let mut plan = FaultPlan::default();
+    for clause in spec.split(';').map(str::trim).filter(|c| !c.is_empty()) {
+        if let Some(seed) = clause.strip_prefix("seed=") {
+            plan.seed = seed.parse().map_err(|_| format!("bad seed in {clause:?}"))?;
+            continue;
+        }
+        let (lhs, kind_s) =
+            clause.split_once('=').ok_or_else(|| format!("missing '=' in {clause:?}"))?;
+        let kind = match kind_s.split_once(':') {
+            Some(("delay", ms)) => FaultKind::Delay {
+                ms: ms.parse().map_err(|_| format!("bad delay ms in {clause:?}"))?,
+            },
+            None => match kind_s {
+                "io" => FaultKind::IoError,
+                "corrupt" => FaultKind::Corrupt,
+                "truncate" => FaultKind::Truncate,
+                "panic" => FaultKind::Panic,
+                _ => return Err(format!("unknown fault kind {kind_s:?}")),
+            },
+            _ => return Err(format!("unknown fault kind {kind_s:?}")),
+        };
+        let (site_s, trigger) = if let Some((site_s, ops)) = lhs.split_once('@') {
+            let ops: Result<Vec<u64>, _> = ops.split(',').map(str::parse).collect();
+            (site_s, Trigger::At(ops.map_err(|_| format!("bad op list in {clause:?}"))?))
+        } else if let Some((site_s, permille)) = lhs.split_once('%') {
+            let p: u16 = permille.parse().map_err(|_| format!("bad rate in {clause:?}"))?;
+            (site_s, Trigger::Rate(p.min(1000)))
+        } else {
+            return Err(format!("rule {clause:?} needs '@ops' or '%rate'"));
+        };
+        let site = FaultSite::from_name(site_s)
+            .ok_or_else(|| format!("unknown fault site {site_s:?}"))?;
+        plan.rules.push(SiteRule { site, kind, trigger });
+    }
+    Ok(plan)
+}
+
+/// Install a plan from the `H2OPUS_FAULTS` environment variable if it
+/// is set and parses; returns whether a plan was installed.
+pub fn install_from_env() -> Result<bool, String> {
+    match std::env::var("H2OPUS_FAULTS") {
+        Ok(spec) if !spec.trim().is_empty() => {
+            install(plan_from_spec(&spec)?);
+            Ok(true)
+        }
+        _ => Ok(false),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The global injector is process-wide state; tests that install
+    /// plans serialize on this (the chaos integration suite has its
+    /// own copy of the same discipline).
+    static TEST_LOCK: Mutex<()> = Mutex::new(());
+
+    #[test]
+    fn disabled_injector_is_silent() {
+        let _g = TEST_LOCK.lock().unwrap();
+        clear();
+        for i in 0..N_FAULT_SITES {
+            assert_eq!(check(FaultSite::from_index(i)), None);
+        }
+        assert!(!active());
+    }
+
+    #[test]
+    fn explicit_op_indices_fire_exactly_once_each() {
+        let _g = TEST_LOCK.lock().unwrap();
+        let plan = FaultPlan::seeded(7).with(
+            FaultSite::StoreRead,
+            FaultKind::IoError,
+            Trigger::At(vec![1, 3]),
+        );
+        install(plan);
+        let fired: Vec<bool> =
+            (0..6).map(|_| check(FaultSite::StoreRead).is_some()).collect();
+        assert_eq!(fired, [false, true, false, true, false, false]);
+        // Other sites are untouched by the rule.
+        assert_eq!(check(FaultSite::PanelExec), None);
+        assert_eq!(injected_counts()[FaultSite::StoreRead as usize], 2);
+        clear();
+    }
+
+    #[test]
+    fn rate_trigger_is_deterministic_per_seed() {
+        let _g = TEST_LOCK.lock().unwrap();
+        let plan = |seed| {
+            FaultPlan::seeded(seed).with(
+                FaultSite::FrameChecksum,
+                FaultKind::Corrupt,
+                Trigger::Rate(300),
+            )
+        };
+        install(plan(11));
+        let a: Vec<bool> =
+            (0..64).map(|_| check(FaultSite::FrameChecksum).is_some()).collect();
+        install(plan(11));
+        let b: Vec<bool> =
+            (0..64).map(|_| check(FaultSite::FrameChecksum).is_some()).collect();
+        assert_eq!(a, b, "same seed must fault the same op indices");
+        assert!(a.iter().any(|&f| f), "permille 300 over 64 ops should fire");
+        assert!(!a.iter().all(|&f| f), "permille 300 must not fire always");
+        install(plan(12));
+        let c: Vec<bool> =
+            (0..64).map(|_| check(FaultSite::FrameChecksum).is_some()).collect();
+        assert_ne!(a, c, "different seeds should differ (64 ops at 30%)");
+        clear();
+    }
+
+    #[test]
+    fn spec_round_trips_the_readme_example() {
+        let spec = "seed=42;store_read@3,7=io;frame_checksum%50=corrupt;exec_delay%100=delay:20";
+        let plan = plan_from_spec(spec).unwrap();
+        assert_eq!(plan.seed, 42);
+        assert_eq!(plan.rules.len(), 3);
+        assert_eq!(plan.rules[0].site, FaultSite::StoreRead);
+        assert_eq!(plan.rules[0].kind, FaultKind::IoError);
+        assert_eq!(plan.rules[0].trigger, Trigger::At(vec![3, 7]));
+        assert_eq!(plan.rules[1].trigger, Trigger::Rate(50));
+        assert_eq!(plan.rules[2].kind, FaultKind::Delay { ms: 20 });
+        assert!(plan_from_spec("bogus_site%5=io").is_err());
+        assert!(plan_from_spec("store_read%5=bogus_kind").is_err());
+        assert!(plan_from_spec("store_read=io").is_err());
+    }
+
+    #[test]
+    fn every_fault_kind_maps_to_a_resilience_class() {
+        let kinds = [
+            FaultKind::IoError,
+            FaultKind::Corrupt,
+            FaultKind::Truncate,
+            FaultKind::Panic,
+            FaultKind::Delay { ms: 1 },
+        ];
+        for k in kinds {
+            // The map is total (and static_audit pins exhaustiveness);
+            // classes land inside the exporter name table.
+            let c = fault_kind_class(&k);
+            assert!((c as usize) < crate::obs::N_RESILIENCE_CLASSES);
+        }
+    }
+}

@@ -18,11 +18,16 @@
 //!   pairs) that the test binaries compose with their own domain
 //!   strategies (frame corruptions, shard-map mutation sequences,
 //!   mixed-precision batch plans).
+//! * [`faults`] — the deterministic fault injector the chaos suite
+//!   drives through the serve stack: seeded, site-tagged injection
+//!   points (store I/O, frame checksums, mapped-length checks, panel
+//!   execution) that are zero-cost no-ops unless a plan is installed.
 //!
 //! Determinism: all randomness flows from [`crate::linalg::rng::Rng`]
 //! seeded by a fixed base (overridable with `H2OPUS_PROPTEST_SEED`);
 //! case count defaults to 48 per property (`H2OPUS_PROPTEST_CASES`).
 //! CI's `verify` job runs an extended sweep; see docs/verification.md.
 
+pub mod faults;
 pub mod proptest;
 pub mod strategies;

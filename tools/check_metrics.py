@@ -7,10 +7,13 @@ rust/src/serve/mod.rs):
 
  * top-level shape: `version == 1`, `schema == "h2opus-obs"`, and the
    required sections `phases`, `kernels`, `batch`, `serve`, `shards`,
-   `histograms`, `factor_generations`, `update_errors`;
+   `histograms`, `factor_generations`, `update_errors`, `resilience`;
  * lifecycle sections: `update_errors` carries every update-error
    class as a non-negative counter; `factor_generations` maps
    16-hex-digit keys to non-negative generation gauges;
+ * `resilience` carries exactly the resilience classes (retries,
+   deadline expiries, panics, degraded admits, quarantines, injected
+   faults) as non-negative counters;
  * every histogram in `histograms`: required fields, bucket lower
    bounds strictly increasing, bucket counts summing to `count`,
    percentiles null exactly when empty and ordered p50 <= p95 <= p99
@@ -41,6 +44,11 @@ SHARD_ERROR_CLASSES = [
 ]
 
 UPDATE_ERROR_CLASSES = ["bad_shape", "indefinite_diagonal"]
+
+RESILIENCE_CLASSES = [
+    "retry_attempt", "retry_exhausted", "deadline_expired", "worker_panic",
+    "degraded", "quarantined", "fault_injected",
+]
 
 findings = []
 
@@ -119,7 +127,8 @@ def check(doc):
     if doc.get("schema") != "h2opus-obs":
         fail(f"schema: expected 'h2opus-obs', got {doc.get('schema')!r}")
     for section in ("phases", "kernels", "batch", "serve", "shards",
-                    "histograms", "factor_generations", "update_errors"):
+                    "histograms", "factor_generations", "update_errors",
+                    "resilience"):
         if not isinstance(doc.get(section), dict):
             fail(f"missing or non-object section: {section}")
     if findings:
@@ -176,6 +185,14 @@ def check(doc):
     for cls in uerrs:
         if cls not in UPDATE_ERROR_CLASSES:
             fail(f"update_errors.{cls}: unknown class")
+
+    res = doc["resilience"]
+    for cls in RESILIENCE_CLASSES:
+        if not is_count(res.get(cls)):
+            fail(f"resilience.{cls}: expected a non-negative number")
+    for cls in res:
+        if cls not in RESILIENCE_CLASSES:
+            fail(f"resilience.{cls}: unknown class")
 
     gens = doc["factor_generations"]
     for key, gen in gens.items():

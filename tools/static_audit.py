@@ -540,6 +540,7 @@ ERROR_MAPPINGS = [
     ("serve", "ServeError", "reject_reason"),
     ("serve", "ShardError", "shard_error_class"),
     ("tlr", "UpdateError", "update_error_class"),
+    ("testing", "FaultKind", "fault_kind_class"),
 ]
 
 
